@@ -1,0 +1,69 @@
+//! End-to-end driver on the paper's §V-A setup (EXPERIMENTS.md §E2E).
+//!
+//! Trains the transformer through the full three-layer stack — rust
+//! coordinator → PJRT → AOT HLO (JAX model + Pallas kernels) — on the
+//! synthetic CARER-like corpus with the six-device heterogeneous fleet,
+//! running all three schemes to convergence and printing Table I plus
+//! the final loss curves.
+//!
+//!     cargo run --release --example paper_fleet -- [mini|small] [max_rounds]
+
+use anyhow::Result;
+use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
+use sfl::coordinator::Trainer;
+use sfl::runtime::Engine;
+use sfl::telemetry;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let config = args.get(1).map(|s| s.as_str()).unwrap_or("mini").to_string();
+    let max_rounds: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(60);
+
+    let engine = Engine::load(Path::new("artifacts"), &config)?;
+    engine.warmup(&[1, 2, 3])?;
+    println!(
+        "paper fleet on `{config}` artifacts ({} layers, hidden {}) — {max_rounds} max rounds\n",
+        engine.dims().layers,
+        engine.dims().hidden
+    );
+
+    let mut cfg = ExperimentConfig::paper();
+    cfg.artifact_config = config;
+    cfg.train.max_rounds = max_rounds;
+    cfg.train.steps_per_round = 2;
+    cfg.train.eval_interval = 2;
+    cfg.train.lr = 5e-3;
+    cfg.scheduler = SchedulerKind::Proposed;
+
+    let mut results = Vec::new();
+    for scheme in [SchemeKind::Sl, SchemeKind::Sfl, SchemeKind::Ours] {
+        let mut c = cfg.clone();
+        c.scheme = scheme;
+        let trainer = Trainer::new(&engine, &c)?;
+        println!("=== {scheme} ===");
+        let r = trainer.run(false)?;
+        println!("{}\n", telemetry::summary(&scheme.to_string(), &r));
+        results.push((scheme.to_string(), r));
+    }
+
+    let rows: Vec<(&str, &sfl::coordinator::RunResult)> =
+        results.iter().map(|(n, r)| (n.as_str(), r)).collect();
+    println!("Table I (reproduced on this testbed):\n{}", telemetry::table1(&rows));
+
+    // Paper headline ratios.
+    let by: std::collections::HashMap<&str, &sfl::coordinator::RunResult> =
+        rows.iter().copied().collect();
+    let (sl, sfl_r, ours) = (by["sl"], by["sfl"], by["ours"]);
+    println!(
+        "memory vs SFL: -{:.0}% (paper -79%) | memory vs SL: +{:.0}% (paper +10%)",
+        (1.0 - ours.memory_mb / sfl_r.memory_mb) * 100.0,
+        (ours.memory_mb / sl.memory_mb - 1.0) * 100.0
+    );
+    println!(
+        "time vs SL: -{:.0}% (paper -41%) | time vs SFL: -{:.1}% (paper -6.1%)",
+        (1.0 - ours.total_time() / sl.total_time()) * 100.0,
+        (1.0 - ours.total_time() / sfl_r.total_time()) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the `mini` artifacts, builds the paper's six-device fleet, runs
+//! the memory-efficient SFL scheme (Alg. 1 + Alg. 2) for a few rounds,
+//! and prints the loss curve + run summary.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use sfl::config::ExperimentConfig;
+use sfl::coordinator::Trainer;
+use sfl::runtime::Engine;
+use sfl::telemetry;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    // 1. Load the AOT artifacts (HLO text compiled by `make artifacts`).
+    let engine = Engine::load(Path::new("artifacts"), "mini")?;
+    println!(
+        "model: {} layers, hidden {}, batch {}",
+        engine.dims().layers,
+        engine.dims().hidden,
+        engine.dims().batch
+    );
+
+    // 2. Configure the experiment: paper fleet, proposed scheduler.
+    let mut cfg = ExperimentConfig::mini();
+    cfg.train.max_rounds = 10;
+    cfg.train.steps_per_round = 2;
+    cfg.train.eval_interval = 2;
+    cfg.train.lr = 5e-3;
+
+    // 3. Train.
+    let trainer = Trainer::new(&engine, &cfg)?;
+    println!("cut assignment: {:?}", trainer.cuts());
+    let result = trainer.run(false)?;
+
+    // 4. Report.
+    println!("\nloss curve:");
+    for r in &result.rounds {
+        println!("  round {:2}  t={:7.1}s  loss={:.4}", r.round, r.sim_time, r.mean_loss);
+    }
+    println!("\n{}", telemetry::summary("quickstart", &result));
+    Ok(())
+}

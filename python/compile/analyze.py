@@ -1,0 +1,119 @@
+"""Build-time performance analysis (EXPERIMENTS.md §Perf inputs).
+
+L1 — Pallas kernels: static VMEM footprint + MXU-utilization estimates
+from the chosen BlockSpecs (interpret=True gives no TPU wallclock; the
+tile structure is what we can and do optimize — DESIGN.md §8).
+
+L2 — lowered artifacts: XLA cost analysis (flops / bytes accessed) per
+artifact, verifying the graph has no redundant recompute beyond the
+*intentional* client-side rematerialization.
+
+Usage (from python/):  python -m compile.analyze --config mini
+"""
+
+import argparse
+
+import jax
+
+from . import artifacts as art
+from .configs import get_config
+from .kernels import common
+from .kernels.attention import vmem_footprint as attn_vmem
+from .kernels.lora_matmul import vmem_footprint as lora_vmem
+
+
+def l1_report(cfg):
+    print(f"== L1 Pallas kernel structure ({cfg.name}) ==")
+    rows = []
+    m_rows = cfg.batch * cfg.seq
+    for (name, m_dim, k_dim, n_dim) in [
+        ("lora_matmul q/v proj", m_rows, cfg.hidden, cfg.hidden),
+        ("lora_matmul (bert-base q/v)", 16 * 128, 768, 768),
+        ("lora_matmul (bert-base ffn-shaped)", 16 * 128, 768, 3072),
+    ]:
+        bm = common.pick_block(m_dim)
+        bn = common.pick_block(n_dim)
+        vmem = lora_vmem(m_dim, k_dim, n_dim, cfg.rank)
+        util = common.mxu_utilization(bm, bn, k_dim)
+        rows.append((name, f"{bm}x{k_dim}->{bn}", vmem, util))
+    vmem_a = attn_vmem(cfg.seq, cfg.head_dim)
+    rows.append(
+        (
+            "attention (per head)",
+            f"L={cfg.seq} d={cfg.head_dim}",
+            vmem_a,
+            common.mxu_utilization(cfg.seq, cfg.head_dim, cfg.seq),
+        )
+    )
+    rows.append(
+        (
+            "attention (bert-base head)",
+            "L=128 d=64",
+            attn_vmem(128, 64),
+            common.mxu_utilization(128, 64, 128),
+        )
+    )
+    for name, tile, vmem, util in rows:
+        ok = "OK " if vmem <= common.VMEM_BUDGET_BYTES else "OVER"
+        print(
+            f"  {name:<36} tile={tile:<16} vmem={vmem/1024:8.1f} KiB "
+            f"({ok}/{common.VMEM_BUDGET_BYTES//1024//1024} MiB) mxu~{util:4.0%}"
+        )
+
+
+def l2_report(cfg):
+    print(f"\n== L2 artifact cost analysis ({cfg.name}) ==")
+    total_flops = 0.0
+    for name, (fn, inputs, _outputs) in sorted(art.all_artifacts(cfg).items()):
+        compiled = jax.jit(fn, keep_unused=True).lower(*art.shape_structs(inputs)).compile()
+        try:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            flops = cost.get("flops", float("nan"))
+            bytes_acc = cost.get("bytes accessed", float("nan"))
+        except Exception as e:  # pragma: no cover - cost API variance
+            flops, bytes_acc = float("nan"), float("nan")
+            print(f"  {name}: cost analysis unavailable ({e})")
+            continue
+        ai = flops / bytes_acc if bytes_acc else float("nan")
+        total_flops += flops
+        print(
+            f"  {name:<16} flops={flops/1e6:9.1f}M  bytes={bytes_acc/1e6:9.1f}MB  "
+            f"arith-intensity={ai:5.2f}"
+        )
+    print(f"  total (all artifacts): {total_flops/1e9:.2f} GFLOP")
+
+    # Rematerialization accounting: client_bwd recomputes client_fwd by
+    # design (client memory saving). Verify the overhead matches theory:
+    # bwd ≈ fwd(remat) + 2x fwd ⇒ bwd/fwd ≈ 3.
+    arts = art.all_artifacts(cfg)
+    for k in cfg.cuts:
+        fwd = jax.jit(arts[f"client_fwd_{k}"][0], keep_unused=True).lower(
+            *art.shape_structs(arts[f"client_fwd_{k}"][1])
+        ).compile()
+        bwd = jax.jit(arts[f"client_bwd_{k}"][0], keep_unused=True).lower(
+            *art.shape_structs(arts[f"client_bwd_{k}"][1])
+        ).compile()
+        try:
+            cf = fwd.cost_analysis()
+            cb = bwd.cost_analysis()
+            if isinstance(cf, list):
+                cf, cb = cf[0], cb[0]
+            ratio = cb["flops"] / cf["flops"]
+            print(f"  client_bwd_{k}/client_fwd_{k} flops ratio = {ratio:.2f} (theory ~3)")
+        except Exception:
+            pass
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="mini")
+    args = ap.parse_args()
+    cfg = get_config(args.config)
+    l1_report(cfg)
+    l2_report(cfg)
+
+
+if __name__ == "__main__":
+    main()

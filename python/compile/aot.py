@@ -1,0 +1,169 @@
+"""AOT compile path: lower every artifact to HLO *text* + emit params.bin
+and manifest.json.
+
+HLO text (NOT lowered.serialize() / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version the rust `xla` 0.1.6 crate links)
+rejects; the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --config small --outdir ../artifacts
+Python runs ONCE here; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import artifacts as art
+from . import model, packing
+from .configs import CONFIGS, get_config
+
+SEED = 20250711
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def initial_tensors(cfg):
+    """The 'pretrained' checkpoint: frozen weights + LoRA(N) + head, in the
+    packing order rust expects (DESIGN.md §2 substitution: seeded random
+    base weights stand in for the BERT-base checkpoint)."""
+    key = jax.random.PRNGKey(SEED)
+    kf, kl, kh = jax.random.split(key, 3)
+    frozen = model.init_frozen(cfg, kf)
+    lora = model.init_lora(cfg, kl, cfg.layers)
+    head = model.init_head(cfg, kh)
+
+    tensors = []
+    for (name, _), arr in zip(packing.frozen_spec(cfg), packing.flatten_frozen(frozen)):
+        tensors.append((f"frozen.{name}", np.asarray(arr)))
+    for (name, _), arr in zip(packing.lora_spec(cfg, cfg.layers), packing.flatten_lora(lora)):
+        tensors.append((name, np.asarray(arr)))
+    for (name, _), arr in zip(packing.head_spec(cfg), packing.flatten_head(head)):
+        tensors.append((name, np.asarray(arr)))
+    return tensors
+
+
+def manifest_txt(manifest) -> str:
+    """Line-based manifest (see rust/src/runtime/manifest.rs for the
+    grammar). Scalar shapes are encoded as `-`."""
+
+    def shape_str(shape):
+        return ",".join(str(d) for d in shape) if shape else "-"
+
+    c = manifest["config"]
+    lines = [
+        "config "
+        + " ".join(
+            f"{k}={c[k]}"
+            for k in (
+                "name", "vocab", "hidden", "layers", "heads", "ffn",
+                "seq", "classes", "rank", "alpha", "batch",
+            )
+        )
+        + f" cuts={','.join(str(k) for k in c['cuts'])}",
+        f"params {manifest['params_bin']}",
+    ]
+    for name in sorted(manifest["artifacts"]):
+        a = manifest["artifacts"][name]
+        lines.append(f"artifact {name} {a['path']}")
+        for e in a["inputs"]:
+            lines.append(f"in {e['name']} {e['dtype']} {shape_str(e['shape'])}")
+        for e in a["outputs"]:
+            lines.append(f"out {e['name']} {e['dtype']} {shape_str(e['shape'])}")
+        lines.append("end")
+    for n in manifest["param_tensors"]:
+        lines.append(f"param {n}")
+    return "\n".join(lines) + "\n"
+
+
+def build_config(cfg, outdir, force=False):
+    cdir = os.path.join(outdir, cfg.name)
+    os.makedirs(cdir, exist_ok=True)
+
+    # Input fingerprint: skip work when sources + config are unchanged.
+    srcdir = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in os.walk(srcdir):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    h.update(repr(cfg).encode())
+    stamp = h.hexdigest()
+    stamp_path = os.path.join(cdir, ".stamp")
+    if not force and os.path.exists(stamp_path):
+        with open(stamp_path) as fh:
+            if fh.read().strip() == stamp:
+                print(f"[aot] {cfg.name}: up to date, skipping")
+                return
+
+    manifest = {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "hidden": cfg.hidden,
+            "layers": cfg.layers, "heads": cfg.heads, "ffn": cfg.ffn,
+            "seq": cfg.seq, "classes": cfg.classes, "rank": cfg.rank,
+            "alpha": cfg.alpha, "batch": cfg.batch, "cuts": list(cfg.cuts),
+        },
+        "params_bin": "params.bin",
+        "artifacts": {},
+    }
+
+    for name, (fn, inputs, outputs) in art.all_artifacts(cfg).items():
+        specs = art.shape_structs(inputs)
+        print(f"[aot] {cfg.name}/{name}: lowering ({len(inputs)} inputs)...")
+        # keep_unused: server artifacts don't touch the embedding tensors,
+        # but the rust marshaler passes the full frozen block everywhere —
+        # argument lists must match the manifest exactly.
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(cdir, fname), "w") as fh:
+            fh.write(text)
+        manifest["artifacts"][name] = {
+            "path": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"[aot] {cfg.name}/{name}: wrote {len(text)} chars")
+
+    tensors = initial_tensors(cfg)
+    packing.write_params_bin(os.path.join(cdir, "params.bin"), tensors)
+    manifest["param_tensors"] = [n for n, _ in tensors]
+    # JSON twin for humans/tools; rust parses the line-based manifest.txt
+    # (the workspace builds offline with no JSON crate).
+    with open(os.path.join(cdir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    with open(os.path.join(cdir, "manifest.txt"), "w") as fh:
+        fh.write(manifest_txt(manifest))
+    with open(stamp_path, "w") as fh:
+        fh.write(stamp)
+    print(f"[aot] {cfg.name}: done -> {cdir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="mini,small",
+                    help="comma-separated config names, or 'all'")
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    names = list(CONFIGS) if args.config == "all" else args.config.split(",")
+    for name in names:
+        build_config(get_config(name.strip()), args.outdir, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""Artifact builders: flat-positional wrappers around model.py steps.
+
+Each builder returns (fn, input_spec, output_names) where `fn` takes the
+inputs as a flat positional tuple in exactly `input_spec` order and
+returns a flat tuple.  aot.py lowers `fn` and records the spec in
+manifest.json; the rust runtime marshals literals in the same order.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model, packing
+
+
+def _spec_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _frozen_entries(cfg):
+    return [_spec_entry(f"frozen.{n}", s) for n, s in packing.frozen_spec(cfg)]
+
+
+def _lora_entries(cfg, n_layers, prefix):
+    return [_spec_entry(n, s) for n, s in packing.lora_spec(cfg, n_layers, prefix)]
+
+
+def _head_entries(cfg):
+    return [_spec_entry(n, s) for n, s in packing.head_spec(cfg)]
+
+
+def _adam_entries(trainable_entries):
+    return (
+        [_spec_entry("adam_m." + e["name"], e["shape"]) for e in trainable_entries]
+        + [_spec_entry("adam_v." + e["name"], e["shape"]) for e in trainable_entries]
+    )
+
+
+def _scalar_entries():
+    return [_spec_entry("step", ()), _spec_entry("lr", ())]
+
+
+def _tokens_entry(cfg):
+    return _spec_entry("tokens", (cfg.batch, cfg.seq), "i32")
+
+
+def _labels_entry(cfg):
+    return _spec_entry("labels", (cfg.batch,), "i32")
+
+
+def _acts_entry(cfg, name="acts"):
+    return _spec_entry(name, (cfg.batch, cfg.seq, cfg.hidden))
+
+
+def _take(flat, n):
+    return flat[:n], flat[n:]
+
+
+def _unpack_trainables(flat, n_lora_tensors=packing.N_LORA):
+    lora_flat, flat = _take(flat, n_lora_tensors)
+    head_flat, flat = _take(flat, packing.N_HEAD)
+    t = {"lora": packing.unflatten_lora(lora_flat), "head": packing.unflatten_head(head_flat)}
+    return t, flat
+
+
+def _flatten_trainables(t):
+    return packing.flatten_lora(t["lora"]) + packing.flatten_head(t["head"])
+
+
+def build_client_fwd(cfg, k):
+    def fn(*flat):
+        tokens, flat = flat[0], list(flat[1:])
+        frozen_flat, flat = _take(flat, packing.N_FROZEN)
+        lora_flat, flat = _take(flat, packing.N_LORA)
+        assert not flat
+        frozen = packing.unflatten_frozen(frozen_flat)
+        lora = packing.unflatten_lora(lora_flat)
+        return (model.client_forward(cfg, k, tokens, frozen, lora),)
+
+    inputs = [_tokens_entry(cfg)] + _frozen_entries(cfg) + _lora_entries(cfg, k, "client_lora")
+    outputs = [_acts_entry(cfg)]
+    return fn, inputs, outputs
+
+
+def build_server_step(cfg, k):
+    ns = cfg.layers - k
+
+    def fn(*flat):
+        acts, labels = flat[0], flat[1]
+        flat = list(flat[2:])
+        frozen_flat, flat = _take(flat, packing.N_FROZEN)
+        t, flat = _unpack_trainables(flat)
+        mom, flat = _unpack_trainables(flat)
+        vel, flat = _unpack_trainables(flat)
+        step, lr = flat
+        frozen = packing.unflatten_frozen(frozen_flat)
+        loss, dacts, new_lora, new_head, new_m, new_v = model.server_step(
+            cfg, k, acts, labels, frozen, t["lora"], t["head"],
+            {"lora": mom["lora"], "head": mom["head"]},
+            {"lora": vel["lora"], "head": vel["head"]},
+            step, lr,
+        )
+        out = [loss, dacts]
+        out += _flatten_trainables({"lora": new_lora, "head": new_head})
+        out += _flatten_trainables(new_m) + _flatten_trainables(new_v)
+        return tuple(out)
+
+    t_entries = _lora_entries(cfg, ns, "server_lora") + _head_entries(cfg)
+    inputs = (
+        [_acts_entry(cfg), _labels_entry(cfg)]
+        + _frozen_entries(cfg)
+        + t_entries
+        + _adam_entries(t_entries)
+        + _scalar_entries()
+    )
+    outputs = (
+        [_spec_entry("loss", ()), _acts_entry(cfg, "act_grads")]
+        + [_spec_entry("new." + e["name"], e["shape"]) for e in t_entries]
+        + [_spec_entry("new.adam_m." + e["name"], e["shape"]) for e in t_entries]
+        + [_spec_entry("new.adam_v." + e["name"], e["shape"]) for e in t_entries]
+    )
+    return fn, inputs, outputs
+
+
+def build_client_bwd(cfg, k):
+    def fn(*flat):
+        tokens, flat = flat[0], list(flat[1:])
+        frozen_flat, flat = _take(flat, packing.N_FROZEN)
+        lora_flat, flat = _take(flat, packing.N_LORA)
+        act_grads, flat = flat[0], flat[1:]
+        mom_flat, flat = _take(flat, packing.N_LORA)
+        vel_flat, flat = _take(flat, packing.N_LORA)
+        step, lr = flat
+        frozen = packing.unflatten_frozen(frozen_flat)
+        lora = packing.unflatten_lora(lora_flat)
+        mom = packing.unflatten_lora(mom_flat)
+        vel = packing.unflatten_lora(vel_flat)
+        new_lora, new_m, new_v = model.client_backward(
+            cfg, k, tokens, frozen, lora, act_grads, mom, vel, step, lr
+        )
+        return tuple(
+            packing.flatten_lora(new_lora)
+            + packing.flatten_lora(new_m)
+            + packing.flatten_lora(new_v)
+        )
+
+    l_entries = _lora_entries(cfg, k, "client_lora")
+    inputs = (
+        [_tokens_entry(cfg)]
+        + _frozen_entries(cfg)
+        + l_entries
+        + [_acts_entry(cfg, "act_grads")]
+        + _adam_entries(l_entries)
+        + _scalar_entries()
+    )
+    outputs = (
+        [_spec_entry("new." + e["name"], e["shape"]) for e in l_entries]
+        + [_spec_entry("new.adam_m." + e["name"], e["shape"]) for e in l_entries]
+        + [_spec_entry("new.adam_v." + e["name"], e["shape"]) for e in l_entries]
+    )
+    return fn, inputs, outputs
+
+
+def build_eval(cfg):
+    n = cfg.layers
+
+    def fn(*flat):
+        tokens, labels = flat[0], flat[1]
+        flat = list(flat[2:])
+        frozen_flat, flat = _take(flat, packing.N_FROZEN)
+        lora_flat, flat = _take(flat, packing.N_LORA)
+        head_flat, flat = _take(flat, packing.N_HEAD)
+        assert not flat
+        frozen = packing.unflatten_frozen(frozen_flat)
+        logits, loss = model.eval_batch(
+            cfg, tokens, labels, frozen,
+            packing.unflatten_lora(lora_flat), packing.unflatten_head(head_flat),
+        )
+        return (logits, loss)
+
+    inputs = (
+        [_tokens_entry(cfg), _labels_entry(cfg)]
+        + _frozen_entries(cfg)
+        + _lora_entries(cfg, n, "lora")
+        + _head_entries(cfg)
+    )
+    outputs = [
+        _spec_entry("logits", (cfg.batch, cfg.classes)),
+        _spec_entry("loss", ()),
+    ]
+    return fn, inputs, outputs
+
+
+def build_full_step(cfg):
+    n = cfg.layers
+
+    def fn(*flat):
+        tokens, labels = flat[0], flat[1]
+        flat = list(flat[2:])
+        frozen_flat, flat = _take(flat, packing.N_FROZEN)
+        t, flat = _unpack_trainables(flat)
+        mom, flat = _unpack_trainables(flat)
+        vel, flat = _unpack_trainables(flat)
+        step, lr = flat
+        frozen = packing.unflatten_frozen(frozen_flat)
+        loss, new_lora, new_head, new_m, new_v = model.full_step(
+            cfg, tokens, labels, frozen, t["lora"], t["head"], mom, vel, step, lr
+        )
+        out = [loss]
+        out += _flatten_trainables({"lora": new_lora, "head": new_head})
+        out += _flatten_trainables(new_m) + _flatten_trainables(new_v)
+        return tuple(out)
+
+    t_entries = _lora_entries(cfg, n, "lora") + _head_entries(cfg)
+    inputs = (
+        [_tokens_entry(cfg), _labels_entry(cfg)]
+        + _frozen_entries(cfg)
+        + t_entries
+        + _adam_entries(t_entries)
+        + _scalar_entries()
+    )
+    outputs = (
+        [_spec_entry("loss", ())]
+        + [_spec_entry("new." + e["name"], e["shape"]) for e in t_entries]
+        + [_spec_entry("new.adam_m." + e["name"], e["shape"]) for e in t_entries]
+        + [_spec_entry("new.adam_v." + e["name"], e["shape"]) for e in t_entries]
+    )
+    return fn, inputs, outputs
+
+
+def example_args(input_spec):
+    """Concrete example arrays matching a spec (for lowering/tests)."""
+    out = []
+    for e in input_spec:
+        shape = tuple(e["shape"])
+        if e["dtype"] == "i32":
+            out.append(np.zeros(shape, np.int32))
+        else:
+            out.append(np.zeros(shape, np.float32))
+    return out
+
+
+def shape_structs(input_spec):
+    """jax.ShapeDtypeStruct list matching a spec (for AOT lowering)."""
+    import jax
+
+    out = []
+    for e in input_spec:
+        dt = jnp.int32 if e["dtype"] == "i32" else jnp.float32
+        out.append(jax.ShapeDtypeStruct(tuple(e["shape"]), dt))
+    return out
+
+
+def all_artifacts(cfg):
+    """{artifact_name: (fn, inputs, outputs)} for one model config."""
+    arts = {}
+    for k in cfg.cuts:
+        arts[f"client_fwd_{k}"] = build_client_fwd(cfg, k)
+        arts[f"server_step_{k}"] = build_server_step(cfg, k)
+        arts[f"client_bwd_{k}"] = build_client_bwd(cfg, k)
+    arts["eval"] = build_eval(cfg)
+    arts["full_step"] = build_full_step(cfg)
+    return arts

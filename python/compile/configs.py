@@ -1,0 +1,68 @@
+"""Model configurations.
+
+`base` mirrors the paper's BERT-base setup and drives the *analytic*
+memory/FLOPs models on the rust side (DESIGN.md §2 — the 110M-param model
+is not trained numerically on this single-core CPU testbed).  `small` and
+`mini` are scaled configs whose artifacts are actually executed; all
+schemes consume the same artifacts so relative behaviour is preserved.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    hidden: int        # m — feature dimension of the hidden layer (paper §II)
+    layers: int        # N — transformer layers
+    heads: int
+    ffn: int
+    seq: int           # L — maximum sequence length
+    classes: int       # CARER has 6 emotion classes
+    rank: int          # r — LoRA rank (paper: 16)
+    alpha: float       # LoRA scaling numerator (scale = alpha / rank)
+    batch: int         # B — mini-batch size (paper: 16)
+    cuts: tuple = (1, 2, 3)  # client-side cut points k_u used in the paper
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def lora_scale(self) -> float:
+        return self.alpha / self.rank
+
+    def validate(self) -> None:
+        assert self.hidden % self.heads == 0, "hidden must divide into heads"
+        assert all(0 < k < self.layers for k in self.cuts), (
+            "every cut must leave at least one server-side layer"
+        )
+
+
+# Fast config for pytest and criterion micro-benches.
+MINI = ModelConfig(
+    name="mini", vocab=1024, hidden=64, layers=4, heads=2, ffn=256,
+    seq=32, classes=6, rank=8, alpha=16.0, batch=8, cuts=(1, 2, 3),
+)
+
+# Default numeric config: big enough to show real learning curves,
+# small enough to train for hundreds of steps on one CPU core.
+SMALL = ModelConfig(
+    name="small", vocab=2048, hidden=128, layers=6, heads=4, ffn=512,
+    seq=64, classes=6, rank=16, alpha=32.0, batch=16, cuts=(1, 2, 3),
+)
+
+# The paper's BERT-base setting (analytics only on this testbed).
+BASE = ModelConfig(
+    name="base", vocab=30522, hidden=768, layers=12, heads=12, ffn=3072,
+    seq=128, classes=6, rank=16, alpha=32.0, batch=16, cuts=(1, 2, 3),
+)
+
+CONFIGS = {c.name: c for c in (MINI, SMALL, BASE)}
+
+
+def get_config(name: str) -> ModelConfig:
+    cfg = CONFIGS[name]
+    cfg.validate()
+    return cfg

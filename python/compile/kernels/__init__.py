@@ -1,0 +1,17 @@
+"""L1 — Pallas kernels for the paper's compute hot-spots.
+
+- lora_matmul: fused base + low-rank projection (paper eq. 1), fwd + bwd
+- layernorm:   fused row-wise normalization, fwd + bwd-dx
+- attention:   per-(batch,head) fused scores/softmax/PV
+- ref:         pure-jnp oracles for all of the above
+
+All kernels run interpret=True on this CPU testbed (Mosaic custom-calls
+need a real TPU plugin) but are tiled to be Mosaic-valid — common.py.
+"""
+
+from .attention import attention
+from .layernorm import layernorm
+from .lora_matmul import lora_matmul
+from . import common, ref
+
+__all__ = ["attention", "layernorm", "lora_matmul", "common", "ref"]

@@ -1,0 +1,84 @@
+"""Batched scaled-dot-product attention as a Pallas kernel.
+
+One grid step processes one (batch*head) slice: Q, K, V [L, d] tiles are
+brought into VMEM, scores + softmax + PV are computed without touching
+HBM in between (the CUDA analogue would be a fused flash-style block; at
+the paper's L=128 the whole [L, L] score tile fits in VMEM so no online
+softmax is needed — see DESIGN.md §7).
+
+The softmax matrix P is emitted as a second output and saved as the
+custom_vjp residual so the backward pass (attention_bwd_ref — small,
+fusion-friendly contractions) avoids recomputing the softmax.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .ref import attention_bwd_ref, attention_ref
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, p_ref):
+    q = q_ref[0]                                           # [L, d]
+    k = k_ref[0]
+    v = v_ref[0]
+    d = q.shape[-1]
+    s = jnp.dot(q, k.T) * (1.0 / jnp.sqrt(jnp.asarray(d, q.dtype)))
+    s = s - jnp.max(s, axis=-1, keepdims=True)             # numerics
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    p_ref[0] = p
+    o_ref[0] = jnp.dot(p, v)
+
+
+def _fwd_call(q, k, v):
+    bh, seq, d = q.shape
+    kspec = pl.BlockSpec((1, seq, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(bh,),
+        in_specs=[kspec, kspec, kspec],
+        out_specs=[
+            pl.BlockSpec((1, seq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, seq, seq), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, seq, seq), q.dtype),
+        ],
+        interpret=common.INTERPRET,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Batched attention. q/k/v: [BH, L, d] -> o: [BH, L, d]."""
+    o, _ = _attention_with_p(q, k, v)
+    return o
+
+
+def _attention_with_p(q, k, v):
+    if not common.supports_tiling(*q.shape):
+        o, p = jax.vmap(attention_ref)(q, k, v)
+        return o, p
+    return _fwd_call(q, k, v)
+
+
+def _vjp_fwd(q, k, v):
+    o, p = _attention_with_p(q, k, v)
+    return o, (q, k, v, p)
+
+
+def _vjp_bwd(res, g):
+    q, k, v, p = res
+    dq, dk, dv = jax.vmap(attention_bwd_ref)(q, k, v, p, g)
+    return dq, dk, dv
+
+
+attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_footprint(seq, d):
+    """Bytes resident per grid step: Q, K, V, O tiles + the score tile."""
+    return common.vmem_bytes((seq, d), (seq, d), (seq, d), (seq, d), (seq, seq))

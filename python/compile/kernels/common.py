@@ -1,0 +1,67 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+TPU mapping notes (DESIGN.md §7): the MXU is a 128×128 systolic array and
+VMEM tiles for f32 are (8, 128)-aligned.  We therefore prefer block edges
+of 128 (or the full dimension when it is smaller), and fall back to the
+pure-jnp reference when a dimension cannot be tiled cleanly — interpret
+mode would accept ragged blocks, but real Mosaic lowering would not, and
+we keep the kernels structurally TPU-valid.
+"""
+
+INTERPRET = True  # CPU PJRT cannot execute Mosaic custom-calls (README).
+
+# Preferred MXU-aligned block edge.
+MXU_EDGE = 128
+# f32 VMEM sublane granularity.
+SUBLANE = 8
+# Practical per-core VMEM budget used by the static footprint estimator.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def pick_block(dim: int, preferred: int = MXU_EDGE) -> int:
+    """Largest divisor of `dim` that is <= preferred, biased to MXU edges.
+
+    Guarantees the returned block evenly divides `dim` so every grid step
+    maps to a full tile (no masking needed in the kernel body).
+    """
+    if dim <= preferred:
+        return dim
+    if dim % preferred == 0:
+        return preferred
+    # Fall back to the largest divisor <= preferred.
+    for cand in range(preferred, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def supports_tiling(*dims: int) -> bool:
+    """True when every dim is positive — pick_block always finds a divisor,
+    so tiling support is unconditional for positive shapes.  Kept as an
+    explicit guard point so future dtype/shape restrictions live here."""
+    return all(d > 0 for d in dims)
+
+
+def vmem_bytes(*shapes, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for a set of resident blocks."""
+    total = 0
+    for shape in shapes:
+        n = dtype_bytes
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def mxu_utilization(bm: int, bn: int, bk: int) -> float:
+    """Fraction of the 128x128 MXU a (bm, bk) @ (bk, bn) tile keeps busy.
+
+    A dimension smaller than the systolic edge leaves rows/columns of the
+    array idle; utilization is the product of the per-edge occupancies.
+    """
+    occ_m = min(bm, MXU_EDGE) / MXU_EDGE
+    occ_n = min(bn, MXU_EDGE) / MXU_EDGE
+    # The contraction dim streams through the array; only alignment to the
+    # sublane granularity matters.
+    occ_k = 1.0 if bk % SUBLANE == 0 else bk / ((bk // SUBLANE + 1) * SUBLANE)
+    return occ_m * occ_n * occ_k

@@ -1,0 +1,178 @@
+"""Fused LoRA projection kernel — the fine-tuning hot-spot.
+
+The paper fine-tunes BERT with LoRA on the attention projections; every
+client-side and server-side training step is dominated by projections of
+the form
+
+    y = x @ W + (alpha/r) * (x @ A^T) @ B^T        (paper eq. 1)
+
+On CUDA the natural implementation is two GEMM launches + an epilogue.
+On TPU we fuse all three into one Pallas kernel: a (bm, K) block of `x`
+and a (K, bn) block of `W` stream through VMEM, while the *entire* rank-r
+factors A [r, K] and the (bn, r) slice of B stay resident — r=16 means
+the low-rank residency is ~K*r*4 bytes, negligible next to the W tile —
+so the low-rank update rides along with the base matmul at zero extra
+HBM traffic for `x`.
+
+Backward is fused the same way (see `_dx_kernel`, `_da_db_kernel`) and
+wired up with jax.custom_vjp so the L2 model can differentiate straight
+through the kernel.  All kernels run interpret=True on this testbed
+(CPU PJRT cannot run Mosaic custom-calls); tiling is still chosen to be
+Mosaic-valid — see common.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .ref import lora_matmul_bwd_ref, lora_matmul_ref
+
+
+def _fwd_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, *, scale):
+    """One (bm, bn) output tile: base GEMM + rank-r correction, fused."""
+    x = x_ref[...]                       # [bm, K]
+    u = jnp.dot(x, a_ref[...].T)         # [bm, r]   rank-r down-projection
+    o_ref[...] = jnp.dot(x, w_ref[...]) + scale * jnp.dot(u, b_ref[...].T)
+
+
+def _dx_kernel(g_ref, w_ref, a_ref, b_ref, dx_ref, *, scale):
+    """dx tile = g @ W^T + scale * (g @ B) @ A, fused like the forward."""
+    g = g_ref[...]                       # [bm, N]
+    t = jnp.dot(g, b_ref[...])           # [bm, r]
+    dx_ref[...] = jnp.dot(g, w_ref[...].T) + scale * jnp.dot(t, a_ref[...])
+
+
+def _da_db_kernel(x_ref, g_ref, a_ref, b_ref, da_ref, db_ref, *, scale, steps):
+    """Accumulate dA [r, K] and dB [N, r] over the M grid dimension.
+
+    Grid iterates over M blocks; the (small) dA/dB outputs alias the same
+    block every step, so we initialize at step 0 and accumulate after.
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]                       # [bm, K]
+    g = g_ref[...]                       # [bm, N]
+    t = jnp.dot(g, b_ref[...])           # [bm, r]
+    u = jnp.dot(x, a_ref[...].T)         # [bm, r]
+    da = scale * jnp.dot(t.T, x)         # [r, K]
+    db = scale * jnp.dot(g.T, u)         # [N, r]
+
+    @pl.when(i == 0)
+    def _init():
+        da_ref[...] = da
+        db_ref[...] = db
+
+    @pl.when(i > 0)
+    def _acc():
+        da_ref[...] += da
+        db_ref[...] += db
+
+
+def _fwd_call(x, w, a, b, scale):
+    m_dim, k_dim = x.shape
+    n_dim = w.shape[1]
+    r = a.shape[0]
+    bm = common.pick_block(m_dim)
+    bn = common.pick_block(n_dim)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale),
+        grid=(m_dim // bm, n_dim // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k_dim), lambda i, j: (i, 0)),   # x row-block
+            pl.BlockSpec((k_dim, bn), lambda i, j: (0, j)),   # W col-block
+            pl.BlockSpec((r, k_dim), lambda i, j: (0, 0)),    # A resident
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),       # B col-block
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), x.dtype),
+        interpret=common.INTERPRET,
+    )(x, w, a, b)
+
+
+def _dx_call(g, w, a, b, scale):
+    m_dim, n_dim = g.shape
+    k_dim = w.shape[0]
+    r = a.shape[0]
+    bm = common.pick_block(m_dim)
+    bk = common.pick_block(k_dim)
+    return pl.pallas_call(
+        functools.partial(_dx_kernel, scale=scale),
+        grid=(m_dim // bm, k_dim // bk),
+        in_specs=[
+            pl.BlockSpec((bm, n_dim), lambda i, j: (i, 0)),   # g row-block
+            pl.BlockSpec((bk, n_dim), lambda i, j: (j, 0)),   # W^T via rows
+            pl.BlockSpec((r, bk), lambda i, j: (0, j)),       # A col-block
+            pl.BlockSpec((n_dim, r), lambda i, j: (0, 0)),    # B resident
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), g.dtype),
+        interpret=common.INTERPRET,
+    )(g, w, a, b)
+
+
+def _da_db_call(x, g, a, b, scale):
+    m_dim, k_dim = x.shape
+    n_dim = g.shape[1]
+    r = a.shape[0]
+    bm = common.pick_block(m_dim)
+    steps = m_dim // bm
+    return pl.pallas_call(
+        functools.partial(_da_db_kernel, scale=scale, steps=steps),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((bm, k_dim), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n_dim), lambda i: (i, 0)),
+            pl.BlockSpec((r, k_dim), lambda i: (0, 0)),
+            pl.BlockSpec((n_dim, r), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r, k_dim), lambda i: (0, 0)),
+            pl.BlockSpec((n_dim, r), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, k_dim), x.dtype),
+            jax.ShapeDtypeStruct((n_dim, r), x.dtype),
+        ],
+        interpret=common.INTERPRET,
+    )(x, g, a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def lora_matmul(x, w, a, b, scale):
+    """Differentiable fused LoRA projection.  Shapes as in ref.py.
+
+    W is frozen: its cotangent is returned as None so no dense [K, N]
+    gradient buffer is ever materialized (the memory point of LoRA).
+    """
+    if not common.supports_tiling(*x.shape, w.shape[1]):
+        return lora_matmul_ref(x, w, a, b, scale)
+    return _fwd_call(x, w, a, b, scale)
+
+
+def _vjp_fwd(x, w, a, b, scale):
+    return lora_matmul(x, w, a, b, scale), (x, w, a, b)
+
+
+def _vjp_bwd(scale, res, g):
+    x, w, a, b = res
+    if not common.supports_tiling(*x.shape, w.shape[1]):
+        dx, da, db = lora_matmul_bwd_ref(x, w, a, b, scale, g)
+    else:
+        dx = _dx_call(g, w, a, b, scale)
+        da, db = _da_db_call(x, g, a, b, scale)
+    return dx, None, da, db
+
+
+lora_matmul.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_footprint(m_dim, k_dim, n_dim, r):
+    """Static VMEM estimate (bytes) for the forward tile set — used by the
+    §Perf roofline notes and asserted < budget in tests."""
+    bm = common.pick_block(m_dim)
+    bn = common.pick_block(n_dim)
+    return common.vmem_bytes(
+        (bm, k_dim), (k_dim, bn), (r, k_dim), (bn, r), (bm, bn)
+    )

@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the pytest/hypothesis suites compare against
+(see python/tests/test_kernels.py). They are also used directly by the
+model when a dimension is too ragged for the tiled kernels (guarded by
+`kernels.common.supports_tiling`).
+"""
+
+import jax.numpy as jnp
+from jax import nn as jnn
+
+
+def lora_matmul_ref(x, w, a, b, scale):
+    """y = x @ w + scale * (x @ a.T) @ b.T
+
+    x: [M, K]   activations
+    w: [K, N]   frozen base weight
+    a: [r, K]   LoRA down-projection
+    b: [N, r]   LoRA up-projection
+    scale: python float (alpha / r)
+    """
+    return x @ w + scale * ((x @ a.T) @ b.T)
+
+
+def lora_matmul_bwd_ref(x, w, a, b, scale, g):
+    """Cotangents of lora_matmul_ref wrt (x, a, b); w is frozen.
+
+    g: [M, N] upstream gradient.
+    Returns (dx [M, K], da [r, K], db [N, r]).
+    """
+    u = x @ a.T                      # [M, r]
+    dx = g @ w.T + scale * ((g @ b) @ a)
+    da = scale * (g @ b).T @ x       # [r, K]
+    db = scale * g.T @ u             # [N, r]
+    return dx, da, db
+
+
+def layernorm_ref(x, scale, bias, eps=1e-5):
+    """Row-wise layer normalization. x: [M, D], scale/bias: [D]."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xhat = (x - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return xhat * scale + bias
+
+
+def attention_ref(q, k, v):
+    """Scaled dot-product attention for one (batch, head) slice.
+
+    q, k, v: [L, d].  Returns (o [L, d], p [L, L]) where p is the softmax
+    matrix (returned so custom_vjp backward passes can reuse it).
+    """
+    d = q.shape[-1]
+    s = (q @ k.T) * (1.0 / jnp.sqrt(jnp.asarray(d, q.dtype)))
+    p = jnn.softmax(s, axis=-1)
+    return p @ v, p
+
+
+def attention_bwd_ref(q, k, v, p, g):
+    """Cotangents of attention_ref output `o` wrt (q, k, v) given residual p."""
+    d = q.shape[-1]
+    inv = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    dv = p.T @ g                                   # [L, d]
+    dp = g @ v.T                                   # [L, L]
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = (ds @ k) * inv
+    dk = (ds.T @ q) * inv
+    return dq, dk, dv
+
+
+def gelu_ref(x):
+    """tanh-approximated GELU (matches the kernel)."""
+    c = jnp.asarray(0.7978845608028654, x.dtype)  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))

@@ -1,0 +1,251 @@
+"""L2 — the BERT-like encoder and the split training steps (paper Alg. 1).
+
+The model is written so the *same* parameter tensors serve every artifact:
+frozen weights arrive as full per-layer stacks [N, ...] and each artifact
+statically slices the layers it owns (client: [0, k), server: [k, N)).
+LoRA adapters ride on the attention Q/V projections via the fused
+kernels.lora_matmul (paper eq. 1); the classification head is trained on
+the server side, as in FedBERT-style SFL.
+
+Four step functions map 1:1 onto the paper's protocol:
+  client_forward  — eq. (3): v_u = f(W_u, R_c^u; x_u)
+  server_step     — eq. (4) + loss + server-LoRA/head Adam update + dv_u
+  client_backward — client-side LoRA Adam update from dv_u (forward is
+                    rematerialized: activations are *not* stored between
+                    the fwd and bwd phases — that is the client-memory
+                    story of the paper)
+  eval_batch      — full-model logits for accuracy/F1 tracking
+
+All functions are pure; optimizer state is explicit (rust owns it).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import packing
+from .kernels import attention, layernorm, lora_matmul
+from .kernels.ref import gelu_ref as gelu
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Initialization (the "pretrained" weights — seeded random on this testbed;
+# see DESIGN.md §2 for why this preserves the fine-tuning dynamics).
+# ---------------------------------------------------------------------------
+
+def init_frozen(cfg, key):
+    ks = jax.random.split(key, 8)
+    m, f, n = cfg.hidden, cfg.ffn, cfg.layers
+    std = 0.05
+
+    def norm(k, shape, s=std):
+        return (jax.random.normal(k, shape) * s).astype(jnp.float32)
+
+    stacks = {
+        "wq": norm(ks[0], (n, m, m)), "bq": jnp.zeros((n, m), jnp.float32),
+        "wk": norm(ks[1], (n, m, m)), "bk": jnp.zeros((n, m), jnp.float32),
+        "wv": norm(ks[2], (n, m, m)), "bv": jnp.zeros((n, m), jnp.float32),
+        "wo": norm(ks[3], (n, m, m)), "bo": jnp.zeros((n, m), jnp.float32),
+        "ln1_s": jnp.ones((n, m), jnp.float32),
+        "ln1_b": jnp.zeros((n, m), jnp.float32),
+        "ln2_s": jnp.ones((n, m), jnp.float32),
+        "ln2_b": jnp.zeros((n, m), jnp.float32),
+        "w1": norm(ks[4], (n, m, f)), "b1": jnp.zeros((n, f), jnp.float32),
+        "w2": norm(ks[5], (n, f, m)), "b2": jnp.zeros((n, m), jnp.float32),
+    }
+    return {
+        "tok_emb": norm(ks[6], (cfg.vocab, m), 0.1),
+        "pos_emb": norm(ks[7], (cfg.seq, m), 0.02),
+        "emb_ln_s": jnp.ones((m,), jnp.float32),
+        "emb_ln_b": jnp.zeros((m,), jnp.float32),
+        "stacks": stacks,
+    }
+
+
+def init_lora(cfg, key, n_layers):
+    """Standard LoRA init: A ~ N(0, 1/r), B = 0 so the adapter starts as a
+    no-op on the pretrained function."""
+    m, r = cfg.hidden, cfg.rank
+    k1, k2 = jax.random.split(key)
+    sa = 1.0 / r
+    return {
+        "aq": (jax.random.normal(k1, (n_layers, r, m)) * sa).astype(jnp.float32),
+        "bq": jnp.zeros((n_layers, m, r), jnp.float32),
+        "av": (jax.random.normal(k2, (n_layers, r, m)) * sa).astype(jnp.float32),
+        "bv": jnp.zeros((n_layers, m, r), jnp.float32),
+    }
+
+
+def init_head(cfg, key):
+    w = (jax.random.normal(key, (cfg.hidden, cfg.classes)) * 0.05).astype(jnp.float32)
+    return {"w": w, "b": jnp.zeros((cfg.classes,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+def embed(cfg, frozen, tokens):
+    """tokens [B, L] int32 -> [B, L, m]."""
+    b, seq = tokens.shape
+    m = cfg.hidden
+    x = jnp.take(frozen["tok_emb"], tokens, axis=0) + frozen["pos_emb"][None, :, :]
+    x2 = layernorm(x.reshape(b * seq, m), frozen["emb_ln_s"], frozen["emb_ln_b"])
+    return x2.reshape(b, seq, m)
+
+
+def encoder_layer(cfg, x, lp, ll):
+    """One post-LN transformer layer.
+
+    x: [B, L, m]; lp: per-layer frozen tensors; ll: per-layer LoRA tensors.
+    Q and V projections are LoRA-augmented (fused kernel); K and the output
+    projection stay frozen, matching the paper's eq. (1) placement.
+    """
+    b, seq, m = x.shape
+    h, d = cfg.heads, cfg.head_dim
+    s = cfg.lora_scale
+    xm = x.reshape(b * seq, m)
+
+    q = lora_matmul(xm, lp["wq"], ll["aq"], ll["bq"], s) + lp["bq"]
+    k = xm @ lp["wk"] + lp["bk"]
+    v = lora_matmul(xm, lp["wv"], ll["av"], ll["bv"], s) + lp["bv"]
+
+    def heads(t):  # [B*L, m] -> [B*h, L, d]
+        return (
+            t.reshape(b, seq, h, d).transpose(0, 2, 1, 3).reshape(b * h, seq, d)
+        )
+
+    o = attention(heads(q), heads(k), heads(v))
+    o = o.reshape(b, h, seq, d).transpose(0, 2, 1, 3).reshape(b * seq, m)
+    o = o @ lp["wo"] + lp["bo"]
+
+    x1 = layernorm(xm + o, lp["ln1_s"], lp["ln1_b"])
+    ff = gelu(x1 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+    x2 = layernorm(x1 + ff, lp["ln2_s"], lp["ln2_b"])
+    return x2.reshape(b, seq, m)
+
+
+def _layer_params(frozen, i):
+    return {k: frozen["stacks"][k][i] for k in packing.STACK_KEYS}
+
+
+def _lora_layer(lora, j):
+    return {k: lora[k][j] for k in packing.LORA_KEYS}
+
+
+def run_layers(cfg, x, frozen, lora, start, end):
+    """Layers [start, end) with `lora` stacked over exactly end-start layers.
+
+    Static python loop: cut points are compile-time constants, so each
+    artifact bakes in precisely the layers it owns (the server artifact is
+    the paper's 'skip the client's submodel' — eq. 4's W_o − W_u).
+    """
+    for i in range(start, end):
+        x = encoder_layer(cfg, x, _layer_params(frozen, i), _lora_layer(lora, i - start))
+    return x
+
+
+def pool_logits(cfg, x, head):
+    """Mean-pool over the sequence then classify. x: [B, L, m] -> [B, C]."""
+    pooled = jnp.mean(x, axis=1)
+    return pooled @ head["w"] + head["b"]
+
+
+def ce_loss(logits, labels):
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+# ---------------------------------------------------------------------------
+# Adam (explicit state — rust owns it across steps)
+# ---------------------------------------------------------------------------
+
+def adam_update(params, grads, mom, vel, step, lr):
+    """step: f32 scalar (1-based). Returns (params', mom', vel')."""
+    c1 = 1.0 - jnp.power(ADAM_B1, step)
+    c2 = 1.0 - jnp.power(ADAM_B2, step)
+
+    def upd(p, g, m_, v_):
+        m2 = ADAM_B1 * m_ + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v_ + (1.0 - ADAM_B2) * g * g
+        p2 = p - lr * (m2 / c1) / (jnp.sqrt(v2 / c2) + ADAM_EPS)
+        return p2, m2, v2
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(mom)
+    flat_v = jax.tree_util.tree_leaves(vel)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# The four protocol steps (paper Alg. 1)
+# ---------------------------------------------------------------------------
+
+def client_forward(cfg, k, tokens, frozen, client_lora):
+    """eq. (3): embedding + layers [0, k) -> activations at the cut."""
+    x = embed(cfg, frozen, tokens)
+    return run_layers(cfg, x, frozen, client_lora, 0, k)
+
+
+def server_step(cfg, k, acts, labels, frozen, server_lora, head, mom, vel, step, lr):
+    """eq. (4) + backward: returns (loss, act_grads, new_server_lora,
+    new_head, new_mom, new_vel)."""
+
+    def loss_fn(trainables, acts_in):
+        x = run_layers(cfg, acts_in, frozen, trainables["lora"], k, cfg.layers)
+        return ce_loss(pool_logits(cfg, x, trainables["head"]), labels)
+
+    trainables = {"lora": server_lora, "head": head}
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(trainables, acts)
+    tgrads, act_grads = grads
+    new_t, new_m, new_v = adam_update(trainables, tgrads, mom, vel, step, lr)
+    return loss, act_grads, new_t["lora"], new_t["head"], new_m, new_v
+
+
+def client_backward(cfg, k, tokens, frozen, client_lora, act_grads, mom, vel, step, lr):
+    """Client-side LoRA update from the activation gradients.
+
+    The forward through layers [0, k) is *recomputed* here (rematerialized)
+    — the client never holds activations between protocol phases, which is
+    exactly the client-memory saving the split buys.
+    """
+
+    def fwd(lora):
+        return client_forward(cfg, k, tokens, frozen, lora)
+
+    _, vjp = jax.vjp(fwd, client_lora)
+    (grads,) = vjp(act_grads)
+    new_lora, new_m, new_v = adam_update(client_lora, grads, mom, vel, step, lr)
+    return new_lora, new_m, new_v
+
+
+def eval_batch(cfg, tokens, labels, frozen, full_lora, head):
+    """Full-model forward: returns (logits [B, C], mean CE loss)."""
+    x = embed(cfg, frozen, tokens)
+    x = run_layers(cfg, x, frozen, full_lora, 0, cfg.layers)
+    logits = pool_logits(cfg, x, head)
+    return logits, ce_loss(logits, labels)
+
+
+def full_step(cfg, tokens, labels, frozen, full_lora, head, mom, vel, step, lr):
+    """Monolithic (centralized) training step over the whole model — used by
+    the split-consistency tests and the centralized-reference example."""
+
+    def loss_fn(trainables):
+        x = embed(cfg, frozen, tokens)
+        x = run_layers(cfg, x, frozen, trainables["lora"], 0, cfg.layers)
+        return ce_loss(pool_logits(cfg, x, trainables["head"]), labels)
+
+    trainables = {"lora": full_lora, "head": head}
+    loss, grads = jax.value_and_grad(loss_fn)(trainables)
+    new_t, new_m, new_v = adam_update(trainables, grads, mom, vel, step, lr)
+    return loss, new_t["lora"], new_t["head"], new_m, new_v

@@ -1,0 +1,176 @@
+"""Flat tensor I/O convention shared between python (AOT lowering) and
+rust (runtime marshaling).
+
+Every artifact function takes/returns a *flat positional tuple* of arrays
+in the deterministic order defined here; aot.py records the same order in
+artifacts/manifest.json so the rust runtime never has to guess jax pytree
+flattening rules.
+
+Ordering convention:
+  FROZEN   : tok_emb, pos_emb, emb_ln_s, emb_ln_b, then the 16 per-layer
+             stacks (STACK_KEYS order), each [N, ...]
+  LORA(n)  : aq, bq, av, bv — each stacked over n layers
+  HEAD     : w [m, C], b [C]
+  ADAM(t)  : first-moment tensors mirroring trainable order t, then
+             second-moment tensors in the same order
+"""
+
+import numpy as np
+
+EMB_KEYS = ["tok_emb", "pos_emb", "emb_ln_s", "emb_ln_b"]
+STACK_KEYS = [
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln1_s", "ln1_b", "ln2_s", "ln2_b",
+    "w1", "b1", "w2", "b2",
+]
+LORA_KEYS = ["aq", "bq", "av", "bv"]
+HEAD_KEYS = ["w", "b"]
+
+
+def emb_shapes(cfg):
+    m = cfg.hidden
+    return {
+        "tok_emb": (cfg.vocab, m),
+        "pos_emb": (cfg.seq, m),
+        "emb_ln_s": (m,),
+        "emb_ln_b": (m,),
+    }
+
+
+def stack_shapes(cfg):
+    n, m, f = cfg.layers, cfg.hidden, cfg.ffn
+    return {
+        "wq": (n, m, m), "bq": (n, m),
+        "wk": (n, m, m), "bk": (n, m),
+        "wv": (n, m, m), "bv": (n, m),
+        "wo": (n, m, m), "bo": (n, m),
+        "ln1_s": (n, m), "ln1_b": (n, m),
+        "ln2_s": (n, m), "ln2_b": (n, m),
+        "w1": (n, m, f), "b1": (n, f),
+        "w2": (n, f, m), "b2": (n, m),
+    }
+
+
+def lora_shapes(cfg, n_layers):
+    m, r = cfg.hidden, cfg.rank
+    return {
+        "aq": (n_layers, r, m), "bq": (n_layers, m, r),
+        "av": (n_layers, r, m), "bv": (n_layers, m, r),
+    }
+
+
+def head_shapes(cfg):
+    return {"w": (cfg.hidden, cfg.classes), "b": (cfg.classes,)}
+
+
+def frozen_spec(cfg):
+    """[(name, shape)] for the full frozen parameter block."""
+    spec = [(k, emb_shapes(cfg)[k]) for k in EMB_KEYS]
+    spec += [(k, stack_shapes(cfg)[k]) for k in STACK_KEYS]
+    return spec
+
+
+def lora_spec(cfg, n_layers, prefix="lora"):
+    return [(f"{prefix}.{k}", lora_shapes(cfg, n_layers)[k]) for k in LORA_KEYS]
+
+
+def head_spec(cfg):
+    return [(f"head.{k}", head_shapes(cfg)[k]) for k in HEAD_KEYS]
+
+
+def adam_spec(trainable_spec):
+    """Adam m then v tensors mirroring a trainable spec."""
+    return (
+        [(f"adam_m.{n}", s) for n, s in trainable_spec]
+        + [(f"adam_v.{n}", s) for n, s in trainable_spec]
+    )
+
+
+def flatten_frozen(frozen):
+    return [frozen[k] for k in EMB_KEYS] + [frozen["stacks"][k] for k in STACK_KEYS]
+
+
+def unflatten_frozen(flat):
+    out = dict(zip(EMB_KEYS, flat[: len(EMB_KEYS)]))
+    out["stacks"] = dict(zip(STACK_KEYS, flat[len(EMB_KEYS):]))
+    return out
+
+
+def flatten_lora(lora):
+    return [lora[k] for k in LORA_KEYS]
+
+
+def unflatten_lora(flat):
+    return dict(zip(LORA_KEYS, flat))
+
+
+def flatten_head(head):
+    return [head[k] for k in HEAD_KEYS]
+
+
+def unflatten_head(flat):
+    return dict(zip(HEAD_KEYS, flat))
+
+
+N_FROZEN = len(EMB_KEYS) + len(STACK_KEYS)
+N_LORA = len(LORA_KEYS)
+N_HEAD = len(HEAD_KEYS)
+
+
+# ---------------------------------------------------------------------------
+# params.bin — simple binary interchange for initial weights (read by
+# rust/src/tensor/store.rs).  Layout:
+#   magic  b"SFLP"  | u32 version | u32 tensor count
+#   per tensor: u16 name_len | name utf8 | u8 dtype (0=f32, 1=i32)
+#               | u8 ndim | u32 dims[ndim] | raw little-endian data
+# ---------------------------------------------------------------------------
+
+MAGIC = b"SFLP"
+VERSION = 1
+DTYPE_F32 = 0
+DTYPE_I32 = 1
+
+
+def write_params_bin(path, tensors):
+    """tensors: list of (name, np.ndarray) — order preserved."""
+    import struct
+
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.float32:
+                dt = DTYPE_F32
+            elif arr.dtype == np.int32:
+                dt = DTYPE_I32
+            else:
+                raise ValueError(f"unsupported dtype {arr.dtype} for {name}")
+            nb = name.encode()
+            fh.write(struct.pack("<H", len(nb)))
+            fh.write(nb)
+            fh.write(struct.pack("<BB", dt, arr.ndim))
+            for d in arr.shape:
+                fh.write(struct.pack("<I", d))
+            fh.write(arr.tobytes())
+
+
+def read_params_bin(path):
+    """Inverse of write_params_bin (used by python tests)."""
+    import struct
+
+    out = []
+    with open(path, "rb") as fh:
+        assert fh.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", fh.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", fh.read(2))
+            name = fh.read(nlen).decode()
+            dt, ndim = struct.unpack("<BB", fh.read(2))
+            dims = struct.unpack(f"<{ndim}I", fh.read(4 * ndim))
+            dtype = np.float32 if dt == DTYPE_F32 else np.int32
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(fh.read(n * 4), dtype=dtype).reshape(dims)
+            out.append((name, data))
+    return out

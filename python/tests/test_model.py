@@ -1,0 +1,155 @@
+"""L2 correctness: model shapes, gradients, and — the core SFL property —
+split-step == monolithic-step for every cut point."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model, packing
+from compile.configs import MINI as cfg
+
+
+@pytest.fixture(scope="module")
+def params():
+    key = jax.random.PRNGKey(7)
+    kf, kl, kh, kd = jax.random.split(key, 4)
+    frozen = model.init_frozen(cfg, kf)
+    lora = model.init_lora(cfg, kl, cfg.layers)
+    head = model.init_head(cfg, kh)
+    tokens = jax.random.randint(kd, (cfg.batch, cfg.seq), 0, cfg.vocab, dtype=jnp.int32)
+    labels = jax.random.randint(kd, (cfg.batch,), 0, cfg.classes, dtype=jnp.int32)
+    return frozen, lora, head, tokens, labels
+
+
+def _zeros_like(t):
+    return jax.tree.map(jnp.zeros_like, t)
+
+
+def _split_lora(lora, k):
+    return (
+        {kk: v[:k] for kk, v in lora.items()},
+        {kk: v[k:] for kk, v in lora.items()},
+    )
+
+
+def test_embed_shape(params):
+    frozen, _, _, tokens, _ = params
+    x = model.embed(cfg, frozen, tokens)
+    assert x.shape == (cfg.batch, cfg.seq, cfg.hidden)
+
+
+def test_client_forward_shapes_all_cuts(params):
+    frozen, lora, _, tokens, _ = params
+    for k in cfg.cuts:
+        clora, _ = _split_lora(lora, k)
+        acts = model.client_forward(cfg, k, tokens, frozen, clora)
+        assert acts.shape == (cfg.batch, cfg.seq, cfg.hidden)
+        assert np.isfinite(np.asarray(acts)).all()
+
+
+def test_eval_batch_logits(params):
+    frozen, lora, head, tokens, labels = params
+    logits, loss = model.eval_batch(cfg, tokens, labels, frozen, lora, head)
+    assert logits.shape == (cfg.batch, cfg.classes)
+    assert float(loss) > 0
+    # B=0 LoRA init: logits must equal the frozen model's logits exactly.
+
+
+def test_lora_init_is_noop_on_function(params):
+    """With B=0, LoRA adapters must not change the forward function."""
+    frozen, lora, head, tokens, labels = params
+    logits1, _ = model.eval_batch(cfg, tokens, labels, frozen, lora, head)
+    zero_lora = _zeros_like(lora)
+    logits2, _ = model.eval_batch(cfg, tokens, labels, frozen, zero_lora, head)
+    assert_allclose(np.asarray(logits1), np.asarray(logits2), atol=1e-5)
+
+
+@pytest.mark.parametrize("k", cfg.cuts)
+def test_split_step_equals_full_step(params, k):
+    """client_forward ∘ server_step ∘ client_backward must produce exactly
+    the same updated adapters as the monolithic full_step — the defining
+    correctness property of the split protocol (paper Alg. 1 vs eq. 2)."""
+    frozen, lora, head, tokens, labels = params
+    clora, slora = _split_lora(lora, k)
+    step, lr = jnp.float32(1.0), jnp.float32(1e-3)
+
+    acts = model.client_forward(cfg, k, tokens, frozen, clora)
+    t0 = {"lora": slora, "head": head}
+    loss, dacts, nslora, nhead, _, _ = model.server_step(
+        cfg, k, acts, labels, frozen, slora, head,
+        _zeros_like(t0), _zeros_like(t0), step, lr,
+    )
+    nclora, _, _ = model.client_backward(
+        cfg, k, tokens, frozen, clora, dacts,
+        _zeros_like(clora), _zeros_like(clora), step, lr,
+    )
+
+    full_t = {"lora": lora, "head": head}
+    floss, flora, fhead, _, _ = model.full_step(
+        cfg, tokens, labels, frozen, lora, head,
+        _zeros_like(full_t), _zeros_like(full_t), step, lr,
+    )
+
+    assert abs(float(loss) - float(floss)) < 1e-5
+    for kk in packing.LORA_KEYS:
+        merged = np.concatenate([np.asarray(nclora[kk]), np.asarray(nslora[kk])], axis=0)
+        assert_allclose(merged, np.asarray(flora[kk]), rtol=1e-4, atol=1e-6)
+    for kk in packing.HEAD_KEYS:
+        assert_allclose(np.asarray(nhead[kk]), np.asarray(fhead[kk]), rtol=1e-4, atol=1e-6)
+
+
+def test_training_reduces_loss(params):
+    """A few full steps on one fixed batch must reduce the loss — the
+    minimal 'learning actually happens' check."""
+    frozen, lora, head, tokens, labels = params
+    t = {"lora": lora, "head": head}
+    mom, vel = _zeros_like(t), _zeros_like(t)
+    lr = jnp.float32(5e-3)
+    losses = []
+    cur_lora, cur_head = lora, head
+    for i in range(8):
+        loss, cur_lora, cur_head, mom, vel = model.full_step(
+            cfg, tokens, labels, frozen, cur_lora, cur_head, mom, vel,
+            jnp.float32(i + 1), lr,
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_adam_update_moves_params_and_state():
+    p = {"a": jnp.ones((4,), jnp.float32)}
+    g = {"a": jnp.full((4,), 0.5, jnp.float32)}
+    z = {"a": jnp.zeros((4,), jnp.float32)}
+    p2, m2, v2 = model.adam_update(p, g, z, z, jnp.float32(1.0), jnp.float32(0.1))
+    assert not np.allclose(np.asarray(p2["a"]), 1.0)
+    assert np.asarray(m2["a"]).max() > 0
+    assert np.asarray(v2["a"]).max() > 0
+    # Adam's first step is ~ -lr * sign(g) after bias correction.
+    assert_allclose(np.asarray(p2["a"]), 1.0 - 0.1, atol=1e-3)
+
+
+def test_ce_loss_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, 0.0], [0.0, 3.0, 0.0]], jnp.float32)
+    labels = jnp.asarray([0, 1], jnp.int32)
+    got = float(model.ce_loss(logits, labels))
+    want = float(np.mean([
+        np.log(np.exp([2, 0, 0]).sum()) - 2.0,
+        np.log(np.exp([0, 3, 0]).sum()) - 3.0,
+    ]))
+    assert abs(got - want) < 1e-6
+
+
+def test_server_step_act_grads_shape(params):
+    frozen, lora, head, tokens, labels = params
+    k = 1
+    clora, slora = _split_lora(lora, k)
+    acts = model.client_forward(cfg, k, tokens, frozen, clora)
+    t0 = {"lora": slora, "head": head}
+    _, dacts, *_ = model.server_step(
+        cfg, k, acts, labels, frozen, slora, head,
+        _zeros_like(t0), _zeros_like(t0), jnp.float32(1.0), jnp.float32(1e-3),
+    )
+    assert dacts.shape == acts.shape
+    assert np.abs(np.asarray(dacts)).max() > 0

@@ -1,0 +1,85 @@
+"""Packing/interchange invariants: the flat I/O convention and the
+params.bin binary format that rust consumes."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import packing
+from compile.configs import CONFIGS, MINI as cfg
+
+
+def test_spec_counts():
+    assert packing.N_FROZEN == 20
+    assert packing.N_LORA == 4
+    assert packing.N_HEAD == 2
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_frozen_spec_shapes_consistent(name):
+    c = CONFIGS[name]
+    spec = packing.frozen_spec(c)
+    assert len(spec) == packing.N_FROZEN
+    by_name = dict(spec)
+    assert by_name["tok_emb"] == (c.vocab, c.hidden)
+    assert by_name["wq"] == (c.layers, c.hidden, c.hidden)
+    assert by_name["w1"] == (c.layers, c.hidden, c.ffn)
+    assert by_name["w2"] == (c.layers, c.ffn, c.hidden)
+
+
+def test_flatten_unflatten_frozen_roundtrip():
+    rng = np.random.default_rng(0)
+    frozen = {
+        **{k: rng.normal(size=s).astype(np.float32)
+           for k, s in packing.emb_shapes(cfg).items()},
+        "stacks": {k: rng.normal(size=s).astype(np.float32)
+                   for k, s in packing.stack_shapes(cfg).items()},
+    }
+    flat = packing.flatten_frozen(frozen)
+    back = packing.unflatten_frozen(flat)
+    for k in packing.EMB_KEYS:
+        assert back[k] is frozen[k]
+    for k in packing.STACK_KEYS:
+        assert back["stacks"][k] is frozen["stacks"][k]
+
+
+def test_lora_spec_scales_with_layers():
+    s1 = dict(packing.lora_spec(cfg, 1))
+    s3 = dict(packing.lora_spec(cfg, 3))
+    assert s1["lora.aq"][0] == 1 and s3["lora.aq"][0] == 3
+
+
+def test_adam_spec_mirrors_trainables():
+    t = packing.lora_spec(cfg, 2) + packing.head_spec(cfg)
+    a = packing.adam_spec(t)
+    assert len(a) == 2 * len(t)
+    assert a[0][0].startswith("adam_m.") and a[len(t)][0].startswith("adam_v.")
+    assert a[0][1] == t[0][1]
+
+
+def test_params_bin_roundtrip():
+    rng = np.random.default_rng(1)
+    tensors = [
+        ("alpha", rng.normal(size=(3, 4)).astype(np.float32)),
+        ("beta", np.arange(6, dtype=np.int32).reshape(2, 3)),
+        ("scalarish", np.asarray([1.5], np.float32)),
+    ]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "p.bin")
+        packing.write_params_bin(path, tensors)
+        back = packing.read_params_bin(path)
+    assert [n for n, _ in back] == [n for n, _ in tensors]
+    for (_, a), (_, b) in zip(tensors, back):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert_allclose(a, b)
+
+
+def test_params_bin_rejects_bad_dtype():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError):
+            packing.write_params_bin(
+                os.path.join(d, "p.bin"), [("x", np.zeros(2, np.float64))]
+            )

@@ -1,0 +1,133 @@
+//! Ablation bench: scheduler behaviour across fleet size, heterogeneity
+//! spread, link rate, and aggregation interval (the design choices
+//! DESIGN.md calls out) — analytic timing model, no artifacts needed.
+//!
+//!     cargo bench --bench ablate_scheduler
+
+use sfl::config::{ClientConfig, ExperimentConfig, SchedulerKind};
+use sfl::coordinator::scheduler::make_scheduler;
+use sfl::coordinator::timing;
+use sfl::devices::{paper_fleet, DeviceProfile};
+use sfl::net::Link;
+use sfl::tensor::rng::Rng;
+use sfl::util::bench::bench;
+
+const KINDS: [SchedulerKind; 4] = [
+    SchedulerKind::Proposed,
+    SchedulerKind::Fifo,
+    SchedulerKind::WorkloadFirst,
+    SchedulerKind::Random,
+];
+
+fn makespans(
+    clients: &[ClientConfig],
+    cuts: &[usize],
+    cfg: &ExperimentConfig,
+) -> Vec<(String, f64)> {
+    let dims = cfg.timing_dims();
+    KINDS
+        .iter()
+        .map(|&kind| {
+            let mut s = make_scheduler(kind, 7);
+            let (t, _) = timing::ours_step(&dims, clients, cuts, &cfg.server, s.as_mut());
+            (s.name().to_string(), t)
+        })
+        .collect()
+}
+
+fn print_row(label: &str, ms: &[(String, f64)]) {
+    let best = ms.iter().map(|(_, t)| *t).fold(f64::INFINITY, f64::min);
+    let mut row = format!("{label:<26}");
+    for (_, t) in ms {
+        row.push_str(&format!(" {t:>9.3}{}", if (*t - best).abs() < 1e-12 { "*" } else { " " }));
+    }
+    println!("{row}");
+}
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    println!(
+        "{:<26} {:>10} {:>10} {:>10} {:>10}   (* = best)\n",
+        "ablation", "proposed", "fifo", "wf", "random"
+    );
+
+    // 1. Fleet size.
+    for mult in [1usize, 2, 4, 8] {
+        let mut clients = Vec::new();
+        let mut cuts = Vec::new();
+        for _ in 0..mult {
+            for (d, k) in paper_fleet() {
+                clients.push(ClientConfig { device: d, cut: Some(k), link: Link::paper_default() });
+                cuts.push(k);
+            }
+        }
+        print_row(&format!("fleet x{mult} ({} clients)", clients.len()), &makespans(&clients, &cuts, &cfg));
+    }
+
+    // 2. Heterogeneity spread: random fleets with TFLOPS in [lo, hi].
+    println!();
+    let mut rng = Rng::new(11);
+    for (lo, hi, label) in [
+        (1.0, 1.0, "homogeneous (1 TFLOPS)"),
+        (0.5, 2.0, "mild spread (0.5-2)"),
+        (0.2, 4.0, "strong spread (0.2-4)"),
+    ] {
+        let clients: Vec<ClientConfig> = (0..12)
+            .map(|i| {
+                let tf = lo + rng.uniform() * (hi - lo);
+                ClientConfig {
+                    device: DeviceProfile::new(&format!("dev{i}"), tf, 8192.0),
+                    cut: Some(1 + i % 3),
+                    link: Link::paper_default(),
+                }
+            })
+            .collect();
+        let cuts: Vec<usize> = clients.iter().map(|c| c.cut.unwrap()).collect();
+        print_row(label, &makespans(&clients, &cuts, &cfg));
+    }
+
+    // 3. Link rate.
+    println!();
+    for rate in [20.0, 100.0, 500.0] {
+        let clients: Vec<ClientConfig> = paper_fleet()
+            .into_iter()
+            .map(|(d, k)| ClientConfig { device: d, cut: Some(k), link: Link::new(rate, 5.0) })
+            .collect();
+        let cuts: Vec<usize> = clients.iter().map(|c| c.cut.unwrap()).collect();
+        print_row(&format!("link {rate} Mbps"), &makespans(&clients, &cuts, &cfg));
+    }
+
+    // 4. Aggregation interval I: time overhead per round amortized.
+    println!("\naggregation interval (time overhead amortized per round):");
+    let dims = cfg.timing_dims();
+    let cuts: Vec<usize> = paper_fleet().iter().map(|(_, k)| *k).collect();
+    let agg = timing::aggregation_time(&dims, &cfg.clients, &cuts);
+    let mut s = make_scheduler(SchedulerKind::Proposed, 7);
+    let (step, _) = timing::ours_step(&dims, &cfg.clients, &cuts, &cfg.server, s.as_mut());
+    for interval in [1usize, 2, 5, 10] {
+        let per_round = 4.0 * step + agg / interval as f64;
+        println!("  I={interval:<3} round={per_round:.3}s (agg share {:.1}%)", agg / interval as f64 / per_round * 100.0);
+    }
+
+    // 5. Scheduler decision cost itself (the L3 hot path).
+    println!();
+    let (clients, cuts): (Vec<_>, Vec<_>) = {
+        let mut cl = Vec::new();
+        let mut cu = Vec::new();
+        for _ in 0..16 {
+            for (d, k) in paper_fleet() {
+                cl.push(ClientConfig { device: d, cut: Some(k), link: Link::paper_default() });
+                cu.push(k);
+            }
+        }
+        (cl, cu)
+    };
+    let dims = cfg.timing_dims();
+    let jobs = timing::build_jobs(&dims, &clients, &cuts, &cfg.server);
+    for kind in KINDS {
+        let mut s = make_scheduler(kind, 7);
+        bench(&format!("order/{}/96-clients", s.name()), 10, 200, || {
+            let _ = s.order(&jobs);
+        });
+    }
+}

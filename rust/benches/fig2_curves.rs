@@ -1,0 +1,68 @@
+//! Bench: regenerate **Fig. 2(a)/(b)** — accuracy and F1 vs training
+//! time for the five compared schemes (SL, SFL, FIFO, WF, Ours).
+//!
+//! Emits the same series the paper plots as CSV under results/ and
+//! prints time-to-threshold crossings (the quantity the enlarged
+//! sub-graphs in the paper compare).
+//!
+//!     cargo bench --bench fig2_curves
+
+use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
+use sfl::coordinator::{RunResult, Trainer};
+use sfl::runtime::Engine;
+use sfl::telemetry;
+use sfl::util::bench::bench_once;
+use std::path::Path;
+
+fn main() {
+    let engine = Engine::load(Path::new("artifacts"), "mini")
+        .expect("run `make artifacts` first");
+    engine.warmup(&[1, 2, 3]).unwrap();
+
+    let mut cfg = ExperimentConfig::mini();
+    cfg.train.max_rounds = std::env::var("SFL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120);
+    cfg.train.steps_per_round = 4;
+    cfg.train.eval_interval = 3;
+    cfg.train.eval_batches = 8;
+    cfg.train.lr = 5e-3;
+
+    let variants: [(&str, SchemeKind, SchedulerKind); 5] = [
+        ("SL", SchemeKind::Sl, SchedulerKind::Proposed),
+        ("SFL", SchemeKind::Sfl, SchedulerKind::Proposed),
+        ("FIFO", SchemeKind::Ours, SchedulerKind::Fifo),
+        ("WF", SchemeKind::Ours, SchedulerKind::WorkloadFirst),
+        ("Ours", SchemeKind::Ours, SchedulerKind::Proposed),
+    ];
+    let mut results: Vec<(&str, RunResult)> = Vec::new();
+    for (name, scheme, sched) in variants {
+        let mut c = cfg.clone();
+        c.scheme = scheme;
+        c.scheduler = sched;
+        let trainer = Trainer::new(&engine, &c).unwrap();
+        let (r, _) = bench_once(&format!("fig2/{name}"), || trainer.run(true).unwrap());
+        results.push((name, r));
+    }
+
+    let rows: Vec<(&str, &RunResult)> = results.iter().map(|(n, r)| (*n, r)).collect();
+    let out = Path::new("results");
+    telemetry::write_result(out, "fig2a_accuracy.csv", &telemetry::fig2_csv(&rows, "accuracy"))
+        .unwrap();
+    telemetry::write_result(out, "fig2b_f1.csv", &telemetry::fig2_csv(&rows, "f1")).unwrap();
+
+    // Time-to-accuracy crossings (what the paper's zoomed panels show).
+    let target = rows
+        .iter()
+        .map(|(_, r)| r.final_acc)
+        .fold(f64::INFINITY, f64::min)
+        * 0.95;
+    println!("\ntime to reach accuracy {target:.3}:");
+    for (name, r) in &rows {
+        match r.acc.time_to_reach(target) {
+            Some(t) => println!("  {name:<5} {t:10.1}s"),
+            None => println!("  {name:<5}        n/a"),
+        }
+    }
+}

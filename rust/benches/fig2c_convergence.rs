@@ -1,0 +1,68 @@
+//! Bench: regenerate **Fig. 2(c)** — convergence time per scheme
+//! (SL, SFL, FIFO, WF, Ours), the paper's bar chart.
+//!
+//! Convergence = accuracy plateau (patience-based detector, §V-B).
+//! Prints the bars and the paper's headline deltas.
+//!
+//!     cargo bench --bench fig2c_convergence
+
+use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
+use sfl::coordinator::{RunResult, Trainer};
+use sfl::runtime::Engine;
+use sfl::telemetry;
+use sfl::util::bench::bench_once;
+use std::path::Path;
+
+fn main() {
+    let engine = Engine::load(Path::new("artifacts"), "mini")
+        .expect("run `make artifacts` first");
+    engine.warmup(&[1, 2, 3]).unwrap();
+
+    let mut cfg = ExperimentConfig::mini();
+    cfg.train.max_rounds = std::env::var("SFL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120);
+    cfg.train.steps_per_round = 4;
+    cfg.train.eval_interval = 3;
+    cfg.train.eval_batches = 8;
+    cfg.train.lr = 5e-3;
+    cfg.train.patience = 6;
+
+    let variants: [(&str, SchemeKind, SchedulerKind); 5] = [
+        ("SL", SchemeKind::Sl, SchedulerKind::Proposed),
+        ("SFL", SchemeKind::Sfl, SchedulerKind::Proposed),
+        ("FIFO", SchemeKind::Ours, SchedulerKind::Fifo),
+        ("WF", SchemeKind::Ours, SchedulerKind::WorkloadFirst),
+        ("Ours", SchemeKind::Ours, SchedulerKind::Proposed),
+    ];
+    let mut results: Vec<(&str, RunResult)> = Vec::new();
+    for (name, scheme, sched) in variants {
+        let mut c = cfg.clone();
+        c.scheme = scheme;
+        c.scheduler = sched;
+        let trainer = Trainer::new(&engine, &c).unwrap();
+        let (r, _) = bench_once(&format!("fig2c/{name}"), || trainer.run(true).unwrap());
+        results.push((name, r));
+    }
+
+    let rows: Vec<(&str, &RunResult)> = results.iter().map(|(n, r)| (*n, r)).collect();
+    let csv = telemetry::fig2c_csv(&rows);
+    telemetry::write_result(Path::new("results"), "fig2c_convergence.csv", &csv).unwrap();
+
+    println!("\nFig 2(c) — convergence time (virtual seconds):");
+    let max = rows.iter().map(|(_, r)| r.total_time()).fold(0.0, f64::max);
+    for (name, r) in &rows {
+        let t = r.total_time();
+        let bar = "#".repeat(((t / max) * 40.0) as usize);
+        println!("  {name:<5} {t:10.1}s  {bar}");
+    }
+    let by: std::collections::HashMap<&str, &RunResult> = rows.iter().copied().collect();
+    println!(
+        "\ndeltas: vs SL -{:.0}% (paper -41%) | vs SFL -{:.1}% (paper -6.1%) | vs WF -{:.1}% (paper -5.5%) | vs FIFO -{:.1}% (paper -6.2%)",
+        (1.0 - by["Ours"].total_time() / by["SL"].total_time()) * 100.0,
+        (1.0 - by["Ours"].total_time() / by["SFL"].total_time()) * 100.0,
+        (1.0 - by["Ours"].total_time() / by["WF"].total_time()) * 100.0,
+        (1.0 - by["Ours"].total_time() / by["FIFO"].total_time()) * 100.0,
+    );
+}

@@ -1,0 +1,91 @@
+//! L3 hot-path micro-benches (the §Perf profile targets): literal
+//! marshaling, adapter split/join/FedAvg, per-call PJRT latency for
+//! every artifact, and the event-queue/scheduler substrate.
+//!
+//!     cargo bench --bench hotpath
+
+use sfl::config::ExperimentConfig;
+use sfl::coordinator::scheduler::ProposedScheduler;
+use sfl::coordinator::timing;
+use sfl::lora::{fedavg, AdapterSet};
+use sfl::runtime::{ClientState, Engine, ServerState};
+use sfl::simclock::EventQueue;
+use sfl::tensor::rng::Rng;
+use sfl::util::bench::bench;
+use std::path::Path;
+
+fn main() {
+    let engine = Engine::load(Path::new("artifacts"), "mini")
+        .expect("run `make artifacts` first");
+    engine.warmup(&[1, 2, 3]).unwrap();
+    let dims = engine.dims().clone();
+
+    // --- host-side adapter ops (aggregation path) ---
+    let full = engine.initial_lora().unwrap();
+    bench("lora/split_at", 10, 500, || {
+        let _ = full.split_at(2).unwrap();
+    });
+    let (c2, s2) = full.split_at(2).unwrap();
+    bench("lora/join", 10, 500, || {
+        let _ = AdapterSet::join(&c2, &s2).unwrap();
+    });
+    let sets: Vec<AdapterSet> =
+        (0..6).map(|i| AdapterSet::init(&dims, dims.layers, i)).collect();
+    let w = 1.0 / 6.0f32;
+    bench("lora/fedavg-6-clients", 10, 200, || {
+        let pairs: Vec<(f32, &AdapterSet)> = sets.iter().map(|s| (w, s)).collect();
+        let _ = fedavg(&pairs).unwrap();
+    });
+
+    // --- PJRT per-call latency, every artifact kind ---
+    let mut rng = Rng::new(5);
+    let tokens: Vec<i32> =
+        (0..dims.batch * dims.seq).map(|_| rng.below(dims.vocab) as i32).collect();
+    let labels: Vec<i32> = (0..dims.batch).map(|_| rng.below(dims.classes) as i32).collect();
+    let head = engine.initial_head().unwrap();
+
+    for k in [1usize, 2, 3] {
+        let (clora, slora) = full.split_at(k).unwrap();
+        let cstate = ClientState::fresh(clora);
+        let sstate = ServerState::fresh(slora, head.clone());
+        bench(&format!("pjrt/client_fwd_{k}"), 3, 20, || {
+            let _ = engine.client_fwd(k, &tokens, &cstate.lora).unwrap();
+        });
+        let acts = engine.client_fwd(k, &tokens, &cstate.lora).unwrap();
+        bench(&format!("pjrt/server_step_{k}"), 3, 20, || {
+            let _ = engine.server_step(k, &acts, &labels, &sstate, 1e-3).unwrap();
+        });
+        let out = engine.server_step(k, &acts, &labels, &sstate, 1e-3).unwrap();
+        bench(&format!("pjrt/client_bwd_{k}"), 3, 20, || {
+            let _ = engine.client_bwd(k, &tokens, &cstate, &out.act_grads, 1e-3).unwrap();
+        });
+    }
+    bench("pjrt/eval", 3, 20, || {
+        let _ = engine.eval(&tokens, &labels, &full, &head).unwrap();
+    });
+    let fstate = ServerState::fresh(full.clone(), head.clone());
+    bench("pjrt/full_step", 3, 20, || {
+        let _ = engine.full_step(&tokens, &labels, &fstate, 1e-3).unwrap();
+    });
+
+    // --- coordinator substrate ---
+    let cfg = ExperimentConfig::paper();
+    let tdims = cfg.timing_dims();
+    let cuts = cfg.resolve_cuts();
+    bench("timing/ours_step-6-clients", 10, 1000, || {
+        let _ = timing::ours_step(&tdims, &cfg.clients, &cuts, &cfg.server, &mut ProposedScheduler);
+    });
+    bench("simclock/10k-events", 2, 50, || {
+        let mut q = EventQueue::new();
+        for i in 0..10_000u32 {
+            q.schedule_in((i % 97) as f64 * 0.01, i);
+        }
+        while q.next().is_some() {}
+    });
+
+    println!(
+        "\ntelemetry: execs={} staged-bytes={}",
+        engine.exec_count.get(),
+        engine.bytes_uploaded.get()
+    );
+}

@@ -1,0 +1,55 @@
+//! Bench: regenerate **Table I** — memory / convergence round /
+//! convergence time / accuracy / F1 for SL, SFL, Ours.
+//!
+//! Runs the three schemes on the mini artifacts to convergence (bounded
+//! rounds to keep `cargo bench` tractable on one core) and prints the
+//! same rows the paper reports, plus the headline ratios.
+//!
+//!     cargo bench --bench table1
+
+use sfl::config::{ExperimentConfig, SchemeKind};
+use sfl::coordinator::Trainer;
+use sfl::runtime::Engine;
+use sfl::telemetry;
+use sfl::util::bench::bench_once;
+use std::path::Path;
+
+fn main() {
+    let engine = Engine::load(Path::new("artifacts"), "mini")
+        .expect("run `make artifacts` first");
+    engine.warmup(&[1, 2, 3]).unwrap();
+
+    let mut cfg = ExperimentConfig::mini();
+    cfg.train.max_rounds = std::env::var("SFL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120);
+    cfg.train.steps_per_round = 4;
+    cfg.train.eval_interval = 3;
+    cfg.train.eval_batches = 8;
+    cfg.train.lr = 5e-3;
+    cfg.train.patience = 6;
+
+    let mut results = Vec::new();
+    for scheme in [SchemeKind::Sl, SchemeKind::Sfl, SchemeKind::Ours] {
+        let mut c = cfg.clone();
+        c.scheme = scheme;
+        let trainer = Trainer::new(&engine, &c).unwrap();
+        let (r, _) = bench_once(&format!("table1/{scheme}"), || trainer.run(true).unwrap());
+        results.push((scheme.to_string(), r));
+    }
+
+    let rows: Vec<(&str, &sfl::coordinator::RunResult)> =
+        results.iter().map(|(n, r)| (n.as_str(), r)).collect();
+    println!("\nTable I (reproduced, mini artifacts / BERT-base timing dims):");
+    println!("{}", telemetry::table1(&rows));
+
+    let by: std::collections::HashMap<&str, &sfl::coordinator::RunResult> =
+        rows.iter().copied().collect();
+    println!(
+        "headline: mem -{:.0}% vs SFL (paper -79%) | time -{:.0}% vs SL (paper -41%) | time -{:.1}% vs SFL (paper -6%)",
+        (1.0 - by["ours"].memory_mb / by["sfl"].memory_mb) * 100.0,
+        (1.0 - by["ours"].total_time() / by["sl"].total_time()) * 100.0,
+        (1.0 - by["ours"].total_time() / by["sfl"].total_time()) * 100.0,
+    );
+}

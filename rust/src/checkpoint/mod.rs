@@ -1,0 +1,239 @@
+//! Training-state checkpointing: persist/restore the full coordinator
+//! state (per-client client/server LoRA, heads, Adam moments, round
+//! counter) so long fine-tuning runs survive restarts.
+//!
+//! Uses the same SFLP binary tensor format as params.bin (one format,
+//! one parser — see python/compile/packing.py), with a `meta.*` scalar
+//! namespace for counters.
+
+use crate::lora::AdapterSet;
+use crate::runtime::{AdamState, ClientState, HeadState, ServerState};
+use crate::tensor::{store::ParamStore, HostTensor, TensorData};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SFLP";
+const VERSION: u32 = 1;
+
+/// Serialize tensors into the SFLP binary format (the rust-side writer
+/// mirroring packing.write_params_bin).
+pub fn write_sflp(path: &Path, tensors: &[(&str, &HostTensor)]) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        if nb.len() > u16::MAX as usize {
+            bail!("tensor name too long: {name}");
+        }
+        buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.push(match t.data {
+            TensorData::F32(_) => 0,
+            TensorData::I32(_) => 1,
+        });
+        buf.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        buf.extend_from_slice(&t.to_le_bytes());
+    }
+    let mut fh = std::fs::File::create(path)
+        .with_context(|| format!("creating checkpoint {}", path.display()))?;
+    fh.write_all(&buf)?;
+    Ok(())
+}
+
+/// A full coordinator checkpoint (Ours/SFL schemes).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub round: usize,
+    pub sim_time: f64,
+    pub clients: Vec<ClientState>,
+    pub servers: Vec<ServerState>,
+}
+
+fn push_adapters<'a>(
+    out: &mut Vec<(String, &'a HostTensor)>,
+    prefix: &str,
+    set: &'a AdapterSet,
+) {
+    for t in &set.tensors {
+        out.push((format!("{prefix}.{}", t.name), t));
+    }
+}
+
+fn push_adam<'a>(out: &mut Vec<(String, &'a HostTensor)>, prefix: &str, adam: &'a AdamState) {
+    for (i, t) in adam.m.iter().enumerate() {
+        out.push((format!("{prefix}.m{i}"), t));
+    }
+    for (i, t) in adam.v.iter().enumerate() {
+        out.push((format!("{prefix}.v{i}"), t));
+    }
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let meta_round = HostTensor::scalar("round", self.round as f32);
+        let meta_time = HostTensor::scalar("sim_time", self.sim_time as f32);
+        let meta_clients = HostTensor::scalar("clients", self.clients.len() as f32);
+        let mut named: Vec<(String, &HostTensor)> = vec![
+            ("meta.round".into(), &meta_round),
+            ("meta.sim_time".into(), &meta_time),
+            ("meta.clients".into(), &meta_clients),
+        ];
+        let steps: Vec<HostTensor> = self
+            .clients
+            .iter()
+            .zip(self.servers.iter())
+            .enumerate()
+            .flat_map(|(u, (c, s))| {
+                vec![
+                    HostTensor::scalar(format!("c{u}.step"), c.step as f32),
+                    HostTensor::scalar(format!("s{u}.step"), s.step as f32),
+                ]
+            })
+            .collect();
+        for (u, (c, s)) in self.clients.iter().zip(self.servers.iter()).enumerate() {
+            named.push((format!("meta.c{u}.step"), &steps[2 * u]));
+            named.push((format!("meta.s{u}.step"), &steps[2 * u + 1]));
+            push_adapters(&mut named, &format!("c{u}.lora"), &c.lora);
+            push_adam(&mut named, &format!("c{u}.adam"), &c.adam);
+            push_adapters(&mut named, &format!("s{u}.lora"), &s.lora);
+            named.push((format!("s{u}.head.w"), &s.head.w));
+            named.push((format!("s{u}.head.b"), &s.head.b));
+            push_adam(&mut named, &format!("s{u}.adam"), &s.adam);
+        }
+        let borrowed: Vec<(&str, &HostTensor)> =
+            named.iter().map(|(n, t)| (n.as_str(), *t)).collect();
+        write_sflp(path, &borrowed)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let store = ParamStore::load(path)?;
+        let scalar = |name: &str| -> Result<f32> {
+            Ok(store.get(name)?.as_f32()?[0])
+        };
+        let n_clients = scalar("meta.clients")? as usize;
+        let grab_set = |prefix: &str| -> Result<AdapterSet> {
+            let tensors = ["aq", "bq", "av", "bv"]
+                .iter()
+                .map(|k| {
+                    let mut t = store.get(&format!("{prefix}.{k}"))?.clone();
+                    t.name = k.to_string();
+                    Ok(t)
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let layers = tensors[0].shape[0];
+            AdapterSet::from_tensors(layers, tensors)
+        };
+        let grab_adam = |prefix: &str, n: usize| -> Result<AdamState> {
+            let m = (0..n)
+                .map(|i| Ok(store.get(&format!("{prefix}.m{i}"))?.clone()))
+                .collect::<Result<Vec<_>>>()?;
+            let v = (0..n)
+                .map(|i| Ok(store.get(&format!("{prefix}.v{i}"))?.clone()))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(AdamState { m, v })
+        };
+
+        let mut clients = Vec::with_capacity(n_clients);
+        let mut servers = Vec::with_capacity(n_clients);
+        for u in 0..n_clients {
+            let c_lora = grab_set(&format!("c{u}.lora"))?;
+            let c_adam = grab_adam(&format!("c{u}.adam"), 4)?;
+            clients.push(ClientState {
+                lora: c_lora,
+                adam: c_adam,
+                step: scalar(&format!("meta.c{u}.step"))? as u64,
+            });
+            let s_lora = grab_set(&format!("s{u}.lora"))?;
+            let head = HeadState {
+                w: store.get(&format!("s{u}.head.w"))?.clone(),
+                b: store.get(&format!("s{u}.head.b"))?.clone(),
+            };
+            let s_adam = grab_adam(&format!("s{u}.adam"), 6)?;
+            servers.push(ServerState {
+                lora: s_lora,
+                head,
+                adam: s_adam,
+                step: scalar(&format!("meta.s{u}.step"))? as u64,
+            });
+        }
+        Ok(Self {
+            round: scalar("meta.round")? as usize,
+            sim_time: scalar("meta.sim_time")? as f64,
+            clients,
+            servers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDims;
+
+    fn sample() -> Checkpoint {
+        let dims = ModelDims::mini();
+        let mut clients = Vec::new();
+        let mut servers = Vec::new();
+        for (u, &k) in [1usize, 2].iter().enumerate() {
+            let full = AdapterSet::init(&dims, dims.layers, u as u64);
+            let (c, s) = full.split_at(k).unwrap();
+            let mut cs = ClientState::fresh(c);
+            cs.step = 5 + u as u64;
+            let head = HeadState {
+                w: HostTensor::f32("w", vec![dims.hidden, dims.classes],
+                    vec![0.5; dims.hidden * dims.classes]),
+                b: HostTensor::zeros("b", vec![dims.classes]),
+            };
+            let mut ss = ServerState::fresh(s, head);
+            ss.step = 9 + u as u64;
+            clients.push(cs);
+            servers.push(ss);
+        }
+        Checkpoint { round: 17, sim_time: 123.5, clients, servers }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ck = sample();
+        let dir = std::env::temp_dir().join("sfl_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.sflp");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.round, 17);
+        assert!((back.sim_time - 123.5).abs() < 1e-3);
+        assert_eq!(back.clients.len(), 2);
+        for (a, b) in ck.clients.iter().zip(back.clients.iter()) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.lora.max_abs_diff(&b.lora).unwrap(), 0.0);
+        }
+        for (a, b) in ck.servers.iter().zip(back.servers.iter()) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.lora.max_abs_diff(&b.lora).unwrap(), 0.0);
+            assert_eq!(a.head.w.as_f32().unwrap(), b.head.w.as_f32().unwrap());
+            assert_eq!(a.adam.m.len(), b.adam.m.len());
+        }
+    }
+
+    #[test]
+    fn writer_output_parses_with_param_store() {
+        let t = HostTensor::f32("x", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let dir = std::env::temp_dir().join("sfl_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.sflp");
+        write_sflp(&path, &[("x", &t)]).unwrap();
+        let store = ParamStore::load(&path).unwrap();
+        assert_eq!(store.get("x").unwrap().as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/ckpt.sflp")).is_err());
+    }
+}

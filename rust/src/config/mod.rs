@@ -1,0 +1,456 @@
+//! Experiment configuration: schemes, schedulers, fleet, training knobs.
+//!
+//! Configs load from the sectioned key=value format (`configs/*.exp`,
+//! parsed by `util::kv` — this workspace builds offline, so the format
+//! and parser are in-tree) or from built-in presets;
+//! `ExperimentConfig::paper()` is the §V-A setup.
+
+use crate::devices::{paper_fleet, DeviceProfile, ServerProfile, DEFAULT_CLIENT_MFU};
+use crate::model::ModelDims;
+use crate::net::Link;
+use crate::util::kv::KvDocument;
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::str::FromStr;
+
+/// Which end-to-end scheme to run (Table I / Fig. 2 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchemeKind {
+    /// The paper's memory-efficient SFL (Alg. 1) with a pluggable scheduler.
+    Ours,
+    /// Sequential split learning (baseline [18]).
+    Sl,
+    /// Parallel SFL with per-client server submodels (baseline [14]).
+    Sfl,
+}
+
+impl FromStr for SchemeKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "ours" => Ok(Self::Ours),
+            "sl" => Ok(Self::Sl),
+            "sfl" => Ok(Self::Sfl),
+            other => bail!("unknown scheme {other:?} (ours|sl|sfl)"),
+        }
+    }
+}
+
+impl std::fmt::Display for SchemeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::Ours => "ours",
+            Self::Sl => "sl",
+            Self::Sfl => "sfl",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Server-side processing order policy (§IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Alg. 2: descending N_c^u / C_u (longest client backprop first).
+    Proposed,
+    /// First-in-first-out by activation arrival (baseline [19]).
+    Fifo,
+    /// Workload-first: largest server-side workload first (baseline [6]).
+    WorkloadFirst,
+    /// Uniform-random order (control).
+    Random,
+}
+
+impl FromStr for SchedulerKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "proposed" => Ok(Self::Proposed),
+            "fifo" => Ok(Self::Fifo),
+            "wf" | "workload_first" | "workload-first" => Ok(Self::WorkloadFirst),
+            "random" => Ok(Self::Random),
+            other => bail!("unknown scheduler {other:?} (proposed|fifo|wf|random)"),
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::Proposed => "proposed",
+            Self::Fifo => "fifo",
+            Self::WorkloadFirst => "workload_first",
+            Self::Random => "random",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One client entry: device + (optional) pinned cut point.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    pub device: DeviceProfile,
+    /// If None, the split selector picks the deepest feasible cut.
+    pub cut: Option<usize>,
+    pub link: Link,
+}
+
+/// Training-loop knobs.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Mini-batch steps each client performs per round.
+    pub steps_per_round: usize,
+    /// Aggregate LoRA adapters every `aggregation_interval` rounds (paper I).
+    pub aggregation_interval: usize,
+    /// Max rounds before giving up on convergence.
+    pub max_rounds: usize,
+    /// Learning rate (paper: 1e-5 on real BERT; the scaled model trains
+    /// with a correspondingly larger rate).
+    pub lr: f32,
+    /// Per-round learning-rate schedule (constant = the paper's setting).
+    pub lr_schedule: crate::coordinator::lr::LrSchedule,
+    /// Evaluate every `eval_interval` rounds.
+    pub eval_interval: usize,
+    /// Test batches per evaluation (bounds eval cost on this testbed).
+    pub eval_batches: usize,
+    /// Convergence: patience (eval points) and min improvement.
+    pub patience: usize,
+    pub min_delta: f64,
+    /// Dirichlet alpha for the non-IID partition.
+    pub dirichlet_alpha: f64,
+    /// Per-round probability that a client drops out (failure injection;
+    /// 0.0 = the paper's setting). Dropped clients skip the round and
+    /// are excluded from that round's aggregation weights.
+    pub dropout_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps_per_round: 4,
+            aggregation_interval: 2,
+            max_rounds: 200,
+            lr: 2e-3,
+            lr_schedule: crate::coordinator::lr::LrSchedule::Constant,
+            eval_interval: 2,
+            eval_batches: 12,
+            patience: 8,
+            min_delta: 1e-3,
+            dirichlet_alpha: 0.5,
+            dropout_prob: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Which artifact family to execute numerically ("mini"/"small").
+    pub artifact_config: String,
+    /// Which dims drive the analytic timing/memory model. Usually "base"
+    /// (the paper's BERT-base) while numerics run on `artifact_config`.
+    pub timing_dims: String,
+    pub scheme: SchemeKind,
+    pub scheduler: SchedulerKind,
+    pub clients: Vec<ClientConfig>,
+    pub server: ServerProfile,
+    pub train: TrainConfig,
+    /// Root of the artifacts directory.
+    pub artifacts_dir: String,
+}
+
+impl ExperimentConfig {
+    /// The paper's §V-A setup: six heterogeneous devices with pinned cuts,
+    /// 100 Mbps links, BERT-base timing dims; numerics on `small`.
+    pub fn paper() -> Self {
+        let clients = paper_fleet()
+            .into_iter()
+            .map(|(device, cut)| ClientConfig {
+                device,
+                cut: Some(cut),
+                link: Link::paper_default(),
+            })
+            .collect();
+        Self {
+            artifact_config: "small".into(),
+            timing_dims: "base".into(),
+            scheme: SchemeKind::Ours,
+            scheduler: SchedulerKind::Proposed,
+            clients,
+            server: ServerProfile::rtx4080s(),
+            train: TrainConfig::default(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// Fast preset for tests/benches: mini artifacts, fewer rounds.
+    pub fn mini() -> Self {
+        let mut c = Self::paper();
+        c.artifact_config = "mini".into();
+        c.train.max_rounds = 30;
+        c.train.steps_per_round = 2;
+        c
+    }
+
+    /// Resolve the analytic dims ("mini"/"small"/"base").
+    pub fn timing_dims(&self) -> ModelDims {
+        match self.timing_dims.as_str() {
+            "base" => ModelDims::bert_base(),
+            "small" => ModelDims::small(),
+            _ => ModelDims::mini(),
+        }
+    }
+
+    /// Cut assignment per client: pinned cut or split-selector choice.
+    pub fn resolve_cuts(&self) -> Vec<usize> {
+        let dims = self.timing_dims();
+        self.clients
+            .iter()
+            .map(|c| {
+                c.cut.unwrap_or_else(|| crate::devices::select_cut(&dims, &c.device, 30.0))
+            })
+            .collect()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clients.is_empty() {
+            bail!("at least one client required");
+        }
+        let dims = self.timing_dims();
+        for (u, c) in self.clients.iter().enumerate() {
+            if let Some(k) = c.cut {
+                if k == 0 || k >= dims.layers {
+                    bail!("client {u}: cut {k} out of range 1..{}", dims.layers);
+                }
+                if !dims.cuts.contains(&k) {
+                    bail!(
+                        "client {u}: cut {k} has no compiled artifact (available: {:?})",
+                        dims.cuts
+                    );
+                }
+            }
+            if c.device.tflops <= 0.0 {
+                bail!("client {u}: non-positive compute");
+            }
+        }
+        if self.train.aggregation_interval == 0 || self.train.steps_per_round == 0 {
+            bail!("train intervals must be positive");
+        }
+        Ok(())
+    }
+
+    /// Load from the sectioned key=value format. Unspecified keys fall
+    /// back to the paper preset. Example (`configs/paper.exp`):
+    ///
+    /// ```text
+    /// scheme = ours
+    /// scheduler = proposed
+    /// artifact_config = small
+    /// lr = 0.002
+    ///
+    /// [server]
+    /// name = RTX 4080S
+    /// tflops = 52.2
+    ///
+    /// [client]
+    /// name = Jetson Nano
+    /// tflops = 0.472
+    /// memory_mb = 4096
+    /// cut = 1
+    /// rate_mbps = 100
+    /// ```
+    pub fn from_kv_file(path: &Path) -> Result<Self> {
+        let doc = KvDocument::load(path)?;
+        let mut cfg = Self::paper();
+        let r = &doc.root;
+        if let Some(v) = r.get("scheme") {
+            cfg.scheme = v.parse()?;
+        }
+        if let Some(v) = r.get("scheduler") {
+            cfg.scheduler = v.parse()?;
+        }
+        if let Some(v) = r.get("artifact_config") {
+            cfg.artifact_config = v.to_string();
+        }
+        if let Some(v) = r.get("timing_dims") {
+            cfg.timing_dims = v.to_string();
+        }
+        if let Some(v) = r.get("artifacts_dir") {
+            cfg.artifacts_dir = v.to_string();
+        }
+        let t = &mut cfg.train;
+        t.steps_per_round = r.parse_or("steps_per_round", t.steps_per_round)?;
+        t.aggregation_interval = r.parse_or("aggregation_interval", t.aggregation_interval)?;
+        t.max_rounds = r.parse_or("max_rounds", t.max_rounds)?;
+        t.lr = r.parse_or("lr", t.lr)?;
+        if let Some(v) = r.get("lr_schedule") {
+            t.lr_schedule = v.parse()?;
+        }
+        t.eval_interval = r.parse_or("eval_interval", t.eval_interval)?;
+        t.eval_batches = r.parse_or("eval_batches", t.eval_batches)?;
+        t.patience = r.parse_or("patience", t.patience)?;
+        t.min_delta = r.parse_or("min_delta", t.min_delta)?;
+        t.dirichlet_alpha = r.parse_or("dirichlet_alpha", t.dirichlet_alpha)?;
+        t.dropout_prob = r.parse_or("dropout_prob", t.dropout_prob)?;
+        t.seed = r.parse_or("seed", t.seed)?;
+
+        if let Some(s) = doc.sections_named("server").next() {
+            cfg.server.name = s.get("name").unwrap_or(&cfg.server.name).to_string();
+            cfg.server.tflops = s.parse_or("tflops", cfg.server.tflops)?;
+            cfg.server.memory_mb = s.parse_or("memory_mb", cfg.server.memory_mb)?;
+            cfg.server.mfu = s.parse_or("mfu", cfg.server.mfu)?;
+            cfg.server.contention_per_job =
+                s.parse_or("contention_per_job", cfg.server.contention_per_job)?;
+        }
+
+        let clients: Vec<ClientConfig> = doc
+            .sections_named("client")
+            .map(|s| -> Result<ClientConfig> {
+                let mut device = DeviceProfile::new(
+                    s.get("name").unwrap_or("client"),
+                    s.parse::<f64>("tflops")?,
+                    s.parse_or("memory_mb", 8192.0)?,
+                );
+                device.mfu = s.parse_or("mfu", DEFAULT_CLIENT_MFU)?;
+                let cut = match s.get("cut") {
+                    Some(v) => Some(v.parse::<usize>()?),
+                    None => None,
+                };
+                Ok(ClientConfig {
+                    device,
+                    cut,
+                    link: Link::new(
+                        s.parse_or("rate_mbps", 100.0)?,
+                        s.parse_or("latency_ms", 5.0)?,
+                    ),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if !clients.is_empty() {
+            cfg.clients = clients;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to the key=value format (round-trips via from_kv_file).
+    pub fn to_kv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("scheme = {}\n", self.scheme));
+        out.push_str(&format!("scheduler = {}\n", self.scheduler));
+        out.push_str(&format!("artifact_config = {}\n", self.artifact_config));
+        out.push_str(&format!("timing_dims = {}\n", self.timing_dims));
+        out.push_str(&format!("artifacts_dir = {}\n", self.artifacts_dir));
+        let t = &self.train;
+        out.push_str(&format!(
+            "steps_per_round = {}\naggregation_interval = {}\nmax_rounds = {}\nlr = {}\n\
+             eval_interval = {}\neval_batches = {}\npatience = {}\nmin_delta = {}\n\
+             dirichlet_alpha = {}\ndropout_prob = {}\nseed = {}\n",
+            t.steps_per_round,
+            t.aggregation_interval,
+            t.max_rounds,
+            t.lr,
+            t.eval_interval,
+            t.eval_batches,
+            t.patience,
+            t.min_delta,
+            t.dirichlet_alpha,
+            t.dropout_prob,
+            t.seed
+        ));
+        out.push_str(&format!(
+            "\n[server]\nname = {}\ntflops = {}\nmemory_mb = {}\nmfu = {}\ncontention_per_job = {}\n",
+            self.server.name,
+            self.server.tflops,
+            self.server.memory_mb,
+            self.server.mfu,
+            self.server.contention_per_job
+        ));
+        for c in &self.clients {
+            out.push_str(&format!(
+                "\n[client]\nname = {}\ntflops = {}\nmemory_mb = {}\nmfu = {}\nrate_mbps = {}\nlatency_ms = {}\n",
+                c.device.name,
+                c.device.tflops,
+                c.device.memory_mb,
+                c.device.mfu,
+                c.link.rate_mbps,
+                c.link.latency_ms
+            ));
+            if let Some(k) = c.cut {
+                out.push_str(&format!("cut = {k}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_is_valid_and_matches_section_v() {
+        let c = ExperimentConfig::paper();
+        c.validate().unwrap();
+        assert_eq!(c.clients.len(), 6);
+        assert_eq!(c.resolve_cuts(), vec![1, 1, 2, 2, 3, 3]);
+        assert_eq!(c.server.name, "RTX 4080S");
+        assert!((c.clients[0].link.rate_mbps - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_roundtrip() {
+        let c = ExperimentConfig::paper();
+        let text = c.to_kv();
+        let dir = std::env::temp_dir().join("sfl_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("paper.exp");
+        std::fs::write(&path, &text).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.clients.len(), 6);
+        assert_eq!(back.scheme, SchemeKind::Ours);
+        assert_eq!(back.resolve_cuts(), c.resolve_cuts());
+        assert!((back.clients[0].device.tflops - 0.472).abs() < 1e-9);
+    }
+
+    #[test]
+    fn enum_parsing() {
+        assert_eq!("ours".parse::<SchemeKind>().unwrap(), SchemeKind::Ours);
+        assert_eq!("SFL".parse::<SchemeKind>().unwrap(), SchemeKind::Sfl);
+        assert!("bogus".parse::<SchemeKind>().is_err());
+        assert_eq!("wf".parse::<SchedulerKind>().unwrap(), SchedulerKind::WorkloadFirst);
+        assert_eq!(
+            "workload_first".parse::<SchedulerKind>().unwrap(),
+            SchedulerKind::WorkloadFirst
+        );
+        assert!("bogus".parse::<SchedulerKind>().is_err());
+    }
+
+    #[test]
+    fn invalid_cut_rejected() {
+        let mut c = ExperimentConfig::paper();
+        c.clients[0].cut = Some(99);
+        assert!(c.validate().is_err());
+        c.clients[0].cut = Some(0);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn empty_clients_rejected() {
+        let mut c = ExperimentConfig::paper();
+        c.clients.clear();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn unpinned_cuts_use_selector() {
+        let mut c = ExperimentConfig::paper();
+        for cl in &mut c.clients {
+            cl.cut = None;
+        }
+        let cuts = c.resolve_cuts();
+        assert_eq!(cuts.len(), 6);
+        assert!(cuts.iter().all(|&k| (1..=3).contains(&k)));
+    }
+}

@@ -1,0 +1,143 @@
+//! Learning-rate schedules, applied per round by the coordinator.
+//!
+//! The AOT artifacts take `lr` as a runtime scalar input, so schedules
+//! are a pure L3 concern — no recompilation to change policy.
+
+use anyhow::{bail, Result};
+use std::str::FromStr;
+
+/// Per-round learning-rate policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// The paper's setting: fixed lr for the whole run.
+    Constant,
+    /// Linear decay from lr to `floor * lr` across `horizon` rounds.
+    Linear { horizon: usize, floor: f32 },
+    /// Cosine decay to `floor * lr` across `horizon` rounds.
+    Cosine { horizon: usize, floor: f32 },
+    /// Linear warmup over `warmup` rounds, then constant.
+    Warmup { warmup: usize },
+}
+
+impl LrSchedule {
+    /// Learning rate for 1-based `round`.
+    pub fn at(&self, base_lr: f32, round: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant => base_lr,
+            LrSchedule::Linear { horizon, floor } => {
+                let t = ((round - 1) as f32 / horizon.max(1) as f32).min(1.0);
+                base_lr * (1.0 - t * (1.0 - floor))
+            }
+            LrSchedule::Cosine { horizon, floor } => {
+                let t = ((round - 1) as f32 / horizon.max(1) as f32).min(1.0);
+                let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+                base_lr * (floor + (1.0 - floor) * cos)
+            }
+            LrSchedule::Warmup { warmup } => {
+                if round <= warmup {
+                    base_lr * round as f32 / warmup.max(1) as f32
+                } else {
+                    base_lr
+                }
+            }
+        }
+    }
+}
+
+impl FromStr for LrSchedule {
+    type Err = anyhow::Error;
+
+    /// Formats: `constant`, `linear:HORIZON[:FLOOR]`,
+    /// `cosine:HORIZON[:FLOOR]`, `warmup:ROUNDS`.
+    fn from_str(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "constant" => Ok(LrSchedule::Constant),
+            "linear" | "cosine" => {
+                if parts.len() < 2 {
+                    bail!("{} needs a horizon, e.g. {}:100", parts[0], parts[0]);
+                }
+                let horizon: usize = parts[1].parse()?;
+                let floor: f32 =
+                    if parts.len() > 2 { parts[2].parse()? } else { 0.1 };
+                if !(0.0..=1.0).contains(&floor) {
+                    bail!("floor must be in [0,1], got {floor}");
+                }
+                if parts[0] == "linear" {
+                    Ok(LrSchedule::Linear { horizon, floor })
+                } else {
+                    Ok(LrSchedule::Cosine { horizon, floor })
+                }
+            }
+            "warmup" => {
+                if parts.len() < 2 {
+                    bail!("warmup needs a round count, e.g. warmup:10");
+                }
+                Ok(LrSchedule::Warmup { warmup: parts[1].parse()? })
+            }
+            other => bail!("unknown lr schedule {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant;
+        assert_eq!(s.at(0.01, 1), 0.01);
+        assert_eq!(s.at(0.01, 1000), 0.01);
+    }
+
+    #[test]
+    fn linear_decays_to_floor() {
+        let s = LrSchedule::Linear { horizon: 10, floor: 0.1 };
+        assert_eq!(s.at(1.0, 1), 1.0);
+        assert!((s.at(1.0, 11) - 0.1).abs() < 1e-6);
+        assert!((s.at(1.0, 100) - 0.1).abs() < 1e-6); // clamped
+        assert!(s.at(1.0, 3) > s.at(1.0, 7));
+    }
+
+    #[test]
+    fn cosine_monotone_within_horizon() {
+        let s = LrSchedule::Cosine { horizon: 20, floor: 0.0 };
+        assert!((s.at(1.0, 1) - 1.0).abs() < 1e-6);
+        let mut prev = f32::INFINITY;
+        for round in 1..=21 {
+            let lr = s.at(1.0, round);
+            assert!(lr <= prev + 1e-6);
+            prev = lr;
+        }
+        assert!(s.at(1.0, 21) < 1e-6);
+    }
+
+    #[test]
+    fn warmup_ramps_then_holds() {
+        let s = LrSchedule::Warmup { warmup: 4 };
+        assert!((s.at(0.8, 1) - 0.2).abs() < 1e-6);
+        assert!((s.at(0.8, 4) - 0.8).abs() < 1e-6);
+        assert!((s.at(0.8, 50) - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parsing_all_forms() {
+        assert_eq!("constant".parse::<LrSchedule>().unwrap(), LrSchedule::Constant);
+        assert_eq!(
+            "linear:100".parse::<LrSchedule>().unwrap(),
+            LrSchedule::Linear { horizon: 100, floor: 0.1 }
+        );
+        assert_eq!(
+            "cosine:50:0.2".parse::<LrSchedule>().unwrap(),
+            LrSchedule::Cosine { horizon: 50, floor: 0.2 }
+        );
+        assert_eq!(
+            "warmup:10".parse::<LrSchedule>().unwrap(),
+            LrSchedule::Warmup { warmup: 10 }
+        );
+        assert!("linear".parse::<LrSchedule>().is_err());
+        assert!("cosine:10:7.0".parse::<LrSchedule>().is_err());
+        assert!("bogus".parse::<LrSchedule>().is_err());
+    }
+}

@@ -1,0 +1,492 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! Orchestrates the three schemes end-to-end over the PJRT runtime:
+//!
+//! - **Ours** (Alg. 1): parallel client forwards → sequential server
+//!   LoRA training with adapter switching, ordered by a pluggable
+//!   scheduler (Alg. 2 / FIFO / WF / Random) → parallel client
+//!   backwards; periodic LoRA aggregation (eqs. 5–9).
+//! - **SL**: one client at a time, model relayed between clients.
+//! - **SFL**: per-client server submodels trained in parallel
+//!   (numerically identical to Ours — the difference is timing + memory,
+//!   which is exactly the paper's point).
+//!
+//! Numeric training executes the real AOT artifacts; protocol *timing*
+//! runs on the virtual clock with the paper-scale dims (DESIGN.md §2).
+
+pub mod lr;
+pub mod scheduler;
+pub mod timing;
+
+use crate::config::{ExperimentConfig, SchemeKind};
+use crate::data::{self, BatchIter, Dataset};
+use crate::lora::{fedavg, AdapterSet};
+use crate::metrics::{Confusion, ConvergenceDetector, MetricSeries};
+use crate::model::{memory, ModelDims};
+use crate::net::{Message, TrafficMeter};
+use crate::runtime::{ClientState, Engine, HeadState, ServerState};
+use crate::tensor::{ops, rng::Rng};
+use anyhow::Result;
+use scheduler::make_scheduler;
+
+/// One round's training record.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub sim_time: f64,
+    pub mean_loss: f32,
+}
+
+/// Everything one experiment run produces (the raw material for Table I
+/// and Fig. 2).
+#[derive(Debug)]
+pub struct RunResult {
+    pub scheme: SchemeKind,
+    pub scheduler: String,
+    pub rounds: Vec<RoundRecord>,
+    pub acc: MetricSeries,
+    pub f1: MetricSeries,
+    pub convergence_round: Option<usize>,
+    pub convergence_time: Option<f64>,
+    pub final_acc: f64,
+    pub final_f1: f64,
+    pub memory_mb: f64,
+    pub memory: memory::MemoryBreakdown,
+    pub adapter_switches: u64,
+    pub executions: u64,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub wall_secs: f64,
+}
+
+impl RunResult {
+    /// Total simulated fine-tuning time (Table I "Convergence Time" when
+    /// converged, else the time at the last round).
+    pub fn total_time(&self) -> f64 {
+        self.convergence_time
+            .unwrap_or_else(|| self.rounds.last().map(|r| r.sim_time).unwrap_or(0.0))
+    }
+}
+
+/// The experiment driver. Holds per-client data iterators and training
+/// state; `run()` executes one scheme to convergence.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    cfg: ExperimentConfig,
+    dims_exec: ModelDims,
+    dims_time: ModelDims,
+    cuts: Vec<usize>,
+    ds: Dataset,
+    shards: Vec<Vec<usize>>,
+    weights: Vec<f32>,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: &ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let dims_exec = engine.dims().clone();
+        let dims_time = cfg.timing_dims();
+        let cuts = cfg.resolve_cuts();
+        let spec = data::CorpusSpec {
+            seed: cfg.train.seed,
+            ..data::CorpusSpec::carer_like(dims_exec.vocab, dims_exec.seq)
+        };
+        let ds = data::generate(&spec);
+        let shards = data::dirichlet_partition(
+            &ds.train,
+            cfg.clients.len(),
+            cfg.train.dirichlet_alpha,
+            cfg.train.seed + 1,
+            dims_exec.batch,
+        );
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        let weights: Vec<f32> =
+            shards.iter().map(|s| s.len() as f32 / total as f32).collect();
+        Ok(Self { engine, cfg: cfg.clone(), dims_exec, dims_time, cuts, ds, shards, weights })
+    }
+
+    pub fn cuts(&self) -> &[usize] {
+        &self.cuts
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    fn fresh_states(&self) -> Result<(Vec<ClientState>, Vec<ServerState>)> {
+        let full = self.engine.initial_lora()?;
+        let head = self.engine.initial_head()?;
+        let mut clients = Vec::new();
+        let mut servers = Vec::new();
+        for &k in &self.cuts {
+            let (c, s) = full.split_at(k)?;
+            clients.push(ClientState::fresh(c));
+            servers.push(ServerState::fresh(s, head.clone()));
+        }
+        Ok((clients, servers))
+    }
+
+    /// Data-weighted global model (eqs. 5–8 evaluated without replacing
+    /// per-client state): the model whose accuracy/F1 we track.
+    fn global_model(
+        &self,
+        clients: &[ClientState],
+        servers: &[ServerState],
+    ) -> Result<(AdapterSet, HeadState)> {
+        let fulls: Vec<AdapterSet> = clients
+            .iter()
+            .zip(servers.iter())
+            .map(|(c, s)| AdapterSet::join(&c.lora, &s.lora))
+            .collect::<Result<Vec<_>>>()?;
+        let pairs: Vec<(f32, &AdapterSet)> =
+            self.weights.iter().copied().zip(fulls.iter()).collect();
+        let agg = fedavg(&pairs)?;
+        let head_w = ops::weighted_sum(
+            &self
+                .weights
+                .iter()
+                .copied()
+                .zip(servers.iter().map(|s| &s.head.w))
+                .collect::<Vec<_>>(),
+        )?;
+        let head_b = ops::weighted_sum(
+            &self
+                .weights
+                .iter()
+                .copied()
+                .zip(servers.iter().map(|s| &s.head.b))
+                .collect::<Vec<_>>(),
+        )?;
+        Ok((agg, HeadState { w: head_w, b: head_b }))
+    }
+
+    /// Evaluate a model on (up to `eval_batches` of) the test split.
+    pub fn evaluate(&self, lora: &AdapterSet, head: &HeadState) -> Result<(f64, f64, f32)> {
+        let b = self.dims_exec.batch;
+        let n_batches = (self.ds.test.len() / b).min(self.cfg.train.eval_batches);
+        let mut conf = Confusion::new(self.dims_exec.classes);
+        let mut loss_sum = 0.0f32;
+        for i in 0..n_batches {
+            let idx: Vec<usize> = (i * b..(i + 1) * b).collect();
+            let mut tokens = Vec::with_capacity(b * self.dims_exec.seq);
+            let mut labels = Vec::with_capacity(b);
+            for &j in &idx {
+                tokens.extend_from_slice(&self.ds.test[j].tokens);
+                labels.push(self.ds.test[j].label);
+            }
+            let (logits, loss) = self.engine.eval(&tokens, &labels, lora, head)?;
+            conf.record_logits(&logits, &labels);
+            loss_sum += loss;
+        }
+        Ok((conf.accuracy(), conf.macro_f1(), loss_sum / n_batches.max(1) as f32))
+    }
+
+    /// The FedAvg aggregation phase (paper Alg. 1 lines 17–30): join,
+    /// aggregate A and B separately, re-split at each client's cut.
+    /// Only `participants` contribute weight (failure injection); the
+    /// aggregate is still distributed to every client.
+    fn aggregate(
+        &self,
+        clients: &mut [ClientState],
+        servers: &mut [ServerState],
+        participants: &[usize],
+        traffic: &mut TrafficMeter,
+    ) -> Result<()> {
+        let total: f32 = participants.iter().map(|&u| self.weights[u]).sum();
+        let fulls: Vec<AdapterSet> = participants
+            .iter()
+            .map(|&u| AdapterSet::join(&clients[u].lora, &servers[u].lora))
+            .collect::<Result<Vec<_>>>()?;
+        let pairs: Vec<(f32, &AdapterSet)> = participants
+            .iter()
+            .zip(fulls.iter())
+            .map(|(&u, f)| (self.weights[u] / total, f))
+            .collect();
+        let agg = fedavg(&pairs)?;
+        let head_pairs_w: Vec<(f32, &crate::tensor::HostTensor)> = participants
+            .iter()
+            .map(|&u| (self.weights[u] / total, &servers[u].head.w))
+            .collect();
+        let head_pairs_b: Vec<(f32, &crate::tensor::HostTensor)> = participants
+            .iter()
+            .map(|&u| (self.weights[u] / total, &servers[u].head.b))
+            .collect();
+        let head = HeadState {
+            w: ops::weighted_sum(&head_pairs_w)?,
+            b: ops::weighted_sum(&head_pairs_b)?,
+        };
+        for (u, &k) in self.cuts.iter().enumerate() {
+            if participants.contains(&u) {
+                traffic.record(&Message::LoraUpload { bytes: self.dims_time.lora_bytes(k) });
+            }
+            let (c, s) = agg.split_at(k)?;
+            clients[u].lora = c;
+            servers[u].lora = s;
+            servers[u].head = head.clone();
+            traffic.record(&Message::LoraDownload { bytes: self.dims_time.lora_bytes(k) });
+        }
+        Ok(())
+    }
+
+    /// Run the configured scheme to convergence. `quiet` suppresses the
+    /// per-round progress lines.
+    pub fn run(&self, quiet: bool) -> Result<RunResult> {
+        match self.cfg.scheme {
+            SchemeKind::Ours | SchemeKind::Sfl => self.run_parallel(quiet),
+            SchemeKind::Sl => self.run_sl(quiet),
+        }
+    }
+
+    /// Ours and SFL share numerics (per-client independent split training
+    /// + periodic aggregation); they differ in timing and memory.
+    fn run_parallel(&self, quiet: bool) -> Result<RunResult> {
+        let wall = std::time::Instant::now();
+        let t = &self.cfg.train;
+        let (mut clients, mut servers) = self.fresh_states()?;
+        let mut iters: Vec<BatchIter> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(u, s)| BatchIter::new(s, self.dims_exec.batch, t.seed + 100 + u as u64))
+            .collect();
+        let mut sched = make_scheduler(self.cfg.scheduler, t.seed);
+        let mut detector = ConvergenceDetector::new(t.patience, t.min_delta);
+        let mut traffic = TrafficMeter::default();
+        let mut switches = 0u64;
+        let mut last_active: Option<usize> = None;
+        let mut sim_time = 0.0f64;
+        let mut rounds = Vec::new();
+        let mut acc_series = MetricSeries::default();
+        let mut f1_series = MetricSeries::default();
+        let (mut final_acc, mut final_f1) = (0.0, 0.0);
+
+        let exec0 = self.engine.exec_count.get();
+        let mut dropout_rng = Rng::new(t.seed ^ 0xD809);
+        for round in 1..=t.max_rounds {
+            let round_lr = t.lr_schedule.at(t.lr, round);
+            // ---- failure injection: which clients participate? ----
+            let participants: Vec<usize> = if t.dropout_prob > 0.0 {
+                let mut p: Vec<usize> = (0..self.cuts.len())
+                    .filter(|_| dropout_rng.uniform() >= t.dropout_prob)
+                    .collect();
+                if p.is_empty() {
+                    // Never stall a round entirely: keep one survivor.
+                    p.push(dropout_rng.below(self.cuts.len()));
+                }
+                p
+            } else {
+                (0..self.cuts.len()).collect()
+            };
+            let part_clients: Vec<crate::config::ClientConfig> =
+                participants.iter().map(|&u| self.cfg.clients[u].clone()).collect();
+            let part_cuts: Vec<usize> = participants.iter().map(|&u| self.cuts[u]).collect();
+
+            // ---- timing for this round (virtual clock, paper dims) ----
+            let step_time = match self.cfg.scheme {
+                SchemeKind::Ours => {
+                    let (st, _) = timing::ours_step(
+                        &self.dims_time,
+                        &part_clients,
+                        &part_cuts,
+                        &self.cfg.server,
+                        sched.as_mut(),
+                    );
+                    st
+                }
+                SchemeKind::Sfl => {
+                    let (st, _) =
+                        timing::sfl_step(&self.dims_time, &part_clients, &part_cuts, &self.cfg.server);
+                    st
+                }
+                SchemeKind::Sl => unreachable!(),
+            };
+            sim_time += t.steps_per_round as f64 * step_time;
+
+            // ---- numeric training: steps_per_round per participant ----
+            let mut loss_sum = 0.0f32;
+            let mut loss_n = 0u32;
+            for _ in 0..t.steps_per_round {
+                // Server processing order (adapter switching bookkeeping).
+                let jobs =
+                    timing::build_jobs(&self.dims_time, &part_clients, &part_cuts, &self.cfg.server);
+                let order: Vec<usize> =
+                    sched.order(&jobs).into_iter().map(|i| participants[i]).collect();
+                for &u in &order {
+                    let k = self.cuts[u];
+                    let idx = iters[u].next_batch().to_vec();
+                    let (tokens, labels) = data::materialize_batch(&self.ds, &idx);
+                    let acts = self.engine.client_fwd(k, &tokens, &clients[u].lora)?;
+                    traffic.record(&Message::Activations {
+                        bytes: self.dims_time.activation_bytes(),
+                    });
+                    if last_active != Some(u) {
+                        switches += 1;
+                        last_active = Some(u);
+                    }
+                    let out =
+                        self.engine.server_step(k, &acts, &labels, &servers[u], round_lr)?;
+                    servers[u] = out.state;
+                    traffic.record(&Message::ActivationGrads {
+                        bytes: self.dims_time.activation_bytes(),
+                    });
+                    clients[u] = self
+                        .engine
+                        .client_bwd(k, &tokens, &clients[u], &out.act_grads, round_lr)?;
+                    loss_sum += out.loss;
+                    loss_n += 1;
+                }
+            }
+            let mean_loss = loss_sum / loss_n.max(1) as f32;
+            rounds.push(RoundRecord { round, sim_time, mean_loss });
+
+            // ---- aggregation every I rounds (paper line 17) ----
+            if round % t.aggregation_interval == 0 {
+                sim_time +=
+                    timing::aggregation_time(&self.dims_time, &part_clients, &part_cuts);
+                self.aggregate(&mut clients, &mut servers, &participants, &mut traffic)?;
+            }
+
+            // ---- evaluation + convergence ----
+            if round % t.eval_interval == 0 {
+                let (lora, head) = self.global_model(&clients, &servers)?;
+                let (acc, f1, _eval_loss) = self.evaluate(&lora, &head)?;
+                acc_series.push(round, sim_time, acc);
+                f1_series.push(round, sim_time, f1);
+                final_acc = acc;
+                final_f1 = f1;
+                if !quiet {
+                    println!(
+                        "[{:?}/{}] round {round:4}  t={sim_time:9.1}s  loss={mean_loss:.4}  acc={acc:.4}  f1={f1:.4}",
+                        self.cfg.scheme,
+                        sched.name()
+                    );
+                }
+                if detector.update(round, sim_time, acc) {
+                    break;
+                }
+            }
+        }
+
+        let mem = match self.cfg.scheme {
+            SchemeKind::Sfl => memory::sfl_server_memory(&self.dims_time, &self.cuts),
+            _ => memory::ours_server_memory(&self.dims_time, &self.cuts),
+        };
+        Ok(RunResult {
+            scheme: self.cfg.scheme,
+            scheduler: sched.name().to_string(),
+            rounds,
+            acc: acc_series,
+            f1: f1_series,
+            convergence_round: detector.converged().map(|(r, _)| r),
+            convergence_time: detector.converged().map(|(_, t)| t),
+            final_acc,
+            final_f1,
+            memory_mb: mem.total_mb(),
+            memory: mem,
+            adapter_switches: switches,
+            executions: self.engine.exec_count.get() - exec0,
+            uplink_bytes: traffic.uplink_bytes,
+            downlink_bytes: traffic.downlink_bytes,
+            wall_secs: wall.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Sequential split learning: one global adapter set relayed through
+    /// the clients; no aggregation (baseline [18]).
+    fn run_sl(&self, quiet: bool) -> Result<RunResult> {
+        let wall = std::time::Instant::now();
+        let t = &self.cfg.train;
+        let mut full = self.engine.initial_lora()?;
+        let mut head = self.engine.initial_head()?;
+        let mut iters: Vec<BatchIter> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(u, s)| BatchIter::new(s, self.dims_exec.batch, t.seed + 100 + u as u64))
+            .collect();
+        let mut detector = ConvergenceDetector::new(t.patience, t.min_delta);
+        let mut traffic = TrafficMeter::default();
+        let mut sim_time = 0.0f64;
+        let mut rounds = Vec::new();
+        let mut acc_series = MetricSeries::default();
+        let mut f1_series = MetricSeries::default();
+        let (mut final_acc, mut final_f1) = (0.0, 0.0);
+        let exec0 = self.engine.exec_count.get();
+
+        for round in 1..=t.max_rounds {
+            let round_lr = t.lr_schedule.at(t.lr, round);
+            sim_time += timing::sl_round(
+                &self.dims_time,
+                &self.cfg.clients,
+                &self.cuts,
+                &self.cfg.server,
+                t.steps_per_round,
+            );
+            let mut loss_sum = 0.0f32;
+            let mut loss_n = 0u32;
+            for (u, &k) in self.cuts.iter().enumerate() {
+                // Client u receives the current global model (relay).
+                let (clora, slora) = full.split_at(k)?;
+                let mut cstate = ClientState::fresh(clora);
+                let mut sstate = ServerState::fresh(slora, head.clone());
+                for _ in 0..t.steps_per_round {
+                    let idx = iters[u].next_batch().to_vec();
+                    let (tokens, labels) = data::materialize_batch(&self.ds, &idx);
+                    let acts = self.engine.client_fwd(k, &tokens, &cstate.lora)?;
+                    traffic.record(&Message::Activations {
+                        bytes: self.dims_time.activation_bytes(),
+                    });
+                    let out = self.engine.server_step(k, &acts, &labels, &sstate, round_lr)?;
+                    sstate = out.state;
+                    traffic.record(&Message::ActivationGrads {
+                        bytes: self.dims_time.activation_bytes(),
+                    });
+                    cstate =
+                        self.engine.client_bwd(k, &tokens, &cstate, &out.act_grads, round_lr)?;
+                    loss_sum += out.loss;
+                    loss_n += 1;
+                }
+                full = AdapterSet::join(&cstate.lora, &sstate.lora)?;
+                head = sstate.head;
+            }
+            let mean_loss = loss_sum / loss_n.max(1) as f32;
+            rounds.push(RoundRecord { round, sim_time, mean_loss });
+
+            if round % t.eval_interval == 0 {
+                let (acc, f1, _) = self.evaluate(&full, &head)?;
+                acc_series.push(round, sim_time, acc);
+                f1_series.push(round, sim_time, f1);
+                final_acc = acc;
+                final_f1 = f1;
+                if !quiet {
+                    println!(
+                        "[Sl] round {round:4}  t={sim_time:9.1}s  loss={mean_loss:.4}  acc={acc:.4}  f1={f1:.4}"
+                    );
+                }
+                if detector.update(round, sim_time, acc) {
+                    break;
+                }
+            }
+        }
+
+        let mem = memory::sl_server_memory(&self.dims_time, &self.cuts);
+        Ok(RunResult {
+            scheme: SchemeKind::Sl,
+            scheduler: "sequential".into(),
+            rounds,
+            acc: acc_series,
+            f1: f1_series,
+            convergence_round: detector.converged().map(|(r, _)| r),
+            convergence_time: detector.converged().map(|(_, t)| t),
+            final_acc,
+            final_f1,
+            memory_mb: mem.total_mb(),
+            memory: mem,
+            adapter_switches: 0,
+            executions: self.engine.exec_count.get() - exec0,
+            uplink_bytes: traffic.uplink_bytes,
+            downlink_bytes: traffic.downlink_bytes,
+            wall_secs: wall.elapsed().as_secs_f64(),
+        })
+    }
+}

@@ -1,0 +1,282 @@
+//! Server-side training-order scheduling (paper §IV, Alg. 2) + baselines.
+//!
+//! The server trains the per-client server-side LoRA adapters
+//! *sequentially*; the processing order decides how much client-side
+//! backward time and communication hide under server compute (eq. 13).
+//! Alg. 2's greedy rule: process clients in **descending N_c^u / C_u**
+//! — clients whose own backward pass is longest go first, so their
+//! backprop overlaps the server's remaining queue.
+
+use crate::config::SchedulerKind;
+use crate::tensor::rng::Rng;
+
+/// Everything a policy may inspect about one client's pending job.
+#[derive(Debug, Clone, Copy)]
+pub struct JobInfo {
+    pub client: usize,
+    /// Virtual time the activations arrive at the server (T^f + T^fc).
+    pub arrival: f64,
+    /// Server-side compute time for this client, T_u^s.
+    pub server_time: f64,
+    /// Client-side backward time, T_u^b.
+    pub client_bwd_time: f64,
+    /// Gradient downlink time, T_u^bc.
+    pub bwd_comm_time: f64,
+    /// N_c^u — number of client-side LoRA adapters.
+    pub n_client_adapters: usize,
+    /// C_u — client computing capability (TFLOPS).
+    pub compute_capability: f64,
+}
+
+/// A training-order policy. Must return a permutation of the job indices.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    /// Return client ids in server processing order.
+    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize>;
+}
+
+/// Alg. 2 — sort descending by N_c^u / C_u (longest client backward
+/// first). Ties break by client id for determinism.
+pub struct ProposedScheduler;
+
+impl Scheduler for ProposedScheduler {
+    fn name(&self) -> &'static str {
+        "proposed"
+    }
+
+    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..jobs.len()).collect();
+        idx.sort_by(|&a, &b| {
+            let ka = jobs[a].n_client_adapters as f64 / jobs[a].compute_capability;
+            let kb = jobs[b].n_client_adapters as f64 / jobs[b].compute_capability;
+            kb.partial_cmp(&ka)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(jobs[a].client.cmp(&jobs[b].client))
+        });
+        idx.into_iter().map(|i| jobs[i].client).collect()
+    }
+}
+
+/// FIFO — by activation arrival time (baseline [19]).
+pub struct FifoScheduler;
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..jobs.len()).collect();
+        idx.sort_by(|&a, &b| {
+            jobs[a]
+                .arrival
+                .partial_cmp(&jobs[b].arrival)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(jobs[a].client.cmp(&jobs[b].client))
+        });
+        idx.into_iter().map(|i| jobs[i].client).collect()
+    }
+}
+
+/// Workload-first — largest server-side workload first (baseline [6]).
+pub struct WorkloadFirstScheduler;
+
+impl Scheduler for WorkloadFirstScheduler {
+    fn name(&self) -> &'static str {
+        "workload_first"
+    }
+
+    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..jobs.len()).collect();
+        idx.sort_by(|&a, &b| {
+            jobs[b]
+                .server_time
+                .partial_cmp(&jobs[a].server_time)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(jobs[a].client.cmp(&jobs[b].client))
+        });
+        idx.into_iter().map(|i| jobs[i].client).collect()
+    }
+}
+
+/// Seeded random order (control for the ablation bench).
+pub struct RandomScheduler {
+    rng: Rng,
+}
+
+impl RandomScheduler {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed) }
+    }
+}
+
+impl Scheduler for RandomScheduler {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize> {
+        let mut ids: Vec<usize> = jobs.iter().map(|j| j.client).collect();
+        for i in (1..ids.len()).rev() {
+            let j = self.rng.below(i + 1);
+            ids.swap(i, j);
+        }
+        ids
+    }
+}
+
+/// Factory from the config enum.
+pub fn make_scheduler(kind: SchedulerKind, seed: u64) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::Proposed => Box::new(ProposedScheduler),
+        SchedulerKind::Fifo => Box::new(FifoScheduler),
+        SchedulerKind::WorkloadFirst => Box::new(WorkloadFirstScheduler),
+        SchedulerKind::Random => Box::new(RandomScheduler::new(seed)),
+    }
+}
+
+/// Makespan of a schedule under the paper's timing model (eqs. 10–12):
+/// sequential server, per-client completion = server finish + downlink +
+/// client backward. Used by tests and the brute-force optimality check.
+pub fn makespan(jobs: &[JobInfo], order: &[usize]) -> f64 {
+    let by_client: std::collections::HashMap<usize, &JobInfo> =
+        jobs.iter().map(|j| (j.client, j)).collect();
+    let mut horizon = 0.0f64;
+    let mut worst = 0.0f64;
+    for &c in order {
+        let j = by_client[&c];
+        let start = horizon.max(j.arrival);
+        let finish = start + j.server_time;
+        horizon = finish;
+        worst = worst.max(finish + j.bwd_comm_time + j.client_bwd_time);
+    }
+    worst
+}
+
+/// Exhaustive minimum makespan (small fleets only — tests).
+pub fn brute_force_best(jobs: &[JobInfo]) -> (Vec<usize>, f64) {
+    fn permute(ids: &mut Vec<usize>, k: usize, jobs: &[JobInfo], best: &mut (Vec<usize>, f64)) {
+        if k == ids.len() {
+            let m = makespan(jobs, ids);
+            if m < best.1 {
+                *best = (ids.clone(), m);
+            }
+            return;
+        }
+        for i in k..ids.len() {
+            ids.swap(k, i);
+            permute(ids, k + 1, jobs, best);
+            ids.swap(k, i);
+        }
+    }
+    let mut ids: Vec<usize> = jobs.iter().map(|j| j.client).collect();
+    let mut best = (ids.clone(), f64::INFINITY);
+    permute(&mut ids, 0, jobs, &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(client: usize, nc: usize, cap: f64, ts: f64, tb: f64) -> JobInfo {
+        JobInfo {
+            client,
+            arrival: 0.0,
+            server_time: ts,
+            client_bwd_time: tb,
+            bwd_comm_time: 0.01,
+            n_client_adapters: nc,
+            compute_capability: cap,
+        }
+    }
+
+    #[test]
+    fn proposed_orders_by_nc_over_c_descending() {
+        // Paper fleet ratios: Nano 1/0.472, TX2 1/1.33, SD8s 2/1.689,
+        // SD8 2/2.774, A17 3/2.147, M3 3/3.533.
+        let jobs = vec![
+            job(0, 1, 0.472, 1.0, 5.0),
+            job(1, 1, 1.33, 1.0, 2.0),
+            job(2, 2, 1.689, 1.0, 3.0),
+            job(3, 2, 2.774, 1.0, 1.5),
+            job(4, 3, 2.147, 1.0, 4.0),
+            job(5, 3, 3.533, 1.0, 2.5),
+        ];
+        let order = ProposedScheduler.order(&jobs);
+        // ratios: 2.12, 0.75, 1.18, 0.72, 1.40, 0.85
+        assert_eq!(order, vec![0, 4, 2, 5, 1, 3]);
+    }
+
+    #[test]
+    fn fifo_orders_by_arrival() {
+        let mut jobs = vec![job(0, 1, 1.0, 1.0, 1.0), job(1, 1, 1.0, 1.0, 1.0)];
+        jobs[0].arrival = 5.0;
+        jobs[1].arrival = 2.0;
+        assert_eq!(FifoScheduler.order(&jobs), vec![1, 0]);
+    }
+
+    #[test]
+    fn workload_first_orders_by_server_time() {
+        let jobs = vec![job(0, 1, 1.0, 2.0, 1.0), job(1, 1, 1.0, 9.0, 1.0)];
+        assert_eq!(WorkloadFirstScheduler.order(&jobs), vec![1, 0]);
+    }
+
+    #[test]
+    fn all_schedulers_emit_permutations() {
+        let jobs: Vec<JobInfo> =
+            (0..6).map(|i| job(i, 1 + i % 3, 1.0 + i as f64, 1.0, 1.0)).collect();
+        for mut s in [
+            Box::new(ProposedScheduler) as Box<dyn Scheduler>,
+            Box::new(FifoScheduler),
+            Box::new(WorkloadFirstScheduler),
+            Box::new(RandomScheduler::new(1)),
+        ] {
+            let mut order = s.order(&jobs);
+            order.sort_unstable();
+            assert_eq!(order, (0..6).collect::<Vec<_>>(), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn makespan_matches_hand_computation() {
+        // Two clients arriving at 0: first runs [0,2], second [2,5].
+        // Completions: 2 + 0.01 + tb0, 5 + 0.01 + tb1.
+        let jobs = vec![job(0, 1, 1.0, 2.0, 4.0), job(1, 1, 1.0, 3.0, 0.5)];
+        let m = makespan(&jobs, &[0, 1]);
+        assert!((m - f64::max(2.0 + 0.01 + 4.0, 5.0 + 0.01 + 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn long_backward_first_beats_long_backward_last() {
+        // The intuition behind Alg. 2: the slow-backprop client must go
+        // first so its backward hides under the others' server time.
+        let jobs = vec![job(0, 3, 0.3, 1.0, 10.0), job(1, 1, 3.0, 1.0, 0.1)];
+        let slow_first = makespan(&jobs, &[0, 1]);
+        let slow_last = makespan(&jobs, &[1, 0]);
+        assert!(slow_first < slow_last);
+        // And Alg. 2 picks the better one.
+        let order = ProposedScheduler.order(&jobs);
+        assert_eq!(order, vec![0, 1]);
+    }
+
+    #[test]
+    fn proposed_matches_brute_force_when_server_times_equal() {
+        // With equal server times and equal arrivals, scheduling is the
+        // classic "longest tail first" problem where the greedy rule is
+        // optimal; N_c/C is the paper's proxy for the tail length.
+        let jobs = vec![
+            job(0, 1, 0.5, 2.0, 1.0 / 0.5),
+            job(1, 2, 1.0, 2.0, 2.0 / 1.0),
+            job(2, 3, 0.6, 2.0, 3.0 / 0.6),
+            job(3, 1, 2.0, 2.0, 1.0 / 2.0),
+        ];
+        let order = ProposedScheduler.order(&jobs);
+        let (best, best_m) = brute_force_best(&jobs);
+        let m = makespan(&jobs, &order);
+        assert!(
+            (m - best_m).abs() < 1e-9,
+            "greedy {m} vs optimal {best_m} ({order:?} vs {best:?})"
+        );
+    }
+}

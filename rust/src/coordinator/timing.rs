@@ -1,0 +1,251 @@
+//! Per-step timing under the paper's model (eqs. 10–12), for each scheme.
+//!
+//! T_u = T_u^f + T_u^fc + T_u^w + T_u^s + T_u^bc + T_u^b  (eq. 10)
+//! with the waiting time T_u^w induced by the sequential server queue
+//! (eq. 11) and the step completing at max_u T_u (eq. 12).
+
+use super::scheduler::{JobInfo, Scheduler};
+use crate::config::ClientConfig;
+use crate::devices::ServerProfile;
+use crate::model::ModelDims;
+use crate::simclock::SequentialResource;
+
+/// Timing components of one client's step (diagnostics + telemetry).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTiming {
+    pub t_fwd: f64,
+    pub t_fwd_comm: f64,
+    pub t_wait: f64,
+    pub t_server: f64,
+    pub t_bwd_comm: f64,
+    pub t_bwd: f64,
+}
+
+impl StepTiming {
+    pub fn total(&self) -> f64 {
+        self.t_fwd + self.t_fwd_comm + self.t_wait + self.t_server + self.t_bwd_comm + self.t_bwd
+    }
+}
+
+/// Build the per-client job descriptions for one step of the proposed
+/// scheme (all clients start at relative time 0 — client forwards run in
+/// parallel).
+pub fn build_jobs(
+    dims: &ModelDims,
+    clients: &[ClientConfig],
+    cuts: &[usize],
+    server: &ServerProfile,
+) -> Vec<JobInfo> {
+    clients
+        .iter()
+        .zip(cuts.iter())
+        .enumerate()
+        .map(|(u, (c, &k))| {
+            let t_fwd = c.device.compute_time(dims.client_fwd_flops(k));
+            let t_fc = c.link.transfer_time(dims.activation_bytes());
+            JobInfo {
+                client: u,
+                arrival: t_fwd + t_fc,
+                server_time: server.compute_time(dims.server_flops(k), 1),
+                client_bwd_time: c.device.compute_time(dims.client_bwd_flops(k)),
+                bwd_comm_time: c.link.transfer_time(dims.activation_bytes()),
+                n_client_adapters: k * ModelDims::ADAPTERS_PER_LAYER,
+                compute_capability: c.device.tflops,
+            }
+        })
+        .collect()
+}
+
+/// One step of **Ours** under a given scheduler: parallel client
+/// forwards, sequential server (eq. 11 queueing), parallel backwards.
+/// Returns (step completion time, per-client timings in client order).
+pub fn ours_step(
+    dims: &ModelDims,
+    clients: &[ClientConfig],
+    cuts: &[usize],
+    server: &ServerProfile,
+    scheduler: &mut dyn Scheduler,
+) -> (f64, Vec<StepTiming>) {
+    let jobs = build_jobs(dims, clients, cuts, server);
+    let order = scheduler.order(&jobs);
+    debug_assert_eq!(order.len(), jobs.len());
+    let mut queue = SequentialResource::default();
+    let mut timings = vec![StepTiming::default(); jobs.len()];
+    let mut step_time = 0.0f64;
+    for &u in &order {
+        let j = &jobs[u];
+        let (start, finish) = queue.admit(j.arrival, j.server_time);
+        let t = StepTiming {
+            t_fwd: j.arrival - j.bwd_comm_time, // fwd_comm == bwd_comm size
+            t_fwd_comm: j.bwd_comm_time,
+            t_wait: start - j.arrival,
+            t_server: j.server_time,
+            t_bwd_comm: j.bwd_comm_time,
+            t_bwd: j.client_bwd_time,
+        };
+        step_time = step_time.max(finish + j.bwd_comm_time + j.client_bwd_time);
+        timings[u] = t;
+    }
+    (step_time, timings)
+}
+
+/// One step of **SFL** (FedBERT-style): the server trains all U
+/// server-side submodels in parallel, contending for the GPU.
+pub fn sfl_step(
+    dims: &ModelDims,
+    clients: &[ClientConfig],
+    cuts: &[usize],
+    server: &ServerProfile,
+) -> (f64, Vec<StepTiming>) {
+    let jobs = build_jobs(dims, clients, cuts, server);
+    let concurrency = jobs.len();
+    let mut step_time = 0.0f64;
+    let mut timings = vec![StepTiming::default(); jobs.len()];
+    for (u, j) in jobs.iter().enumerate() {
+        // Parallel execution: no queueing, but each job runs at the
+        // contended 1/J rate (paper §V-B: memory-access competition).
+        let t_server = server.compute_time(dims.server_flops(cuts[u]), concurrency);
+        let t = StepTiming {
+            t_fwd: j.arrival - j.bwd_comm_time,
+            t_fwd_comm: j.bwd_comm_time,
+            t_wait: 0.0,
+            t_server,
+            t_bwd_comm: j.bwd_comm_time,
+            t_bwd: j.client_bwd_time,
+        };
+        step_time = step_time.max(j.arrival + t_server + j.bwd_comm_time + j.client_bwd_time);
+        timings[u] = t;
+    }
+    (step_time, timings)
+}
+
+/// One *round* of **SL** (sequential split learning): clients run one at
+/// a time, each doing `steps` local mini-batch steps, then the client
+/// model is relayed to the next client through the server.
+pub fn sl_round(
+    dims: &ModelDims,
+    clients: &[ClientConfig],
+    cuts: &[usize],
+    server: &ServerProfile,
+    steps: usize,
+) -> f64 {
+    let mut total = 0.0f64;
+    // Handoff relays only the *trainable* client-side state (LoRA
+    // adapters) — the frozen base model was distributed once before
+    // training, exactly as in the paper's LoRA setting.
+    let max_cut = cuts.iter().copied().max().unwrap_or(1);
+    let handoff_bytes = dims.lora_bytes(max_cut);
+    for (u, (c, &k)) in clients.iter().zip(cuts.iter()).enumerate() {
+        let per_step = c.device.compute_time(dims.client_fwd_flops(k))
+            + c.link.transfer_time(dims.activation_bytes())
+            + server.compute_time(dims.server_flops(k), 1)
+            + c.link.transfer_time(dims.activation_bytes())
+            + c.device.compute_time(dims.client_bwd_flops(k));
+        total += steps as f64 * per_step;
+        // Adapter handoff to the next client (skipped after the last).
+        if u + 1 < clients.len() {
+            total += c.link.transfer_time(handoff_bytes)
+                + clients[u + 1].link.transfer_time(handoff_bytes);
+        }
+    }
+    total
+}
+
+/// LoRA aggregation-phase time (paper steps 2a–2c): parallel uploads of
+/// client adapters, negligible server aggregation, parallel downloads.
+pub fn aggregation_time(dims: &ModelDims, clients: &[ClientConfig], cuts: &[usize]) -> f64 {
+    clients
+        .iter()
+        .zip(cuts.iter())
+        .map(|(c, &k)| {
+            c.link.transfer_time(dims.lora_bytes(k)) * 2.0 // up + down
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::scheduler::{FifoScheduler, ProposedScheduler};
+
+    fn setup() -> (ModelDims, Vec<ClientConfig>, Vec<usize>, ServerProfile) {
+        let cfg = ExperimentConfig::paper();
+        let dims = cfg.timing_dims();
+        let cuts = cfg.resolve_cuts();
+        (dims, cfg.clients, cuts, cfg.server)
+    }
+
+    #[test]
+    fn ours_step_components_positive_and_consistent() {
+        let (dims, clients, cuts, server) = setup();
+        let (step, timings) = ours_step(&dims, &clients, &cuts, &server, &mut ProposedScheduler);
+        assert!(step > 0.0);
+        for t in &timings {
+            assert!(t.t_fwd > 0.0 && t.t_server > 0.0 && t.t_bwd > 0.0);
+            // eq. 12: the step is at least every client's own total.
+            assert!(step >= t.total() - 1e-9);
+        }
+        // eq. 12 is tight: some client achieves the max.
+        assert!(timings.iter().any(|t| (step - t.total()).abs() < 1e-9));
+    }
+
+    #[test]
+    fn waiting_time_is_eq11_under_fifo() {
+        let (dims, clients, cuts, server) = setup();
+        let jobs = build_jobs(&dims, &clients, &cuts, &server);
+        let (_, timings) = ours_step(&dims, &clients, &cuts, &server, &mut FifoScheduler);
+        // Under FIFO with distinct arrivals, each client's wait is bounded
+        // by the sum of earlier server times (eq. 11 with idle gaps).
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by(|&a, &b| jobs[a].arrival.partial_cmp(&jobs[b].arrival).unwrap());
+        let mut sum_earlier = 0.0;
+        for &u in &order {
+            assert!(timings[u].t_wait <= sum_earlier + 1e-9);
+            sum_earlier += jobs[u].server_time;
+        }
+    }
+
+    #[test]
+    fn proposed_no_slower_than_fifo_on_paper_fleet() {
+        let (dims, clients, cuts, server) = setup();
+        let (t_prop, _) = ours_step(&dims, &clients, &cuts, &server, &mut ProposedScheduler);
+        let (t_fifo, _) = ours_step(&dims, &clients, &cuts, &server, &mut FifoScheduler);
+        assert!(t_prop <= t_fifo + 1e-9, "proposed {t_prop} vs fifo {t_fifo}");
+    }
+
+    #[test]
+    fn sfl_step_slower_than_ours_on_paper_fleet() {
+        // The paper's 6% training-time claim: contention makes parallel
+        // server training slower than sequenced training.
+        let (dims, clients, cuts, server) = setup();
+        let (t_ours, _) = ours_step(&dims, &clients, &cuts, &server, &mut ProposedScheduler);
+        let (t_sfl, _) = sfl_step(&dims, &clients, &cuts, &server);
+        assert!(t_ours < t_sfl, "ours {t_ours} vs sfl {t_sfl}");
+    }
+
+    #[test]
+    fn sl_round_much_slower_than_ours_round() {
+        let (dims, clients, cuts, server) = setup();
+        let steps = 4;
+        let (t_step, _) = ours_step(&dims, &clients, &cuts, &server, &mut ProposedScheduler);
+        let t_ours_round = steps as f64 * t_step;
+        let t_sl = sl_round(&dims, &clients, &cuts, &server, steps);
+        assert!(
+            t_sl > 1.5 * t_ours_round,
+            "sl {t_sl} vs ours-round {t_ours_round}"
+        );
+    }
+
+    #[test]
+    fn aggregation_time_is_max_over_clients() {
+        let (dims, clients, cuts, _) = setup();
+        let t = aggregation_time(&dims, &clients, &cuts);
+        let worst = clients
+            .iter()
+            .zip(cuts.iter())
+            .map(|(c, &k)| c.link.transfer_time(dims.lora_bytes(k)) * 2.0)
+            .fold(0.0, f64::max);
+        assert!((t - worst).abs() < 1e-12);
+    }
+}

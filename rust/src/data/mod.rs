@@ -1,0 +1,332 @@
+//! Synthetic CARER-like emotion-classification corpus + non-IID partition.
+//!
+//! The paper fine-tunes on CARER (6 emotion classes, tweets).  We cannot
+//! ship the real tweets, so the generator produces token sequences whose
+//! class-conditional unigram statistics make the task learnable (class
+//! "marker" tokens mixed into a shared background distribution), and the
+//! Dirichlet partitioner reproduces the Non-IID client shards the paper
+//! assumes (§II).  See DESIGN.md §2 for why this preserves the relative
+//! scheme behaviour.
+
+use crate::tensor::rng::Rng;
+
+/// One classification example: token ids + label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+/// Generator parameters for the synthetic corpus.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub vocab: usize,
+    pub seq: usize,
+    pub classes: usize,
+    /// Number of class-specific marker tokens per class.
+    pub markers_per_class: usize,
+    /// Probability that a position draws from the class markers rather
+    /// than the shared background distribution. Controls task difficulty.
+    pub marker_prob: f64,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub seed: u64,
+}
+
+impl CorpusSpec {
+    /// CARER is ~16k train / 2k test, 6 classes; defaults mirror that at
+    /// whatever vocab/seq the model config uses.
+    pub fn carer_like(vocab: usize, seq: usize) -> Self {
+        Self {
+            vocab,
+            seq,
+            classes: 6,
+            markers_per_class: 24.min(vocab / 12),
+            marker_prob: 0.18,
+            train_size: 16_000,
+            test_size: 2_000,
+            seed: 7,
+        }
+    }
+}
+
+/// A materialized dataset split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub train: Vec<Example>,
+    pub test: Vec<Example>,
+    pub spec: CorpusSpec,
+}
+
+/// The class marker tokens are carved out of the top of the vocab so they
+/// never collide with the background range.
+fn marker_range(spec: &CorpusSpec, class: usize) -> std::ops::Range<i32> {
+    let per = spec.markers_per_class;
+    let base = spec.vocab - spec.classes * per + class * per;
+    base as i32..(base + per) as i32
+}
+
+fn gen_example(spec: &CorpusSpec, rng: &mut Rng, label: usize) -> Example {
+    let markers = marker_range(spec, label);
+    let background = spec.vocab - spec.classes * spec.markers_per_class;
+    let tokens = (0..spec.seq)
+        .map(|_| {
+            if rng.uniform() < spec.marker_prob {
+                markers.start + rng.below(spec.markers_per_class) as i32
+            } else {
+                rng.below(background) as i32
+            }
+        })
+        .collect();
+    Example { tokens, label: label as i32 }
+}
+
+/// Generate the full corpus. Class priors are mildly imbalanced, like
+/// CARER's (joy/sadness dominate, surprise is rare).
+pub fn generate(spec: &CorpusSpec) -> Dataset {
+    let mut rng = Rng::new(spec.seed);
+    let priors: Vec<f64> = (0..spec.classes)
+        .map(|c| 1.0 / (1.0 + 0.35 * c as f64))
+        .collect();
+    let gen_split = |n: usize, rng: &mut Rng| {
+        (0..n)
+            .map(|_| {
+                let label = rng.categorical(&priors);
+                gen_example(spec, rng, label)
+            })
+            .collect::<Vec<_>>()
+    };
+    let train = gen_split(spec.train_size, &mut rng);
+    let test = gen_split(spec.test_size, &mut rng);
+    Dataset { train, test, spec: spec.clone() }
+}
+
+/// Dirichlet(alpha) non-IID partition of `examples` across `clients`.
+/// Lower alpha ⇒ more skewed label distributions per client.
+/// Every client is guaranteed at least `min_per_client` examples.
+pub fn dirichlet_partition(
+    examples: &[Example],
+    clients: usize,
+    alpha: f64,
+    seed: u64,
+    min_per_client: usize,
+) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed);
+    let classes = examples.iter().map(|e| e.label).max().unwrap_or(0) as usize + 1;
+    // Per-class client mixture.
+    let mixtures: Vec<Vec<f64>> =
+        (0..classes).map(|_| rng.dirichlet(alpha, clients)).collect();
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); clients];
+    for (i, ex) in examples.iter().enumerate() {
+        let u = rng.categorical(&mixtures[ex.label as usize]);
+        shards[u].push(i);
+    }
+    // Rebalance: steal from the largest shard until everyone has a floor.
+    loop {
+        let min_idx = (0..clients).min_by_key(|&u| shards[u].len()).unwrap();
+        if shards[min_idx].len() >= min_per_client {
+            break;
+        }
+        let max_idx = (0..clients).max_by_key(|&u| shards[u].len()).unwrap();
+        let moved = shards[max_idx].pop().expect("largest shard is empty");
+        shards[min_idx].push(moved);
+    }
+    shards
+}
+
+/// Mini-batch iterator over a client shard: shuffles every epoch with a
+/// client-specific stream, yields fixed-size batches (drops the ragged
+/// tail, like the reference training loops).
+#[derive(Debug)]
+pub struct BatchIter {
+    indices: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl BatchIter {
+    pub fn new(shard: &[usize], batch: usize, seed: u64) -> Self {
+        let mut it =
+            Self { indices: shard.to_vec(), cursor: 0, batch, rng: Rng::new(seed) };
+        it.shuffle();
+        it
+    }
+
+    fn shuffle(&mut self) {
+        // Fisher–Yates.
+        for i in (1..self.indices.len()).rev() {
+            let j = self.rng.below(i + 1);
+            self.indices.swap(i, j);
+        }
+        self.cursor = 0;
+    }
+
+    /// Next batch of dataset indices; reshuffles at epoch boundaries.
+    pub fn next_batch(&mut self) -> &[usize] {
+        if self.indices.len() < self.batch {
+            return &self.indices; // degenerate shard: single short batch
+        }
+        if self.cursor + self.batch > self.indices.len() {
+            self.shuffle();
+        }
+        let s = &self.indices[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        s
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.indices.len() / self.batch).max(1)
+    }
+}
+
+/// Materialize a batch as flat (tokens, labels) buffers ready for the
+/// runtime layer ([B*L] i32 row-major, [B] i32).
+pub fn materialize_batch(ds: &Dataset, idx: &[usize]) -> (Vec<i32>, Vec<i32>) {
+    let mut tokens = Vec::with_capacity(idx.len() * ds.spec.seq);
+    let mut labels = Vec::with_capacity(idx.len());
+    for &i in idx {
+        tokens.extend_from_slice(&ds.train[i].tokens);
+        labels.push(ds.train[i].label);
+    }
+    (tokens, labels)
+}
+
+/// Label histogram of a shard (for non-IID diagnostics + tests).
+pub fn label_histogram(examples: &[Example], shard: &[usize], classes: usize) -> Vec<usize> {
+    let mut h = vec![0usize; classes];
+    for &i in shard {
+        h[examples[i].label as usize] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> CorpusSpec {
+        CorpusSpec {
+            vocab: 512,
+            seq: 16,
+            classes: 6,
+            markers_per_class: 16,
+            marker_prob: 0.2,
+            train_size: 600,
+            test_size: 120,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn generate_respects_sizes_and_ranges() {
+        let ds = generate(&small_spec());
+        assert_eq!(ds.train.len(), 600);
+        assert_eq!(ds.test.len(), 120);
+        for ex in ds.train.iter().chain(ds.test.iter()) {
+            assert_eq!(ex.tokens.len(), 16);
+            assert!(ex.tokens.iter().all(|&t| t >= 0 && (t as usize) < 512));
+            assert!((0..6).contains(&ex.label));
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(&small_spec());
+        let b = generate(&small_spec());
+        assert_eq!(a.train[..10], b.train[..10]);
+    }
+
+    #[test]
+    fn marker_tokens_identify_class() {
+        // Examples of class c must contain tokens from c's marker range
+        // far more often than from other classes' ranges.
+        let spec = small_spec();
+        let ds = generate(&spec);
+        let mut own = 0usize;
+        let mut other = 0usize;
+        for ex in &ds.train {
+            let r = marker_range(&spec, ex.label as usize);
+            for &t in &ex.tokens {
+                if r.contains(&t) {
+                    own += 1;
+                } else if (t as usize) >= spec.vocab - spec.classes * spec.markers_per_class {
+                    other += 1;
+                }
+            }
+        }
+        assert!(own > 5 * other, "own={own} other={other}");
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let ds = generate(&small_spec());
+        let h = label_histogram(&ds.train, &(0..ds.train.len()).collect::<Vec<_>>(), 6);
+        assert!(h.iter().all(|&c| c > 0), "{h:?}");
+        // Imbalanced priors: class 0 more common than class 5.
+        assert!(h[0] > h[5]);
+    }
+
+    #[test]
+    fn dirichlet_partition_covers_everything_once() {
+        let ds = generate(&small_spec());
+        let shards = dirichlet_partition(&ds.train, 6, 0.5, 9, 10);
+        let mut seen = vec![false; ds.train.len()];
+        for shard in &shards {
+            assert!(shard.len() >= 10);
+            for &i in shard {
+                assert!(!seen[i], "example {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn low_alpha_is_more_skewed_than_high_alpha() {
+        let ds = generate(&small_spec());
+        let skew = |alpha: f64| -> f64 {
+            let shards = dirichlet_partition(&ds.train, 6, alpha, 11, 1);
+            // Mean over clients of (max class share).
+            shards
+                .iter()
+                .map(|s| {
+                    let h = label_histogram(&ds.train, s, 6);
+                    let total: usize = h.iter().sum();
+                    *h.iter().max().unwrap() as f64 / total.max(1) as f64
+                })
+                .sum::<f64>()
+                / 6.0
+        };
+        assert!(skew(0.1) > skew(100.0) + 0.05);
+    }
+
+    #[test]
+    fn batch_iter_yields_full_batches_and_reshuffles() {
+        let shard: Vec<usize> = (0..50).collect();
+        let mut it = BatchIter::new(&shard, 16, 1);
+        assert_eq!(it.batches_per_epoch(), 3);
+        let mut seen_first_epoch: Vec<usize> = Vec::new();
+        for _ in 0..3 {
+            let b = it.next_batch().to_vec();
+            assert_eq!(b.len(), 16);
+            seen_first_epoch.extend(b);
+        }
+        // Within an epoch no duplicates.
+        let mut sorted = seen_first_epoch.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), seen_first_epoch.len());
+        // Crossing the epoch boundary still yields full batches.
+        assert_eq!(it.next_batch().len(), 16);
+    }
+
+    #[test]
+    fn materialize_batch_layout() {
+        let ds = generate(&small_spec());
+        let (tokens, labels) = materialize_batch(&ds, &[0, 1]);
+        assert_eq!(tokens.len(), 2 * 16);
+        assert_eq!(labels.len(), 2);
+        assert_eq!(&tokens[..16], ds.train[0].tokens.as_slice());
+    }
+}

@@ -1,0 +1,169 @@
+//! Heterogeneous device profiles and capability-driven split selection.
+//!
+//! Before training, each client reports its resources and the server
+//! "replicates a reasonable client-side submodel for each client"
+//! (paper §III).  `select_cut` is that policy: the deepest cut whose
+//! client-side memory footprint and per-step latency fit the device.
+
+use crate::model::{memory, ModelDims};
+
+/// A mobile device participating in training (paper §V-A fleet).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// Peak compute, TFLOPS (fp16/fp32 mix as the paper quotes them).
+    pub tflops: f64,
+    /// Usable memory budget for the training process, MB.
+    pub memory_mb: f64,
+    /// Achievable fraction of peak on transformer workloads (MFU).
+    pub mfu: f64,
+}
+
+impl DeviceProfile {
+    pub fn new(name: &str, tflops: f64, memory_mb: f64) -> Self {
+        Self { name: name.into(), tflops, memory_mb, mfu: DEFAULT_CLIENT_MFU }
+    }
+
+    /// Effective FLOP/s the device actually sustains.
+    pub fn effective_flops(&self) -> f64 {
+        self.tflops * 1e12 * self.mfu
+    }
+
+    /// Seconds to execute `flops` of transformer work.
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / self.effective_flops()
+    }
+}
+
+/// Default MFU for mobile-class accelerators on attention workloads.
+pub const DEFAULT_CLIENT_MFU: f64 = 0.30;
+/// Default MFU for the edge-server GPU.
+pub const DEFAULT_SERVER_MFU: f64 = 0.40;
+
+/// The edge server (paper: RTX 4080S, 52.2 TFLOPS).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerProfile {
+    pub name: String,
+    pub tflops: f64,
+    pub memory_mb: f64,
+    pub mfu: f64,
+    /// Throughput degradation per *additional* concurrent training job —
+    /// the "fragmentation of server computational resources / memory access
+    /// competition" the paper attributes SFL's slowdown to (§V-B).
+    pub contention_per_job: f64,
+}
+
+impl ServerProfile {
+    pub fn rtx4080s() -> Self {
+        Self {
+            name: "RTX 4080S".into(),
+            tflops: 52.2,
+            memory_mb: 16.0 * 1024.0,
+            mfu: DEFAULT_SERVER_MFU,
+            contention_per_job: 0.06,
+        }
+    }
+
+    pub fn effective_flops(&self, concurrent_jobs: usize) -> f64 {
+        let slowdown = 1.0 + self.contention_per_job * concurrent_jobs.saturating_sub(1) as f64;
+        self.tflops * 1e12 * self.mfu / slowdown
+    }
+
+    /// Seconds for `flops` of work when `concurrent_jobs` share the GPU.
+    pub fn compute_time(&self, flops: f64, concurrent_jobs: usize) -> f64 {
+        // With J parallel jobs each job gets 1/J of the (contended) rate.
+        let jobs = concurrent_jobs.max(1) as f64;
+        flops * jobs / self.effective_flops(concurrent_jobs)
+    }
+}
+
+/// The paper's six-device heterogeneous fleet (§V-A), with the cut
+/// assignment the authors used.
+pub fn paper_fleet() -> Vec<(DeviceProfile, usize)> {
+    vec![
+        (DeviceProfile::new("Jetson Nano", 0.472, 4096.0), 1),
+        (DeviceProfile::new("Jetson TX2", 1.33, 8192.0), 1),
+        (DeviceProfile::new("Snapdragon 8s Gen 3", 1.689, 8192.0), 2),
+        (DeviceProfile::new("Snapdragon 8 Gen 3", 2.774, 12288.0), 2),
+        (DeviceProfile::new("A17 Pro", 2.147, 8192.0), 3),
+        (DeviceProfile::new("M3", 3.533, 16384.0), 3),
+    ]
+}
+
+/// Choose the deepest cut in `dims.cuts` that fits the device: the
+/// client-side submodel must fit the memory budget and one client step
+/// (fwd + rematerialized bwd) must complete within `max_step_seconds`.
+pub fn select_cut(dims: &ModelDims, dev: &DeviceProfile, max_step_seconds: f64) -> usize {
+    let mut best = *dims.cuts.iter().min().expect("cuts must be non-empty");
+    let mut sorted = dims.cuts.clone();
+    sorted.sort_unstable();
+    for &k in &sorted {
+        let mem_ok = memory::client_memory(dims, k).total_mb() <= dev.memory_mb;
+        let step =
+            dev.compute_time(dims.client_fwd_flops(k)) + dev.compute_time(dims.client_bwd_flops(k));
+        if mem_ok && step <= max_step_seconds {
+            best = k;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fleet_matches_section_v() {
+        let fleet = paper_fleet();
+        assert_eq!(fleet.len(), 6);
+        assert_eq!(fleet[0].0.name, "Jetson Nano");
+        assert!((fleet[0].0.tflops - 0.472).abs() < 1e-9);
+        assert_eq!(fleet[0].1, 1);
+        assert_eq!(fleet[5].0.name, "M3");
+        assert_eq!(fleet[5].1, 3);
+    }
+
+    #[test]
+    fn compute_time_scales_inverse_with_tflops() {
+        let slow = DeviceProfile::new("slow", 1.0, 8192.0);
+        let fast = DeviceProfile::new("fast", 2.0, 8192.0);
+        let f = 1e12;
+        assert!((slow.compute_time(f) / fast.compute_time(f) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn server_contention_slows_parallel_jobs() {
+        let s = ServerProfile::rtx4080s();
+        let f = 1e12;
+        let alone = s.compute_time(f, 1);
+        let contended = s.compute_time(f, 6);
+        assert!(contended > 6.0 * alone, "contention must exceed fair-share");
+    }
+
+    #[test]
+    fn select_cut_respects_memory_budget() {
+        let dims = ModelDims::bert_base();
+        let tiny = DeviceProfile::new("tiny", 5.0, 400.0); // < client model
+        let big = DeviceProfile::new("big", 5.0, 16384.0);
+        let kt = select_cut(&dims, &tiny, 1e9);
+        let kb = select_cut(&dims, &big, 1e9);
+        assert!(kt <= kb);
+        assert_eq!(kb, 3);
+    }
+
+    #[test]
+    fn select_cut_respects_latency_budget() {
+        let dims = ModelDims::bert_base();
+        let weak = DeviceProfile::new("weak", 0.05, 16384.0);
+        let strong = DeviceProfile::new("strong", 10.0, 16384.0);
+        let kw = select_cut(&dims, &weak, 0.5);
+        let ks = select_cut(&dims, &strong, 0.5);
+        assert!(kw <= ks);
+    }
+
+    #[test]
+    fn effective_flops_includes_mfu() {
+        let d = DeviceProfile::new("d", 1.0, 1024.0);
+        assert!((d.effective_flops() - 0.30e12).abs() < 1e6);
+    }
+}

@@ -1,0 +1,33 @@
+//! # sfl — Memory-Efficient Split Federated Learning for LLM Fine-Tuning
+//!
+//! A reproduction of *"Memory-Efficient Split Federated Learning for LLM
+//! Fine-Tuning on Heterogeneous Mobile Devices"* (Chen, Li, Ji, Wu —
+//! CS.DC 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the coordinator: heterogeneous split
+//!   assignment, parallel client / sequential server orchestration
+//!   (Alg. 1), training-order scheduling (Alg. 2), LoRA aggregation
+//!   (eqs. 5–9), timing + memory models (eqs. 10–12, Table I).
+//! - **L2 (python/compile/model.py)** — the BERT-like encoder fwd/bwd in
+//!   JAX, AOT-lowered to HLO text once; never on the training path.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for the LoRA
+//!   projection hot-spot, layernorm, and attention.
+//!
+//! The runtime layer loads the AOT artifacts via the PJRT C API (`xla`
+//! crate) and executes them from the rust coordinator; python is only a
+//! build-time dependency (`make artifacts`).
+
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod devices;
+pub mod lora;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod runtime;
+pub mod simclock;
+pub mod telemetry;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,302 @@
+//! LoRA adapter state: the paper's R = {A, B} sets, their split/join at
+//! cut points (eqs. 5, 9) and FedAvg aggregation (eqs. 6–7).
+//!
+//! An [`AdapterSet`] holds the four stacked tensors (A_q, B_q, A_v, B_v)
+//! over some contiguous range of layers.  Client state is layers
+//! `[0, k)`, server state is `[k, N)`; `join`/`split_at` convert between
+//! the per-client halves and the full set the aggregator works on.
+
+use crate::model::ModelDims;
+use crate::tensor::{ops, rng::Rng, HostTensor};
+use anyhow::{bail, Result};
+
+/// Tensor keys in packing order (mirrors python packing.LORA_KEYS).
+pub const LORA_KEYS: [&str; 4] = ["aq", "bq", "av", "bv"];
+
+/// LoRA adapters stacked over `layers` consecutive transformer layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterSet {
+    pub layers: usize,
+    /// In LORA_KEYS order: aq [n,r,m], bq [n,m,r], av [n,r,m], bv [n,m,r].
+    pub tensors: Vec<HostTensor>,
+}
+
+impl AdapterSet {
+    /// Shapes for an adapter stack over `n` layers.
+    pub fn shapes(dims: &ModelDims, n: usize) -> [(String, Vec<usize>); 4] {
+        let (m, r) = (dims.hidden, dims.rank);
+        [
+            ("aq".into(), vec![n, r, m]),
+            ("bq".into(), vec![n, m, r]),
+            ("av".into(), vec![n, r, m]),
+            ("bv".into(), vec![n, m, r]),
+        ]
+    }
+
+    /// Zero-initialized adapters (B=0 ⇒ no-op adapter; A is also zero here
+    /// — use `init` for the standard LoRA init).
+    pub fn zeros(dims: &ModelDims, layers: usize) -> Self {
+        let tensors = Self::shapes(dims, layers)
+            .into_iter()
+            .map(|(name, shape)| HostTensor::zeros(name, shape))
+            .collect();
+        Self { layers, tensors }
+    }
+
+    /// Standard LoRA init: A ~ N(0, 1/r), B = 0.
+    pub fn init(dims: &ModelDims, layers: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let sa = 1.0 / dims.rank as f64;
+        let tensors = Self::shapes(dims, layers)
+            .into_iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data = if name.starts_with('a') {
+                    (0..n).map(|_| (rng.normal() * sa) as f32).collect()
+                } else {
+                    vec![0.0; n]
+                };
+                HostTensor::f32(name, shape, data)
+            })
+            .collect();
+        Self { layers, tensors }
+    }
+
+    /// Build from tensors loaded out of params.bin (names `lora.aq`, ...).
+    pub fn from_tensors(layers: usize, tensors: Vec<HostTensor>) -> Result<Self> {
+        if tensors.len() != 4 {
+            bail!("adapter set needs 4 tensors, got {}", tensors.len());
+        }
+        for t in &tensors {
+            if t.shape[0] != layers {
+                bail!("tensor {} has {} layers, expected {layers}", t.name, t.shape[0]);
+            }
+        }
+        Ok(Self { layers, tensors })
+    }
+
+    /// Split at `k`: layers [0, k) → client half, [k, n) → server half.
+    /// Paper eq. (9).
+    pub fn split_at(&self, k: usize) -> Result<(AdapterSet, AdapterSet)> {
+        if k > self.layers {
+            bail!("cut {k} beyond {} layers", self.layers);
+        }
+        let client = self
+            .tensors
+            .iter()
+            .map(|t| t.slice_axis0(0, k))
+            .collect::<Result<Vec<_>>>()?;
+        let server = self
+            .tensors
+            .iter()
+            .map(|t| t.slice_axis0(k, self.layers))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((
+            AdapterSet { layers: k, tensors: client },
+            AdapterSet { layers: self.layers - k, tensors: server },
+        ))
+    }
+
+    /// Join a client half and a server half back into a full set.
+    /// Paper eq. (5): R_f^u = {R_c^u, R_s^u}.
+    pub fn join(client: &AdapterSet, server: &AdapterSet) -> Result<AdapterSet> {
+        let tensors = client
+            .tensors
+            .iter()
+            .zip(server.tensors.iter())
+            .map(|(c, s)| HostTensor::concat_axis0(&[c, s]))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AdapterSet { layers: client.layers + server.layers, tensors })
+    }
+
+    /// Total adapter parameters.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Payload bytes (what a client uploads in aggregation step 2a).
+    pub fn byte_len(&self) -> usize {
+        self.tensors.iter().map(|t| t.byte_len()).sum()
+    }
+
+    /// Max |a-b| across all four tensors (tests/diagnostics).
+    pub fn max_abs_diff(&self, other: &AdapterSet) -> Result<f32> {
+        let mut worst = 0.0f32;
+        for (a, b) in self.tensors.iter().zip(other.tensors.iter()) {
+            worst = worst.max(ops::max_abs_diff(a, b)?);
+        }
+        Ok(worst)
+    }
+}
+
+/// FedAvg over full adapter sets with data-size weights |D_u|/|D| —
+/// paper eqs. (6)–(7): A and B matrices are aggregated *separately*.
+pub fn fedavg(sets: &[(f32, &AdapterSet)]) -> Result<AdapterSet> {
+    let (_, first) = sets.first().ok_or_else(|| anyhow::anyhow!("empty aggregation"))?;
+    let total_w: f32 = sets.iter().map(|(w, _)| w).sum();
+    if (total_w - 1.0).abs() > 1e-4 {
+        bail!("aggregation weights must sum to 1, got {total_w}");
+    }
+    let layers = first.layers;
+    for (_, s) in sets {
+        if s.layers != layers {
+            bail!("cannot aggregate adapter sets of differing depth");
+        }
+    }
+    let mut tensors = Vec::with_capacity(4);
+    for i in 0..4 {
+        let pairs: Vec<(f32, &HostTensor)> =
+            sets.iter().map(|(w, s)| (*w, &s.tensors[i])).collect();
+        tensors.push(ops::weighted_sum(&pairs)?);
+    }
+    Ok(AdapterSet { layers, tensors })
+}
+
+/// Per-client adapter bookkeeping on the server: the "LoRA adapter
+/// switching" store (paper step 1d) — the server keeps U server-side
+/// adapter sets and swaps the active one between sequential jobs.
+#[derive(Debug)]
+pub struct AdapterStore {
+    /// (client id → (cut, server-side adapters for layers [cut, N))).
+    entries: Vec<(usize, AdapterSet)>,
+    /// Currently loaded client (simulating the switch cost bookkeeping).
+    active: Option<usize>,
+    pub switches: u64,
+}
+
+impl AdapterStore {
+    pub fn new(dims: &ModelDims, cuts: &[usize], seed: u64) -> Self {
+        let entries = cuts
+            .iter()
+            .enumerate()
+            .map(|(u, &k)| (k, AdapterSet::init(dims, dims.layers - k, seed + u as u64)))
+            .collect();
+        Self { entries, active: None, switches: 0 }
+    }
+
+    pub fn cut(&self, client: usize) -> usize {
+        self.entries[client].0
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Load client `u`'s adapters as the active set (counts switches).
+    pub fn activate(&mut self, client: usize) -> &AdapterSet {
+        if self.active != Some(client) {
+            self.switches += 1;
+            self.active = Some(client);
+        }
+        &self.entries[client].1
+    }
+
+    pub fn get(&self, client: usize) -> &AdapterSet {
+        &self.entries[client].1
+    }
+
+    pub fn set(&mut self, client: usize, adapters: AdapterSet) {
+        debug_assert_eq!(adapters.layers, self.entries[client].1.layers);
+        self.entries[client].1 = adapters;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims::mini()
+    }
+
+    #[test]
+    fn init_has_zero_b_and_nonzero_a() {
+        let s = AdapterSet::init(&dims(), 3, 1);
+        assert!(ops::l2_norm(&s.tensors[0]).unwrap() > 0.0); // aq
+        assert_eq!(ops::l2_norm(&s.tensors[1]).unwrap(), 0.0); // bq
+        assert!(ops::l2_norm(&s.tensors[2]).unwrap() > 0.0); // av
+        assert_eq!(ops::l2_norm(&s.tensors[3]).unwrap(), 0.0); // bv
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        let full = AdapterSet::init(&dims(), 4, 2);
+        for k in 1..4 {
+            let (c, s) = full.split_at(k).unwrap();
+            assert_eq!(c.layers, k);
+            assert_eq!(s.layers, 4 - k);
+            let joined = AdapterSet::join(&c, &s).unwrap();
+            assert_eq!(joined.max_abs_diff(&full).unwrap(), 0.0);
+        }
+    }
+
+    #[test]
+    fn fedavg_weights_must_sum_to_one() {
+        let a = AdapterSet::init(&dims(), 2, 1);
+        let b = AdapterSet::init(&dims(), 2, 2);
+        assert!(fedavg(&[(0.5, &a), (0.2, &b)]).is_err());
+        assert!(fedavg(&[(0.5, &a), (0.5, &b)]).is_ok());
+    }
+
+    #[test]
+    fn fedavg_fixed_point_on_identical_sets() {
+        let a = AdapterSet::init(&dims(), 2, 7);
+        let agg = fedavg(&[(0.3, &a), (0.7, &a)]).unwrap();
+        assert!(agg.max_abs_diff(&a).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn fedavg_is_weighted_mean() {
+        let dims = dims();
+        let mut a = AdapterSet::zeros(&dims, 1);
+        let mut b = AdapterSet::zeros(&dims, 1);
+        a.tensors[0].as_f32_mut().unwrap().fill(0.0);
+        b.tensors[0].as_f32_mut().unwrap().fill(4.0);
+        let agg = fedavg(&[(0.25, &a), (0.75, &b)]).unwrap();
+        assert!(agg.tensors[0].as_f32().unwrap().iter().all(|&x| (x - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn aggregate_then_split_equals_split_then_aggregate() {
+        // The paper aggregates full sets then re-splits (eq. 9); doing it
+        // per-segment must give the same result because both are linear.
+        let dims = dims();
+        let u1 = AdapterSet::init(&dims, 4, 11);
+        let u2 = AdapterSet::init(&dims, 4, 22);
+        let agg_full = fedavg(&[(0.6, &u1), (0.4, &u2)]).unwrap();
+        let (agg_c, agg_s) = agg_full.split_at(2).unwrap();
+
+        let (c1, s1) = u1.split_at(2).unwrap();
+        let (c2, s2) = u2.split_at(2).unwrap();
+        let agg_c2 = fedavg(&[(0.6, &c1), (0.4, &c2)]).unwrap();
+        let agg_s2 = fedavg(&[(0.6, &s1), (0.4, &s2)]).unwrap();
+
+        assert!(agg_c.max_abs_diff(&agg_c2).unwrap() < 1e-6);
+        assert!(agg_s.max_abs_diff(&agg_s2).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn adapter_store_counts_switches() {
+        let dims = dims();
+        let mut store = AdapterStore::new(&dims, &[1, 2, 3], 5);
+        assert_eq!(store.len(), 3);
+        store.activate(0);
+        store.activate(0); // no switch
+        store.activate(1);
+        store.activate(2);
+        store.activate(1);
+        assert_eq!(store.switches, 4);
+        assert_eq!(store.get(1).layers, dims.layers - 2);
+    }
+
+    #[test]
+    fn byte_len_matches_dims_formula() {
+        let dims = dims();
+        let s = AdapterSet::zeros(&dims, 2);
+        assert_eq!(s.byte_len(), dims.lora_bytes(2));
+    }
+}

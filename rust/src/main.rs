@@ -1,0 +1,216 @@
+//! `sfl` — CLI launcher for the memory-efficient SFL framework.
+//!
+//! Subcommands map 1:1 onto the paper's evaluation artifacts:
+//!   run      one experiment (scheme × scheduler) with progress
+//!   table1   Table I — SL vs SFL vs Ours
+//!   fig2     Fig. 2(a)/(b) — metric-vs-time series for 5 schemes
+//!   fig2c    Fig. 2(c) — convergence-time comparison
+//!   memory   analytic memory accountant report (no numerics)
+//!   ablate   scheduler ablation across fleet sizes (analytic)
+//!
+//! Global flags: --config mini|small, --artifacts DIR, --out DIR,
+//! --experiment FILE (key=value format, see configs/paper.exp).
+
+use anyhow::{bail, Result};
+use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
+use sfl::coordinator::{timing, RunResult, Trainer};
+use sfl::devices::paper_fleet;
+use sfl::model::{memory, ModelDims};
+use sfl::runtime::Engine;
+use sfl::telemetry;
+use sfl::util::args::Args;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "usage: sfl [--config mini|small] [--artifacts DIR] [--out DIR] \
+[--experiment FILE] <run|table1|fig2|fig2c|memory|ablate> \
+[--scheme ours|sl|sfl] [--scheduler proposed|fifo|wf|random] [--max-rounds N]";
+
+fn base_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("experiment") {
+        Some(path) => ExperimentConfig::from_kv_file(Path::new(path))?,
+        None => ExperimentConfig::paper(),
+    };
+    if let Some(c) = args.get("config") {
+        cfg.artifact_config = c.to_string();
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    Ok(cfg)
+}
+
+fn run_one(
+    engine: &Engine,
+    cfg: &ExperimentConfig,
+    scheme: SchemeKind,
+    scheduler: SchedulerKind,
+    max_rounds: Option<usize>,
+    quiet: bool,
+) -> Result<RunResult> {
+    let mut c = cfg.clone();
+    c.scheme = scheme;
+    c.scheduler = scheduler;
+    if let Some(mr) = max_rounds {
+        c.train.max_rounds = mr;
+    }
+    let trainer = Trainer::new(engine, &c)?;
+    trainer.run(quiet)
+}
+
+/// The five schemes compared in Fig. 2.
+fn fig2_runs(
+    engine: &Engine,
+    cfg: &ExperimentConfig,
+    max_rounds: Option<usize>,
+) -> Result<Vec<(&'static str, RunResult)>> {
+    let runs = vec![
+        ("SL", run_one(engine, cfg, SchemeKind::Sl, SchedulerKind::Proposed, max_rounds, true)?),
+        ("SFL", run_one(engine, cfg, SchemeKind::Sfl, SchedulerKind::Proposed, max_rounds, true)?),
+        ("FIFO", run_one(engine, cfg, SchemeKind::Ours, SchedulerKind::Fifo, max_rounds, true)?),
+        (
+            "WF",
+            run_one(engine, cfg, SchemeKind::Ours, SchedulerKind::WorkloadFirst, max_rounds, true)?,
+        ),
+        ("Ours", run_one(engine, cfg, SchemeKind::Ours, SchedulerKind::Proposed, max_rounds, true)?),
+    ];
+    for (n, r) in &runs {
+        println!("{}", telemetry::summary(n, r));
+    }
+    Ok(runs)
+}
+
+fn cmd_memory() {
+    let dims = ModelDims::bert_base();
+    let cuts: Vec<usize> = paper_fleet().iter().map(|(_, k)| *k).collect();
+    let ours = memory::ours_server_memory(&dims, &cuts);
+    let sfl_m = memory::sfl_server_memory(&dims, &cuts);
+    let sl = memory::sl_server_memory(&dims, &cuts);
+    println!("Analytic server memory (BERT-base, paper fleet):");
+    for (name, b) in [("SL", &sl), ("SFL", &sfl_m), ("Ours", &ours)] {
+        println!(
+            "  {name:5} total={:8.2} MB  (model={:7.1}  acts={:7.1}  lora={:6.1}  buf={:6.1})",
+            b.total_mb(),
+            b.model_params / 1048576.0,
+            b.activations / 1048576.0,
+            b.lora_states / 1048576.0,
+            b.buffers / 1048576.0,
+        );
+    }
+    println!(
+        "\n  SFL/Ours = {:.2}x (paper: 4.94x, i.e. 79% reduction)\n  Ours/SL  = {:.2}x (paper: 1.10x)",
+        sfl_m.total_mb() / ours.total_mb(),
+        ours.total_mb() / sl.total_mb()
+    );
+}
+
+/// Analytic scheduler ablation: per-step makespan across fleet sizes
+/// (no numeric execution — pure timing model).
+fn cmd_ablate(cfg: &ExperimentConfig) {
+    use sfl::coordinator::scheduler::make_scheduler;
+    let dims = cfg.timing_dims();
+    println!("scheduler ablation (per-step makespan, paper timing model)\n");
+    println!("{:>8} {:>12} {:>12} {:>12} {:>12}", "fleet", "proposed", "fifo", "wf", "random");
+    for mult in [1usize, 2, 4, 8] {
+        let mut clients = Vec::new();
+        let mut cuts = Vec::new();
+        for _ in 0..mult {
+            for (d, k) in paper_fleet() {
+                clients.push(sfl::config::ClientConfig {
+                    device: d,
+                    cut: Some(k),
+                    link: sfl::net::Link::paper_default(),
+                });
+                cuts.push(k);
+            }
+        }
+        let mut row = format!("{:>8}", clients.len());
+        for kind in [
+            SchedulerKind::Proposed,
+            SchedulerKind::Fifo,
+            SchedulerKind::WorkloadFirst,
+            SchedulerKind::Random,
+        ] {
+            let mut s = make_scheduler(kind, 7);
+            let (t, _) = timing::ours_step(&dims, &clients, &cuts, &cfg.server, s.as_mut());
+            row.push_str(&format!(" {t:>12.3}"));
+        }
+        println!("{row}");
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let cfg = base_config(&args)?;
+    let out = PathBuf::from(args.get_or("out", "results"));
+    let artifacts = PathBuf::from(args.get_or("artifacts", &cfg.artifacts_dir));
+    let max_rounds = args.get_parse::<usize>("max-rounds")?;
+
+    let sub = match args.subcommand.as_deref() {
+        Some(s) => s.to_string(),
+        None => {
+            println!("{USAGE}");
+            return Ok(());
+        }
+    };
+
+    // Analytics-only subcommands (no artifacts needed).
+    match sub.as_str() {
+        "memory" => {
+            cmd_memory();
+            return Ok(());
+        }
+        "ablate" => {
+            cmd_ablate(&cfg);
+            return Ok(());
+        }
+        _ => {}
+    }
+
+    let engine = Engine::load(&artifacts, &cfg.artifact_config)?;
+    println!(
+        "engine: config={} ({} layers, hidden {}), artifacts at {}",
+        cfg.artifact_config,
+        engine.dims().layers,
+        engine.dims().hidden,
+        artifacts.display()
+    );
+
+    match sub.as_str() {
+        "run" => {
+            let scheme: SchemeKind = args.get_or("scheme", "ours").parse()?;
+            let scheduler: SchedulerKind = args.get_or("scheduler", "proposed").parse()?;
+            let r = run_one(&engine, &cfg, scheme, scheduler, max_rounds, args.has("quiet"))?;
+            println!("{}", telemetry::summary("run", &r));
+        }
+        "table1" => {
+            let sl = run_one(&engine, &cfg, SchemeKind::Sl, SchedulerKind::Proposed, max_rounds, false)?;
+            let sfl_r =
+                run_one(&engine, &cfg, SchemeKind::Sfl, SchedulerKind::Proposed, max_rounds, false)?;
+            let ours =
+                run_one(&engine, &cfg, SchemeKind::Ours, SchedulerKind::Proposed, max_rounds, false)?;
+            let rows = [("SL", &sl), ("SFL", &sfl_r), ("Ours", &ours)];
+            let table = telemetry::table1(&rows);
+            println!("\nTable I (reproduced):\n{table}");
+            telemetry::write_result(&out, "table1.md", &table)?;
+        }
+        "fig2" => {
+            let runs = fig2_runs(&engine, &cfg, max_rounds)?;
+            let rows: Vec<(&str, &RunResult)> = runs.iter().map(|(n, r)| (*n, r)).collect();
+            telemetry::write_result(
+                &out,
+                "fig2a_accuracy.csv",
+                &telemetry::fig2_csv(&rows, "accuracy"),
+            )?;
+            telemetry::write_result(&out, "fig2b_f1.csv", &telemetry::fig2_csv(&rows, "f1"))?;
+        }
+        "fig2c" => {
+            let runs = fig2_runs(&engine, &cfg, max_rounds)?;
+            let rows: Vec<(&str, &RunResult)> = runs.iter().map(|(n, r)| (*n, r)).collect();
+            let csv = telemetry::fig2c_csv(&rows);
+            println!("\nFig 2(c) convergence times:\n{csv}");
+            telemetry::write_result(&out, "fig2c_convergence.csv", &csv)?;
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+    Ok(())
+}

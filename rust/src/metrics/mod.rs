@@ -1,0 +1,244 @@
+//! Evaluation metrics: accuracy, macro-F1 (the paper reports both),
+//! loss tracking, and the convergence detector used for Table I's
+//! "Convergence Round / Convergence Time" columns.
+
+/// Confusion matrix over `classes` labels.
+#[derive(Debug, Clone)]
+pub struct Confusion {
+    classes: usize,
+    /// counts[truth][pred]
+    counts: Vec<Vec<usize>>,
+}
+
+impl Confusion {
+    pub fn new(classes: usize) -> Self {
+        Self { classes, counts: vec![vec![0; classes]; classes] }
+    }
+
+    pub fn record(&mut self, truth: usize, pred: usize) {
+        assert!(truth < self.classes && pred < self.classes);
+        self.counts[truth][pred] += 1;
+    }
+
+    /// Record a batch from logits laid out [B, C] row-major.
+    pub fn record_logits(&mut self, logits: &[f32], labels: &[i32]) {
+        let c = self.classes;
+        assert_eq!(logits.len(), labels.len() * c);
+        for (i, &lab) in labels.iter().enumerate() {
+            let row = &logits[i * c..(i + 1) * c];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            self.record(lab as usize, pred);
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.counts.iter().map(|r| r.iter().sum::<usize>()).sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let correct: usize = (0..self.classes).map(|i| self.counts[i][i]).sum();
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        correct as f64 / total as f64
+    }
+
+    /// Macro-averaged F1 over classes that appear in truth or predictions
+    /// (absent classes are skipped, matching sklearn's behaviour on
+    /// undefined precision/recall with zero_division elision).
+    pub fn macro_f1(&self) -> f64 {
+        let mut f1s = Vec::new();
+        for c in 0..self.classes {
+            let tp = self.counts[c][c];
+            let truth: usize = self.counts[c].iter().sum();
+            let pred: usize = (0..self.classes).map(|i| self.counts[i][c]).sum();
+            if truth == 0 && pred == 0 {
+                continue;
+            }
+            let f1 = if tp == 0 {
+                0.0
+            } else {
+                let p = tp as f64 / pred as f64;
+                let r = tp as f64 / truth as f64;
+                2.0 * p * r / (p + r)
+            };
+            f1s.push(f1);
+        }
+        if f1s.is_empty() {
+            0.0
+        } else {
+            f1s.iter().sum::<f64>() / f1s.len() as f64
+        }
+    }
+}
+
+/// A (time, round, value) series — the payload of Fig. 2(a)/(b).
+#[derive(Debug, Clone, Default)]
+pub struct MetricSeries {
+    pub points: Vec<SeriesPoint>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeriesPoint {
+    pub round: usize,
+    pub sim_time: f64,
+    pub value: f64,
+}
+
+impl MetricSeries {
+    pub fn push(&mut self, round: usize, sim_time: f64, value: f64) {
+        self.points.push(SeriesPoint { round, sim_time, value });
+    }
+
+    pub fn last_value(&self) -> Option<f64> {
+        self.points.last().map(|p| p.value)
+    }
+
+    /// First virtual time at which the series reaches `threshold`
+    /// (time-to-accuracy — Fig. 2's comparison axis).
+    pub fn time_to_reach(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.value >= threshold).map(|p| p.sim_time)
+    }
+}
+
+/// Convergence detector matching the paper's protocol: training has
+/// converged when the metric's best value hasn't improved by more than
+/// `min_delta` for `patience` consecutive evaluation rounds.
+#[derive(Debug, Clone)]
+pub struct ConvergenceDetector {
+    pub patience: usize,
+    pub min_delta: f64,
+    best: f64,
+    stale: usize,
+    converged_at: Option<(usize, f64)>,
+}
+
+impl ConvergenceDetector {
+    pub fn new(patience: usize, min_delta: f64) -> Self {
+        Self { patience, min_delta, best: f64::NEG_INFINITY, stale: 0, converged_at: None }
+    }
+
+    /// Feed one evaluation point; returns true once converged.
+    pub fn update(&mut self, round: usize, sim_time: f64, value: f64) -> bool {
+        if self.converged_at.is_some() {
+            return true;
+        }
+        if value > self.best + self.min_delta {
+            self.best = value;
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+            if self.stale >= self.patience {
+                self.converged_at = Some((round, sim_time));
+            }
+        }
+        self.converged_at.is_some()
+    }
+
+    pub fn converged(&self) -> Option<(usize, f64)> {
+        self.converged_at
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions_are_perfect() {
+        let mut c = Confusion::new(3);
+        for t in 0..3 {
+            for _ in 0..5 {
+                c.record(t, t);
+            }
+        }
+        assert_eq!(c.accuracy(), 1.0);
+        assert_eq!(c.macro_f1(), 1.0);
+    }
+
+    #[test]
+    fn accuracy_counts_diagonal() {
+        let mut c = Confusion::new(2);
+        c.record(0, 0);
+        c.record(0, 1);
+        c.record(1, 1);
+        c.record(1, 1);
+        assert!((c.accuracy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn macro_f1_penalizes_minority_collapse() {
+        // Predicting the majority class everywhere: high accuracy on an
+        // imbalanced set, low macro-F1.
+        let mut c = Confusion::new(2);
+        for _ in 0..90 {
+            c.record(0, 0);
+        }
+        for _ in 0..10 {
+            c.record(1, 0);
+        }
+        assert!(c.accuracy() > 0.89);
+        assert!(c.macro_f1() < 0.5, "macro_f1 = {}", c.macro_f1());
+    }
+
+    #[test]
+    fn macro_f1_known_value() {
+        // Class 0: tp=1 fp=1 fn=0 -> p=0.5 r=1 f1=2/3.
+        // Class 1: tp=1 fp=0 fn=1 -> p=1 r=0.5 f1=2/3.
+        let mut c = Confusion::new(2);
+        c.record(0, 0);
+        c.record(1, 0);
+        c.record(1, 1);
+        let f1 = c.macro_f1();
+        assert!((f1 - 2.0 / 3.0).abs() < 1e-9, "{f1}");
+    }
+
+    #[test]
+    fn record_logits_argmax() {
+        let mut c = Confusion::new(3);
+        let logits = [0.1f32, 0.9, 0.0, /* pred 1 */ 2.0, 0.0, 1.0 /* pred 0 */];
+        c.record_logits(&logits, &[1, 0]);
+        assert_eq!(c.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn series_time_to_reach() {
+        let mut s = MetricSeries::default();
+        s.push(1, 10.0, 0.5);
+        s.push(2, 20.0, 0.8);
+        s.push(3, 30.0, 0.9);
+        assert_eq!(s.time_to_reach(0.75), Some(20.0));
+        assert_eq!(s.time_to_reach(0.95), None);
+    }
+
+    #[test]
+    fn convergence_triggers_after_patience() {
+        let mut d = ConvergenceDetector::new(3, 0.001);
+        assert!(!d.update(1, 1.0, 0.5));
+        assert!(!d.update(2, 2.0, 0.6)); // improvement resets
+        assert!(!d.update(3, 3.0, 0.6));
+        assert!(!d.update(4, 4.0, 0.6005)); // below min_delta => stale
+        assert!(d.update(5, 5.0, 0.6));
+        assert_eq!(d.converged().map(|(r, _)| r), Some(5));
+    }
+
+    #[test]
+    fn convergence_is_sticky() {
+        let mut d = ConvergenceDetector::new(1, 0.0);
+        d.update(1, 1.0, 0.5);
+        assert!(d.update(2, 2.0, 0.5));
+        // Later improvements do not un-converge.
+        assert!(d.update(3, 3.0, 0.99));
+        assert_eq!(d.converged().map(|(r, _)| r), Some(2));
+    }
+}

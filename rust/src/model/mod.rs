@@ -1,0 +1,251 @@
+//! Model dimension descriptors + analytic FLOPs model.
+//!
+//! The paper's timing results (Table I, Fig. 2) are functions of the
+//! *compute cost* of each submodel on each device.  This module derives
+//! those costs analytically from the transformer dimensions, mirroring
+//! the configs in `python/compile/configs.py` (the `base` entry is the
+//! paper's BERT-base).  The numeric artifacts use the same dims, so the
+//! analytic and executed models always agree structurally.
+
+pub mod memory;
+
+
+/// Transformer dimensions (one-to-one with python ModelConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub seq: usize,
+    pub classes: usize,
+    pub rank: usize,
+    pub alpha: f64,
+    pub batch: usize,
+    pub cuts: Vec<usize>,
+}
+
+impl ModelDims {
+    /// The paper's BERT-base evaluation setting (§V-A).
+    pub fn bert_base() -> Self {
+        Self {
+            name: "base".into(),
+            vocab: 30522,
+            hidden: 768,
+            layers: 12,
+            heads: 12,
+            ffn: 3072,
+            seq: 128,
+            classes: 6,
+            rank: 16,
+            alpha: 32.0,
+            batch: 16,
+            cuts: vec![1, 2, 3],
+        }
+    }
+
+    /// Scaled config matching python `small` (numerically executed).
+    pub fn small() -> Self {
+        Self {
+            name: "small".into(),
+            vocab: 2048,
+            hidden: 128,
+            layers: 6,
+            heads: 4,
+            ffn: 512,
+            seq: 64,
+            classes: 6,
+            rank: 16,
+            alpha: 32.0,
+            batch: 16,
+            cuts: vec![1, 2, 3],
+        }
+    }
+
+    /// Scaled config matching python `mini` (fast tests/benches).
+    pub fn mini() -> Self {
+        Self {
+            name: "mini".into(),
+            vocab: 1024,
+            hidden: 64,
+            layers: 4,
+            heads: 2,
+            ffn: 256,
+            seq: 32,
+            classes: 6,
+            rank: 8,
+            alpha: 16.0,
+            batch: 8,
+            cuts: vec![1, 2, 3],
+        }
+    }
+
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq
+    }
+
+    /// Frozen parameters in one transformer layer.
+    pub fn layer_params(&self) -> usize {
+        let m = self.hidden;
+        let f = self.ffn;
+        // 4 projections + biases, 2 LN pairs, 2 FFN mats + biases.
+        4 * (m * m + m) + 4 * m + 2 * (m * f) + f + m
+    }
+
+    /// Embedding-block parameters (token + position + LN).
+    pub fn embedding_params(&self) -> usize {
+        self.vocab * self.hidden + self.seq * self.hidden + 2 * self.hidden
+    }
+
+    /// Classifier head parameters.
+    pub fn head_params(&self) -> usize {
+        self.hidden * self.classes + self.classes
+    }
+
+    /// Full frozen model parameter count.
+    pub fn total_params(&self) -> usize {
+        self.embedding_params() + self.layers * self.layer_params() + self.head_params()
+    }
+
+    /// LoRA parameters per adapted layer (A+B on Q and V projections).
+    pub fn lora_params_per_layer(&self) -> usize {
+        4 * self.rank * self.hidden
+    }
+
+    /// Number of trainable LoRA adapter modules per layer (paper counts
+    /// each (A, B) pair as one adapter; we adapt Q and V).
+    pub const ADAPTERS_PER_LAYER: usize = 2;
+
+    // ------------------------------------------------------------------
+    // FLOPs model (per mini-batch). Forward; backward ≈ 2x forward.
+    // ------------------------------------------------------------------
+
+    /// Forward FLOPs for one transformer layer on one mini-batch.
+    pub fn layer_fwd_flops(&self) -> f64 {
+        let t = self.tokens_per_batch() as f64;
+        let m = self.hidden as f64;
+        let f = self.ffn as f64;
+        let l = self.seq as f64;
+        let r = self.rank as f64;
+        let proj = 4.0 * 2.0 * t * m * m; // Q,K,V,O
+        let attn = 2.0 * 2.0 * t * l * m; // scores + PV
+        let ffn = 2.0 * 2.0 * t * m * f;
+        let lora = 2.0 * (2.0 * t * r * m * 2.0); // Q and V adapters (down+up)
+        proj + attn + ffn + lora
+    }
+
+    /// Forward FLOPs for the embedding block (gather is cheap; LN dominates).
+    pub fn embedding_fwd_flops(&self) -> f64 {
+        8.0 * self.tokens_per_batch() as f64 * self.hidden as f64
+    }
+
+    /// Forward FLOPs for the classifier head.
+    pub fn head_fwd_flops(&self) -> f64 {
+        2.0 * self.batch as f64 * self.hidden as f64 * self.classes as f64
+    }
+
+    /// Client-side forward FLOPs at cut `k` (embedding + k layers). Eq. (3).
+    pub fn client_fwd_flops(&self, k: usize) -> f64 {
+        self.embedding_fwd_flops() + k as f64 * self.layer_fwd_flops()
+    }
+
+    /// Client-side backward FLOPs at cut `k` (≈ 2x fwd, plus the
+    /// rematerialized forward the client runs — see model.py docstring).
+    pub fn client_bwd_flops(&self, k: usize) -> f64 {
+        3.0 * self.client_fwd_flops(k)
+    }
+
+    /// Server-side fwd+bwd FLOPs at cut `k` (layers k..N + head). Eq. (4).
+    pub fn server_flops(&self, k: usize) -> f64 {
+        let fwd = (self.layers - k) as f64 * self.layer_fwd_flops() + self.head_fwd_flops();
+        3.0 * fwd
+    }
+
+    /// Full-model training-step FLOPs (the SL client+server total).
+    pub fn full_step_flops(&self) -> f64 {
+        3.0 * (self.embedding_fwd_flops()
+            + self.layers as f64 * self.layer_fwd_flops()
+            + self.head_fwd_flops())
+    }
+
+    // ------------------------------------------------------------------
+    // Wire sizes (bytes) for the protocol messages.
+    // ------------------------------------------------------------------
+
+    /// Activation tensor at the split layer: [B, L, m] f32. Same size for
+    /// its gradient (the paper notes gradient size equals activation size).
+    pub fn activation_bytes(&self) -> usize {
+        self.batch * self.seq * self.hidden * 4
+    }
+
+    /// One client's LoRA adapter upload for `k` adapted layers.
+    pub fn lora_bytes(&self, k: usize) -> usize {
+        k * self.lora_params_per_layer() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_base_param_count_is_bertlike() {
+        let d = ModelDims::bert_base();
+        let p = d.total_params();
+        // BERT-base is ~110M params; our variant (no pooler/token-type,
+        // learned positions to seq=128) should land in 85–115M.
+        assert!(p > 85_000_000 && p < 115_000_000, "params = {p}");
+    }
+
+    #[test]
+    fn layer_params_match_formula() {
+        let d = ModelDims::mini();
+        let m = 64usize;
+        let f = 256usize;
+        let expect = 4 * (m * m + m) + 4 * m + 2 * m * f + f + m;
+        assert_eq!(d.layer_params(), expect);
+    }
+
+    #[test]
+    fn server_plus_client_covers_full_model_flops() {
+        let d = ModelDims::bert_base();
+        for &k in &[1usize, 2, 3] {
+            let split = d.client_fwd_flops(k) * 3.0 + d.server_flops(k);
+            let full = d.full_step_flops();
+            let ratio = split / full;
+            assert!((0.99..1.01).contains(&ratio), "k={k} ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn server_flops_decrease_with_cut() {
+        let d = ModelDims::bert_base();
+        assert!(d.server_flops(1) > d.server_flops(2));
+        assert!(d.server_flops(2) > d.server_flops(3));
+    }
+
+    #[test]
+    fn activation_bytes_paper_setting() {
+        let d = ModelDims::bert_base();
+        // 16 * 128 * 768 * 4 = 6.29 MB
+        assert_eq!(d.activation_bytes(), 16 * 128 * 768 * 4);
+    }
+
+    #[test]
+    fn lora_bytes_scale_with_cut() {
+        let d = ModelDims::bert_base();
+        assert_eq!(d.lora_bytes(2), 2 * d.lora_bytes(1));
+    }
+
+    #[test]
+    fn configs_match_python_side() {
+        // Guard: these dims must mirror python/compile/configs.py.
+        let s = ModelDims::small();
+        assert_eq!((s.vocab, s.hidden, s.layers, s.heads), (2048, 128, 6, 4));
+        assert_eq!((s.ffn, s.seq, s.rank, s.batch), (512, 64, 16, 16));
+        let m = ModelDims::mini();
+        assert_eq!((m.vocab, m.hidden, m.layers, m.heads), (1024, 64, 4, 2));
+    }
+}

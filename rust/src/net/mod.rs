@@ -1,0 +1,121 @@
+//! Wireless link model between clients and the edge server.
+//!
+//! The paper sets every client↔server link to 100 Mbps (§V-A); we model
+//! per-link rate + latency so heterogeneous-network ablations are a
+//! config change, not a code change.
+
+
+/// A (client ↔ server) wireless link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Link {
+    /// Data rate in megabits per second.
+    pub rate_mbps: f64,
+    /// One-way latency in milliseconds.
+    pub latency_ms: f64,
+}
+
+impl Link {
+    pub fn paper_default() -> Self {
+        Self { rate_mbps: 100.0, latency_ms: 5.0 }
+    }
+
+    pub fn new(rate_mbps: f64, latency_ms: f64) -> Self {
+        Self { rate_mbps, latency_ms }
+    }
+
+    /// Seconds to move `bytes` over this link (one way).
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_ms / 1e3 + (bytes as f64 * 8.0) / (self.rate_mbps * 1e6)
+    }
+}
+
+/// Wire-protocol message kinds with their payload sizes — used by both the
+/// timing model and telemetry byte counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Message {
+    /// Client → server: activations + labels + split-layer index (step 1b).
+    Activations { bytes: usize },
+    /// Server → client: activations' gradients (step 1e).
+    ActivationGrads { bytes: usize },
+    /// Client → server: client-side LoRA adapters (aggregation step 2a).
+    LoraUpload { bytes: usize },
+    /// Server → client: aggregated client-side LoRA adapters (step 2c).
+    LoraDownload { bytes: usize },
+}
+
+impl Message {
+    pub fn bytes(&self) -> usize {
+        match *self {
+            Message::Activations { bytes }
+            | Message::ActivationGrads { bytes }
+            | Message::LoraUpload { bytes }
+            | Message::LoraDownload { bytes } => bytes,
+        }
+    }
+}
+
+/// Cumulative traffic accounting per direction.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficMeter {
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub messages: u64,
+}
+
+impl TrafficMeter {
+    pub fn record(&mut self, msg: &Message) {
+        self.messages += 1;
+        match msg {
+            Message::Activations { bytes } | Message::LoraUpload { bytes } => {
+                self.uplink_bytes += *bytes as u64;
+            }
+            Message::ActivationGrads { bytes } | Message::LoraDownload { bytes } => {
+                self.downlink_bytes += *bytes as u64;
+            }
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.uplink_bytes + self.downlink_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_at_paper_rate() {
+        let l = Link::paper_default();
+        // 6.29MB activations over 100 Mbps ≈ 0.528s (+5ms latency).
+        let t = l.transfer_time(16 * 128 * 768 * 4);
+        assert!((t - (0.005 + 6291456.0 * 8.0 / 100e6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn faster_link_is_faster() {
+        let a = Link::new(50.0, 5.0);
+        let b = Link::new(200.0, 5.0);
+        assert!(a.transfer_time(1_000_000) > b.transfer_time(1_000_000));
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let l = Link::new(100.0, 50.0);
+        let t = l.transfer_time(100);
+        assert!(t > 0.05 && t < 0.051);
+    }
+
+    #[test]
+    fn traffic_meter_directions() {
+        let mut m = TrafficMeter::default();
+        m.record(&Message::Activations { bytes: 10 });
+        m.record(&Message::ActivationGrads { bytes: 20 });
+        m.record(&Message::LoraUpload { bytes: 5 });
+        m.record(&Message::LoraDownload { bytes: 7 });
+        assert_eq!(m.uplink_bytes, 15);
+        assert_eq!(m.downlink_bytes, 27);
+        assert_eq!(m.messages, 4);
+        assert_eq!(m.total_bytes(), 42);
+    }
+}

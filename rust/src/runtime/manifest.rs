@@ -1,0 +1,275 @@
+//! `artifacts/<config>/manifest.txt` — the contract between the python
+//! AOT path and this runtime (emitted by python/compile/aot.py; a JSON
+//! twin is written for humans, but rust parses the line-based format —
+//! this workspace builds offline with no JSON crate).
+//!
+//! Format (one record per line):
+//! ```text
+//! config name=mini vocab=1024 hidden=64 ... cuts=1,2,3
+//! params params.bin
+//! artifact client_fwd_1 client_fwd_1.hlo.txt
+//! in tokens i32 8,32
+//! in frozen.tok_emb f32 1024,64
+//! out acts f32 8,32,64
+//! end
+//! param frozen.tok_emb
+//! ```
+
+use crate::model::ModelDims;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape.iter().product()
+        }
+    }
+
+    pub fn is_i32(&self) -> bool {
+        self.dtype == "i32"
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub params_bin: String,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub param_tensors: Vec<String>,
+    pub dir: PathBuf,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "-" {
+        return Ok(vec![]); // scalar
+    }
+    s.split(',')
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<usize>().with_context(|| format!("bad dim {p:?}")))
+        .collect()
+}
+
+fn parse_tensor_line(rest: &str) -> Result<TensorSpec> {
+    let parts: Vec<&str> = rest.split_whitespace().collect();
+    if parts.len() != 3 {
+        bail!("tensor line needs `name dtype shape`, got {rest:?}");
+    }
+    if parts[1] != "f32" && parts[1] != "i32" {
+        bail!("unsupported dtype {:?}", parts[1]);
+    }
+    Ok(TensorSpec {
+        name: parts[0].to_string(),
+        dtype: parts[1].to_string(),
+        shape: parse_shape(parts[2])?,
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut kv: HashMap<String, String> = HashMap::new();
+        let mut params_bin = String::from("params.bin");
+        let mut artifacts = HashMap::new();
+        let mut param_tensors = Vec::new();
+        let mut current: Option<(String, ArtifactSpec)> = None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (tag, rest) = line.split_once(' ').unwrap_or((line, ""));
+            match tag {
+                "config" => {
+                    for pair in rest.split_whitespace() {
+                        let (k, v) = pair
+                            .split_once('=')
+                            .with_context(|| format!("line {}: bad config pair", lineno + 1))?;
+                        kv.insert(k.to_string(), v.to_string());
+                    }
+                }
+                "params" => params_bin = rest.trim().to_string(),
+                "artifact" => {
+                    if current.is_some() {
+                        bail!("line {}: artifact without end", lineno + 1);
+                    }
+                    let mut it = rest.split_whitespace();
+                    let name = it.next().context("artifact needs a name")?.to_string();
+                    let path = it.next().context("artifact needs a path")?.to_string();
+                    current = Some((
+                        name,
+                        ArtifactSpec { path, inputs: Vec::new(), outputs: Vec::new() },
+                    ));
+                }
+                "in" => {
+                    let (_, spec) = current
+                        .as_mut()
+                        .with_context(|| format!("line {}: `in` outside artifact", lineno + 1))?;
+                    spec.inputs.push(parse_tensor_line(rest)?);
+                }
+                "out" => {
+                    let (_, spec) = current
+                        .as_mut()
+                        .with_context(|| format!("line {}: `out` outside artifact", lineno + 1))?;
+                    spec.outputs.push(parse_tensor_line(rest)?);
+                }
+                "end" => {
+                    let (name, spec) = current
+                        .take()
+                        .with_context(|| format!("line {}: stray end", lineno + 1))?;
+                    artifacts.insert(name, spec);
+                }
+                "param" => param_tensors.push(rest.trim().to_string()),
+                other => bail!("line {}: unknown record {other:?}", lineno + 1),
+            }
+        }
+        if current.is_some() {
+            bail!("unterminated artifact record");
+        }
+
+        let get = |k: &str| -> Result<String> {
+            kv.get(k).cloned().with_context(|| format!("manifest config missing {k}"))
+        };
+        let dims = ModelDims {
+            name: get("name")?,
+            vocab: get("vocab")?.parse()?,
+            hidden: get("hidden")?.parse()?,
+            layers: get("layers")?.parse()?,
+            heads: get("heads")?.parse()?,
+            ffn: get("ffn")?.parse()?,
+            seq: get("seq")?.parse()?,
+            classes: get("classes")?.parse()?,
+            rank: get("rank")?.parse()?,
+            alpha: get("alpha")?.parse()?,
+            batch: get("batch")?.parse()?,
+            cuts: parse_shape(&get("cuts")?)?,
+        };
+        let m = Self { dims, params_bin, artifacts, param_tensors, dir };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(artifacts_dir: &Path, config_name: &str) -> Result<Self> {
+        let dir = artifacts_dir.join(config_name);
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for k in &self.dims.cuts {
+            for prefix in ["client_fwd", "server_step", "client_bwd"] {
+                let name = format!("{prefix}_{k}");
+                if !self.artifacts.contains_key(&name) {
+                    bail!("manifest missing artifact {name}");
+                }
+            }
+        }
+        for required in ["eval", "full_step"] {
+            if !self.artifacts.contains_key(required) {
+                bail!("manifest missing artifact {required}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.path))
+    }
+
+    pub fn params_path(&self) -> PathBuf {
+        self.dir.join(&self.params_bin)
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        let mut s = String::from(
+            "config name=mini vocab=1024 hidden=64 layers=4 heads=2 ffn=256 \
+             seq=32 classes=6 rank=8 alpha=16.0 batch=8 cuts=1\n\
+             params params.bin\n",
+        );
+        for name in ["client_fwd_1", "server_step_1", "client_bwd_1", "eval", "full_step"] {
+            s.push_str(&format!(
+                "artifact {name} {name}.hlo.txt\nin tokens i32 8,32\nin step f32 -\nout acts f32 8,32,64\nend\n"
+            ));
+        }
+        s.push_str("param frozen.tok_emb\n");
+        s
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = Manifest::parse(&sample(), PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.dims.hidden, 64);
+        assert_eq!(m.dims.cuts, vec![1]);
+        let a = m.artifact("client_fwd_1").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert!(a.inputs[0].is_i32());
+        assert_eq!(a.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(a.inputs[1].numel(), 1);
+        assert_eq!(a.outputs[0].numel(), 8 * 32 * 64);
+        assert_eq!(m.param_tensors, vec!["frozen.tok_emb"]);
+        assert_eq!(
+            m.hlo_path("eval").unwrap(),
+            PathBuf::from("/tmp/x/eval.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_artifact_fails_validation() {
+        let text = sample().replace("artifact full_step", "artifact other_step");
+        assert!(Manifest::parse(&text, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn unterminated_artifact_rejected() {
+        let mut text = sample();
+        text.push_str("artifact dangling d.hlo.txt\nin x f32 1\n");
+        assert!(Manifest::parse(&text, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let text = sample().replace("in tokens i32 8,32", "in tokens f64 8,32");
+        assert!(Manifest::parse(&text, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn stray_end_rejected() {
+        let text = format!("{}end\n", sample());
+        assert!(Manifest::parse(&text, PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,473 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables compile lazily (first use) and are cached; the frozen
+//! parameter block is converted to literals once at engine construction
+//! and shared across every call — only the small trainable state moves
+//! per step.
+//!
+//! Marshaling follows the flat input/output order recorded in
+//! manifest.json (see python/compile/packing.py — never jax pytree
+//! guessing).
+
+pub mod manifest;
+
+use crate::lora::AdapterSet;
+use crate::model::ModelDims;
+use crate::tensor::{store::ParamStore, HostTensor, TensorData};
+use anyhow::{bail, Result};
+use manifest::{ArtifactSpec, Manifest, TensorSpec};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Classifier-head trainables.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeadState {
+    pub w: HostTensor,
+    pub b: HostTensor,
+}
+
+/// Adam moments mirroring a flat trainable list (m tensors then v
+/// tensors, same order as the trainables — packing.adam_spec).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdamState {
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+}
+
+impl AdamState {
+    pub fn zeros_like(trainables: &[&HostTensor]) -> Self {
+        let z: Vec<HostTensor> = trainables
+            .iter()
+            .map(|t| HostTensor::zeros(format!("adam.{}", t.name), t.shape.clone()))
+            .collect();
+        Self { m: z.clone(), v: z }
+    }
+}
+
+/// Server-side training state for one client: LoRA over layers [k, N),
+/// the classifier head, Adam moments, and the step counter.
+#[derive(Debug, Clone)]
+pub struct ServerState {
+    pub lora: AdapterSet,
+    pub head: HeadState,
+    pub adam: AdamState,
+    pub step: u64,
+}
+
+impl ServerState {
+    pub fn fresh(lora: AdapterSet, head: HeadState) -> Self {
+        let flat: Vec<&HostTensor> =
+            lora.tensors.iter().chain([&head.w, &head.b]).collect();
+        let adam = AdamState::zeros_like(&flat);
+        Self { lora, head, adam, step: 0 }
+    }
+}
+
+/// Client-side training state: LoRA over layers [0, k) + Adam.
+#[derive(Debug, Clone)]
+pub struct ClientState {
+    pub lora: AdapterSet,
+    pub adam: AdamState,
+    pub step: u64,
+}
+
+impl ClientState {
+    pub fn fresh(lora: AdapterSet) -> Self {
+        let flat: Vec<&HostTensor> = lora.tensors.iter().collect();
+        let adam = AdamState::zeros_like(&flat);
+        Self { lora, adam, step: 0 }
+    }
+}
+
+/// Output of one server-side training step (paper eq. 4 + backward).
+#[derive(Debug)]
+pub struct ServerStepOut {
+    pub loss: f32,
+    pub act_grads: HostTensor,
+    pub state: ServerState,
+}
+
+/// The PJRT execution engine for one artifact config.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dims: ModelDims,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Frozen parameter literals in packing order (built once).
+    frozen: Vec<xla::Literal>,
+    params: ParamStore,
+    /// Executions performed (telemetry).
+    pub exec_count: Cell<u64>,
+    /// Cumulative host->device bytes staged per call (telemetry / perf).
+    pub bytes_uploaded: Cell<u64>,
+}
+
+fn host_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let ty = match t.data {
+        TensorData::F32(_) => xla::ElementType::F32,
+        TensorData::I32(_) => xla::ElementType::S32,
+    };
+    // payload_bytes is a zero-copy view — avoids a per-upload Vec
+    // allocation on the hot path (EXPERIMENTS.md §Perf, L3 iteration 1).
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, t.payload_bytes())
+        .map_err(|e| anyhow::anyhow!("literal for {}: {e}", t.name))
+}
+
+fn literal_to_host(spec: &TensorSpec, lit: &xla::Literal) -> Result<HostTensor> {
+    if spec.is_i32() {
+        let v = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))?;
+        Ok(HostTensor::i32(spec.name.clone(), spec.shape.clone(), v))
+    } else {
+        let v = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))?;
+        Ok(HostTensor::f32(spec.name.clone(), spec.shape.clone(), v))
+    }
+}
+
+impl Engine {
+    /// Load manifest + params.bin and prepare the frozen literal block.
+    pub fn load(artifacts_dir: &Path, config_name: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir, config_name)?;
+        let dims = manifest.dims();
+        let params = ParamStore::load(&manifest.params_path())?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let frozen = params
+            .names()
+            .iter()
+            .filter(|n| n.starts_with("frozen."))
+            .map(|n| host_to_literal(params.get(n)?))
+            .collect::<Result<Vec<_>>>()?;
+        if frozen.len() != 20 {
+            bail!("expected 20 frozen tensors, found {}", frozen.len());
+        }
+        Ok(Self {
+            client,
+            manifest,
+            dims,
+            exes: RefCell::new(HashMap::new()),
+            frozen,
+            params,
+            exec_count: Cell::new(0),
+            bytes_uploaded: Cell::new(0),
+        })
+    }
+
+    pub fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    /// Initial full-depth LoRA adapters from the checkpoint.
+    pub fn initial_lora(&self) -> Result<AdapterSet> {
+        let tensors = ["lora.aq", "lora.bq", "lora.av", "lora.bv"]
+            .iter()
+            .map(|n| {
+                let mut t = self.params.get(n)?.clone();
+                t.name = n.trim_start_matches("lora.").to_string();
+                Ok(t)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        AdapterSet::from_tensors(self.dims.layers, tensors)
+    }
+
+    /// Initial classifier head from the checkpoint.
+    pub fn initial_head(&self) -> Result<HeadState> {
+        Ok(HeadState {
+            w: self.params.get("head.w")?.clone(),
+            b: self.params.get("head.b")?.clone(),
+        })
+    }
+
+    /// Compile (or fetch cached) an executable.
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        let rc = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Pre-compile every artifact needed for the given cuts (plus eval) —
+    /// callers pay compilation cost upfront instead of on the first step.
+    pub fn warmup(&self, cuts: &[usize]) -> Result<()> {
+        for &k in cuts {
+            for prefix in ["client_fwd", "server_step", "client_bwd"] {
+                self.executable(&format!("{prefix}_{k}"))?;
+            }
+        }
+        self.executable("eval")?;
+        Ok(())
+    }
+
+    /// Execute `name`; returns output literals in manifest order.
+    fn execute(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{name}: arg count {} != manifest inputs {}",
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let outs = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name}: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: output count {} != manifest outputs {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        self.exec_count.set(self.exec_count.get() + 1);
+        Ok(parts)
+    }
+
+    fn tokens_literal(&self, tokens: &[i32]) -> Result<xla::Literal> {
+        let (b, l) = (self.dims.batch, self.dims.seq);
+        if tokens.len() != b * l {
+            bail!("tokens len {} != {}x{}", tokens.len(), b, l);
+        }
+        let t = HostTensor::i32("tokens", vec![b, l], tokens.to_vec());
+        self.bytes_uploaded.set(self.bytes_uploaded.get() + t.byte_len() as u64);
+        host_to_literal(&t)
+    }
+
+    fn labels_literal(&self, labels: &[i32]) -> Result<xla::Literal> {
+        if labels.len() != self.dims.batch {
+            bail!("labels len {} != batch {}", labels.len(), self.dims.batch);
+        }
+        let t = HostTensor::i32("labels", vec![self.dims.batch], labels.to_vec());
+        host_to_literal(&t)
+    }
+
+    fn upload(&self, t: &HostTensor) -> Result<xla::Literal> {
+        self.bytes_uploaded.set(self.bytes_uploaded.get() + t.byte_len() as u64);
+        host_to_literal(t)
+    }
+
+    /// Client-side forward (paper eq. 3): tokens → activations at cut k.
+    pub fn client_fwd(
+        &self,
+        k: usize,
+        tokens: &[i32],
+        lora: &AdapterSet,
+    ) -> Result<HostTensor> {
+        let name = format!("client_fwd_{k}");
+        let spec = self.manifest.artifact(&name)?;
+        let mut owned = vec![self.tokens_literal(tokens)?];
+        for t in &lora.tensors {
+            owned.push(self.upload(t)?);
+        }
+        let mut args: Vec<&xla::Literal> = vec![&owned[0]];
+        args.extend(self.frozen.iter());
+        args.extend(owned[1..].iter());
+        let outs = self.execute(&name, spec, &args)?;
+        literal_to_host(&spec.outputs[0], &outs[0])
+    }
+
+    /// Server-side fwd+bwd+Adam (paper eq. 4): activations → loss,
+    /// activation grads, updated server state.
+    pub fn server_step(
+        &self,
+        k: usize,
+        acts: &HostTensor,
+        labels: &[i32],
+        state: &ServerState,
+        lr: f32,
+    ) -> Result<ServerStepOut> {
+        let name = format!("server_step_{k}");
+        let spec = self.manifest.artifact(&name)?;
+        let step = state.step + 1;
+
+        let mut owned = Vec::with_capacity(22);
+        owned.push(self.upload(acts)?);
+        owned.push(self.labels_literal(labels)?);
+        for t in &state.lora.tensors {
+            owned.push(self.upload(t)?);
+        }
+        owned.push(self.upload(&state.head.w)?);
+        owned.push(self.upload(&state.head.b)?);
+        for t in state.adam.m.iter().chain(state.adam.v.iter()) {
+            owned.push(self.upload(t)?);
+        }
+        owned.push(host_to_literal(&HostTensor::scalar("step", step as f32))?);
+        owned.push(host_to_literal(&HostTensor::scalar("lr", lr))?);
+
+        let mut args: Vec<&xla::Literal> = vec![&owned[0], &owned[1]];
+        args.extend(self.frozen.iter());
+        args.extend(owned[2..].iter());
+        let outs = self.execute(&name, spec, &args)?;
+
+        let loss = outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("loss: {e}"))?[0];
+        let act_grads = literal_to_host(&spec.outputs[1], &outs[1])?;
+        let mut cursor = 2usize;
+        let mut grab = |n: usize| -> Result<Vec<HostTensor>> {
+            let out = (cursor..cursor + n)
+                .map(|i| literal_to_host(&spec.outputs[i], &outs[i]))
+                .collect::<Result<Vec<_>>>()?;
+            cursor += n;
+            Ok(out)
+        };
+        let mut lora_t = grab(4)?;
+        for (t, old) in lora_t.iter_mut().zip(state.lora.tensors.iter()) {
+            t.name = old.name.clone();
+        }
+        let head_t = grab(2)?;
+        let m = grab(6)?;
+        let v = grab(6)?;
+        let new_state = ServerState {
+            lora: AdapterSet::from_tensors(state.lora.layers, lora_t)?,
+            head: HeadState { w: head_t[0].clone(), b: head_t[1].clone() },
+            adam: AdamState { m, v },
+            step,
+        };
+        Ok(ServerStepOut { loss, act_grads, state: new_state })
+    }
+
+    /// Client-side backward (rematerialized fwd + LoRA Adam update).
+    pub fn client_bwd(
+        &self,
+        k: usize,
+        tokens: &[i32],
+        state: &ClientState,
+        act_grads: &HostTensor,
+        lr: f32,
+    ) -> Result<ClientState> {
+        let name = format!("client_bwd_{k}");
+        let spec = self.manifest.artifact(&name)?;
+        let step = state.step + 1;
+
+        let mut owned = vec![self.tokens_literal(tokens)?];
+        for t in &state.lora.tensors {
+            owned.push(self.upload(t)?);
+        }
+        owned.push(self.upload(act_grads)?);
+        for t in state.adam.m.iter().chain(state.adam.v.iter()) {
+            owned.push(self.upload(t)?);
+        }
+        owned.push(host_to_literal(&HostTensor::scalar("step", step as f32))?);
+        owned.push(host_to_literal(&HostTensor::scalar("lr", lr))?);
+
+        let mut args: Vec<&xla::Literal> = vec![&owned[0]];
+        args.extend(self.frozen.iter());
+        args.extend(owned[1..].iter());
+        let outs = self.execute(&name, spec, &args)?;
+
+        let mut lora_t = Vec::with_capacity(4);
+        for i in 0..4 {
+            let mut t = literal_to_host(&spec.outputs[i], &outs[i])?;
+            t.name = state.lora.tensors[i].name.clone();
+            lora_t.push(t);
+        }
+        let m = (4..8)
+            .map(|i| literal_to_host(&spec.outputs[i], &outs[i]))
+            .collect::<Result<Vec<_>>>()?;
+        let v = (8..12)
+            .map(|i| literal_to_host(&spec.outputs[i], &outs[i]))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ClientState {
+            lora: AdapterSet::from_tensors(k, lora_t)?,
+            adam: AdamState { m, v },
+            step,
+        })
+    }
+
+    /// Full-model evaluation on one batch: returns (logits [B*C], loss).
+    pub fn eval(
+        &self,
+        tokens: &[i32],
+        labels: &[i32],
+        lora: &AdapterSet,
+        head: &HeadState,
+    ) -> Result<(Vec<f32>, f32)> {
+        let spec = self.manifest.artifact("eval")?;
+        let mut owned = vec![self.tokens_literal(tokens)?, self.labels_literal(labels)?];
+        for t in &lora.tensors {
+            owned.push(self.upload(t)?);
+        }
+        owned.push(self.upload(&head.w)?);
+        owned.push(self.upload(&head.b)?);
+        let mut args: Vec<&xla::Literal> = vec![&owned[0], &owned[1]];
+        args.extend(self.frozen.iter());
+        args.extend(owned[2..].iter());
+        let outs = self.execute("eval", spec, &args)?;
+        let logits = outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("logits: {e}"))?;
+        let loss = outs[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("loss: {e}"))?[0];
+        Ok((logits, loss))
+    }
+
+    /// Monolithic centralized training step (tests + SL reference).
+    pub fn full_step(
+        &self,
+        tokens: &[i32],
+        labels: &[i32],
+        state: &ServerState,
+        lr: f32,
+    ) -> Result<(f32, ServerState)> {
+        let spec = self.manifest.artifact("full_step")?;
+        let step = state.step + 1;
+        let mut owned = vec![self.tokens_literal(tokens)?, self.labels_literal(labels)?];
+        for t in &state.lora.tensors {
+            owned.push(self.upload(t)?);
+        }
+        owned.push(self.upload(&state.head.w)?);
+        owned.push(self.upload(&state.head.b)?);
+        for t in state.adam.m.iter().chain(state.adam.v.iter()) {
+            owned.push(self.upload(t)?);
+        }
+        owned.push(host_to_literal(&HostTensor::scalar("step", step as f32))?);
+        owned.push(host_to_literal(&HostTensor::scalar("lr", lr))?);
+        let mut args: Vec<&xla::Literal> = vec![&owned[0], &owned[1]];
+        args.extend(self.frozen.iter());
+        args.extend(owned[2..].iter());
+        let outs = self.execute("full_step", spec, &args)?;
+
+        let loss = outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("loss: {e}"))?[0];
+        let mut cursor = 1usize;
+        let mut grab = |n: usize| -> Result<Vec<HostTensor>> {
+            let out = (cursor..cursor + n)
+                .map(|i| literal_to_host(&spec.outputs[i], &outs[i]))
+                .collect::<Result<Vec<_>>>()?;
+            cursor += n;
+            Ok(out)
+        };
+        let mut lora_t = grab(4)?;
+        for (t, old) in lora_t.iter_mut().zip(state.lora.tensors.iter()) {
+            t.name = old.name.clone();
+        }
+        let head_t = grab(2)?;
+        let m = grab(6)?;
+        let v = grab(6)?;
+        let new_state = ServerState {
+            lora: AdapterSet::from_tensors(state.lora.layers, lora_t)?,
+            head: HeadState { w: head_t[0].clone(), b: head_t[1].clone() },
+            adam: AdamState { m, v },
+            step,
+        };
+        Ok((loss, new_state))
+    }
+}

@@ -1,0 +1,204 @@
+//! Discrete-event virtual clock.
+//!
+//! The paper's latency results come from Jetson/Snapdragon/Apple devices
+//! and an RTX 4080S; on this testbed those are simulated (DESIGN.md §2),
+//! so all protocol timing runs on a virtual clock: compute and transfer
+//! durations are *derived* from the analytic models and composed with an
+//! event queue that reproduces eqs. (10)–(12), including the sequential
+//! server queue (waiting time, eq. 11) and client-side parallelism.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in seconds.
+pub type SimTime = f64;
+
+#[derive(Debug, Clone, PartialEq)]
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E: PartialEq> Eq for Scheduled<E> {}
+
+impl<E: PartialEq> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E: PartialEq> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on (time, insertion seq) via reversed comparison.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// An event queue advancing a virtual clock. FIFO among simultaneous
+/// events (stable by insertion order) so runs are fully deterministic.
+#[derive(Debug)]
+pub struct EventQueue<E: PartialEq> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: SimTime,
+    seq: u64,
+}
+
+impl<E: PartialEq> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E: PartialEq> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` to fire `delay` seconds from now.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        assert!(delay >= 0.0, "negative delay");
+        self.schedule_at(self.now + delay, event);
+    }
+
+    /// Schedule `event` at absolute virtual time `at` (>= now).
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        assert!(at >= self.now, "cannot schedule in the past");
+        self.heap.push(Scheduled { at, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn next(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|s| {
+            self.now = s.at;
+            (s.at, s.event)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// A single-server FIFO resource on the virtual clock — models the GPU
+/// executing server-side jobs *sequentially* (the core of the paper's
+/// memory-efficient design).  `busy_until` is the queue's horizon.
+#[derive(Debug, Clone, Default)]
+pub struct SequentialResource {
+    busy_until: SimTime,
+    /// Total busy seconds (for utilization reporting).
+    pub busy_time: SimTime,
+    pub jobs: u64,
+}
+
+impl SequentialResource {
+    /// Admit a job arriving at `arrival` needing `duration` seconds.
+    /// Returns (start, finish). Eq. (11): start = max(arrival, horizon).
+    pub fn admit(&mut self, arrival: SimTime, duration: SimTime) -> (SimTime, SimTime) {
+        let start = arrival.max(self.busy_until);
+        let finish = start + duration;
+        self.busy_until = finish;
+        self.busy_time += duration;
+        self.jobs += 1;
+        (start, finish)
+    }
+
+    pub fn horizon(&self) -> SimTime {
+        self.busy_until
+    }
+
+    /// Reset the horizon (e.g., at a round boundary) keeping counters.
+    pub fn reset_horizon(&mut self, to: SimTime) {
+        self.busy_until = to;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_in(3.0, "c");
+        q.schedule_in(1.0, "a");
+        q.schedule_in(2.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.next()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn simultaneous_events_are_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule_in(1.0, "first");
+        q.schedule_in(1.0, "second");
+        q.schedule_in(1.0, "third");
+        let order: Vec<_> = std::iter::from_fn(|| q.next()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["first", "second", "third"]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule_in(5.0, 1u32);
+        q.schedule_in(2.0, 2u32);
+        let mut last = 0.0;
+        while let Some((t, _)) = q.next() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(q.now(), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot schedule in the past")]
+    fn scheduling_in_the_past_panics() {
+        let mut q = EventQueue::new();
+        q.schedule_in(1.0, ());
+        q.next();
+        q.schedule_at(0.5, ());
+    }
+
+    #[test]
+    fn sequential_resource_queues_jobs() {
+        let mut r = SequentialResource::default();
+        // Job A arrives at t=0 and runs 10s.
+        let (s1, f1) = r.admit(0.0, 10.0);
+        assert_eq!((s1, f1), (0.0, 10.0));
+        // Job B arrives at t=2 but must wait for A — eq. (11).
+        let (s2, f2) = r.admit(2.0, 5.0);
+        assert_eq!((s2, f2), (10.0, 15.0));
+        // Job C arrives after the queue drained: no waiting.
+        let (s3, f3) = r.admit(20.0, 1.0);
+        assert_eq!((s3, f3), (20.0, 21.0));
+        assert_eq!(r.jobs, 3);
+        assert!((r.busy_time - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn waiting_time_matches_eq11() {
+        // With all arrivals at 0, client at position p waits sum of the
+        // durations of the earlier clients — exactly eq. (11).
+        let mut r = SequentialResource::default();
+        let durations = [3.0, 5.0, 2.0, 7.0];
+        let mut expected_wait = 0.0;
+        for d in durations {
+            let (start, _) = r.admit(0.0, d);
+            assert!((start - expected_wait).abs() < 1e-12);
+            expected_wait += d;
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Result emitters: Table I rows, Fig. 2 series (CSV), JSON dumps.
+
+use crate::coordinator::RunResult;
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// Render Table I ("Performance Comparison of Different Schemes") from a
+/// set of runs — same columns as the paper.
+pub fn table1(rows: &[(&str, &RunResult)]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| Scheme | Memory (MB) | Conv. Round | Conv. Time (s) | Accuracy | F1 |\n",
+    );
+    out.push_str("|--------|-------------|-------------|----------------|----------|----|\n");
+    for (name, r) in rows {
+        out.push_str(&format!(
+            "| {name} | {:.2} | {} | {:.2} | {:.4} | {:.4} |\n",
+            r.memory_mb,
+            r.convergence_round
+                .map(|x| x.to_string())
+                .unwrap_or_else(|| "—".into()),
+            r.total_time(),
+            r.final_acc,
+            r.final_f1,
+        ));
+    }
+    out
+}
+
+/// Fig. 2(a)/(b): metric-vs-time series for several runs as CSV
+/// (`scheme,round,sim_time,value`).
+pub fn fig2_csv(rows: &[(&str, &RunResult)], metric: &str) -> String {
+    let mut out = String::from("scheme,round,sim_time_s,value\n");
+    for (name, r) in rows {
+        let series = if metric == "f1" { &r.f1 } else { &r.acc };
+        for p in &series.points {
+            out.push_str(&format!("{name},{},{:.3},{:.5}\n", p.round, p.sim_time, p.value));
+        }
+    }
+    out
+}
+
+/// Fig. 2(c): convergence-time bars (`scheme,convergence_time_s`).
+pub fn fig2c_csv(rows: &[(&str, &RunResult)]) -> String {
+    let mut out = String::from("scheme,convergence_time_s\n");
+    for (name, r) in rows {
+        out.push_str(&format!("{name},{:.2}\n", r.total_time()));
+    }
+    out
+}
+
+/// Human-readable run summary (per-run diagnostics).
+pub fn summary(name: &str, r: &RunResult) -> String {
+    format!(
+        "{name}: scheme={:?} sched={} rounds={} conv_round={:?} time={:.1}s \
+         acc={:.4} f1={:.4} mem={:.1}MB switches={} execs={} up={}B down={}B wall={:.1}s",
+        r.scheme,
+        r.scheduler,
+        r.rounds.len(),
+        r.convergence_round,
+        r.total_time(),
+        r.final_acc,
+        r.final_f1,
+        r.memory_mb,
+        r.adapter_switches,
+        r.executions,
+        r.uplink_bytes,
+        r.downlink_bytes,
+        r.wall_secs,
+    )
+}
+
+/// Write a string artifact under `results/`, creating the directory.
+pub fn write_result(dir: &Path, name: &str, contents: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut fh = std::fs::File::create(&path)?;
+    fh.write_all(contents.as_bytes())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchemeKind;
+    use crate::metrics::MetricSeries;
+    use crate::model::memory::MemoryBreakdown;
+
+    fn fake_run() -> RunResult {
+        let mut acc = MetricSeries::default();
+        acc.push(1, 10.0, 0.5);
+        acc.push(2, 20.0, 0.8);
+        RunResult {
+            scheme: SchemeKind::Ours,
+            scheduler: "proposed".into(),
+            rounds: vec![],
+            acc,
+            f1: MetricSeries::default(),
+            convergence_round: Some(2),
+            convergence_time: Some(20.0),
+            final_acc: 0.8,
+            final_f1: 0.79,
+            memory_mb: 1482.6,
+            memory: MemoryBreakdown::default(),
+            adapter_switches: 12,
+            executions: 100,
+            uplink_bytes: 1,
+            downlink_bytes: 2,
+            wall_secs: 3.0,
+        }
+    }
+
+    #[test]
+    fn table1_has_all_rows_and_columns() {
+        let r = fake_run();
+        let t = table1(&[("Ours", &r)]);
+        assert!(t.contains("| Ours | 1482.60 | 2 | 20.00 | 0.8000 | 0.7900 |"));
+    }
+
+    #[test]
+    fn fig2_csv_emits_series_points() {
+        let r = fake_run();
+        let csv = fig2_csv(&[("ours", &r)], "accuracy");
+        assert!(csv.lines().count() == 3);
+        assert!(csv.contains("ours,2,20.000,0.80000"));
+    }
+
+    #[test]
+    fn fig2c_uses_total_time() {
+        let r = fake_run();
+        let csv = fig2c_csv(&[("ours", &r)]);
+        assert!(csv.contains("ours,20.00"));
+    }
+}

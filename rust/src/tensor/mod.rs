@@ -1,0 +1,217 @@
+//! Host-side tensors: the coordinator's own representation of model state.
+//!
+//! All adapter/optimizer state lives on the host as [`HostTensor`]s (LoRA
+//! state is small — a few hundred KB per client), and is marshaled into
+//! `xla::Literal`s at call boundaries by the runtime layer.  Aggregation
+//! (paper eqs. 6–7) and adapter splitting (eq. 9) operate directly on
+//! these host buffers.
+
+pub mod ops;
+pub mod rng;
+pub mod store;
+
+use anyhow::{bail, Result};
+
+/// Element type of a host tensor. Mirrors the two dtypes the artifacts use.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A named, shaped, host-resident tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let t = Self { name: name.into(), shape, data: TensorData::F32(data) };
+        debug_assert_eq!(t.len(), t.numel(), "data length must match shape");
+        t
+    }
+
+    pub fn i32(name: impl Into<String>, shape: Vec<usize>, data: Vec<i32>) -> Self {
+        let t = Self { name: name.into(), shape, data: TensorData::I32(data) };
+        debug_assert_eq!(t.len(), t.numel(), "data length must match shape");
+        t
+    }
+
+    /// All-zeros f32 tensor of the given shape.
+    pub fn zeros(name: impl Into<String>, shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self::f32(name, shape, vec![0.0; n])
+    }
+
+    /// Scalar f32 (shape []).
+    pub fn scalar(name: impl Into<String>, v: f32) -> Self {
+        Self::f32(name, vec![], vec![v])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor {} is i32, expected f32", self.name),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor {} is i32, expected f32", self.name),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor {} is f32, expected i32", self.name),
+        }
+    }
+
+    /// Bytes occupied by the payload.
+    pub fn byte_len(&self) -> usize {
+        self.len() * 4
+    }
+
+    /// Raw little-endian bytes of the payload (both dtypes are 4-byte LE).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        match &self.data {
+            TensorData::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            TensorData::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+
+    /// Zero-copy view of the payload as bytes (native endianness — this
+    /// build targets little-endian; the hot marshaling path uses this to
+    /// avoid a per-upload allocation; see EXPERIMENTS.md §Perf).
+    pub fn payload_bytes(&self) -> &[u8] {
+        #[cfg(target_endian = "big")]
+        compile_error!("payload_bytes assumes a little-endian target");
+        match &self.data {
+            TensorData::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+            TensorData::I32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+        }
+    }
+
+    /// Slice the leading (stack) axis: rows `[lo, hi)`. Used to split LoRA
+    /// stacks at a client's cut point (paper eq. 9).
+    pub fn slice_axis0(&self, lo: usize, hi: usize) -> Result<HostTensor> {
+        if self.shape.is_empty() {
+            bail!("cannot slice a scalar tensor {}", self.name);
+        }
+        let n0 = self.shape[0];
+        if lo > hi || hi > n0 {
+            bail!("slice [{lo},{hi}) out of bounds for axis-0 size {n0} ({})", self.name);
+        }
+        let inner: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        match &self.data {
+            TensorData::F32(v) => Ok(HostTensor::f32(
+                self.name.clone(),
+                shape,
+                v[lo * inner..hi * inner].to_vec(),
+            )),
+            TensorData::I32(v) => Ok(HostTensor::i32(
+                self.name.clone(),
+                shape,
+                v[lo * inner..hi * inner].to_vec(),
+            )),
+        }
+    }
+
+    /// Concatenate along the leading axis (inverse of `slice_axis0`).
+    /// Used to join client + server adapter halves into the full adapter
+    /// set (paper eq. 5).
+    pub fn concat_axis0(parts: &[&HostTensor]) -> Result<HostTensor> {
+        let first = parts.first().ok_or_else(|| anyhow::anyhow!("empty concat"))?;
+        let inner: usize = first.shape[1..].iter().product();
+        let mut total0 = 0usize;
+        for p in parts {
+            if p.shape[1..] != first.shape[1..] {
+                bail!("concat shape mismatch: {:?} vs {:?}", p.shape, first.shape);
+            }
+            total0 += p.shape[0];
+        }
+        let mut shape = first.shape.clone();
+        shape[0] = total0;
+        let mut data = Vec::with_capacity(total0 * inner);
+        for p in parts {
+            data.extend_from_slice(p.as_f32()?);
+        }
+        Ok(HostTensor::f32(first.name.clone(), shape, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar("s", 2.5);
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.as_f32().unwrap(), &[2.5]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = HostTensor::zeros("z", vec![2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn slice_then_concat_roundtrips() {
+        let t = HostTensor::f32("x", vec![4, 2], (0..8).map(|i| i as f32).collect());
+        let a = t.slice_axis0(0, 1).unwrap();
+        let b = t.slice_axis0(1, 4).unwrap();
+        assert_eq!(a.shape, vec![1, 2]);
+        assert_eq!(b.shape, vec![3, 2]);
+        let joined = HostTensor::concat_axis0(&[&a, &b]).unwrap();
+        assert_eq!(joined.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn slice_out_of_bounds_errors() {
+        let t = HostTensor::zeros("x", vec![2, 2]);
+        assert!(t.slice_axis0(1, 3).is_err());
+        assert!(t.slice_axis0(2, 1).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = HostTensor::i32("x", vec![1], vec![3]);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+
+    #[test]
+    fn le_bytes_f32() {
+        let t = HostTensor::f32("x", vec![1], vec![1.0]);
+        assert_eq!(t.to_le_bytes(), 1.0f32.to_le_bytes().to_vec());
+    }
+}

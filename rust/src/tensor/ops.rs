@@ -1,0 +1,113 @@
+//! Host-side numeric ops used by aggregation and tests.
+
+use super::HostTensor;
+use anyhow::{bail, Result};
+
+/// `dst += alpha * src` (elementwise).
+pub fn axpy(alpha: f32, src: &HostTensor, dst: &mut HostTensor) -> Result<()> {
+    if src.shape != dst.shape {
+        bail!("axpy shape mismatch: {:?} vs {:?}", src.shape, dst.shape);
+    }
+    let s = src.as_f32()?;
+    let d = dst.as_f32_mut()?;
+    for (di, si) in d.iter_mut().zip(s.iter()) {
+        *di += alpha * si;
+    }
+    Ok(())
+}
+
+/// `t *= alpha` (elementwise).
+pub fn scale(alpha: f32, t: &mut HostTensor) -> Result<()> {
+    for x in t.as_f32_mut()? {
+        *x *= alpha;
+    }
+    Ok(())
+}
+
+/// Weighted sum of equally-shaped tensors: `sum_i w_i * t_i`.
+/// This is exactly the FedAvg aggregation primitive (paper eqs. 6–7).
+pub fn weighted_sum(pairs: &[(f32, &HostTensor)]) -> Result<HostTensor> {
+    let (_, first) = pairs.first().ok_or_else(|| anyhow::anyhow!("empty weighted_sum"))?;
+    let mut out = HostTensor::zeros(first.name.clone(), first.shape.clone());
+    for (w, t) in pairs {
+        axpy(*w, t, &mut out)?;
+    }
+    Ok(out)
+}
+
+/// Max |a - b| over all elements.
+pub fn max_abs_diff(a: &HostTensor, b: &HostTensor) -> Result<f32> {
+    if a.shape != b.shape {
+        bail!("shape mismatch: {:?} vs {:?}", a.shape, b.shape);
+    }
+    let (av, bv) = (a.as_f32()?, b.as_f32()?);
+    Ok(av
+        .iter()
+        .zip(bv.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max))
+}
+
+/// Approximate equality within `tol` (used by integration tests).
+pub fn allclose(a: &HostTensor, b: &HostTensor, tol: f32) -> bool {
+    matches!(max_abs_diff(a, b), Ok(d) if d <= tol)
+}
+
+/// L2 norm of the payload.
+pub fn l2_norm(t: &HostTensor) -> Result<f32> {
+    Ok(t.as_f32()?.iter().map(|x| x * x).sum::<f32>().sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(name: &str, data: Vec<f32>) -> HostTensor {
+        let n = data.len();
+        HostTensor::f32(name, vec![n], data)
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let src = t("s", vec![1.0, 2.0]);
+        let mut dst = t("d", vec![10.0, 20.0]);
+        axpy(0.5, &src, &mut dst).unwrap();
+        assert_eq!(dst.as_f32().unwrap(), &[10.5, 21.0]);
+    }
+
+    #[test]
+    fn axpy_rejects_shape_mismatch() {
+        let src = t("s", vec![1.0]);
+        let mut dst = t("d", vec![1.0, 2.0]);
+        assert!(axpy(1.0, &src, &mut dst).is_err());
+    }
+
+    #[test]
+    fn weighted_sum_is_convex_combination() {
+        let a = t("a", vec![0.0, 10.0]);
+        let b = t("b", vec![10.0, 0.0]);
+        let out = weighted_sum(&[(0.25, &a), (0.75, &b)]).unwrap();
+        assert_eq!(out.as_f32().unwrap(), &[7.5, 2.5]);
+    }
+
+    #[test]
+    fn weighted_sum_identity_with_single_weight_one() {
+        let a = t("a", vec![3.0, -1.0, 2.0]);
+        let out = weighted_sum(&[(1.0, &a)]).unwrap();
+        assert_eq!(out.as_f32().unwrap(), a.as_f32().unwrap());
+    }
+
+    #[test]
+    fn allclose_tolerates() {
+        let a = t("a", vec![1.0]);
+        let b = t("b", vec![1.0005]);
+        assert!(allclose(&a, &b, 1e-3));
+        assert!(!allclose(&a, &b, 1e-5));
+    }
+
+    #[test]
+    fn l2_norm_works() {
+        let a = t("a", vec![3.0, 4.0]);
+        assert!((l2_norm(&a).unwrap() - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,170 @@
+//! Reader for `artifacts/<config>/params.bin` — the initial "pretrained"
+//! checkpoint emitted by `python/compile/aot.py` (format documented in
+//! python/compile/packing.py).
+
+use super::{HostTensor, TensorData};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SFLP";
+const VERSION: u32 = 1;
+const DTYPE_F32: u8 = 0;
+const DTYPE_I32: u8 = 1;
+
+/// An ordered, name-indexed collection of tensors loaded from params.bin.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    order: Vec<String>,
+    by_name: HashMap<String, HostTensor>,
+}
+
+impl ParamStore {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut fh = std::fs::File::open(path)
+            .with_context(|| format!("opening params.bin at {}", path.display()))?;
+        let mut buf = Vec::new();
+        fh.read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("params.bin truncated at offset {}", *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad params.bin magic");
+        }
+        let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported params.bin version {version}");
+        }
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+
+        let mut order = Vec::with_capacity(count);
+        let mut by_name = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())
+                .context("tensor name is not utf8")?;
+            let dt = take(&mut pos, 1)?[0];
+            let ndim = take(&mut pos, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+            }
+            let numel: usize = if ndim == 0 { 1 } else { shape.iter().product() };
+            let raw = take(&mut pos, numel * 4)?;
+            let data = match dt {
+                DTYPE_F32 => TensorData::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                DTYPE_I32 => TensorData::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                other => bail!("unknown dtype tag {other} for {name}"),
+            };
+            order.push(name.clone());
+            by_name.insert(name.clone(), HostTensor { name, shape, data });
+        }
+        Ok(Self { order, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor {name} not in params.bin"))
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Total parameter count across all tensors.
+    pub fn total_params(&self) -> usize {
+        self.by_name.values().map(|t| t.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bin() -> Vec<u8> {
+        // magic | version | count=2
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&VERSION.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "a": f32 [2, 2]
+        b.extend_from_slice(&(1u16).to_le_bytes());
+        b.push(b'a');
+        b.push(DTYPE_F32);
+        b.push(2);
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        // tensor "b": i32 scalar
+        b.extend_from_slice(&(1u16).to_le_bytes());
+        b.push(b'b');
+        b.push(DTYPE_I32);
+        b.push(0);
+        b.extend_from_slice(&7i32.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let store = ParamStore::parse(&sample_bin()).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.names(), &["a".to_string(), "b".to_string()]);
+        let a = store.get("a").unwrap();
+        assert_eq!(a.shape, vec![2, 2]);
+        assert_eq!(a.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        let b = store.get("b").unwrap();
+        assert_eq!(b.shape, Vec::<usize>::new());
+        assert_eq!(b.as_i32().unwrap(), &[7]);
+        assert_eq!(store.total_params(), 5);
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let bin = sample_bin();
+        assert!(ParamStore::parse(&bin[..bin.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_is_detected() {
+        let mut bin = sample_bin();
+        bin[0] = b'X';
+        assert!(ParamStore::parse(&bin).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let store = ParamStore::parse(&sample_bin()).unwrap();
+        assert!(store.get("nope").is_err());
+    }
+}

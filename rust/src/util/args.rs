@@ -1,0 +1,112 @@
+//! Minimal CLI argument parser: `prog [--flag value]... subcommand
+//! [--flag value]...`.  Flags may appear before or after the subcommand;
+//! `--flag=value` and boolean `--flag` forms are both accepted.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    /// Positional (non-flag) arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse() -> Result<Self> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(t) => Ok(Some(t)),
+                Err(e) => bail!("invalid value {v:?} for --{key}: {e}"),
+            },
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("--config small table1 --max-rounds 30");
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.get("config"), Some("small"));
+        assert_eq!(a.get_parse::<usize>("max-rounds").unwrap(), Some(30));
+    }
+
+    #[test]
+    fn equals_form_and_bool_flags() {
+        let a = parse("run --scheme=sl --quiet");
+        assert_eq!(a.get("scheme"), Some("sl"));
+        assert!(a.has("quiet"));
+        assert_eq!(a.get("quiet"), Some("true"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("run extra1 extra2");
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn bad_parse_reports_flag_name() {
+        let a = parse("--n notanumber x");
+        let err = a.get_parse::<usize>("n").unwrap_err().to_string();
+        assert!(err.contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn missing_flag_is_none_and_default_works() {
+        let a = parse("run");
+        assert_eq!(a.get("nope"), None);
+        assert_eq!(a.get_or("nope", "dflt"), "dflt");
+    }
+}

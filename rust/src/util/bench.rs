@@ -1,0 +1,74 @@
+//! Micro-bench harness (criterion stand-in; this workspace builds
+//! offline).  Runs warmup + timed iterations, reports min/median/mean,
+//! and prints one summary line per benchmark so `cargo bench` output is
+//! grep-able by the EXPERIMENTS.md tooling.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<40} iters={:<5} min={:>12?} median={:>12?} mean={:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let r = BenchResult { name: name.to_string(), iters, min, median, mean };
+    println!("{}", r.report());
+    r
+}
+
+/// Time a single (expensive) run of `f` and report it.
+pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed();
+    println!("bench {name:<40} once={dt:?}");
+    (out, dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut count = 0u64;
+        let r = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7); // 2 warmup + 5 timed
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median && r.median <= r.mean * 2);
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, dt) = bench_once("answer", || 42);
+        assert_eq!(v, 42);
+        assert!(dt.as_nanos() > 0);
+    }
+}

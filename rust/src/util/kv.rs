@@ -1,0 +1,183 @@
+//! Sectioned key=value config format (a TOML subset, parsed in-tree):
+//!
+//! ```text
+//! # comment
+//! scheme = ours
+//! lr = 0.002
+//!
+//! [client]            # repeated sections accumulate into a list
+//! name = Jetson Nano
+//! tflops = 0.472
+//! ```
+//!
+//! Top-level keys land in `root`; each `[section]` header starts a new
+//! entry in `sections[name]`.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct KvTable {
+    map: HashMap<String, String>,
+}
+
+impl KvTable {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing key {key:?}"))
+    }
+
+    pub fn parse<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self.require(key)?;
+        v.parse::<T>().map_err(|e| anyhow::anyhow!("key {key}={v:?}: {e}"))
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| anyhow::anyhow!("key {key}={v:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list of T.
+    pub fn parse_list<T: std::str::FromStr>(&self, key: &str) -> Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self.require(key)?;
+        v.split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<T>()
+                    .map_err(|e| anyhow::anyhow!("key {key} item {s:?}: {e}"))
+            })
+            .collect()
+    }
+
+    pub fn insert(&mut self, key: &str, value: &str) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct KvDocument {
+    pub root: KvTable,
+    pub sections: Vec<(String, KvTable)>,
+}
+
+impl KvDocument {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = KvDocument::default();
+        let mut current: Option<(String, KvTable)> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                if let Some(sec) = current.take() {
+                    doc.sections.push(sec);
+                }
+                current = Some((name.trim().to_string(), KvTable::default()));
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let table = match &mut current {
+                Some((_, t)) => t,
+                None => &mut doc.root,
+            };
+            table.insert(k.trim(), v.trim().trim_matches('"'));
+        }
+        if let Some(sec) = current.take() {
+            doc.sections.push(sec);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn sections_named<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a KvTable> {
+        self.sections.iter().filter(move |(n, _)| n == name).map(|(_, t)| t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # experiment
+        scheme = ours
+        lr = 0.002
+        cuts = 1, 2, 3
+
+        [client]
+        name = "Jetson Nano"
+        tflops = 0.472
+
+        [client]
+        name = M3
+        tflops = 3.533
+    "#;
+
+    #[test]
+    fn parses_root_and_sections() {
+        let doc = KvDocument::parse(SAMPLE).unwrap();
+        assert_eq!(doc.root.get("scheme"), Some("ours"));
+        assert_eq!(doc.root.parse::<f64>("lr").unwrap(), 0.002);
+        assert_eq!(doc.root.parse_list::<usize>("cuts").unwrap(), vec![1, 2, 3]);
+        let clients: Vec<_> = doc.sections_named("client").collect();
+        assert_eq!(clients.len(), 2);
+        assert_eq!(clients[0].get("name"), Some("Jetson Nano"));
+        assert_eq!(clients[1].parse::<f64>("tflops").unwrap(), 3.533);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = KvDocument::parse("# only a comment\n\n  \n").unwrap();
+        assert!(doc.root.is_empty());
+        assert!(doc.sections.is_empty());
+    }
+
+    #[test]
+    fn missing_equals_is_an_error_with_lineno() {
+        let err = KvDocument::parse("a = 1\nbroken line\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn unterminated_section_rejected() {
+        assert!(KvDocument::parse("[client\n").is_err());
+    }
+
+    #[test]
+    fn parse_or_defaults() {
+        let doc = KvDocument::parse("x = 5").unwrap();
+        assert_eq!(doc.root.parse_or::<u32>("x", 1).unwrap(), 5);
+        assert_eq!(doc.root.parse_or::<u32>("y", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree substrates that would normally come from crates.io — this
+//! workspace builds fully offline, so the CLI parser, the sectioned
+//! key=value config format, the micro-bench harness, and the
+//! property-testing runner are implemented here from scratch.
+
+pub mod args;
+pub mod bench;
+pub mod kv;
+pub mod propcheck;

@@ -1,0 +1,77 @@
+//! Tiny property-testing runner (proptest stand-in; offline build).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from
+//! `gen` and asserts `prop`; on failure it reports the failing case and
+//! the draw index so the run is reproducible from the seed.
+
+use crate::tensor::rng::Rng;
+
+/// Run a property over `cases` generated inputs. Panics with the failing
+/// input's Debug representation on the first counterexample.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property {name:?} failed at case {i}/{cases} (seed {seed}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience generators.
+pub mod gen {
+    use crate::tensor::rng::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        lo + rng.uniform() * (hi - lo)
+    }
+
+    pub fn vec_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() as f32) * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("sum-commutes", 1, 50, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            n += 1;
+            a + b == b + a
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-small\" failed")]
+    fn failing_property_panics_with_input() {
+        check("always-small", 2, 100, |r| r.below(1000), |&x| x < 10);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = crate::tensor::rng::Rng::new(3);
+        for _ in 0..100 {
+            let u = gen::usize_in(&mut rng, 5, 9);
+            assert!((5..=9).contains(&u));
+            let f = gen::f64_in(&mut rng, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        assert_eq!(gen::vec_f32(&mut rng, 7, 0.5).len(), 7);
+    }
+}

@@ -1,0 +1,151 @@
+//! The paper's §V claims, asserted in *shape* against the analytic
+//! models (DESIGN.md experiment index: "§V claims" row).  Absolute
+//! numbers are testbed-dependent; ratios and orderings are the claims.
+
+use sfl::config::ExperimentConfig;
+use sfl::coordinator::scheduler::*;
+use sfl::coordinator::timing;
+use sfl::devices::paper_fleet;
+use sfl::model::{memory, ModelDims};
+
+fn paper_cuts() -> Vec<usize> {
+    paper_fleet().iter().map(|(_, k)| *k).collect()
+}
+
+/// Claim: "our scheme can reduce 79% memory footprint" (vs SFL).
+#[test]
+fn claim_79_percent_memory_reduction_vs_sfl() {
+    let dims = ModelDims::bert_base();
+    let cuts = paper_cuts();
+    let ours = memory::ours_server_memory(&dims, &cuts).total_mb();
+    let sfl = memory::sfl_server_memory(&dims, &cuts).total_mb();
+    let reduction = 1.0 - ours / sfl;
+    // Paper: 79%. Accept 60–90% (shape, not absolutes).
+    assert!(
+        (0.60..0.90).contains(&reduction),
+        "memory reduction vs SFL = {:.1}% (paper: 79%)",
+        reduction * 100.0
+    );
+}
+
+/// Claim: "compared with SL, ... 10% memory cost" (ours ≈ 1.1x SL).
+#[test]
+fn claim_small_memory_overhead_vs_sl() {
+    let dims = ModelDims::bert_base();
+    let cuts = paper_cuts();
+    let ours = memory::ours_server_memory(&dims, &cuts).total_mb();
+    let sl = memory::sl_server_memory(&dims, &cuts).total_mb();
+    let overhead = ours / sl - 1.0;
+    assert!(
+        (-0.05..0.30).contains(&overhead),
+        "memory overhead vs SL = {:.1}% (paper: ~10%)",
+        overhead * 100.0
+    );
+}
+
+/// Claim: "reduces the training time by 40% at the 10% memory cost"
+/// (vs SL) — per-round time ratio under the timing model.
+#[test]
+fn claim_time_reduction_vs_sl() {
+    let cfg = ExperimentConfig::paper();
+    let dims = cfg.timing_dims();
+    let cuts = cfg.resolve_cuts();
+    let steps = 4usize;
+    let (step, _) =
+        timing::ours_step(&dims, &cfg.clients, &cuts, &cfg.server, &mut ProposedScheduler);
+    let ours_round = steps as f64 * step;
+    let sl_round = timing::sl_round(&dims, &cfg.clients, &cuts, &cfg.server, steps);
+    let reduction = 1.0 - ours_round / sl_round;
+    // Paper end-to-end: 41%, but that folds in SL converging in fewer
+    // rounds (89 vs 180). The *per-round* ratio in Table I is
+    // 644s/186s ⇒ a 71% per-round reduction; accept 55–90%. The
+    // end-to-end number (with the convergence detector) is produced by
+    // benches/table1.rs.
+    assert!(
+        (0.55..0.90).contains(&reduction),
+        "per-round time reduction vs SL = {:.1}% (paper per-round: 71%)",
+        reduction * 100.0
+    );
+}
+
+/// Claim: "reduces ... 6% of training time" vs SFL.
+#[test]
+fn claim_time_reduction_vs_sfl() {
+    let cfg = ExperimentConfig::paper();
+    let dims = cfg.timing_dims();
+    let cuts = cfg.resolve_cuts();
+    let (ours, _) =
+        timing::ours_step(&dims, &cfg.clients, &cuts, &cfg.server, &mut ProposedScheduler);
+    let (sfl, _) = timing::sfl_step(&dims, &cfg.clients, &cuts, &cfg.server);
+    let reduction = 1.0 - ours / sfl;
+    // Paper: 6.1%. Accept 1–30%.
+    assert!(
+        (0.01..0.30).contains(&reduction),
+        "time reduction vs SFL = {:.1}% (paper: 6.1%)",
+        reduction * 100.0
+    );
+}
+
+/// Claim (Fig. 2c): proposed scheduling beats WF and FIFO; quantified on
+/// a doubled fleet where arrival diversity separates the policies.
+#[test]
+fn claim_scheduler_beats_baselines() {
+    let cfg = ExperimentConfig::paper();
+    let dims = cfg.timing_dims();
+    let mut clients = Vec::new();
+    let mut cuts = Vec::new();
+    for _ in 0..2 {
+        for (d, k) in paper_fleet() {
+            clients.push(sfl::config::ClientConfig {
+                device: d,
+                cut: Some(k),
+                link: sfl::net::Link::paper_default(),
+            });
+            cuts.push(k);
+        }
+    }
+    let t = |s: &mut dyn Scheduler| timing::ours_step(&dims, &clients, &cuts, &cfg.server, s).0;
+    let proposed = t(&mut ProposedScheduler);
+    let fifo = t(&mut FifoScheduler);
+    let wf = t(&mut WorkloadFirstScheduler);
+    assert!(proposed <= wf + 1e-12, "proposed {proposed} vs wf {wf}");
+    assert!(proposed <= fifo + 1e-12, "proposed {proposed} vs fifo {fifo}");
+    // And strictly better than at least one baseline (paper: 5.5%/6.2%).
+    assert!(
+        proposed < wf - 1e-9 || proposed < fifo - 1e-9,
+        "proposed must strictly beat a baseline: p={proposed} wf={wf} fifo={fifo}"
+    );
+}
+
+/// Claim (§I): the server-side memory of Ours stays nearly flat as the
+/// fleet grows, while SFL scales linearly — the scalability argument.
+#[test]
+fn claim_scalability_in_client_count() {
+    let dims = ModelDims::bert_base();
+    let base_cuts = paper_cuts();
+    let mut big_cuts = base_cuts.clone();
+    for _ in 0..3 {
+        big_cuts.extend_from_slice(&base_cuts);
+    }
+    let ours_growth = memory::ours_server_memory(&dims, &big_cuts).total_mb()
+        / memory::ours_server_memory(&dims, &base_cuts).total_mb();
+    let sfl_growth = memory::sfl_server_memory(&dims, &big_cuts).total_mb()
+        / memory::sfl_server_memory(&dims, &base_cuts).total_mb();
+    assert!(ours_growth < 1.5, "ours grew {ours_growth:.2}x for 4x clients");
+    assert!(sfl_growth > 3.0, "sfl should scale ~linearly, got {sfl_growth:.2}x");
+}
+
+/// Table I absolute ballpark: the accountant lands within ~35% of the
+/// paper's measured MBs for all three schemes (BERT-base, fp32).
+#[test]
+fn claim_table1_absolute_memory_ballpark() {
+    let dims = ModelDims::bert_base();
+    let cuts = paper_cuts();
+    let sl = memory::sl_server_memory(&dims, &cuts).total_mb();
+    let sfl = memory::sfl_server_memory(&dims, &cuts).total_mb();
+    let ours = memory::ours_server_memory(&dims, &cuts).total_mb();
+    let within = |got: f64, paper: f64| (got / paper - 1.0).abs() < 0.35;
+    assert!(within(sl, 1346.85), "SL {sl:.1} vs paper 1346.85");
+    assert!(within(sfl, 7327.90), "SFL {sfl:.1} vs paper 7327.90");
+    assert!(within(ours, 1482.63), "Ours {ours:.1} vs paper 1482.63");
+}

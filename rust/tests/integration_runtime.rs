@@ -1,0 +1,132 @@
+//! Runtime integration: load the mini artifacts through PJRT and verify
+//! the numerics against invariants established by the python test suite
+//! (split == monolithic, LoRA-init no-op, loss decrease).
+//!
+//! Requires `make artifacts` (artifacts/mini). Tests share one engine —
+//! PJRT client startup is expensive.
+
+use sfl::lora::AdapterSet;
+use sfl::runtime::{ClientState, Engine, ServerState};
+use sfl::tensor::rng::Rng;
+use std::path::Path;
+
+fn engine() -> Engine {
+    Engine::load(Path::new("artifacts"), "mini")
+        .expect("artifacts/mini missing — run `make artifacts` first")
+}
+
+fn random_batch(e: &Engine, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let d = e.dims();
+    let mut rng = Rng::new(seed);
+    let tokens = (0..d.batch * d.seq).map(|_| rng.below(d.vocab) as i32).collect();
+    let labels = (0..d.batch).map(|_| rng.below(d.classes) as i32).collect();
+    (tokens, labels)
+}
+
+#[test]
+fn full_runtime_stack() {
+    let e = engine();
+    let dims = e.dims().clone();
+    let full = e.initial_lora().unwrap();
+    let head = e.initial_head().unwrap();
+    let (tokens, labels) = random_batch(&e, 1);
+
+    // --- client_fwd: shapes + finiteness for every cut ---
+    for &k in &dims.cuts {
+        let (clora, _) = full.split_at(k).unwrap();
+        let acts = e.client_fwd(k, &tokens, &clora).unwrap();
+        assert_eq!(acts.shape, vec![dims.batch, dims.seq, dims.hidden]);
+        assert!(acts.as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+
+    // --- split step == monolithic step (the core SFL property, now
+    //     verified *through the rust runtime + HLO artifacts*) ---
+    let k = 2usize;
+    let (clora, slora) = full.split_at(k).unwrap();
+    let cstate = ClientState::fresh(clora);
+    let sstate = ServerState::fresh(slora, head.clone());
+    let lr = 1e-3f32;
+
+    let acts = e.client_fwd(k, &tokens, &cstate.lora).unwrap();
+    let out = e.server_step(k, &acts, &labels, &sstate, lr).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    assert_eq!(out.act_grads.shape, acts.shape);
+    let new_c = e.client_bwd(k, &tokens, &cstate, &out.act_grads, lr).unwrap();
+
+    let full_state = ServerState::fresh(full.clone(), head.clone());
+    let (floss, fstate) = e.full_step(&tokens, &labels, &full_state, lr).unwrap();
+    assert!(
+        (out.loss - floss).abs() < 1e-5,
+        "split loss {} vs full loss {floss}",
+        out.loss
+    );
+    let merged = AdapterSet::join(&new_c.lora, &out.state.lora).unwrap();
+    let diff = merged.max_abs_diff(&fstate.lora).unwrap();
+    assert!(diff < 1e-5, "adapter mismatch {diff}");
+
+    // --- eval: logits shape, loss consistent with initial model ---
+    let (logits, eloss) = e.eval(&tokens, &labels, &full, &head).unwrap();
+    assert_eq!(logits.len(), dims.batch * dims.classes);
+    assert!(eloss.is_finite());
+
+    // --- B=0 LoRA init must be a no-op on the forward function ---
+    let zero = AdapterSet::zeros(&dims, dims.layers);
+    let (logits_zero, _) = e.eval(&tokens, &labels, &zero, &head).unwrap();
+    let max_diff = logits
+        .iter()
+        .zip(logits_zero.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "B=0 adapter changed logits by {max_diff}");
+
+    // --- a few monolithic steps on one batch reduce the loss ---
+    let mut state = ServerState::fresh(full.clone(), head.clone());
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let (loss, next) = e.full_step(&tokens, &labels, &state, 5e-3).unwrap();
+        losses.push(loss);
+        state = next;
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.9),
+        "loss did not decrease: {losses:?}"
+    );
+
+    // --- step counter advanced, Adam state became non-zero ---
+    assert_eq!(state.step, 6);
+    let m_norm: f32 = state.adam.m.iter().map(|t| {
+        t.as_f32().unwrap().iter().map(|x| x.abs()).sum::<f32>()
+    }).sum();
+    assert!(m_norm > 0.0, "Adam moments never updated");
+
+    // --- engine telemetry counted the executions ---
+    assert!(e.exec_count.get() >= 12);
+    assert!(e.bytes_uploaded.get() > 0);
+}
+
+#[test]
+fn warmup_compiles_all_cut_artifacts() {
+    let e = engine();
+    e.warmup(&[1, 2, 3]).unwrap();
+}
+
+#[test]
+fn manifest_rejects_wrong_batch_sizes() {
+    let e = engine();
+    let full = e.initial_lora().unwrap();
+    let (clora, _) = full.split_at(1).unwrap();
+    let err = e.client_fwd(1, &[0i32; 3], &clora);
+    assert!(err.is_err(), "short token buffer must be rejected");
+}
+
+#[test]
+fn determinism_same_inputs_same_loss() {
+    let e = engine();
+    let full = e.initial_lora().unwrap();
+    let head = e.initial_head().unwrap();
+    let (tokens, labels) = random_batch(&e, 7);
+    let s = ServerState::fresh(full, head);
+    let (l1, _) = e.full_step(&tokens, &labels, &s, 1e-3).unwrap();
+    let (l2, _) = e.full_step(&tokens, &labels, &s, 1e-3).unwrap();
+    assert_eq!(l1, l2, "executions must be deterministic");
+}

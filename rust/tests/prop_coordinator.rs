@@ -1,0 +1,236 @@
+//! Property-based tests on coordinator invariants (routing/scheduling,
+//! aggregation, queueing) using the in-tree propcheck runner.
+
+use sfl::coordinator::scheduler::*;
+use sfl::lora::{fedavg, AdapterSet};
+use sfl::model::ModelDims;
+use sfl::simclock::SequentialResource;
+use sfl::tensor::rng::Rng;
+use sfl::util::propcheck::{check, gen};
+
+fn random_jobs(rng: &mut Rng, n: usize) -> Vec<JobInfo> {
+    (0..n)
+        .map(|i| JobInfo {
+            client: i,
+            arrival: gen::f64_in(rng, 0.0, 5.0),
+            server_time: gen::f64_in(rng, 0.1, 4.0),
+            client_bwd_time: gen::f64_in(rng, 0.1, 8.0),
+            bwd_comm_time: gen::f64_in(rng, 0.0, 0.5),
+            n_client_adapters: gen::usize_in(rng, 1, 6),
+            compute_capability: gen::f64_in(rng, 0.2, 4.0),
+        })
+        .collect()
+}
+
+/// Every scheduler always emits a permutation of the client ids.
+#[test]
+fn prop_schedulers_emit_permutations() {
+    for kind in ["proposed", "fifo", "wf", "random"] {
+        check(
+            &format!("{kind}-is-permutation"),
+            11,
+            200,
+            |rng| { let n = gen::usize_in(rng, 1, 12); random_jobs(rng, n) },
+            |jobs| {
+                let mut s: Box<dyn Scheduler> = match kind {
+                    "proposed" => Box::new(ProposedScheduler),
+                    "fifo" => Box::new(FifoScheduler),
+                    "wf" => Box::new(WorkloadFirstScheduler),
+                    _ => Box::new(RandomScheduler::new(3)),
+                };
+                let mut order = s.order(jobs);
+                order.sort_unstable();
+                order == (0..jobs.len()).collect::<Vec<_>>()
+            },
+        );
+    }
+}
+
+/// Makespan is invariant to the *label* of the clients, only their
+/// parameters matter: shuffling job order in the input changes nothing.
+#[test]
+fn prop_makespan_label_invariant() {
+    check(
+        "makespan-label-invariant",
+        13,
+        150,
+        |rng| {
+            let n = gen::usize_in(rng, 2, 8);
+            let jobs = random_jobs(rng, n);
+            let swap = (gen::usize_in(rng, 0, jobs.len() - 1), gen::usize_in(rng, 0, jobs.len() - 1));
+            (jobs, swap)
+        },
+        |(jobs, (i, j))| {
+            let mut shuffled = jobs.clone();
+            shuffled.swap(*i, *j);
+            let order: Vec<usize> = jobs.iter().map(|j| j.client).collect();
+            (makespan(jobs, &order) - makespan(&shuffled, &order)).abs() < 1e-9
+        },
+    );
+}
+
+/// The proposed greedy never loses to random ordering *on average*, and
+/// never beats the brute-force optimum.
+#[test]
+fn prop_proposed_bounded_by_optimum() {
+    check(
+        "proposed-vs-optimum",
+        17,
+        60,
+        |rng| { let n = gen::usize_in(rng, 2, 6); random_jobs(rng, n) },
+        |jobs| {
+            let order = ProposedScheduler.order(jobs);
+            let m = makespan(jobs, &order);
+            let (_, best) = brute_force_best(jobs);
+            m >= best - 1e-9
+        },
+    );
+}
+
+/// With zero arrivals and equal server times, the greedy N_c/C rule *is*
+/// optimal when backward time is proportional to N_c/C (the paper's
+/// modeling assumption in §IV).
+#[test]
+fn prop_proposed_optimal_under_paper_assumptions() {
+    check(
+        "proposed-optimal-paper-model",
+        19,
+        60,
+        |rng| {
+            let n = gen::usize_in(rng, 2, 6);
+            let ts = gen::f64_in(rng, 0.5, 2.0);
+            (0..n)
+                .map(|i| {
+                    let nc = gen::usize_in(rng, 1, 6);
+                    let c = gen::f64_in(rng, 0.2, 4.0);
+                    JobInfo {
+                        client: i,
+                        arrival: 0.0,
+                        server_time: ts,
+                        client_bwd_time: nc as f64 / c,
+                        bwd_comm_time: 0.0,
+                        n_client_adapters: nc,
+                        compute_capability: c,
+                    }
+                })
+                .collect::<Vec<_>>()
+        },
+        |jobs| {
+            let order = ProposedScheduler.order(jobs);
+            let m = makespan(jobs, &order);
+            let (_, best) = brute_force_best(jobs);
+            (m - best).abs() < 1e-9
+        },
+    );
+}
+
+/// FedAvg with weights (w, 1-w) is a convex combination: every element
+/// of the aggregate lies between the per-client extremes.
+#[test]
+fn prop_fedavg_convexity() {
+    let dims = ModelDims::mini();
+    check(
+        "fedavg-convex",
+        23,
+        40,
+        |rng| {
+            let a = AdapterSet::init(&dims, 2, rng.next_u64());
+            let b = AdapterSet::init(&dims, 2, rng.next_u64());
+            let w = gen::f64_in(rng, 0.0, 1.0) as f32;
+            (a, b, w)
+        },
+        |(a, b, w)| {
+            let agg = fedavg(&[(*w, a), (1.0 - *w, b)]).unwrap();
+            for i in 0..4 {
+                let av = a.tensors[i].as_f32().unwrap();
+                let bv = b.tensors[i].as_f32().unwrap();
+                let gv = agg.tensors[i].as_f32().unwrap();
+                for ((x, y), g) in av.iter().zip(bv).zip(gv) {
+                    let (lo, hi) = if x < y { (x, y) } else { (y, x) };
+                    if *g < lo - 1e-5 || *g > hi + 1e-5 {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// split_at(k) then join is the identity for any valid k.
+#[test]
+fn prop_split_join_identity() {
+    let dims = ModelDims::mini();
+    check(
+        "split-join-id",
+        29,
+        40,
+        |rng| {
+            let set = AdapterSet::init(&dims, dims.layers, rng.next_u64());
+            let k = gen::usize_in(rng, 0, dims.layers);
+            (set, k)
+        },
+        |(set, k)| {
+            let (c, s) = set.split_at(*k).unwrap();
+            let joined = AdapterSet::join(&c, &s).unwrap();
+            joined.max_abs_diff(set).unwrap() == 0.0
+        },
+    );
+}
+
+/// Sequential resource: completion times are non-decreasing in admission
+/// order and no job starts before its arrival (eq. 11 sanity).
+#[test]
+fn prop_sequential_resource_ordering() {
+    check(
+        "seq-resource-order",
+        31,
+        150,
+        |rng| {
+            let n = gen::usize_in(rng, 1, 10);
+            (0..n)
+                .map(|_| (gen::f64_in(rng, 0.0, 10.0), gen::f64_in(rng, 0.01, 3.0)))
+                .collect::<Vec<_>>()
+        },
+        |jobs| {
+            let mut r = SequentialResource::default();
+            let mut last_finish = 0.0f64;
+            for &(arrival, dur) in jobs {
+                let (start, finish) = r.admit(arrival, dur);
+                if start < arrival - 1e-12 || finish < last_finish - 1e-12 {
+                    return false;
+                }
+                last_finish = finish;
+            }
+            true
+        },
+    );
+}
+
+/// Aggregate-then-split == split-then-aggregate for any cut and weights
+/// (linearity — the identity that makes heterogeneous aggregation sound).
+#[test]
+fn prop_aggregation_split_commute() {
+    let dims = ModelDims::mini();
+    check(
+        "agg-split-commute",
+        37,
+        30,
+        |rng| {
+            let u1 = AdapterSet::init(&dims, dims.layers, rng.next_u64());
+            let u2 = AdapterSet::init(&dims, dims.layers, rng.next_u64());
+            let w = gen::f64_in(rng, 0.05, 0.95) as f32;
+            let k = gen::usize_in(rng, 1, dims.layers - 1);
+            (u1, u2, w, k)
+        },
+        |(u1, u2, w, k)| {
+            let agg = fedavg(&[(*w, u1), (1.0 - *w, u2)]).unwrap();
+            let (ac, as_) = agg.split_at(*k).unwrap();
+            let (c1, s1) = u1.split_at(*k).unwrap();
+            let (c2, s2) = u2.split_at(*k).unwrap();
+            let ac2 = fedavg(&[(*w, &c1), (1.0 - *w, &c2)]).unwrap();
+            let as2 = fedavg(&[(*w, &s1), (1.0 - *w, &s2)]).unwrap();
+            ac.max_abs_diff(&ac2).unwrap() < 1e-6 && as_.max_abs_diff(&as2).unwrap() < 1e-6
+        },
+    );
+}
