@@ -1,0 +1,31 @@
+# Build entrypoints (see README.md).
+#
+# `artifacts` needs the python env (jax) once; everything else is
+# rust-only.  Tier-1 verify: `make build test`.  Lint gate: `make lint`.
+
+.PHONY: artifacts build test bench lint clean
+
+# AOT-lower the HLO artifacts + params.bin the runtime executes.
+# Output lands in rust/artifacts/<config>/ (cargo's working directory
+# is rust/, so Engine::load(Path::new("artifacts"), ...) finds it).
+artifacts:
+	cd python && python3 -m compile.aot --config mini,small --outdir ../rust/artifacts
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+# Hot-path micro-benches; writes rust/BENCH_hotpath.json (name → median
+# ns) next to the grep-able `bench ...` lines (EXPERIMENTS.md §Perf).
+bench:
+	cd rust && cargo bench --bench hotpath
+
+# Format + clippy gate (CI tier-1 companion).
+lint:
+	cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
+
+clean:
+	cd rust && cargo clean
+	rm -f rust/BENCH_hotpath.json

@@ -40,7 +40,7 @@ fn main() -> Result<()> {
     for scheme in [SchemeKind::Sl, SchemeKind::Sfl, SchemeKind::Ours] {
         let mut c = cfg.clone();
         c.scheme = scheme;
-        let trainer = Trainer::new(&engine, &c)?;
+        let mut trainer = Trainer::new(&engine, &c)?;
         println!("=== {scheme} ===");
         let r = trainer.run(false)?;
         println!("{}\n", telemetry::summary(&scheme.to_string(), &r));

@@ -31,7 +31,7 @@ fn main() -> Result<()> {
     cfg.train.lr = 5e-3;
 
     // 3. Train.
-    let trainer = Trainer::new(&engine, &cfg)?;
+    let mut trainer = Trainer::new(&engine, &cfg)?;
     println!("cut assignment: {:?}", trainer.cuts());
     let result = trainer.run(false)?;
 

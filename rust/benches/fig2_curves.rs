@@ -41,7 +41,7 @@ fn main() {
         let mut c = cfg.clone();
         c.scheme = scheme;
         c.scheduler = sched;
-        let trainer = Trainer::new(&engine, &c).unwrap();
+        let mut trainer = Trainer::new(&engine, &c).unwrap();
         let (r, _) = bench_once(&format!("fig2/{name}"), || trainer.run(true).unwrap());
         results.push((name, r));
     }

@@ -1,91 +1,221 @@
-//! L3 hot-path micro-benches (the §Perf profile targets): literal
-//! marshaling, adapter split/join/FedAvg, per-call PJRT latency for
-//! every artifact, and the event-queue/scheduler substrate.
+//! L3 hot-path micro-benches (the §Perf profile targets): adapter
+//! split/join/FedAvg (in-place vs allocating), literal marshaling,
+//! per-call PJRT latency for every artifact, and the event-queue/
+//! scheduler substrate.
 //!
 //!     cargo bench --bench hotpath
+//!
+//! The tracked names (`lora/split_at`, `lora/join`,
+//! `lora/fedavg-6-clients`) bench the *current hot-path
+//! implementation* — view-based/in-place since the zero-allocation
+//! refactor — and the `*_alloc` companions keep the old allocating
+//! path measured for comparison.  Results are printed as grep-able
+//! lines and written to BENCH_hotpath.json (name → median ns) so the
+//! perf trajectory is tracked across PRs.
+//!
+//! The host-side section needs no artifacts; the PJRT section is
+//! skipped (with a note) when artifacts/mini is missing.
 
-use sfl::config::ExperimentConfig;
-use sfl::coordinator::scheduler::ProposedScheduler;
-use sfl::coordinator::timing;
-use sfl::lora::{fedavg, AdapterSet};
+use sfl::lora::{fedavg, fedavg_into, fedavg_joined_into, AdapterSet};
+use sfl::model::ModelDims;
 use sfl::runtime::{ClientState, Engine, ServerState};
 use sfl::simclock::EventQueue;
-use sfl::tensor::rng::Rng;
-use sfl::util::bench::bench;
+use sfl::tensor::{alloc_count, HostTensor};
+use sfl::util::bench::{bench, BenchResult};
 use std::path::Path;
 
-fn main() {
-    let engine = Engine::load(Path::new("artifacts"), "mini")
-        .expect("run `make artifacts` first");
-    engine.warmup(&[1, 2, 3]).unwrap();
-    let dims = engine.dims().clone();
+/// Engine for the PJRT section, or None (with a note) when the
+/// artifacts are missing or the vendored xla stub is linked.
+fn pjrt_engine() -> Option<Engine> {
+    if !Path::new("artifacts/mini/manifest.txt").exists() {
+        eprintln!("hotpath: artifacts/mini missing — skipping PJRT benches (run `make artifacts`)");
+        return None;
+    }
+    let engine = Engine::load(Path::new("artifacts"), "mini").expect("loading artifacts/mini");
+    if let Err(err) = engine.warmup(&[1, 2, 3]) {
+        let msg = err.to_string();
+        if msg.contains("offline xla stub") {
+            eprintln!(
+                "hotpath: vendored xla stub active — skipping PJRT benches \
+                 (swap in the real `xla` crate, see rust/Cargo.toml)"
+            );
+            return None;
+        }
+        panic!("warmup(artifacts/mini) failed: {msg}");
+    }
+    Some(engine)
+}
 
-    // --- host-side adapter ops (aggregation path) ---
-    let full = engine.initial_lora().unwrap();
-    bench("lora/split_at", 10, 500, || {
+fn write_json(results: &[BenchResult]) {
+    let mut json = String::from("{\n");
+    for (i, r) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        json.push_str(&format!(
+            "  \"{}\": {}{comma}\n",
+            r.name,
+            r.median.as_nanos()
+        ));
+    }
+    json.push_str("}\n");
+    let path = "BENCH_hotpath.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path} ({} entries)", results.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let dims = ModelDims::mini();
+
+    // --- host-side adapter ops (aggregation path; no artifacts) ---
+    let full = AdapterSet::init(&dims, dims.layers, 1);
+
+    // Hot-path split: O(1) views (tracked name).
+    results.push(bench("lora/split_at", 10, 500, || {
+        let _ = full.split_at_views(2).unwrap();
+    }));
+    // Old allocating split, kept for comparison.
+    results.push(bench("lora/split_at_alloc", 10, 500, || {
         let _ = full.split_at(2).unwrap();
-    });
+    }));
+
     let (c2, s2) = full.split_at(2).unwrap();
-    bench("lora/join", 10, 500, || {
+    // Hot-path join: writes into a preallocated full set (tracked name).
+    let mut joined = AdapterSet::zeros(&dims, dims.layers);
+    results.push(bench("lora/join", 10, 500, || {
+        AdapterSet::join_into(&c2, &s2, &mut joined).unwrap();
+    }));
+    results.push(bench("lora/join_alloc", 10, 500, || {
         let _ = AdapterSet::join(&c2, &s2).unwrap();
-    });
+    }));
+
     let sets: Vec<AdapterSet> =
         (0..6).map(|i| AdapterSet::init(&dims, dims.layers, i)).collect();
     let w = 1.0 / 6.0f32;
-    bench("lora/fedavg-6-clients", 10, 200, || {
+    // Hot-path FedAvg: fused single pass into scratch (tracked name).
+    let pairs: Vec<(f32, &AdapterSet)> = sets.iter().map(|s| (w, s)).collect();
+    let mut agg = AdapterSet::zeros(&dims, dims.layers);
+    results.push(bench("lora/fedavg-6-clients", 10, 200, || {
+        fedavg_into(&pairs, &mut agg).unwrap();
+    }));
+    results.push(bench("lora/fedavg-6-clients-alloc", 10, 200, || {
         let pairs: Vec<(f32, &AdapterSet)> = sets.iter().map(|s| (w, s)).collect();
         let _ = fedavg(&pairs).unwrap();
-    });
+    }));
 
-    // --- PJRT per-call latency, every artifact kind ---
-    let mut rng = Rng::new(5);
-    let tokens: Vec<i32> =
-        (0..dims.batch * dims.seq).map(|_| rng.below(dims.vocab) as i32).collect();
-    let labels: Vec<i32> = (0..dims.batch).map(|_| rng.below(dims.classes) as i32).collect();
-    let head = engine.initial_head().unwrap();
+    // Fused heterogeneous aggregation (what Trainer::aggregate runs):
+    // mixed cuts, halves scattered straight into the aggregate.
+    let halves: Vec<(AdapterSet, AdapterSet)> = sets
+        .iter()
+        .enumerate()
+        .map(|(i, s)| s.split_at(1 + i % 3).unwrap())
+        .collect();
+    let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
+        halves.iter().map(|(c, s)| (w, c, s)).collect();
+    results.push(bench("lora/fedavg-joined-6-clients", 10, 200, || {
+        fedavg_joined_into(&contribs, &mut agg).unwrap();
+    }));
 
-    for k in [1usize, 2, 3] {
-        let (clora, slora) = full.split_at(k).unwrap();
-        let cstate = ClientState::fresh(clora);
-        let sstate = ServerState::fresh(slora, head.clone());
-        bench(&format!("pjrt/client_fwd_{k}"), 3, 20, || {
-            let _ = engine.client_fwd(k, &tokens, &cstate.lora).unwrap();
-        });
-        let acts = engine.client_fwd(k, &tokens, &cstate.lora).unwrap();
-        bench(&format!("pjrt/server_step_{k}"), 3, 20, || {
-            let _ = engine.server_step(k, &acts, &labels, &sstate, 1e-3).unwrap();
-        });
-        let out = engine.server_step(k, &acts, &labels, &sstate, 1e-3).unwrap();
-        bench(&format!("pjrt/client_bwd_{k}"), 3, 20, || {
-            let _ = engine.client_bwd(k, &tokens, &cstate, &out.act_grads, 1e-3).unwrap();
-        });
+    // The in-place suite must not allocate a single HostTensor.
+    {
+        let before = alloc_count();
+        let _ = full.split_at_views(2).unwrap();
+        AdapterSet::join_into(&c2, &s2, &mut joined).unwrap();
+        fedavg_into(&pairs, &mut agg).unwrap();
+        fedavg_joined_into(&contribs, &mut agg).unwrap();
+        let after = alloc_count();
+        assert_eq!(after, before, "in-place hot path allocated {} HostTensors", after - before);
+        println!("alloc-check: in-place split/join/fedavg suite → 0 HostTensor allocations");
     }
-    bench("pjrt/eval", 3, 20, || {
-        let _ = engine.eval(&tokens, &labels, &full, &head).unwrap();
-    });
-    let fstate = ServerState::fresh(full.clone(), head.clone());
-    bench("pjrt/full_step", 3, 20, || {
-        let _ = engine.full_step(&tokens, &labels, &fstate, 1e-3).unwrap();
-    });
+
+    // --- marshaling substrate: payload byte views ---
+    let big = HostTensor::zeros("m", vec![64, 64, 16]);
+    results.push(bench("tensor/payload_bytes", 10, 1000, || {
+        let _ = std::hint::black_box(big.payload_bytes());
+    }));
+    results.push(bench("tensor/to_le_bytes_alloc", 5, 100, || {
+        let _ = std::hint::black_box(big.to_le_bytes());
+    }));
+
+    // --- PJRT per-call latency, every artifact kind (needs artifacts
+    //     AND the real `xla` crate — the vendored stub cannot compile) ---
+    if let Some(engine) = pjrt_engine() {
+        let dims = engine.dims().clone();
+        let full = engine.initial_lora().unwrap();
+
+        let mut rng = sfl::tensor::rng::Rng::new(5);
+        let tokens: Vec<i32> =
+            (0..dims.batch * dims.seq).map(|_| rng.below(dims.vocab) as i32).collect();
+        let labels: Vec<i32> =
+            (0..dims.batch).map(|_| rng.below(dims.classes) as i32).collect();
+        let head = engine.initial_head().unwrap();
+
+        let mut acts_buf =
+            HostTensor::zeros("acts", vec![dims.batch, dims.seq, dims.hidden]);
+        let mut grads_buf =
+            HostTensor::zeros("act_grads", vec![dims.batch, dims.seq, dims.hidden]);
+        for k in [1usize, 2, 3] {
+            let (clora, slora) = full.split_at(k).unwrap();
+            let cstate = ClientState::fresh(clora);
+            let sstate = ServerState::fresh(slora, head.clone());
+            results.push(bench(&format!("pjrt/client_fwd_{k}"), 3, 20, || {
+                engine
+                    .client_fwd_into(k, &tokens, &cstate.lora, &mut acts_buf)
+                    .unwrap();
+            }));
+            let acts = engine.client_fwd(k, &tokens, &cstate.lora).unwrap();
+            let mut s_inplace = sstate.clone();
+            results.push(bench(&format!("pjrt/server_step_{k}"), 3, 20, || {
+                let _ = engine
+                    .server_step_into(k, &acts, &labels, &mut s_inplace, &mut grads_buf, 1e-3)
+                    .unwrap();
+            }));
+            results.push(bench(&format!("pjrt/server_step_{k}_alloc"), 3, 20, || {
+                let _ = engine.server_step(k, &acts, &labels, &sstate, 1e-3).unwrap();
+            }));
+            let out = engine.server_step(k, &acts, &labels, &sstate, 1e-3).unwrap();
+            let mut c_inplace = cstate.clone();
+            results.push(bench(&format!("pjrt/client_bwd_{k}"), 3, 20, || {
+                engine
+                    .client_bwd_into(k, &tokens, &mut c_inplace, &out.act_grads, 1e-3)
+                    .unwrap();
+            }));
+        }
+        results.push(bench("pjrt/eval", 3, 20, || {
+            let _ = engine.eval(&tokens, &labels, &full, &head).unwrap();
+        }));
+        let fstate = ServerState::fresh(full.clone(), head.clone());
+        results.push(bench("pjrt/full_step", 3, 20, || {
+            let _ = engine.full_step(&tokens, &labels, &fstate, 1e-3).unwrap();
+        }));
+        println!(
+            "telemetry: execs={} staged-bytes={}",
+            engine.exec_count(),
+            engine.bytes_uploaded()
+        );
+    }
 
     // --- coordinator substrate ---
-    let cfg = ExperimentConfig::paper();
-    let tdims = cfg.timing_dims();
-    let cuts = cfg.resolve_cuts();
-    bench("timing/ours_step-6-clients", 10, 1000, || {
-        let _ = timing::ours_step(&tdims, &cfg.clients, &cuts, &cfg.server, &mut ProposedScheduler);
-    });
-    bench("simclock/10k-events", 2, 50, || {
-        let mut q = EventQueue::new();
-        for i in 0..10_000u32 {
-            q.schedule_in((i % 97) as f64 * 0.01, i);
-        }
-        while q.next().is_some() {}
-    });
+    {
+        use sfl::config::ExperimentConfig;
+        use sfl::coordinator::scheduler::ProposedScheduler;
+        use sfl::coordinator::timing;
+        let cfg = ExperimentConfig::paper();
+        let tdims = cfg.timing_dims();
+        let cuts = cfg.resolve_cuts();
+        results.push(bench("timing/ours_step-6-clients", 10, 1000, || {
+            let _ =
+                timing::ours_step(&tdims, &cfg.clients, &cuts, &cfg.server, &mut ProposedScheduler);
+        }));
+        results.push(bench("simclock/10k-events", 2, 50, || {
+            let mut q = EventQueue::new();
+            for i in 0..10_000u32 {
+                q.schedule_in((i % 97) as f64 * 0.01, i);
+            }
+            while q.next().is_some() {}
+        }));
+    }
 
-    println!(
-        "\ntelemetry: execs={} staged-bytes={}",
-        engine.exec_count.get(),
-        engine.bytes_uploaded.get()
-    );
+    write_json(&results);
 }

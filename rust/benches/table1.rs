@@ -34,7 +34,7 @@ fn main() {
     for scheme in [SchemeKind::Sl, SchemeKind::Sfl, SchemeKind::Ours] {
         let mut c = cfg.clone();
         c.scheme = scheme;
-        let trainer = Trainer::new(&engine, &c).unwrap();
+        let mut trainer = Trainer::new(&engine, &c).unwrap();
         let (r, _) = bench_once(&format!("table1/{scheme}"), || trainer.run(true).unwrap());
         results.push((scheme.to_string(), r));
     }

@@ -20,12 +20,12 @@ pub mod timing;
 
 use crate::config::{ExperimentConfig, SchemeKind};
 use crate::data::{self, BatchIter, Dataset};
-use crate::lora::{fedavg, AdapterSet};
+use crate::lora::{fedavg_joined_into, AdapterSet};
 use crate::metrics::{Confusion, ConvergenceDetector, MetricSeries};
 use crate::model::{memory, ModelDims};
 use crate::net::{Message, TrafficMeter};
 use crate::runtime::{ClientState, Engine, HeadState, ServerState};
-use crate::tensor::{ops, rng::Rng};
+use crate::tensor::{ops, rng::Rng, HostTensor};
 use anyhow::Result;
 use scheduler::make_scheduler;
 
@@ -68,6 +68,46 @@ impl RunResult {
     }
 }
 
+/// Preallocated working buffers for the training loop — the per-round
+/// scratch arena.  Allocated once in [`Trainer::new`]; at steady state
+/// every round (client forwards, server steps, client backwards,
+/// aggregation, evaluation) reuses these buffers and performs zero
+/// `HostTensor` allocations (asserted by tests/benches via
+/// `tensor::alloc_count`).
+#[derive(Debug)]
+struct RoundScratch {
+    /// Full-depth aggregate target (eqs. 5–7) + aggregated head —
+    /// shared by `aggregate` and `global_model_into` (their uses never
+    /// overlap).
+    agg_full: AdapterSet,
+    head: HeadState,
+    /// Activations / activation-gradient buffers ([B, L, H]).
+    acts: HostTensor,
+    act_grads: HostTensor,
+    /// Flat batch buffers ([B*L] tokens, [B] labels).
+    tokens: Vec<i32>,
+    labels: Vec<i32>,
+    /// Participant membership mask (reused every aggregation).
+    mask: Vec<bool>,
+}
+
+impl Default for RoundScratch {
+    fn default() -> Self {
+        Self {
+            agg_full: AdapterSet { layers: 0, tensors: Vec::new() },
+            head: HeadState {
+                w: HostTensor::zeros("head.w", vec![0]),
+                b: HostTensor::zeros("head.b", vec![0]),
+            },
+            acts: HostTensor::zeros("acts", vec![0]),
+            act_grads: HostTensor::zeros("act_grads", vec![0]),
+            tokens: Vec::new(),
+            labels: Vec::new(),
+            mask: Vec::new(),
+        }
+    }
+}
+
 /// The experiment driver. Holds per-client data iterators and training
 /// state; `run()` executes one scheme to convergence.
 pub struct Trainer<'e> {
@@ -79,6 +119,7 @@ pub struct Trainer<'e> {
     ds: Dataset,
     shards: Vec<Vec<usize>>,
     weights: Vec<f32>,
+    scratch: RoundScratch,
 }
 
 impl<'e> Trainer<'e> {
@@ -102,7 +143,31 @@ impl<'e> Trainer<'e> {
         let total: usize = shards.iter().map(|s| s.len()).sum();
         let weights: Vec<f32> =
             shards.iter().map(|s| s.len() as f32 / total as f32).collect();
-        Ok(Self { engine, cfg: cfg.clone(), dims_exec, dims_time, cuts, ds, shards, weights })
+        let head0 = engine.initial_head()?;
+        let acts_shape = vec![dims_exec.batch, dims_exec.seq, dims_exec.hidden];
+        let scratch = RoundScratch {
+            agg_full: AdapterSet::zeros(&dims_exec, dims_exec.layers),
+            head: HeadState {
+                w: HostTensor::zeros(head0.w.name.clone(), head0.w.shape.clone()),
+                b: HostTensor::zeros(head0.b.name.clone(), head0.b.shape.clone()),
+            },
+            acts: HostTensor::zeros("acts", acts_shape.clone()),
+            act_grads: HostTensor::zeros("act_grads", acts_shape),
+            tokens: Vec::with_capacity(dims_exec.batch * dims_exec.seq),
+            labels: Vec::with_capacity(dims_exec.batch),
+            mask: vec![false; cuts.len()],
+        };
+        Ok(Self {
+            engine,
+            cfg: cfg.clone(),
+            dims_exec,
+            dims_time,
+            cuts,
+            ds,
+            shards,
+            weights,
+            scratch,
+        })
     }
 
     pub fn cuts(&self) -> &[usize] {
@@ -127,37 +192,43 @@ impl<'e> Trainer<'e> {
     }
 
     /// Data-weighted global model (eqs. 5–8 evaluated without replacing
-    /// per-client state): the model whose accuracy/F1 we track.
-    fn global_model(
+    /// per-client state), computed into the scratch arena: the model
+    /// whose accuracy/F1 we track.  Fused aggregation — the per-client
+    /// joins of eq. (5) are scattered straight into the full-depth
+    /// scratch set, so no tensors are allocated.
+    fn global_model_into(
         &self,
         clients: &[ClientState],
         servers: &[ServerState],
-    ) -> Result<(AdapterSet, HeadState)> {
-        let fulls: Vec<AdapterSet> = clients
+        scratch: &mut RoundScratch,
+    ) -> Result<()> {
+        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> = self
+            .weights
             .iter()
-            .zip(servers.iter())
-            .map(|(c, s)| AdapterSet::join(&c.lora, &s.lora))
-            .collect::<Result<Vec<_>>>()?;
-        let pairs: Vec<(f32, &AdapterSet)> =
-            self.weights.iter().copied().zip(fulls.iter()).collect();
-        let agg = fedavg(&pairs)?;
-        let head_w = ops::weighted_sum(
+            .copied()
+            .zip(clients.iter().zip(servers.iter()))
+            .map(|(w, (c, s))| (w, &c.lora, &s.lora))
+            .collect();
+        fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
+        ops::weighted_sum_into(
             &self
                 .weights
                 .iter()
                 .copied()
                 .zip(servers.iter().map(|s| &s.head.w))
                 .collect::<Vec<_>>(),
+            &mut scratch.head.w,
         )?;
-        let head_b = ops::weighted_sum(
+        ops::weighted_sum_into(
             &self
                 .weights
                 .iter()
                 .copied()
                 .zip(servers.iter().map(|s| &s.head.b))
                 .collect::<Vec<_>>(),
+            &mut scratch.head.b,
         )?;
-        Ok((agg, HeadState { w: head_w, b: head_b }))
+        Ok(())
     }
 
     /// Evaluate a model on (up to `eval_batches` of) the test split.
@@ -181,8 +252,11 @@ impl<'e> Trainer<'e> {
         Ok((conf.accuracy(), conf.macro_f1(), loss_sum / n_batches.max(1) as f32))
     }
 
-    /// The FedAvg aggregation phase (paper Alg. 1 lines 17–30): join,
-    /// aggregate A and B separately, re-split at each client's cut.
+    /// The FedAvg aggregation phase (paper Alg. 1 lines 17–30), fused
+    /// and in place: each participant's halves are scattered straight
+    /// into the full-depth scratch aggregate (A and B separately), then
+    /// re-split at each client's cut by copying back into the existing
+    /// per-client state buffers — no joins, no intermediate sets.
     /// Only `participants` contribute weight (failure injection); the
     /// aggregate is still distributed to every client.
     fn aggregate(
@@ -191,55 +265,62 @@ impl<'e> Trainer<'e> {
         servers: &mut [ServerState],
         participants: &[usize],
         traffic: &mut TrafficMeter,
+        scratch: &mut RoundScratch,
     ) -> Result<()> {
         let total: f32 = participants.iter().map(|&u| self.weights[u]).sum();
-        let fulls: Vec<AdapterSet> = participants
+        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> = participants
             .iter()
-            .map(|&u| AdapterSet::join(&clients[u].lora, &servers[u].lora))
-            .collect::<Result<Vec<_>>>()?;
-        let pairs: Vec<(f32, &AdapterSet)> = participants
-            .iter()
-            .zip(fulls.iter())
-            .map(|(&u, f)| (self.weights[u] / total, f))
+            .map(|&u| (self.weights[u] / total, &clients[u].lora, &servers[u].lora))
             .collect();
-        let agg = fedavg(&pairs)?;
-        let head_pairs_w: Vec<(f32, &crate::tensor::HostTensor)> = participants
+        fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
+        let head_pairs_w: Vec<(f32, &HostTensor)> = participants
             .iter()
             .map(|&u| (self.weights[u] / total, &servers[u].head.w))
             .collect();
-        let head_pairs_b: Vec<(f32, &crate::tensor::HostTensor)> = participants
+        ops::weighted_sum_into(&head_pairs_w, &mut scratch.head.w)?;
+        let head_pairs_b: Vec<(f32, &HostTensor)> = participants
             .iter()
             .map(|&u| (self.weights[u] / total, &servers[u].head.b))
             .collect();
-        let head = HeadState {
-            w: ops::weighted_sum(&head_pairs_w)?,
-            b: ops::weighted_sum(&head_pairs_b)?,
-        };
+        ops::weighted_sum_into(&head_pairs_b, &mut scratch.head.b)?;
+        // O(n) membership mask (was an O(n²) `contains` scan per round).
+        scratch.mask.iter_mut().for_each(|m| *m = false);
+        for &u in participants {
+            scratch.mask[u] = true;
+        }
         for (u, &k) in self.cuts.iter().enumerate() {
-            if participants.contains(&u) {
+            if scratch.mask[u] {
                 traffic.record(&Message::LoraUpload { bytes: self.dims_time.lora_bytes(k) });
             }
-            let (c, s) = agg.split_at(k)?;
-            clients[u].lora = c;
-            servers[u].lora = s;
-            servers[u].head = head.clone();
+            scratch.agg_full.split_into(k, &mut clients[u].lora, &mut servers[u].lora)?;
+            ops::copy_from(&mut servers[u].head.w, &scratch.head.w)?;
+            ops::copy_from(&mut servers[u].head.b, &scratch.head.b)?;
             traffic.record(&Message::LoraDownload { bytes: self.dims_time.lora_bytes(k) });
         }
         Ok(())
     }
 
     /// Run the configured scheme to convergence. `quiet` suppresses the
-    /// per-round progress lines.
-    pub fn run(&self, quiet: bool) -> Result<RunResult> {
-        match self.cfg.scheme {
-            SchemeKind::Ours | SchemeKind::Sfl => self.run_parallel(quiet),
+    /// per-round progress lines.  Takes `&mut self` because the run
+    /// reuses the trainer's preallocated scratch arena.
+    pub fn run(&mut self, quiet: bool) -> Result<RunResult> {
+        // Detach the arena for the duration of the run so the hot loop
+        // can borrow it mutably alongside `&self`.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let out = match self.cfg.scheme {
+            SchemeKind::Ours | SchemeKind::Sfl => self.run_parallel(quiet, &mut scratch),
             SchemeKind::Sl => self.run_sl(quiet),
-        }
+        };
+        self.scratch = scratch;
+        out
     }
 
     /// Ours and SFL share numerics (per-client independent split training
     /// + periodic aggregation); they differ in timing and memory.
-    fn run_parallel(&self, quiet: bool) -> Result<RunResult> {
+    /// Steady state is allocation-free: every buffer the inner loop
+    /// touches lives in `scratch` or in the per-client states, updated
+    /// in place.
+    fn run_parallel(&self, quiet: bool, scratch: &mut RoundScratch) -> Result<RunResult> {
         let wall = std::time::Instant::now();
         let t = &self.cfg.train;
         let (mut clients, mut servers) = self.fresh_states()?;
@@ -260,7 +341,7 @@ impl<'e> Trainer<'e> {
         let mut f1_series = MetricSeries::default();
         let (mut final_acc, mut final_f1) = (0.0, 0.0);
 
-        let exec0 = self.engine.exec_count.get();
+        let exec0 = self.engine.exec_count();
         let mut dropout_rng = Rng::new(t.seed ^ 0xD809);
         for round in 1..=t.max_rounds {
             let round_lr = t.lr_schedule.at(t.lr, round);
@@ -303,6 +384,9 @@ impl<'e> Trainer<'e> {
             sim_time += t.steps_per_round as f64 * step_time;
 
             // ---- numeric training: steps_per_round per participant ----
+            // In-place hot loop: batches materialize into reused
+            // buffers, activations/grads land in scratch, and the
+            // client/server states update their own tensors.
             let mut loss_sum = 0.0f32;
             let mut loss_n = 0u32;
             for _ in 0..t.steps_per_round {
@@ -313,9 +397,19 @@ impl<'e> Trainer<'e> {
                     sched.order(&jobs).into_iter().map(|i| participants[i]).collect();
                 for &u in &order {
                     let k = self.cuts[u];
-                    let idx = iters[u].next_batch().to_vec();
-                    let (tokens, labels) = data::materialize_batch(&self.ds, &idx);
-                    let acts = self.engine.client_fwd(k, &tokens, &clients[u].lora)?;
+                    let idx = iters[u].next_batch();
+                    data::materialize_batch_into(
+                        &self.ds,
+                        idx,
+                        &mut scratch.tokens,
+                        &mut scratch.labels,
+                    );
+                    self.engine.client_fwd_into(
+                        k,
+                        &scratch.tokens,
+                        &clients[u].lora,
+                        &mut scratch.acts,
+                    )?;
                     traffic.record(&Message::Activations {
                         bytes: self.dims_time.activation_bytes(),
                     });
@@ -323,16 +417,25 @@ impl<'e> Trainer<'e> {
                         switches += 1;
                         last_active = Some(u);
                     }
-                    let out =
-                        self.engine.server_step(k, &acts, &labels, &servers[u], round_lr)?;
-                    servers[u] = out.state;
+                    let loss = self.engine.server_step_into(
+                        k,
+                        &scratch.acts,
+                        &scratch.labels,
+                        &mut servers[u],
+                        &mut scratch.act_grads,
+                        round_lr,
+                    )?;
                     traffic.record(&Message::ActivationGrads {
                         bytes: self.dims_time.activation_bytes(),
                     });
-                    clients[u] = self
-                        .engine
-                        .client_bwd(k, &tokens, &clients[u], &out.act_grads, round_lr)?;
-                    loss_sum += out.loss;
+                    self.engine.client_bwd_into(
+                        k,
+                        &scratch.tokens,
+                        &mut clients[u],
+                        &scratch.act_grads,
+                        round_lr,
+                    )?;
+                    loss_sum += loss;
                     loss_n += 1;
                 }
             }
@@ -343,13 +446,13 @@ impl<'e> Trainer<'e> {
             if round % t.aggregation_interval == 0 {
                 sim_time +=
                     timing::aggregation_time(&self.dims_time, &part_clients, &part_cuts);
-                self.aggregate(&mut clients, &mut servers, &participants, &mut traffic)?;
+                self.aggregate(&mut clients, &mut servers, &participants, &mut traffic, scratch)?;
             }
 
             // ---- evaluation + convergence ----
             if round % t.eval_interval == 0 {
-                let (lora, head) = self.global_model(&clients, &servers)?;
-                let (acc, f1, _eval_loss) = self.evaluate(&lora, &head)?;
+                self.global_model_into(&clients, &servers, scratch)?;
+                let (acc, f1, _eval_loss) = self.evaluate(&scratch.agg_full, &scratch.head)?;
                 acc_series.push(round, sim_time, acc);
                 f1_series.push(round, sim_time, f1);
                 final_acc = acc;
@@ -384,7 +487,7 @@ impl<'e> Trainer<'e> {
             memory_mb: mem.total_mb(),
             memory: mem,
             adapter_switches: switches,
-            executions: self.engine.exec_count.get() - exec0,
+            executions: self.engine.exec_count() - exec0,
             uplink_bytes: traffic.uplink_bytes,
             downlink_bytes: traffic.downlink_bytes,
             wall_secs: wall.elapsed().as_secs_f64(),
@@ -411,7 +514,7 @@ impl<'e> Trainer<'e> {
         let mut acc_series = MetricSeries::default();
         let mut f1_series = MetricSeries::default();
         let (mut final_acc, mut final_f1) = (0.0, 0.0);
-        let exec0 = self.engine.exec_count.get();
+        let exec0 = self.engine.exec_count();
 
         for round in 1..=t.max_rounds {
             let round_lr = t.lr_schedule.at(t.lr, round);
@@ -483,7 +586,7 @@ impl<'e> Trainer<'e> {
             memory_mb: mem.total_mb(),
             memory: mem,
             adapter_switches: 0,
-            executions: self.engine.exec_count.get() - exec0,
+            executions: self.engine.exec_count() - exec0,
             uplink_bytes: traffic.uplink_bytes,
             downlink_bytes: traffic.downlink_bytes,
             wall_secs: wall.elapsed().as_secs_f64(),

@@ -185,11 +185,25 @@ impl BatchIter {
 pub fn materialize_batch(ds: &Dataset, idx: &[usize]) -> (Vec<i32>, Vec<i32>) {
     let mut tokens = Vec::with_capacity(idx.len() * ds.spec.seq);
     let mut labels = Vec::with_capacity(idx.len());
+    materialize_batch_into(ds, idx, &mut tokens, &mut labels);
+    (tokens, labels)
+}
+
+/// Materialize a batch into caller-owned buffers (cleared, then filled).
+/// The buffers keep their capacity across calls, so the steady-state
+/// training loop never reallocates them.
+pub fn materialize_batch_into(
+    ds: &Dataset,
+    idx: &[usize],
+    tokens: &mut Vec<i32>,
+    labels: &mut Vec<i32>,
+) {
+    tokens.clear();
+    labels.clear();
     for &i in idx {
         tokens.extend_from_slice(&ds.train[i].tokens);
         labels.push(ds.train[i].label);
     }
-    (tokens, labels)
 }
 
 /// Label histogram of a shard (for non-IID diagnostics + tests).
@@ -328,5 +342,20 @@ mod tests {
         assert_eq!(tokens.len(), 2 * 16);
         assert_eq!(labels.len(), 2);
         assert_eq!(&tokens[..16], ds.train[0].tokens.as_slice());
+    }
+
+    #[test]
+    fn materialize_batch_into_reuses_buffers() {
+        let ds = generate(&small_spec());
+        let mut tokens = Vec::with_capacity(2 * 16);
+        let mut labels = Vec::with_capacity(2);
+        materialize_batch_into(&ds, &[0, 1], &mut tokens, &mut labels);
+        let cap = tokens.capacity();
+        let ptr = tokens.as_ptr();
+        materialize_batch_into(&ds, &[2, 3], &mut tokens, &mut labels);
+        assert_eq!(tokens.capacity(), cap, "refill must not grow the buffer");
+        assert_eq!(tokens.as_ptr(), ptr, "refill must not reallocate");
+        assert_eq!(&tokens[..16], ds.train[2].tokens.as_slice());
+        assert_eq!(labels, vec![ds.train[2].label, ds.train[3].label]);
     }
 }

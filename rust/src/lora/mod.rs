@@ -7,11 +7,28 @@
 //! the per-client halves and the full set the aggregator works on.
 
 use crate::model::ModelDims;
-use crate::tensor::{ops, rng::Rng, HostTensor};
+use crate::tensor::{ops, rng::Rng, HostTensor, TensorView};
 use anyhow::{bail, Result};
 
 /// Tensor keys in packing order (mirrors python packing.LORA_KEYS).
 pub const LORA_KEYS: [&str; 4] = ["aq", "bq", "av", "bv"];
+
+/// Borrowed adapter half: O(1) views of the four stacked tensors over a
+/// contiguous layer window.  Splitting at a cut point with views costs
+/// nothing — the aggregation path never materializes the halves.
+#[derive(Debug, Clone, Copy)]
+pub struct AdapterViews<'a> {
+    pub layers: usize,
+    /// In LORA_KEYS order, each a view of rows `[lo, hi)` of the parent.
+    pub tensors: [TensorView<'a>; 4],
+}
+
+impl AdapterViews<'_> {
+    /// Total adapter parameters in the window.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+}
 
 /// LoRA adapters stacked over `layers` consecutive transformer layers.
 #[derive(Debug, Clone, PartialEq)]
@@ -97,6 +114,70 @@ impl AdapterSet {
         ))
     }
 
+    /// O(1) split at `k` into borrowed views: layers [0, k) → client
+    /// half, [k, n) → server half.  The zero-copy counterpart of
+    /// [`AdapterSet::split_at`] (paper eq. 9) used on the aggregation
+    /// path.
+    pub fn split_at_views(&self, k: usize) -> Result<(AdapterViews<'_>, AdapterViews<'_>)> {
+        if k > self.layers {
+            bail!("cut {k} beyond {} layers", self.layers);
+        }
+        let n = self.layers;
+        let client = AdapterViews {
+            layers: k,
+            tensors: [
+                self.tensors[0].view_axis0(0, k)?,
+                self.tensors[1].view_axis0(0, k)?,
+                self.tensors[2].view_axis0(0, k)?,
+                self.tensors[3].view_axis0(0, k)?,
+            ],
+        };
+        let server = AdapterViews {
+            layers: n - k,
+            tensors: [
+                self.tensors[0].view_axis0(k, n)?,
+                self.tensors[1].view_axis0(k, n)?,
+                self.tensors[2].view_axis0(k, n)?,
+                self.tensors[3].view_axis0(k, n)?,
+            ],
+        };
+        Ok((client, server))
+    }
+
+    /// In-place split: copy layers [0, k) into `client` and [k, n) into
+    /// `server`, which must already have the right depths.  Zero
+    /// allocations — this is how the aggregate is redistributed to the
+    /// per-client state buffers.
+    pub fn split_into(&self, k: usize, client: &mut AdapterSet, server: &mut AdapterSet) -> Result<()> {
+        if k > self.layers {
+            bail!("cut {k} beyond {} layers", self.layers);
+        }
+        if client.layers != k || server.layers != self.layers - k {
+            bail!(
+                "split_into depth mismatch: dst ({}, {}) vs cut {k} of {}",
+                client.layers,
+                server.layers,
+                self.layers
+            );
+        }
+        let (cv, sv) = self.split_at_views(k)?;
+        for (dst, src) in client.tensors.iter_mut().zip(cv.tensors.iter()) {
+            let d = dst.as_f32_mut()?;
+            if d.len() != src.data.len() {
+                bail!("split_into width mismatch on {} ({} vs {})", src.name, d.len(), src.data.len());
+            }
+            d.copy_from_slice(src.data);
+        }
+        for (dst, src) in server.tensors.iter_mut().zip(sv.tensors.iter()) {
+            let d = dst.as_f32_mut()?;
+            if d.len() != src.data.len() {
+                bail!("split_into width mismatch on {} ({} vs {})", src.name, d.len(), src.data.len());
+            }
+            d.copy_from_slice(src.data);
+        }
+        Ok(())
+    }
+
     /// Join a client half and a server half back into a full set.
     /// Paper eq. (5): R_f^u = {R_c^u, R_s^u}.
     pub fn join(client: &AdapterSet, server: &AdapterSet) -> Result<AdapterSet> {
@@ -107,6 +188,28 @@ impl AdapterSet {
             .map(|(c, s)| HostTensor::concat_axis0(&[c, s]))
             .collect::<Result<Vec<_>>>()?;
         Ok(AdapterSet { layers: client.layers + server.layers, tensors })
+    }
+
+    /// In-place join: write `{client, server}` into a preallocated full
+    /// set (inverse of `split_into`, zero allocations).
+    pub fn join_into(client: &AdapterSet, server: &AdapterSet, dst: &mut AdapterSet) -> Result<()> {
+        if dst.layers != client.layers + server.layers {
+            bail!(
+                "join_into depth mismatch: dst {} vs {} + {}",
+                dst.layers,
+                client.layers,
+                server.layers
+            );
+        }
+        for ((c, s), d) in client
+            .tensors
+            .iter()
+            .zip(server.tensors.iter())
+            .zip(dst.tensors.iter_mut())
+        {
+            HostTensor::concat_axis0_into(&[c, s], d)?;
+        }
+        Ok(())
     }
 
     /// Total adapter parameters.
@@ -129,27 +232,91 @@ impl AdapterSet {
     }
 }
 
+fn check_weights(total_w: f32) -> Result<()> {
+    if (total_w - 1.0).abs() > 1e-4 {
+        bail!("aggregation weights must sum to 1, got {total_w}");
+    }
+    Ok(())
+}
+
 /// FedAvg over full adapter sets with data-size weights |D_u|/|D| —
 /// paper eqs. (6)–(7): A and B matrices are aggregated *separately*.
 pub fn fedavg(sets: &[(f32, &AdapterSet)]) -> Result<AdapterSet> {
     let (_, first) = sets.first().ok_or_else(|| anyhow::anyhow!("empty aggregation"))?;
-    let total_w: f32 = sets.iter().map(|(w, _)| w).sum();
-    if (total_w - 1.0).abs() > 1e-4 {
-        bail!("aggregation weights must sum to 1, got {total_w}");
-    }
+    let mut out = AdapterSet {
+        layers: first.layers,
+        tensors: first
+            .tensors
+            .iter()
+            .map(|t| HostTensor::zeros(t.name.clone(), t.shape.clone()))
+            .collect(),
+    };
+    fedavg_into(sets, &mut out)?;
+    Ok(out)
+}
+
+/// In-place FedAvg: overwrite `dst` with the weighted aggregate.
+/// Bit-identical to [`fedavg`] with zero tensor allocations — the
+/// coordinator calls this against a scratch set allocated once.
+pub fn fedavg_into(sets: &[(f32, &AdapterSet)], dst: &mut AdapterSet) -> Result<()> {
+    let (_, first) = sets.first().ok_or_else(|| anyhow::anyhow!("empty aggregation"))?;
+    check_weights(sets.iter().map(|(w, _)| w).sum())?;
     let layers = first.layers;
+    if dst.layers != layers {
+        bail!("fedavg_into dst depth {} != {layers}", dst.layers);
+    }
     for (_, s) in sets {
         if s.layers != layers {
             bail!("cannot aggregate adapter sets of differing depth");
         }
     }
-    let mut tensors = Vec::with_capacity(4);
     for i in 0..4 {
         let pairs: Vec<(f32, &HostTensor)> =
             sets.iter().map(|(w, s)| (*w, &s.tensors[i])).collect();
-        tensors.push(ops::weighted_sum(&pairs)?);
+        ops::weighted_sum_into(&pairs, &mut dst.tensors[i])?;
     }
-    Ok(AdapterSet { layers, tensors })
+    Ok(())
+}
+
+/// Fused heterogeneous FedAvg (paper eqs. 5–7 collapsed): each
+/// contributor is a `(weight, client half [0, k_u), server half
+/// [k_u, N))` pair, and the aggregate is accumulated directly into the
+/// full-depth `dst` — the per-client joins of eq. (5) are never
+/// materialized.  Each contributor's halves are scattered into `dst`
+/// via axis-0 views, so the whole aggregation performs zero tensor
+/// allocations and one pass per contributor.
+///
+/// Bit-identical to `fedavg(&[(w, join(c, s)), ...])`: the per-element
+/// accumulation order is the same.
+pub fn fedavg_joined_into(
+    contribs: &[(f32, &AdapterSet, &AdapterSet)],
+    dst: &mut AdapterSet,
+) -> Result<()> {
+    if contribs.is_empty() {
+        bail!("empty aggregation");
+    }
+    check_weights(contribs.iter().map(|(w, _, _)| w).sum())?;
+    for t in dst.tensors.iter_mut() {
+        t.as_f32_mut()?.fill(0.0);
+    }
+    for (w, client, server) in contribs {
+        let k = client.layers;
+        if k + server.layers != dst.layers {
+            bail!(
+                "contributor depth {} + {} != aggregate depth {}",
+                k,
+                server.layers,
+                dst.layers
+            );
+        }
+        for i in 0..4 {
+            let inner: usize = dst.tensors[i].shape[1..].iter().product();
+            let d = dst.tensors[i].as_f32_mut()?;
+            ops::axpy_into(*w, client.tensors[i].as_f32()?, &mut d[..k * inner])?;
+            ops::axpy_into(*w, server.tensors[i].as_f32()?, &mut d[k * inner..])?;
+        }
+    }
+    Ok(())
 }
 
 /// Per-client adapter bookkeeping on the server: the "LoRA adapter
@@ -298,5 +465,98 @@ mod tests {
         let dims = dims();
         let s = AdapterSet::zeros(&dims, 2);
         assert_eq!(s.byte_len(), dims.lora_bytes(2));
+    }
+
+    #[test]
+    fn split_views_match_owned_split() {
+        let full = AdapterSet::init(&dims(), 4, 9);
+        for k in 0..=4 {
+            let (co, so) = full.split_at(k).unwrap();
+            let before = crate::tensor::alloc_count();
+            let (cv, sv) = full.split_at_views(k).unwrap();
+            assert_eq!(crate::tensor::alloc_count(), before, "views must not allocate");
+            assert_eq!(cv.layers, k);
+            assert_eq!(sv.layers, 4 - k);
+            for i in 0..4 {
+                assert_eq!(cv.tensors[i].data, co.tensors[i].as_f32().unwrap());
+                assert_eq!(sv.tensors[i].data, so.tensors[i].as_f32().unwrap());
+            }
+            assert_eq!(cv.param_count() + sv.param_count(), full.param_count());
+        }
+        assert!(full.split_at_views(5).is_err());
+    }
+
+    #[test]
+    fn split_into_join_into_roundtrip_is_alloc_free() {
+        let dims = dims();
+        let full = AdapterSet::init(&dims, 4, 13);
+        let mut client = AdapterSet::zeros(&dims, 1);
+        let mut server = AdapterSet::zeros(&dims, 3);
+        let mut rejoined = AdapterSet::zeros(&dims, 4);
+        let before = crate::tensor::alloc_count();
+        full.split_into(1, &mut client, &mut server).unwrap();
+        AdapterSet::join_into(&client, &server, &mut rejoined).unwrap();
+        assert_eq!(crate::tensor::alloc_count(), before, "in-place split/join must not allocate");
+        assert_eq!(rejoined.max_abs_diff(&full).unwrap(), 0.0);
+        // Depth mismatches are rejected.
+        assert!(full.split_into(2, &mut client, &mut server).is_err());
+        let mut shallow = AdapterSet::zeros(&dims, 3);
+        assert!(AdapterSet::join_into(&client, &server, &mut shallow).is_err());
+    }
+
+    #[test]
+    fn fedavg_into_matches_fedavg_bitwise() {
+        let dims = dims();
+        let a = AdapterSet::init(&dims, 2, 3);
+        let b = AdapterSet::init(&dims, 2, 4);
+        let sets = [(0.25f32, &a), (0.75, &b)];
+        let alloc = fedavg(&sets).unwrap();
+        let mut into = AdapterSet::init(&dims, 2, 5); // garbage dst: must be overwritten
+        fedavg_into(&sets, &mut into).unwrap();
+        assert_eq!(alloc.max_abs_diff(&into).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn fused_join_fedavg_matches_reference_path() {
+        // fedavg_joined_into over (client, server) halves at mixed cuts
+        // must equal join → fedavg bit-for-bit.
+        let dims = dims();
+        let n = dims.layers;
+        let fulls: Vec<AdapterSet> =
+            (0..3).map(|i| AdapterSet::init(&dims, n, 40 + i)).collect();
+        let cuts = [1usize, 2, 3];
+        let halves: Vec<(AdapterSet, AdapterSet)> = fulls
+            .iter()
+            .zip(cuts.iter())
+            .map(|(f, &k)| f.split_at(k).unwrap())
+            .collect();
+        let w = 1.0 / 3.0f32;
+        let reference = {
+            let joined: Vec<AdapterSet> = halves
+                .iter()
+                .map(|(c, s)| AdapterSet::join(c, s).unwrap())
+                .collect();
+            let pairs: Vec<(f32, &AdapterSet)> = joined.iter().map(|j| (w, j)).collect();
+            fedavg(&pairs).unwrap()
+        };
+        let mut fused = AdapterSet::zeros(&dims, n);
+        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
+            halves.iter().map(|(c, s)| (w, c, s)).collect();
+        let before = crate::tensor::alloc_count();
+        fedavg_joined_into(&contribs, &mut fused).unwrap();
+        assert_eq!(crate::tensor::alloc_count(), before, "fused aggregation must not allocate");
+        assert_eq!(fused.max_abs_diff(&reference).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn fused_fedavg_validates_inputs() {
+        let dims = dims();
+        let f = AdapterSet::init(&dims, 4, 1);
+        let (c, s) = f.split_at(2).unwrap();
+        let mut dst = AdapterSet::zeros(&dims, 4);
+        assert!(fedavg_joined_into(&[], &mut dst).is_err());
+        assert!(fedavg_joined_into(&[(0.4, &c, &s)], &mut dst).is_err(), "weights must sum to 1");
+        let mut shallow = AdapterSet::zeros(&dims, 3);
+        assert!(fedavg_joined_into(&[(1.0, &c, &s)], &mut shallow).is_err());
     }
 }

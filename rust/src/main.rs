@@ -53,7 +53,7 @@ fn run_one(
     if let Some(mr) = max_rounds {
         c.train.max_rounds = mr;
     }
-    let trainer = Trainer::new(engine, &c)?;
+    let mut trainer = Trainer::new(engine, &c)?;
     trainer.run(quiet)
 }
 

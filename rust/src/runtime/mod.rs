@@ -18,10 +18,11 @@ use crate::model::ModelDims;
 use crate::tensor::{store::ParamStore, HostTensor, TensorData};
 use anyhow::{bail, Result};
 use manifest::{ArtifactSpec, Manifest, TensorSpec};
-use std::cell::{Cell, RefCell};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Classifier-head trainables.
 #[derive(Debug, Clone, PartialEq)]
@@ -92,6 +93,10 @@ pub struct ServerStepOut {
 }
 
 /// The PJRT execution engine for one artifact config.
+///
+/// The telemetry counters are atomics so the engine carries no
+/// structural single-thread assumption — the only interior mutability
+/// left is the lazily-populated executable cache.
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
@@ -101,9 +106,9 @@ pub struct Engine {
     frozen: Vec<xla::Literal>,
     params: ParamStore,
     /// Executions performed (telemetry).
-    pub exec_count: Cell<u64>,
+    exec_count: AtomicU64,
     /// Cumulative host->device bytes staged per call (telemetry / perf).
-    pub bytes_uploaded: Cell<u64>,
+    bytes_uploaded: AtomicU64,
 }
 
 fn host_to_literal(t: &HostTensor) -> Result<xla::Literal> {
@@ -117,6 +122,16 @@ fn host_to_literal(t: &HostTensor) -> Result<xla::Literal> {
         .map_err(|e| anyhow::anyhow!("literal for {}: {e}", t.name))
 }
 
+/// Scalar f32 literal staged straight from the stack — no `HostTensor`.
+fn scalar_literal(v: f32) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[],
+        crate::tensor::f32_bytes(std::slice::from_ref(&v)),
+    )
+    .map_err(|e| anyhow::anyhow!("scalar literal: {e}"))
+}
+
 fn literal_to_host(spec: &TensorSpec, lit: &xla::Literal) -> Result<HostTensor> {
     if spec.is_i32() {
         let v = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))?;
@@ -125,6 +140,37 @@ fn literal_to_host(spec: &TensorSpec, lit: &xla::Literal) -> Result<HostTensor> 
         let v = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))?;
         Ok(HostTensor::f32(spec.name.clone(), spec.shape.clone(), v))
     }
+}
+
+/// Read an output literal into a preallocated host tensor (shape and
+/// dtype must match the manifest spec) — the zero-`HostTensor` path the
+/// in-place step APIs use.
+fn literal_to_host_into(spec: &TensorSpec, lit: &xla::Literal, dst: &mut HostTensor) -> Result<()> {
+    if dst.numel() != spec.numel() {
+        bail!(
+            "output {}: dst numel {} != spec numel {} (shape {:?})",
+            spec.name,
+            dst.numel(),
+            spec.numel(),
+            spec.shape
+        );
+    }
+    if spec.is_i32() {
+        let v = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))?;
+        match &mut dst.data {
+            TensorData::I32(d) if d.len() == v.len() => d.copy_from_slice(&v),
+            TensorData::I32(d) => bail!("output {}: literal has {} elems, dst {}", spec.name, v.len(), d.len()),
+            TensorData::F32(_) => bail!("output {} is i32 but dst {} is f32", spec.name, dst.name),
+        }
+    } else {
+        let v = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))?;
+        match &mut dst.data {
+            TensorData::F32(d) if d.len() == v.len() => d.copy_from_slice(&v),
+            TensorData::F32(d) => bail!("output {}: literal has {} elems, dst {}", spec.name, v.len(), d.len()),
+            TensorData::I32(_) => bail!("output {} is f32 but dst {} is i32", spec.name, dst.name),
+        }
+    }
+    Ok(())
 }
 
 impl Engine {
@@ -150,13 +196,23 @@ impl Engine {
             exes: RefCell::new(HashMap::new()),
             frozen,
             params,
-            exec_count: Cell::new(0),
-            bytes_uploaded: Cell::new(0),
+            exec_count: AtomicU64::new(0),
+            bytes_uploaded: AtomicU64::new(0),
         })
     }
 
     pub fn dims(&self) -> &ModelDims {
         &self.dims
+    }
+
+    /// Executions performed so far (telemetry).
+    pub fn exec_count(&self) -> u64 {
+        self.exec_count.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative host->device bytes staged so far (telemetry / perf).
+    pub fn bytes_uploaded(&self) -> u64 {
+        self.bytes_uploaded.load(Ordering::Relaxed)
     }
 
     /// Initial full-depth LoRA adapters from the checkpoint.
@@ -242,40 +298,53 @@ impl Engine {
                 spec.outputs.len()
             );
         }
-        self.exec_count.set(self.exec_count.get() + 1);
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
         Ok(parts)
     }
 
+    /// Stage the token batch directly from the caller's buffer — no
+    /// intermediate `HostTensor` (the buffer is reused across steps).
     fn tokens_literal(&self, tokens: &[i32]) -> Result<xla::Literal> {
         let (b, l) = (self.dims.batch, self.dims.seq);
         if tokens.len() != b * l {
             bail!("tokens len {} != {}x{}", tokens.len(), b, l);
         }
-        let t = HostTensor::i32("tokens", vec![b, l], tokens.to_vec());
-        self.bytes_uploaded.set(self.bytes_uploaded.get() + t.byte_len() as u64);
-        host_to_literal(&t)
+        self.bytes_uploaded.fetch_add((tokens.len() * 4) as u64, Ordering::Relaxed);
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &[b, l],
+            crate::tensor::i32_bytes(tokens),
+        )
+        .map_err(|e| anyhow::anyhow!("tokens literal: {e}"))
     }
 
     fn labels_literal(&self, labels: &[i32]) -> Result<xla::Literal> {
         if labels.len() != self.dims.batch {
             bail!("labels len {} != batch {}", labels.len(), self.dims.batch);
         }
-        let t = HostTensor::i32("labels", vec![self.dims.batch], labels.to_vec());
-        host_to_literal(&t)
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &[self.dims.batch],
+            crate::tensor::i32_bytes(labels),
+        )
+        .map_err(|e| anyhow::anyhow!("labels literal: {e}"))
     }
 
     fn upload(&self, t: &HostTensor) -> Result<xla::Literal> {
-        self.bytes_uploaded.set(self.bytes_uploaded.get() + t.byte_len() as u64);
+        self.bytes_uploaded.fetch_add(t.byte_len() as u64, Ordering::Relaxed);
         host_to_literal(t)
     }
 
-    /// Client-side forward (paper eq. 3): tokens → activations at cut k.
-    pub fn client_fwd(
+    /// Client-side forward (paper eq. 3): tokens → activations at cut k,
+    /// written into the caller's preallocated buffer (zero `HostTensor`
+    /// allocations at steady state).
+    pub fn client_fwd_into(
         &self,
         k: usize,
         tokens: &[i32],
         lora: &AdapterSet,
-    ) -> Result<HostTensor> {
+        acts: &mut HostTensor,
+    ) -> Result<()> {
         let name = format!("client_fwd_{k}");
         let spec = self.manifest.artifact(&name)?;
         let mut owned = vec![self.tokens_literal(tokens)?];
@@ -286,19 +355,42 @@ impl Engine {
         args.extend(self.frozen.iter());
         args.extend(owned[1..].iter());
         let outs = self.execute(&name, spec, &args)?;
-        literal_to_host(&spec.outputs[0], &outs[0])
+        literal_to_host_into(&spec.outputs[0], &outs[0], acts)
     }
 
-    /// Server-side fwd+bwd+Adam (paper eq. 4): activations → loss,
-    /// activation grads, updated server state.
-    pub fn server_step(
+    /// Allocating convenience wrapper over [`Engine::client_fwd_into`].
+    pub fn client_fwd(
+        &self,
+        k: usize,
+        tokens: &[i32],
+        lora: &AdapterSet,
+    ) -> Result<HostTensor> {
+        let spec = self.manifest.artifact(&format!("client_fwd_{k}"))?;
+        let out = &spec.outputs[0];
+        let mut acts = HostTensor::zeros(out.name.clone(), out.shape.clone());
+        self.client_fwd_into(k, tokens, lora, &mut acts)?;
+        Ok(acts)
+    }
+
+    /// Server-side fwd+bwd+Adam (paper eq. 4), fully in place: `state`
+    /// (LoRA, head, Adam moments, step counter) is updated in its own
+    /// buffers and the activation gradients land in `act_grads`.
+    /// Returns the loss.  Bit-identical to [`Engine::server_step`] —
+    /// the same artifact executes with the same inputs.
+    ///
+    /// Error contract: if reading the outputs back fails partway,
+    /// `state`/`act_grads` may be left mixed between the old and new
+    /// step — treat them as poisoned and discard (the allocating
+    /// wrapper steps a clone, so its input state is never affected).
+    pub fn server_step_into(
         &self,
         k: usize,
         acts: &HostTensor,
         labels: &[i32],
-        state: &ServerState,
+        state: &mut ServerState,
+        act_grads: &mut HostTensor,
         lr: f32,
-    ) -> Result<ServerStepOut> {
+    ) -> Result<f32> {
         let name = format!("server_step_{k}");
         let spec = self.manifest.artifact(&name)?;
         let step = state.step + 1;
@@ -314,8 +406,8 @@ impl Engine {
         for t in state.adam.m.iter().chain(state.adam.v.iter()) {
             owned.push(self.upload(t)?);
         }
-        owned.push(host_to_literal(&HostTensor::scalar("step", step as f32))?);
-        owned.push(host_to_literal(&HostTensor::scalar("lr", lr))?);
+        owned.push(scalar_literal(step as f32)?);
+        owned.push(scalar_literal(lr)?);
 
         let mut args: Vec<&xla::Literal> = vec![&owned[0], &owned[1]];
         args.extend(self.frozen.iter());
@@ -323,40 +415,54 @@ impl Engine {
         let outs = self.execute(&name, spec, &args)?;
 
         let loss = outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("loss: {e}"))?[0];
-        let act_grads = literal_to_host(&spec.outputs[1], &outs[1])?;
+        literal_to_host_into(&spec.outputs[1], &outs[1], act_grads)?;
         let mut cursor = 2usize;
-        let mut grab = |n: usize| -> Result<Vec<HostTensor>> {
-            let out = (cursor..cursor + n)
-                .map(|i| literal_to_host(&spec.outputs[i], &outs[i]))
-                .collect::<Result<Vec<_>>>()?;
-            cursor += n;
-            Ok(out)
-        };
-        let mut lora_t = grab(4)?;
-        for (t, old) in lora_t.iter_mut().zip(state.lora.tensors.iter()) {
-            t.name = old.name.clone();
+        for t in state.lora.tensors.iter_mut() {
+            literal_to_host_into(&spec.outputs[cursor], &outs[cursor], t)?;
+            cursor += 1;
         }
-        let head_t = grab(2)?;
-        let m = grab(6)?;
-        let v = grab(6)?;
-        let new_state = ServerState {
-            lora: AdapterSet::from_tensors(state.lora.layers, lora_t)?,
-            head: HeadState { w: head_t[0].clone(), b: head_t[1].clone() },
-            adam: AdamState { m, v },
-            step,
-        };
+        literal_to_host_into(&spec.outputs[cursor], &outs[cursor], &mut state.head.w)?;
+        literal_to_host_into(&spec.outputs[cursor + 1], &outs[cursor + 1], &mut state.head.b)?;
+        cursor += 2;
+        for t in state.adam.m.iter_mut().chain(state.adam.v.iter_mut()) {
+            literal_to_host_into(&spec.outputs[cursor], &outs[cursor], t)?;
+            cursor += 1;
+        }
+        state.step = step;
+        Ok(loss)
+    }
+
+    /// Allocating wrapper over [`Engine::server_step_into`]: clones the
+    /// state, steps the clone, and returns it (tests + SL baseline).
+    pub fn server_step(
+        &self,
+        k: usize,
+        acts: &HostTensor,
+        labels: &[i32],
+        state: &ServerState,
+        lr: f32,
+    ) -> Result<ServerStepOut> {
+        let spec = self.manifest.artifact(&format!("server_step_{k}"))?;
+        let gspec = &spec.outputs[1];
+        let mut act_grads = HostTensor::zeros(gspec.name.clone(), gspec.shape.clone());
+        let mut new_state = state.clone();
+        let loss = self.server_step_into(k, acts, labels, &mut new_state, &mut act_grads, lr)?;
         Ok(ServerStepOut { loss, act_grads, state: new_state })
     }
 
-    /// Client-side backward (rematerialized fwd + LoRA Adam update).
-    pub fn client_bwd(
+    /// Client-side backward (rematerialized fwd + LoRA Adam update),
+    /// fully in place: the client's LoRA, Adam moments, and step counter
+    /// are updated in their own buffers.  Same error contract as
+    /// [`Engine::server_step_into`]: on error the state may be mixed
+    /// between steps — discard it.
+    pub fn client_bwd_into(
         &self,
         k: usize,
         tokens: &[i32],
-        state: &ClientState,
+        state: &mut ClientState,
         act_grads: &HostTensor,
         lr: f32,
-    ) -> Result<ClientState> {
+    ) -> Result<()> {
         let name = format!("client_bwd_{k}");
         let spec = self.manifest.artifact(&name)?;
         let step = state.step + 1;
@@ -369,31 +475,39 @@ impl Engine {
         for t in state.adam.m.iter().chain(state.adam.v.iter()) {
             owned.push(self.upload(t)?);
         }
-        owned.push(host_to_literal(&HostTensor::scalar("step", step as f32))?);
-        owned.push(host_to_literal(&HostTensor::scalar("lr", lr))?);
+        owned.push(scalar_literal(step as f32)?);
+        owned.push(scalar_literal(lr)?);
 
         let mut args: Vec<&xla::Literal> = vec![&owned[0]];
         args.extend(self.frozen.iter());
         args.extend(owned[1..].iter());
         let outs = self.execute(&name, spec, &args)?;
 
-        let mut lora_t = Vec::with_capacity(4);
-        for i in 0..4 {
-            let mut t = literal_to_host(&spec.outputs[i], &outs[i])?;
-            t.name = state.lora.tensors[i].name.clone();
-            lora_t.push(t);
+        let mut cursor = 0usize;
+        for t in state.lora.tensors.iter_mut() {
+            literal_to_host_into(&spec.outputs[cursor], &outs[cursor], t)?;
+            cursor += 1;
         }
-        let m = (4..8)
-            .map(|i| literal_to_host(&spec.outputs[i], &outs[i]))
-            .collect::<Result<Vec<_>>>()?;
-        let v = (8..12)
-            .map(|i| literal_to_host(&spec.outputs[i], &outs[i]))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(ClientState {
-            lora: AdapterSet::from_tensors(k, lora_t)?,
-            adam: AdamState { m, v },
-            step,
-        })
+        for t in state.adam.m.iter_mut().chain(state.adam.v.iter_mut()) {
+            literal_to_host_into(&spec.outputs[cursor], &outs[cursor], t)?;
+            cursor += 1;
+        }
+        state.step = step;
+        Ok(())
+    }
+
+    /// Allocating wrapper over [`Engine::client_bwd_into`].
+    pub fn client_bwd(
+        &self,
+        k: usize,
+        tokens: &[i32],
+        state: &ClientState,
+        act_grads: &HostTensor,
+        lr: f32,
+    ) -> Result<ClientState> {
+        let mut new_state = state.clone();
+        self.client_bwd_into(k, tokens, &mut new_state, act_grads, lr)?;
+        Ok(new_state)
     }
 
     /// Full-model evaluation on one batch: returns (logits [B*C], loss).
@@ -439,8 +553,8 @@ impl Engine {
         for t in state.adam.m.iter().chain(state.adam.v.iter()) {
             owned.push(self.upload(t)?);
         }
-        owned.push(host_to_literal(&HostTensor::scalar("step", step as f32))?);
-        owned.push(host_to_literal(&HostTensor::scalar("lr", lr))?);
+        owned.push(scalar_literal(step as f32)?);
+        owned.push(scalar_literal(lr)?);
         let mut args: Vec<&xla::Literal> = vec![&owned[0], &owned[1]];
         args.extend(self.frozen.iter());
         args.extend(owned[2..].iter());

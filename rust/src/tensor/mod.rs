@@ -12,6 +12,41 @@ pub mod store;
 
 use anyhow::{bail, Result};
 
+std::thread_local! {
+    /// Per-thread count of `HostTensor` payload allocations
+    /// (constructors + clones).  Thread-local so concurrent tests (or
+    /// future parallel client fan-out) can't perturb each other's
+    /// measurements.  The steady-state training loop is required to be
+    /// allocation-free after round 1; tests and benches assert that by
+    /// diffing this counter (EXPERIMENTS.md §Perf documents the
+    /// methodology).
+    static HOST_TENSOR_ALLOCS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Snapshot of the calling thread's `HostTensor` allocation counter.
+pub fn alloc_count() -> u64 {
+    HOST_TENSOR_ALLOCS.with(|c| c.get())
+}
+
+fn note_alloc() {
+    HOST_TENSOR_ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+#[cfg(target_endian = "big")]
+compile_error!("the zero-copy byte views below assume a little-endian target");
+
+/// Zero-copy view of an f32 slice as bytes — the single home of this
+/// unsafe cast (native endianness; guarded little-endian above).  Used
+/// by `payload_bytes` and the runtime's literal staging.
+pub(crate) fn f32_bytes(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// Zero-copy view of an i32 slice as bytes (see [`f32_bytes`]).
+pub(crate) fn i32_bytes(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
 /// Element type of a host tensor. Mirrors the two dtypes the artifacts use.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
@@ -20,21 +55,77 @@ pub enum TensorData {
 }
 
 /// A named, shaped, host-resident tensor.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct HostTensor {
     pub name: String,
     pub shape: Vec<usize>,
     pub data: TensorData,
 }
 
+impl Clone for HostTensor {
+    fn clone(&self) -> Self {
+        note_alloc();
+        Self { name: self.name.clone(), shape: self.shape.clone(), data: self.data.clone() }
+    }
+}
+
+/// Borrowed view of rows `[lo, hi)` along a tensor's leading axis.
+/// Splitting an adapter stack at a cut point is O(1) with views — no
+/// payload copy (the aggregation path relies on this).
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    pub name: &'a str,
+    /// Rows in the axis-0 window.
+    pub rows: usize,
+    /// Trailing dims (`shape[1..]` of the parent tensor).
+    pub inner: &'a [usize],
+    pub data: &'a [f32],
+}
+
+impl TensorView<'_> {
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Mutable counterpart of [`TensorView`].
+#[derive(Debug)]
+pub struct TensorViewMut<'a> {
+    pub name: &'a str,
+    pub rows: usize,
+    pub inner: &'a [usize],
+    pub data: &'a mut [f32],
+}
+
+impl TensorViewMut<'_> {
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Validate an axis-0 window and return the flat element range it covers.
+fn axis0_range(name: &str, shape: &[usize], lo: usize, hi: usize) -> Result<std::ops::Range<usize>> {
+    if shape.is_empty() {
+        bail!("cannot take an axis-0 view of scalar tensor {name}");
+    }
+    let n0 = shape[0];
+    if lo > hi || hi > n0 {
+        bail!("view [{lo},{hi}) out of bounds for axis-0 size {n0} ({name})");
+    }
+    let inner: usize = shape[1..].iter().product();
+    Ok(lo * inner..hi * inner)
+}
+
 impl HostTensor {
     pub fn f32(name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) -> Self {
+        note_alloc();
         let t = Self { name: name.into(), shape, data: TensorData::F32(data) };
         debug_assert_eq!(t.len(), t.numel(), "data length must match shape");
         t
     }
 
     pub fn i32(name: impl Into<String>, shape: Vec<usize>, data: Vec<i32>) -> Self {
+        note_alloc();
         let t = Self { name: name.into(), shape, data: TensorData::I32(data) };
         debug_assert_eq!(t.len(), t.numel(), "data length must match shape");
         t
@@ -104,65 +195,143 @@ impl HostTensor {
     /// build targets little-endian; the hot marshaling path uses this to
     /// avoid a per-upload allocation; see EXPERIMENTS.md §Perf).
     pub fn payload_bytes(&self) -> &[u8] {
-        #[cfg(target_endian = "big")]
-        compile_error!("payload_bytes assumes a little-endian target");
         match &self.data {
-            TensorData::F32(v) => unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            },
-            TensorData::I32(v) => unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            },
+            TensorData::F32(v) => f32_bytes(v),
+            TensorData::I32(v) => i32_bytes(v),
         }
     }
 
     /// Slice the leading (stack) axis: rows `[lo, hi)`. Used to split LoRA
     /// stacks at a client's cut point (paper eq. 9).
     pub fn slice_axis0(&self, lo: usize, hi: usize) -> Result<HostTensor> {
-        if self.shape.is_empty() {
-            bail!("cannot slice a scalar tensor {}", self.name);
-        }
-        let n0 = self.shape[0];
-        if lo > hi || hi > n0 {
-            bail!("slice [{lo},{hi}) out of bounds for axis-0 size {n0} ({})", self.name);
-        }
-        let inner: usize = self.shape[1..].iter().product();
+        let range = axis0_range(&self.name, &self.shape, lo, hi)?;
         let mut shape = self.shape.clone();
         shape[0] = hi - lo;
         match &self.data {
-            TensorData::F32(v) => Ok(HostTensor::f32(
-                self.name.clone(),
-                shape,
-                v[lo * inner..hi * inner].to_vec(),
-            )),
-            TensorData::I32(v) => Ok(HostTensor::i32(
-                self.name.clone(),
-                shape,
-                v[lo * inner..hi * inner].to_vec(),
-            )),
+            TensorData::F32(v) => {
+                Ok(HostTensor::f32(self.name.clone(), shape, v[range].to_vec()))
+            }
+            TensorData::I32(v) => {
+                Ok(HostTensor::i32(self.name.clone(), shape, v[range].to_vec()))
+            }
         }
+    }
+
+    /// O(1) borrowed view of rows `[lo, hi)` along the leading axis —
+    /// the zero-copy counterpart of [`HostTensor::slice_axis0`] the
+    /// aggregation hot path uses (f32 tensors only).
+    pub fn view_axis0(&self, lo: usize, hi: usize) -> Result<TensorView<'_>> {
+        let range = axis0_range(&self.name, &self.shape, lo, hi)?;
+        Ok(TensorView {
+            name: &self.name,
+            rows: hi - lo,
+            inner: &self.shape[1..],
+            data: &self.as_f32()?[range],
+        })
+    }
+
+    /// Mutable O(1) view of rows `[lo, hi)` along the leading axis.
+    pub fn view_axis0_mut(&mut self, lo: usize, hi: usize) -> Result<TensorViewMut<'_>> {
+        let range = axis0_range(&self.name, &self.shape, lo, hi)?;
+        let Self { name, shape, data } = self;
+        let slice = match data {
+            TensorData::F32(v) => &mut v[range],
+            TensorData::I32(_) => bail!("tensor {name} is i32, expected f32"),
+        };
+        Ok(TensorViewMut {
+            name: name.as_str(),
+            rows: hi - lo,
+            inner: &shape[1..],
+            data: slice,
+        })
     }
 
     /// Concatenate along the leading axis (inverse of `slice_axis0`).
     /// Used to join client + server adapter halves into the full adapter
-    /// set (paper eq. 5).
+    /// set (paper eq. 5).  Dtype-generic: all parts must share one dtype
+    /// (and trailing shape); mixing f32 and i32 is rejected.
     pub fn concat_axis0(parts: &[&HostTensor]) -> Result<HostTensor> {
         let first = parts.first().ok_or_else(|| anyhow::anyhow!("empty concat"))?;
+        let total0 = Self::concat_axis0_check(parts)?;
         let inner: usize = first.shape[1..].iter().product();
+        let mut shape = first.shape.clone();
+        shape[0] = total0;
+        match &first.data {
+            TensorData::F32(_) => {
+                let mut data = Vec::with_capacity(total0 * inner);
+                for p in parts {
+                    data.extend_from_slice(p.as_f32()?);
+                }
+                Ok(HostTensor::f32(first.name.clone(), shape, data))
+            }
+            TensorData::I32(_) => {
+                let mut data = Vec::with_capacity(total0 * inner);
+                for p in parts {
+                    data.extend_from_slice(p.as_i32()?);
+                }
+                Ok(HostTensor::i32(first.name.clone(), shape, data))
+            }
+        }
+    }
+
+    /// In-place concatenation: write the parts, in order, into `dst`
+    /// (which must already have the concatenated shape and matching
+    /// dtype).  Zero-allocation counterpart of `concat_axis0`.
+    pub fn concat_axis0_into(parts: &[&HostTensor], dst: &mut HostTensor) -> Result<()> {
+        let first = parts.first().ok_or_else(|| anyhow::anyhow!("empty concat"))?;
+        let total0 = Self::concat_axis0_check(parts)?;
+        if dst.shape.first() != Some(&total0) || dst.shape[1..] != first.shape[1..] {
+            bail!(
+                "concat_axis0_into dst shape {:?} incompatible with parts (axis0 {total0}, inner {:?})",
+                dst.shape,
+                &first.shape[1..]
+            );
+        }
+        match &mut dst.data {
+            TensorData::F32(out) => {
+                let mut at = 0usize;
+                for p in parts {
+                    let s = p.as_f32()?;
+                    out[at..at + s.len()].copy_from_slice(s);
+                    at += s.len();
+                }
+            }
+            TensorData::I32(out) => {
+                let mut at = 0usize;
+                for p in parts {
+                    let s = p.as_i32()?;
+                    out[at..at + s.len()].copy_from_slice(s);
+                    at += s.len();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Shared validation for the concat variants: consistent trailing
+    /// shape and a single dtype across all parts. Returns the total
+    /// axis-0 extent.
+    fn concat_axis0_check(parts: &[&HostTensor]) -> Result<usize> {
+        let first = parts.first().ok_or_else(|| anyhow::anyhow!("empty concat"))?;
+        let first_is_f32 = matches!(first.data, TensorData::F32(_));
         let mut total0 = 0usize;
         for p in parts {
+            if p.shape.is_empty() {
+                bail!("cannot concat scalar tensor {}", p.name);
+            }
             if p.shape[1..] != first.shape[1..] {
                 bail!("concat shape mismatch: {:?} vs {:?}", p.shape, first.shape);
             }
+            if matches!(p.data, TensorData::F32(_)) != first_is_f32 {
+                bail!(
+                    "concat dtype mismatch: {} and {} differ (all parts must be f32 or all i32)",
+                    first.name,
+                    p.name
+                );
+            }
             total0 += p.shape[0];
         }
-        let mut shape = first.shape.clone();
-        shape[0] = total0;
-        let mut data = Vec::with_capacity(total0 * inner);
-        for p in parts {
-            data.extend_from_slice(p.as_f32()?);
-        }
-        Ok(HostTensor::f32(first.name.clone(), shape, data))
+        Ok(total0)
     }
 }
 
@@ -213,5 +382,72 @@ mod tests {
     fn le_bytes_f32() {
         let t = HostTensor::f32("x", vec![1], vec![1.0]);
         assert_eq!(t.to_le_bytes(), 1.0f32.to_le_bytes().to_vec());
+    }
+
+    #[test]
+    fn concat_i32_roundtrips() {
+        let t = HostTensor::i32("x", vec![3, 2], (0..6).collect());
+        let a = t.slice_axis0(0, 2).unwrap();
+        let b = t.slice_axis0(2, 3).unwrap();
+        let joined = HostTensor::concat_axis0(&[&a, &b]).unwrap();
+        assert_eq!(joined.shape, vec![3, 2]);
+        assert_eq!(joined.as_i32().unwrap(), t.as_i32().unwrap());
+    }
+
+    #[test]
+    fn concat_mixed_dtype_rejected_with_clear_message() {
+        let f = HostTensor::f32("f", vec![1, 2], vec![1.0, 2.0]);
+        let i = HostTensor::i32("i", vec![1, 2], vec![1, 2]);
+        let err = HostTensor::concat_axis0(&[&f, &i]).unwrap_err();
+        assert!(err.to_string().contains("dtype mismatch"), "{err}");
+        let err = HostTensor::concat_axis0(&[&i, &f]).unwrap_err();
+        assert!(err.to_string().contains("dtype mismatch"), "{err}");
+    }
+
+    #[test]
+    fn concat_into_matches_allocating_concat() {
+        let t = HostTensor::f32("x", vec![4, 3], (0..12).map(|i| i as f32).collect());
+        let a = t.slice_axis0(0, 1).unwrap();
+        let b = t.slice_axis0(1, 4).unwrap();
+        let mut dst = HostTensor::zeros("x", vec![4, 3]);
+        HostTensor::concat_axis0_into(&[&a, &b], &mut dst).unwrap();
+        assert_eq!(dst.as_f32().unwrap(), t.as_f32().unwrap());
+        // Shape mismatch is rejected.
+        let mut short = HostTensor::zeros("x", vec![3, 3]);
+        assert!(HostTensor::concat_axis0_into(&[&a, &b], &mut short).is_err());
+    }
+
+    #[test]
+    fn views_are_zero_copy_windows() {
+        let t = HostTensor::f32("x", vec![4, 2], (0..8).map(|i| i as f32).collect());
+        let before = alloc_count();
+        let v = t.view_axis0(1, 3).unwrap();
+        assert_eq!(v.rows, 2);
+        assert_eq!(v.inner, &[2]);
+        assert_eq!(v.data, &[2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(v.numel(), 4);
+        assert_eq!(alloc_count(), before, "views must not allocate tensors");
+        assert!(t.view_axis0(3, 5).is_err());
+        assert!(HostTensor::scalar("s", 1.0).view_axis0(0, 0).is_err());
+    }
+
+    #[test]
+    fn mut_views_write_through() {
+        let mut t = HostTensor::zeros("x", vec![2, 2]);
+        {
+            let v = t.view_axis0_mut(1, 2).unwrap();
+            v.data.fill(7.0);
+        }
+        assert_eq!(t.as_f32().unwrap(), &[0.0, 0.0, 7.0, 7.0]);
+        let mut i = HostTensor::i32("i", vec![2], vec![1, 2]);
+        assert!(i.view_axis0_mut(0, 1).is_err(), "i32 tensors have no f32 views");
+    }
+
+    #[test]
+    fn alloc_counter_counts_ctors_and_clones() {
+        let before = alloc_count();
+        let t = HostTensor::zeros("x", vec![2]);
+        let _c = t.clone();
+        assert_eq!(alloc_count(), before + 2);
     }
 }

@@ -1,19 +1,31 @@
 //! Host-side numeric ops used by aggregation and tests.
+//!
+//! The `*_into` variants are the zero-allocation hot-path suite: they
+//! write into caller-owned buffers and are bit-identical to their
+//! allocating counterparts (same per-element accumulation order), so
+//! swapping one for the other never changes training numerics.
 
 use super::HostTensor;
 use anyhow::{bail, Result};
+
+/// `dst += alpha * src` over raw slices (the innermost aggregation
+/// kernel; length mismatch is a caller bug and is rejected).
+pub fn axpy_into(alpha: f32, src: &[f32], dst: &mut [f32]) -> Result<()> {
+    if src.len() != dst.len() {
+        bail!("axpy_into length mismatch: {} vs {}", src.len(), dst.len());
+    }
+    for (di, si) in dst.iter_mut().zip(src.iter()) {
+        *di += alpha * si;
+    }
+    Ok(())
+}
 
 /// `dst += alpha * src` (elementwise).
 pub fn axpy(alpha: f32, src: &HostTensor, dst: &mut HostTensor) -> Result<()> {
     if src.shape != dst.shape {
         bail!("axpy shape mismatch: {:?} vs {:?}", src.shape, dst.shape);
     }
-    let s = src.as_f32()?;
-    let d = dst.as_f32_mut()?;
-    for (di, si) in d.iter_mut().zip(s.iter()) {
-        *di += alpha * si;
-    }
-    Ok(())
+    axpy_into(alpha, src.as_f32()?, dst.as_f32_mut()?)
 }
 
 /// `t *= alpha` (elementwise).
@@ -24,14 +36,64 @@ pub fn scale(alpha: f32, t: &mut HostTensor) -> Result<()> {
     Ok(())
 }
 
+/// Copy `src`'s payload into `dst` (shapes and dtypes must match).
+/// The in-place counterpart of `dst = src.clone()`.
+pub fn copy_from(dst: &mut HostTensor, src: &HostTensor) -> Result<()> {
+    if src.shape != dst.shape {
+        bail!("copy_from shape mismatch: {:?} vs {:?}", src.shape, dst.shape);
+    }
+    use super::TensorData;
+    match (&mut dst.data, &src.data) {
+        (TensorData::F32(d), TensorData::F32(s)) => d.copy_from_slice(s),
+        (TensorData::I32(d), TensorData::I32(s)) => d.copy_from_slice(s),
+        _ => bail!("copy_from dtype mismatch: {} vs {}", dst.name, src.name),
+    }
+    Ok(())
+}
+
+/// Fused single-pass weighted sum over raw slices:
+/// `dst[i] = sum_j w_j * src_j[i]` (overwrites `dst`).  One pass over
+/// the output instead of one pass per source — the cache-friendly core
+/// of FedAvg aggregation.
+pub fn weighted_sum_slices_into(srcs: &[(f32, &[f32])], dst: &mut [f32]) -> Result<()> {
+    for (j, (_, s)) in srcs.iter().enumerate() {
+        if s.len() != dst.len() {
+            bail!("weighted_sum source {j} length {} != dst {}", s.len(), dst.len());
+        }
+    }
+    for (i, d) in dst.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for (w, s) in srcs {
+            acc += *w * s[i];
+        }
+        *d = acc;
+    }
+    Ok(())
+}
+
+/// In-place weighted sum of equally-shaped tensors: overwrite `dst`
+/// with `sum_i w_i * t_i`.  Bit-identical to `weighted_sum` (same
+/// accumulation order per element) with zero tensor allocations.
+pub fn weighted_sum_into(pairs: &[(f32, &HostTensor)], dst: &mut HostTensor) -> Result<()> {
+    if pairs.is_empty() {
+        bail!("empty weighted_sum");
+    }
+    let mut srcs: Vec<(f32, &[f32])> = Vec::with_capacity(pairs.len());
+    for (w, t) in pairs {
+        if t.shape != dst.shape {
+            bail!("weighted_sum shape mismatch: {:?} vs dst {:?}", t.shape, dst.shape);
+        }
+        srcs.push((*w, t.as_f32()?));
+    }
+    weighted_sum_slices_into(&srcs, dst.as_f32_mut()?)
+}
+
 /// Weighted sum of equally-shaped tensors: `sum_i w_i * t_i`.
 /// This is exactly the FedAvg aggregation primitive (paper eqs. 6–7).
 pub fn weighted_sum(pairs: &[(f32, &HostTensor)]) -> Result<HostTensor> {
     let (_, first) = pairs.first().ok_or_else(|| anyhow::anyhow!("empty weighted_sum"))?;
     let mut out = HostTensor::zeros(first.name.clone(), first.shape.clone());
-    for (w, t) in pairs {
-        axpy(*w, t, &mut out)?;
-    }
+    weighted_sum_into(pairs, &mut out)?;
     Ok(out)
 }
 
@@ -109,5 +171,45 @@ mod tests {
     fn l2_norm_works() {
         let a = t("a", vec![3.0, 4.0]);
         assert!((l2_norm(&a).unwrap() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weighted_sum_into_matches_allocating_bitwise() {
+        let a = t("a", vec![0.1, -2.5, 3.25]);
+        let b = t("b", vec![10.0, 0.5, -1.0]);
+        let c = t("c", vec![-3.0, 7.0, 0.0]);
+        let pairs = [(0.2f32, &a), (0.3, &b), (0.5, &c)];
+        let alloc = weighted_sum(&pairs).unwrap();
+        let mut into = t("d", vec![9.0, 9.0, 9.0]);
+        weighted_sum_into(&pairs, &mut into).unwrap();
+        assert_eq!(alloc.as_f32().unwrap(), into.as_f32().unwrap());
+    }
+
+    #[test]
+    fn weighted_sum_into_rejects_mismatch_and_empty() {
+        let a = t("a", vec![1.0, 2.0]);
+        let mut d3 = t("d", vec![0.0; 3]);
+        assert!(weighted_sum_into(&[(1.0, &a)], &mut d3).is_err());
+        assert!(weighted_sum_into(&[], &mut d3).is_err());
+    }
+
+    #[test]
+    fn axpy_into_accumulates_over_slices() {
+        let mut d = [1.0f32, 2.0];
+        axpy_into(2.0, &[10.0, 20.0], &mut d).unwrap();
+        assert_eq!(d, [21.0, 42.0]);
+        assert!(axpy_into(1.0, &[1.0], &mut d).is_err());
+    }
+
+    #[test]
+    fn copy_from_copies_and_checks() {
+        let src = t("s", vec![1.0, 2.0]);
+        let mut dst = t("d", vec![0.0, 0.0]);
+        copy_from(&mut dst, &src).unwrap();
+        assert_eq!(dst.as_f32().unwrap(), &[1.0, 2.0]);
+        let mut short = t("d", vec![0.0]);
+        assert!(copy_from(&mut short, &src).is_err());
+        let isrc = HostTensor::i32("i", vec![2], vec![1, 2]);
+        assert!(copy_from(&mut dst, &isrc).is_err(), "dtype mismatch rejected");
     }
 }

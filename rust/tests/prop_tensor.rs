@@ -1,0 +1,143 @@
+//! Property-based tests for the zero-allocation tensor/LoRA primitives:
+//! every `*_into` op must be bit-identical to its allocating
+//! counterpart, views must window exactly, and the fused heterogeneous
+//! aggregation must equal the join → fedavg → split reference path.
+//! Host-side only — no artifacts required.
+
+use sfl::lora::{fedavg, fedavg_into, fedavg_joined_into, AdapterSet};
+use sfl::model::ModelDims;
+use sfl::tensor::{alloc_count, ops, HostTensor};
+use sfl::util::propcheck::{check, gen};
+
+/// `weighted_sum_into` ≡ `weighted_sum`, bit-for-bit, over random
+/// shapes, source counts, and weights.
+#[test]
+fn prop_weighted_sum_into_equals_weighted_sum() {
+    check(
+        "weighted-sum-into-eq",
+        41,
+        150,
+        |rng| {
+            let n = gen::usize_in(rng, 1, 64);
+            let srcs = gen::usize_in(rng, 1, 6);
+            let tensors: Vec<(f32, Vec<f32>)> = (0..srcs)
+                .map(|_| (gen::f64_in(rng, -1.0, 1.0) as f32, gen::vec_f32(rng, n, 2.0)))
+                .collect();
+            (n, tensors)
+        },
+        |(n, tensors)| {
+            let hosts: Vec<(f32, HostTensor)> = tensors
+                .iter()
+                .map(|(w, v)| (*w, HostTensor::f32("t", vec![*n], v.clone())))
+                .collect();
+            let pairs: Vec<(f32, &HostTensor)> = hosts.iter().map(|(w, t)| (*w, t)).collect();
+            let reference = ops::weighted_sum(&pairs).unwrap();
+            let mut dst = HostTensor::f32("d", vec![*n], vec![f32::NAN; *n]);
+            ops::weighted_sum_into(&pairs, &mut dst).unwrap();
+            dst.as_f32().unwrap() == reference.as_f32().unwrap()
+        },
+    );
+}
+
+/// View-based split windows the exact bytes the owned split copies, and
+/// `split_into` → `join_into` round-trips bit-exactly without a single
+/// tensor allocation.
+#[test]
+fn prop_view_split_join_roundtrip_bit_exact() {
+    let dims = ModelDims::mini();
+    check(
+        "view-split-join-roundtrip",
+        43,
+        60,
+        |rng| {
+            let set = AdapterSet::init(&dims, dims.layers, rng.next_u64());
+            let k = gen::usize_in(rng, 0, dims.layers);
+            (set, k)
+        },
+        |(set, k)| {
+            let (co, so) = set.split_at(*k).unwrap();
+            let (cv, sv) = set.split_at_views(*k).unwrap();
+            for i in 0..4 {
+                if cv.tensors[i].data != co.tensors[i].as_f32().unwrap()
+                    || sv.tensors[i].data != so.tensors[i].as_f32().unwrap()
+                {
+                    return false;
+                }
+            }
+            let mut client = AdapterSet::zeros(&dims, *k);
+            let mut server = AdapterSet::zeros(&dims, dims.layers - *k);
+            let mut rejoined = AdapterSet::zeros(&dims, dims.layers);
+            let before = alloc_count();
+            set.split_into(*k, &mut client, &mut server).unwrap();
+            AdapterSet::join_into(&client, &server, &mut rejoined).unwrap();
+            alloc_count() == before && rejoined.max_abs_diff(set).unwrap() == 0.0
+        },
+    );
+}
+
+/// `fedavg_into` ≡ `fedavg` bit-for-bit for random weights and depths.
+#[test]
+fn prop_fedavg_into_equals_fedavg() {
+    let dims = ModelDims::mini();
+    check(
+        "fedavg-into-eq",
+        47,
+        40,
+        |rng| {
+            let layers = gen::usize_in(rng, 1, dims.layers);
+            let a = AdapterSet::init(&dims, layers, rng.next_u64());
+            let b = AdapterSet::init(&dims, layers, rng.next_u64());
+            let w = gen::f64_in(rng, 0.0, 1.0) as f32;
+            (a, b, w)
+        },
+        |(a, b, w)| {
+            let sets = [(*w, a), (1.0 - *w, b)];
+            let reference = fedavg(&sets).unwrap();
+            let mut dst = AdapterSet::init(&ModelDims::mini(), a.layers, 999);
+            fedavg_into(&sets, &mut dst).unwrap();
+            dst.max_abs_diff(&reference).unwrap() == 0.0
+        },
+    );
+}
+
+/// The fused heterogeneous aggregation (contributor halves scattered
+/// straight into the full-depth aggregate) equals the reference
+/// join → fedavg path bit-for-bit, for random per-client cuts, and
+/// performs zero tensor allocations.
+#[test]
+fn prop_fused_aggregation_equals_join_fedavg() {
+    let dims = ModelDims::mini();
+    check(
+        "fused-agg-eq",
+        53,
+        40,
+        |rng| {
+            let n_clients = gen::usize_in(rng, 1, 5);
+            let halves: Vec<(AdapterSet, AdapterSet)> = (0..n_clients)
+                .map(|_| {
+                    let k = gen::usize_in(rng, 0, dims.layers);
+                    AdapterSet::init(&dims, dims.layers, rng.next_u64())
+                        .split_at(k)
+                        .unwrap()
+                })
+                .collect();
+            halves
+        },
+        |halves| {
+            let w = 1.0 / halves.len() as f32;
+            let joined: Vec<AdapterSet> = halves
+                .iter()
+                .map(|(c, s)| AdapterSet::join(c, s).unwrap())
+                .collect();
+            let pairs: Vec<(f32, &AdapterSet)> = joined.iter().map(|j| (w, j)).collect();
+            let reference = fedavg(&pairs).unwrap();
+
+            let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
+                halves.iter().map(|(c, s)| (w, c, s)).collect();
+            let mut fused = AdapterSet::zeros(&dims, dims.layers);
+            let before = alloc_count();
+            fedavg_joined_into(&contribs, &mut fused).unwrap();
+            alloc_count() == before && fused.max_abs_diff(&reference).unwrap() == 0.0
+        },
+    );
+}

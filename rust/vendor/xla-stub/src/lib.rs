@@ -1,0 +1,201 @@
+//! Offline stub of the PJRT surface of the `xla` crate (0.1.6) that
+//! `sfl::runtime` links against.
+//!
+//! Scope: everything host-side — literal creation from untyped bytes,
+//! typed readback, shapes — behaves like the real crate, so marshaling
+//! code and its tests run anywhere.  Device-side entry points
+//! (HLO parsing, compilation, execution) return an explanatory error:
+//! they need the real PJRT runtime, which this offline workspace does
+//! not ship.  Swap `xla = { path = "vendor/xla-stub" }` for
+//! `xla = "0.1.6"` in rust/Cargo.toml to run against real PJRT — the
+//! API is call-compatible, no source changes needed.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type XlaResult<T> = std::result::Result<T, Error>;
+
+fn stub_unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable in the offline xla stub — swap rust/Cargo.toml's \
+         `xla` path dependency for the real `xla = \"0.1.6\"` crate to run PJRT"
+    ))
+}
+
+/// Element dtypes the artifacts use (subset of the real enum).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Native Rust types a literal can be read back into.
+pub trait NativeType: Copy {
+    const ELEMENT: ElementType;
+    fn from_le_bytes(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT: ElementType = ElementType::F32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT: ElementType = ElementType::S32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A host-resident literal: dtype + shape + packed little-endian bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> XlaResult<Self> {
+        let numel: usize = shape.iter().product();
+        if data.len() != numel * 4 {
+            return Err(Error(format!(
+                "literal data is {} bytes but shape {shape:?} needs {}",
+                data.len(),
+                numel * 4
+            )));
+        }
+        Ok(Self { ty, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> XlaResult<Vec<T>> {
+        if T::ELEMENT != self.ty {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::ELEMENT
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_tuple(&self) -> XlaResult<Vec<Literal>> {
+        Err(stub_unavailable("tuple literal decomposition"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> XlaResult<Self> {
+        Err(stub_unavailable("HLO text parsing"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Succeeds so that host-only paths (`Engine::load`, params/frozen
+    /// staging) work against the stub; the first compile reports the
+    /// missing runtime instead.
+    pub fn cpu() -> XlaResult<Self> {
+        Ok(Self)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        Err(stub_unavailable("XLA compilation"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_unavailable("PJRT execution"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        Err(stub_unavailable("device → host literal transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.5f32, -2.0, 0.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.shape(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype-checked readback");
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let bytes = 7i32.to_le_bytes();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn byte_length_validated() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn device_paths_report_stub() {
+        let err = HloModuleProto::from_text_file("x.hlo").unwrap_err();
+        assert!(err.to_string().contains("offline xla stub"), "{err}");
+        assert!(PjRtClient::cpu().is_ok());
+    }
+}
