@@ -10,9 +10,9 @@
 
 use anyhow::Result;
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
-use sfl::coordinator::Trainer;
+use sfl::coordinator::Session;
 use sfl::runtime::Engine;
-use sfl::telemetry;
+use sfl::telemetry::{self, StdoutObserver};
 use std::path::Path;
 
 fn main() -> Result<()> {
@@ -40,9 +40,10 @@ fn main() -> Result<()> {
     for scheme in [SchemeKind::Sl, SchemeKind::Sfl, SchemeKind::Ours] {
         let mut c = cfg.clone();
         c.scheme = scheme;
-        let mut trainer = Trainer::new(&engine, &c)?;
+        let mut session = Session::new(&engine, &c)?;
+        session.add_observer(Box::new(StdoutObserver));
         println!("=== {scheme} ===");
-        let r = trainer.run(false)?;
+        let r = session.run_to_convergence()?;
         println!("{}\n", telemetry::summary(&scheme.to_string(), &r));
         results.push((scheme.to_string(), r));
     }

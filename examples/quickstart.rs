@@ -1,16 +1,17 @@
-//! Quickstart: the smallest end-to-end use of the public API.
+//! Quickstart: the smallest end-to-end use of the Session API.
 //!
-//! Loads the `mini` artifacts, builds the paper's six-device fleet, runs
-//! the memory-efficient SFL scheme (Alg. 1 + Alg. 2) for a few rounds,
-//! and prints the loss curve + run summary.
+//! Loads the `mini` artifacts, builds the paper's six-device fleet, and
+//! drives the memory-efficient SFL scheme (Alg. 1 + Alg. 2) round by
+//! round with `Session::step_round`, streaming progress through a
+//! `RoundObserver`, then prints the loss curve + run summary.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
 use anyhow::Result;
 use sfl::config::ExperimentConfig;
-use sfl::coordinator::Trainer;
+use sfl::coordinator::Session;
 use sfl::runtime::Engine;
-use sfl::telemetry;
+use sfl::telemetry::{self, StdoutObserver};
 use std::path::Path;
 
 fn main() -> Result<()> {
@@ -30,10 +31,19 @@ fn main() -> Result<()> {
     cfg.train.eval_interval = 2;
     cfg.train.lr = 5e-3;
 
-    // 3. Train.
-    let mut trainer = Trainer::new(&engine, &cfg)?;
-    println!("cut assignment: {:?}", trainer.cuts());
-    let result = trainer.run(false)?;
+    // 3. Train, one observable round at a time.  `run_to_convergence()`
+    //    wraps this loop when round-level control isn't needed.
+    let mut session = Session::new(&engine, &cfg)?;
+    session.add_observer(Box::new(StdoutObserver));
+    println!("cut assignment: {:?}", session.cuts());
+    while !session.done() {
+        let report = session.step_round()?;
+        // The report is also available programmatically per round:
+        if report.round == 1 {
+            println!("  (round 1 trained {} participants)", report.participants.len());
+        }
+    }
+    let result = session.result();
 
     // 4. Report.
     println!("\nloss curve:");

@@ -8,7 +8,7 @@
 use anyhow::Result;
 use sfl::config::{ClientConfig, ExperimentConfig, SchedulerKind};
 use sfl::coordinator::scheduler::{make_scheduler, JobInfo};
-use sfl::coordinator::{timing, Trainer};
+use sfl::coordinator::{timing, Session};
 use sfl::devices::paper_fleet;
 use sfl::net::Link;
 use sfl::runtime::Engine;
@@ -78,7 +78,7 @@ fn main() -> Result<()> {
         c.scheduler = kind;
         c.train.max_rounds = 4;
         c.train.eval_batches = 4;
-        let r = Trainer::new(&engine, &c)?.run(true)?;
+        let r = Session::new(&engine, &c)?.run_to_convergence()?;
         let last = r.rounds.last().unwrap();
         println!(
             "  {kind:<16} final loss={:.4}  virtual time={:.1}s",

@@ -8,7 +8,7 @@
 //!     cargo bench --bench fig2_curves
 
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
-use sfl::coordinator::{RunResult, Trainer};
+use sfl::coordinator::{RunResult, Session};
 use sfl::runtime::Engine;
 use sfl::telemetry;
 use sfl::util::bench::bench_once;
@@ -41,8 +41,8 @@ fn main() {
         let mut c = cfg.clone();
         c.scheme = scheme;
         c.scheduler = sched;
-        let mut trainer = Trainer::new(&engine, &c).unwrap();
-        let (r, _) = bench_once(&format!("fig2/{name}"), || trainer.run(true).unwrap());
+        let mut session = Session::new(&engine, &c).unwrap();
+        let (r, _) = bench_once(&format!("fig2/{name}"), || session.run_to_convergence().unwrap());
         results.push((name, r));
     }
 

@@ -7,7 +7,7 @@
 //!     cargo bench --bench fig2c_convergence
 
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
-use sfl::coordinator::{RunResult, Trainer};
+use sfl::coordinator::{RunResult, Session};
 use sfl::runtime::Engine;
 use sfl::telemetry;
 use sfl::util::bench::bench_once;
@@ -41,8 +41,9 @@ fn main() {
         let mut c = cfg.clone();
         c.scheme = scheme;
         c.scheduler = sched;
-        let mut trainer = Trainer::new(&engine, &c).unwrap();
-        let (r, _) = bench_once(&format!("fig2c/{name}"), || trainer.run(true).unwrap());
+        let mut session = Session::new(&engine, &c).unwrap();
+        let (r, _) =
+            bench_once(&format!("fig2c/{name}"), || session.run_to_convergence().unwrap());
         results.push((name, r));
     }
 

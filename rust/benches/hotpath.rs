@@ -104,8 +104,9 @@ fn main() {
         let _ = fedavg(&pairs).unwrap();
     }));
 
-    // Fused heterogeneous aggregation (what Trainer::aggregate runs):
-    // mixed cuts, halves scattered straight into the aggregate.
+    // Fused heterogeneous aggregation (what the session's parallel
+    // schemes run): mixed cuts, halves scattered straight into the
+    // aggregate.
     let halves: Vec<(AdapterSet, AdapterSet)> = sets
         .iter()
         .enumerate()

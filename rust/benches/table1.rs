@@ -8,7 +8,7 @@
 //!     cargo bench --bench table1
 
 use sfl::config::{ExperimentConfig, SchemeKind};
-use sfl::coordinator::Trainer;
+use sfl::coordinator::Session;
 use sfl::runtime::Engine;
 use sfl::telemetry;
 use sfl::util::bench::bench_once;
@@ -34,8 +34,9 @@ fn main() {
     for scheme in [SchemeKind::Sl, SchemeKind::Sfl, SchemeKind::Ours] {
         let mut c = cfg.clone();
         c.scheme = scheme;
-        let mut trainer = Trainer::new(&engine, &c).unwrap();
-        let (r, _) = bench_once(&format!("table1/{scheme}"), || trainer.run(true).unwrap());
+        let mut session = Session::new(&engine, &c).unwrap();
+        let (r, _) =
+            bench_once(&format!("table1/{scheme}"), || session.run_to_convergence().unwrap());
         results.push((scheme.to_string(), r));
     }
 

@@ -4,7 +4,9 @@
 //!
 //! Uses the same SFLP binary tensor format as params.bin (one format,
 //! one parser — see python/compile/packing.py), with a `meta.*` scalar
-//! namespace for counters.
+//! namespace for counters.  `coordinator::Session::checkpoint` builds on
+//! this writer (plus the bit-exact 64-bit encoders below) to persist a
+//! *resumable* session whose remaining rounds replay bit-identically.
 
 use crate::lora::AdapterSet;
 use crate::runtime::{AdamState, ClientState, HeadState, ServerState};
@@ -44,6 +46,42 @@ pub fn write_sflp(path: &Path, tensors: &[(&str, &HostTensor)]) -> Result<()> {
         .with_context(|| format!("creating checkpoint {}", path.display()))?;
     fh.write_all(&buf)?;
     Ok(())
+}
+
+/// Bit-exact u64 → i32-pair encoding.  SFLP has no 64-bit dtype, but
+/// session checkpoints must round-trip `f64` clocks and RNG states
+/// exactly (bit-identical resume), so 64-bit values are stored as two
+/// little-endian i32 words each.
+pub fn encode_u64s(name: impl Into<String>, vals: &[u64]) -> HostTensor {
+    let mut words = Vec::with_capacity(vals.len() * 2);
+    for &v in vals {
+        words.push((v & 0xFFFF_FFFF) as u32 as i32);
+        words.push((v >> 32) as u32 as i32);
+    }
+    let n = words.len();
+    HostTensor::i32(name, vec![n], words)
+}
+
+/// Inverse of [`encode_u64s`].
+pub fn decode_u64s(t: &HostTensor) -> Result<Vec<u64>> {
+    let w = t.as_i32()?;
+    if w.len() % 2 != 0 {
+        bail!("u64 tensor {} has odd word count {}", t.name, w.len());
+    }
+    Ok(w.chunks_exact(2)
+        .map(|c| (c[0] as u32 as u64) | ((c[1] as u32 as u64) << 32))
+        .collect())
+}
+
+/// Bit-exact f64 encoding via [`encode_u64s`] (`f64::to_bits`).
+pub fn encode_f64s(name: impl Into<String>, vals: &[f64]) -> HostTensor {
+    let bits: Vec<u64> = vals.iter().map(|v| v.to_bits()).collect();
+    encode_u64s(name, &bits)
+}
+
+/// Inverse of [`encode_f64s`].
+pub fn decode_f64s(t: &HostTensor) -> Result<Vec<f64>> {
+    Ok(decode_u64s(t)?.into_iter().map(f64::from_bits).collect())
 }
 
 /// A full coordinator checkpoint (Ours/SFL schemes).
@@ -235,5 +273,25 @@ mod tests {
     #[test]
     fn load_missing_file_errors() {
         assert!(Checkpoint::load(Path::new("/nonexistent/ckpt.sflp")).is_err());
+    }
+
+    #[test]
+    fn u64_f64_encoding_roundtrips_bitwise() {
+        let vals = [0u64, 1, u64::MAX, 0xDEAD_BEEF_0123_4567];
+        let t = encode_u64s("u", &vals);
+        assert_eq!(decode_u64s(&t).unwrap(), vals);
+        let fs = [0.0f64, -1.5, 1e300, f64::MIN_POSITIVE, std::f64::consts::PI];
+        let t = encode_f64s("f", &fs);
+        let back = decode_f64s(&t).unwrap();
+        assert_eq!(back.len(), fs.len());
+        for (a, b) in fs.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_odd_word_count() {
+        let t = HostTensor::i32("odd", vec![3], vec![1, 2, 3]);
+        assert!(decode_u64s(&t).is_err());
     }
 }

@@ -237,6 +237,9 @@ impl ExperimentConfig {
         if self.train.aggregation_interval == 0 || self.train.steps_per_round == 0 {
             bail!("train intervals must be positive");
         }
+        if !(0.0..=1.0).contains(&self.train.dropout_prob) {
+            bail!("dropout_prob must be in [0, 1], got {}", self.train.dropout_prob);
+        }
         Ok(())
     }
 
@@ -441,6 +444,17 @@ mod tests {
         let mut c = ExperimentConfig::paper();
         c.clients.clear();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dropout_out_of_range_rejected() {
+        let mut c = ExperimentConfig::paper();
+        c.train.dropout_prob = 1.5;
+        assert!(c.validate().is_err());
+        c.train.dropout_prob = -0.1;
+        assert!(c.validate().is_err());
+        c.train.dropout_prob = 0.4;
+        c.validate().unwrap();
     }
 
     #[test]

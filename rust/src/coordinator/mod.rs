@@ -1,33 +1,49 @@
-//! L3 coordinator — the paper's system contribution.
+//! L3 coordinator — the paper's system contribution, as a round-stepped
+//! Session API.
 //!
-//! Orchestrates the three schemes end-to-end over the PJRT runtime:
+//! The driver is split along the axis the schemes actually differ on:
 //!
-//! - **Ours** (Alg. 1): parallel client forwards → sequential server
-//!   LoRA training with adapter switching, ordered by a pluggable
-//!   scheduler (Alg. 2 / FIFO / WF / Random) → parallel client
-//!   backwards; periodic LoRA aggregation (eqs. 5–9).
-//! - **SL**: one client at a time, model relayed between clients.
-//! - **SFL**: per-client server submodels trained in parallel
-//!   (numerically identical to Ours — the difference is timing + memory,
-//!   which is exactly the paper's point).
+//! - [`session::Session`] owns every piece of *shared* round bookkeeping
+//!   exactly once — sim-clock accrual, traffic metering, convergence
+//!   detection, metric series, the LR schedule, dropout sampling, and
+//!   [`RunResult`] assembly — and steps any scheme one round at a time
+//!   (`step_round` / `run_to_convergence`), with checkpoint/resume and
+//!   streaming [`session::RoundObserver`] telemetry.
+//! - [`session::Scheme`] implementations provide only the per-round
+//!   orchestration:
+//!   - [`session::OursScheme`] (Alg. 1): parallel client forwards →
+//!     sequential server LoRA training with adapter switching, ordered
+//!     by a pluggable scheduler (Alg. 2 / FIFO / WF / Random) →
+//!     parallel client backwards; periodic aggregation (eqs. 5–9).
+//!   - [`session::SlScheme`]: one client at a time, the model relayed
+//!     between clients (baseline [18]).
+//!   - [`session::SflScheme`]: per-client server submodels trained in
+//!     parallel (numerically identical to Ours — the difference is
+//!     timing + memory, which is exactly the paper's point).
 //!
-//! Numeric training executes the real AOT artifacts; protocol *timing*
-//! runs on the virtual clock with the paper-scale dims (DESIGN.md §2).
+//! Numeric training executes the real AOT artifacts through the
+//! in-place runtime primitives (zero `HostTensor` allocations at steady
+//! state for *all three* schemes); protocol timing runs on the virtual
+//! clock with the paper-scale dims (DESIGN.md §2).
+//!
+//! [`Trainer`] survives only as a thin deprecated shim over
+//! `Session::run_to_convergence` + the stdout observer.
 
 pub mod lr;
 pub mod scheduler;
+pub mod session;
 pub mod timing;
 
 use crate::config::{ExperimentConfig, SchemeKind};
-use crate::data::{self, BatchIter, Dataset};
-use crate::lora::{fedavg_joined_into, AdapterSet};
-use crate::metrics::{Confusion, ConvergenceDetector, MetricSeries};
-use crate::model::{memory, ModelDims};
-use crate::net::{Message, TrafficMeter};
-use crate::runtime::{ClientState, Engine, HeadState, ServerState};
-use crate::tensor::{ops, rng::Rng, HostTensor};
+use crate::metrics::MetricSeries;
+use crate::model::memory;
+use crate::runtime::Engine;
 use anyhow::Result;
-use scheduler::make_scheduler;
+
+pub use session::{
+    EvalPoint, RoundCtx, RoundObserver, RoundOutcome, RoundReport, RoundScratch, Scheme,
+    SchedulerLabel, Session, SessionEnv,
+};
 
 /// One round's training record.
 #[derive(Debug, Clone, Copy)]
@@ -42,7 +58,7 @@ pub struct RoundRecord {
 #[derive(Debug)]
 pub struct RunResult {
     pub scheme: SchemeKind,
-    pub scheduler: String,
+    pub scheduler: SchedulerLabel,
     pub rounds: Vec<RoundRecord>,
     pub acc: MetricSeries,
     pub f1: MetricSeries,
@@ -68,528 +84,36 @@ impl RunResult {
     }
 }
 
-/// Preallocated working buffers for the training loop — the per-round
-/// scratch arena.  Allocated once in [`Trainer::new`]; at steady state
-/// every round (client forwards, server steps, client backwards,
-/// aggregation, evaluation) reuses these buffers and performs zero
-/// `HostTensor` allocations (asserted by tests/benches via
-/// `tensor::alloc_count`).
-#[derive(Debug)]
-struct RoundScratch {
-    /// Full-depth aggregate target (eqs. 5–7) + aggregated head —
-    /// shared by `aggregate` and `global_model_into` (their uses never
-    /// overlap).
-    agg_full: AdapterSet,
-    head: HeadState,
-    /// Activations / activation-gradient buffers ([B, L, H]).
-    acts: HostTensor,
-    act_grads: HostTensor,
-    /// Flat batch buffers ([B*L] tokens, [B] labels).
-    tokens: Vec<i32>,
-    labels: Vec<i32>,
-    /// Participant membership mask (reused every aggregation).
-    mask: Vec<bool>,
-}
-
-impl Default for RoundScratch {
-    fn default() -> Self {
-        Self {
-            agg_full: AdapterSet { layers: 0, tensors: Vec::new() },
-            head: HeadState {
-                w: HostTensor::zeros("head.w", vec![0]),
-                b: HostTensor::zeros("head.b", vec![0]),
-            },
-            acts: HostTensor::zeros("acts", vec![0]),
-            act_grads: HostTensor::zeros("act_grads", vec![0]),
-            tokens: Vec::new(),
-            labels: Vec::new(),
-            mask: Vec::new(),
-        }
-    }
-}
-
-/// The experiment driver. Holds per-client data iterators and training
-/// state; `run()` executes one scheme to convergence.
+/// Deprecated single-shot driver, kept as a thin shim over [`Session`]
+/// for older call sites.  New code should construct a `Session`
+/// directly: it exposes round stepping, checkpoint/resume, and
+/// observer-based telemetry.
 pub struct Trainer<'e> {
     engine: &'e Engine,
     cfg: ExperimentConfig,
-    dims_exec: ModelDims,
-    dims_time: ModelDims,
     cuts: Vec<usize>,
-    ds: Dataset,
-    shards: Vec<Vec<usize>>,
-    weights: Vec<f32>,
-    scratch: RoundScratch,
 }
 
 impl<'e> Trainer<'e> {
     pub fn new(engine: &'e Engine, cfg: &ExperimentConfig) -> Result<Self> {
         cfg.validate()?;
-        let dims_exec = engine.dims().clone();
-        let dims_time = cfg.timing_dims();
-        let cuts = cfg.resolve_cuts();
-        let spec = data::CorpusSpec {
-            seed: cfg.train.seed,
-            ..data::CorpusSpec::carer_like(dims_exec.vocab, dims_exec.seq)
-        };
-        let ds = data::generate(&spec);
-        let shards = data::dirichlet_partition(
-            &ds.train,
-            cfg.clients.len(),
-            cfg.train.dirichlet_alpha,
-            cfg.train.seed + 1,
-            dims_exec.batch,
-        );
-        let total: usize = shards.iter().map(|s| s.len()).sum();
-        let weights: Vec<f32> =
-            shards.iter().map(|s| s.len() as f32 / total as f32).collect();
-        let head0 = engine.initial_head()?;
-        let acts_shape = vec![dims_exec.batch, dims_exec.seq, dims_exec.hidden];
-        let scratch = RoundScratch {
-            agg_full: AdapterSet::zeros(&dims_exec, dims_exec.layers),
-            head: HeadState {
-                w: HostTensor::zeros(head0.w.name.clone(), head0.w.shape.clone()),
-                b: HostTensor::zeros(head0.b.name.clone(), head0.b.shape.clone()),
-            },
-            acts: HostTensor::zeros("acts", acts_shape.clone()),
-            act_grads: HostTensor::zeros("act_grads", acts_shape),
-            tokens: Vec::with_capacity(dims_exec.batch * dims_exec.seq),
-            labels: Vec::with_capacity(dims_exec.batch),
-            mask: vec![false; cuts.len()],
-        };
-        Ok(Self {
-            engine,
-            cfg: cfg.clone(),
-            dims_exec,
-            dims_time,
-            cuts,
-            ds,
-            shards,
-            weights,
-            scratch,
-        })
+        Ok(Self { engine, cfg: cfg.clone(), cuts: cfg.resolve_cuts() })
     }
 
     pub fn cuts(&self) -> &[usize] {
         &self.cuts
     }
 
-    pub fn dataset(&self) -> &Dataset {
-        &self.ds
-    }
-
-    fn fresh_states(&self) -> Result<(Vec<ClientState>, Vec<ServerState>)> {
-        let full = self.engine.initial_lora()?;
-        let head = self.engine.initial_head()?;
-        let mut clients = Vec::new();
-        let mut servers = Vec::new();
-        for &k in &self.cuts {
-            let (c, s) = full.split_at(k)?;
-            clients.push(ClientState::fresh(c));
-            servers.push(ServerState::fresh(s, head.clone()));
-        }
-        Ok((clients, servers))
-    }
-
-    /// Data-weighted global model (eqs. 5–8 evaluated without replacing
-    /// per-client state), computed into the scratch arena: the model
-    /// whose accuracy/F1 we track.  Fused aggregation — the per-client
-    /// joins of eq. (5) are scattered straight into the full-depth
-    /// scratch set, so no tensors are allocated.
-    fn global_model_into(
-        &self,
-        clients: &[ClientState],
-        servers: &[ServerState],
-        scratch: &mut RoundScratch,
-    ) -> Result<()> {
-        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> = self
-            .weights
-            .iter()
-            .copied()
-            .zip(clients.iter().zip(servers.iter()))
-            .map(|(w, (c, s))| (w, &c.lora, &s.lora))
-            .collect();
-        fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
-        ops::weighted_sum_into(
-            &self
-                .weights
-                .iter()
-                .copied()
-                .zip(servers.iter().map(|s| &s.head.w))
-                .collect::<Vec<_>>(),
-            &mut scratch.head.w,
-        )?;
-        ops::weighted_sum_into(
-            &self
-                .weights
-                .iter()
-                .copied()
-                .zip(servers.iter().map(|s| &s.head.b))
-                .collect::<Vec<_>>(),
-            &mut scratch.head.b,
-        )?;
-        Ok(())
-    }
-
-    /// Evaluate a model on (up to `eval_batches` of) the test split.
-    pub fn evaluate(&self, lora: &AdapterSet, head: &HeadState) -> Result<(f64, f64, f32)> {
-        let b = self.dims_exec.batch;
-        let n_batches = (self.ds.test.len() / b).min(self.cfg.train.eval_batches);
-        let mut conf = Confusion::new(self.dims_exec.classes);
-        let mut loss_sum = 0.0f32;
-        for i in 0..n_batches {
-            let idx: Vec<usize> = (i * b..(i + 1) * b).collect();
-            let mut tokens = Vec::with_capacity(b * self.dims_exec.seq);
-            let mut labels = Vec::with_capacity(b);
-            for &j in &idx {
-                tokens.extend_from_slice(&self.ds.test[j].tokens);
-                labels.push(self.ds.test[j].label);
-            }
-            let (logits, loss) = self.engine.eval(&tokens, &labels, lora, head)?;
-            conf.record_logits(&logits, &labels);
-            loss_sum += loss;
-        }
-        Ok((conf.accuracy(), conf.macro_f1(), loss_sum / n_batches.max(1) as f32))
-    }
-
-    /// The FedAvg aggregation phase (paper Alg. 1 lines 17–30), fused
-    /// and in place: each participant's halves are scattered straight
-    /// into the full-depth scratch aggregate (A and B separately), then
-    /// re-split at each client's cut by copying back into the existing
-    /// per-client state buffers — no joins, no intermediate sets.
-    /// Only `participants` contribute weight (failure injection); the
-    /// aggregate is still distributed to every client.
-    fn aggregate(
-        &self,
-        clients: &mut [ClientState],
-        servers: &mut [ServerState],
-        participants: &[usize],
-        traffic: &mut TrafficMeter,
-        scratch: &mut RoundScratch,
-    ) -> Result<()> {
-        let total: f32 = participants.iter().map(|&u| self.weights[u]).sum();
-        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> = participants
-            .iter()
-            .map(|&u| (self.weights[u] / total, &clients[u].lora, &servers[u].lora))
-            .collect();
-        fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
-        let head_pairs_w: Vec<(f32, &HostTensor)> = participants
-            .iter()
-            .map(|&u| (self.weights[u] / total, &servers[u].head.w))
-            .collect();
-        ops::weighted_sum_into(&head_pairs_w, &mut scratch.head.w)?;
-        let head_pairs_b: Vec<(f32, &HostTensor)> = participants
-            .iter()
-            .map(|&u| (self.weights[u] / total, &servers[u].head.b))
-            .collect();
-        ops::weighted_sum_into(&head_pairs_b, &mut scratch.head.b)?;
-        // O(n) membership mask (was an O(n²) `contains` scan per round).
-        scratch.mask.iter_mut().for_each(|m| *m = false);
-        for &u in participants {
-            scratch.mask[u] = true;
-        }
-        for (u, &k) in self.cuts.iter().enumerate() {
-            if scratch.mask[u] {
-                traffic.record(&Message::LoraUpload { bytes: self.dims_time.lora_bytes(k) });
-            }
-            scratch.agg_full.split_into(k, &mut clients[u].lora, &mut servers[u].lora)?;
-            ops::copy_from(&mut servers[u].head.w, &scratch.head.w)?;
-            ops::copy_from(&mut servers[u].head.b, &scratch.head.b)?;
-            traffic.record(&Message::LoraDownload { bytes: self.dims_time.lora_bytes(k) });
-        }
-        Ok(())
-    }
-
-    /// Run the configured scheme to convergence. `quiet` suppresses the
-    /// per-round progress lines.  Takes `&mut self` because the run
-    /// reuses the trainer's preallocated scratch arena.
+    /// Run the configured scheme to convergence.  `quiet` suppresses the
+    /// per-round progress lines.
+    #[deprecated(
+        note = "use Session::run_to_convergence with a telemetry::StdoutObserver instead"
+    )]
     pub fn run(&mut self, quiet: bool) -> Result<RunResult> {
-        // Detach the arena for the duration of the run so the hot loop
-        // can borrow it mutably alongside `&self`.
-        let mut scratch = std::mem::take(&mut self.scratch);
-        let out = match self.cfg.scheme {
-            SchemeKind::Ours | SchemeKind::Sfl => self.run_parallel(quiet, &mut scratch),
-            SchemeKind::Sl => self.run_sl(quiet),
-        };
-        self.scratch = scratch;
-        out
-    }
-
-    /// Ours and SFL share numerics (per-client independent split training
-    /// + periodic aggregation); they differ in timing and memory.
-    /// Steady state is allocation-free: every buffer the inner loop
-    /// touches lives in `scratch` or in the per-client states, updated
-    /// in place.
-    fn run_parallel(&self, quiet: bool, scratch: &mut RoundScratch) -> Result<RunResult> {
-        let wall = std::time::Instant::now();
-        let t = &self.cfg.train;
-        let (mut clients, mut servers) = self.fresh_states()?;
-        let mut iters: Vec<BatchIter> = self
-            .shards
-            .iter()
-            .enumerate()
-            .map(|(u, s)| BatchIter::new(s, self.dims_exec.batch, t.seed + 100 + u as u64))
-            .collect();
-        let mut sched = make_scheduler(self.cfg.scheduler, t.seed);
-        let mut detector = ConvergenceDetector::new(t.patience, t.min_delta);
-        let mut traffic = TrafficMeter::default();
-        let mut switches = 0u64;
-        let mut last_active: Option<usize> = None;
-        let mut sim_time = 0.0f64;
-        let mut rounds = Vec::new();
-        let mut acc_series = MetricSeries::default();
-        let mut f1_series = MetricSeries::default();
-        let (mut final_acc, mut final_f1) = (0.0, 0.0);
-
-        let exec0 = self.engine.exec_count();
-        let mut dropout_rng = Rng::new(t.seed ^ 0xD809);
-        for round in 1..=t.max_rounds {
-            let round_lr = t.lr_schedule.at(t.lr, round);
-            // ---- failure injection: which clients participate? ----
-            let participants: Vec<usize> = if t.dropout_prob > 0.0 {
-                let mut p: Vec<usize> = (0..self.cuts.len())
-                    .filter(|_| dropout_rng.uniform() >= t.dropout_prob)
-                    .collect();
-                if p.is_empty() {
-                    // Never stall a round entirely: keep one survivor.
-                    p.push(dropout_rng.below(self.cuts.len()));
-                }
-                p
-            } else {
-                (0..self.cuts.len()).collect()
-            };
-            let part_clients: Vec<crate::config::ClientConfig> =
-                participants.iter().map(|&u| self.cfg.clients[u].clone()).collect();
-            let part_cuts: Vec<usize> = participants.iter().map(|&u| self.cuts[u]).collect();
-
-            // ---- timing for this round (virtual clock, paper dims) ----
-            let step_time = match self.cfg.scheme {
-                SchemeKind::Ours => {
-                    let (st, _) = timing::ours_step(
-                        &self.dims_time,
-                        &part_clients,
-                        &part_cuts,
-                        &self.cfg.server,
-                        sched.as_mut(),
-                    );
-                    st
-                }
-                SchemeKind::Sfl => {
-                    let (st, _) =
-                        timing::sfl_step(&self.dims_time, &part_clients, &part_cuts, &self.cfg.server);
-                    st
-                }
-                SchemeKind::Sl => unreachable!(),
-            };
-            sim_time += t.steps_per_round as f64 * step_time;
-
-            // ---- numeric training: steps_per_round per participant ----
-            // In-place hot loop: batches materialize into reused
-            // buffers, activations/grads land in scratch, and the
-            // client/server states update their own tensors.
-            let mut loss_sum = 0.0f32;
-            let mut loss_n = 0u32;
-            for _ in 0..t.steps_per_round {
-                // Server processing order (adapter switching bookkeeping).
-                let jobs =
-                    timing::build_jobs(&self.dims_time, &part_clients, &part_cuts, &self.cfg.server);
-                let order: Vec<usize> =
-                    sched.order(&jobs).into_iter().map(|i| participants[i]).collect();
-                for &u in &order {
-                    let k = self.cuts[u];
-                    let idx = iters[u].next_batch();
-                    data::materialize_batch_into(
-                        &self.ds,
-                        idx,
-                        &mut scratch.tokens,
-                        &mut scratch.labels,
-                    );
-                    self.engine.client_fwd_into(
-                        k,
-                        &scratch.tokens,
-                        &clients[u].lora,
-                        &mut scratch.acts,
-                    )?;
-                    traffic.record(&Message::Activations {
-                        bytes: self.dims_time.activation_bytes(),
-                    });
-                    if last_active != Some(u) {
-                        switches += 1;
-                        last_active = Some(u);
-                    }
-                    let loss = self.engine.server_step_into(
-                        k,
-                        &scratch.acts,
-                        &scratch.labels,
-                        &mut servers[u],
-                        &mut scratch.act_grads,
-                        round_lr,
-                    )?;
-                    traffic.record(&Message::ActivationGrads {
-                        bytes: self.dims_time.activation_bytes(),
-                    });
-                    self.engine.client_bwd_into(
-                        k,
-                        &scratch.tokens,
-                        &mut clients[u],
-                        &scratch.act_grads,
-                        round_lr,
-                    )?;
-                    loss_sum += loss;
-                    loss_n += 1;
-                }
-            }
-            let mean_loss = loss_sum / loss_n.max(1) as f32;
-            rounds.push(RoundRecord { round, sim_time, mean_loss });
-
-            // ---- aggregation every I rounds (paper line 17) ----
-            if round % t.aggregation_interval == 0 {
-                sim_time +=
-                    timing::aggregation_time(&self.dims_time, &part_clients, &part_cuts);
-                self.aggregate(&mut clients, &mut servers, &participants, &mut traffic, scratch)?;
-            }
-
-            // ---- evaluation + convergence ----
-            if round % t.eval_interval == 0 {
-                self.global_model_into(&clients, &servers, scratch)?;
-                let (acc, f1, _eval_loss) = self.evaluate(&scratch.agg_full, &scratch.head)?;
-                acc_series.push(round, sim_time, acc);
-                f1_series.push(round, sim_time, f1);
-                final_acc = acc;
-                final_f1 = f1;
-                if !quiet {
-                    println!(
-                        "[{:?}/{}] round {round:4}  t={sim_time:9.1}s  loss={mean_loss:.4}  acc={acc:.4}  f1={f1:.4}",
-                        self.cfg.scheme,
-                        sched.name()
-                    );
-                }
-                if detector.update(round, sim_time, acc) {
-                    break;
-                }
-            }
+        let mut session = Session::new(self.engine, &self.cfg)?;
+        if !quiet {
+            session.add_observer(Box::new(crate::telemetry::StdoutObserver));
         }
-
-        let mem = match self.cfg.scheme {
-            SchemeKind::Sfl => memory::sfl_server_memory(&self.dims_time, &self.cuts),
-            _ => memory::ours_server_memory(&self.dims_time, &self.cuts),
-        };
-        Ok(RunResult {
-            scheme: self.cfg.scheme,
-            scheduler: sched.name().to_string(),
-            rounds,
-            acc: acc_series,
-            f1: f1_series,
-            convergence_round: detector.converged().map(|(r, _)| r),
-            convergence_time: detector.converged().map(|(_, t)| t),
-            final_acc,
-            final_f1,
-            memory_mb: mem.total_mb(),
-            memory: mem,
-            adapter_switches: switches,
-            executions: self.engine.exec_count() - exec0,
-            uplink_bytes: traffic.uplink_bytes,
-            downlink_bytes: traffic.downlink_bytes,
-            wall_secs: wall.elapsed().as_secs_f64(),
-        })
-    }
-
-    /// Sequential split learning: one global adapter set relayed through
-    /// the clients; no aggregation (baseline [18]).
-    fn run_sl(&self, quiet: bool) -> Result<RunResult> {
-        let wall = std::time::Instant::now();
-        let t = &self.cfg.train;
-        let mut full = self.engine.initial_lora()?;
-        let mut head = self.engine.initial_head()?;
-        let mut iters: Vec<BatchIter> = self
-            .shards
-            .iter()
-            .enumerate()
-            .map(|(u, s)| BatchIter::new(s, self.dims_exec.batch, t.seed + 100 + u as u64))
-            .collect();
-        let mut detector = ConvergenceDetector::new(t.patience, t.min_delta);
-        let mut traffic = TrafficMeter::default();
-        let mut sim_time = 0.0f64;
-        let mut rounds = Vec::new();
-        let mut acc_series = MetricSeries::default();
-        let mut f1_series = MetricSeries::default();
-        let (mut final_acc, mut final_f1) = (0.0, 0.0);
-        let exec0 = self.engine.exec_count();
-
-        for round in 1..=t.max_rounds {
-            let round_lr = t.lr_schedule.at(t.lr, round);
-            sim_time += timing::sl_round(
-                &self.dims_time,
-                &self.cfg.clients,
-                &self.cuts,
-                &self.cfg.server,
-                t.steps_per_round,
-            );
-            let mut loss_sum = 0.0f32;
-            let mut loss_n = 0u32;
-            for (u, &k) in self.cuts.iter().enumerate() {
-                // Client u receives the current global model (relay).
-                let (clora, slora) = full.split_at(k)?;
-                let mut cstate = ClientState::fresh(clora);
-                let mut sstate = ServerState::fresh(slora, head.clone());
-                for _ in 0..t.steps_per_round {
-                    let idx = iters[u].next_batch().to_vec();
-                    let (tokens, labels) = data::materialize_batch(&self.ds, &idx);
-                    let acts = self.engine.client_fwd(k, &tokens, &cstate.lora)?;
-                    traffic.record(&Message::Activations {
-                        bytes: self.dims_time.activation_bytes(),
-                    });
-                    let out = self.engine.server_step(k, &acts, &labels, &sstate, round_lr)?;
-                    sstate = out.state;
-                    traffic.record(&Message::ActivationGrads {
-                        bytes: self.dims_time.activation_bytes(),
-                    });
-                    cstate =
-                        self.engine.client_bwd(k, &tokens, &cstate, &out.act_grads, round_lr)?;
-                    loss_sum += out.loss;
-                    loss_n += 1;
-                }
-                full = AdapterSet::join(&cstate.lora, &sstate.lora)?;
-                head = sstate.head;
-            }
-            let mean_loss = loss_sum / loss_n.max(1) as f32;
-            rounds.push(RoundRecord { round, sim_time, mean_loss });
-
-            if round % t.eval_interval == 0 {
-                let (acc, f1, _) = self.evaluate(&full, &head)?;
-                acc_series.push(round, sim_time, acc);
-                f1_series.push(round, sim_time, f1);
-                final_acc = acc;
-                final_f1 = f1;
-                if !quiet {
-                    println!(
-                        "[Sl] round {round:4}  t={sim_time:9.1}s  loss={mean_loss:.4}  acc={acc:.4}  f1={f1:.4}"
-                    );
-                }
-                if detector.update(round, sim_time, acc) {
-                    break;
-                }
-            }
-        }
-
-        let mem = memory::sl_server_memory(&self.dims_time, &self.cuts);
-        Ok(RunResult {
-            scheme: SchemeKind::Sl,
-            scheduler: "sequential".into(),
-            rounds,
-            acc: acc_series,
-            f1: f1_series,
-            convergence_round: detector.converged().map(|(r, _)| r),
-            convergence_time: detector.converged().map(|(_, t)| t),
-            final_acc,
-            final_f1,
-            memory_mb: mem.total_mb(),
-            memory: mem,
-            adapter_switches: 0,
-            executions: self.engine.exec_count() - exec0,
-            uplink_bytes: traffic.uplink_bytes,
-            downlink_bytes: traffic.downlink_bytes,
-            wall_secs: wall.elapsed().as_secs_f64(),
-        })
+        session.run_to_convergence()
     }
 }

@@ -33,6 +33,12 @@ pub trait Scheduler {
     fn name(&self) -> &'static str;
     /// Return client ids in server processing order.
     fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize>;
+    /// Internal RNG state, if the policy is stateful (checkpoint/resume).
+    fn rng_state(&self) -> Option<u64> {
+        None
+    }
+    /// Restore a stateful policy's RNG from [`Scheduler::rng_state`].
+    fn set_rng_state(&mut self, _state: u64) {}
 }
 
 /// Alg. 2 — sort descending by N_c^u / C_u (longest client backward
@@ -122,6 +128,14 @@ impl Scheduler for RandomScheduler {
             ids.swap(i, j);
         }
         ids
+    }
+
+    fn rng_state(&self) -> Option<u64> {
+        Some(self.rng.state())
+    }
+
+    fn set_rng_state(&mut self, state: u64) {
+        self.rng = Rng::from_state(state);
     }
 }
 

@@ -1,0 +1,1327 @@
+//! The round-stepped Session API: a [`Session`] drives any [`Scheme`]
+//! one round at a time, owning every piece of shared bookkeeping exactly
+//! once — sim-clock accrual, traffic metering, convergence detection,
+//! metric series, the LR schedule, dropout sampling, and `RunResult`
+//! assembly.  Schemes implement only the per-round orchestration that
+//! actually differs between them (~100 lines each), so new baselines
+//! and scenarios plug in without touching the driver.
+//!
+//! - [`Session::step_round`] runs one round and returns a [`RoundReport`]
+//!   (streamed to every registered [`RoundObserver`]).
+//! - [`Session::run_to_convergence`] loops `step_round` until the
+//!   convergence detector fires or `max_rounds` is reached.
+//! - [`Session::checkpoint`] / [`Session::resume`] persist and restore
+//!   the *entire* session (model state, optimizer moments, batch
+//!   iterators, RNG streams, metric series, traffic counters) so the
+//!   remaining rounds replay bit-identically to an uninterrupted run.
+//!
+//! All three schemes share the zero-allocation steady state: training
+//! buffers live in the per-scheme states and the session's
+//! [`RoundScratch`] arena, updated in place via the runtime's `*_into`
+//! primitives.
+
+use crate::checkpoint::{decode_f64s, decode_u64s, encode_f64s, encode_u64s, write_sflp};
+use crate::config::{ClientConfig, ExperimentConfig, SchedulerKind, SchemeKind};
+use crate::coordinator::lr::LrSchedule;
+use crate::coordinator::scheduler::{make_scheduler, JobInfo, Scheduler};
+use crate::coordinator::timing;
+use crate::coordinator::{RoundRecord, RunResult};
+use crate::data::{self, BatchIter, Dataset};
+use crate::lora::{fedavg_joined_into, AdapterSet, LORA_KEYS};
+use crate::metrics::{Confusion, ConvergenceDetector, MetricSeries};
+use crate::model::{memory, memory::MemoryBreakdown, ModelDims};
+use crate::net::{Message, TrafficMeter};
+use crate::runtime::{AdamState, ClientState, Engine, HeadState, ServerState};
+use crate::tensor::{ops, rng::Rng, store::ParamStore, HostTensor};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Enum-backed scheduler label shared by `RunResult` and
+/// `telemetry::summary` — SL reports its fixed relay order, every other
+/// scheme reports the configured scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerLabel {
+    /// SL's fixed client relay — no scheduler runs.
+    Sequential,
+    /// A pluggable server-order policy (Alg. 2 / FIFO / WF / Random).
+    Scheduled(SchedulerKind),
+}
+
+impl std::fmt::Display for SchedulerLabel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedulerLabel::Sequential => write!(f, "sequential"),
+            // One mapping, owned by SchedulerKind's Display.
+            SchedulerLabel::Scheduled(k) => write!(f, "{k}"),
+        }
+    }
+}
+
+/// Immutable experiment environment shared by the session and every
+/// scheme: the engine, the resolved configuration, and the data layout.
+pub struct SessionEnv<'e> {
+    pub engine: &'e Engine,
+    pub cfg: ExperimentConfig,
+    /// Dims of the artifacts executed numerically.
+    pub dims_exec: ModelDims,
+    /// Dims driving the analytic timing/memory model.
+    pub dims_time: ModelDims,
+    /// Resolved cut point per client.
+    pub cuts: Vec<usize>,
+    pub ds: Dataset,
+    /// Per-client example-index shards (non-IID Dirichlet partition).
+    pub shards: Vec<Vec<usize>>,
+    /// Data-size aggregation weights |D_u|/|D|.
+    pub weights: Vec<f32>,
+}
+
+impl SessionEnv<'_> {
+    /// Evaluate a model on (up to `eval_batches` of) the test split:
+    /// returns (accuracy, macro-F1, mean loss).
+    pub fn evaluate(&self, lora: &AdapterSet, head: &HeadState) -> Result<(f64, f64, f32)> {
+        let b = self.dims_exec.batch;
+        let n_batches = (self.ds.test.len() / b).min(self.cfg.train.eval_batches);
+        let mut conf = Confusion::new(self.dims_exec.classes);
+        let mut loss_sum = 0.0f32;
+        for i in 0..n_batches {
+            let idx: Vec<usize> = (i * b..(i + 1) * b).collect();
+            let mut tokens = Vec::with_capacity(b * self.dims_exec.seq);
+            let mut labels = Vec::with_capacity(b);
+            for &j in &idx {
+                tokens.extend_from_slice(&self.ds.test[j].tokens);
+                labels.push(self.ds.test[j].label);
+            }
+            let (logits, loss) = self.engine.eval(&tokens, &labels, lora, head)?;
+            conf.record_logits(&logits, &labels);
+            loss_sum += loss;
+        }
+        Ok((conf.accuracy(), conf.macro_f1(), loss_sum / n_batches.max(1) as f32))
+    }
+}
+
+/// Preallocated working buffers shared by all schemes — the per-round
+/// scratch arena.  Allocated once in [`Session::new`]; at steady state
+/// every round (client forwards, server steps, client backwards,
+/// aggregation, evaluation) reuses these buffers and performs zero
+/// `HostTensor` allocations (asserted by tests via `tensor::alloc_count`).
+#[derive(Debug)]
+pub struct RoundScratch {
+    /// Full-depth aggregate target (eqs. 5–7) + aggregated head —
+    /// shared by aggregation and `eval_model` (their uses never overlap).
+    pub agg_full: AdapterSet,
+    pub head: HeadState,
+    /// Activations / activation-gradient buffers ([B, L, H]).
+    pub acts: HostTensor,
+    pub act_grads: HostTensor,
+    /// Flat batch buffers ([B*L] tokens, [B] labels).
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    /// Participant membership mask (reused every aggregation).
+    pub mask: Vec<bool>,
+}
+
+/// Everything one round hands a [`Scheme`]: the shared environment, the
+/// session-computed round inputs (LR, participants, prebuilt timing
+/// jobs, aggregation flag), and mutable access to the traffic meter and
+/// scratch arena.  Jobs are built once per round — they depend only on
+/// the round's participants, not the step.
+pub struct RoundCtx<'a, 'e> {
+    pub env: &'a SessionEnv<'e>,
+    /// 1-based round number.
+    pub round: usize,
+    /// This round's learning rate (LR schedule applied by the session).
+    pub round_lr: f32,
+    /// Participating client ids (dropout sampling applied by the session).
+    pub participants: &'a [usize],
+    /// Participant-ordered client configs / cuts (timing-model inputs).
+    pub part_clients: &'a [ClientConfig],
+    pub part_cuts: &'a [usize],
+    /// Timing jobs for the participants, built once per round.
+    pub jobs: &'a [JobInfo],
+    /// Whether this round ends with a LoRA aggregation (paper line 17).
+    pub aggregate: bool,
+    pub traffic: &'a mut TrafficMeter,
+    pub scratch: &'a mut RoundScratch,
+}
+
+/// What one scheme round reports back for shared bookkeeping.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundOutcome {
+    /// Virtual time consumed by the round's training steps (accrued
+    /// before the round record is written).
+    pub train_elapsed: f64,
+    /// Virtual time consumed by the aggregation phase, if any (accrued
+    /// after the round record — Table I counts it toward the next eval).
+    pub agg_elapsed: f64,
+    pub mean_loss: f32,
+}
+
+/// Evaluation point attached to a [`RoundReport`] on eval rounds.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalPoint {
+    pub acc: f64,
+    pub f1: f64,
+    /// True once the convergence detector has fired.
+    pub converged: bool,
+}
+
+/// One round's observable record, streamed to every [`RoundObserver`].
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    pub scheme: SchemeKind,
+    pub scheduler: SchedulerLabel,
+    /// 1-based round number.
+    pub round: usize,
+    /// Virtual clock after this round (aggregation included).
+    pub sim_time: f64,
+    pub mean_loss: f32,
+    /// Client ids that participated (failure injection visibility).
+    pub participants: Vec<usize>,
+    /// Present on eval rounds.
+    pub eval: Option<EvalPoint>,
+}
+
+/// Streaming sink for round telemetry — replaces the old `quiet: bool`
+/// flag.  Stdout progress and JSON-lines telemetry are two observers
+/// (`telemetry::StdoutObserver`, `telemetry::JsonLinesObserver`).
+pub trait RoundObserver {
+    fn on_round(&mut self, report: &RoundReport);
+    /// Called once by [`Session::run_to_convergence`] with the final result.
+    fn on_complete(&mut self, _result: &RunResult) {}
+}
+
+/// Per-round orchestration — the only thing that differs between the
+/// paper's schemes.  Implementations own their training state (client /
+/// server LoRA, optimizer moments, batch iterators); everything shared
+/// lives in the [`Session`].
+pub trait Scheme {
+    /// Label reported in `RunResult.scheduler`.
+    fn scheduler(&self) -> SchedulerLabel;
+    /// Execute one round: timing + numeric training (+ aggregation when
+    /// `ctx.aggregate`), returning the virtual-time and loss outcome.
+    fn round(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<RoundOutcome>;
+    /// The model whose accuracy/F1 the session tracks.  May be computed
+    /// into `scratch` (parallel schemes) or borrowed from own state (SL).
+    fn eval_model<'s>(
+        &'s mut self,
+        env: &SessionEnv<'_>,
+        scratch: &'s mut RoundScratch,
+    ) -> Result<(&'s AdapterSet, &'s HeadState)>;
+    /// Analytic server-memory accountant for this scheme.
+    fn memory(&self, env: &SessionEnv<'_>) -> MemoryBreakdown;
+    /// Server adapter switches so far (0 for schemes without switching).
+    fn adapter_switches(&self) -> u64 {
+        0
+    }
+    /// Persist scheme-owned training state as named tensors
+    /// (`scheme.*` namespace) for [`Session::checkpoint`].
+    fn save_state(&self, out: &mut Vec<(String, HostTensor)>);
+    /// Restore scheme-owned state saved by [`Scheme::save_state`].
+    fn load_state(&mut self, store: &ParamStore) -> Result<()>;
+}
+
+/// Build the scheme configured in `env.cfg.scheme`.
+fn make_scheme(env: &SessionEnv<'_>) -> Result<Box<dyn Scheme>> {
+    Ok(match env.cfg.scheme {
+        SchemeKind::Ours => Box::new(OursScheme { core: ParallelCore::new(env)? }),
+        SchemeKind::Sfl => Box::new(SflScheme { core: ParallelCore::new(env)? }),
+        SchemeKind::Sl => Box::new(SlScheme::new(env)?),
+    })
+}
+
+fn scheme_tag(kind: SchemeKind) -> i32 {
+    match kind {
+        SchemeKind::Ours => 0,
+        SchemeKind::Sl => 1,
+        SchemeKind::Sfl => 2,
+    }
+}
+
+fn sched_tag(kind: SchedulerKind) -> u64 {
+    match kind {
+        SchedulerKind::Proposed => 0,
+        SchedulerKind::Fifo => 1,
+        SchedulerKind::WorkloadFirst => 2,
+        SchedulerKind::Random => 3,
+    }
+}
+
+/// The config fingerprint stored in a checkpoint and verified on resume:
+/// every knob listed here changes the replayed numerics or RNG streams,
+/// so resuming under a different value would silently corrupt results.
+/// `max_rounds` is deliberately absent — extending the horizon of a
+/// resumed run is legitimate.
+fn train_fingerprint(cfg: &ExperimentConfig) -> Vec<(&'static str, u64)> {
+    let t = &cfg.train;
+    let (lrs_tag, lrs_p1, lrs_p2) = match t.lr_schedule {
+        LrSchedule::Constant => (0u64, 0u64, 0u64),
+        LrSchedule::Linear { horizon, floor } => (1, horizon as u64, floor.to_bits() as u64),
+        LrSchedule::Cosine { horizon, floor } => (2, horizon as u64, floor.to_bits() as u64),
+        LrSchedule::Warmup { warmup } => (3, warmup as u64, 0),
+    };
+    vec![
+        ("seed", t.seed),
+        ("scheduler", sched_tag(cfg.scheduler)),
+        ("steps_per_round", t.steps_per_round as u64),
+        ("aggregation_interval", t.aggregation_interval as u64),
+        ("eval_interval", t.eval_interval as u64),
+        ("eval_batches", t.eval_batches as u64),
+        ("patience", t.patience as u64),
+        ("min_delta", t.min_delta.to_bits()),
+        ("dirichlet_alpha", t.dirichlet_alpha.to_bits()),
+        ("dropout_prob", t.dropout_prob.to_bits()),
+        ("lr", t.lr.to_bits() as u64),
+        ("lr_schedule", lrs_tag),
+        ("lr_schedule_horizon", lrs_p1),
+        ("lr_schedule_floor", lrs_p2),
+    ]
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint plumbing shared by the scheme impls.
+// ---------------------------------------------------------------------
+
+/// Copy a stored tensor's payload into an existing buffer (shape- and
+/// dtype-checked) — resume never swaps buffers, only refills them.
+fn load_into(store: &ParamStore, key: &str, dst: &mut HostTensor) -> Result<()> {
+    ops::copy_from(dst, store.get(key)?)
+}
+
+/// Decode a u64 tensor and require at least `n` elements — malformed
+/// checkpoints must surface as errors, not index panics.
+fn u64s_exact(store: &ParamStore, key: &str, n: usize) -> Result<Vec<u64>> {
+    let v = decode_u64s(store.get(key)?)?;
+    if v.len() < n {
+        bail!("checkpoint tensor {key} has {} values, expected {n}", v.len());
+    }
+    Ok(v)
+}
+
+fn one_u64(store: &ParamStore, key: &str) -> Result<u64> {
+    Ok(u64s_exact(store, key, 1)?[0])
+}
+
+/// Decode an f64 tensor and require at least `n` elements.
+fn f64s_exact(store: &ParamStore, key: &str, n: usize) -> Result<Vec<f64>> {
+    let v = decode_f64s(store.get(key)?)?;
+    if v.len() < n {
+        bail!("checkpoint tensor {key} has {} values, expected {n}", v.len());
+    }
+    Ok(v)
+}
+
+fn one_f64(store: &ParamStore, key: &str) -> Result<f64> {
+    Ok(f64s_exact(store, key, 1)?[0])
+}
+
+/// Read a single i32 scalar, erroring (not panicking) on empty tensors.
+fn one_i32(store: &ParamStore, key: &str) -> Result<i32> {
+    store
+        .get(key)?
+        .as_i32()?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("checkpoint tensor {key} is empty"))
+}
+
+fn save_adapters(out: &mut Vec<(String, HostTensor)>, prefix: &str, set: &AdapterSet) {
+    for (t, key) in set.tensors.iter().zip(LORA_KEYS.iter()) {
+        out.push((format!("{prefix}.{key}"), t.clone()));
+    }
+}
+
+fn load_adapters(store: &ParamStore, prefix: &str, set: &mut AdapterSet) -> Result<()> {
+    for (t, key) in set.tensors.iter_mut().zip(LORA_KEYS.iter()) {
+        load_into(store, &format!("{prefix}.{key}"), t)?;
+    }
+    Ok(())
+}
+
+fn save_adam(out: &mut Vec<(String, HostTensor)>, prefix: &str, adam: &AdamState) {
+    for (i, t) in adam.m.iter().enumerate() {
+        out.push((format!("{prefix}.m{i}"), t.clone()));
+    }
+    for (i, t) in adam.v.iter().enumerate() {
+        out.push((format!("{prefix}.v{i}"), t.clone()));
+    }
+}
+
+fn load_adam(store: &ParamStore, prefix: &str, adam: &mut AdamState) -> Result<()> {
+    for (i, t) in adam.m.iter_mut().enumerate() {
+        load_into(store, &format!("{prefix}.m{i}"), t)?;
+    }
+    for (i, t) in adam.v.iter_mut().enumerate() {
+        load_into(store, &format!("{prefix}.v{i}"), t)?;
+    }
+    Ok(())
+}
+
+fn save_iters(out: &mut Vec<(String, HostTensor)>, iters: &[BatchIter]) {
+    for (u, it) in iters.iter().enumerate() {
+        let (indices, cursor, rng) = it.state();
+        let idx32: Vec<i32> = indices.iter().map(|&x| x as i32).collect();
+        let n = idx32.len();
+        out.push((
+            format!("scheme.iter{u}.indices"),
+            HostTensor::i32(format!("scheme.iter{u}.indices"), vec![n], idx32),
+        ));
+        out.push((format!("scheme.iter{u}.cursor"), encode_u64s("cursor", &[cursor as u64])));
+        out.push((format!("scheme.iter{u}.rng"), encode_u64s("rng", &[rng])));
+    }
+}
+
+fn load_iters(store: &ParamStore, iters: &mut [BatchIter]) -> Result<()> {
+    for (u, it) in iters.iter_mut().enumerate() {
+        let raw = store.get(&format!("scheme.iter{u}.indices"))?.as_i32()?;
+        if raw.iter().any(|&x| x < 0) {
+            bail!("checkpoint iter{u} contains a negative dataset index");
+        }
+        let indices: Vec<usize> = raw.iter().map(|&x| x as usize).collect();
+        // The restored order must be a permutation of the iterator's own
+        // shard — anything else is a corrupted or mismatched checkpoint
+        // and must error here, not panic in next_batch() later.
+        let mut restored = indices.clone();
+        restored.sort_unstable();
+        let mut current = it.state().0.to_vec();
+        current.sort_unstable();
+        if restored != current {
+            bail!("checkpoint iter{u} indices are not a permutation of the client's shard");
+        }
+        let cursor = one_u64(store, &format!("scheme.iter{u}.cursor"))? as usize;
+        if cursor > indices.len() {
+            bail!("checkpoint iter{u} cursor {cursor} exceeds shard size {}", indices.len());
+        }
+        let rng = one_u64(store, &format!("scheme.iter{u}.rng"))?;
+        it.restore_state(indices, cursor, rng);
+    }
+    Ok(())
+}
+
+fn fresh_iters(env: &SessionEnv<'_>) -> Vec<BatchIter> {
+    env.shards
+        .iter()
+        .enumerate()
+        .map(|(u, s)| {
+            BatchIter::new(s, env.dims_exec.batch, env.cfg.train.seed + 100 + u as u64)
+        })
+        .collect()
+}
+
+/// Zero an optimizer's moments and reset its owner's step counter —
+/// SL's per-visit `fresh` semantics without allocating.
+fn reset_adam(adam: &mut AdamState) -> Result<()> {
+    for t in adam.m.iter_mut().chain(adam.v.iter_mut()) {
+        t.as_f32_mut()?.fill(0.0);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Parallel core — the training state Ours and SFL share (their numerics
+// are identical; only timing and memory accounting differ).
+// ---------------------------------------------------------------------
+
+struct ParallelCore {
+    clients: Vec<ClientState>,
+    servers: Vec<ServerState>,
+    iters: Vec<BatchIter>,
+    sched: Box<dyn Scheduler>,
+    kind: SchedulerKind,
+    last_active: Option<usize>,
+    switches: u64,
+}
+
+impl ParallelCore {
+    fn new(env: &SessionEnv<'_>) -> Result<Self> {
+        let full = env.engine.initial_lora()?;
+        let head = env.engine.initial_head()?;
+        let mut clients = Vec::new();
+        let mut servers = Vec::new();
+        for &k in &env.cuts {
+            let (c, s) = full.split_at(k)?;
+            clients.push(ClientState::fresh(c));
+            servers.push(ServerState::fresh(s, head.clone()));
+        }
+        Ok(Self {
+            clients,
+            servers,
+            iters: fresh_iters(env),
+            sched: make_scheduler(env.cfg.scheduler, env.cfg.train.seed),
+            kind: env.cfg.scheduler,
+            last_active: None,
+            switches: 0,
+        })
+    }
+
+    /// The round shape Ours and SFL share: accrue `steps_per_round ×
+    /// step_time`, train, then aggregate when the session says so.
+    /// Only `step_time` (the schemes' timing models) differs.
+    fn run_round(&mut self, ctx: &mut RoundCtx<'_, '_>, step_time: f64) -> Result<RoundOutcome> {
+        let env = ctx.env;
+        let train_elapsed = env.cfg.train.steps_per_round as f64 * step_time;
+        let mean_loss = self.train_steps(ctx)?;
+        let agg_elapsed = if ctx.aggregate {
+            self.aggregate(env, ctx.participants, ctx.traffic, ctx.scratch)?;
+            timing::aggregation_time(&env.dims_time, ctx.part_clients, ctx.part_cuts)
+        } else {
+            0.0
+        };
+        Ok(RoundOutcome { train_elapsed, agg_elapsed, mean_loss })
+    }
+
+    /// `steps_per_round` mini-batch steps per participant, in scheduled
+    /// server order, all in place.  Returns the mean training loss.
+    fn train_steps(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<f32> {
+        let env = ctx.env;
+        let participants = ctx.participants;
+        let jobs = ctx.jobs;
+        let steps = env.cfg.train.steps_per_round;
+        let mut loss_sum = 0.0f32;
+        let mut loss_n = 0u32;
+        for _ in 0..steps {
+            // Server processing order (adapter-switching bookkeeping).
+            let order: Vec<usize> =
+                self.sched.order(jobs).into_iter().map(|i| participants[i]).collect();
+            for &u in &order {
+                let k = env.cuts[u];
+                let idx = self.iters[u].next_batch();
+                data::materialize_batch_into(
+                    &env.ds,
+                    idx,
+                    &mut ctx.scratch.tokens,
+                    &mut ctx.scratch.labels,
+                );
+                env.engine.client_fwd_into(
+                    k,
+                    &ctx.scratch.tokens,
+                    &self.clients[u].lora,
+                    &mut ctx.scratch.acts,
+                )?;
+                ctx.traffic
+                    .record(&Message::Activations { bytes: env.dims_time.activation_bytes() });
+                if self.last_active != Some(u) {
+                    self.switches += 1;
+                    self.last_active = Some(u);
+                }
+                let loss = env.engine.server_step_into(
+                    k,
+                    &ctx.scratch.acts,
+                    &ctx.scratch.labels,
+                    &mut self.servers[u],
+                    &mut ctx.scratch.act_grads,
+                    ctx.round_lr,
+                )?;
+                ctx.traffic
+                    .record(&Message::ActivationGrads { bytes: env.dims_time.activation_bytes() });
+                env.engine.client_bwd_into(
+                    k,
+                    &ctx.scratch.tokens,
+                    &mut self.clients[u],
+                    &ctx.scratch.act_grads,
+                    ctx.round_lr,
+                )?;
+                loss_sum += loss;
+                loss_n += 1;
+            }
+        }
+        Ok(loss_sum / loss_n.max(1) as f32)
+    }
+
+    /// The FedAvg aggregation phase (paper Alg. 1 lines 17–30), fused
+    /// and in place: each participant's halves are scattered straight
+    /// into the full-depth scratch aggregate, then re-split at each
+    /// client's cut back into the per-client state buffers.  Only
+    /// participants contribute weight (failure injection); the aggregate
+    /// is still distributed to every client.
+    fn aggregate(
+        &mut self,
+        env: &SessionEnv<'_>,
+        participants: &[usize],
+        traffic: &mut TrafficMeter,
+        scratch: &mut RoundScratch,
+    ) -> Result<()> {
+        let total: f32 = participants.iter().map(|&u| env.weights[u]).sum();
+        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> = participants
+            .iter()
+            .map(|&u| (env.weights[u] / total, &self.clients[u].lora, &self.servers[u].lora))
+            .collect();
+        fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
+        let head_pairs_w: Vec<(f32, &HostTensor)> = participants
+            .iter()
+            .map(|&u| (env.weights[u] / total, &self.servers[u].head.w))
+            .collect();
+        ops::weighted_sum_into(&head_pairs_w, &mut scratch.head.w)?;
+        let head_pairs_b: Vec<(f32, &HostTensor)> = participants
+            .iter()
+            .map(|&u| (env.weights[u] / total, &self.servers[u].head.b))
+            .collect();
+        ops::weighted_sum_into(&head_pairs_b, &mut scratch.head.b)?;
+        // O(n) membership mask.
+        scratch.mask.iter_mut().for_each(|m| *m = false);
+        for &u in participants {
+            scratch.mask[u] = true;
+        }
+        for (u, &k) in env.cuts.iter().enumerate() {
+            if scratch.mask[u] {
+                traffic.record(&Message::LoraUpload { bytes: env.dims_time.lora_bytes(k) });
+            }
+            scratch.agg_full.split_into(k, &mut self.clients[u].lora, &mut self.servers[u].lora)?;
+            ops::copy_from(&mut self.servers[u].head.w, &scratch.head.w)?;
+            ops::copy_from(&mut self.servers[u].head.b, &scratch.head.b)?;
+            traffic.record(&Message::LoraDownload { bytes: env.dims_time.lora_bytes(k) });
+        }
+        Ok(())
+    }
+
+    /// Data-weighted global model (eqs. 5–8 evaluated without replacing
+    /// per-client state), computed into the scratch arena.
+    fn global_model_into(&self, env: &SessionEnv<'_>, scratch: &mut RoundScratch) -> Result<()> {
+        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> = env
+            .weights
+            .iter()
+            .copied()
+            .zip(self.clients.iter().zip(self.servers.iter()))
+            .map(|(w, (c, s))| (w, &c.lora, &s.lora))
+            .collect();
+        fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
+        ops::weighted_sum_into(
+            &env.weights
+                .iter()
+                .copied()
+                .zip(self.servers.iter().map(|s| &s.head.w))
+                .collect::<Vec<_>>(),
+            &mut scratch.head.w,
+        )?;
+        ops::weighted_sum_into(
+            &env.weights
+                .iter()
+                .copied()
+                .zip(self.servers.iter().map(|s| &s.head.b))
+                .collect::<Vec<_>>(),
+            &mut scratch.head.b,
+        )?;
+        Ok(())
+    }
+
+    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) {
+        for (u, (c, s)) in self.clients.iter().zip(self.servers.iter()).enumerate() {
+            save_adapters(out, &format!("scheme.c{u}.lora"), &c.lora);
+            save_adam(out, &format!("scheme.c{u}.adam"), &c.adam);
+            out.push((format!("scheme.c{u}.step"), encode_u64s("step", &[c.step])));
+            save_adapters(out, &format!("scheme.s{u}.lora"), &s.lora);
+            out.push((format!("scheme.s{u}.head.w"), s.head.w.clone()));
+            out.push((format!("scheme.s{u}.head.b"), s.head.b.clone()));
+            save_adam(out, &format!("scheme.s{u}.adam"), &s.adam);
+            out.push((format!("scheme.s{u}.step"), encode_u64s("step", &[s.step])));
+        }
+        save_iters(out, &self.iters);
+        out.push(("scheme.switches".into(), encode_u64s("switches", &[self.switches])));
+        let last = self.last_active.map(|u| u as i32).unwrap_or(-1);
+        out.push((
+            "scheme.last_active".into(),
+            HostTensor::i32("scheme.last_active", vec![1], vec![last]),
+        ));
+        if let Some(st) = self.sched.rng_state() {
+            out.push(("scheme.sched_rng".into(), encode_u64s("sched_rng", &[st])));
+        }
+    }
+
+    fn load_state(&mut self, store: &ParamStore) -> Result<()> {
+        for u in 0..self.clients.len() {
+            load_adapters(store, &format!("scheme.c{u}.lora"), &mut self.clients[u].lora)?;
+            load_adam(store, &format!("scheme.c{u}.adam"), &mut self.clients[u].adam)?;
+            self.clients[u].step = one_u64(store, &format!("scheme.c{u}.step"))?;
+            load_adapters(store, &format!("scheme.s{u}.lora"), &mut self.servers[u].lora)?;
+            load_into(store, &format!("scheme.s{u}.head.w"), &mut self.servers[u].head.w)?;
+            load_into(store, &format!("scheme.s{u}.head.b"), &mut self.servers[u].head.b)?;
+            load_adam(store, &format!("scheme.s{u}.adam"), &mut self.servers[u].adam)?;
+            self.servers[u].step = one_u64(store, &format!("scheme.s{u}.step"))?;
+        }
+        load_iters(store, &mut self.iters)?;
+        self.switches = one_u64(store, "scheme.switches")?;
+        let last = one_i32(store, "scheme.last_active")?;
+        self.last_active = if last < 0 { None } else { Some(last as usize) };
+        if store.get("scheme.sched_rng").is_ok() {
+            self.sched.set_rng_state(one_u64(store, "scheme.sched_rng")?);
+        }
+        Ok(())
+    }
+}
+
+/// **Ours** (paper Alg. 1): parallel client forwards → sequential server
+/// LoRA training ordered by the pluggable scheduler → parallel client
+/// backwards, with periodic aggregation.
+pub struct OursScheme {
+    core: ParallelCore,
+}
+
+impl Scheme for OursScheme {
+    fn scheduler(&self) -> SchedulerLabel {
+        SchedulerLabel::Scheduled(self.core.kind)
+    }
+
+    fn round(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<RoundOutcome> {
+        let (step_time, _) = timing::ours_step_with_jobs(ctx.jobs, self.core.sched.as_mut());
+        self.core.run_round(ctx, step_time)
+    }
+
+    fn eval_model<'s>(
+        &'s mut self,
+        env: &SessionEnv<'_>,
+        scratch: &'s mut RoundScratch,
+    ) -> Result<(&'s AdapterSet, &'s HeadState)> {
+        self.core.global_model_into(env, scratch)?;
+        Ok((&scratch.agg_full, &scratch.head))
+    }
+
+    fn memory(&self, env: &SessionEnv<'_>) -> MemoryBreakdown {
+        memory::ours_server_memory(&env.dims_time, &env.cuts)
+    }
+
+    fn adapter_switches(&self) -> u64 {
+        self.core.switches
+    }
+
+    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) {
+        self.core.save_state(out);
+    }
+
+    fn load_state(&mut self, store: &ParamStore) -> Result<()> {
+        self.core.load_state(store)
+    }
+}
+
+/// **SFL** baseline: numerically identical to Ours (the difference is
+/// timing and memory — per-client server submodels train in parallel,
+/// contending for the GPU).
+pub struct SflScheme {
+    core: ParallelCore,
+}
+
+impl Scheme for SflScheme {
+    fn scheduler(&self) -> SchedulerLabel {
+        SchedulerLabel::Scheduled(self.core.kind)
+    }
+
+    fn round(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<RoundOutcome> {
+        let env = ctx.env;
+        let (step_time, _) =
+            timing::sfl_step_with_jobs(ctx.jobs, &env.dims_time, ctx.part_cuts, &env.cfg.server);
+        self.core.run_round(ctx, step_time)
+    }
+
+    fn eval_model<'s>(
+        &'s mut self,
+        env: &SessionEnv<'_>,
+        scratch: &'s mut RoundScratch,
+    ) -> Result<(&'s AdapterSet, &'s HeadState)> {
+        self.core.global_model_into(env, scratch)?;
+        Ok((&scratch.agg_full, &scratch.head))
+    }
+
+    fn memory(&self, env: &SessionEnv<'_>) -> MemoryBreakdown {
+        memory::sfl_server_memory(&env.dims_time, &env.cuts)
+    }
+
+    fn adapter_switches(&self) -> u64 {
+        self.core.switches
+    }
+
+    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) {
+        self.core.save_state(out);
+    }
+
+    fn load_state(&mut self, store: &ParamStore) -> Result<()> {
+        self.core.load_state(store)
+    }
+}
+
+/// **SL** baseline: one global adapter set relayed through the clients,
+/// no aggregation.  Ported onto the in-place primitives: the relay
+/// copies into preallocated per-client state buffers (`split_into`,
+/// `copy_from`, optimizer reset in place) and joins back with
+/// `join_into`, so the steady state allocates zero `HostTensor`s —
+/// same invariant as the parallel schemes.
+///
+/// Behavior change vs the old `Trainer::run_sl`: dropout sampling is
+/// session-owned and scheme-agnostic, so with `dropout_prob > 0` SL now
+/// relays only through the round's surviving participants (previously
+/// SL ignored failure injection entirely).  `dropout_prob = 0` — the
+/// paper's setting — is unchanged.
+pub struct SlScheme {
+    /// The relayed global model.
+    full: AdapterSet,
+    head: HeadState,
+    /// Reused per-client working states (refilled at every visit).
+    clients: Vec<ClientState>,
+    servers: Vec<ServerState>,
+    iters: Vec<BatchIter>,
+}
+
+impl SlScheme {
+    fn new(env: &SessionEnv<'_>) -> Result<Self> {
+        let full = env.engine.initial_lora()?;
+        let head = env.engine.initial_head()?;
+        let mut clients = Vec::new();
+        let mut servers = Vec::new();
+        for &k in &env.cuts {
+            let (c, s) = full.split_at(k)?;
+            clients.push(ClientState::fresh(c));
+            servers.push(ServerState::fresh(s, head.clone()));
+        }
+        Ok(Self { full, head, clients, servers, iters: fresh_iters(env) })
+    }
+}
+
+impl Scheme for SlScheme {
+    fn scheduler(&self) -> SchedulerLabel {
+        SchedulerLabel::Sequential
+    }
+
+    fn round(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<RoundOutcome> {
+        let env = ctx.env;
+        let steps = env.cfg.train.steps_per_round;
+        let train_elapsed = timing::sl_round(
+            &env.dims_time,
+            ctx.part_clients,
+            ctx.part_cuts,
+            &env.cfg.server,
+            steps,
+        );
+        let mut loss_sum = 0.0f32;
+        let mut loss_n = 0u32;
+        for &u in ctx.participants {
+            let k = env.cuts[u];
+            // Relay: client u receives the current global model into its
+            // reused buffers; optimizer state is not relayed (fresh Adam
+            // per visit, as in the baseline).
+            self.full.split_into(k, &mut self.clients[u].lora, &mut self.servers[u].lora)?;
+            ops::copy_from(&mut self.servers[u].head.w, &self.head.w)?;
+            ops::copy_from(&mut self.servers[u].head.b, &self.head.b)?;
+            reset_adam(&mut self.clients[u].adam)?;
+            self.clients[u].step = 0;
+            reset_adam(&mut self.servers[u].adam)?;
+            self.servers[u].step = 0;
+            for _ in 0..steps {
+                let idx = self.iters[u].next_batch();
+                data::materialize_batch_into(
+                    &env.ds,
+                    idx,
+                    &mut ctx.scratch.tokens,
+                    &mut ctx.scratch.labels,
+                );
+                env.engine.client_fwd_into(
+                    k,
+                    &ctx.scratch.tokens,
+                    &self.clients[u].lora,
+                    &mut ctx.scratch.acts,
+                )?;
+                ctx.traffic
+                    .record(&Message::Activations { bytes: env.dims_time.activation_bytes() });
+                let loss = env.engine.server_step_into(
+                    k,
+                    &ctx.scratch.acts,
+                    &ctx.scratch.labels,
+                    &mut self.servers[u],
+                    &mut ctx.scratch.act_grads,
+                    ctx.round_lr,
+                )?;
+                ctx.traffic
+                    .record(&Message::ActivationGrads { bytes: env.dims_time.activation_bytes() });
+                env.engine.client_bwd_into(
+                    k,
+                    &ctx.scratch.tokens,
+                    &mut self.clients[u],
+                    &ctx.scratch.act_grads,
+                    ctx.round_lr,
+                )?;
+                loss_sum += loss;
+                loss_n += 1;
+            }
+            // Hand the trained halves back to the relay.
+            AdapterSet::join_into(&self.clients[u].lora, &self.servers[u].lora, &mut self.full)?;
+            ops::copy_from(&mut self.head.w, &self.servers[u].head.w)?;
+            ops::copy_from(&mut self.head.b, &self.servers[u].head.b)?;
+        }
+        Ok(RoundOutcome {
+            train_elapsed,
+            agg_elapsed: 0.0,
+            mean_loss: loss_sum / loss_n.max(1) as f32,
+        })
+    }
+
+    fn eval_model<'s>(
+        &'s mut self,
+        _env: &SessionEnv<'_>,
+        _scratch: &'s mut RoundScratch,
+    ) -> Result<(&'s AdapterSet, &'s HeadState)> {
+        Ok((&self.full, &self.head))
+    }
+
+    fn memory(&self, env: &SessionEnv<'_>) -> MemoryBreakdown {
+        memory::sl_server_memory(&env.dims_time, &env.cuts)
+    }
+
+    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) {
+        save_adapters(out, "scheme.full", &self.full);
+        out.push(("scheme.head.w".into(), self.head.w.clone()));
+        out.push(("scheme.head.b".into(), self.head.b.clone()));
+        save_iters(out, &self.iters);
+    }
+
+    fn load_state(&mut self, store: &ParamStore) -> Result<()> {
+        load_adapters(store, "scheme.full", &mut self.full)?;
+        load_into(store, "scheme.head.w", &mut self.head.w)?;
+        load_into(store, "scheme.head.b", &mut self.head.b)?;
+        load_iters(store, &mut self.iters)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The session itself.
+// ---------------------------------------------------------------------
+
+/// Mutable shared bookkeeping, owned by the session and written exactly
+/// once for all schemes.
+struct Book {
+    /// Completed rounds (1-based; 0 before the first `step_round`).
+    round: usize,
+    sim_time: f64,
+    rounds: Vec<RoundRecord>,
+    acc: MetricSeries,
+    f1: MetricSeries,
+    final_acc: f64,
+    final_f1: f64,
+    detector: ConvergenceDetector,
+    traffic: TrafficMeter,
+    dropout_rng: Rng,
+    converged: bool,
+    /// Engine exec counter at session start (or resume).
+    exec_base: u64,
+    /// Executions recorded by earlier segments of a resumed run.
+    execs_prior: u64,
+    wall: std::time::Instant,
+    wall_prior: f64,
+    scratch: RoundScratch,
+}
+
+/// The resumable round-stepped experiment driver.  Owns the shared
+/// bookkeeping; delegates per-round orchestration to the configured
+/// [`Scheme`]; streams [`RoundReport`]s to registered observers.
+pub struct Session<'e> {
+    env: SessionEnv<'e>,
+    scheme: Box<dyn Scheme>,
+    book: Book,
+    observers: Vec<Box<dyn RoundObserver>>,
+}
+
+impl<'e> Session<'e> {
+    pub fn new(engine: &'e Engine, cfg: &ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let dims_exec = engine.dims().clone();
+        let dims_time = cfg.timing_dims();
+        let cuts = cfg.resolve_cuts();
+        let spec = data::CorpusSpec {
+            seed: cfg.train.seed,
+            ..data::CorpusSpec::carer_like(dims_exec.vocab, dims_exec.seq)
+        };
+        let ds = data::generate(&spec);
+        let shards = data::dirichlet_partition(
+            &ds.train,
+            cfg.clients.len(),
+            cfg.train.dirichlet_alpha,
+            cfg.train.seed + 1,
+            dims_exec.batch,
+        );
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        let weights: Vec<f32> =
+            shards.iter().map(|s| s.len() as f32 / total as f32).collect();
+        let env = SessionEnv {
+            engine,
+            cfg: cfg.clone(),
+            dims_exec,
+            dims_time,
+            cuts,
+            ds,
+            shards,
+            weights,
+        };
+        let scheme = make_scheme(&env)?;
+
+        let head0 = engine.initial_head()?;
+        let acts_shape =
+            vec![env.dims_exec.batch, env.dims_exec.seq, env.dims_exec.hidden];
+        let scratch = RoundScratch {
+            agg_full: AdapterSet::zeros(&env.dims_exec, env.dims_exec.layers),
+            head: HeadState {
+                w: HostTensor::zeros(head0.w.name.clone(), head0.w.shape.clone()),
+                b: HostTensor::zeros(head0.b.name.clone(), head0.b.shape.clone()),
+            },
+            acts: HostTensor::zeros("acts", acts_shape.clone()),
+            act_grads: HostTensor::zeros("act_grads", acts_shape),
+            tokens: Vec::with_capacity(env.dims_exec.batch * env.dims_exec.seq),
+            labels: Vec::with_capacity(env.dims_exec.batch),
+            mask: vec![false; env.cuts.len()],
+        };
+        let t = &cfg.train;
+        let book = Book {
+            round: 0,
+            sim_time: 0.0,
+            rounds: Vec::new(),
+            acc: MetricSeries::default(),
+            f1: MetricSeries::default(),
+            final_acc: 0.0,
+            final_f1: 0.0,
+            detector: ConvergenceDetector::new(t.patience, t.min_delta),
+            traffic: TrafficMeter::default(),
+            dropout_rng: Rng::new(t.seed ^ 0xD809),
+            converged: false,
+            exec_base: engine.exec_count(),
+            execs_prior: 0,
+            wall: std::time::Instant::now(),
+            wall_prior: 0.0,
+            scratch,
+        };
+        Ok(Self { env, scheme, book, observers: Vec::new() })
+    }
+
+    /// Register a streaming telemetry sink.
+    pub fn add_observer(&mut self, obs: Box<dyn RoundObserver>) {
+        self.observers.push(obs);
+    }
+
+    pub fn env(&self) -> &SessionEnv<'e> {
+        &self.env
+    }
+
+    pub fn cuts(&self) -> &[usize] {
+        &self.env.cuts
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.env.ds
+    }
+
+    /// Completed rounds so far.
+    pub fn round(&self) -> usize {
+        self.book.round
+    }
+
+    /// Current virtual clock.
+    pub fn sim_time(&self) -> f64 {
+        self.book.sim_time
+    }
+
+    /// True once the run should stop: convergence detected or
+    /// `max_rounds` reached.  (`step_round` may still be called past
+    /// this point to train further.)
+    pub fn done(&self) -> bool {
+        self.book.converged || self.book.round >= self.env.cfg.train.max_rounds
+    }
+
+    /// Execute one round: dropout sampling, per-round job construction,
+    /// scheme dispatch, sim-clock accrual, periodic evaluation and
+    /// convergence tracking — then stream a [`RoundReport`].
+    pub fn step_round(&mut self) -> Result<RoundReport> {
+        let round = self.book.round + 1;
+        let t = &self.env.cfg.train;
+        let round_lr = t.lr_schedule.at(t.lr, round);
+
+        // ---- failure injection: which clients participate? ----
+        let n = self.env.cuts.len();
+        let participants: Vec<usize> = if t.dropout_prob > 0.0 {
+            let rng = &mut self.book.dropout_rng;
+            let mut p: Vec<usize> =
+                (0..n).filter(|_| rng.uniform() >= t.dropout_prob).collect();
+            if p.is_empty() {
+                // Never stall a round entirely: keep one survivor.
+                p.push(rng.below(n));
+            }
+            p
+        } else {
+            (0..n).collect()
+        };
+        let part_clients: Vec<ClientConfig> =
+            participants.iter().map(|&u| self.env.cfg.clients[u].clone()).collect();
+        let part_cuts: Vec<usize> = participants.iter().map(|&u| self.env.cuts[u]).collect();
+        // Jobs depend only on the round's participants, not the step —
+        // built once here, reused for timing and per-step ordering.
+        let jobs = timing::build_jobs(
+            &self.env.dims_time,
+            &part_clients,
+            &part_cuts,
+            &self.env.cfg.server,
+        );
+        let aggregate = round % t.aggregation_interval == 0;
+
+        let outcome = {
+            let mut ctx = RoundCtx {
+                env: &self.env,
+                round,
+                round_lr,
+                participants: &participants,
+                part_clients: &part_clients,
+                part_cuts: &part_cuts,
+                jobs: &jobs,
+                aggregate,
+                traffic: &mut self.book.traffic,
+                scratch: &mut self.book.scratch,
+            };
+            self.scheme.round(&mut ctx)?
+        };
+        // Commit the round only after the scheme succeeded — a failed
+        // round leaves the counter (and thus any later checkpoint)
+        // pointing at the last fully completed round.  (Training state
+        // may still be mid-step poisoned per the runtime's error
+        // contract; discard the session on error rather than resuming
+        // from its in-memory state.)
+        self.book.round = round;
+
+        self.book.sim_time += outcome.train_elapsed;
+        self.book.rounds.push(RoundRecord {
+            round,
+            sim_time: self.book.sim_time,
+            mean_loss: outcome.mean_loss,
+        });
+        self.book.sim_time += outcome.agg_elapsed;
+
+        // ---- evaluation + convergence ----
+        let mut eval = None;
+        if round % t.eval_interval == 0 {
+            let (lora, head) = self.scheme.eval_model(&self.env, &mut self.book.scratch)?;
+            let (acc, f1, _eval_loss) = self.env.evaluate(lora, head)?;
+            self.book.acc.push(round, self.book.sim_time, acc);
+            self.book.f1.push(round, self.book.sim_time, f1);
+            self.book.final_acc = acc;
+            self.book.final_f1 = f1;
+            let converged = self.book.detector.update(round, self.book.sim_time, acc);
+            self.book.converged = converged;
+            eval = Some(EvalPoint { acc, f1, converged });
+        }
+
+        let report = RoundReport {
+            scheme: self.env.cfg.scheme,
+            scheduler: self.scheme.scheduler(),
+            round,
+            sim_time: self.book.sim_time,
+            mean_loss: outcome.mean_loss,
+            participants,
+            eval,
+        };
+        for obs in &mut self.observers {
+            obs.on_round(&report);
+        }
+        Ok(report)
+    }
+
+    /// Step rounds until [`Session::done`], then assemble the
+    /// [`RunResult`] and notify observers' `on_complete`.
+    pub fn run_to_convergence(&mut self) -> Result<RunResult> {
+        while !self.done() {
+            self.step_round()?;
+        }
+        let result = self.result();
+        for obs in &mut self.observers {
+            obs.on_complete(&result);
+        }
+        Ok(result)
+    }
+
+    /// Assemble the run record from the current state (valid at any
+    /// round boundary — a partially-run session reports what it has).
+    pub fn result(&self) -> RunResult {
+        let mem = self.scheme.memory(&self.env);
+        RunResult {
+            scheme: self.env.cfg.scheme,
+            scheduler: self.scheme.scheduler(),
+            rounds: self.book.rounds.clone(),
+            acc: self.book.acc.clone(),
+            f1: self.book.f1.clone(),
+            convergence_round: self.book.detector.converged().map(|(r, _)| r),
+            convergence_time: self.book.detector.converged().map(|(_, t)| t),
+            final_acc: self.book.final_acc,
+            final_f1: self.book.final_f1,
+            memory_mb: mem.total_mb(),
+            memory: mem,
+            adapter_switches: self.scheme.adapter_switches(),
+            executions: self.book.execs_prior + self.env.engine.exec_count() - self.book.exec_base,
+            uplink_bytes: self.book.traffic.uplink_bytes,
+            downlink_bytes: self.book.traffic.downlink_bytes,
+            wall_secs: self.book.wall_prior + self.book.wall.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Persist the full session (SFLP format, one file) so that
+    /// [`Session::resume`] replays the remaining rounds bit-identically
+    /// to a run that was never interrupted.
+    pub fn checkpoint(&self, path: &Path) -> Result<()> {
+        let b = &self.book;
+        let mut named: Vec<(String, HostTensor)> = vec![
+            (
+                "meta.kind".into(),
+                HostTensor::i32("meta.kind", vec![1], vec![scheme_tag(self.env.cfg.scheme)]),
+            ),
+            (
+                "meta.clients".into(),
+                HostTensor::i32("meta.clients", vec![1], vec![self.env.cuts.len() as i32]),
+            ),
+            (
+                "meta.train".into(),
+                encode_u64s(
+                    "train",
+                    &train_fingerprint(&self.env.cfg)
+                        .iter()
+                        .map(|(_, v)| *v)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            ("book.round".into(), encode_u64s("round", &[b.round as u64])),
+            ("book.sim_time".into(), encode_f64s("sim_time", &[b.sim_time])),
+            ("book.final".into(), encode_f64s("final", &[b.final_acc, b.final_f1])),
+            (
+                "book.traffic".into(),
+                encode_u64s(
+                    "traffic",
+                    &[b.traffic.uplink_bytes, b.traffic.downlink_bytes, b.traffic.messages],
+                ),
+            ),
+            (
+                "book.execs".into(),
+                encode_u64s(
+                    "execs",
+                    &[b.execs_prior + self.env.engine.exec_count() - b.exec_base],
+                ),
+            ),
+            (
+                "book.wall".into(),
+                encode_f64s("wall", &[b.wall_prior + b.wall.elapsed().as_secs_f64()]),
+            ),
+            ("book.dropout_rng".into(), encode_u64s("dropout_rng", &[b.dropout_rng.state()])),
+        ];
+        // Round records + metric series (f64 clocks stored bit-exactly).
+        let rr: Vec<i32> = b.rounds.iter().map(|r| r.round as i32).collect();
+        let rt: Vec<f64> = b.rounds.iter().map(|r| r.sim_time).collect();
+        let rl: Vec<f32> = b.rounds.iter().map(|r| r.mean_loss).collect();
+        let nr = rr.len();
+        named.push((
+            "book.rounds.round".into(),
+            HostTensor::i32("book.rounds.round", vec![nr], rr),
+        ));
+        named.push(("book.rounds.time".into(), encode_f64s("rounds.time", &rt)));
+        named.push((
+            "book.rounds.loss".into(),
+            HostTensor::f32("book.rounds.loss", vec![nr], rl),
+        ));
+        for (tag, series) in [("acc", &b.acc), ("f1", &b.f1)] {
+            let sr: Vec<i32> = series.points.iter().map(|p| p.round as i32).collect();
+            let st: Vec<f64> = series.points.iter().map(|p| p.sim_time).collect();
+            let sv: Vec<f64> = series.points.iter().map(|p| p.value).collect();
+            let ns = sr.len();
+            named.push((
+                format!("book.{tag}.round"),
+                HostTensor::i32(format!("book.{tag}.round"), vec![ns], sr),
+            ));
+            named.push((format!("book.{tag}.time"), encode_f64s("time", &st)));
+            named.push((format!("book.{tag}.value"), encode_f64s("value", &sv)));
+        }
+        // Convergence detector: best/stale plus the sticky fire point.
+        let (best, stale, conv) = b.detector.state();
+        named.push(("book.detector.best".into(), encode_f64s("best", &[best])));
+        named.push(("book.detector.stale".into(), encode_u64s("stale", &[stale as u64])));
+        let conv_words: Vec<u64> = match conv {
+            Some((r, t)) => vec![r as u64, t.to_bits()],
+            None => Vec::new(),
+        };
+        named.push(("book.detector.conv".into(), encode_u64s("conv", &conv_words)));
+
+        self.scheme.save_state(&mut named);
+        let borrowed: Vec<(&str, &HostTensor)> =
+            named.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        write_sflp(path, &borrowed)
+    }
+
+    /// Rebuild a session from a [`Session::checkpoint`] file.  `cfg`
+    /// must describe the same experiment the checkpoint was taken from
+    /// (scheme and fleet size are verified).
+    pub fn resume(engine: &'e Engine, cfg: &ExperimentConfig, path: &Path) -> Result<Self> {
+        let mut session = Session::new(engine, cfg)?;
+        let store = ParamStore::load(path)?;
+        let kind = one_i32(&store, "meta.kind")?;
+        if kind != scheme_tag(cfg.scheme) {
+            bail!(
+                "checkpoint was taken under a different scheme (tag {kind}, config {:?})",
+                cfg.scheme
+            );
+        }
+        let n_clients = one_i32(&store, "meta.clients")? as usize;
+        if n_clients != session.env.cuts.len() {
+            bail!(
+                "checkpoint has {n_clients} clients, config has {}",
+                session.env.cuts.len()
+            );
+        }
+        // Every fingerprinted knob must match, or the restored iterator /
+        // RNG streams would replay against different data or policies.
+        let fp = train_fingerprint(cfg);
+        let saved = u64s_exact(&store, "meta.train", fp.len())?;
+        for ((name, now), then) in fp.iter().zip(saved.iter()) {
+            if now != then {
+                bail!("checkpoint was taken under a different `{name}` — refusing to resume");
+            }
+        }
+
+        let b = &mut session.book;
+        b.round = one_u64(&store, "book.round")? as usize;
+        b.sim_time = one_f64(&store, "book.sim_time")?;
+        let finals = f64s_exact(&store, "book.final", 2)?;
+        b.final_acc = finals[0];
+        b.final_f1 = finals[1];
+        let traffic = u64s_exact(&store, "book.traffic", 3)?;
+        b.traffic.uplink_bytes = traffic[0];
+        b.traffic.downlink_bytes = traffic[1];
+        b.traffic.messages = traffic[2];
+        b.execs_prior = one_u64(&store, "book.execs")?;
+        b.exec_base = engine.exec_count();
+        b.wall_prior = one_f64(&store, "book.wall")?;
+        b.wall = std::time::Instant::now();
+        b.dropout_rng = Rng::from_state(one_u64(&store, "book.dropout_rng")?);
+
+        let rr = store.get("book.rounds.round")?.as_i32()?.to_vec();
+        let rt = decode_f64s(store.get("book.rounds.time")?)?;
+        let rl = store.get("book.rounds.loss")?.as_f32()?.to_vec();
+        if rr.len() != rt.len() || rr.len() != rl.len() {
+            bail!("checkpoint round records are inconsistent");
+        }
+        b.rounds = rr
+            .iter()
+            .zip(rt.iter())
+            .zip(rl.iter())
+            .map(|((&r, &t), &l)| RoundRecord { round: r as usize, sim_time: t, mean_loss: l })
+            .collect();
+        for (tag, series) in [("acc", &mut b.acc), ("f1", &mut b.f1)] {
+            let sr = store.get(&format!("book.{tag}.round"))?.as_i32()?.to_vec();
+            let st = decode_f64s(store.get(&format!("book.{tag}.time"))?)?;
+            let sv = decode_f64s(store.get(&format!("book.{tag}.value"))?)?;
+            if sr.len() != st.len() || sr.len() != sv.len() {
+                bail!("checkpoint {tag} series is inconsistent");
+            }
+            series.points.clear();
+            for ((&r, &t), &v) in sr.iter().zip(st.iter()).zip(sv.iter()) {
+                series.push(r as usize, t, v);
+            }
+        }
+        let best = one_f64(&store, "book.detector.best")?;
+        let stale = one_u64(&store, "book.detector.stale")? as usize;
+        let conv_words = decode_u64s(store.get("book.detector.conv")?)?;
+        let conv = if conv_words.len() == 2 {
+            Some((conv_words[0] as usize, f64::from_bits(conv_words[1])))
+        } else {
+            None
+        };
+        b.detector.restore_state(best, stale, conv);
+        b.converged = conv.is_some();
+
+        session.scheme.load_state(&store)?;
+        Ok(session)
+    }
+}

@@ -67,7 +67,17 @@ pub fn ours_step(
     scheduler: &mut dyn Scheduler,
 ) -> (f64, Vec<StepTiming>) {
     let jobs = build_jobs(dims, clients, cuts, server);
-    let order = scheduler.order(&jobs);
+    ours_step_with_jobs(&jobs, scheduler)
+}
+
+/// [`ours_step`] over prebuilt jobs — jobs depend only on the round's
+/// participants, so the session builds them once per round and reuses
+/// them for both timing and the per-step server ordering.
+pub fn ours_step_with_jobs(
+    jobs: &[JobInfo],
+    scheduler: &mut dyn Scheduler,
+) -> (f64, Vec<StepTiming>) {
+    let order = scheduler.order(jobs);
     debug_assert_eq!(order.len(), jobs.len());
     let mut queue = SequentialResource::default();
     let mut timings = vec![StepTiming::default(); jobs.len()];
@@ -98,6 +108,16 @@ pub fn sfl_step(
     server: &ServerProfile,
 ) -> (f64, Vec<StepTiming>) {
     let jobs = build_jobs(dims, clients, cuts, server);
+    sfl_step_with_jobs(&jobs, dims, cuts, server)
+}
+
+/// [`sfl_step`] over prebuilt jobs (see [`ours_step_with_jobs`]).
+pub fn sfl_step_with_jobs(
+    jobs: &[JobInfo],
+    dims: &ModelDims,
+    cuts: &[usize],
+    server: &ServerProfile,
+) -> (f64, Vec<StepTiming>) {
     let concurrency = jobs.len();
     let mut step_time = 0.0f64;
     let mut timings = vec![StepTiming::default(); jobs.len()];

@@ -178,6 +178,21 @@ impl BatchIter {
     pub fn batches_per_epoch(&self) -> usize {
         (self.indices.len() / self.batch).max(1)
     }
+
+    /// Snapshot for checkpoint/resume: (shuffled index order, cursor,
+    /// RNG state). Restoring with [`BatchIter::restore_state`] continues
+    /// the exact batch stream.
+    pub fn state(&self) -> (&[usize], usize, u64) {
+        (&self.indices, self.cursor, self.rng.state())
+    }
+
+    /// Rebuild the iterator mid-epoch from a saved [`BatchIter::state`].
+    /// `indices` must be a permutation of the original shard.
+    pub fn restore_state(&mut self, indices: Vec<usize>, cursor: usize, rng_state: u64) {
+        self.indices = indices;
+        self.cursor = cursor;
+        self.rng = Rng::from_state(rng_state);
+    }
 }
 
 /// Materialize a batch as flat (tokens, labels) buffers ready for the

@@ -9,21 +9,25 @@
 //!   ablate   scheduler ablation across fleet sizes (analytic)
 //!
 //! Global flags: --config mini|small, --artifacts DIR, --out DIR,
-//! --experiment FILE (key=value format, see configs/paper.exp).
+//! --experiment FILE (key=value format, see configs/paper.exp),
+//! --seed N and --dropout P (failure injection without an experiment
+//! file).  `run` also accepts --jsonl FILE to stream per-round JSON
+//! telemetry (a Session observer).
 
 use anyhow::{bail, Result};
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
-use sfl::coordinator::{timing, RunResult, Trainer};
+use sfl::coordinator::{timing, RunResult, Session};
 use sfl::devices::paper_fleet;
 use sfl::model::{memory, ModelDims};
 use sfl::runtime::Engine;
-use sfl::telemetry;
+use sfl::telemetry::{self, JsonLinesObserver, StdoutObserver};
 use sfl::util::args::Args;
 use std::path::{Path, PathBuf};
 
 const USAGE: &str = "usage: sfl [--config mini|small] [--artifacts DIR] [--out DIR] \
-[--experiment FILE] <run|table1|fig2|fig2c|memory|ablate> \
-[--scheme ours|sl|sfl] [--scheduler proposed|fifo|wf|random] [--max-rounds N]";
+[--experiment FILE] [--seed N] [--dropout P] <run|table1|fig2|fig2c|memory|ablate> \
+[--scheme ours|sl|sfl] [--scheduler proposed|fifo|wf|random] [--max-rounds N] \
+[--quiet] [--jsonl FILE]";
 
 fn base_config(args: &Args) -> Result<ExperimentConfig> {
     let mut cfg = match args.get("experiment") {
@@ -36,6 +40,13 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(d) = args.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
     }
+    // Failure-injection knobs, overridable without an experiment file.
+    if let Some(seed) = args.get_parse::<u64>("seed")? {
+        cfg.train.seed = seed;
+    }
+    if let Some(p) = args.get_parse::<f64>("dropout")? {
+        cfg.train.dropout_prob = p;
+    }
     Ok(cfg)
 }
 
@@ -46,6 +57,7 @@ fn run_one(
     scheduler: SchedulerKind,
     max_rounds: Option<usize>,
     quiet: bool,
+    jsonl: Option<&Path>,
 ) -> Result<RunResult> {
     let mut c = cfg.clone();
     c.scheme = scheme;
@@ -53,8 +65,14 @@ fn run_one(
     if let Some(mr) = max_rounds {
         c.train.max_rounds = mr;
     }
-    let mut trainer = Trainer::new(engine, &c)?;
-    trainer.run(quiet)
+    let mut session = Session::new(engine, &c)?;
+    if !quiet {
+        session.add_observer(Box::new(StdoutObserver));
+    }
+    if let Some(path) = jsonl {
+        session.add_observer(Box::new(JsonLinesObserver::create(path)?));
+    }
+    session.run_to_convergence()
 }
 
 /// The five schemes compared in Fig. 2.
@@ -63,16 +81,17 @@ fn fig2_runs(
     cfg: &ExperimentConfig,
     max_rounds: Option<usize>,
 ) -> Result<Vec<(&'static str, RunResult)>> {
-    let runs = vec![
-        ("SL", run_one(engine, cfg, SchemeKind::Sl, SchedulerKind::Proposed, max_rounds, true)?),
-        ("SFL", run_one(engine, cfg, SchemeKind::Sfl, SchedulerKind::Proposed, max_rounds, true)?),
-        ("FIFO", run_one(engine, cfg, SchemeKind::Ours, SchedulerKind::Fifo, max_rounds, true)?),
-        (
-            "WF",
-            run_one(engine, cfg, SchemeKind::Ours, SchedulerKind::WorkloadFirst, max_rounds, true)?,
-        ),
-        ("Ours", run_one(engine, cfg, SchemeKind::Ours, SchedulerKind::Proposed, max_rounds, true)?),
+    let variants: [(&'static str, SchemeKind, SchedulerKind); 5] = [
+        ("SL", SchemeKind::Sl, SchedulerKind::Proposed),
+        ("SFL", SchemeKind::Sfl, SchedulerKind::Proposed),
+        ("FIFO", SchemeKind::Ours, SchedulerKind::Fifo),
+        ("WF", SchemeKind::Ours, SchedulerKind::WorkloadFirst),
+        ("Ours", SchemeKind::Ours, SchedulerKind::Proposed),
     ];
+    let mut runs = Vec::with_capacity(variants.len());
+    for (name, scheme, sched) in variants {
+        runs.push((name, run_one(engine, cfg, scheme, sched, max_rounds, true, None)?));
+    }
     for (n, r) in &runs {
         println!("{}", telemetry::summary(n, r));
     }
@@ -179,15 +198,46 @@ fn main() -> Result<()> {
         "run" => {
             let scheme: SchemeKind = args.get_or("scheme", "ours").parse()?;
             let scheduler: SchedulerKind = args.get_or("scheduler", "proposed").parse()?;
-            let r = run_one(&engine, &cfg, scheme, scheduler, max_rounds, args.has("quiet"))?;
+            let jsonl = args.get("jsonl").map(PathBuf::from);
+            let r = run_one(
+                &engine,
+                &cfg,
+                scheme,
+                scheduler,
+                max_rounds,
+                args.has("quiet"),
+                jsonl.as_deref(),
+            )?;
             println!("{}", telemetry::summary("run", &r));
         }
         "table1" => {
-            let sl = run_one(&engine, &cfg, SchemeKind::Sl, SchedulerKind::Proposed, max_rounds, false)?;
-            let sfl_r =
-                run_one(&engine, &cfg, SchemeKind::Sfl, SchedulerKind::Proposed, max_rounds, false)?;
-            let ours =
-                run_one(&engine, &cfg, SchemeKind::Ours, SchedulerKind::Proposed, max_rounds, false)?;
+            let sl = run_one(
+                &engine,
+                &cfg,
+                SchemeKind::Sl,
+                SchedulerKind::Proposed,
+                max_rounds,
+                false,
+                None,
+            )?;
+            let sfl_r = run_one(
+                &engine,
+                &cfg,
+                SchemeKind::Sfl,
+                SchedulerKind::Proposed,
+                max_rounds,
+                false,
+                None,
+            )?;
+            let ours = run_one(
+                &engine,
+                &cfg,
+                SchemeKind::Ours,
+                SchedulerKind::Proposed,
+                max_rounds,
+                false,
+                None,
+            )?;
             let rows = [("SL", &sl), ("SFL", &sfl_r), ("Ours", &ours)];
             let table = telemetry::table1(&rows);
             println!("\nTable I (reproduced):\n{table}");

@@ -145,6 +145,18 @@ impl ConvergenceDetector {
         self.converged_at
     }
 
+    /// Snapshot for checkpoint/resume: (best, stale, converged_at).
+    pub fn state(&self) -> (f64, usize, Option<(usize, f64)>) {
+        (self.best, self.stale, self.converged_at)
+    }
+
+    /// Restore a detector mid-run from a saved [`ConvergenceDetector::state`].
+    pub fn restore_state(&mut self, best: f64, stale: usize, converged_at: Option<(usize, f64)>) {
+        self.best = best;
+        self.stale = stale;
+        self.converged_at = converged_at;
+    }
+
     pub fn best(&self) -> f64 {
         self.best
     }

@@ -1,9 +1,96 @@
-//! Result emitters: Table I rows, Fig. 2 series (CSV), JSON dumps.
+//! Result emitters: Table I rows, Fig. 2 series (CSV), JSON dumps — and
+//! the streaming `RoundObserver` sinks the Session API feeds per round
+//! ([`StdoutObserver`] progress lines, [`JsonLinesObserver`] telemetry).
 
-use crate::coordinator::RunResult;
+use crate::coordinator::{RoundObserver, RoundReport, RunResult};
 use anyhow::Result;
 use std::io::Write;
 use std::path::Path;
+
+/// Prints the classic per-eval progress line — the observer equivalent
+/// of the old `quiet: false` flag.
+pub struct StdoutObserver;
+
+impl RoundObserver for StdoutObserver {
+    fn on_round(&mut self, r: &RoundReport) {
+        if let Some(e) = &r.eval {
+            println!(
+                "[{:?}/{}] round {:4}  t={:9.1}s  loss={:.4}  acc={:.4}  f1={:.4}",
+                r.scheme, r.scheduler, r.round, r.sim_time, r.mean_loss, e.acc, e.f1
+            );
+        }
+    }
+}
+
+/// Streams one JSON object per round (and a final summary record) to
+/// any writer — machine-readable run telemetry without buffering the
+/// whole run.
+pub struct JsonLinesObserver<W: Write> {
+    out: W,
+}
+
+impl JsonLinesObserver<std::io::BufWriter<std::fs::File>> {
+    /// Stream to a file (created/truncated).
+    pub fn create(path: &Path) -> Result<Self> {
+        Ok(Self::new(std::io::BufWriter::new(std::fs::File::create(path)?)))
+    }
+}
+
+impl<W: Write> JsonLinesObserver<W> {
+    pub fn new(out: W) -> Self {
+        Self { out }
+    }
+}
+
+impl<W: Write> RoundObserver for JsonLinesObserver<W> {
+    fn on_round(&mut self, r: &RoundReport) {
+        let eval = match &r.eval {
+            Some(e) => format!(
+                ",\"acc\":{:.6},\"f1\":{:.6},\"converged\":{}",
+                e.acc, e.f1, e.converged
+            ),
+            None => String::new(),
+        };
+        let wrote = writeln!(
+            self.out,
+            "{{\"event\":\"round\",\"scheme\":\"{}\",\"scheduler\":\"{}\",\"round\":{},\
+             \"sim_time\":{:.6},\"mean_loss\":{:.6},\"participants\":{}{eval}}}",
+            r.scheme,
+            r.scheduler,
+            r.round,
+            r.sim_time,
+            r.mean_loss,
+            r.participants.len(),
+        );
+        // Flush per round so `tail -f` monitoring sees lines live and a
+        // killed run loses at most the in-flight record.
+        if let Err(e) = wrote.and_then(|()| self.out.flush()) {
+            eprintln!("jsonl telemetry: write failed: {e}");
+        }
+    }
+
+    fn on_complete(&mut self, res: &RunResult) {
+        let wrote = writeln!(
+            self.out,
+            "{{\"event\":\"complete\",\"scheme\":\"{}\",\"scheduler\":\"{}\",\"rounds\":{},\
+             \"total_time\":{:.6},\"final_acc\":{:.6},\"final_f1\":{:.6},\"memory_mb\":{:.3},\
+             \"executions\":{},\"uplink_bytes\":{},\"downlink_bytes\":{}}}",
+            res.scheme,
+            res.scheduler,
+            res.rounds.len(),
+            res.total_time(),
+            res.final_acc,
+            res.final_f1,
+            res.memory_mb,
+            res.executions,
+            res.uplink_bytes,
+            res.downlink_bytes,
+        );
+        if let Err(e) = wrote.and_then(|()| self.out.flush()) {
+            eprintln!("jsonl telemetry: write failed: {e}");
+        }
+    }
+}
 
 /// Render Table I ("Performance Comparison of Different Schemes") from a
 /// set of runs — same columns as the paper.
@@ -84,7 +171,8 @@ pub fn write_result(dir: &Path, name: &str, contents: &str) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SchemeKind;
+    use crate::config::{SchedulerKind, SchemeKind};
+    use crate::coordinator::SchedulerLabel;
     use crate::metrics::MetricSeries;
     use crate::model::memory::MemoryBreakdown;
 
@@ -94,7 +182,7 @@ mod tests {
         acc.push(2, 20.0, 0.8);
         RunResult {
             scheme: SchemeKind::Ours,
-            scheduler: "proposed".into(),
+            scheduler: SchedulerLabel::Scheduled(SchedulerKind::Proposed),
             rounds: vec![],
             acc,
             f1: MetricSeries::default(),
@@ -132,5 +220,42 @@ mod tests {
         let r = fake_run();
         let csv = fig2c_csv(&[("ours", &r)]);
         assert!(csv.contains("ours,20.00"));
+    }
+
+    #[test]
+    fn scheduler_label_display_matches_scheduler_names() {
+        assert_eq!(SchedulerLabel::Sequential.to_string(), "sequential");
+        assert_eq!(
+            SchedulerLabel::Scheduled(SchedulerKind::WorkloadFirst).to_string(),
+            "workload_first"
+        );
+        let r = fake_run();
+        assert!(summary("x", &r).contains("sched=proposed"));
+    }
+
+    #[test]
+    fn json_lines_observer_emits_round_and_summary_records() {
+        use crate::coordinator::{EvalPoint, RoundReport};
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut obs = JsonLinesObserver::new(&mut buf);
+            obs.on_round(&RoundReport {
+                scheme: SchemeKind::Ours,
+                scheduler: SchedulerLabel::Scheduled(SchedulerKind::Proposed),
+                round: 3,
+                sim_time: 12.5,
+                mean_loss: 1.25,
+                participants: vec![0, 1, 2],
+                eval: Some(EvalPoint { acc: 0.5, f1: 0.4, converged: false }),
+            });
+            let r = fake_run();
+            obs.on_complete(&r);
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.contains("\"event\":\"round\""));
+        assert!(s.contains("\"participants\":3"));
+        assert!(s.contains("\"acc\":0.500000"));
+        assert!(s.contains("\"event\":\"complete\""));
     }
 }

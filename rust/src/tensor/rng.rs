@@ -17,6 +17,17 @@ impl Rng {
         Self { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
     }
 
+    /// Raw generator state, for checkpoint/resume. Restoring with
+    /// [`Rng::from_state`] continues the exact stream.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a generator mid-stream from a saved [`Rng::state`].
+    pub fn from_state(state: u64) -> Self {
+        Self { state }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;

@@ -104,6 +104,15 @@ mod tests {
     }
 
     #[test]
+    fn seed_and_dropout_flags_parse() {
+        // The failure-injection flags the CLI plumbs into TrainConfig.
+        let a = parse("--seed 7 --dropout 0.25 run --scheme ours");
+        assert_eq!(a.get_parse::<u64>("seed").unwrap(), Some(7));
+        assert_eq!(a.get_parse::<f64>("dropout").unwrap(), Some(0.25));
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+    }
+
+    #[test]
     fn missing_flag_is_none_and_default_works() {
         let a = parse("run");
         assert_eq!(a.get("nope"), None);

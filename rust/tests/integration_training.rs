@@ -5,7 +5,7 @@
 //! side suite stays green on machines without the AOT toolchain.
 
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
-use sfl::coordinator::Trainer;
+use sfl::coordinator::Session;
 use sfl::runtime::Engine;
 use std::path::Path;
 
@@ -43,9 +43,9 @@ fn mini_cfg() -> ExperimentConfig {
 fn ours_trains_and_reports() {
     let Some(e) = engine() else { return };
     let cfg = mini_cfg();
-    let mut t = Trainer::new(&e, &cfg).unwrap();
+    let mut t = Session::new(&e, &cfg).unwrap();
     assert_eq!(t.cuts(), &[1, 1, 2, 2, 3, 3]);
-    let r = t.run(true).unwrap();
+    let r = t.run_to_convergence().unwrap();
 
     assert_eq!(r.scheme, SchemeKind::Ours);
     assert_eq!(r.rounds.len(), 6);
@@ -76,9 +76,9 @@ fn steady_state_is_host_tensor_allocation_free() {
     let allocs_for = |rounds: usize| {
         let mut cfg = mini_cfg();
         cfg.train.max_rounds = rounds;
-        let mut t = Trainer::new(&e, &cfg).unwrap();
+        let mut t = Session::new(&e, &cfg).unwrap();
         let before = sfl::tensor::alloc_count();
-        t.run(true).unwrap();
+        t.run_to_convergence().unwrap();
         sfl::tensor::alloc_count() - before
     };
     let short = allocs_for(2);
@@ -86,6 +86,31 @@ fn steady_state_is_host_tensor_allocation_free() {
     assert_eq!(
         long, short,
         "rounds 3-4 allocated {} extra HostTensors (steady state must be allocation-free)",
+        long - short
+    );
+}
+
+#[test]
+fn sl_steady_state_is_host_tensor_allocation_free() {
+    // SL now runs on the same in-place primitives as the parallel
+    // schemes: the relay copies into reused per-client buffers
+    // (split_into / copy_from / in-place optimizer reset) and joins
+    // back with join_into — zero HostTensor allocations per round.
+    let Some(e) = engine() else { return };
+    let allocs_for = |rounds: usize| {
+        let mut cfg = mini_cfg();
+        cfg.scheme = SchemeKind::Sl;
+        cfg.train.max_rounds = rounds;
+        let mut t = Session::new(&e, &cfg).unwrap();
+        let before = sfl::tensor::alloc_count();
+        t.run_to_convergence().unwrap();
+        sfl::tensor::alloc_count() - before
+    };
+    let short = allocs_for(2);
+    let long = allocs_for(4);
+    assert_eq!(
+        long, short,
+        "SL rounds 3-4 allocated {} extra HostTensors (steady state must be allocation-free)",
         long - short
     );
 }
@@ -99,7 +124,7 @@ fn all_three_schemes_complete_and_rank_correctly() {
         let mut cfg = mini_cfg();
         cfg.scheme = scheme;
         cfg.train.max_rounds = 4;
-        let r = Trainer::new(&e, &cfg).unwrap().run(true).unwrap();
+        let r = Session::new(&e, &cfg).unwrap().run_to_convergence().unwrap();
         assert_eq!(r.rounds.len(), 4);
         times.insert(format!("{scheme:?}"), r.rounds.last().unwrap().sim_time);
         finals.push((scheme, r.memory_mb));
@@ -124,7 +149,7 @@ fn schedulers_share_numerics_but_differ_in_time() {
         let mut cfg = mini_cfg();
         cfg.scheduler = kind;
         cfg.train.max_rounds = 3;
-        Trainer::new(&e, &cfg).unwrap().run(true).unwrap()
+        Session::new(&e, &cfg).unwrap().run_to_convergence().unwrap()
     };
     let a = run(SchedulerKind::Proposed);
     let b = run(SchedulerKind::Fifo);
@@ -150,9 +175,9 @@ fn aggregation_interval_controls_uploads() {
     let mut cfg = mini_cfg();
     cfg.train.max_rounds = 4;
     cfg.train.aggregation_interval = 2;
-    let r2 = Trainer::new(&e, &cfg).unwrap().run(true).unwrap();
+    let r2 = Session::new(&e, &cfg).unwrap().run_to_convergence().unwrap();
     cfg.train.aggregation_interval = 4;
-    let r4 = Trainer::new(&e, &cfg).unwrap().run(true).unwrap();
+    let r4 = Session::new(&e, &cfg).unwrap().run_to_convergence().unwrap();
     // Two aggregations vs one: double the LoRA upload traffic share.
     let lora_up = |r: &sfl::coordinator::RunResult| {
         r.uplink_bytes as f64 - r.downlink_bytes as f64 // acts==grads cancel
@@ -170,11 +195,11 @@ fn dropout_failure_injection_still_trains() {
     let mut cfg = mini_cfg();
     cfg.train.max_rounds = 4;
     cfg.train.dropout_prob = 0.4;
-    let r = Trainer::new(&e, &cfg).unwrap().run(true).unwrap();
+    let r = Session::new(&e, &cfg).unwrap().run_to_convergence().unwrap();
     // Fewer client-steps executed than the no-dropout run...
     let mut full = mini_cfg();
     full.train.max_rounds = 4;
-    let rf = Trainer::new(&e, &full).unwrap().run(true).unwrap();
+    let rf = Session::new(&e, &full).unwrap().run_to_convergence().unwrap();
     assert!(r.executions < rf.executions, "{} vs {}", r.executions, rf.executions);
     // ...but the run completes, evaluates, and still learns something.
     assert_eq!(r.rounds.len(), 4);
@@ -193,7 +218,7 @@ fn sl_fluctuates_more_than_ours_across_rounds() {
         cfg.scheme = scheme;
         cfg.train.max_rounds = 6;
         cfg.train.dirichlet_alpha = 0.1; // strongly non-IID
-        let r = Trainer::new(&e, &cfg).unwrap().run(true).unwrap();
+        let r = Session::new(&e, &cfg).unwrap().run_to_convergence().unwrap();
         let losses: Vec<f64> = r.rounds.iter().map(|x| x.mean_loss as f64).collect();
         let mean = losses.iter().sum::<f64>() / losses.len() as f64;
         losses.iter().map(|l| (l - mean).powi(2)).sum::<f64>() / losses.len() as f64
