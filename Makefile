@@ -3,7 +3,7 @@
 # `artifacts` needs the python env (jax) once; everything else is
 # rust-only.  Tier-1 verify: `make build test`.  Lint gate: `make lint`.
 
-.PHONY: artifacts build test bench lint clean
+.PHONY: artifacts build test bench bench-sched lint clean
 
 # AOT-lower the HLO artifacts + params.bin the runtime executes.
 # Output lands in rust/artifacts/<config>/ (cargo's working directory
@@ -22,10 +22,16 @@ test:
 bench:
 	cd rust && cargo bench --bench hotpath
 
+# Fleet-scale scheduler sweep; writes rust/BENCH_sched.json (makespan +
+# order wall-clock per policy at N up to 100k — EXPERIMENTS.md
+# §Scheduling).  CI runs the same bench capped via SCHED_SCALE_MAX_N.
+bench-sched:
+	cd rust && cargo bench --bench sched_scale
+
 # Format + clippy gate (CI tier-1 companion).
 lint:
 	cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
 
 clean:
 	cd rust && cargo clean
-	rm -f rust/BENCH_hotpath.json
+	rm -f rust/BENCH_hotpath.json rust/BENCH_sched.json

@@ -124,10 +124,11 @@ fn main() {
     };
     let dims = cfg.timing_dims();
     let jobs = timing::build_jobs(&dims, &clients, &cuts, &cfg.server);
+    let mut order = Vec::with_capacity(jobs.len());
     for kind in KINDS {
         let mut s = make_scheduler(kind, 7);
         bench(&format!("order/{}/96-clients", s.name()), 10, 200, || {
-            let _ = s.order(&jobs);
+            s.order_into(&jobs, &mut order);
         });
     }
 }

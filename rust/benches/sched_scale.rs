@@ -1,0 +1,121 @@
+//! Fleet-scale scheduler bench: per-step makespan and scheduling
+//! wall-clock for every policy at N ∈ {10, 100, 1k, 10k, 100k}
+//! synthetic clients (lognormal preset, hidden MFU jitter), plus the
+//! estimator-vs-oracle makespan of the proposed policy.  Results land
+//! in `BENCH_sched.json` (see EXPERIMENTS.md §Scheduling for the
+//! schema).  Pure timing model — no artifacts needed.
+//!
+//!     cargo bench --bench sched_scale            # full sweep
+//!     SCHED_SCALE_MAX_N=1000 cargo bench --bench sched_scale   # CI smoke
+//!
+//! The 10k case doubles as the steady-state allocation gate: after
+//! warm-up, order_into + makespan must perform zero `HostTensor`
+//! allocations and never regrow the reused order buffer.
+
+use sfl::config::{ExperimentConfig, SchedulerKind};
+use sfl::coordinator::estimator::TimingEstimator;
+use sfl::coordinator::scheduler::{make_scheduler, makespan};
+use sfl::coordinator::timing::{self, StepTiming};
+use sfl::fleet::{FleetPreset, FleetSpec};
+use sfl::tensor::alloc_count;
+use sfl::util::bench::bench;
+
+const KINDS: [SchedulerKind; 4] = [
+    SchedulerKind::Proposed,
+    SchedulerKind::Fifo,
+    SchedulerKind::WorkloadFirst,
+    SchedulerKind::Random,
+];
+
+fn main() {
+    let max_n: usize = std::env::var("SCHED_SCALE_MAX_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100_000);
+    let cfg = ExperimentConfig::paper();
+    let dims = cfg.timing_dims();
+    let mut entries: Vec<(String, String)> = Vec::new();
+
+    for n in [10usize, 100, 1_000, 10_000, 100_000] {
+        if n > max_n {
+            println!("sched_scale: skipping n={n} (SCHED_SCALE_MAX_N={max_n})");
+            continue;
+        }
+        let mut spec = FleetSpec::new(FleetPreset::Lognormal, n, 11);
+        spec.mfu_sigma = 0.2;
+        let mut fleet_cfg = cfg.clone();
+        fleet_cfg.apply_fleet(spec);
+        let cuts = fleet_cfg.resolve_cuts();
+        let clients = &fleet_cfg.clients;
+        let jobs = timing::build_jobs(&dims, clients, &cuts, &fleet_cfg.server);
+        let nominal_jobs = timing::build_nominal_jobs(&dims, clients, &cuts, &fleet_cfg.server);
+
+        let mut order = Vec::with_capacity(n);
+        for kind in KINDS {
+            let mut s = make_scheduler(kind, 7);
+            s.order_into(&jobs, &mut order); // size the buffer
+            let (cap, ptr) = (order.capacity(), order.as_ptr());
+            let allocs_before = alloc_count();
+            let name = format!("sched/order/{}/n{n}", s.name());
+            let r = bench(&name, 3, 30, || {
+                s.order_into(&jobs, &mut order);
+                std::hint::black_box(makespan(&jobs, &order));
+            });
+            if n == 10_000 {
+                assert_eq!(
+                    alloc_count(),
+                    allocs_before,
+                    "schedule path allocated HostTensors at n=10k"
+                );
+                assert_eq!(
+                    (order.capacity(), order.as_ptr()),
+                    (cap, ptr),
+                    "order buffer regrew at n=10k"
+                );
+            }
+            entries.push((name, r.median.as_nanos().to_string()));
+            s.order_into(&jobs, &mut order);
+            let m = makespan(&jobs, &order);
+            println!("sched makespan {:<16} n={n:<7} {m:.3}s", s.name());
+            entries.push((format!("sched/makespan/{}/n{n}", s.name()), format!("{m:.6}")));
+        }
+        if n == 10_000 {
+            println!("alloc-check: schedule path at n=10k → 0 HostTensor allocations");
+        }
+
+        // Proposed policy driven by the online estimator: cold (static
+        // nominal model) and warm (one full observation round).
+        let mut est = TimingEstimator::new(n, 0.25);
+        let mut sched = make_scheduler(SchedulerKind::Proposed, 7);
+        let mut sched_jobs = Vec::with_capacity(n);
+        est.jobs_into(&nominal_jobs, &mut sched_jobs);
+        sched.order_into(&sched_jobs, &mut order);
+        let cold = makespan(&jobs, &order);
+        for j in &jobs {
+            est.observe(j.client, &StepTiming::from_job(j));
+        }
+        est.jobs_into(&nominal_jobs, &mut sched_jobs);
+        sched.order_into(&sched_jobs, &mut order);
+        let warm = makespan(&jobs, &order);
+        sched.order_into(&jobs, &mut order);
+        let oracle = makespan(&jobs, &order);
+        println!(
+            "sched estimator n={n:<7} cold={cold:.3}s warm={warm:.3}s oracle={oracle:.3}s \
+             (warm/oracle = {:.4})",
+            warm / oracle
+        );
+        entries.push((format!("sched/makespan/est-cold/n{n}"), format!("{cold:.6}")));
+        entries.push((format!("sched/makespan/est-warm/n{n}"), format!("{warm:.6}")));
+    }
+
+    let mut json = String::from("{\n");
+    for (i, (name, value)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        json.push_str(&format!("  \"{name}\": {value}{comma}\n"));
+    }
+    json.push_str("}\n");
+    match std::fs::write("BENCH_sched.json", &json) {
+        Ok(()) => println!("wrote BENCH_sched.json ({} entries)", entries.len()),
+        Err(e) => eprintln!("could not write BENCH_sched.json: {e}"),
+    }
+}

@@ -6,6 +6,7 @@
 //! `ExperimentConfig::paper()` is the §V-A setup.
 
 use crate::devices::{paper_fleet, DeviceProfile, ServerProfile, DEFAULT_CLIENT_MFU};
+use crate::fleet::{FleetPreset, FleetSpec};
 use crate::model::ModelDims;
 use crate::net::Link;
 use crate::util::kv::KvDocument;
@@ -121,6 +122,16 @@ pub struct TrainConfig {
     /// 0.0 = the paper's setting). Dropped clients skip the round and
     /// are excluded from that round's aggregation weights.
     pub dropout_prob: f64,
+    /// Upper bound on per-round participants (0 = everyone).  Fleet-
+    /// scale runs sample this many of the round's surviving clients
+    /// uniformly, so a 100k-client fleet still runs bounded rounds.
+    pub max_participants: usize,
+    /// Drive the scheduler from the analytic (oracle) eq. 10–12 timings
+    /// instead of the online `TimingEstimator` — the paper benches'
+    /// original behavior.
+    pub oracle_timing: bool,
+    /// EWMA smoothing factor for the online timing estimator, in (0, 1].
+    pub timing_ewma_alpha: f64,
     pub seed: u64,
 }
 
@@ -138,6 +149,9 @@ impl Default for TrainConfig {
             min_delta: 1e-3,
             dirichlet_alpha: 0.5,
             dropout_prob: 0.0,
+            max_participants: 0,
+            oracle_timing: false,
+            timing_ewma_alpha: crate::coordinator::estimator::DEFAULT_EWMA_ALPHA,
             seed: 42,
         }
     }
@@ -154,6 +168,10 @@ pub struct ExperimentConfig {
     pub scheme: SchemeKind,
     pub scheduler: SchedulerKind,
     pub clients: Vec<ClientConfig>,
+    /// When set, `clients` was synthesized from this spec (and the
+    /// key=value round-trip re-synthesizes it instead of listing
+    /// per-client sections).
+    pub fleet: Option<FleetSpec>,
     pub server: ServerProfile,
     pub train: TrainConfig,
     /// Root of the artifacts directory.
@@ -178,10 +196,18 @@ impl ExperimentConfig {
             scheme: SchemeKind::Ours,
             scheduler: SchedulerKind::Proposed,
             clients,
+            fleet: None,
             server: ServerProfile::rtx4080s(),
             train: TrainConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
+    }
+
+    /// Replace the client list with a synthesized fleet (recorded in
+    /// `self.fleet` so serialization round-trips through the spec).
+    pub fn apply_fleet(&mut self, spec: FleetSpec) {
+        self.clients = spec.synthesize();
+        self.fleet = Some(spec);
     }
 
     /// Fast preset for tests/benches: mini artifacts, fewer rounds.
@@ -240,6 +266,22 @@ impl ExperimentConfig {
         if !(0.0..=1.0).contains(&self.train.dropout_prob) {
             bail!("dropout_prob must be in [0, 1], got {}", self.train.dropout_prob);
         }
+        let a = self.train.timing_ewma_alpha;
+        if !(a > 0.0 && a <= 1.0) {
+            bail!("timing_ewma_alpha must be in (0, 1], got {a}");
+        }
+        if let Some(f) = &self.fleet {
+            if f.n == 0 {
+                bail!("fleet spec must synthesize at least one client");
+            }
+            if f.n != self.clients.len() {
+                bail!(
+                    "fleet spec says {} clients but config lists {} (call apply_fleet)",
+                    f.n,
+                    self.clients.len()
+                );
+            }
+        }
         Ok(())
     }
 
@@ -296,6 +338,9 @@ impl ExperimentConfig {
         t.min_delta = r.parse_or("min_delta", t.min_delta)?;
         t.dirichlet_alpha = r.parse_or("dirichlet_alpha", t.dirichlet_alpha)?;
         t.dropout_prob = r.parse_or("dropout_prob", t.dropout_prob)?;
+        t.max_participants = r.parse_or("max_participants", t.max_participants)?;
+        t.oracle_timing = r.parse_or("oracle_timing", t.oracle_timing)?;
+        t.timing_ewma_alpha = r.parse_or("timing_ewma_alpha", t.timing_ewma_alpha)?;
         t.seed = r.parse_or("seed", t.seed)?;
 
         if let Some(s) = doc.sections_named("server").next() {
@@ -333,6 +378,15 @@ impl ExperimentConfig {
         if !clients.is_empty() {
             cfg.clients = clients;
         }
+        // A [fleet] section synthesizes the client list and takes
+        // precedence over explicit [client] sections.
+        if let Some(s) = doc.sections_named("fleet").next() {
+            let preset: FleetPreset = s.get("preset").unwrap_or("paper").parse()?;
+            let mut spec = FleetSpec::new(preset, s.parse::<usize>("n")?, cfg.train.seed);
+            spec.seed = s.parse_or("seed", spec.seed)?;
+            spec.mfu_sigma = s.parse_or("mfu_sigma", spec.mfu_sigma)?;
+            cfg.apply_fleet(spec);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -349,7 +403,8 @@ impl ExperimentConfig {
         out.push_str(&format!(
             "steps_per_round = {}\naggregation_interval = {}\nmax_rounds = {}\nlr = {}\n\
              eval_interval = {}\neval_batches = {}\npatience = {}\nmin_delta = {}\n\
-             dirichlet_alpha = {}\ndropout_prob = {}\nseed = {}\n",
+             dirichlet_alpha = {}\ndropout_prob = {}\nmax_participants = {}\n\
+             oracle_timing = {}\ntiming_ewma_alpha = {}\nseed = {}\n",
             t.steps_per_round,
             t.aggregation_interval,
             t.max_rounds,
@@ -360,6 +415,9 @@ impl ExperimentConfig {
             t.min_delta,
             t.dirichlet_alpha,
             t.dropout_prob,
+            t.max_participants,
+            t.oracle_timing,
+            t.timing_ewma_alpha,
             t.seed
         ));
         out.push_str(&format!(
@@ -370,6 +428,15 @@ impl ExperimentConfig {
             self.server.mfu,
             self.server.contention_per_job
         ));
+        // A synthesized fleet round-trips through its spec (same seed ⇒
+        // bit-identical fleet); only hand-written fleets list clients.
+        if let Some(f) = &self.fleet {
+            out.push_str(&format!(
+                "\n[fleet]\npreset = {}\nn = {}\nseed = {}\nmfu_sigma = {}\n",
+                f.preset, f.n, f.seed, f.mfu_sigma
+            ));
+            return out;
+        }
         for c in &self.clients {
             out.push_str(&format!(
                 "\n[client]\nname = {}\ntflops = {}\nmemory_mb = {}\nmfu = {}\nrate_mbps = {}\nlatency_ms = {}\n",
@@ -455,6 +522,46 @@ mod tests {
         assert!(c.validate().is_err());
         c.train.dropout_prob = 0.4;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_kv_roundtrip_resynthesizes_the_same_fleet() {
+        let mut c = ExperimentConfig::paper();
+        c.apply_fleet(FleetSpec::new(FleetPreset::Lognormal, 40, 13));
+        c.train.max_participants = 8;
+        c.train.oracle_timing = true;
+        c.validate().unwrap();
+        let dir = std::env::temp_dir().join("sfl_cfg_fleet_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fleet.exp");
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.fleet, c.fleet);
+        assert_eq!(back.clients.len(), 40);
+        assert_eq!(back.train.max_participants, 8);
+        assert!(back.train.oracle_timing);
+        for (a, b) in back.clients.iter().zip(c.clients.iter()) {
+            assert_eq!(a.device.tflops.to_bits(), b.device.tflops.to_bits());
+            assert_eq!(a.device.mfu.to_bits(), b.device.mfu.to_bits());
+            assert_eq!(a.link.rate_mbps.to_bits(), b.link.rate_mbps.to_bits());
+        }
+    }
+
+    #[test]
+    fn fleet_and_estimator_knobs_validated() {
+        let mut c = ExperimentConfig::paper();
+        c.train.timing_ewma_alpha = 0.0;
+        assert!(c.validate().is_err());
+        c.train.timing_ewma_alpha = 1.5;
+        assert!(c.validate().is_err());
+        c.train.timing_ewma_alpha = 0.25;
+        c.validate().unwrap();
+        // A fleet spec that disagrees with the client list is rejected.
+        c.fleet = Some(FleetSpec::new(FleetPreset::Paper, 99, 1));
+        assert!(c.validate().is_err());
+        c.apply_fleet(FleetSpec::new(FleetPreset::Paper, 12, 1));
+        c.validate().unwrap();
+        assert_eq!(c.resolve_cuts().len(), 12);
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Online per-client timing estimation (fleet-scale scheduling without
+//! oracle inputs).
+//!
+//! The paper's Alg. 2 assumes the server knows every client's
+//! `N_c^u / C_u` — reported device specs standing in for the client-side
+//! backward tail.  Reported specs lie in the field (thermal throttling,
+//! background load, mis-reported MFU), and related systems (Fed
+//! MobiLLM, SplitFrozen) learn per-device timings online instead.  The
+//! [`TimingEstimator`] does the same here: an EWMA per client over the
+//! *observed* round timings (server time, client backward time, comm,
+//! arrival), feeding the scheduler measured [`JobInfo`]s.
+//!
+//! Cold start falls back to the static eq. 10–12 model evaluated on
+//! *nominal* device profiles (reported specs, class-default MFU) — the
+//! caller passes that fallback job per client.  Once a client has been
+//! observed, [`TimingEstimator::job_for`] returns its measured
+//! estimates; the learned effective capability is encoded as
+//! `Ĉ_u = N_c^u / (T̂_b + T̂_bc)` so Alg. 2's unchanged `N_c^u / C_u`
+//! key equals the measured backward tail — no oracle timing input
+//! remains in the schedule decision.
+
+use super::scheduler::JobInfo;
+use super::timing::StepTiming;
+use anyhow::{bail, Result};
+
+/// Default EWMA smoothing factor (weight of the newest observation).
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.25;
+
+/// Per-client exponentially weighted moving averages.
+#[derive(Debug, Clone, Copy, Default)]
+struct Ewma {
+    arrival: f64,
+    server: f64,
+    bwd: f64,
+    comm: f64,
+    samples: u64,
+}
+
+/// Per-client EWMA timing model, indexed by global client id.
+#[derive(Debug, Clone)]
+pub struct TimingEstimator {
+    alpha: f64,
+    stats: Vec<Ewma>,
+}
+
+impl TimingEstimator {
+    /// `alpha` is the EWMA weight of the newest observation, in (0, 1].
+    pub fn new(n_clients: usize, alpha: f64) -> Self {
+        Self { alpha, stats: vec![Ewma::default(); n_clients] }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// Fold one round's observed timings for `client` into the EWMAs.
+    /// The first observation seeds the averages directly.
+    pub fn observe(&mut self, client: usize, t: &StepTiming) {
+        let e = &mut self.stats[client];
+        let (arrival, server, bwd, comm) =
+            (t.t_fwd + t.t_fwd_comm, t.t_server, t.t_bwd, t.t_bwd_comm);
+        if e.samples == 0 {
+            (e.arrival, e.server, e.bwd, e.comm) = (arrival, server, bwd, comm);
+        } else {
+            let a = self.alpha;
+            e.arrival += a * (arrival - e.arrival);
+            e.server += a * (server - e.server);
+            e.bwd += a * (bwd - e.bwd);
+            e.comm += a * (comm - e.comm);
+        }
+        e.samples += 1;
+    }
+
+    /// Whether `client` has at least one observation.
+    pub fn is_warm(&self, client: usize) -> bool {
+        self.stats[client].samples > 0
+    }
+
+    /// Number of clients with at least one observation.
+    pub fn warm_clients(&self) -> usize {
+        self.stats.iter().filter(|e| e.samples > 0).count()
+    }
+
+    /// The scheduler-facing job for one client: measured estimates when
+    /// warm, the caller's static-model `fallback` when cold.  The
+    /// fallback supplies the id and the (server-known) adapter count
+    /// `N_c^u`; the capability is always re-encoded as
+    /// `N_c^u / (T_b + T_bc)` — measured tail when warm, the static
+    /// model's *predicted* tail when cold — so the greedy `N_c/C` key
+    /// compares tail-seconds across every client of a mixed warm/cold
+    /// cohort, and no reported-TFLOPS oracle input survives.
+    pub fn job_for(&self, fallback: &JobInfo) -> JobInfo {
+        let e = &self.stats[fallback.client];
+        let (arrival, server, bwd, comm) = if e.samples == 0 {
+            (
+                fallback.arrival,
+                fallback.server_time,
+                fallback.client_bwd_time,
+                fallback.bwd_comm_time,
+            )
+        } else {
+            (e.arrival, e.server, e.bwd, e.comm)
+        };
+        JobInfo {
+            client: fallback.client,
+            arrival,
+            server_time: server,
+            client_bwd_time: bwd,
+            bwd_comm_time: comm,
+            n_client_adapters: fallback.n_client_adapters,
+            compute_capability: fallback.n_client_adapters as f64 / (bwd + comm).max(1e-12),
+        }
+    }
+
+    /// Gather scheduler-facing jobs for a participant set into a reused
+    /// buffer (no allocation at steady state).
+    pub fn jobs_into(&self, fallbacks: &[JobInfo], out: &mut Vec<JobInfo>) {
+        out.clear();
+        out.extend(fallbacks.iter().map(|f| self.job_for(f)));
+    }
+
+    /// Flat state for checkpointing: 4 EWMAs per client + sample counts.
+    pub fn state(&self) -> (Vec<f64>, Vec<u64>) {
+        let mut values = Vec::with_capacity(self.stats.len() * 4);
+        let mut samples = Vec::with_capacity(self.stats.len());
+        for e in &self.stats {
+            values.extend_from_slice(&[e.arrival, e.server, e.bwd, e.comm]);
+            samples.push(e.samples);
+        }
+        (values, samples)
+    }
+
+    /// Restore from [`TimingEstimator::state`] (bit-exact resume).
+    pub fn restore_state(&mut self, values: &[f64], samples: &[u64]) -> Result<()> {
+        let n = self.stats.len();
+        if values.len() != n * 4 || samples.len() != n {
+            bail!(
+                "estimator state has {}/{} entries, expected {}/{}",
+                values.len(),
+                samples.len(),
+                n * 4,
+                n
+            );
+        }
+        for (u, e) in self.stats.iter_mut().enumerate() {
+            e.arrival = values[u * 4];
+            e.server = values[u * 4 + 1];
+            e.bwd = values[u * 4 + 2];
+            e.comm = values[u * 4 + 3];
+            e.samples = samples[u];
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(client: usize, arrival: f64, server: f64, bwd: f64, comm: f64) -> JobInfo {
+        JobInfo {
+            client,
+            arrival,
+            server_time: server,
+            client_bwd_time: bwd,
+            bwd_comm_time: comm,
+            n_client_adapters: 4,
+            compute_capability: 2.0,
+        }
+    }
+
+    #[test]
+    fn cold_clients_fall_back_to_the_static_model() {
+        let est = TimingEstimator::new(3, DEFAULT_EWMA_ALPHA);
+        let fb = job(1, 0.7, 0.3, 2.0, 0.1);
+        let j = est.job_for(&fb);
+        assert!(!est.is_warm(1));
+        assert!((j.arrival - fb.arrival).abs() < 1e-15);
+        assert!((j.server_time - fb.server_time).abs() < 1e-15);
+        assert!((j.client_bwd_time - fb.client_bwd_time).abs() < 1e-15);
+        // The cold key is the static model's *predicted* tail in
+        // seconds — commensurable with warm clients' measured tails,
+        // never the raw reported-TFLOPS proxy.
+        assert!((j.greedy_priority() - 2.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_warm_cold_cohorts_sort_on_commensurable_keys() {
+        // A warm client with a long measured tail must outrank a cold
+        // client with a short predicted tail — the failure mode of
+        // passing the raw fallback through (N/TFLOPS vs seconds).
+        let mut est = TimingEstimator::new(2, 0.25);
+        est.observe(0, &StepTiming::from_job(&job(0, 0.5, 0.4, 5.0, 0.2)));
+        let warm = est.job_for(&job(0, 0.5, 0.4, 1.0, 0.1));
+        let cold = est.job_for(&job(1, 0.5, 0.4, 0.8, 0.1));
+        assert!((warm.greedy_priority() - 5.2).abs() < 1e-12);
+        assert!((cold.greedy_priority() - 0.9).abs() < 1e-12);
+        assert!(warm.greedy_priority() > cold.greedy_priority());
+    }
+
+    #[test]
+    fn converges_to_stationary_timings_and_encodes_the_tail() {
+        // Stationary fleet: constant observations. The first sample
+        // seeds the EWMA, so the estimate is exact from round one and
+        // stays exact — `job_for` must reproduce the observed job with
+        // the measured tail as its greedy key.
+        let truth = job(0, 0.9, 0.4, 3.0, 0.2);
+        let nominal = job(0, 0.5, 0.4, 1.0, 0.1); // mis-reported specs
+        let mut est = TimingEstimator::new(1, 0.25);
+        for _ in 0..8 {
+            est.observe(0, &StepTiming::from_job(&truth));
+        }
+        let j = est.job_for(&nominal);
+        assert!((j.arrival - truth.arrival).abs() < 1e-12);
+        assert!((j.server_time - truth.server_time).abs() < 1e-12);
+        assert!((j.client_bwd_time - truth.client_bwd_time).abs() < 1e-12);
+        assert!((j.bwd_comm_time - truth.bwd_comm_time).abs() < 1e-12);
+        // Alg. 2's unchanged N/C key now equals the measured tail.
+        let tail = truth.client_bwd_time + truth.bwd_comm_time;
+        assert!((j.greedy_priority() - tail).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_tracks_a_shift_in_device_speed() {
+        let mut est = TimingEstimator::new(1, 0.5);
+        est.observe(0, &StepTiming::from_job(&job(0, 0.5, 0.4, 2.0, 0.1)));
+        // Device throttles: backward doubles. EWMA must move toward it.
+        for _ in 0..16 {
+            est.observe(0, &StepTiming::from_job(&job(0, 0.5, 0.4, 4.0, 0.1)));
+        }
+        let j = est.job_for(&job(0, 0.0, 0.0, 0.0, 0.0));
+        assert!((j.client_bwd_time - 4.0).abs() < 1e-3, "got {}", j.client_bwd_time);
+    }
+
+    #[test]
+    fn state_roundtrip_is_exact() {
+        let mut est = TimingEstimator::new(2, 0.3);
+        est.observe(1, &StepTiming::from_job(&job(1, 0.7, 0.3, 2.0, 0.1)));
+        est.observe(1, &StepTiming::from_job(&job(1, 0.9, 0.5, 2.5, 0.2)));
+        let (values, samples) = est.state();
+        let mut back = TimingEstimator::new(2, 0.3);
+        back.restore_state(&values, &samples).unwrap();
+        let fb = job(1, 0.0, 0.0, 0.0, 0.0);
+        let (a, b) = (est.job_for(&fb), back.job_for(&fb));
+        assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+        assert_eq!(a.server_time.to_bits(), b.server_time.to_bits());
+        assert_eq!(a.client_bwd_time.to_bits(), b.client_bwd_time.to_bits());
+        assert_eq!(a.bwd_comm_time.to_bits(), b.bwd_comm_time.to_bits());
+        assert!(!back.is_warm(0) && back.is_warm(1));
+        assert!(back.restore_state(&values[1..], &samples).is_err());
+    }
+}

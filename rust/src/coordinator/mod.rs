@@ -26,9 +26,19 @@
 //! state for *all three* schemes); protocol timing runs on the virtual
 //! clock with the paper-scale dims (DESIGN.md §2).
 //!
+//! Scheduling is fleet-scale: schedulers emit job *indices* through a
+//! reused buffer ([`scheduler::Scheduler::order_into`], O(n log n),
+//! allocation-free), per-round participation can be bounded
+//! (`max_participants`), and the per-client timings feeding Alg. 2 are
+//! *learned* online by [`estimator::TimingEstimator`] (EWMA over
+//! observed rounds, static eq. 10–12 cold start) unless the experiment
+//! pins `oracle_timing`.  Synthetic fleets come from
+//! [`fleet::FleetSpec`](crate::fleet::FleetSpec).
+//!
 //! [`Trainer`] survives only as a thin deprecated shim over
 //! `Session::run_to_convergence` + the stdout observer.
 
+pub mod estimator;
 pub mod lr;
 pub mod scheduler;
 pub mod session;

@@ -6,6 +6,22 @@
 //! Alg. 2's greedy rule: process clients in **descending N_c^u / C_u**
 //! — clients whose own backward pass is longest go first, so their
 //! backprop overlaps the server's remaining queue.
+//!
+//! ## The order contract
+//!
+//! Every policy returns **job indices** (positions into the `jobs`
+//! slice), never `JobInfo::client` labels.  `client` is a *global id*
+//! carried along for telemetry and the timing estimator; on dropout
+//! rounds it is non-contiguous (survivor ids), so indexing anything by
+//! it is a bug.  All consumers (`timing::ours_step_ordered`,
+//! `makespan`, the session's training loop) index jobs/timings with the
+//! returned positions and read `jobs[i].client` only as a label.
+//!
+//! The hot entry point is [`Scheduler::order_into`]: it fills a caller
+//! owned buffer and sorts in place (`sort_unstable_by`), so at steady
+//! state the schedule path performs zero heap allocations and runs in
+//! O(n log n) — fleet-scale rounds (10k–100k jobs) schedule without
+//! touching the allocator (see `benches/sched_scale.rs`).
 
 use crate::config::SchedulerKind;
 use crate::tensor::rng::Rng;
@@ -13,6 +29,7 @@ use crate::tensor::rng::Rng;
 /// Everything a policy may inspect about one client's pending job.
 #[derive(Debug, Clone, Copy)]
 pub struct JobInfo {
+    /// Global client id — a *label*, not an index into the job slice.
     pub client: usize,
     /// Virtual time the activations arrive at the server (T^f + T^fc).
     pub arrival: f64,
@@ -24,15 +41,41 @@ pub struct JobInfo {
     pub bwd_comm_time: f64,
     /// N_c^u — number of client-side LoRA adapters.
     pub n_client_adapters: usize,
-    /// C_u — client computing capability (TFLOPS).
+    /// C_u — client computing capability (adapters the client works
+    /// through per unit tail time).  Oracle jobs carry the reported
+    /// device TFLOPS; estimator-built jobs carry the *learned* effective
+    /// capability N_c^u / (T̂_b + T̂_bc), so Alg. 2 needs no oracle input.
     pub compute_capability: f64,
 }
 
-/// A training-order policy. Must return a permutation of the job indices.
+impl JobInfo {
+    /// Alg. 2's greedy key, N_c^u / C_u — the (proxied or measured)
+    /// client-side tail the server tries to hide under its own queue.
+    pub fn greedy_priority(&self) -> f64 {
+        self.n_client_adapters as f64 / self.compute_capability
+    }
+}
+
+/// Reset `out` to the identity permutation 0..n without reallocating
+/// once its capacity has grown to n.
+fn fill_identity(out: &mut Vec<usize>, n: usize) {
+    out.clear();
+    out.extend(0..n);
+}
+
+/// A training-order policy. Must emit a permutation of the job indices.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
-    /// Return client ids in server processing order.
-    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize>;
+    /// Fill `out` with the job *indices* (positions in `jobs`, not
+    /// `JobInfo::client` ids) in server processing order.  Reuses the
+    /// buffer — no allocation at steady state.
+    fn order_into(&mut self, jobs: &[JobInfo], out: &mut Vec<usize>);
+    /// Allocating convenience wrapper around [`Scheduler::order_into`].
+    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize> {
+        let mut out = Vec::with_capacity(jobs.len());
+        self.order_into(jobs, &mut out);
+        out
+    }
     /// Internal RNG state, if the policy is stateful (checkpoint/resume).
     fn rng_state(&self) -> Option<u64> {
         None
@@ -50,16 +93,14 @@ impl Scheduler for ProposedScheduler {
         "proposed"
     }
 
-    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..jobs.len()).collect();
-        idx.sort_by(|&a, &b| {
-            let ka = jobs[a].n_client_adapters as f64 / jobs[a].compute_capability;
-            let kb = jobs[b].n_client_adapters as f64 / jobs[b].compute_capability;
+    fn order_into(&mut self, jobs: &[JobInfo], out: &mut Vec<usize>) {
+        fill_identity(out, jobs.len());
+        out.sort_unstable_by(|&a, &b| {
+            let (ka, kb) = (jobs[a].greedy_priority(), jobs[b].greedy_priority());
             kb.partial_cmp(&ka)
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(jobs[a].client.cmp(&jobs[b].client))
         });
-        idx.into_iter().map(|i| jobs[i].client).collect()
     }
 }
 
@@ -71,16 +112,15 @@ impl Scheduler for FifoScheduler {
         "fifo"
     }
 
-    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..jobs.len()).collect();
-        idx.sort_by(|&a, &b| {
+    fn order_into(&mut self, jobs: &[JobInfo], out: &mut Vec<usize>) {
+        fill_identity(out, jobs.len());
+        out.sort_unstable_by(|&a, &b| {
             jobs[a]
                 .arrival
                 .partial_cmp(&jobs[b].arrival)
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(jobs[a].client.cmp(&jobs[b].client))
         });
-        idx.into_iter().map(|i| jobs[i].client).collect()
     }
 }
 
@@ -92,16 +132,15 @@ impl Scheduler for WorkloadFirstScheduler {
         "workload_first"
     }
 
-    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..jobs.len()).collect();
-        idx.sort_by(|&a, &b| {
+    fn order_into(&mut self, jobs: &[JobInfo], out: &mut Vec<usize>) {
+        fill_identity(out, jobs.len());
+        out.sort_unstable_by(|&a, &b| {
             jobs[b]
                 .server_time
                 .partial_cmp(&jobs[a].server_time)
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(jobs[a].client.cmp(&jobs[b].client))
         });
-        idx.into_iter().map(|i| jobs[i].client).collect()
     }
 }
 
@@ -121,13 +160,12 @@ impl Scheduler for RandomScheduler {
         "random"
     }
 
-    fn order(&mut self, jobs: &[JobInfo]) -> Vec<usize> {
-        let mut ids: Vec<usize> = jobs.iter().map(|j| j.client).collect();
-        for i in (1..ids.len()).rev() {
+    fn order_into(&mut self, jobs: &[JobInfo], out: &mut Vec<usize>) {
+        fill_identity(out, jobs.len());
+        for i in (1..out.len()).rev() {
             let j = self.rng.below(i + 1);
-            ids.swap(i, j);
+            out.swap(i, j);
         }
-        ids
     }
 
     fn rng_state(&self) -> Option<u64> {
@@ -151,14 +189,14 @@ pub fn make_scheduler(kind: SchedulerKind, seed: u64) -> Box<dyn Scheduler> {
 
 /// Makespan of a schedule under the paper's timing model (eqs. 10–12):
 /// sequential server, per-client completion = server finish + downlink +
-/// client backward. Used by tests and the brute-force optimality check.
+/// client backward.  `order` holds job indices (the scheduler contract);
+/// the walk is a straight slice scan — no per-call map, no allocation.
 pub fn makespan(jobs: &[JobInfo], order: &[usize]) -> f64 {
-    let by_client: std::collections::HashMap<usize, &JobInfo> =
-        jobs.iter().map(|j| (j.client, j)).collect();
+    debug_assert_eq!(order.len(), jobs.len());
     let mut horizon = 0.0f64;
     let mut worst = 0.0f64;
-    for &c in order {
-        let j = by_client[&c];
+    for &i in order {
+        let j = &jobs[i];
         let start = horizon.max(j.arrival);
         let finish = start + j.server_time;
         horizon = finish;
@@ -167,25 +205,26 @@ pub fn makespan(jobs: &[JobInfo], order: &[usize]) -> f64 {
     worst
 }
 
-/// Exhaustive minimum makespan (small fleets only — tests).
+/// Exhaustive minimum makespan over job-index permutations (small
+/// fleets only — tests).
 pub fn brute_force_best(jobs: &[JobInfo]) -> (Vec<usize>, f64) {
-    fn permute(ids: &mut Vec<usize>, k: usize, jobs: &[JobInfo], best: &mut (Vec<usize>, f64)) {
-        if k == ids.len() {
-            let m = makespan(jobs, ids);
+    fn permute(idx: &mut Vec<usize>, k: usize, jobs: &[JobInfo], best: &mut (Vec<usize>, f64)) {
+        if k == idx.len() {
+            let m = makespan(jobs, idx);
             if m < best.1 {
-                *best = (ids.clone(), m);
+                *best = (idx.clone(), m);
             }
             return;
         }
-        for i in k..ids.len() {
-            ids.swap(k, i);
-            permute(ids, k + 1, jobs, best);
-            ids.swap(k, i);
+        for i in k..idx.len() {
+            idx.swap(k, i);
+            permute(idx, k + 1, jobs, best);
+            idx.swap(k, i);
         }
     }
-    let mut ids: Vec<usize> = jobs.iter().map(|j| j.client).collect();
-    let mut best = (ids.clone(), f64::INFINITY);
-    permute(&mut ids, 0, jobs, &mut best);
+    let mut idx: Vec<usize> = (0..jobs.len()).collect();
+    let mut best = (idx.clone(), f64::INFINITY);
+    permute(&mut idx, 0, jobs, &mut best);
     best
 }
 
@@ -250,6 +289,53 @@ mod tests {
             order.sort_unstable();
             assert_eq!(order, (0..6).collect::<Vec<_>>(), "{}", s.name());
         }
+    }
+
+    /// Regression for the id/index aliasing bug: on dropout rounds the
+    /// surviving global ids are non-contiguous, so an order expressed in
+    /// *ids* (the old contract) is not a valid index permutation — the
+    /// consumers that index `jobs[u]` / `timings[u]` would panic or
+    /// silently account the wrong client.  Every policy must emit dense
+    /// job indices regardless of the id labels.
+    #[test]
+    fn order_is_index_permutation_under_non_contiguous_ids() {
+        // Dropout-round shape: clients 7, 2, 11 survived.
+        let jobs = vec![
+            job(7, 3, 0.3, 1.0, 10.0),
+            job(2, 1, 3.0, 1.0, 0.1),
+            job(11, 2, 1.0, 1.0, 2.0),
+        ];
+        // Alg. 2 by position: priorities 10.0, 0.33, 2.0.
+        assert_eq!(ProposedScheduler.order(&jobs), vec![0, 2, 1]);
+        for mut s in [
+            Box::new(ProposedScheduler) as Box<dyn Scheduler>,
+            Box::new(FifoScheduler),
+            Box::new(WorkloadFirstScheduler),
+            Box::new(RandomScheduler::new(4)),
+        ] {
+            let mut order = s.order(&jobs);
+            order.sort_unstable();
+            assert_eq!(order, vec![0, 1, 2], "{} must emit job indices", s.name());
+        }
+        // And the index-walking makespan accepts the order directly.
+        let order = ProposedScheduler.order(&jobs);
+        assert!(makespan(&jobs, &order) > 0.0);
+    }
+
+    #[test]
+    fn order_into_reuses_the_buffer() {
+        let jobs: Vec<JobInfo> =
+            (0..64).map(|i| job(i, 1 + i % 3, 1.0 + i as f64, 1.0, 1.0)).collect();
+        let mut s = RandomScheduler::new(9);
+        let mut buf = Vec::new();
+        s.order_into(&jobs, &mut buf);
+        let (cap, ptr) = (buf.capacity(), buf.as_ptr());
+        for _ in 0..8 {
+            s.order_into(&jobs, &mut buf);
+            let _ = makespan(&jobs, &buf);
+        }
+        assert_eq!(buf.capacity(), cap, "order buffer must not regrow");
+        assert_eq!(buf.as_ptr(), ptr, "order buffer must not reallocate");
     }
 
     #[test]

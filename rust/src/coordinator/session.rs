@@ -22,9 +22,10 @@
 
 use crate::checkpoint::{decode_f64s, decode_u64s, encode_f64s, encode_u64s, write_sflp};
 use crate::config::{ClientConfig, ExperimentConfig, SchedulerKind, SchemeKind};
+use crate::coordinator::estimator::TimingEstimator;
 use crate::coordinator::lr::LrSchedule;
-use crate::coordinator::scheduler::{make_scheduler, JobInfo, Scheduler};
-use crate::coordinator::timing;
+use crate::coordinator::scheduler::{make_scheduler, makespan, JobInfo, Scheduler};
+use crate::coordinator::timing::{self, StepTiming};
 use crate::coordinator::{RoundRecord, RunResult};
 use crate::data::{self, BatchIter, Dataset};
 use crate::lora::{fedavg_joined_into, AdapterSet, LORA_KEYS};
@@ -73,6 +74,15 @@ pub struct SessionEnv<'e> {
     pub shards: Vec<Vec<usize>>,
     /// Data-size aggregation weights |D_u|/|D|.
     pub weights: Vec<f32>,
+    /// Per-client timing-model jobs (true device profiles) — the
+    /// simulation's ground truth, indexed by global client id.  Jobs
+    /// are per-client constants, so both tables are built once and
+    /// gathered per round.
+    pub oracle_jobs: Vec<JobInfo>,
+    /// Per-client jobs from *nominal* profiles (reported specs,
+    /// class-default MFU) — the static eq. 10–12 cold-start model the
+    /// timing estimator falls back to.
+    pub nominal_jobs: Vec<JobInfo>,
 }
 
 impl SessionEnv<'_> {
@@ -136,8 +146,14 @@ pub struct RoundCtx<'a, 'e> {
     /// Participant-ordered client configs / cuts (timing-model inputs).
     pub part_clients: &'a [ClientConfig],
     pub part_cuts: &'a [usize],
-    /// Timing jobs for the participants, built once per round.
+    /// True timing jobs for the participants (simulation ground truth),
+    /// gathered once per round.  `jobs[i].client` is a global id label;
+    /// schedulers return positions into this slice.
     pub jobs: &'a [JobInfo],
+    /// The jobs the *scheduler* decides on: oracle (`== jobs`) under
+    /// `--oracle-timing`, estimator-built otherwise.  Same length and
+    /// client labels as `jobs`; only the timing fields may differ.
+    pub sched_jobs: &'a [JobInfo],
     /// Whether this round ends with a LoRA aggregation (paper line 17).
     pub aggregate: bool,
     pub traffic: &'a mut TrafficMeter,
@@ -174,6 +190,9 @@ pub struct RoundReport {
     pub round: usize,
     /// Virtual clock after this round (aggregation included).
     pub sim_time: f64,
+    /// Mean per-step virtual training time this round — the scheduler's
+    /// makespan under Ours, the contended/relay step time otherwise.
+    pub step_time: f64,
     pub mean_loss: f32,
     /// Client ids that participated (failure injection visibility).
     pub participants: Vec<usize>,
@@ -270,6 +289,9 @@ fn train_fingerprint(cfg: &ExperimentConfig) -> Vec<(&'static str, u64)> {
         ("min_delta", t.min_delta.to_bits()),
         ("dirichlet_alpha", t.dirichlet_alpha.to_bits()),
         ("dropout_prob", t.dropout_prob.to_bits()),
+        ("max_participants", t.max_participants as u64),
+        ("oracle_timing", t.oracle_timing as u64),
+        ("timing_ewma_alpha", t.timing_ewma_alpha.to_bits()),
         ("lr", t.lr.to_bits() as u64),
         ("lr_schedule", lrs_tag),
         ("lr_schedule_horizon", lrs_p1),
@@ -421,6 +443,17 @@ fn reset_adam(adam: &mut AdamState) -> Result<()> {
 // are identical; only timing and memory accounting differ).
 // ---------------------------------------------------------------------
 
+/// How the shared core's virtual clock accrues per training step.
+enum CoreTiming {
+    /// Ours: the makespan of each step's *executed* server order —
+    /// computed from the true jobs under the order actually trained, so
+    /// stateful schedulers can never be timed against orders that were
+    /// not executed.
+    PerOrder,
+    /// SFL: order-independent contended-parallel step time.
+    Fixed(f64),
+}
+
 struct ParallelCore {
     clients: Vec<ClientState>,
     servers: Vec<ServerState>,
@@ -429,6 +462,9 @@ struct ParallelCore {
     kind: SchedulerKind,
     last_active: Option<usize>,
     switches: u64,
+    /// Reused per-step order buffer (job indices) — the schedule path
+    /// allocates nothing at steady state.
+    order_buf: Vec<usize>,
 }
 
 impl ParallelCore {
@@ -450,16 +486,25 @@ impl ParallelCore {
             kind: env.cfg.scheduler,
             last_active: None,
             switches: 0,
+            order_buf: Vec::with_capacity(env.cuts.len()),
         })
     }
 
-    /// The round shape Ours and SFL share: accrue `steps_per_round ×
-    /// step_time`, train, then aggregate when the session says so.
-    /// Only `step_time` (the schemes' timing models) differs.
-    fn run_round(&mut self, ctx: &mut RoundCtx<'_, '_>, step_time: f64) -> Result<RoundOutcome> {
+    /// The round shape Ours and SFL share: train `steps_per_round`
+    /// steps (accruing virtual time per `accrual`), then aggregate when
+    /// the session says so.
+    fn run_round(
+        &mut self,
+        ctx: &mut RoundCtx<'_, '_>,
+        accrual: CoreTiming,
+    ) -> Result<RoundOutcome> {
         let env = ctx.env;
-        let train_elapsed = env.cfg.train.steps_per_round as f64 * step_time;
-        let mean_loss = self.train_steps(ctx)?;
+        let time_orders = matches!(accrual, CoreTiming::PerOrder);
+        let (mean_loss, ordered_elapsed) = self.train_steps(ctx, time_orders)?;
+        let train_elapsed = match accrual {
+            CoreTiming::PerOrder => ordered_elapsed,
+            CoreTiming::Fixed(t) => env.cfg.train.steps_per_round as f64 * t,
+        };
         let agg_elapsed = if ctx.aggregate {
             self.aggregate(env, ctx.participants, ctx.traffic, ctx.scratch)?;
             timing::aggregation_time(&env.dims_time, ctx.part_clients, ctx.part_cuts)
@@ -469,20 +514,34 @@ impl ParallelCore {
         Ok(RoundOutcome { train_elapsed, agg_elapsed, mean_loss })
     }
 
-    /// `steps_per_round` mini-batch steps per participant, in scheduled
-    /// server order, all in place.  Returns the mean training loss.
-    fn train_steps(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<f32> {
+    /// `steps_per_round` mini-batch steps per participant, all in
+    /// place.  Each step draws the server order from the scheduler
+    /// exactly once (over `ctx.sched_jobs` — the scheduler's view) and
+    /// shares it between execution and the virtual clock (makespan over
+    /// the true `ctx.jobs`, walked only when `time_orders` — SFL's
+    /// step time is order-independent).  Returns (mean loss, Σ step
+    /// makespans, 0.0 when untimed).
+    fn train_steps(
+        &mut self,
+        ctx: &mut RoundCtx<'_, '_>,
+        time_orders: bool,
+    ) -> Result<(f32, f64)> {
         let env = ctx.env;
-        let participants = ctx.participants;
         let jobs = ctx.jobs;
         let steps = env.cfg.train.steps_per_round;
         let mut loss_sum = 0.0f32;
         let mut loss_n = 0u32;
+        let mut elapsed = 0.0f64;
         for _ in 0..steps {
-            // Server processing order (adapter-switching bookkeeping).
-            let order: Vec<usize> =
-                self.sched.order(jobs).into_iter().map(|i| participants[i]).collect();
-            for &u in &order {
+            self.sched.order_into(ctx.sched_jobs, &mut self.order_buf);
+            if time_orders {
+                elapsed += makespan(jobs, &self.order_buf);
+            }
+            // Execute in the same order (adapter-switching bookkeeping);
+            // take the buffer to keep the borrow checker out of the loop.
+            let order = std::mem::take(&mut self.order_buf);
+            for &i in &order {
+                let u = jobs[i].client;
                 let k = env.cuts[u];
                 let idx = self.iters[u].next_batch();
                 data::materialize_batch_into(
@@ -523,8 +582,9 @@ impl ParallelCore {
                 loss_sum += loss;
                 loss_n += 1;
             }
+            self.order_buf = order;
         }
-        Ok(loss_sum / loss_n.max(1) as f32)
+        Ok((loss_sum / loss_n.max(1) as f32, elapsed))
     }
 
     /// The FedAvg aggregation phase (paper Alg. 1 lines 17–30), fused
@@ -661,8 +721,9 @@ impl Scheme for OursScheme {
     }
 
     fn round(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<RoundOutcome> {
-        let (step_time, _) = timing::ours_step_with_jobs(ctx.jobs, self.core.sched.as_mut());
-        self.core.run_round(ctx, step_time)
+        // Per-step orders are drawn (and timed) inside the shared core —
+        // one draw per step, shared by timing and execution.
+        self.core.run_round(ctx, CoreTiming::PerOrder)
     }
 
     fn eval_model<'s>(
@@ -707,7 +768,7 @@ impl Scheme for SflScheme {
         let env = ctx.env;
         let (step_time, _) =
             timing::sfl_step_with_jobs(ctx.jobs, &env.dims_time, ctx.part_cuts, &env.cfg.server);
-        self.core.run_round(ctx, step_time)
+        self.core.run_round(ctx, CoreTiming::Fixed(step_time))
     }
 
     fn eval_model<'s>(
@@ -896,6 +957,11 @@ struct Book {
     traffic: TrafficMeter,
     dropout_rng: Rng,
     converged: bool,
+    /// Online per-client timing model (ignored under `oracle_timing`).
+    estimator: TimingEstimator,
+    /// Reused per-round gathers of the participant jobs.
+    jobs_buf: Vec<JobInfo>,
+    sched_jobs_buf: Vec<JobInfo>,
     /// Engine exec counter at session start (or resume).
     exec_base: u64,
     /// Executions recorded by earlier segments of a resumed run.
@@ -926,6 +992,19 @@ impl<'e> Session<'e> {
             ..data::CorpusSpec::carer_like(dims_exec.vocab, dims_exec.seq)
         };
         let ds = data::generate(&spec);
+        // Every client needs at least one batch of examples; on larger
+        // synthetic fleets the partitioner's rebalance cannot satisfy
+        // that and numeric training is out of scope (use the analytic
+        // benches / --max-participants with a larger corpus instead).
+        if ds.train.len() < cfg.clients.len() * dims_exec.batch {
+            bail!(
+                "{} clients need at least {} training examples for per-client shards \
+                 ({} available) — numeric sessions cap out well below bench-scale fleets",
+                cfg.clients.len(),
+                cfg.clients.len() * dims_exec.batch,
+                ds.train.len()
+            );
+        }
         let shards = data::dirichlet_partition(
             &ds.train,
             cfg.clients.len(),
@@ -936,6 +1015,11 @@ impl<'e> Session<'e> {
         let total: usize = shards.iter().map(|s| s.len()).sum();
         let weights: Vec<f32> =
             shards.iter().map(|s| s.len() as f32 / total as f32).collect();
+        // Per-client job tables: true profiles (ground truth) and
+        // nominal profiles (the static cold-start model).  JobInfo is
+        // per-client, so both are round-invariant on a stationary fleet.
+        let oracle_jobs = timing::build_jobs(&dims_time, &cfg.clients, &cuts, &cfg.server);
+        let nominal_jobs = timing::build_nominal_jobs(&dims_time, &cfg.clients, &cuts, &cfg.server);
         let env = SessionEnv {
             engine,
             cfg: cfg.clone(),
@@ -945,6 +1029,8 @@ impl<'e> Session<'e> {
             ds,
             shards,
             weights,
+            oracle_jobs,
+            nominal_jobs,
         };
         let scheme = make_scheme(&env)?;
 
@@ -976,6 +1062,9 @@ impl<'e> Session<'e> {
             traffic: TrafficMeter::default(),
             dropout_rng: Rng::new(t.seed ^ 0xD809),
             converged: false,
+            estimator: TimingEstimator::new(env.cuts.len(), t.timing_ewma_alpha),
+            jobs_buf: Vec::with_capacity(env.cuts.len()),
+            sched_jobs_buf: Vec::with_capacity(env.cuts.len()),
             exec_base: engine.exec_count(),
             execs_prior: 0,
             wall: std::time::Instant::now(),
@@ -1029,7 +1118,7 @@ impl<'e> Session<'e> {
 
         // ---- failure injection: which clients participate? ----
         let n = self.env.cuts.len();
-        let participants: Vec<usize> = if t.dropout_prob > 0.0 {
+        let mut participants: Vec<usize> = if t.dropout_prob > 0.0 {
             let rng = &mut self.book.dropout_rng;
             let mut p: Vec<usize> =
                 (0..n).filter(|_| rng.uniform() >= t.dropout_prob).collect();
@@ -1041,17 +1130,37 @@ impl<'e> Session<'e> {
         } else {
             (0..n).collect()
         };
+        // ---- bounded participation (fleet scale) ----
+        if t.max_participants > 0 && participants.len() > t.max_participants {
+            // Partial Fisher–Yates: the first `max_participants` slots
+            // become a uniform sample of the survivors.
+            let rng = &mut self.book.dropout_rng;
+            for i in 0..t.max_participants {
+                let j = i + rng.below(participants.len() - i);
+                participants.swap(i, j);
+            }
+            participants.truncate(t.max_participants);
+            participants.sort_unstable();
+        }
         let part_clients: Vec<ClientConfig> =
             participants.iter().map(|&u| self.env.cfg.clients[u].clone()).collect();
         let part_cuts: Vec<usize> = participants.iter().map(|&u| self.env.cuts[u]).collect();
-        // Jobs depend only on the round's participants, not the step —
-        // built once here, reused for timing and per-step ordering.
-        let jobs = timing::build_jobs(
-            &self.env.dims_time,
-            &part_clients,
-            &part_cuts,
-            &self.env.cfg.server,
-        );
+        // Jobs are per-client constants: gather the participants' rows
+        // from the session tables into reused buffers.  `jobs_buf` is
+        // the true timing model; `sched_jobs_buf` is what the scheduler
+        // sees — oracle under --oracle-timing, otherwise the online
+        // estimate (static nominal model until a client is observed).
+        self.book.jobs_buf.clear();
+        self.book.jobs_buf.extend(participants.iter().map(|&u| self.env.oracle_jobs[u]));
+        self.book.sched_jobs_buf.clear();
+        if t.oracle_timing {
+            self.book.sched_jobs_buf.extend_from_slice(&self.book.jobs_buf);
+        } else {
+            let est = &self.book.estimator;
+            self.book
+                .sched_jobs_buf
+                .extend(participants.iter().map(|&u| est.job_for(&self.env.nominal_jobs[u])));
+        }
         let aggregate = round % t.aggregation_interval == 0;
 
         let outcome = {
@@ -1062,13 +1171,23 @@ impl<'e> Session<'e> {
                 participants: &participants,
                 part_clients: &part_clients,
                 part_cuts: &part_cuts,
-                jobs: &jobs,
+                jobs: &self.book.jobs_buf,
+                sched_jobs: &self.book.sched_jobs_buf,
                 aggregate,
                 traffic: &mut self.book.traffic,
                 scratch: &mut self.book.scratch,
             };
             self.scheme.round(&mut ctx)?
         };
+        // ---- online timing feedback ----
+        // The round's true per-client timings (queue-independent
+        // components) are what deployed clients would report back; the
+        // estimator folds them into its EWMAs for the next round.
+        if !t.oracle_timing {
+            for j in &self.book.jobs_buf {
+                self.book.estimator.observe(j.client, &StepTiming::from_job(j));
+            }
+        }
         // Commit the round only after the scheme succeeded — a failed
         // round leaves the counter (and thus any later checkpoint)
         // pointing at the last fully completed round.  (Training state
@@ -1104,6 +1223,7 @@ impl<'e> Session<'e> {
             scheduler: self.scheme.scheduler(),
             round,
             sim_time: self.book.sim_time,
+            step_time: outcome.train_elapsed / t.steps_per_round as f64,
             mean_loss: outcome.mean_loss,
             participants,
             eval,
@@ -1198,6 +1318,10 @@ impl<'e> Session<'e> {
             ),
             ("book.dropout_rng".into(), encode_u64s("dropout_rng", &[b.dropout_rng.state()])),
         ];
+        // Online timing estimator (EWMAs + sample counts, bit-exact).
+        let (est_values, est_samples) = b.estimator.state();
+        named.push(("book.est.values".into(), encode_f64s("est.values", &est_values)));
+        named.push(("book.est.samples".into(), encode_u64s("est.samples", &est_samples)));
         // Round records + metric series (f64 clocks stored bit-exactly).
         let rr: Vec<i32> = b.rounds.iter().map(|r| r.round as i32).collect();
         let rt: Vec<f64> = b.rounds.iter().map(|r| r.sim_time).collect();
@@ -1285,6 +1409,9 @@ impl<'e> Session<'e> {
         b.wall_prior = one_f64(&store, "book.wall")?;
         b.wall = std::time::Instant::now();
         b.dropout_rng = Rng::from_state(one_u64(&store, "book.dropout_rng")?);
+        let est_values = decode_f64s(store.get("book.est.values")?)?;
+        let est_samples = decode_u64s(store.get("book.est.samples")?)?;
+        b.estimator.restore_state(&est_values, &est_samples)?;
 
         let rr = store.get("book.rounds.round")?.as_i32()?.to_vec();
         let rt = decode_f64s(store.get("book.rounds.time")?)?;

@@ -25,6 +25,21 @@ impl StepTiming {
     pub fn total(&self) -> f64 {
         self.t_fwd + self.t_fwd_comm + self.t_wait + self.t_server + self.t_bwd_comm + self.t_bwd
     }
+
+    /// The queue-independent components of a job as one observation
+    /// (zero wait) — what a deployed client would report back per round
+    /// and what the [`TimingEstimator`](super::estimator::TimingEstimator)
+    /// consumes in simulation.
+    pub fn from_job(j: &JobInfo) -> Self {
+        Self {
+            t_fwd: j.arrival - j.bwd_comm_time, // fwd_comm == bwd_comm size
+            t_fwd_comm: j.bwd_comm_time,
+            t_wait: 0.0,
+            t_server: j.server_time,
+            t_bwd_comm: j.bwd_comm_time,
+            t_bwd: j.client_bwd_time,
+        }
+    }
 }
 
 /// Build the per-client job descriptions for one step of the proposed
@@ -56,6 +71,23 @@ pub fn build_jobs(
         .collect()
 }
 
+/// [`build_jobs`] over the server's *nominal* view of the fleet
+/// (reported specs, class-default MFU) — the static eq. 10–12 model the
+/// timing estimator cold-starts from.  One definition shared by the
+/// session, the scale bench, and the acceptance tests.
+pub fn build_nominal_jobs(
+    dims: &ModelDims,
+    clients: &[ClientConfig],
+    cuts: &[usize],
+    server: &ServerProfile,
+) -> Vec<JobInfo> {
+    let nominal: Vec<ClientConfig> = clients
+        .iter()
+        .map(|c| ClientConfig { device: c.device.nominal(), ..c.clone() })
+        .collect();
+    build_jobs(dims, &nominal, cuts, server)
+}
+
 /// One step of **Ours** under a given scheduler: parallel client
 /// forwards, sequential server (eq. 11 queueing), parallel backwards.
 /// Returns (step completion time, per-client timings in client order).
@@ -71,30 +103,34 @@ pub fn ours_step(
 }
 
 /// [`ours_step`] over prebuilt jobs — jobs depend only on the round's
-/// participants, so the session builds them once per round and reuses
-/// them for both timing and the per-step server ordering.
+/// participants, so callers build them once and reuse them.  Draws
+/// exactly one order from the scheduler per call.
 pub fn ours_step_with_jobs(
     jobs: &[JobInfo],
     scheduler: &mut dyn Scheduler,
 ) -> (f64, Vec<StepTiming>) {
-    let order = scheduler.order(jobs);
+    let mut order = Vec::with_capacity(jobs.len());
+    scheduler.order_into(jobs, &mut order);
+    ours_step_ordered(jobs, &order)
+}
+
+/// Timing of one **Ours** step under a *given* server order (job
+/// indices).  The session computes each step's order exactly once and
+/// shares it between this timing walk and the numeric execution, so
+/// stateful schedulers can never account time against orders that were
+/// not executed.  Per-client timings come back in job order.
+pub fn ours_step_ordered(jobs: &[JobInfo], order: &[usize]) -> (f64, Vec<StepTiming>) {
     debug_assert_eq!(order.len(), jobs.len());
     let mut queue = SequentialResource::default();
     let mut timings = vec![StepTiming::default(); jobs.len()];
     let mut step_time = 0.0f64;
-    for &u in &order {
-        let j = &jobs[u];
+    for &i in order {
+        let j = &jobs[i];
         let (start, finish) = queue.admit(j.arrival, j.server_time);
-        let t = StepTiming {
-            t_fwd: j.arrival - j.bwd_comm_time, // fwd_comm == bwd_comm size
-            t_fwd_comm: j.bwd_comm_time,
-            t_wait: start - j.arrival,
-            t_server: j.server_time,
-            t_bwd_comm: j.bwd_comm_time,
-            t_bwd: j.client_bwd_time,
-        };
+        let mut t = StepTiming::from_job(j);
+        t.t_wait = start - j.arrival;
         step_time = step_time.max(finish + j.bwd_comm_time + j.client_bwd_time);
-        timings[u] = t;
+        timings[i] = t;
     }
     (step_time, timings)
 }
@@ -224,6 +260,30 @@ mod tests {
             assert!(timings[u].t_wait <= sum_earlier + 1e-9);
             sum_earlier += jobs[u].server_time;
         }
+    }
+
+    #[test]
+    fn ours_step_ordered_agrees_with_makespan_and_scheduler_draw() {
+        use crate::coordinator::scheduler::{makespan, RandomScheduler};
+        let (dims, clients, cuts, server) = setup();
+        let jobs = build_jobs(&dims, &clients, &cuts, &server);
+        // For any executed order, the step time is exactly the makespan
+        // of that order — timing and execution share one schedule.
+        let mut sched = RandomScheduler::new(17);
+        let mut twin = RandomScheduler::new(17);
+        let mut order = Vec::new();
+        for _ in 0..4 {
+            twin.order_into(&jobs, &mut order);
+            let (t, timings) = ours_step_with_jobs(&jobs, &mut sched);
+            assert!((t - makespan(&jobs, &order)).abs() < 1e-12);
+            // Components are queue-independent except the wait.
+            for (i, j) in jobs.iter().enumerate() {
+                assert!((timings[i].t_server - j.server_time).abs() < 1e-12);
+                assert!((timings[i].t_bwd - j.client_bwd_time).abs() < 1e-12);
+            }
+        }
+        // Both RNG streams consumed one order per step — still in sync.
+        assert_eq!(sched.rng_state(), twin.rng_state());
     }
 
     #[test]

@@ -111,6 +111,14 @@ pub fn dirichlet_partition(
     seed: u64,
     min_per_client: usize,
 ) -> Vec<Vec<usize>> {
+    // The rebalance loop below cannot terminate if the floor is
+    // infeasible — fail loudly instead of spinning (fleet-scale specs
+    // can request more clients than the corpus supports).
+    assert!(
+        examples.len() >= clients * min_per_client,
+        "dirichlet_partition: {} examples cannot give {clients} clients {min_per_client} each",
+        examples.len()
+    );
     let mut rng = Rng::new(seed);
     let classes = examples.iter().map(|e| e.label).max().unwrap_or(0) as usize + 1;
     // Per-class client mixture.

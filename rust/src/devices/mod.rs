@@ -33,6 +33,16 @@ impl DeviceProfile {
     pub fn compute_time(&self, flops: f64) -> f64 {
         flops / self.effective_flops()
     }
+
+    /// The profile as the server *believes* it from reported specs:
+    /// same peak TFLOPS and memory, class-default MFU.  This is the
+    /// input to the static eq. 10–12 cold-start model; the per-device
+    /// MFU deviation (throttling, background load — synthesized by
+    /// `fleet::FleetSpec`) is exactly what the online `TimingEstimator`
+    /// has to learn.
+    pub fn nominal(&self) -> DeviceProfile {
+        DeviceProfile { mfu: DEFAULT_CLIENT_MFU, ..self.clone() }
+    }
 }
 
 /// Default MFU for mobile-class accelerators on attention workloads.
@@ -165,5 +175,16 @@ mod tests {
     fn effective_flops_includes_mfu() {
         let d = DeviceProfile::new("d", 1.0, 1024.0);
         assert!((d.effective_flops() - 0.30e12).abs() < 1e6);
+    }
+
+    #[test]
+    fn nominal_resets_only_the_mfu() {
+        let mut d = DeviceProfile::new("throttled", 2.0, 8192.0);
+        d.mfu = 0.12;
+        let n = d.nominal();
+        assert!((n.mfu - DEFAULT_CLIENT_MFU).abs() < 1e-12);
+        assert_eq!(n.name, d.name);
+        assert!((n.tflops - d.tflops).abs() < 1e-12);
+        assert!((n.memory_mb - d.memory_mb).abs() < 1e-12);
     }
 }

@@ -1,0 +1,251 @@
+//! Synthetic heterogeneous fleets (fleet-scale scheduling workloads).
+//!
+//! The paper evaluates on six physical devices (§V-A); the scheduling
+//! subsystem has to hold up on the regime related systems stress —
+//! thousands to hundreds of thousands of heterogeneous clients.
+//! [`FleetSpec`] synthesizes such fleets deterministically from a seed:
+//! distributions over device TFLOPS, link rates, and cut depths,
+//! calibrated against the paper fleet, via the in-tree [`Rng`]
+//! (lognormal / zipf samplers — no external crates).
+//!
+//! Presets:
+//! - **paper** — tiles the six §V-A devices in order (n = 6 is exactly
+//!   the paper fleet; n = 12 the doubled fleet of the ablation bench).
+//! - **lognormal** — TFLOPS lognormal with log-moments fitted to the
+//!   paper fleet; memory tier tracks the compute class; link tier
+//!   (Wi-Fi / LTE / 5G) sampled per client with rate jitter; cut depth
+//!   left to the split selector (`resolve_cuts`).
+//! - **zipf** — device *classes* are the six paper devices ranked by
+//!   compute, sampled by Zipf rank: the cheapest, weakest device is the
+//!   most common, a realistic mobile install base.
+//!
+//! On top of any preset, `mfu_sigma` applies a hidden multiplicative
+//! lognormal jitter to each device's achieved MFU.  The static timing
+//! model only sees *nominal* profiles ([`DeviceProfile::nominal`]), so
+//! this jitter is the ground truth the online
+//! [`TimingEstimator`](crate::coordinator::estimator::TimingEstimator)
+//! must learn.
+
+use crate::config::ClientConfig;
+use crate::devices::{paper_fleet, DeviceProfile};
+use crate::net::Link;
+use crate::tensor::rng::Rng;
+use anyhow::{bail, Result};
+use std::str::FromStr;
+
+/// Which distribution family generates the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetPreset {
+    /// Tile the paper's six devices in §V-A order.
+    Paper,
+    /// Lognormal compute/link spreads calibrated to the paper fleet.
+    Lognormal,
+    /// Zipf-ranked paper device classes (weakest device most common).
+    Zipf,
+}
+
+impl FromStr for FleetPreset {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "paper" => Ok(Self::Paper),
+            "lognormal" => Ok(Self::Lognormal),
+            "zipf" => Ok(Self::Zipf),
+            other => bail!("unknown fleet preset {other:?} (paper|lognormal|zipf)"),
+        }
+    }
+}
+
+impl std::fmt::Display for FleetPreset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::Paper => "paper",
+            Self::Lognormal => "lognormal",
+            Self::Zipf => "zipf",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Log-moments of the six paper-fleet TFLOPS figures (0.472 … 3.533):
+/// mean(ln tflops) ≈ 0.517, std ≈ 0.649 — the lognormal preset's
+/// calibration anchor.
+const LN_TFLOPS_MU: f64 = 0.517;
+const LN_TFLOPS_SIGMA: f64 = 0.649;
+/// Zipf exponent for the device-class install-base skew.
+const ZIPF_EXPONENT: f64 = 1.1;
+/// Default hidden-MFU jitter for the sampled presets (off for paper).
+const DEFAULT_MFU_SIGMA: f64 = 0.15;
+
+/// A seeded recipe for a synthetic fleet.  Same spec ⇒ bit-identical
+/// fleet (the determinism every experiment and checkpoint relies on).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub preset: FleetPreset,
+    /// Number of clients to synthesize.
+    pub n: usize,
+    pub seed: u64,
+    /// Lognormal σ of the hidden per-device MFU multiplier (achieved
+    /// vs. nominal compute efficiency).  0 disables the jitter; the
+    /// sampled presets default to a mild spread.
+    pub mfu_sigma: f64,
+}
+
+impl FleetSpec {
+    pub fn new(preset: FleetPreset, n: usize, seed: u64) -> Self {
+        let mfu_sigma = match preset {
+            FleetPreset::Paper => 0.0,
+            _ => DEFAULT_MFU_SIGMA,
+        };
+        Self { preset, n, seed, mfu_sigma }
+    }
+
+    /// Memory tier (MB) for a sampled compute class — tracks the paper
+    /// fleet's 4/8/12/16 GB ladder.
+    fn memory_for_tflops(tflops: f64) -> f64 {
+        match tflops {
+            t if t < 1.0 => 4096.0,
+            t if t < 2.0 => 8192.0,
+            t if t < 3.0 => 12288.0,
+            _ => 16384.0,
+        }
+    }
+
+    /// Sample a link: tier by install-base weight, then mild rate
+    /// jitter around the tier's nominal rate.
+    fn sample_link(rng: &mut Rng) -> Link {
+        let tier = match rng.categorical(&[0.5, 0.3, 0.2]) {
+            0 => Link::wifi(),
+            1 => Link::lte(),
+            _ => Link::five_g(),
+        };
+        tier.scaled(rng.lognormal(0.0, 0.25).clamp(0.25, 4.0))
+    }
+
+    /// Materialize the fleet.  Pinned cuts come with the paper device
+    /// classes; the lognormal preset leaves `cut: None` so the split
+    /// selector assigns the deepest feasible cut per device.
+    pub fn synthesize(&self) -> Vec<ClientConfig> {
+        let mut rng = Rng::new(self.seed ^ 0x00F1_EE75);
+        let catalog = paper_fleet();
+        let mut ranked = catalog.clone();
+        ranked.sort_by(|a, b| {
+            a.0.tflops.partial_cmp(&b.0.tflops).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        (0..self.n)
+            .map(|i| {
+                let (mut device, cut, link) = match self.preset {
+                    FleetPreset::Paper => {
+                        let (d, k) = catalog[i % catalog.len()].clone();
+                        (d, Some(k), Link::paper_default())
+                    }
+                    FleetPreset::Lognormal => {
+                        let tflops =
+                            rng.lognormal(LN_TFLOPS_MU, LN_TFLOPS_SIGMA).clamp(0.05, 50.0);
+                        let d = DeviceProfile::new(
+                            &format!("syn-ln-{i}"),
+                            tflops,
+                            Self::memory_for_tflops(tflops),
+                        );
+                        (d, None, Self::sample_link(&mut rng))
+                    }
+                    FleetPreset::Zipf => {
+                        let r = rng.zipf(ranked.len(), ZIPF_EXPONENT);
+                        let (mut d, k) = ranked[r].clone();
+                        d.name = format!("{}-{i}", d.name);
+                        (d, Some(k), Self::sample_link(&mut rng))
+                    }
+                };
+                if self.mfu_sigma > 0.0 {
+                    device.mfu =
+                        (device.mfu * rng.lognormal(0.0, self.mfu_sigma)).clamp(0.05, 0.95);
+                }
+                ClientConfig { device, cut, link }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::DEFAULT_CLIENT_MFU;
+
+    fn fingerprint(fleet: &[ClientConfig]) -> Vec<u64> {
+        fleet
+            .iter()
+            .flat_map(|c| {
+                [
+                    c.device.tflops.to_bits(),
+                    c.device.memory_mb.to_bits(),
+                    c.device.mfu.to_bits(),
+                    c.link.rate_mbps.to_bits(),
+                    c.link.latency_ms.to_bits(),
+                    c.cut.map(|k| k as u64 + 1).unwrap_or(0),
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn same_seed_same_fleet_different_seed_different_fleet() {
+        for preset in [FleetPreset::Paper, FleetPreset::Lognormal, FleetPreset::Zipf] {
+            let a = FleetSpec::new(preset, 64, 7).synthesize();
+            let b = FleetSpec::new(preset, 64, 7).synthesize();
+            assert_eq!(fingerprint(&a), fingerprint(&b), "{preset}: not deterministic");
+            if preset != FleetPreset::Paper {
+                let c = FleetSpec::new(preset, 64, 8).synthesize();
+                assert_ne!(fingerprint(&a), fingerprint(&c), "{preset}: seed ignored");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_preset_tiles_the_paper_fleet() {
+        let fleet = FleetSpec::new(FleetPreset::Paper, 12, 3).synthesize();
+        assert_eq!(fleet.len(), 12);
+        let paper = paper_fleet();
+        for (i, c) in fleet.iter().enumerate() {
+            let (d, k) = &paper[i % 6];
+            assert_eq!(c.device.name, d.name);
+            assert!((c.device.tflops - d.tflops).abs() < 1e-12);
+            assert_eq!(c.cut, Some(*k));
+            assert!((c.device.mfu - DEFAULT_CLIENT_MFU).abs() < 1e-12, "paper jitter off");
+        }
+    }
+
+    #[test]
+    fn lognormal_preset_is_heterogeneous_and_in_range() {
+        let fleet = FleetSpec::new(FleetPreset::Lognormal, 500, 11).synthesize();
+        assert_eq!(fleet.len(), 500);
+        let tf: Vec<f64> = fleet.iter().map(|c| c.device.tflops).collect();
+        let lo = tf.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = tf.iter().copied().fold(0.0f64, f64::max);
+        assert!(lo >= 0.05 && hi <= 50.0);
+        assert!(hi / lo > 3.0, "spread too narrow: {lo}..{hi}");
+        // Hidden MFU jitter on by default — some devices off nominal.
+        assert!(fleet.iter().any(|c| (c.device.mfu - DEFAULT_CLIENT_MFU).abs() > 1e-3));
+        // Cut left to the split selector.
+        assert!(fleet.iter().all(|c| c.cut.is_none()));
+    }
+
+    #[test]
+    fn zipf_preset_skews_to_the_weakest_class() {
+        let fleet = FleetSpec::new(FleetPreset::Zipf, 600, 5).synthesize();
+        let nano = fleet
+            .iter()
+            .filter(|c| c.device.name.starts_with("Jetson Nano"))
+            .count();
+        let m3 = fleet.iter().filter(|c| c.device.name.starts_with("M3")).count();
+        assert!(nano > m3, "weakest class must dominate: nano={nano} m3={m3}");
+        assert!(fleet.iter().all(|c| c.cut.is_some()));
+    }
+
+    #[test]
+    fn preset_parsing_roundtrips() {
+        for preset in [FleetPreset::Paper, FleetPreset::Lognormal, FleetPreset::Zipf] {
+            assert_eq!(preset.to_string().parse::<FleetPreset>().unwrap(), preset);
+        }
+        assert!("bogus".parse::<FleetPreset>().is_err());
+    }
+}

@@ -11,12 +11,18 @@
 //! Global flags: --config mini|small, --artifacts DIR, --out DIR,
 //! --experiment FILE (key=value format, see configs/paper.exp),
 //! --seed N and --dropout P (failure injection without an experiment
-//! file).  `run` also accepts --jsonl FILE to stream per-round JSON
-//! telemetry (a Session observer).
+//! file).  Fleet-scale scheduling: --fleet N --fleet-preset
+//! paper|lognormal|zipf --fleet-seed N --fleet-mfu-sigma S synthesize
+//! the client list (`fleet::FleetSpec`); --max-participants N bounds
+//! each round's cohort; --oracle-timing pins the scheduler to the
+//! analytic eq. 10–12 timings instead of the online TimingEstimator.
+//! `run` also accepts --jsonl FILE to stream per-round JSON telemetry
+//! (a Session observer).
 
 use anyhow::{bail, Result};
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
 use sfl::coordinator::{timing, RunResult, Session};
+use sfl::fleet::{FleetPreset, FleetSpec};
 use sfl::devices::paper_fleet;
 use sfl::model::{memory, ModelDims};
 use sfl::runtime::Engine;
@@ -25,9 +31,11 @@ use sfl::util::args::Args;
 use std::path::{Path, PathBuf};
 
 const USAGE: &str = "usage: sfl [--config mini|small] [--artifacts DIR] [--out DIR] \
-[--experiment FILE] [--seed N] [--dropout P] <run|table1|fig2|fig2c|memory|ablate> \
-[--scheme ours|sl|sfl] [--scheduler proposed|fifo|wf|random] [--max-rounds N] \
-[--quiet] [--jsonl FILE]";
+[--experiment FILE] [--seed N] [--dropout P] [--fleet N] [--fleet-preset paper|lognormal|zipf] \
+[--fleet-seed N] [--fleet-mfu-sigma S] [--max-participants N] \
+<run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
+[--scheduler proposed|fifo|wf|random] [--max-rounds N] [--quiet] [--oracle-timing] \
+[--jsonl FILE]";
 
 fn base_config(args: &Args) -> Result<ExperimentConfig> {
     let mut cfg = match args.get("experiment") {
@@ -47,6 +55,25 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(p) = args.get_parse::<f64>("dropout")? {
         cfg.train.dropout_prob = p;
     }
+    // Synthetic fleet + fleet-scale scheduling knobs.
+    if let Some(n) = args.get_parse::<usize>("fleet")? {
+        let preset: FleetPreset = args.get_or("fleet-preset", "paper").parse()?;
+        let seed = args.get_parse::<u64>("fleet-seed")?.unwrap_or(cfg.train.seed);
+        let mut spec = FleetSpec::new(preset, n, seed);
+        if let Some(s) = args.get_parse::<f64>("fleet-mfu-sigma")? {
+            spec.mfu_sigma = s;
+        }
+        cfg.apply_fleet(spec);
+    } else if ["fleet-preset", "fleet-seed", "fleet-mfu-sigma"].iter().any(|f| args.has(f)) {
+        bail!("--fleet-preset/--fleet-seed/--fleet-mfu-sigma require --fleet N");
+    }
+    if let Some(m) = args.get_parse::<usize>("max-participants")? {
+        cfg.train.max_participants = m;
+    }
+    if args.has("oracle-timing") {
+        cfg.train.oracle_timing = true;
+    }
+    cfg.validate()?;
     Ok(cfg)
 }
 

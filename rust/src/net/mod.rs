@@ -23,6 +23,27 @@ impl Link {
         Self { rate_mbps, latency_ms }
     }
 
+    /// Wi-Fi tier — the paper's §V-A setting (100 Mbps, 5 ms).
+    pub fn wifi() -> Self {
+        Self::paper_default()
+    }
+
+    /// Cellular LTE tier — mid-band uplink typical of mobile clients.
+    pub fn lte() -> Self {
+        Self { rate_mbps: 35.0, latency_ms: 30.0 }
+    }
+
+    /// 5G tier — high rate, moderate latency.
+    pub fn five_g() -> Self {
+        Self { rate_mbps: 300.0, latency_ms: 10.0 }
+    }
+
+    /// This link with its rate scaled by `factor` (latency unchanged) —
+    /// the fleet samplers' per-client rate jitter around a tier.
+    pub fn scaled(&self, factor: f64) -> Self {
+        Self { rate_mbps: self.rate_mbps * factor, latency_ms: self.latency_ms }
+    }
+
     /// Seconds to move `bytes` over this link (one way).
     pub fn transfer_time(&self, bytes: usize) -> f64 {
         self.latency_ms / 1e3 + (bytes as f64 * 8.0) / (self.rate_mbps * 1e6)
@@ -104,6 +125,17 @@ mod tests {
         let l = Link::new(100.0, 50.0);
         let t = l.transfer_time(100);
         assert!(t > 0.05 && t < 0.051);
+    }
+
+    #[test]
+    fn link_tiers_rank_by_rate_and_scaling_preserves_latency() {
+        assert!(Link::five_g().rate_mbps > Link::wifi().rate_mbps);
+        assert!(Link::wifi().rate_mbps > Link::lte().rate_mbps);
+        assert!(Link::lte().latency_ms > Link::wifi().latency_ms);
+        let l = Link::wifi().scaled(0.5);
+        assert!((l.rate_mbps - 50.0).abs() < 1e-12);
+        assert!((l.latency_ms - Link::wifi().latency_ms).abs() < 1e-12);
+        assert!(l.transfer_time(1_000_000) > Link::wifi().transfer_time(1_000_000));
     }
 
     #[test]

@@ -54,11 +54,13 @@ impl<W: Write> RoundObserver for JsonLinesObserver<W> {
         let wrote = writeln!(
             self.out,
             "{{\"event\":\"round\",\"scheme\":\"{}\",\"scheduler\":\"{}\",\"round\":{},\
-             \"sim_time\":{:.6},\"mean_loss\":{:.6},\"participants\":{}{eval}}}",
+             \"sim_time\":{:.6},\"step_time\":{:.6},\"mean_loss\":{:.6},\
+             \"participants\":{}{eval}}}",
             r.scheme,
             r.scheduler,
             r.round,
             r.sim_time,
+            r.step_time,
             r.mean_loss,
             r.participants.len(),
         );
@@ -244,6 +246,7 @@ mod tests {
                 scheduler: SchedulerLabel::Scheduled(SchedulerKind::Proposed),
                 round: 3,
                 sim_time: 12.5,
+                step_time: 3.125,
                 mean_loss: 1.25,
                 participants: vec![0, 1, 2],
                 eval: Some(EvalPoint { acc: 0.5, f1: 0.4, converged: false }),
@@ -254,6 +257,7 @@ mod tests {
         let s = String::from_utf8(buf).unwrap();
         assert_eq!(s.lines().count(), 2);
         assert!(s.contains("\"event\":\"round\""));
+        assert!(s.contains("\"step_time\":3.125000"));
         assert!(s.contains("\"participants\":3"));
         assert!(s.contains("\"acc\":0.500000"));
         assert!(s.contains("\"event\":\"complete\""));

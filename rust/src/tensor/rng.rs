@@ -54,6 +54,29 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
+    /// Lognormal: exp(mu + sigma · N(0, 1)).  Fleet synthesis uses this
+    /// for device TFLOPS / link-rate / MFU spreads — multiplicative
+    /// heterogeneity with a heavy right tail, never negative.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Zipf-distributed rank in [0, n): P(r) ∝ 1/(r+1)^s.  Inverse-CDF
+    /// by linear scan — intended for small n (device classes), where
+    /// rank 0 (the cheapest, most common device) dominates.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        let total: f64 = (1..=n).map(|r| (r as f64).powf(-s)).sum();
+        let mut t = self.uniform() * total;
+        for r in 0..n {
+            t -= ((r + 1) as f64).powf(-s);
+            if t <= 0.0 {
+                return r;
+            }
+        }
+        n - 1
+    }
+
     /// Gamma(alpha, 1) via Marsaglia–Tsang (with the alpha < 1 boost).
     pub fn gamma(&mut self, alpha: f64) -> f64 {
         if alpha < 1.0 {
@@ -161,6 +184,35 @@ mod tests {
             }
         }
         assert!(dominated > 30, "only {dominated}/50 draws dominated");
+    }
+
+    #[test]
+    fn lognormal_is_positive_with_matching_log_moments() {
+        let mut r = Rng::new(8);
+        let (mu, sigma) = (0.5, 0.65);
+        let n = 20_000;
+        let logs: Vec<f64> = (0..n)
+            .map(|_| {
+                let x = r.lognormal(mu, sigma);
+                assert!(x > 0.0);
+                x.ln()
+            })
+            .collect();
+        let mean = logs.iter().sum::<f64>() / n as f64;
+        let var = logs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - mu).abs() < 0.03, "log-mean {mean}");
+        assert!((var.sqrt() - sigma).abs() < 0.03, "log-std {}", var.sqrt());
+    }
+
+    #[test]
+    fn zipf_ranks_are_bounded_and_skewed_to_rank_zero() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 6];
+        for _ in 0..6000 {
+            counts[r.zipf(6, 1.1)] += 1;
+        }
+        assert!(counts[0] > counts[1] && counts[1] > counts[2], "{counts:?}");
+        assert!(counts[0] > 6000 / 3, "rank 0 must dominate: {counts:?}");
     }
 
     #[test]

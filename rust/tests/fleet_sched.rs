@@ -1,0 +1,171 @@
+//! Fleet-scale scheduling: synthetic fleets + online timing estimation,
+//! end to end on the analytic timing model (no artifacts needed).
+//!
+//! The acceptance gate lives here: on a stationary 1k-client synthetic
+//! fleet with hidden per-device MFU jitter, the proposed scheduler
+//! driven purely by the online `TimingEstimator` (static nominal model
+//! at cold start, measured EWMAs after) must reach within 5% of the
+//! oracle-timing makespan after a warm-up window.
+
+use sfl::config::ExperimentConfig;
+use sfl::coordinator::estimator::TimingEstimator;
+use sfl::coordinator::scheduler::{makespan, ProposedScheduler, Scheduler};
+use sfl::coordinator::timing::{build_jobs, build_nominal_jobs, StepTiming};
+use sfl::devices::DEFAULT_CLIENT_MFU;
+use sfl::fleet::{FleetPreset, FleetSpec};
+
+/// A synthesized fleet with its resolved cuts, true jobs, and the
+/// static nominal-model jobs (what the cold-start scheduler sees).
+struct Bench {
+    cfg: ExperimentConfig,
+    cuts: Vec<usize>,
+}
+
+impl Bench {
+    fn new(preset: FleetPreset, n: usize, seed: u64, mfu_sigma: f64) -> Self {
+        let mut spec = FleetSpec::new(preset, n, seed);
+        spec.mfu_sigma = mfu_sigma;
+        let mut cfg = ExperimentConfig::paper();
+        cfg.apply_fleet(spec);
+        cfg.validate().unwrap();
+        let cuts = cfg.resolve_cuts();
+        Self { cfg, cuts }
+    }
+
+    fn oracle_jobs(&self) -> Vec<sfl::coordinator::scheduler::JobInfo> {
+        let dims = self.cfg.timing_dims();
+        build_jobs(&dims, &self.cfg.clients, &self.cuts, &self.cfg.server)
+    }
+
+    fn nominal_jobs(&self) -> Vec<sfl::coordinator::scheduler::JobInfo> {
+        let dims = self.cfg.timing_dims();
+        build_nominal_jobs(&dims, &self.cfg.clients, &self.cuts, &self.cfg.server)
+    }
+}
+
+#[test]
+fn synthesized_fleets_are_deterministic_and_schedulable() {
+    for preset in [FleetPreset::Paper, FleetPreset::Lognormal, FleetPreset::Zipf] {
+        let a = Bench::new(preset, 200, 31, 0.2);
+        let b = Bench::new(preset, 200, 31, 0.2);
+        assert_eq!(a.cuts, b.cuts, "{preset}: cut assignment not deterministic");
+        let (ja, jb) = (a.oracle_jobs(), b.oracle_jobs());
+        for (x, y) in ja.iter().zip(jb.iter()) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{preset}: jobs differ");
+            assert_eq!(
+                x.client_bwd_time.to_bits(),
+                y.client_bwd_time.to_bits(),
+                "{preset}: jobs differ"
+            );
+        }
+        // The whole fleet schedules: valid index permutation, finite time.
+        let mut order = Vec::new();
+        ProposedScheduler.order_into(&ja, &mut order);
+        let m = makespan(&ja, &order);
+        assert!(m.is_finite() && m > 0.0, "{preset}: bad makespan {m}");
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..200).collect::<Vec<_>>(), "{preset}: not a permutation");
+    }
+}
+
+#[test]
+fn hidden_mfu_jitter_separates_nominal_from_true_timings() {
+    let b = Bench::new(FleetPreset::Lognormal, 200, 23, 0.25);
+    let (oracle, nominal) = (b.oracle_jobs(), b.nominal_jobs());
+    // Nominal profiles assume the class-default MFU, so some clients'
+    // true backward times must deviate — the signal the estimator learns.
+    let deviating = oracle
+        .iter()
+        .zip(nominal.iter())
+        .filter(|(o, s)| (o.client_bwd_time - s.client_bwd_time).abs() > 1e-9)
+        .count();
+    assert!(deviating > 100, "only {deviating}/200 clients deviate from nominal");
+    // And the jitter is hidden from reported specs: same TFLOPS labels.
+    for (o, s) in oracle.iter().zip(nominal.iter()) {
+        assert_eq!(o.compute_capability.to_bits(), s.compute_capability.to_bits());
+    }
+    assert!(b.cfg.clients.iter().any(|c| (c.device.mfu - DEFAULT_CLIENT_MFU).abs() > 1e-3));
+}
+
+/// Acceptance gate: estimator-driven scheduling reaches within 5% of
+/// the oracle makespan on a stationary 1k-client fleet after warm-up.
+#[test]
+fn estimator_within_5_percent_of_oracle_on_stationary_1k_fleet() {
+    let b = Bench::new(FleetPreset::Lognormal, 1_000, 23, 0.25);
+    let (oracle_jobs, nominal_jobs) = (b.oracle_jobs(), b.nominal_jobs());
+    let mut sched = ProposedScheduler;
+    let mut order = Vec::new();
+
+    // Oracle reference: the scheduler sees the true timings.
+    sched.order_into(&oracle_jobs, &mut order);
+    let oracle_m = makespan(&oracle_jobs, &order);
+
+    // Online path: the scheduler sees estimator output only; every
+    // round the true (simulated) timings are observed back — exactly
+    // the session's loop, run here on the timing model alone.
+    let mut est = TimingEstimator::new(1_000, 0.25);
+    let mut sched_jobs = Vec::new();
+    let mut cold_m = 0.0;
+    for round in 0..4 {
+        est.jobs_into(&nominal_jobs, &mut sched_jobs);
+        sched.order_into(&sched_jobs, &mut order);
+        if round == 0 {
+            cold_m = makespan(&oracle_jobs, &order);
+        }
+        for j in &oracle_jobs {
+            est.observe(j.client, &StepTiming::from_job(j));
+        }
+    }
+    assert_eq!(est.warm_clients(), 1_000);
+    est.jobs_into(&nominal_jobs, &mut sched_jobs);
+    // Discriminate a learning estimator from a static-model echo: after
+    // warm-up on a stationary fleet the scheduler's view carries the
+    // *true* (hidden-jitter) timings exactly — which the nominal model
+    // does not predict (asserted in the mfu-jitter test above).
+    for (s, o) in sched_jobs.iter().zip(oracle_jobs.iter()) {
+        assert!(
+            (s.client_bwd_time - o.client_bwd_time).abs() < 1e-9,
+            "client {}: estimate {} never converged to truth {}",
+            o.client,
+            s.client_bwd_time,
+            o.client_bwd_time
+        );
+    }
+    sched.order_into(&sched_jobs, &mut order);
+    let warm_m = makespan(&oracle_jobs, &order);
+
+    assert!(
+        warm_m <= oracle_m * 1.05,
+        "estimator-driven makespan {warm_m:.3}s not within 5% of oracle {oracle_m:.3}s \
+         (cold start was {cold_m:.3}s)"
+    );
+    // Cold start schedules on the static model's *predicted* tails —
+    // a valid schedule in the same 5% envelope on this fleet (the
+    // prediction error is bounded by the hidden MFU jitter).
+    assert!(cold_m.is_finite() && cold_m <= oracle_m * 1.05, "cold {cold_m} vs {oracle_m}");
+}
+
+#[test]
+fn estimated_jobs_need_no_oracle_capability_inputs() {
+    // After warm-up, the scheduler's view carries the *learned*
+    // effective capability (N_c / measured tail), not the reported
+    // TFLOPS — mis-reported specs cannot skew the order.
+    let b = Bench::new(FleetPreset::Lognormal, 50, 29, 0.3);
+    let (oracle_jobs, nominal_jobs) = (b.oracle_jobs(), b.nominal_jobs());
+    let mut est = TimingEstimator::new(50, 0.25);
+    for j in &oracle_jobs {
+        est.observe(j.client, &StepTiming::from_job(j));
+    }
+    let mut sched_jobs = Vec::new();
+    est.jobs_into(&nominal_jobs, &mut sched_jobs);
+    for (s, o) in sched_jobs.iter().zip(oracle_jobs.iter()) {
+        let tail = o.client_bwd_time + o.bwd_comm_time;
+        assert!(
+            (s.greedy_priority() - tail).abs() < 1e-9,
+            "client {}: priority {} != measured tail {tail}",
+            s.client,
+            s.greedy_priority()
+        );
+    }
+}

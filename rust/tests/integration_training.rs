@@ -5,7 +5,8 @@
 //! side suite stays green on machines without the AOT toolchain.
 
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
-use sfl::coordinator::Session;
+use sfl::coordinator::scheduler::{makespan, RandomScheduler, Scheduler};
+use sfl::coordinator::{timing, Session};
 use sfl::runtime::Engine;
 use std::path::Path;
 
@@ -167,6 +168,78 @@ fn schedulers_share_numerics_but_differ_in_time() {
         a.rounds.last().unwrap().sim_time <= b.rounds.last().unwrap().sim_time + 1e-9,
         "proposed must not be slower than fifo"
     );
+}
+
+#[test]
+fn random_scheduler_timing_matches_executed_orders() {
+    // Regression for the stateful-scheduler divergence: the session
+    // must draw ONE order per step and account virtual time against
+    // exactly the orders it executes.  Replaying the scheduler's RNG
+    // stream here (one draw per step) must reproduce the session's
+    // clock; the old code drew a separate order for timing once per
+    // round and re-sampled per step for execution, interleaving the
+    // stream — which fails this reconstruction.
+    let Some(e) = engine() else { return };
+    let mut cfg = mini_cfg();
+    cfg.scheduler = SchedulerKind::Random;
+    cfg.train.max_rounds = 3;
+    let r = Session::new(&e, &cfg).unwrap().run_to_convergence().unwrap();
+
+    let dims = cfg.timing_dims();
+    let cuts = cfg.resolve_cuts();
+    let jobs = timing::build_jobs(&dims, &cfg.clients, &cuts, &cfg.server);
+    let agg = timing::aggregation_time(&dims, &cfg.clients, &cuts);
+    let mut sched = RandomScheduler::new(cfg.train.seed);
+    let mut order = Vec::new();
+    let mut clock = 0.0f64;
+    for (round, rec) in r.rounds.iter().enumerate() {
+        let mut elapsed = 0.0f64;
+        for _ in 0..cfg.train.steps_per_round {
+            sched.order_into(&jobs, &mut order);
+            elapsed += makespan(&jobs, &order);
+        }
+        clock += elapsed;
+        assert!(
+            (rec.sim_time - clock).abs() < 1e-9,
+            "round {}: session clock {} != executed-order clock {}",
+            round + 1,
+            rec.sim_time,
+            clock
+        );
+        if (round + 1) % cfg.train.aggregation_interval == 0 {
+            clock += agg;
+        }
+    }
+}
+
+#[test]
+fn bounded_participation_caps_round_cohorts() {
+    // --max-participants: every round trains at most the cap, traffic
+    // and executions shrink accordingly, and the run still learns.
+    let Some(e) = engine() else { return };
+    let mut cfg = mini_cfg();
+    cfg.train.max_rounds = 4;
+    cfg.train.max_participants = 2;
+    let mut session = Session::new(&e, &cfg).unwrap();
+    let mut max_seen = 0usize;
+    while !session.done() {
+        let rep = session.step_round().unwrap();
+        assert!(rep.participants.len() <= 2, "round {} overflowed", rep.round);
+        // Participant ids stay sorted global ids.
+        assert!(rep.participants.windows(2).all(|w| w[0] < w[1]));
+        max_seen = max_seen.max(rep.participants.len());
+    }
+    assert_eq!(max_seen, 2);
+    let capped = session.result();
+    let full = Session::new(&e, &mini_cfg_rounds(4)).unwrap().run_to_convergence().unwrap();
+    assert!(capped.executions < full.executions);
+    assert!(capped.rounds.iter().all(|x| x.mean_loss.is_finite()));
+}
+
+fn mini_cfg_rounds(rounds: usize) -> ExperimentConfig {
+    let mut cfg = mini_cfg();
+    cfg.train.max_rounds = rounds;
+    cfg
 }
 
 #[test]

@@ -22,7 +22,21 @@ fn random_jobs(rng: &mut Rng, n: usize) -> Vec<JobInfo> {
         .collect()
 }
 
-/// Every scheduler always emits a permutation of the client ids.
+/// [`random_jobs`] with dropout-round id labels: strictly increasing
+/// but non-contiguous global client ids (survivors of a bigger fleet).
+fn random_dropout_jobs(rng: &mut Rng, n: usize) -> Vec<JobInfo> {
+    let mut jobs = random_jobs(rng, n);
+    let mut id = 0usize;
+    for j in &mut jobs {
+        id += gen::usize_in(rng, 1, 5);
+        j.client = id;
+    }
+    jobs
+}
+
+/// Every scheduler always emits a permutation of the *job indices* —
+/// even when the client id labels are non-contiguous (dropout rounds),
+/// which is exactly where the old return-ids contract went wrong.
 #[test]
 fn prop_schedulers_emit_permutations() {
     for kind in ["proposed", "fifo", "wf", "random"] {
@@ -30,7 +44,14 @@ fn prop_schedulers_emit_permutations() {
             &format!("{kind}-is-permutation"),
             11,
             200,
-            |rng| { let n = gen::usize_in(rng, 1, 12); random_jobs(rng, n) },
+            |rng| {
+                let n = gen::usize_in(rng, 1, 12);
+                if gen::usize_in(rng, 0, 1) == 0 {
+                    random_jobs(rng, n)
+                } else {
+                    random_dropout_jobs(rng, n)
+                }
+            },
             |jobs| {
                 let mut s: Box<dyn Scheduler> = match kind {
                     "proposed" => Box::new(ProposedScheduler),
@@ -46,25 +67,103 @@ fn prop_schedulers_emit_permutations() {
     }
 }
 
-/// Makespan is invariant to the *label* of the clients, only their
-/// parameters matter: shuffling job order in the input changes nothing.
+/// Fleet-sweep optimality envelope: on seeded random fleets (n ≤ 7,
+/// dropout-shaped ids) the greedy Alg. 2 schedule is a valid index
+/// permutation, never beats the brute-force optimum, and stays within a
+/// bounded factor of it.  The 3× envelope is a sanity bound from
+/// m ≤ max-arrival + Σ server + max-tail vs. the optimum's lower
+/// bounds, not a tight guarantee.
 #[test]
-fn prop_makespan_label_invariant() {
+fn prop_proposed_bounded_ratio_vs_brute_force_under_dropout() {
     check(
-        "makespan-label-invariant",
+        "proposed-bounded-ratio-dropout",
+        43,
+        80,
+        |rng| { let n = gen::usize_in(rng, 2, 7); random_dropout_jobs(rng, n) },
+        |jobs| {
+            let mut order = ProposedScheduler.order(jobs);
+            let m = makespan(jobs, &order);
+            let (_, best) = brute_force_best(jobs);
+            order.sort_unstable();
+            order == (0..jobs.len()).collect::<Vec<_>>()
+                && m >= best - 1e-9
+                && m <= 3.0 * best + 1e-9
+        },
+    );
+}
+
+/// The schedule path is allocation-free at fleet scale: repeated
+/// order_into + makespan over 10k jobs allocate zero HostTensors and
+/// never regrow the reused order buffer (extends the PR-1 steady-state
+/// allocation gate to scheduling).
+#[test]
+fn prop_schedule_path_is_allocation_free_at_10k() {
+    let mut rng = Rng::new(47);
+    let jobs = random_jobs(&mut rng, 10_000);
+    let mut buf: Vec<usize> = Vec::new();
+    for kind in [
+        sfl::config::SchedulerKind::Proposed,
+        sfl::config::SchedulerKind::Fifo,
+        sfl::config::SchedulerKind::WorkloadFirst,
+        sfl::config::SchedulerKind::Random,
+    ] {
+        let mut s = make_scheduler(kind, 9);
+        s.order_into(&jobs, &mut buf); // warm-up sizes the buffer
+        let (cap, ptr) = (buf.capacity(), buf.as_ptr());
+        let before = sfl::tensor::alloc_count();
+        for _ in 0..5 {
+            s.order_into(&jobs, &mut buf);
+            std::hint::black_box(makespan(&jobs, &buf));
+        }
+        assert_eq!(sfl::tensor::alloc_count(), before, "{}: allocated tensors", s.name());
+        assert_eq!(buf.capacity(), cap, "{}: buffer regrew", s.name());
+        assert_eq!(buf.as_ptr(), ptr, "{}: buffer reallocated", s.name());
+    }
+}
+
+/// Makespan depends only on the *sequence of jobs processed*, never on
+/// their client-id labels or slice positions: relabeling ids is a
+/// no-op, and permuting the slice is exactly compensated by remapping
+/// the order's indices.
+#[test]
+fn prop_makespan_depends_only_on_processed_sequence() {
+    check(
+        "makespan-sequence-invariant",
         13,
         150,
         |rng| {
             let n = gen::usize_in(rng, 2, 8);
             let jobs = random_jobs(rng, n);
-            let swap = (gen::usize_in(rng, 0, jobs.len() - 1), gen::usize_in(rng, 0, jobs.len() - 1));
+            let swap = (gen::usize_in(rng, 0, n - 1), gen::usize_in(rng, 0, n - 1));
             (jobs, swap)
         },
         |(jobs, (i, j))| {
+            let order: Vec<usize> = (0..jobs.len()).collect();
+            let reference = makespan(jobs, &order);
+            // Relabeling the client ids changes nothing.
+            let mut relabeled = jobs.clone();
+            for (x, jb) in relabeled.iter_mut().enumerate() {
+                jb.client = 100 + 7 * x;
+            }
+            if (makespan(&relabeled, &order) - reference).abs() > 1e-9 {
+                return false;
+            }
+            // Swapping two slice positions + remapping the order is a no-op.
             let mut shuffled = jobs.clone();
             shuffled.swap(*i, *j);
-            let order: Vec<usize> = jobs.iter().map(|j| j.client).collect();
-            (makespan(jobs, &order) - makespan(&shuffled, &order)).abs() < 1e-9
+            let remapped: Vec<usize> = order
+                .iter()
+                .map(|&x| {
+                    if x == *i {
+                        *j
+                    } else if x == *j {
+                        *i
+                    } else {
+                        x
+                    }
+                })
+                .collect();
+            (makespan(&shuffled, &remapped) - reference).abs() < 1e-9
         },
     );
 }
