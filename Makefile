@@ -3,7 +3,7 @@
 # `artifacts` needs the python env (jax) once; everything else is
 # rust-only.  Tier-1 verify: `make build test`.  Lint gate: `make lint`.
 
-.PHONY: artifacts build test bench bench-sched lint clean
+.PHONY: artifacts build test bench bench-sched bench-trace lint clean
 
 # AOT-lower the HLO artifacts + params.bin the runtime executes.
 # Output lands in rust/artifacts/<config>/ (cargo's working directory
@@ -28,10 +28,16 @@ bench:
 bench-sched:
 	cd rust && cargo bench --bench sched_scale
 
+# Non-stationary scheduling regret sweep; writes rust/BENCH_trace.json
+# (cumulative policy regret vs the clairvoyant oracle per trace kind —
+# EXPERIMENTS.md §Traces).  CI runs the same bench with TRACE_SMOKE=1.
+bench-trace:
+	cd rust && cargo bench --bench trace_regret
+
 # Format + clippy gate (CI tier-1 companion).
 lint:
 	cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
 
 clean:
 	cd rust && cargo clean
-	rm -f rust/BENCH_hotpath.json rust/BENCH_sched.json
+	rm -f rust/BENCH_hotpath.json rust/BENCH_sched.json rust/BENCH_trace.json

@@ -1,0 +1,101 @@
+//! Non-stationary scheduling regret bench: for each trace kind
+//! (random-walk MFU/link drift, diurnal cycles, Markov availability
+//! churn), drive a 100-client synthetic fleet through the environment
+//! timeline and score every policy's cumulative makespan regret against
+//! the per-round clairvoyant oracle schedule (Alg. 2 on the true
+//! current-time jobs).  Results land in `BENCH_trace.json` (see
+//! EXPERIMENTS.md §Traces for the schema).  Pure timing model — no
+//! artifacts needed.
+//!
+//!     cargo bench --bench trace_regret                 # full sweep
+//!     TRACE_SMOKE=1 cargo bench --bench trace_regret   # CI smoke
+//!
+//! Acceptance (full run): on the random-walk trace the estimator-driven
+//! policy must accumulate strictly less regret than the static nominal
+//! model (asserted in-process; `tests/trace_env.rs` enforces the same
+//! gate in the test suite).
+
+use sfl::coordinator::regret::{run_regret, RegretConfig};
+use sfl::trace::{TraceKind, TraceSpec};
+use sfl::util::bench::bench_once;
+
+fn spec_for(kind: TraceKind) -> TraceSpec {
+    TraceSpec {
+        kind,
+        seed: 5,
+        mfu_sigma: 0.08,
+        link_sigma: 0.05,
+        revert: 0.01,
+        period: 600.0,
+        amp: 0.4,
+        jitter: 0.05,
+        mean_up: 300.0,
+        mean_down: 60.0,
+        obs_noise_sigma: 0.1,
+        replay_path: String::new(),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("TRACE_SMOKE").is_ok();
+    let (n, rounds) = if smoke { (40, 25) } else { (100, 150) };
+    let mut entries: Vec<(String, String)> = Vec::new();
+
+    for kind in [TraceKind::RandomWalk, TraceKind::Diurnal, TraceKind::Markov] {
+        let mut rc = RegretConfig::new(spec_for(kind));
+        rc.n = n;
+        rc.rounds = rounds;
+        let (report, _) = bench_once(&format!("trace/regret/{kind}/n{n}"), || {
+            run_regret(&rc).expect("regret harness failed")
+        });
+        // Cumulative regrets can legitimately be negative (Alg. 2 is a
+        // greedy heuristic) — only print the ratio where it means
+        // something.
+        let ratio = if report.nominal > 1e-9 {
+            format!("{:.4}", report.estimator / report.nominal)
+        } else {
+            "n/a".into()
+        };
+        println!(
+            "trace regret {kind:<12} rounds={} oracle_total={:.3}s \
+             estimator={:+.3}s nominal={:+.3}s random={:+.3}s (est/nom = {ratio})",
+            report.rounds, report.oracle_total, report.estimator, report.nominal, report.random,
+        );
+        entries.push((format!("trace/rounds/{kind}"), format!("{}", report.rounds)));
+        let total = report.oracle_total;
+        entries.push((format!("trace/oracle_total/{kind}"), format!("{total:.6}")));
+        // The oracle row is zero by construction — emitted so the json
+        // schema lists every policy explicitly.
+        for (policy, value) in [
+            ("oracle", 0.0),
+            ("estimator", report.estimator),
+            ("nominal", report.nominal),
+            ("random", report.random),
+        ] {
+            entries.push((format!("trace/regret/{policy}/{kind}"), format!("{value:.6}")));
+        }
+
+        if !smoke && kind == TraceKind::RandomWalk {
+            // The acceptance gate on the full non-stationary run (the
+            // same gate `tests/trace_env.rs` enforces at fixed config).
+            assert!(
+                report.estimator < report.nominal,
+                "estimator-driven scheduling must beat the static nominal model on a \
+                 random-walk fleet: {} vs {}",
+                report.estimator,
+                report.nominal
+            );
+        }
+    }
+
+    let mut json = String::from("{\n");
+    for (i, (name, value)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        json.push_str(&format!("  \"{name}\": {value}{comma}\n"));
+    }
+    json.push_str("}\n");
+    match std::fs::write("BENCH_trace.json", &json) {
+        Ok(()) => println!("wrote BENCH_trace.json ({} entries)", entries.len()),
+        Err(e) => eprintln!("could not write BENCH_trace.json: {e}"),
+    }
+}

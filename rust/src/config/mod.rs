@@ -9,6 +9,7 @@ use crate::devices::{paper_fleet, DeviceProfile, ServerProfile, DEFAULT_CLIENT_M
 use crate::fleet::{FleetPreset, FleetSpec};
 use crate::model::ModelDims;
 use crate::net::Link;
+use crate::trace::{TraceKind, TraceSpec};
 use crate::util::kv::KvDocument;
 use anyhow::{bail, Result};
 use std::path::Path;
@@ -86,13 +87,34 @@ impl std::fmt::Display for SchedulerKind {
     }
 }
 
+std::thread_local! {
+    /// Per-thread count of `ClientConfig` clones.  Each clone allocates
+    /// the device-name `String`, so the steady-state round loop is
+    /// required to perform none — asserted in the same style as
+    /// `tensor::alloc_count` (see
+    /// `integration_training.rs::round_loop_does_not_clone_client_configs`).
+    static CLIENT_CONFIG_CLONES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Snapshot of the calling thread's `ClientConfig` clone counter.
+pub fn client_clone_count() -> u64 {
+    CLIENT_CONFIG_CLONES.with(|c| c.get())
+}
+
 /// One client entry: device + (optional) pinned cut point.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct ClientConfig {
     pub device: DeviceProfile,
     /// If None, the split selector picks the deepest feasible cut.
     pub cut: Option<usize>,
     pub link: Link,
+}
+
+impl Clone for ClientConfig {
+    fn clone(&self) -> Self {
+        CLIENT_CONFIG_CLONES.with(|c| c.set(c.get() + 1));
+        Self { device: self.device.clone(), cut: self.cut, link: self.link.clone() }
+    }
 }
 
 /// Training-loop knobs.
@@ -172,6 +194,10 @@ pub struct ExperimentConfig {
     /// key=value round-trip re-synthesizes it instead of listing
     /// per-client sections).
     pub fleet: Option<FleetSpec>,
+    /// Environment-trace recipe (non-stationary fleet dynamics +
+    /// measurement noise).  `kind = none` with `obs_noise_sigma = 0`
+    /// (the default) reproduces the static paper setting exactly.
+    pub trace: TraceSpec,
     pub server: ServerProfile,
     pub train: TrainConfig,
     /// Root of the artifacts directory.
@@ -197,6 +223,7 @@ impl ExperimentConfig {
             scheduler: SchedulerKind::Proposed,
             clients,
             fleet: None,
+            trace: TraceSpec::default(),
             server: ServerProfile::rtx4080s(),
             train: TrainConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -281,6 +308,55 @@ impl ExperimentConfig {
                     self.clients.len()
                 );
             }
+        }
+        let tr = &self.trace;
+        // NaN/inf would silently poison the timeline RNG streams and the
+        // estimator EWMAs — the negated comparisons below are false for
+        // NaN, so every float knob is gated on `is_finite` explicitly.
+        if !tr.obs_noise_sigma.is_finite() || tr.obs_noise_sigma < 0.0 {
+            bail!("trace obs_noise_sigma must be finite and >= 0, got {}", tr.obs_noise_sigma);
+        }
+        match tr.kind {
+            TraceKind::None => {}
+            TraceKind::RandomWalk => {
+                let ok = |x: f64| x.is_finite() && x >= 0.0;
+                if !ok(tr.mfu_sigma) || !ok(tr.link_sigma) || !ok(tr.revert) {
+                    bail!("random-walk trace needs finite mfu_sigma/link_sigma/revert >= 0");
+                }
+            }
+            TraceKind::Diurnal => {
+                if !tr.period.is_finite() || tr.period <= 0.0 {
+                    bail!("diurnal trace needs finite period > 0, got {}", tr.period);
+                }
+                if !(0.0..=0.95).contains(&tr.amp) {
+                    bail!("diurnal trace amp must be in [0, 0.95], got {}", tr.amp);
+                }
+                if !tr.jitter.is_finite() || tr.jitter < 0.0 {
+                    bail!("diurnal trace jitter must be finite and >= 0, got {}", tr.jitter);
+                }
+            }
+            TraceKind::Markov => {
+                let ok = |x: f64| x.is_finite() && x > 0.0;
+                if !ok(tr.mean_up) || !ok(tr.mean_down) {
+                    bail!(
+                        "markov trace needs finite mean_up/mean_down > 0, got {}/{}",
+                        tr.mean_up,
+                        tr.mean_down
+                    );
+                }
+            }
+            TraceKind::Replay => {
+                if tr.replay_path.is_empty() {
+                    bail!("replay trace needs a replay_path (jsonl trace file)");
+                }
+            }
+        }
+        if tr.kind != TraceKind::Replay && !tr.replay_path.is_empty() {
+            bail!(
+                "trace replay_path is set but kind is {} — use kind = replay (a recorded \
+                 trajectory is never silently ignored)",
+                tr.kind
+            );
         }
         Ok(())
     }
@@ -387,6 +463,27 @@ impl ExperimentConfig {
             spec.mfu_sigma = s.parse_or("mfu_sigma", spec.mfu_sigma)?;
             cfg.apply_fleet(spec);
         }
+        // A [trace] section configures the environment timeline.
+        if let Some(s) = doc.sections_named("trace").next() {
+            let mut tr = TraceSpec::default();
+            if let Some(v) = s.get("kind") {
+                tr.kind = v.parse()?;
+            }
+            tr.seed = s.parse_or("seed", tr.seed)?;
+            tr.mfu_sigma = s.parse_or("mfu_sigma", tr.mfu_sigma)?;
+            tr.link_sigma = s.parse_or("link_sigma", tr.link_sigma)?;
+            tr.revert = s.parse_or("revert", tr.revert)?;
+            tr.period = s.parse_or("period", tr.period)?;
+            tr.amp = s.parse_or("amp", tr.amp)?;
+            tr.jitter = s.parse_or("jitter", tr.jitter)?;
+            tr.mean_up = s.parse_or("mean_up", tr.mean_up)?;
+            tr.mean_down = s.parse_or("mean_down", tr.mean_down)?;
+            tr.obs_noise_sigma = s.parse_or("obs_noise_sigma", tr.obs_noise_sigma)?;
+            if let Some(p) = s.get("replay_path") {
+                tr.replay_path = p.to_string();
+            }
+            cfg.trace = tr;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -428,6 +525,28 @@ impl ExperimentConfig {
             self.server.mfu,
             self.server.contention_per_job
         ));
+        // The environment trace always round-trips through its spec —
+        // `from_kv_file`/`to_kv` symmetry holds for every section.
+        let tr = &self.trace;
+        out.push_str(&format!(
+            "\n[trace]\nkind = {}\nseed = {}\nmfu_sigma = {}\nlink_sigma = {}\nrevert = {}\n\
+             period = {}\namp = {}\njitter = {}\nmean_up = {}\nmean_down = {}\n\
+             obs_noise_sigma = {}\n",
+            tr.kind,
+            tr.seed,
+            tr.mfu_sigma,
+            tr.link_sigma,
+            tr.revert,
+            tr.period,
+            tr.amp,
+            tr.jitter,
+            tr.mean_up,
+            tr.mean_down,
+            tr.obs_noise_sigma
+        ));
+        if !tr.replay_path.is_empty() {
+            out.push_str(&format!("replay_path = {}\n", tr.replay_path));
+        }
         // A synthesized fleet round-trips through its spec (same seed ⇒
         // bit-identical fleet); only hand-written fleets list clients.
         if let Some(f) = &self.fleet {
@@ -562,6 +681,98 @@ mod tests {
         c.apply_fleet(FleetSpec::new(FleetPreset::Paper, 12, 1));
         c.validate().unwrap();
         assert_eq!(c.resolve_cuts().len(), 12);
+    }
+
+    #[test]
+    fn trace_kv_roundtrip_is_symmetric() {
+        let mut c = ExperimentConfig::paper();
+        c.trace = TraceSpec {
+            kind: TraceKind::RandomWalk,
+            seed: 99,
+            mfu_sigma: 0.11,
+            link_sigma: 0.07,
+            revert: 0.015,
+            obs_noise_sigma: 0.2,
+            ..TraceSpec::default()
+        };
+        c.validate().unwrap();
+        let dir = std::env::temp_dir().join("sfl_cfg_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.exp");
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.trace, c.trace);
+        // And the default (static) trace round-trips too — the [trace]
+        // section is always written, so to_kv/from_kv stay symmetric.
+        let d = ExperimentConfig::paper();
+        std::fs::write(&path, d.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.trace, TraceSpec::default());
+        assert!(back.trace.is_static());
+    }
+
+    #[test]
+    fn trace_fleet_kv_roundtrip_combined() {
+        // [trace] and [fleet] coexist in one file (the non-stationary
+        // fleet experiment shape).
+        let mut c = ExperimentConfig::paper();
+        c.apply_fleet(FleetSpec::new(FleetPreset::Lognormal, 24, 5));
+        c.trace = TraceSpec { kind: TraceKind::Markov, mean_up: 120.0, ..TraceSpec::default() };
+        c.validate().unwrap();
+        let dir = std::env::temp_dir().join("sfl_cfg_trace_fleet_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("both.exp");
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.fleet, c.fleet);
+        assert_eq!(back.trace, c.trace);
+        assert_eq!(back.clients.len(), 24);
+    }
+
+    #[test]
+    fn invalid_trace_specs_rejected() {
+        let mut c = ExperimentConfig::paper();
+        c.trace.obs_noise_sigma = -0.1;
+        assert!(c.validate().is_err());
+        c.trace.obs_noise_sigma = 0.0;
+        c.trace.kind = TraceKind::Markov;
+        c.trace.mean_up = 0.0;
+        assert!(c.validate().is_err());
+        c.trace.mean_up = 100.0;
+        c.validate().unwrap();
+        c.trace.kind = TraceKind::Diurnal;
+        c.trace.amp = 1.5;
+        assert!(c.validate().is_err());
+        c.trace.amp = 0.3;
+        c.trace.period = 0.0;
+        assert!(c.validate().is_err());
+        c.trace.period = 600.0;
+        c.validate().unwrap();
+        c.trace.kind = TraceKind::Replay;
+        assert!(c.validate().is_err(), "replay without a path must be rejected");
+        // A recorded trajectory on a non-replay kind must not be
+        // silently dropped.
+        c.trace.kind = TraceKind::RandomWalk;
+        c.trace.replay_path = "trace.jsonl".into();
+        assert!(c.validate().is_err(), "replay_path on a non-replay kind must be rejected");
+        c.trace.replay_path = String::new();
+        // NaN knobs must fail at config time, not poison the run.
+        c.trace.mfu_sigma = f64::NAN;
+        assert!(c.validate().is_err(), "NaN mfu_sigma must be rejected");
+        c.trace.mfu_sigma = 0.05;
+        c.trace.kind = TraceKind::None;
+        c.trace.obs_noise_sigma = f64::NAN;
+        assert!(c.validate().is_err(), "NaN obs_noise_sigma must be rejected");
+        c.trace.obs_noise_sigma = f64::INFINITY;
+        assert!(c.validate().is_err(), "infinite obs_noise_sigma must be rejected");
+    }
+
+    #[test]
+    fn client_config_clones_are_counted() {
+        let c = ExperimentConfig::paper();
+        let before = client_clone_count();
+        let _copy = c.clients[0].clone();
+        assert_eq!(client_clone_count(), before + 1);
     }
 
     #[test]

@@ -35,11 +35,20 @@
 //! pins `oracle_timing`.  Synthetic fleets come from
 //! [`fleet::FleetSpec`](crate::fleet::FleetSpec).
 //!
+//! Environments can be *non-stationary*: a seeded
+//! [`EnvTimeline`](crate::trace::EnvTimeline) makes per-client MFU/link
+//! multipliers and availability functions of simulated time (sampled
+//! once per round and applied to the job tables before scheduling),
+//! `obs_noise_sigma` degrades what the estimator observes, and
+//! [`regret`] scores each scheduling policy per round against the
+//! clairvoyant oracle schedule over the true current-time environment.
+//!
 //! [`Trainer`] survives only as a thin deprecated shim over
 //! `Session::run_to_convergence` + the stdout observer.
 
 pub mod estimator;
 pub mod lr;
+pub mod regret;
 pub mod scheduler;
 pub mod session;
 pub mod timing;

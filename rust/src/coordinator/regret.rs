@@ -1,0 +1,212 @@
+//! Scheduling-regret harness for non-stationary environments.
+//!
+//! Per round, the clairvoyant *oracle* schedule is Alg. 2 run on the
+//! true (noise-free, current-time) environment jobs.  Each competing
+//! policy proposes an order from its own (possibly stale or noisy)
+//! view, but is *evaluated* against the true jobs; its per-round regret
+//! is `makespan_policy − makespan_oracle` and the benchmark tracks the
+//! cumulative sum across the trace:
+//!
+//! - **oracle** — Alg. 2 on the true jobs (regret 0 by construction;
+//!   emitted as the sanity row).
+//! - **estimator** — Alg. 2 on the online `TimingEstimator`'s view
+//!   (nominal cold start, noisy observations fed back each round).
+//! - **nominal** — Alg. 2 on the static reported-spec model, never
+//!   updated: what scheduling looks like when drift is ignored.
+//! - **random** — seeded random order over the true jobs (control).
+//!
+//! The per-round regret can be negative on rounds where a stale view
+//! accidentally beats the greedy oracle (Alg. 2 is a heuristic, not the
+//! exhaustive optimum); cumulatively the oracle view wins.
+//!
+//! Used by `benches/trace_regret.rs` (→ `BENCH_trace.json`) and the
+//! acceptance tests in `tests/trace_env.rs` — pure timing model, no
+//! artifacts needed.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::estimator::TimingEstimator;
+use crate::coordinator::scheduler::{
+    makespan, JobInfo, ProposedScheduler, RandomScheduler, Scheduler,
+};
+use crate::coordinator::timing::{self, StepTiming};
+use crate::fleet::{FleetPreset, FleetSpec};
+use crate::trace::{EnvTimeline, NoisyObservation, TraceSpec};
+use anyhow::Result;
+
+/// One regret experiment: a synthesized fleet driven through a trace.
+#[derive(Debug, Clone)]
+pub struct RegretConfig {
+    /// Fleet size (lognormal preset).
+    pub n: usize,
+    /// Rounds to simulate.
+    pub rounds: usize,
+    pub fleet_seed: u64,
+    /// Hidden per-device MFU jitter of the synthesized fleet (the
+    /// static estimation gap, on top of the trace's drift).
+    pub fleet_mfu_sigma: f64,
+    /// The environment trace (including `obs_noise_sigma`).
+    pub spec: TraceSpec,
+    /// Estimator EWMA smoothing factor.
+    pub ewma_alpha: f64,
+}
+
+impl RegretConfig {
+    pub fn new(spec: TraceSpec) -> Self {
+        Self {
+            n: 100,
+            rounds: 150,
+            fleet_seed: 23,
+            fleet_mfu_sigma: 0.25,
+            spec,
+            ewma_alpha: crate::coordinator::estimator::DEFAULT_EWMA_ALPHA,
+        }
+    }
+}
+
+/// Cumulative regret per policy (virtual seconds above the oracle).
+#[derive(Debug, Clone, Copy)]
+pub struct RegretReport {
+    /// Rounds actually scored.
+    pub rounds: usize,
+    /// Σ oracle makespans — the scale reference for the regrets.
+    pub oracle_total: f64,
+    pub estimator: f64,
+    pub nominal: f64,
+    pub random: f64,
+}
+
+impl RegretReport {
+    /// Cumulative regret as a fraction of the oracle's total time.
+    pub fn relative(&self, regret: f64) -> f64 {
+        regret / self.oracle_total.max(1e-12)
+    }
+}
+
+/// Run the per-round policy comparison over the configured trace.
+pub fn run_regret(rc: &RegretConfig) -> Result<RegretReport> {
+    let mut cfg = ExperimentConfig::paper();
+    let mut fleet = FleetSpec::new(FleetPreset::Lognormal, rc.n, rc.fleet_seed);
+    fleet.mfu_sigma = rc.fleet_mfu_sigma;
+    cfg.apply_fleet(fleet);
+    let dims = cfg.timing_dims();
+    let cuts = cfg.resolve_cuts();
+    let base_jobs = timing::build_jobs(&dims, &cfg.clients, &cuts, &cfg.server);
+    let nominal_jobs = timing::build_nominal_jobs(&dims, &cfg.clients, &cuts, &cfg.server);
+
+    let mut timeline = EnvTimeline::new(&rc.spec, rc.n)?;
+    let mut noise = NoisyObservation::new(rc.spec.seed ^ 0x0B5E_C0DE, rc.spec.obs_noise_sigma);
+    let mut est = TimingEstimator::new(rc.n, rc.ewma_alpha);
+    let mut greedy = ProposedScheduler;
+    let mut random = RandomScheduler::new(rc.spec.seed ^ 0x5EED);
+
+    // Reused per-round buffers.
+    let mut participants: Vec<usize> = Vec::with_capacity(rc.n);
+    let mut true_jobs: Vec<JobInfo> = Vec::with_capacity(rc.n);
+    let mut view_jobs: Vec<JobInfo> = Vec::with_capacity(rc.n);
+    let mut nom_part: Vec<JobInfo> = Vec::with_capacity(rc.n);
+    let mut order: Vec<usize> = Vec::with_capacity(rc.n);
+
+    let mut report =
+        RegretReport { rounds: 0, oracle_total: 0.0, estimator: 0.0, nominal: 0.0, random: 0.0 };
+    let mut sim_time = 0.0f64;
+    for _ in 0..rc.rounds {
+        timeline.advance(sim_time);
+        participants.clear();
+        participants.extend((0..rc.n).filter(|&u| timeline.is_available(u)));
+        if participants.is_empty() {
+            // Total churn blackout: nothing to schedule this round.
+            // (The Session, which must keep its aggregation/eval
+            // cadence and RNG streams advancing, instead forces one
+            // best-effort survivor — the analytic harness has no such
+            // constraint and simply skips the round.)
+            sim_time += 1.0;
+            continue;
+        }
+        true_jobs.clear();
+        if timeline.is_active() {
+            true_jobs.extend(participants.iter().map(|&u| {
+                timing::scaled_job(&base_jobs[u], timeline.mfu_mult(u), timeline.link_mult(u))
+            }));
+        } else {
+            true_jobs.extend(participants.iter().map(|&u| base_jobs[u]));
+        }
+        nom_part.clear();
+        nom_part.extend(participants.iter().map(|&u| nominal_jobs[u]));
+
+        // Clairvoyant oracle: Alg. 2 on the true current-time jobs.
+        greedy.order_into(&true_jobs, &mut order);
+        let m_star = makespan(&true_jobs, &order);
+        report.oracle_total += m_star;
+
+        // Estimator view (nominal fallback for cold clients).
+        est.jobs_into(&nom_part, &mut view_jobs);
+        greedy.order_into(&view_jobs, &mut order);
+        report.estimator += makespan(&true_jobs, &order) - m_star;
+
+        // Static nominal model, never updated.
+        greedy.order_into(&nom_part, &mut order);
+        report.nominal += makespan(&true_jobs, &order) - m_star;
+
+        // Random control.
+        random.order_into(&true_jobs, &mut order);
+        report.random += makespan(&true_jobs, &order) - m_star;
+
+        // Feedback: the estimator observes the round's true timings
+        // through the measurement-noise channel.
+        for j in &true_jobs {
+            let clean = StepTiming::from_job(j);
+            let obs = if noise.is_active() { clean.noisy(&mut noise) } else { clean };
+            est.observe(j.client, &obs);
+        }
+        report.rounds += 1;
+        sim_time += m_star;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceKind;
+
+    #[test]
+    fn static_environment_has_near_zero_estimator_regret_after_warmup() {
+        // With no trace and no noise, the estimator converges to the
+        // truth after its first observation round, so all but the cold
+        // round contribute zero regret — and the nominal model's regret
+        // only comes from the hidden fleet MFU jitter.
+        let spec = TraceSpec::default();
+        let mut rc = RegretConfig::new(spec);
+        rc.n = 60;
+        rc.rounds = 30;
+        let rep = run_regret(&rc).unwrap();
+        assert_eq!(rep.rounds, 30);
+        assert!(rep.oracle_total > 0.0);
+        // From round 1 the estimator's view equals the truth exactly
+        // (first observation seeds the EWMA; no noise, no drift), so
+        // any remaining regret comes from the measured-tail key vs the
+        // oracle's reported-spec N_c/C key — bounded by the same 5%
+        // makespan envelope `tests/fleet_sched.rs` gates (an estimator
+        // that failed to converge would blow far past it).
+        assert!(
+            rep.relative(rep.estimator).abs() < 0.05,
+            "static-fleet estimator regret outside the 5% envelope: {} over {} oracle seconds",
+            rep.estimator,
+            rep.oracle_total
+        );
+    }
+
+    #[test]
+    fn regret_is_deterministic() {
+        let spec = TraceSpec { kind: TraceKind::RandomWalk, ..TraceSpec::default() };
+        let mut rc = RegretConfig::new(spec);
+        rc.n = 40;
+        rc.rounds = 20;
+        let a = run_regret(&rc).unwrap();
+        let b = run_regret(&rc).unwrap();
+        assert_eq!(a.oracle_total.to_bits(), b.oracle_total.to_bits());
+        assert_eq!(a.estimator.to_bits(), b.estimator.to_bits());
+        assert_eq!(a.nominal.to_bits(), b.nominal.to_bits());
+        assert_eq!(a.random.to_bits(), b.random.to_bits());
+    }
+}

@@ -21,7 +21,7 @@
 //! primitives.
 
 use crate::checkpoint::{decode_f64s, decode_u64s, encode_f64s, encode_u64s, write_sflp};
-use crate::config::{ClientConfig, ExperimentConfig, SchedulerKind, SchemeKind};
+use crate::config::{ExperimentConfig, SchedulerKind, SchemeKind};
 use crate::coordinator::estimator::TimingEstimator;
 use crate::coordinator::lr::LrSchedule;
 use crate::coordinator::scheduler::{make_scheduler, makespan, JobInfo, Scheduler};
@@ -34,6 +34,7 @@ use crate::model::{memory, memory::MemoryBreakdown, ModelDims};
 use crate::net::{Message, TrafficMeter};
 use crate::runtime::{AdamState, ClientState, Engine, HeadState, ServerState};
 use crate::tensor::{ops, rng::Rng, store::ParamStore, HostTensor};
+use crate::trace::{EnvSnapshot, EnvTimeline, NoisyObservation, TraceKind};
 use anyhow::{bail, Result};
 use std::path::Path;
 
@@ -141,11 +142,14 @@ pub struct RoundCtx<'a, 'e> {
     pub round: usize,
     /// This round's learning rate (LR schedule applied by the session).
     pub round_lr: f32,
-    /// Participating client ids (dropout sampling applied by the session).
+    /// Participating client ids (dropout + availability applied by the
+    /// session) — indices into `env.cfg.clients` / `env.cuts`, so
+    /// schemes use the index-based timing variants instead of cloning
+    /// participant `ClientConfig`s per round.
     pub participants: &'a [usize],
-    /// Participant-ordered client configs / cuts (timing-model inputs).
-    pub part_clients: &'a [ClientConfig],
-    pub part_cuts: &'a [usize],
+    /// Current environment sample (multipliers + availability) — the
+    /// inactive timeline (all 1s) on static fleets.
+    pub timeline: &'a EnvTimeline,
     /// True timing jobs for the participants (simulation ground truth),
     /// gathered once per round.  `jobs[i].client` is a global id label;
     /// schedulers return positions into this slice.
@@ -196,6 +200,9 @@ pub struct RoundReport {
     pub mean_loss: f32,
     /// Client ids that participated (failure injection visibility).
     pub participants: Vec<usize>,
+    /// Fleet-wide environment sample for the round (present when an
+    /// environment trace is active).
+    pub env: Option<EnvSnapshot>,
     /// Present on eval rounds.
     pub eval: Option<EvalPoint>,
 }
@@ -265,6 +272,16 @@ fn sched_tag(kind: SchedulerKind) -> u64 {
     }
 }
 
+fn trace_tag(kind: TraceKind) -> u64 {
+    match kind {
+        TraceKind::None => 0,
+        TraceKind::RandomWalk => 1,
+        TraceKind::Diurnal => 2,
+        TraceKind::Markov => 3,
+        TraceKind::Replay => 4,
+    }
+}
+
 /// The config fingerprint stored in a checkpoint and verified on resume:
 /// every knob listed here changes the replayed numerics or RNG streams,
 /// so resuming under a different value would silently corrupt results.
@@ -272,6 +289,7 @@ fn sched_tag(kind: SchedulerKind) -> u64 {
 /// resumed run is legitimate.
 fn train_fingerprint(cfg: &ExperimentConfig) -> Vec<(&'static str, u64)> {
     let t = &cfg.train;
+    let tr = &cfg.trace;
     let (lrs_tag, lrs_p1, lrs_p2) = match t.lr_schedule {
         LrSchedule::Constant => (0u64, 0u64, 0u64),
         LrSchedule::Linear { horizon, floor } => (1, horizon as u64, floor.to_bits() as u64),
@@ -296,6 +314,22 @@ fn train_fingerprint(cfg: &ExperimentConfig) -> Vec<(&'static str, u64)> {
         ("lr_schedule", lrs_tag),
         ("lr_schedule_horizon", lrs_p1),
         ("lr_schedule_floor", lrs_p2),
+        // Environment trace: every knob feeds the timeline/noise RNG
+        // streams, so resuming under a different trace would silently
+        // desync the trajectory.  The replay *content* is covered
+        // separately by the timeline's file hash.
+        ("trace_kind", trace_tag(tr.kind)),
+        ("trace_seed", tr.seed),
+        ("trace_mfu_sigma", tr.mfu_sigma.to_bits()),
+        ("trace_link_sigma", tr.link_sigma.to_bits()),
+        ("trace_revert", tr.revert.to_bits()),
+        ("trace_period", tr.period.to_bits()),
+        ("trace_amp", tr.amp.to_bits()),
+        ("trace_jitter", tr.jitter.to_bits()),
+        ("trace_mean_up", tr.mean_up.to_bits()),
+        ("trace_mean_down", tr.mean_down.to_bits()),
+        ("trace_obs_noise_sigma", tr.obs_noise_sigma.to_bits()),
+        ("trace_replay_path", crate::trace::fnv1a(tr.replay_path.as_bytes())),
     ]
 }
 
@@ -507,7 +541,13 @@ impl ParallelCore {
         };
         let agg_elapsed = if ctx.aggregate {
             self.aggregate(env, ctx.participants, ctx.traffic, ctx.scratch)?;
-            timing::aggregation_time(&env.dims_time, ctx.part_clients, ctx.part_cuts)
+            timing::aggregation_time_for(
+                &env.dims_time,
+                &env.cfg.clients,
+                &env.cuts,
+                ctx.participants,
+                ctx.timeline,
+            )
         } else {
             0.0
         };
@@ -766,8 +806,13 @@ impl Scheme for SflScheme {
 
     fn round(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<RoundOutcome> {
         let env = ctx.env;
-        let (step_time, _) =
-            timing::sfl_step_with_jobs(ctx.jobs, &env.dims_time, ctx.part_cuts, &env.cfg.server);
+        let step_time = timing::sfl_step_for(
+            ctx.jobs,
+            &env.dims_time,
+            &env.cuts,
+            ctx.participants,
+            &env.cfg.server,
+        );
         self.core.run_round(ctx, CoreTiming::Fixed(step_time))
     }
 
@@ -842,12 +887,14 @@ impl Scheme for SlScheme {
     fn round(&mut self, ctx: &mut RoundCtx<'_, '_>) -> Result<RoundOutcome> {
         let env = ctx.env;
         let steps = env.cfg.train.steps_per_round;
-        let train_elapsed = timing::sl_round(
+        let train_elapsed = timing::sl_round_for(
             &env.dims_time,
-            ctx.part_clients,
-            ctx.part_cuts,
+            &env.cfg.clients,
+            &env.cuts,
             &env.cfg.server,
             steps,
+            ctx.participants,
+            ctx.timeline,
         );
         let mut loss_sum = 0.0f32;
         let mut loss_n = 0u32;
@@ -959,6 +1006,11 @@ struct Book {
     converged: bool,
     /// Online per-client timing model (ignored under `oracle_timing`).
     estimator: TimingEstimator,
+    /// Environment timeline (non-stationary MFU/link/availability),
+    /// sampled once per round; the inactive timeline on static fleets.
+    timeline: EnvTimeline,
+    /// Measurement noise between true timings and estimator input.
+    obs_noise: NoisyObservation,
     /// Reused per-round gathers of the participant jobs.
     jobs_buf: Vec<JobInfo>,
     sched_jobs_buf: Vec<JobInfo>,
@@ -1049,6 +1101,12 @@ impl<'e> Session<'e> {
             labels: Vec::with_capacity(env.dims_exec.batch),
             mask: vec![false; env.cuts.len()],
         };
+        // The environment timeline is re-synthesized from its spec
+        // (resume restores only the mutable generator state); a replay
+        // trace whose file is missing fails loudly right here.
+        let timeline = EnvTimeline::new(&cfg.trace, env.cuts.len())?;
+        let obs_noise =
+            NoisyObservation::new(cfg.train.seed ^ 0x0B5E_C0DE, cfg.trace.obs_noise_sigma);
         let t = &cfg.train;
         let book = Book {
             round: 0,
@@ -1063,6 +1121,8 @@ impl<'e> Session<'e> {
             dropout_rng: Rng::new(t.seed ^ 0xD809),
             converged: false,
             estimator: TimingEstimator::new(env.cuts.len(), t.timing_ewma_alpha),
+            timeline,
+            obs_noise,
             jobs_buf: Vec::with_capacity(env.cuts.len()),
             sched_jobs_buf: Vec::with_capacity(env.cuts.len()),
             exec_base: engine.exec_count(),
@@ -1116,6 +1176,16 @@ impl<'e> Session<'e> {
         let t = &self.env.cfg.train;
         let round_lr = t.lr_schedule.at(t.lr, round);
 
+        // ---- environment timeline: one sample per round ----
+        // Sampled at the sim clock's current time, before scheduling or
+        // execution — the whole round sees one consistent environment.
+        let env_snapshot = if self.book.timeline.is_active() {
+            self.book.timeline.advance(self.book.sim_time);
+            Some(self.book.timeline.snapshot())
+        } else {
+            None
+        };
+
         // ---- failure injection: which clients participate? ----
         let n = self.env.cuts.len();
         let mut participants: Vec<usize> = if t.dropout_prob > 0.0 {
@@ -1130,6 +1200,33 @@ impl<'e> Session<'e> {
         } else {
             (0..n).collect()
         };
+        // ---- availability (environment churn) ----
+        // An unavailable client is *skipped* for the round — composing
+        // with dropout sampling — never dropped from the fleet.
+        if self.book.timeline.is_active() {
+            let tl = &self.book.timeline;
+            participants.retain(|&u| tl.is_available(u));
+            if participants.is_empty() {
+                // Churn emptied the round (dropout removed every
+                // available client): keep one survivor, drawn uniformly
+                // from the *available* clients when any exist.  Only a
+                // total blackout forces an unavailable one — a session
+                // round cannot be skipped (aggregation/eval cadence and
+                // the batch/RNG streams must advance), so best-effort
+                // progress on one client is the deliberate semantic
+                // here; the analytic regret harness, which has no such
+                // constraint, skips blackout rounds instead (see
+                // coordinator::regret).
+                let available = (0..n).filter(|&u| tl.is_available(u)).count();
+                let pick = if available > 0 {
+                    let k = self.book.dropout_rng.below(available);
+                    (0..n).filter(|&u| tl.is_available(u)).nth(k).unwrap_or(0)
+                } else {
+                    self.book.dropout_rng.below(n)
+                };
+                participants.push(pick);
+            }
+        }
         // ---- bounded participation (fleet scale) ----
         if t.max_participants > 0 && participants.len() > t.max_participants {
             // Partial Fisher–Yates: the first `max_participants` slots
@@ -1142,16 +1239,22 @@ impl<'e> Session<'e> {
             participants.truncate(t.max_participants);
             participants.sort_unstable();
         }
-        let part_clients: Vec<ClientConfig> =
-            participants.iter().map(|&u| self.env.cfg.clients[u].clone()).collect();
-        let part_cuts: Vec<usize> = participants.iter().map(|&u| self.env.cuts[u]).collect();
-        // Jobs are per-client constants: gather the participants' rows
-        // from the session tables into reused buffers.  `jobs_buf` is
-        // the true timing model; `sched_jobs_buf` is what the scheduler
-        // sees — oracle under --oracle-timing, otherwise the online
-        // estimate (static nominal model until a client is observed).
+        // Gather the participants' true jobs into the reused buffer —
+        // per-client constants on a static fleet, the environment-scaled
+        // current-time jobs under an active timeline.  `jobs_buf` is the
+        // simulation's ground truth; `sched_jobs_buf` is what the
+        // scheduler sees — oracle (clairvoyant) under --oracle-timing,
+        // otherwise the online estimate (static nominal model until a
+        // client is observed).
         self.book.jobs_buf.clear();
-        self.book.jobs_buf.extend(participants.iter().map(|&u| self.env.oracle_jobs[u]));
+        if self.book.timeline.is_active() {
+            let tl = &self.book.timeline;
+            self.book.jobs_buf.extend(participants.iter().map(|&u| {
+                timing::scaled_job(&self.env.oracle_jobs[u], tl.mfu_mult(u), tl.link_mult(u))
+            }));
+        } else {
+            self.book.jobs_buf.extend(participants.iter().map(|&u| self.env.oracle_jobs[u]));
+        }
         self.book.sched_jobs_buf.clear();
         if t.oracle_timing {
             self.book.sched_jobs_buf.extend_from_slice(&self.book.jobs_buf);
@@ -1169,8 +1272,7 @@ impl<'e> Session<'e> {
                 round,
                 round_lr,
                 participants: &participants,
-                part_clients: &part_clients,
-                part_cuts: &part_cuts,
+                timeline: &self.book.timeline,
                 jobs: &self.book.jobs_buf,
                 sched_jobs: &self.book.sched_jobs_buf,
                 aggregate,
@@ -1182,10 +1284,15 @@ impl<'e> Session<'e> {
         // ---- online timing feedback ----
         // The round's true per-client timings (queue-independent
         // components) are what deployed clients would report back; the
-        // estimator folds them into its EWMAs for the next round.
+        // estimator folds them into its EWMAs for the next round —
+        // through the measurement-noise channel when configured.
         if !t.oracle_timing {
-            for j in &self.book.jobs_buf {
-                self.book.estimator.observe(j.client, &StepTiming::from_job(j));
+            let b = &mut self.book;
+            for j in &b.jobs_buf {
+                let clean = StepTiming::from_job(j);
+                let obs =
+                    if b.obs_noise.is_active() { clean.noisy(&mut b.obs_noise) } else { clean };
+                b.estimator.observe(j.client, &obs);
             }
         }
         // Commit the round only after the scheme succeeded — a failed
@@ -1226,6 +1333,7 @@ impl<'e> Session<'e> {
             step_time: outcome.train_elapsed / t.steps_per_round as f64,
             mean_loss: outcome.mean_loss,
             participants,
+            env: env_snapshot,
             eval,
         };
         for obs in &mut self.observers {
@@ -1322,6 +1430,15 @@ impl<'e> Session<'e> {
         let (est_values, est_samples) = b.estimator.state();
         named.push(("book.est.values".into(), encode_f64s("est.values", &est_values)));
         named.push(("book.est.samples".into(), encode_u64s("est.samples", &est_samples)));
+        // Environment timeline: per-generator mutable state (RNG bits,
+        // current values, last sample times) + the measurement-noise
+        // RNG + the replay-file content hash (resume verification).
+        named.push(("book.timeline".into(), encode_u64s("timeline", &b.timeline.state())));
+        named.push(("book.obs_noise".into(), encode_u64s("obs_noise", &[b.obs_noise.state()])));
+        named.push((
+            "book.trace_hash".into(),
+            encode_u64s("trace_hash", &[b.timeline.replay_hash()]),
+        ));
         // Round records + metric series (f64 clocks stored bit-exactly).
         let rr: Vec<i32> = b.rounds.iter().map(|r| r.round as i32).collect();
         let rt: Vec<f64> = b.rounds.iter().map(|r| r.sim_time).collect();
@@ -1412,6 +1529,22 @@ impl<'e> Session<'e> {
         let est_values = decode_f64s(store.get("book.est.values")?)?;
         let est_samples = decode_u64s(store.get("book.est.samples")?)?;
         b.estimator.restore_state(&est_values, &est_samples)?;
+        // Environment timeline: `Session::new` above re-synthesized the
+        // generators from the spec (erroring if a replay trace file is
+        // missing); restore their mutable state and verify the replay
+        // content hash so a changed trace file fails loudly instead of
+        // silently desyncing the remaining trajectory.
+        let timeline_words = decode_u64s(store.get("book.timeline")?)?;
+        b.timeline.restore_state(&timeline_words)?;
+        b.obs_noise.restore_state(one_u64(&store, "book.obs_noise")?);
+        let saved_hash = one_u64(&store, "book.trace_hash")?;
+        if saved_hash != b.timeline.replay_hash() {
+            bail!(
+                "checkpoint was taken against a different replay trace file \
+                 (content hash {saved_hash:#x} vs {:#x}) — refusing to resume",
+                b.timeline.replay_hash()
+            );
+        }
 
         let rr = store.get("book.rounds.round")?.as_i32()?.to_vec();
         let rt = decode_f64s(store.get("book.rounds.time")?)?;

@@ -9,6 +9,7 @@ use crate::config::ClientConfig;
 use crate::devices::ServerProfile;
 use crate::model::ModelDims;
 use crate::simclock::SequentialResource;
+use crate::trace::{EnvTimeline, NoisyObservation};
 
 /// Timing components of one client's step (diagnostics + telemetry).
 #[derive(Debug, Clone, Copy, Default)]
@@ -39,6 +40,50 @@ impl StepTiming {
             t_bwd_comm: j.bwd_comm_time,
             t_bwd: j.client_bwd_time,
         }
+    }
+
+    /// These timings as the estimator would *observe* them under
+    /// multiplicative measurement noise: one lognormal factor per
+    /// estimator channel (arrival, server, backward, downlink), drawn
+    /// in that fixed order from the checkpointed noise RNG.  Wait is
+    /// queue-derived, not measured, and stays exact.
+    pub fn noisy(&self, noise: &mut NoisyObservation) -> Self {
+        let (fa, fs, fb, fc) = (noise.factor(), noise.factor(), noise.factor(), noise.factor());
+        Self {
+            t_fwd: self.t_fwd * fa,
+            t_fwd_comm: self.t_fwd_comm * fa,
+            t_wait: self.t_wait,
+            t_server: self.t_server * fs,
+            t_bwd_comm: self.t_bwd_comm * fc,
+            t_bwd: self.t_bwd * fb,
+        }
+    }
+}
+
+/// `base` (a static eq. 10–12 job) under the environment's current
+/// multipliers: client-side compute scales by `1/mfu_mult`, both comm
+/// legs by `1/link_mult`; server time is unaffected.  The capability
+/// stays in the base job's key *family* — it is multiplied by
+/// `mfu_mult`, so oracle jobs keep Alg. 2's canonical `N_c / C_u` key
+/// (reported capability, now at its current-time effective value) and
+/// identity multipliers reproduce the static job's key bit-for-bit.
+/// Changing the key semantics here would make an active-but-idle
+/// timeline (e.g. Markov churn, whose multipliers are constant 1)
+/// schedule differently from the equivalent static run.
+pub fn scaled_job(base: &JobInfo, mfu_mult: f64, link_mult: f64) -> JobInfo {
+    let m = mfu_mult.max(1e-6);
+    let l = link_mult.max(1e-6);
+    let t_fwd = (base.arrival - base.bwd_comm_time) / m;
+    let comm = base.bwd_comm_time / l;
+    let bwd = base.client_bwd_time / m;
+    JobInfo {
+        client: base.client,
+        arrival: t_fwd + comm,
+        server_time: base.server_time,
+        client_bwd_time: bwd,
+        bwd_comm_time: comm,
+        n_client_adapters: base.n_client_adapters,
+        compute_capability: base.compute_capability * m,
     }
 }
 
@@ -175,6 +220,28 @@ pub fn sfl_step_with_jobs(
     (step_time, timings)
 }
 
+/// [`sfl_step_with_jobs`] for the session's round loop: `jobs[i]` is
+/// participant `participants[i]`'s (possibly environment-scaled) job,
+/// cuts are indexed from the full per-client table, and only the step
+/// completion time comes back — no per-round `Vec` of timings, no
+/// participant gathers.
+pub fn sfl_step_for(
+    jobs: &[JobInfo],
+    dims: &ModelDims,
+    cuts: &[usize],
+    participants: &[usize],
+    server: &ServerProfile,
+) -> f64 {
+    debug_assert_eq!(jobs.len(), participants.len());
+    let concurrency = jobs.len();
+    let mut step_time = 0.0f64;
+    for (j, &u) in jobs.iter().zip(participants.iter()) {
+        let t_server = server.compute_time(dims.server_flops(cuts[u]), concurrency);
+        step_time = step_time.max(j.arrival + t_server + j.bwd_comm_time + j.client_bwd_time);
+    }
+    step_time
+}
+
 /// One *round* of **SL** (sequential split learning): clients run one at
 /// a time, each doing `steps` local mini-batch steps, then the client
 /// model is relayed to the next client through the server.
@@ -207,6 +274,45 @@ pub fn sl_round(
     total
 }
 
+/// [`sl_round`] for the session's round loop: participants are indices
+/// into the *full* client/cut tables (no per-round `ClientConfig`
+/// clones), and the environment timeline's current multipliers scale
+/// client compute (`1/mfu_mult`) and both comm legs (`1/link_mult`).
+/// With the identity participants and an inactive timeline this equals
+/// [`sl_round`] exactly (tested below).
+pub fn sl_round_for(
+    dims: &ModelDims,
+    clients: &[ClientConfig],
+    cuts: &[usize],
+    server: &ServerProfile,
+    steps: usize,
+    participants: &[usize],
+    env: &EnvTimeline,
+) -> f64 {
+    let mut total = 0.0f64;
+    let max_cut = participants.iter().map(|&u| cuts[u]).max().unwrap_or(1);
+    let handoff_bytes = dims.lora_bytes(max_cut);
+    for (i, &u) in participants.iter().enumerate() {
+        let c = &clients[u];
+        let k = cuts[u];
+        let m = env.mfu_mult(u).max(1e-6);
+        let l = env.link_mult(u).max(1e-6);
+        let per_step = c.device.compute_time(dims.client_fwd_flops(k)) / m
+            + c.link.transfer_time(dims.activation_bytes()) / l
+            + server.compute_time(dims.server_flops(k), 1)
+            + c.link.transfer_time(dims.activation_bytes()) / l
+            + c.device.compute_time(dims.client_bwd_flops(k)) / m;
+        total += steps as f64 * per_step;
+        if i + 1 < participants.len() {
+            let v = participants[i + 1];
+            let lv = env.link_mult(v).max(1e-6);
+            total += c.link.transfer_time(handoff_bytes) / l
+                + clients[v].link.transfer_time(handoff_bytes) / lv;
+        }
+    }
+    total
+}
+
 /// LoRA aggregation-phase time (paper steps 2a–2c): parallel uploads of
 /// client adapters, negligible server aggregation, parallel downloads.
 pub fn aggregation_time(dims: &ModelDims, clients: &[ClientConfig], cuts: &[usize]) -> f64 {
@@ -215,6 +321,25 @@ pub fn aggregation_time(dims: &ModelDims, clients: &[ClientConfig], cuts: &[usiz
         .zip(cuts.iter())
         .map(|(c, &k)| {
             c.link.transfer_time(dims.lora_bytes(k)) * 2.0 // up + down
+        })
+        .fold(0.0, f64::max)
+}
+
+/// [`aggregation_time`] for the session's round loop: participants are
+/// indices into the full tables (no per-round clones) and the current
+/// link multipliers scale each client's transfer.
+pub fn aggregation_time_for(
+    dims: &ModelDims,
+    clients: &[ClientConfig],
+    cuts: &[usize],
+    participants: &[usize],
+    env: &EnvTimeline,
+) -> f64 {
+    participants
+        .iter()
+        .map(|&u| {
+            clients[u].link.transfer_time(dims.lora_bytes(cuts[u])) * 2.0
+                / env.link_mult(u).max(1e-6)
         })
         .fold(0.0, f64::max)
 }
@@ -327,5 +452,85 @@ mod tests {
             .map(|(c, &k)| c.link.transfer_time(dims.lora_bytes(k)) * 2.0)
             .fold(0.0, f64::max);
         assert!((t - worst).abs() < 1e-12);
+    }
+
+    #[test]
+    fn indexed_variants_match_the_cloning_originals() {
+        // The session's round loop calls the `_for` variants with
+        // participant indices into the full tables; with the identity
+        // participants and an inactive timeline they must equal the
+        // slice-based originals bit-for-bit.
+        let (dims, clients, cuts, server) = setup();
+        let ids: Vec<usize> = (0..clients.len()).collect();
+        let env = EnvTimeline::inactive();
+        let agg = aggregation_time(&dims, &clients, &cuts);
+        let agg_for = aggregation_time_for(&dims, &clients, &cuts, &ids, &env);
+        assert_eq!(agg.to_bits(), agg_for.to_bits());
+        let sl = sl_round(&dims, &clients, &cuts, &server, 3);
+        let sl_for = sl_round_for(&dims, &clients, &cuts, &server, 3, &ids, &env);
+        assert_eq!(sl.to_bits(), sl_for.to_bits());
+        let jobs = build_jobs(&dims, &clients, &cuts, &server);
+        let (sfl, _) = sfl_step_with_jobs(&jobs, &dims, &cuts, &server);
+        let sfl_for = sfl_step_for(&jobs, &dims, &cuts, &ids, &server);
+        assert_eq!(sfl.to_bits(), sfl_for.to_bits());
+        // And on a participant *subset* they index the global tables.
+        let subset = vec![1usize, 4];
+        let sub_clients: Vec<ClientConfig> =
+            subset.iter().map(|&u| clients[u].clone()).collect();
+        let sub_cuts: Vec<usize> = subset.iter().map(|&u| cuts[u]).collect();
+        let a = aggregation_time(&dims, &sub_clients, &sub_cuts);
+        let b = aggregation_time_for(&dims, &clients, &cuts, &subset, &env);
+        assert_eq!(a.to_bits(), b.to_bits());
+        let a = sl_round(&dims, &sub_clients, &sub_cuts, &server, 2);
+        let b = sl_round_for(&dims, &clients, &cuts, &server, 2, &subset, &env);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn scaled_job_scales_client_side_components_only() {
+        let (dims, clients, cuts, server) = setup();
+        let base = build_jobs(&dims, &clients, &cuts, &server);
+        let j = scaled_job(&base[0], 2.0, 0.5);
+        // MFU ×2 halves client compute; link ×0.5 doubles comm.
+        let t_fwd0 = base[0].arrival - base[0].bwd_comm_time;
+        assert!((j.client_bwd_time - base[0].client_bwd_time / 2.0).abs() < 1e-15);
+        assert!((j.bwd_comm_time - base[0].bwd_comm_time * 2.0).abs() < 1e-15);
+        assert!((j.arrival - (t_fwd0 / 2.0 + base[0].bwd_comm_time * 2.0)).abs() < 1e-12);
+        assert_eq!(j.server_time.to_bits(), base[0].server_time.to_bits());
+        // The capability stays in the base key family, scaled to its
+        // current-time effective value — Alg. 2's N_c/C key halves.
+        assert_eq!(j.compute_capability.to_bits(), (base[0].compute_capability * 2.0).to_bits());
+        assert!((j.greedy_priority() - base[0].greedy_priority() / 2.0).abs() < 1e-9);
+        // Identity multipliers leave the timings unchanged (up to the
+        // fwd/comm recomposition of `arrival`, which is not bit-stable)
+        // and the greedy key bit-identical — an active-but-idle
+        // timeline must schedule exactly like the static run.
+        let id = scaled_job(&base[0], 1.0, 1.0);
+        assert!((id.arrival - base[0].arrival).abs() < 1e-12);
+        assert_eq!(id.client_bwd_time.to_bits(), base[0].client_bwd_time.to_bits());
+        assert_eq!(id.bwd_comm_time.to_bits(), base[0].bwd_comm_time.to_bits());
+        assert_eq!(id.compute_capability.to_bits(), base[0].compute_capability.to_bits());
+    }
+
+    #[test]
+    fn noisy_observation_perturbs_channels_multiplicatively() {
+        let (dims, clients, cuts, server) = setup();
+        let jobs = build_jobs(&dims, &clients, &cuts, &server);
+        let clean = StepTiming::from_job(&jobs[0]);
+        let mut off = NoisyObservation::new(5, 0.0);
+        let same = clean.noisy(&mut off);
+        assert_eq!(same.t_bwd.to_bits(), clean.t_bwd.to_bits());
+        let mut on = NoisyObservation::new(5, 0.5);
+        let noisy = clean.noisy(&mut on);
+        assert!(noisy.t_bwd > 0.0 && noisy.t_server > 0.0);
+        assert!(
+            (noisy.t_bwd - clean.t_bwd).abs() > 1e-12
+                || (noisy.t_server - clean.t_server).abs() > 1e-12,
+            "sigma=0.5 noise left every channel untouched"
+        );
+        // fwd and fwd_comm share the arrival factor (one channel).
+        assert!(
+            ((noisy.t_fwd / clean.t_fwd) - (noisy.t_fwd_comm / clean.t_fwd_comm)).abs() < 1e-9
+        );
     }
 }

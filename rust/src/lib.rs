@@ -31,4 +31,5 @@ pub mod runtime;
 pub mod simclock;
 pub mod telemetry;
 pub mod tensor;
+pub mod trace;
 pub mod util;

@@ -16,8 +16,13 @@
 //! the client list (`fleet::FleetSpec`); --max-participants N bounds
 //! each round's cohort; --oracle-timing pins the scheduler to the
 //! analytic eq. 10–12 timings instead of the online TimingEstimator.
+//! Non-stationary environments: --trace
+//! none|random_walk|diurnal|markov|replay --trace-seed N
+//! --trace-replay FILE drive the `trace::EnvTimeline` (time-varying
+//! MFU/link multipliers + availability churn), and --obs-noise-sigma S
+//! adds lognormal measurement noise to what the estimator observes.
 //! `run` also accepts --jsonl FILE to stream per-round JSON telemetry
-//! (a Session observer).
+//! (a Session observer; env snapshots included when a trace runs).
 
 use anyhow::{bail, Result};
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
@@ -33,7 +38,8 @@ use std::path::{Path, PathBuf};
 const USAGE: &str = "usage: sfl [--config mini|small] [--artifacts DIR] [--out DIR] \
 [--experiment FILE] [--seed N] [--dropout P] [--fleet N] [--fleet-preset paper|lognormal|zipf] \
 [--fleet-seed N] [--fleet-mfu-sigma S] [--max-participants N] \
-<run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
+[--trace none|random_walk|diurnal|markov|replay] [--trace-seed N] [--trace-replay FILE] \
+[--obs-noise-sigma S] <run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
 [--scheduler proposed|fifo|wf|random] [--max-rounds N] [--quiet] [--oracle-timing] \
 [--jsonl FILE]";
 
@@ -72,6 +78,23 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if args.has("oracle-timing") {
         cfg.train.oracle_timing = true;
+    }
+    // Environment-trace knobs (non-stationary fleet dynamics).
+    if let Some(kind) = args.get("trace") {
+        cfg.trace.kind = kind.parse()?;
+    } else if ["trace-seed", "trace-replay"].iter().any(|f| args.has(f)) {
+        bail!("--trace-seed/--trace-replay require --trace KIND");
+    }
+    if let Some(s) = args.get_parse::<u64>("trace-seed")? {
+        cfg.trace.seed = s;
+    }
+    if let Some(p) = args.get("trace-replay") {
+        cfg.trace.replay_path = p.to_string();
+    }
+    // Measurement noise is independent of the timeline kind — it also
+    // applies to stationary fleets (estimator robustness studies).
+    if let Some(s) = args.get_parse::<f64>("obs-noise-sigma")? {
+        cfg.trace.obs_noise_sigma = s;
     }
     cfg.validate()?;
     Ok(cfg)

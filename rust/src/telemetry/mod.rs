@@ -51,11 +51,19 @@ impl<W: Write> RoundObserver for JsonLinesObserver<W> {
             ),
             None => String::new(),
         };
+        // Per-round environment snapshot (present when a trace runs).
+        let env = match &r.env {
+            Some(s) => format!(
+                ",\"env\":{{\"mfu_mean\":{:.6},\"link_mean\":{:.6},\"available\":{}}}",
+                s.mfu_mean, s.link_mean, s.available
+            ),
+            None => String::new(),
+        };
         let wrote = writeln!(
             self.out,
             "{{\"event\":\"round\",\"scheme\":\"{}\",\"scheduler\":\"{}\",\"round\":{},\
              \"sim_time\":{:.6},\"step_time\":{:.6},\"mean_loss\":{:.6},\
-             \"participants\":{}{eval}}}",
+             \"participants\":{}{env}{eval}}}",
             r.scheme,
             r.scheduler,
             r.round,
@@ -249,6 +257,7 @@ mod tests {
                 step_time: 3.125,
                 mean_loss: 1.25,
                 participants: vec![0, 1, 2],
+                env: None,
                 eval: Some(EvalPoint { acc: 0.5, f1: 0.4, converged: false }),
             });
             let r = fake_run();
@@ -259,7 +268,33 @@ mod tests {
         assert!(s.contains("\"event\":\"round\""));
         assert!(s.contains("\"step_time\":3.125000"));
         assert!(s.contains("\"participants\":3"));
+        assert!(!s.contains("\"env\""), "static run must not emit an env snapshot");
         assert!(s.contains("\"acc\":0.500000"));
         assert!(s.contains("\"event\":\"complete\""));
+    }
+
+    #[test]
+    fn json_lines_observer_emits_env_snapshot_when_tracing() {
+        use crate::coordinator::RoundReport;
+        use crate::trace::EnvSnapshot;
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut obs = JsonLinesObserver::new(&mut buf);
+            obs.on_round(&RoundReport {
+                scheme: SchemeKind::Ours,
+                scheduler: SchedulerLabel::Scheduled(SchedulerKind::Proposed),
+                round: 1,
+                sim_time: 2.0,
+                step_time: 1.0,
+                mean_loss: 0.5,
+                participants: vec![0, 2],
+                env: Some(EnvSnapshot { mfu_mean: 0.9125, link_mean: 1.05, available: 2 }),
+                eval: None,
+            });
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("\"env\":{\"mfu_mean\":0.912500"), "{s}");
+        assert!(s.contains("\"link_mean\":1.050000"), "{s}");
+        assert!(s.contains("\"available\":2"), "{s}");
     }
 }

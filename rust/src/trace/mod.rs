@@ -1,0 +1,769 @@
+//! Environment traces — non-stationary fleet dynamics.
+//!
+//! The scheduling results (Alg. 2, eqs. 10–12) assume static per-device
+//! capability, but real mobile fleets drift: thermal throttling moves
+//! MFU, wireless links fluctuate, and devices come and go.  This module
+//! synthesizes exactly that drift as *deterministic, seeded traces* —
+//! every fleet parameter becomes a function of simulated time:
+//!
+//! - [`Trace`] is the generator contract: `value_at(t)` advances the
+//!   trace's internal state to virtual time `t` and returns its value.
+//!   Sampling at the same `t` twice returns the same value without
+//!   consuming randomness, so checkpointed sessions resume bit-exactly.
+//! - Generators: [`Constant`], [`RandomWalk`] (bounded, mean-reverting),
+//!   [`Diurnal`] (sinusoid + multiplicative jitter), [`MarkovOnOff`]
+//!   (availability churn with exponential holding times), and
+//!   [`Replay`] (a step function read from a jsonl trace file).
+//! - [`timeline::EnvTimeline`] composes per-client generators into the
+//!   fleet view the session samples once per round.
+//! - [`NoisyObservation`] injects lognormal measurement noise between
+//!   the simulated "true" timings and what the
+//!   `TimingEstimator` observes.
+//!
+//! All randomness flows through the in-tree checkpointable
+//! [`Rng`](crate::tensor::rng::Rng); each generator's mutable state is a
+//! flat `u64` word list (`save_state`/`restore_state`), persisted with
+//! the session checkpoint.
+
+pub mod timeline;
+
+pub use timeline::{EnvSnapshot, EnvTimeline};
+
+use crate::tensor::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+use std::str::FromStr;
+
+/// Which trace family drives the environment (`[trace]` config section,
+/// `--trace` CLI flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceKind {
+    /// Static environment (the paper's setting) — no timeline runs.
+    #[default]
+    None,
+    /// Bounded mean-reverting random walks on MFU and link multipliers.
+    RandomWalk,
+    /// Sinusoidal MFU/link cycles with per-sample jitter (per-client
+    /// phases) — daily thermal/usage waves.
+    Diurnal,
+    /// Two-state availability churn with exponential holding times;
+    /// multipliers stay nominal.
+    Markov,
+    /// A shared MFU-multiplier trajectory replayed from a jsonl file.
+    Replay,
+}
+
+impl FromStr for TraceKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Ok(Self::None),
+            "random_walk" | "random-walk" | "walk" => Ok(Self::RandomWalk),
+            "diurnal" => Ok(Self::Diurnal),
+            "markov" => Ok(Self::Markov),
+            "replay" => Ok(Self::Replay),
+            other => bail!("unknown trace kind {other:?} (none|random_walk|diurnal|markov|replay)"),
+        }
+    }
+}
+
+impl std::fmt::Display for TraceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::None => "none",
+            Self::RandomWalk => "random_walk",
+            Self::Diurnal => "diurnal",
+            Self::Markov => "markov",
+            Self::Replay => "replay",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A seeded recipe for the environment timeline.  Same spec ⇒
+/// bit-identical trajectory (given the same per-round sample times).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    pub kind: TraceKind,
+    pub seed: u64,
+    /// Random-walk step σ (per √second) of the per-client MFU multiplier.
+    pub mfu_sigma: f64,
+    /// Random-walk step σ (per √second) of the per-client link multiplier.
+    pub link_sigma: f64,
+    /// Mean-reversion rate toward 1.0 (per second) for the walks.
+    pub revert: f64,
+    /// Diurnal period in virtual seconds.
+    pub period: f64,
+    /// Diurnal amplitude (fraction of nominal, in [0, 0.95]).
+    pub amp: f64,
+    /// Diurnal per-sample multiplicative jitter σ.
+    pub jitter: f64,
+    /// Markov mean up-time (virtual seconds).
+    pub mean_up: f64,
+    /// Markov mean down-time (virtual seconds).
+    pub mean_down: f64,
+    /// Lognormal σ of the measurement noise applied to the timings the
+    /// estimator observes (0 disables — active even with `kind = none`).
+    pub obs_noise_sigma: f64,
+    /// jsonl trace file for `kind = replay`.
+    pub replay_path: String,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self {
+            kind: TraceKind::None,
+            seed: 7,
+            mfu_sigma: 0.05,
+            link_sigma: 0.05,
+            revert: 0.02,
+            period: 600.0,
+            amp: 0.3,
+            jitter: 0.02,
+            mean_up: 300.0,
+            mean_down: 60.0,
+            obs_noise_sigma: 0.0,
+            replay_path: String::new(),
+        }
+    }
+}
+
+impl TraceSpec {
+    /// Whether any environment machinery must run (timeline or noise).
+    pub fn is_static(&self) -> bool {
+        self.kind == TraceKind::None && self.obs_noise_sigma <= 0.0
+    }
+}
+
+/// FNV-1a over raw bytes — the stable content fingerprint used to
+/// detect a replay trace file changing between checkpoint and resume.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// A deterministic function of simulated time with checkpointable
+/// internal state.
+///
+/// `value_at(t)` must be called with non-decreasing `t` (the session
+/// samples once per round at the sim clock).  Calling it again at the
+/// same `t` returns the stored value without consuming randomness —
+/// the property that makes checkpoint/resume bit-exact.
+pub trait Trace {
+    /// Advance to virtual time `t` and return the trace value.
+    fn value_at(&mut self, t: f64) -> f64;
+    /// Number of `u64` words `save_state` appends.
+    fn state_words(&self) -> usize;
+    /// Append the mutable state (RNG bits, current value, last sample
+    /// time) to `out`.
+    fn save_state(&self, out: &mut Vec<u64>);
+    /// Restore state saved by [`Trace::save_state`] (`words` holds
+    /// exactly [`Trace::state_words`] entries).
+    fn restore_state(&mut self, words: &[u64]) -> Result<()>;
+}
+
+fn words_exact<'w>(words: &'w [u64], n: usize, who: &str) -> Result<&'w [u64]> {
+    if words.len() != n {
+        bail!("{who} state has {} words, expected {n}", words.len());
+    }
+    Ok(words)
+}
+
+/// The degenerate trace: always `value` (stateless).
+#[derive(Debug, Clone)]
+pub struct Constant {
+    pub value: f64,
+}
+
+impl Trace for Constant {
+    fn value_at(&mut self, _t: f64) -> f64 {
+        self.value
+    }
+
+    fn state_words(&self) -> usize {
+        0
+    }
+
+    fn save_state(&self, _out: &mut Vec<u64>) {}
+
+    fn restore_state(&mut self, words: &[u64]) -> Result<()> {
+        words_exact(words, 0, "Constant").map(|_| ())
+    }
+}
+
+/// Bounded mean-reverting random walk (discrete OU step): each sample
+/// at `t` advances the value by `revert·dt` pull toward `mean` plus a
+/// `sigma·√dt` Gaussian step, clamped to `[lo, hi]`.
+#[derive(Debug, Clone)]
+pub struct RandomWalk {
+    rng: Rng,
+    value: f64,
+    mean: f64,
+    sigma: f64,
+    revert: f64,
+    lo: f64,
+    hi: f64,
+    last_t: f64,
+}
+
+impl RandomWalk {
+    pub fn new(seed: u64, mean: f64, sigma: f64, revert: f64, lo: f64, hi: f64) -> Self {
+        Self { rng: Rng::new(seed), value: mean, mean, sigma, revert, lo, hi, last_t: 0.0 }
+    }
+}
+
+impl Trace for RandomWalk {
+    fn value_at(&mut self, t: f64) -> f64 {
+        if t > self.last_t {
+            let dt = t - self.last_t;
+            // Cap the reversion pull at 1 so huge gaps between samples
+            // cannot overshoot past the mean and oscillate.
+            let pull = (self.revert * dt).min(1.0);
+            let step = self.sigma * dt.sqrt() * self.rng.normal();
+            let next = self.value + pull * (self.mean - self.value) + step;
+            self.value = next.clamp(self.lo, self.hi);
+            self.last_t = t;
+        }
+        self.value
+    }
+
+    fn state_words(&self) -> usize {
+        3
+    }
+
+    fn save_state(&self, out: &mut Vec<u64>) {
+        out.extend_from_slice(&[self.rng.state(), self.value.to_bits(), self.last_t.to_bits()]);
+    }
+
+    fn restore_state(&mut self, words: &[u64]) -> Result<()> {
+        let w = words_exact(words, 3, "RandomWalk")?;
+        self.rng = Rng::from_state(w[0]);
+        self.value = f64::from_bits(w[1]);
+        self.last_t = f64::from_bits(w[2]);
+        Ok(())
+    }
+}
+
+/// Sinusoid around `base` with per-sample multiplicative lognormal
+/// jitter: `base · (1 + amp·sin(2πt/period + phase)) · e^{jitter·N}`,
+/// floored at a small positive value.
+#[derive(Debug, Clone)]
+pub struct Diurnal {
+    rng: Rng,
+    base: f64,
+    amp: f64,
+    period: f64,
+    phase: f64,
+    jitter: f64,
+    value: f64,
+    last_t: f64,
+}
+
+impl Diurnal {
+    pub fn new(seed: u64, base: f64, amp: f64, period: f64, phase: f64, jitter: f64) -> Self {
+        let value = base * (1.0 + amp * phase.sin());
+        Self { rng: Rng::new(seed), base, amp, period, phase, jitter, value, last_t: 0.0 }
+    }
+}
+
+impl Trace for Diurnal {
+    fn value_at(&mut self, t: f64) -> f64 {
+        if t > self.last_t {
+            let s = self.base
+                * (1.0 + self.amp * (std::f64::consts::TAU * t / self.period + self.phase).sin());
+            self.value = (s * self.rng.lognormal(0.0, self.jitter)).max(0.05);
+            self.last_t = t;
+        }
+        self.value
+    }
+
+    fn state_words(&self) -> usize {
+        3
+    }
+
+    fn save_state(&self, out: &mut Vec<u64>) {
+        out.extend_from_slice(&[self.rng.state(), self.value.to_bits(), self.last_t.to_bits()]);
+    }
+
+    fn restore_state(&mut self, words: &[u64]) -> Result<()> {
+        let w = words_exact(words, 3, "Diurnal")?;
+        self.rng = Rng::from_state(w[0]);
+        self.value = f64::from_bits(w[1]);
+        self.last_t = f64::from_bits(w[2]);
+        Ok(())
+    }
+}
+
+/// Two-state availability churn: a continuous-time Markov chain with
+/// exponential holding times (means `mean_up`/`mean_down`), observed at
+/// the sample instants via its *exact* transition probabilities
+/// `P(flip | dt) = (rate_out/s)·(1 − e^(−s·dt))` with
+/// `s = 1/mean_up + 1/mean_down` — so the long-run availability equals
+/// [`MarkovOnOff::stationary_availability`] at *any* sampling interval,
+/// including the round-scale gaps a 100-client makespan produces (a
+/// naive single-flip `1 − e^(−dt/hold)` discretization skews the
+/// stationary distribution once `dt` approaches the holding times).
+/// `value_at` returns 1.0 (up) or 0.0 (down).  The initial state is
+/// drawn from the stationary distribution.
+#[derive(Debug, Clone)]
+pub struct MarkovOnOff {
+    rng: Rng,
+    up: bool,
+    mean_up: f64,
+    mean_down: f64,
+    last_t: f64,
+}
+
+impl MarkovOnOff {
+    pub fn new(seed: u64, mean_up: f64, mean_down: f64) -> Self {
+        let mut rng = Rng::new(seed);
+        let up = rng.uniform() < mean_up / (mean_up + mean_down);
+        Self { rng, up, mean_up, mean_down, last_t: 0.0 }
+    }
+
+    /// The chain's long-run fraction of up time.
+    pub fn stationary_availability(&self) -> f64 {
+        self.mean_up / (self.mean_up + self.mean_down)
+    }
+}
+
+impl Trace for MarkovOnOff {
+    fn value_at(&mut self, t: f64) -> f64 {
+        if t > self.last_t {
+            let dt = t - self.last_t;
+            // Exact 2-state CTMC transition probability over dt:
+            // P(up→down) = (λ_down/s)(1−e^{−s·dt}), λ_down = 1/mean_up,
+            // s = 1/mean_up + 1/mean_down — detailed balance holds for
+            // any dt, so the observed chain stays stationary-correct.
+            let rate_out = 1.0 / if self.up { self.mean_up } else { self.mean_down };
+            let s = 1.0 / self.mean_up + 1.0 / self.mean_down;
+            let p_flip = (rate_out / s) * (1.0 - (-s * dt).exp());
+            if self.rng.uniform() < p_flip {
+                self.up = !self.up;
+            }
+            self.last_t = t;
+        }
+        if self.up {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn state_words(&self) -> usize {
+        3
+    }
+
+    fn save_state(&self, out: &mut Vec<u64>) {
+        out.extend_from_slice(&[self.rng.state(), self.up as u64, self.last_t.to_bits()]);
+    }
+
+    fn restore_state(&mut self, words: &[u64]) -> Result<()> {
+        let w = words_exact(words, 3, "MarkovOnOff")?;
+        self.rng = Rng::from_state(w[0]);
+        self.up = w[1] != 0;
+        self.last_t = f64::from_bits(w[2]);
+        Ok(())
+    }
+}
+
+/// A recorded trajectory replayed as a step function: `value_at(t)` is
+/// the value of the last point with timestamp ≤ `t` (the first point's
+/// value before the recording starts).  Points are shared (`Rc`) so a
+/// fleet-wide replay costs one parse.  Stateless — the jsonl content is
+/// the whole trace, which is why resume fingerprints the file content.
+#[derive(Debug, Clone)]
+pub struct Replay {
+    points: Rc<Vec<(f64, f64)>>,
+}
+
+impl Replay {
+    /// Build from `(t, value)` points; `t` must be non-decreasing and
+    /// every value finite.
+    pub fn from_points(points: Vec<(f64, f64)>) -> Result<Self> {
+        if points.is_empty() {
+            bail!("replay trace needs at least one point");
+        }
+        for (i, &(t, v)) in points.iter().enumerate() {
+            if !t.is_finite() || !v.is_finite() {
+                bail!("replay point {i} is not finite: ({t}, {v})");
+            }
+            if i > 0 && t < points[i - 1].0 {
+                bail!("replay timestamps must be non-decreasing (point {i}: {t})");
+            }
+        }
+        Ok(Self { points: Rc::new(points) })
+    }
+
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    /// Parse the jsonl trace format: one `{"t": <secs>, "v": <value>}`
+    /// object per line (blank lines ignored).
+    pub fn parse_jsonl(text: &str) -> Result<Self> {
+        let mut points = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let body = line
+                .strip_prefix('{')
+                .and_then(|s| s.strip_suffix('}'))
+                .with_context(|| format!("trace line {}: expected a JSON object", lineno + 1))?;
+            let (mut t, mut v) = (None, None);
+            for part in body.split(',') {
+                let (key, val) = part
+                    .split_once(':')
+                    .with_context(|| format!("trace line {}: expected key:value", lineno + 1))?;
+                let num: f64 = val.trim().parse().with_context(|| {
+                    format!("trace line {}: bad number {:?}", lineno + 1, val.trim())
+                })?;
+                match key.trim().trim_matches('"') {
+                    "t" => t = Some(num),
+                    "v" => v = Some(num),
+                    other => bail!("trace line {}: unknown key {other:?}", lineno + 1),
+                }
+            }
+            match (t, v) {
+                (Some(t), Some(v)) => points.push((t, v)),
+                _ => bail!("trace line {}: needs both \"t\" and \"v\"", lineno + 1),
+            }
+        }
+        Self::from_points(points)
+    }
+
+    /// Serialize back to the jsonl format ([`Replay::parse_jsonl`]'s
+    /// inverse; round-trips bit-exactly through the `{:?}` float form).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for &(t, v) in self.points.iter() {
+            out.push_str(&format!("{{\"t\": {t:?}, \"v\": {v:?}}}\n"));
+        }
+        out
+    }
+
+    /// Load from a jsonl file, returning the trace and the raw content
+    /// hash (see [`fnv1a`]) for resume verification.
+    pub fn load(path: &Path) -> Result<(Self, u64)> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading replay trace {}", path.display()))?;
+        let hash = fnv1a(text.as_bytes());
+        let replay = Self::parse_jsonl(&text)
+            .with_context(|| format!("parsing replay trace {}", path.display()))?;
+        Ok((replay, hash))
+    }
+}
+
+impl Trace for Replay {
+    fn value_at(&mut self, t: f64) -> f64 {
+        // Last point with timestamp <= t; the first value before that.
+        match self.points.partition_point(|&(pt, _)| pt <= t) {
+            0 => self.points[0].1,
+            i => self.points[i - 1].1,
+        }
+    }
+
+    fn state_words(&self) -> usize {
+        0
+    }
+
+    fn save_state(&self, _out: &mut Vec<u64>) {}
+
+    fn restore_state(&mut self, words: &[u64]) -> Result<()> {
+        words_exact(words, 0, "Replay").map(|_| ())
+    }
+}
+
+/// Closed set of generators the timeline composes (enum, not `Box<dyn>`,
+/// so per-client traces stay allocation-light at fleet scale).
+#[derive(Debug, Clone)]
+pub enum TraceGen {
+    Constant(Constant),
+    Walk(RandomWalk),
+    Diurnal(Diurnal),
+    OnOff(MarkovOnOff),
+    Replay(Replay),
+}
+
+impl Trace for TraceGen {
+    fn value_at(&mut self, t: f64) -> f64 {
+        match self {
+            Self::Constant(g) => g.value_at(t),
+            Self::Walk(g) => g.value_at(t),
+            Self::Diurnal(g) => g.value_at(t),
+            Self::OnOff(g) => g.value_at(t),
+            Self::Replay(g) => g.value_at(t),
+        }
+    }
+
+    fn state_words(&self) -> usize {
+        match self {
+            Self::Constant(g) => g.state_words(),
+            Self::Walk(g) => g.state_words(),
+            Self::Diurnal(g) => g.state_words(),
+            Self::OnOff(g) => g.state_words(),
+            Self::Replay(g) => g.state_words(),
+        }
+    }
+
+    fn save_state(&self, out: &mut Vec<u64>) {
+        match self {
+            Self::Constant(g) => g.save_state(out),
+            Self::Walk(g) => g.save_state(out),
+            Self::Diurnal(g) => g.save_state(out),
+            Self::OnOff(g) => g.save_state(out),
+            Self::Replay(g) => g.save_state(out),
+        }
+    }
+
+    fn restore_state(&mut self, words: &[u64]) -> Result<()> {
+        match self {
+            Self::Constant(g) => g.restore_state(words),
+            Self::Walk(g) => g.restore_state(words),
+            Self::Diurnal(g) => g.restore_state(words),
+            Self::OnOff(g) => g.restore_state(words),
+            Self::Replay(g) => g.restore_state(words),
+        }
+    }
+}
+
+/// Multiplicative lognormal measurement noise between the simulated
+/// true timings and what the estimator observes (`--obs-noise-sigma`).
+/// Inactive (`sigma ≤ 0`) draws nothing from the RNG, so enabling the
+/// knob never perturbs other streams.
+#[derive(Debug, Clone)]
+pub struct NoisyObservation {
+    rng: Rng,
+    sigma: f64,
+}
+
+impl NoisyObservation {
+    pub fn new(seed: u64, sigma: f64) -> Self {
+        Self { rng: Rng::new(seed), sigma }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.sigma > 0.0
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// One multiplicative noise factor (median 1).
+    pub fn factor(&mut self) -> f64 {
+        if self.sigma <= 0.0 {
+            1.0
+        } else {
+            self.rng.lognormal(0.0, self.sigma)
+        }
+    }
+
+    /// RNG state for checkpointing.
+    pub fn state(&self) -> u64 {
+        self.rng.state()
+    }
+
+    /// Restore from [`NoisyObservation::state`].
+    pub fn restore_state(&mut self, state: u64) {
+        self.rng = Rng::from_state(state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_kind_parsing_roundtrips() {
+        for kind in [
+            TraceKind::None,
+            TraceKind::RandomWalk,
+            TraceKind::Diurnal,
+            TraceKind::Markov,
+            TraceKind::Replay,
+        ] {
+            assert_eq!(kind.to_string().parse::<TraceKind>().unwrap(), kind);
+        }
+        assert_eq!("random-walk".parse::<TraceKind>().unwrap(), TraceKind::RandomWalk);
+        assert!("bogus".parse::<TraceKind>().is_err());
+    }
+
+    #[test]
+    fn constant_is_constant_and_stateless() {
+        let mut c = Constant { value: 1.5 };
+        assert_eq!(c.value_at(0.0), 1.5);
+        assert_eq!(c.value_at(1e9), 1.5);
+        let mut out = Vec::new();
+        c.save_state(&mut out);
+        assert!(out.is_empty());
+        assert!(c.restore_state(&[1]).is_err());
+    }
+
+    #[test]
+    fn random_walk_is_deterministic_bounded_and_mean_reverting() {
+        let mut a = RandomWalk::new(3, 1.0, 0.2, 0.05, 0.2, 5.0);
+        let mut b = RandomWalk::new(3, 1.0, 0.2, 0.05, 0.2, 5.0);
+        let mut sum = 0.0;
+        let n = 5_000;
+        for i in 1..=n {
+            let t = i as f64 * 2.0;
+            let (va, vb) = (a.value_at(t), b.value_at(t));
+            assert_eq!(va.to_bits(), vb.to_bits(), "walk not deterministic at t={t}");
+            assert!((0.2..=5.0).contains(&va), "walk out of bounds: {va}");
+            sum += va;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1.0).abs() < 0.35, "walk drifted off its mean: {mean}");
+    }
+
+    #[test]
+    fn resampling_the_same_time_consumes_no_randomness() {
+        let mut w = RandomWalk::new(9, 1.0, 0.1, 0.02, 0.2, 5.0);
+        let v1 = w.value_at(10.0);
+        let mut st = Vec::new();
+        w.save_state(&mut st);
+        let v2 = w.value_at(10.0);
+        let mut st2 = Vec::new();
+        w.save_state(&mut st2);
+        assert_eq!(v1.to_bits(), v2.to_bits());
+        assert_eq!(st, st2, "same-t sample must not advance the RNG");
+    }
+
+    #[test]
+    fn walk_state_roundtrip_resumes_bit_exactly() {
+        let mut a = RandomWalk::new(11, 1.0, 0.15, 0.03, 0.2, 5.0);
+        for i in 1..=7 {
+            a.value_at(i as f64 * 3.1);
+        }
+        let mut words = Vec::new();
+        a.save_state(&mut words);
+        let mut b = RandomWalk::new(11, 1.0, 0.15, 0.03, 0.2, 5.0);
+        b.restore_state(&words).unwrap();
+        for i in 8..=20 {
+            let t = i as f64 * 3.1;
+            assert_eq!(a.value_at(t).to_bits(), b.value_at(t).to_bits(), "diverged at t={t}");
+        }
+        assert!(b.restore_state(&words[..2]).is_err());
+    }
+
+    #[test]
+    fn diurnal_follows_its_period() {
+        // Jitter off: the sinusoid repeats every period.
+        let mut d = Diurnal::new(5, 1.0, 0.4, 100.0, 0.3, 0.0);
+        let v1 = d.value_at(30.0);
+        let v2 = d.value_at(130.0);
+        assert!((v1 - v2).abs() < 1e-9, "{v1} vs {v2}");
+        // Amplitude reached: values spread across the configured band.
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for i in 0..200 {
+            let v = d.value_at(131.0 + i as f64);
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        assert!(lo < 0.7 && hi > 1.3, "sinusoid band too narrow: {lo}..{hi}");
+    }
+
+    #[test]
+    fn markov_long_run_availability_matches_stationary_distribution() {
+        let mut m = MarkovOnOff::new(13, 300.0, 100.0);
+        let expect = m.stationary_availability();
+        assert!((expect - 0.75).abs() < 1e-12);
+        let mut up = 0usize;
+        let n = 40_000;
+        for i in 1..=n {
+            if m.value_at(i as f64 * 5.0) > 0.5 {
+                up += 1;
+            }
+        }
+        let frac = up as f64 / n as f64;
+        assert!((frac - expect).abs() < 0.06, "availability {frac} vs stationary {expect}");
+    }
+
+    #[test]
+    fn markov_state_roundtrip_resumes_bit_exactly() {
+        let mut a = MarkovOnOff::new(17, 50.0, 20.0);
+        for i in 1..=30 {
+            a.value_at(i as f64 * 7.0);
+        }
+        let mut words = Vec::new();
+        a.save_state(&mut words);
+        let mut b = MarkovOnOff::new(17, 50.0, 20.0);
+        b.restore_state(&words).unwrap();
+        for i in 31..=120 {
+            let t = i as f64 * 7.0;
+            assert_eq!(a.value_at(t).to_bits(), b.value_at(t).to_bits(), "diverged at t={t}");
+        }
+    }
+
+    #[test]
+    fn replay_roundtrips_through_jsonl() {
+        let r = Replay::from_points(vec![(0.0, 1.0), (5.0, 0.7), (9.5, 1.25)]).unwrap();
+        let text = r.to_jsonl();
+        let back = Replay::parse_jsonl(&text).unwrap();
+        assert_eq!(r.points().len(), back.points().len());
+        for (&(ta, va), &(tb, vb)) in r.points().iter().zip(back.points().iter()) {
+            assert_eq!(ta.to_bits(), tb.to_bits());
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
+        // Step-function semantics.
+        let mut back = back;
+        assert_eq!(back.value_at(-1.0), 1.0); // before the recording
+        assert_eq!(back.value_at(0.0), 1.0);
+        assert_eq!(back.value_at(4.999), 1.0);
+        assert_eq!(back.value_at(5.0), 0.7);
+        assert_eq!(back.value_at(100.0), 1.25);
+    }
+
+    #[test]
+    fn replay_rejects_malformed_input() {
+        assert!(Replay::from_points(vec![]).is_err());
+        assert!(Replay::from_points(vec![(1.0, 1.0), (0.5, 1.0)]).is_err());
+        assert!(Replay::from_points(vec![(0.0, f64::NAN)]).is_err());
+        assert!(Replay::parse_jsonl("not json\n").is_err());
+        assert!(Replay::parse_jsonl("{\"t\": 0.0}\n").is_err());
+        assert!(Replay::parse_jsonl("{\"t\": 0.0, \"x\": 1.0}\n").is_err());
+        assert!(Replay::load(Path::new("/nonexistent/trace.jsonl")).is_err());
+    }
+
+    #[test]
+    fn noisy_observation_is_median_one_and_inert_at_sigma_zero() {
+        let mut off = NoisyObservation::new(1, 0.0);
+        let st = off.state();
+        assert!(!off.is_active());
+        assert_eq!(off.factor(), 1.0);
+        assert_eq!(off.state(), st, "sigma=0 must not consume RNG");
+
+        let mut on = NoisyObservation::new(1, 0.3);
+        assert!(on.is_active());
+        let n = 10_000;
+        let mut below = 0usize;
+        for _ in 0..n {
+            let f = on.factor();
+            assert!(f > 0.0);
+            if f < 1.0 {
+                below += 1;
+            }
+        }
+        let frac = below as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.03, "lognormal median off 1: {frac}");
+        let mut twin = NoisyObservation::new(1, 0.3);
+        twin.restore_state(on.state());
+        assert_eq!(twin.factor().to_bits(), on.factor().to_bits());
+    }
+
+    #[test]
+    fn fnv1a_is_stable_and_content_sensitive() {
+        assert_eq!(fnv1a(b""), 0xCBF2_9CE4_8422_2325);
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+        assert_eq!(fnv1a(b"trace"), fnv1a(b"trace"));
+    }
+}

@@ -1,0 +1,427 @@
+//! The fleet-wide environment timeline: per-client MFU multipliers,
+//! link-bandwidth multipliers, and availability, each a [`Trace`]
+//! sampled once per round at the session's current virtual time.
+//!
+//! The timeline owns only *multipliers* — the synthesized fleet (and
+//! its hidden MFU jitter) stays the static baseline; the timeline
+//! modulates it over simulated time.  An unavailable client is
+//! *skipped* for the round (composing with dropout sampling), never
+//! removed from the fleet.
+//!
+//! Determinism contract: the timeline is re-synthesized from its
+//! [`TraceSpec`] on session construction (exactly like
+//! `fleet::FleetSpec`), and only the mutable per-generator state (RNG
+//! bits, current values, last sample time) is checkpointed — so a
+//! resumed session continues the identical trajectory bit-exactly.
+
+use super::{
+    Constant, Diurnal, MarkovOnOff, RandomWalk, Replay, Trace, TraceGen, TraceKind, TraceSpec,
+};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Multiplier clamp for MFU/link traces — keeps pathological walks from
+/// producing zero or absurd device speeds.
+const MULT_LO: f64 = 0.2;
+const MULT_HI: f64 = 5.0;
+
+/// One round's fleet-wide environment summary (telemetry).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnvSnapshot {
+    /// Mean MFU multiplier across the fleet.
+    pub mfu_mean: f64,
+    /// Mean link multiplier across the fleet.
+    pub link_mean: f64,
+    /// Number of currently available clients.
+    pub available: usize,
+}
+
+/// Per-client environment traces, sampled once per round.
+#[derive(Debug)]
+pub struct EnvTimeline {
+    kind: TraceKind,
+    mfu: Vec<TraceGen>,
+    link: Vec<TraceGen>,
+    avail: Vec<TraceGen>,
+    cur_mfu: Vec<f64>,
+    cur_link: Vec<f64>,
+    cur_avail: Vec<bool>,
+    /// FNV-1a of the replay file's content (0 for non-replay kinds) —
+    /// verified on resume so a changed or re-generated trace file fails
+    /// loudly instead of silently desyncing the trajectory.
+    replay_hash: u64,
+}
+
+impl EnvTimeline {
+    /// The static timeline: no traces, every multiplier 1, everyone
+    /// available.  What `kind = none` (the paper's setting) builds.
+    pub fn inactive() -> Self {
+        Self {
+            kind: TraceKind::None,
+            mfu: Vec::new(),
+            link: Vec::new(),
+            avail: Vec::new(),
+            cur_mfu: Vec::new(),
+            cur_link: Vec::new(),
+            cur_avail: Vec::new(),
+            replay_hash: 0,
+        }
+    }
+
+    /// Synthesize the timeline for `n` clients from a spec.  Same spec
+    /// ⇒ bit-identical trajectory (given the same sample times).
+    pub fn new(spec: &TraceSpec, n: usize) -> Result<Self> {
+        if spec.kind == TraceKind::None {
+            return Ok(Self::inactive());
+        }
+        let mut root = crate::tensor::rng::Rng::new(spec.seed ^ 0x7AC3_5EED);
+        let ones = || TraceGen::Constant(Constant { value: 1.0 });
+        let mut mfu = Vec::with_capacity(n);
+        let mut link = Vec::with_capacity(n);
+        let mut avail = Vec::with_capacity(n);
+        let mut replay_hash = 0u64;
+        match spec.kind {
+            TraceKind::None => unreachable!("handled above"),
+            TraceKind::RandomWalk => {
+                for _ in 0..n {
+                    mfu.push(TraceGen::Walk(RandomWalk::new(
+                        root.next_u64(),
+                        1.0,
+                        spec.mfu_sigma,
+                        spec.revert,
+                        MULT_LO,
+                        MULT_HI,
+                    )));
+                    link.push(TraceGen::Walk(RandomWalk::new(
+                        root.next_u64(),
+                        1.0,
+                        spec.link_sigma,
+                        spec.revert,
+                        MULT_LO,
+                        MULT_HI,
+                    )));
+                    avail.push(ones());
+                }
+            }
+            TraceKind::Diurnal => {
+                for _ in 0..n {
+                    let phase = root.uniform() * std::f64::consts::TAU;
+                    mfu.push(TraceGen::Diurnal(Diurnal::new(
+                        root.next_u64(),
+                        1.0,
+                        spec.amp,
+                        spec.period,
+                        phase,
+                        spec.jitter,
+                    )));
+                    let link_phase = root.uniform() * std::f64::consts::TAU;
+                    link.push(TraceGen::Diurnal(Diurnal::new(
+                        root.next_u64(),
+                        1.0,
+                        spec.amp * 0.5,
+                        spec.period,
+                        link_phase,
+                        spec.jitter,
+                    )));
+                    avail.push(ones());
+                }
+            }
+            TraceKind::Markov => {
+                for _ in 0..n {
+                    mfu.push(ones());
+                    link.push(ones());
+                    avail.push(TraceGen::OnOff(MarkovOnOff::new(
+                        root.next_u64(),
+                        spec.mean_up,
+                        spec.mean_down,
+                    )));
+                }
+            }
+            TraceKind::Replay => {
+                let (replay, hash) = Replay::load(Path::new(&spec.replay_path))?;
+                replay_hash = hash;
+                // One shared trajectory broadcast to the whole fleet:
+                // a single generator, sampled once per `advance` —
+                // not n clones doing n identical binary searches.
+                mfu.push(TraceGen::Replay(replay));
+            }
+        }
+        Ok(Self {
+            kind: spec.kind,
+            mfu,
+            link,
+            avail,
+            cur_mfu: vec![1.0; n],
+            cur_link: vec![1.0; n],
+            cur_avail: vec![true; n],
+            replay_hash,
+        })
+    }
+
+    /// Whether any traces run (false for the static `none` timeline).
+    pub fn is_active(&self) -> bool {
+        self.kind != TraceKind::None
+    }
+
+    pub fn kind(&self) -> TraceKind {
+        self.kind
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.cur_mfu.len()
+    }
+
+    /// Content hash of the replay trace file (0 unless `kind = replay`).
+    pub fn replay_hash(&self) -> u64 {
+        self.replay_hash
+    }
+
+    /// Sample every trace at virtual time `t` into the current
+    /// snapshot.  Called once per round; re-sampling the same `t`
+    /// changes nothing (and consumes no randomness).
+    pub fn advance(&mut self, t: f64) {
+        if self.kind == TraceKind::Replay {
+            // The fleet shares one replayed trajectory: sample it once
+            // and broadcast (link/avail snapshots stay at their
+            // constant 1.0 / true).
+            let v = self.mfu[0].value_at(t).clamp(MULT_LO, MULT_HI);
+            self.cur_mfu.fill(v);
+            return;
+        }
+        for u in 0..self.mfu.len() {
+            self.cur_mfu[u] = self.mfu[u].value_at(t).clamp(MULT_LO, MULT_HI);
+            self.cur_link[u] = self.link[u].value_at(t).clamp(MULT_LO, MULT_HI);
+            self.cur_avail[u] = self.avail[u].value_at(t) >= 0.5;
+        }
+    }
+
+    /// Client `u`'s current MFU multiplier (1 when inactive).
+    pub fn mfu_mult(&self, u: usize) -> f64 {
+        if self.cur_mfu.is_empty() {
+            1.0
+        } else {
+            self.cur_mfu[u]
+        }
+    }
+
+    /// Client `u`'s current link-rate multiplier (1 when inactive).
+    pub fn link_mult(&self, u: usize) -> f64 {
+        if self.cur_link.is_empty() {
+            1.0
+        } else {
+            self.cur_link[u]
+        }
+    }
+
+    /// Whether client `u` is currently reachable (true when inactive).
+    pub fn is_available(&self, u: usize) -> bool {
+        self.cur_avail.is_empty() || self.cur_avail[u]
+    }
+
+    /// Fleet-wide summary of the current sample (telemetry).
+    pub fn snapshot(&self) -> EnvSnapshot {
+        let n = self.cur_mfu.len().max(1) as f64;
+        EnvSnapshot {
+            mfu_mean: self.cur_mfu.iter().sum::<f64>() / n,
+            link_mean: self.cur_link.iter().sum::<f64>() / n,
+            available: self.cur_avail.iter().filter(|&&a| a).count(),
+        }
+    }
+
+    /// Flat checkpoint state: every generator's words, in a fixed
+    /// (all mfu, all link, all avail) order.  Replay and constant
+    /// generators contribute zero words, so a replay timeline's state
+    /// is empty — its trajectory is the (hash-verified) file content.
+    pub fn state(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for gen in self.mfu.iter().chain(self.link.iter()).chain(self.avail.iter()) {
+            gen.save_state(&mut out);
+        }
+        out
+    }
+
+    /// Restore from [`EnvTimeline::state`] — the timeline must have
+    /// been re-synthesized from the *same* spec first.  The next
+    /// `advance` rebuilds the current snapshot from the restored
+    /// generator states.
+    pub fn restore_state(&mut self, words: &[u64]) -> Result<()> {
+        let gens = || self.mfu.iter().chain(self.link.iter()).chain(self.avail.iter());
+        let expected: usize = gens().map(|g| g.state_words()).sum();
+        if words.len() != expected {
+            bail!(
+                "timeline state has {} words, expected {expected} — checkpoint was taken \
+                 under a different trace configuration",
+                words.len()
+            );
+        }
+        let mut off = 0usize;
+        for gen in self
+            .mfu
+            .iter_mut()
+            .chain(self.link.iter_mut())
+            .chain(self.avail.iter_mut())
+        {
+            let n = gen.state_words();
+            gen.restore_state(&words[off..off + n])?;
+            off += n;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn walk_spec() -> TraceSpec {
+        TraceSpec { kind: TraceKind::RandomWalk, seed: 21, ..TraceSpec::default() }
+    }
+
+    #[test]
+    fn inactive_timeline_is_identity() {
+        let tl = EnvTimeline::inactive();
+        assert!(!tl.is_active());
+        assert_eq!(tl.mfu_mult(3), 1.0);
+        assert_eq!(tl.link_mult(0), 1.0);
+        assert!(tl.is_available(99));
+        assert!(tl.state().is_empty());
+        let none = TraceSpec::default();
+        let built = EnvTimeline::new(&none, 8).unwrap();
+        assert!(!built.is_active());
+        assert!(built.state().is_empty());
+    }
+
+    #[test]
+    fn walk_timeline_is_deterministic_and_moves() {
+        let spec = walk_spec();
+        let mut a = EnvTimeline::new(&spec, 16).unwrap();
+        let mut b = EnvTimeline::new(&spec, 16).unwrap();
+        let mut moved = false;
+        for r in 1..=20 {
+            let t = r as f64 * 9.0;
+            a.advance(t);
+            b.advance(t);
+            for u in 0..16 {
+                assert_eq!(a.mfu_mult(u).to_bits(), b.mfu_mult(u).to_bits());
+                assert_eq!(a.link_mult(u).to_bits(), b.link_mult(u).to_bits());
+                assert!((MULT_LO..=MULT_HI).contains(&a.mfu_mult(u)));
+                if (a.mfu_mult(u) - 1.0).abs() > 1e-3 {
+                    moved = true;
+                }
+            }
+        }
+        assert!(moved, "random-walk timeline never left nominal");
+        // Different seed, different trajectory.
+        let mut c = EnvTimeline::new(&TraceSpec { seed: 22, ..spec }, 16).unwrap();
+        c.advance(9.0);
+        let mut fresh = EnvTimeline::new(&walk_spec(), 16).unwrap();
+        fresh.advance(9.0);
+        assert!(
+            (0..16).any(|u| fresh.mfu_mult(u).to_bits() != c.mfu_mult(u).to_bits()),
+            "seed ignored"
+        );
+    }
+
+    #[test]
+    fn markov_timeline_churns_but_only_availability() {
+        let spec = TraceSpec {
+            kind: TraceKind::Markov,
+            seed: 3,
+            mean_up: 50.0,
+            mean_down: 25.0,
+            ..TraceSpec::default()
+        };
+        let mut tl = EnvTimeline::new(&spec, 32).unwrap();
+        let mut saw_down = false;
+        for r in 1..=40 {
+            tl.advance(r as f64 * 10.0);
+            for u in 0..32 {
+                assert_eq!(tl.mfu_mult(u), 1.0);
+                assert_eq!(tl.link_mult(u), 1.0);
+                if !tl.is_available(u) {
+                    saw_down = true;
+                }
+            }
+            let snap = tl.snapshot();
+            assert_eq!(snap.available, (0..32).filter(|&u| tl.is_available(u)).count());
+        }
+        assert!(saw_down, "markov timeline never took a client down");
+    }
+
+    #[test]
+    fn timeline_state_roundtrip_is_bit_exact_mid_trajectory() {
+        for kind in [TraceKind::RandomWalk, TraceKind::Diurnal, TraceKind::Markov] {
+            let spec = TraceSpec { kind, seed: 31, mean_up: 40.0, ..TraceSpec::default() };
+            let mut a = EnvTimeline::new(&spec, 8).unwrap();
+            for r in 1..=6 {
+                a.advance(r as f64 * 7.3);
+            }
+            let words = a.state();
+            // Restore into a *fresh* timeline (the resume path).
+            let mut b = EnvTimeline::new(&spec, 8).unwrap();
+            b.restore_state(&words).unwrap();
+            for r in 7..=30 {
+                let t = r as f64 * 7.3;
+                a.advance(t);
+                b.advance(t);
+                for u in 0..8 {
+                    assert_eq!(
+                        a.mfu_mult(u).to_bits(),
+                        b.mfu_mult(u).to_bits(),
+                        "{kind:?}: mfu diverged at t={t}"
+                    );
+                    assert_eq!(a.is_available(u), b.is_available(u), "{kind:?}: avail at t={t}");
+                }
+            }
+            // Word-count mismatch (different trace config) is rejected.
+            assert!(b.restore_state(&words[..words.len() - 1]).is_err());
+        }
+    }
+
+    #[test]
+    fn replay_timeline_shares_the_trajectory_and_hashes_content() {
+        let dir = std::env::temp_dir().join("sfl_trace_timeline_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("replay.jsonl");
+        std::fs::write(&path, "{\"t\": 0.0, \"v\": 1.0}\n{\"t\": 10.0, \"v\": 0.5}\n").unwrap();
+        let spec = TraceSpec {
+            kind: TraceKind::Replay,
+            replay_path: path.to_string_lossy().into_owned(),
+            ..TraceSpec::default()
+        };
+        let mut tl = EnvTimeline::new(&spec, 4).unwrap();
+        assert_ne!(tl.replay_hash(), 0);
+        tl.advance(5.0);
+        for u in 0..4 {
+            assert_eq!(tl.mfu_mult(u), 1.0);
+        }
+        tl.advance(11.0);
+        for u in 0..4 {
+            assert_eq!(tl.mfu_mult(u), 0.5);
+            assert_eq!(tl.link_mult(u), 1.0);
+            assert!(tl.is_available(u));
+        }
+        // The broadcast still averages over the *fleet*, not the single
+        // shared generator.
+        let snap = tl.snapshot();
+        assert!((snap.mfu_mean - 0.5).abs() < 1e-12);
+        assert_eq!(snap.available, 4);
+        assert_eq!(tl.n_clients(), 4);
+        // Missing file fails loudly at construction (the resume path).
+        let missing = TraceSpec {
+            replay_path: dir.join("nope.jsonl").to_string_lossy().into_owned(),
+            ..spec
+        };
+        assert!(EnvTimeline::new(&missing, 4).is_err());
+    }
+
+    #[test]
+    fn snapshot_means_track_the_samples() {
+        let mut tl = EnvTimeline::new(&walk_spec(), 10).unwrap();
+        tl.advance(50.0);
+        let snap = tl.snapshot();
+        let mfu_mean = (0..10).map(|u| tl.mfu_mult(u)).sum::<f64>() / 10.0;
+        assert!((snap.mfu_mean - mfu_mean).abs() < 1e-12);
+        assert_eq!(snap.available, 10);
+    }
+}

@@ -117,6 +117,33 @@ fn sl_steady_state_is_host_tensor_allocation_free() {
 }
 
 #[test]
+fn round_loop_does_not_clone_client_configs() {
+    // The round loop is index-based (`aggregation_time_for`,
+    // `sl_round_for`, `sfl_step_for`): after construction, stepping
+    // rounds must clone zero participant `ClientConfig`s (each clone
+    // allocates the device-name String) — the same steady-state
+    // discipline as `tensor::alloc_count`, measured by
+    // `config::client_clone_count`.
+    let Some(e) = engine() else { return };
+    for scheme in [SchemeKind::Ours, SchemeKind::Sfl, SchemeKind::Sl] {
+        let mut cfg = mini_cfg();
+        cfg.scheme = scheme;
+        cfg.train.max_rounds = 4;
+        cfg.train.dropout_prob = 0.3; // exercise the participant path
+        let mut s = Session::new(&e, &cfg).unwrap();
+        let before = sfl::config::client_clone_count();
+        while !s.done() {
+            s.step_round().unwrap();
+        }
+        assert_eq!(
+            sfl::config::client_clone_count(),
+            before,
+            "{scheme:?}: round loop cloned ClientConfigs"
+        );
+    }
+}
+
+#[test]
 fn all_three_schemes_complete_and_rank_correctly() {
     let Some(e) = engine() else { return };
     let mut times = std::collections::HashMap::new();

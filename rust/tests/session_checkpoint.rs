@@ -10,6 +10,7 @@
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
 use sfl::coordinator::{RunResult, Session};
 use sfl::runtime::Engine;
+use sfl::trace::{TraceKind, TraceSpec};
 use std::path::{Path, PathBuf};
 
 fn engine() -> Option<Engine> {
@@ -140,6 +141,92 @@ fn sfl_checkpoint_resume_is_bit_identical() {
     let mut cfg = mini_cfg();
     cfg.scheme = SchemeKind::Sfl;
     roundtrip(&e, &cfg, "sfl");
+}
+
+#[test]
+fn non_stationary_trace_checkpoint_resume_is_bit_identical() {
+    // The acceptance property: a checkpointed mid-trace session resumes
+    // with a bit-identical remaining trajectory — timeline RNG streams,
+    // noisy-observation RNG, estimator state, and the resulting
+    // sim-clock all survive the round trip.
+    let Some(e) = engine() else { return };
+    let mut cfg = mini_cfg();
+    cfg.trace = TraceSpec {
+        kind: TraceKind::RandomWalk,
+        seed: 13,
+        mfu_sigma: 0.1,
+        link_sigma: 0.08,
+        obs_noise_sigma: 0.15,
+        ..TraceSpec::default()
+    };
+    roundtrip(&e, &cfg, "trace-walk");
+
+    let mut churn = mini_cfg();
+    churn.trace = TraceSpec {
+        kind: TraceKind::Markov,
+        seed: 13,
+        mean_up: 40.0,
+        mean_down: 15.0,
+        ..TraceSpec::default()
+    };
+    roundtrip(&e, &churn, "trace-markov");
+}
+
+#[test]
+fn resume_rejects_mismatched_trace_spec() {
+    let Some(e) = engine() else { return };
+    let mut cfg = mini_cfg();
+    cfg.trace.kind = TraceKind::RandomWalk;
+    let mut s = Session::new(&e, &cfg).unwrap();
+    s.step_round().unwrap();
+    let path = ckpt_path("trace-mismatch");
+    s.checkpoint(&path).unwrap();
+    // Different trace seed → different timeline streams → refuse.
+    let mut reseeded = cfg.clone();
+    reseeded.trace.seed += 1;
+    assert!(Session::resume(&e, &reseeded, &path).is_err());
+    // Dropping the trace entirely is also a mismatch.
+    let mut stat = cfg.clone();
+    stat.trace = TraceSpec::default();
+    assert!(Session::resume(&e, &stat, &path).is_err());
+}
+
+#[test]
+fn resume_fails_loudly_when_replay_trace_file_is_missing_or_changed() {
+    let Some(e) = engine() else { return };
+    let dir = std::env::temp_dir().join("sfl_session_replay_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("mfu.jsonl");
+    std::fs::write(&trace_path, "{\"t\": 0.0, \"v\": 1.0}\n{\"t\": 50.0, \"v\": 0.6}\n").unwrap();
+    let mut cfg = mini_cfg();
+    cfg.trace = TraceSpec {
+        kind: TraceKind::Replay,
+        replay_path: trace_path.to_string_lossy().into_owned(),
+        ..TraceSpec::default()
+    };
+    let mut s = Session::new(&e, &cfg).unwrap();
+    for _ in 0..2 {
+        s.step_round().unwrap();
+    }
+    let ckpt = ckpt_path("trace-replay");
+    s.checkpoint(&ckpt).unwrap();
+    drop(s);
+
+    // Changed content → content-hash mismatch, loud refusal.
+    std::fs::write(&trace_path, "{\"t\": 0.0, \"v\": 2.0}\n").unwrap();
+    let err = Session::resume(&e, &cfg, &ckpt).unwrap_err().to_string();
+    assert!(err.contains("replay trace"), "unexpected error: {err}");
+
+    // Missing file → loud failure at timeline construction.
+    std::fs::remove_file(&trace_path).unwrap();
+    let err = Session::resume(&e, &cfg, &ckpt).unwrap_err().to_string();
+    assert!(err.contains("mfu.jsonl"), "error must name the missing file: {err}");
+
+    // Restored content → resume works again.
+    std::fs::write(&trace_path, "{\"t\": 0.0, \"v\": 1.0}\n{\"t\": 50.0, \"v\": 0.6}\n").unwrap();
+    let mut resumed = Session::resume(&e, &cfg, &ckpt).unwrap();
+    assert_eq!(resumed.round(), 2);
+    resumed.step_round().unwrap();
 }
 
 #[test]
