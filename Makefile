@@ -3,7 +3,7 @@
 # `artifacts` needs the python env (jax) once; everything else is
 # rust-only.  Tier-1 verify: `make build test`.  Lint gate: `make lint`.
 
-.PHONY: artifacts build test bench bench-sched bench-trace lint clean
+.PHONY: artifacts build test bench bench-sched bench-trace bench-mem lint clean
 
 # AOT-lower the HLO artifacts + params.bin the runtime executes.
 # Output lands in rust/artifacts/<config>/ (cargo's working directory
@@ -34,10 +34,18 @@ bench-sched:
 bench-trace:
 	cd rust && cargo bench --bench trace_regret
 
+# Pooled-vs-eager memory sweep; writes rust/BENCH_memory.json (peak
+# resident state bytes + round wall-clock at N up to 10k, pool hit /
+# evict counters — EXPERIMENTS.md §Memory).  CI runs the same bench
+# with MEM_SMOKE=1 (caps the sweep at N = 1000).
+bench-mem:
+	cd rust && cargo bench --bench mem_scale
+
 # Format + clippy gate (CI tier-1 companion).
 lint:
 	cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
 
 clean:
 	cd rust && cargo clean
-	rm -f rust/BENCH_hotpath.json rust/BENCH_sched.json rust/BENCH_trace.json
+	rm -f rust/BENCH_hotpath.json rust/BENCH_sched.json rust/BENCH_trace.json \
+	      rust/BENCH_memory.json

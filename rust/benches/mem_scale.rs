@@ -1,0 +1,228 @@
+//! Memory-scale bench: pooled vs eager per-client state residency at
+//! N ∈ {10, 100, 1k, 10k} synthetic clients (lognormal preset), driven
+//! through the real `StatePool` + `DataPool` machinery — acquire /
+//! evict / spill / aggregate — with a bounded 32-client cohort per
+//! round.  Records peak resident state bytes and per-round wall-clock
+//! for both modes into `BENCH_memory.json`, cross-checked against the
+//! analytic `model::memory` accountant.  Pure host-side — no PJRT
+//! artifacts needed (the numeric bit-identity of pooled vs eager runs
+//! is asserted by the artifact-gated session tests instead).
+//!
+//!     cargo bench --bench mem_scale              # full sweep (10k eager ≈ 1 GB)
+//!     MEM_SMOKE=1 cargo bench --bench mem_scale  # CI smoke (N ≤ 1000)
+//!
+//! The 10k case is the acceptance gate: pooled peak resident state must
+//! be ≤ 5% of eager's, with zero `HostTensor` allocations per round
+//! after warm-up.
+
+use sfl::config::ExperimentConfig;
+use sfl::data::{self, DataPool};
+use sfl::fleet::{FleetPreset, FleetSpec};
+use sfl::lora::{fedavg_joined_into, AdapterSet};
+use sfl::model::{memory, ModelDims};
+use sfl::pool::{PoolStats, StatePool};
+use sfl::runtime::HeadState;
+use sfl::tensor::{alloc_count, ops, rng::Rng, HostTensor};
+use std::time::Instant;
+
+const COHORT: usize = 32;
+const ROUNDS: u64 = 20;
+const WARMUP_ROUNDS: u64 = 8;
+
+struct DriveResult {
+    stats: PoolStats,
+    median_round_ns: u128,
+    steady_allocs: u64,
+    resident_cuts: Vec<usize>,
+}
+
+fn mk_head(d: &ModelDims) -> HeadState {
+    HeadState {
+        w: HostTensor::zeros("head.w", vec![d.hidden, d.classes]),
+        b: HostTensor::zeros("head.b", vec![d.classes]),
+    }
+}
+
+/// Simulate `ROUNDS` rounds of bounded-cohort training against the
+/// pool: acquire (materialize/unspill), touch state in place, and run
+/// the fused aggregation every other round — the same pool surface the
+/// session's round loop exercises, minus the PJRT engine.
+fn drive(d: &ModelDims, cuts: &[usize], dpool: &DataPool, cap: usize) -> DriveResult {
+    let n = cuts.len();
+    let cohort = COHORT.min(n);
+    let full0 = AdapterSet::init(d, d.layers, 42);
+    let mut pool = StatePool::new(d, cuts, full0, mk_head(d), 100, cap, dpool)
+        .expect("pool construction");
+    let mut agg = AdapterSet::zeros(d, d.layers);
+    let mut agg_head = mk_head(d);
+    let mut ids: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(1234);
+    let mut round_times: Vec<u128> = Vec::with_capacity(ROUNDS as usize);
+    let mut allocs_at_steady = 0u64;
+    for round in 1..=ROUNDS {
+        if round == WARMUP_ROUNDS + 1 {
+            allocs_at_steady = alloc_count();
+        }
+        let t0 = Instant::now();
+        // Uniform cohort sample (partial Fisher–Yates, like the session).
+        for i in 0..cohort {
+            let j = i + rng.below(n - i);
+            ids.swap(i, j);
+        }
+        pool.begin_round(round, cohort).expect("begin_round");
+        for &u in ids.iter().take(cohort) {
+            let slot = pool.acquire(u, dpool).expect("acquire");
+            let _ = slot.it.next_batch();
+            // Simulated in-place training touch.
+            slot.cs.step += 1;
+            slot.ss.step += 1;
+            slot.cs.adam.m[0].as_f32_mut().unwrap()[0] += 1.0;
+            slot.cs.lora.tensors[0].as_f32_mut().unwrap()[0] += 0.5;
+        }
+        if round % 2 == 0 {
+            let w = 1.0 / cohort as f32;
+            let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> = ids[..cohort]
+                .iter()
+                .map(|&u| {
+                    let s = pool.resident(u).expect("cohort resident");
+                    (w, &s.cs.lora, &s.ss.lora)
+                })
+                .collect();
+            fedavg_joined_into(&contribs, &mut agg).expect("fedavg");
+            let heads_w: Vec<(f32, &HostTensor)> = ids[..cohort]
+                .iter()
+                .map(|&u| (w, &pool.resident(u).expect("resident").ss.head.w))
+                .collect();
+            ops::weighted_sum_into(&heads_w, &mut agg_head.w).expect("head agg");
+            let heads_b: Vec<(f32, &HostTensor)> = ids[..cohort]
+                .iter()
+                .map(|&u| (w, &pool.resident(u).expect("resident").ss.head.b))
+                .collect();
+            ops::weighted_sum_into(&heads_b, &mut agg_head.b).expect("head agg");
+            pool.apply_aggregate(&agg, &agg_head).expect("apply_aggregate");
+        }
+        round_times.push(t0.elapsed().as_nanos());
+    }
+    let steady_allocs = alloc_count() - allocs_at_steady;
+    let mut sorted = round_times.clone();
+    sorted.sort_unstable();
+    DriveResult {
+        stats: pool.stats(),
+        median_round_ns: sorted[sorted.len() / 2],
+        steady_allocs,
+        resident_cuts: pool.resident_cuts(),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("MEM_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let max_n: usize = if smoke { 1_000 } else { 10_000 };
+    let dims = ModelDims::mini();
+    let spec = data::CorpusSpec { seed: 7, ..data::CorpusSpec::carer_like(dims.vocab, dims.seq) };
+    let ds = data::generate(&spec);
+    let base_cfg = ExperimentConfig::paper();
+    let mut entries: Vec<(String, String)> = Vec::new();
+
+    for n in [10usize, 100, 1_000, 10_000] {
+        if n > max_n {
+            println!("mem_scale: skipping n={n} (MEM_SMOKE caps the sweep at {max_n})");
+            continue;
+        }
+        let mut spec_f = FleetSpec::new(FleetPreset::Lognormal, n, 11);
+        spec_f.mfu_sigma = 0.2;
+        let mut cfg = base_cfg.clone();
+        cfg.apply_fleet(spec_f);
+        let cuts = cfg.resolve_cuts();
+        let dpool = DataPool::new(&ds.train, n, 0.5, 8, dims.batch);
+        println!(
+            "mem_scale n={n}: data pool mode = {}",
+            if dpool.is_shared() { "shared (derived shards)" } else { "dense (exact Dirichlet)" }
+        );
+
+        let cap = COHORT.min(n);
+        let pooled = drive(&dims, &cuts, &dpool, cap);
+        let eager = drive(&dims, &cuts, &dpool, 0);
+        let eager_bytes = eager.stats.peak_resident_bytes;
+        let pooled_bytes = pooled.stats.peak_resident_bytes;
+        println!(
+            "mem resident n={n:<6} pooled={pooled_bytes:>12} B  eager={eager_bytes:>12} B  \
+             ratio={:.4}  (hits={} misses={} evictions={} spill={} B)",
+            pooled_bytes as f64 / eager_bytes as f64,
+            pooled.stats.hits,
+            pooled.stats.misses,
+            pooled.stats.evictions,
+            pooled.stats.spill_bytes,
+        );
+        println!(
+            "mem round   n={n:<6} pooled={:>10} ns  eager={:>10} ns",
+            pooled.median_round_ns, eager.median_round_ns
+        );
+        assert_eq!(
+            pooled.steady_allocs, 0,
+            "pooled steady state allocated HostTensors at n={n}"
+        );
+        assert_eq!(
+            eager.steady_allocs, 0,
+            "eager steady state allocated HostTensors at n={n}"
+        );
+
+        // Cross-check the measured residency ratio against the analytic
+        // accountant (model/memory.rs): both must agree that pooled
+        // client state is O(cohort), not O(fleet).
+        let analytic_eager = memory::ours_server_memory(&dims, &cuts).lora_states;
+        let analytic_pooled =
+            memory::pooled_server_memory(&dims, &cuts, &pooled.resident_cuts).lora_states;
+        let analytic_ratio = analytic_pooled / analytic_eager;
+        let measured_ratio = pooled_bytes as f64 / eager_bytes as f64;
+        // Generous band: the measured per-client bytes are
+        // cut-independent while the analytic accountant varies with the
+        // resident cut mix, so the two ratios agree to a small factor,
+        // not exactly.
+        assert!(
+            measured_ratio <= analytic_ratio * 3.0 && measured_ratio >= analytic_ratio * 0.2,
+            "measured residency ratio {measured_ratio:.4} disagrees with analytic \
+             {analytic_ratio:.4} at n={n}"
+        );
+        if n == 10_000 {
+            // Acceptance gate: ≤ 5% of eager on the 10k fleet.
+            assert!(
+                pooled_bytes * 20 <= eager_bytes,
+                "pooled peak {pooled_bytes} B exceeds 5% of eager {eager_bytes} B at n=10k"
+            );
+            println!("accept: pooled peak ≤ 5% of eager at n=10k, zero steady-state allocs");
+        }
+
+        for (mode, r) in [("pooled", &pooled), ("eager", &eager)] {
+            entries.push((
+                format!("mem/peak_resident_bytes/{mode}/n{n}"),
+                r.stats.peak_resident_bytes.to_string(),
+            ));
+            entries.push((format!("mem/round_ns/{mode}/n{n}"), r.median_round_ns.to_string()));
+        }
+        entries.push((format!("mem/hits/pooled/n{n}"), pooled.stats.hits.to_string()));
+        entries.push((format!("mem/misses/pooled/n{n}"), pooled.stats.misses.to_string()));
+        entries.push((
+            format!("mem/evictions/pooled/n{n}"),
+            pooled.stats.evictions.to_string(),
+        ));
+        entries.push((
+            format!("mem/spill_bytes/pooled/n{n}"),
+            pooled.stats.spill_bytes.to_string(),
+        ));
+        entries.push((
+            format!("mem/analytic_ratio/n{n}"),
+            format!("{:.6}", analytic_ratio),
+        ));
+    }
+
+    let mut json = String::from("{\n");
+    for (i, (name, value)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        json.push_str(&format!("  \"{name}\": {value}{comma}\n"));
+    }
+    json.push_str("}\n");
+    match std::fs::write("BENCH_memory.json", &json) {
+        Ok(()) => println!("wrote BENCH_memory.json ({} entries)", entries.len()),
+        Err(e) => eprintln!("could not write BENCH_memory.json: {e}"),
+    }
+}

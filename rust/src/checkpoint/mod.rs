@@ -8,9 +8,10 @@
 //! this writer (plus the bit-exact 64-bit encoders below) to persist a
 //! *resumable* session whose remaining rounds replay bit-identically.
 
-use crate::lora::AdapterSet;
+use crate::data::BatchIter;
+use crate::lora::{AdapterSet, LORA_KEYS};
 use crate::runtime::{AdamState, ClientState, HeadState, ServerState};
-use crate::tensor::{store::ParamStore, HostTensor, TensorData};
+use crate::tensor::{ops, store::ParamStore, HostTensor, TensorData};
 use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::path::Path;
@@ -82,6 +83,136 @@ pub fn encode_f64s(name: impl Into<String>, vals: &[f64]) -> HostTensor {
 /// Inverse of [`encode_f64s`].
 pub fn decode_f64s(t: &HostTensor) -> Result<Vec<f64>> {
     Ok(decode_u64s(t)?.into_iter().map(f64::from_bits).collect())
+}
+
+// ---------------------------------------------------------------------
+// Shared named-tensor plumbing used by the session checkpoint and the
+// state pool's sparse spill/serialization (one encoding, two callers).
+// ---------------------------------------------------------------------
+
+/// Copy a stored tensor's payload into an existing buffer (shape- and
+/// dtype-checked) — resume never swaps buffers, only refills them.
+pub fn load_tensor_into(store: &ParamStore, key: &str, dst: &mut HostTensor) -> Result<()> {
+    ops::copy_from(dst, store.get(key)?)
+}
+
+/// Decode a u64 tensor and require at least `n` elements — malformed
+/// checkpoints must surface as errors, not index panics.
+pub fn u64s_exact(store: &ParamStore, key: &str, n: usize) -> Result<Vec<u64>> {
+    let v = decode_u64s(store.get(key)?)?;
+    if v.len() < n {
+        bail!("checkpoint tensor {key} has {} values, expected {n}", v.len());
+    }
+    Ok(v)
+}
+
+pub fn one_u64(store: &ParamStore, key: &str) -> Result<u64> {
+    Ok(u64s_exact(store, key, 1)?[0])
+}
+
+/// Decode an f64 tensor and require at least `n` elements.
+pub fn f64s_exact(store: &ParamStore, key: &str, n: usize) -> Result<Vec<f64>> {
+    let v = decode_f64s(store.get(key)?)?;
+    if v.len() < n {
+        bail!("checkpoint tensor {key} has {} values, expected {n}", v.len());
+    }
+    Ok(v)
+}
+
+pub fn one_f64(store: &ParamStore, key: &str) -> Result<f64> {
+    Ok(f64s_exact(store, key, 1)?[0])
+}
+
+/// Read a single i32 scalar, erroring (not panicking) on empty tensors.
+pub fn one_i32(store: &ParamStore, key: &str) -> Result<i32> {
+    store
+        .get(key)?
+        .as_i32()?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("checkpoint tensor {key} is empty"))
+}
+
+/// Save an adapter set's four tensors under `{prefix}.{aq,bq,av,bv}`.
+pub fn save_adapters(out: &mut Vec<(String, HostTensor)>, prefix: &str, set: &AdapterSet) {
+    for (t, key) in set.tensors.iter().zip(LORA_KEYS.iter()) {
+        out.push((format!("{prefix}.{key}"), t.clone()));
+    }
+}
+
+/// Inverse of [`save_adapters`]: refill `set`'s buffers in place.
+pub fn load_adapters(store: &ParamStore, prefix: &str, set: &mut AdapterSet) -> Result<()> {
+    for (t, key) in set.tensors.iter_mut().zip(LORA_KEYS.iter()) {
+        load_tensor_into(store, &format!("{prefix}.{key}"), t)?;
+    }
+    Ok(())
+}
+
+/// Save Adam moments under `{prefix}.m{i}` / `{prefix}.v{i}`.
+pub fn save_adam(out: &mut Vec<(String, HostTensor)>, prefix: &str, adam: &AdamState) {
+    for (i, t) in adam.m.iter().enumerate() {
+        out.push((format!("{prefix}.m{i}"), t.clone()));
+    }
+    for (i, t) in adam.v.iter().enumerate() {
+        out.push((format!("{prefix}.v{i}"), t.clone()));
+    }
+}
+
+/// Inverse of [`save_adam`]: refill the moment buffers in place.
+pub fn load_adam(store: &ParamStore, prefix: &str, adam: &mut AdamState) -> Result<()> {
+    for (i, t) in adam.m.iter_mut().enumerate() {
+        load_tensor_into(store, &format!("{prefix}.m{i}"), t)?;
+    }
+    for (i, t) in adam.v.iter_mut().enumerate() {
+        load_tensor_into(store, &format!("{prefix}.v{i}"), t)?;
+    }
+    Ok(())
+}
+
+/// Save a batch-iterator snapshot (shuffled order, cursor, RNG word)
+/// under `scheme.iter{u}.*` — callers pass the raw triple so spilled
+/// (non-resident) iterators serialize without rebuilding a `BatchIter`.
+pub fn save_iter_state(
+    out: &mut Vec<(String, HostTensor)>,
+    u: usize,
+    indices: &[usize],
+    cursor: usize,
+    rng: u64,
+) {
+    let idx32: Vec<i32> = indices.iter().map(|&x| x as i32).collect();
+    let n = idx32.len();
+    out.push((
+        format!("scheme.iter{u}.indices"),
+        HostTensor::i32(format!("scheme.iter{u}.indices"), vec![n], idx32),
+    ));
+    out.push((format!("scheme.iter{u}.cursor"), encode_u64s("cursor", &[cursor as u64])));
+    out.push((format!("scheme.iter{u}.rng"), encode_u64s("rng", &[rng])));
+}
+
+/// Restore one batch iterator saved by [`save_iter_state`].  The
+/// restored order must be a permutation of the iterator's own shard —
+/// anything else is a corrupted or mismatched checkpoint and must error
+/// here, not panic in `next_batch()` later.
+pub fn load_iter_state(store: &ParamStore, u: usize, it: &mut BatchIter) -> Result<()> {
+    let raw = store.get(&format!("scheme.iter{u}.indices"))?.as_i32()?;
+    if raw.iter().any(|&x| x < 0) {
+        bail!("checkpoint iter{u} contains a negative dataset index");
+    }
+    let indices: Vec<usize> = raw.iter().map(|&x| x as usize).collect();
+    let mut restored = indices.clone();
+    restored.sort_unstable();
+    let mut current = it.state().0.to_vec();
+    current.sort_unstable();
+    if restored != current {
+        bail!("checkpoint iter{u} indices are not a permutation of the client's shard");
+    }
+    let cursor = one_u64(store, &format!("scheme.iter{u}.cursor"))? as usize;
+    if cursor > indices.len() {
+        bail!("checkpoint iter{u} cursor {cursor} exceeds shard size {}", indices.len());
+    }
+    let rng = one_u64(store, &format!("scheme.iter{u}.rng"))?;
+    it.restore_state(indices, cursor, rng);
+    Ok(())
 }
 
 /// A full coordinator checkpoint (Ours/SFL schemes).

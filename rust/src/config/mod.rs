@@ -179,6 +179,29 @@ impl Default for TrainConfig {
     }
 }
 
+/// State-pool knobs (server-side per-client state residency).
+///
+/// `state_cap = 0` keeps the eager behavior: every client's LoRA/Adam
+/// state materialized at session construction (right for the 6-device
+/// paper fleet, and the bench comparison point).  `state_cap = N > 0`
+/// bounds residency at `max(N, round cohort)` — cold clients spill to
+/// a compact serialized form and rematerialize bit-exactly on their
+/// next participation, so fleet-scale numeric runs hold O(active)
+/// state instead of O(fleet).  The cap never changes training
+/// numerics (pooled and eager trajectories are bit-identical), which
+/// is why it is deliberately absent from the checkpoint fingerprint:
+/// resuming under a different cap is legitimate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolConfig {
+    pub state_cap: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self { state_cap: 0 }
+    }
+}
+
 /// A full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -198,6 +221,8 @@ pub struct ExperimentConfig {
     /// measurement noise).  `kind = none` with `obs_noise_sigma = 0`
     /// (the default) reproduces the static paper setting exactly.
     pub trace: TraceSpec,
+    /// Server-side state-pool residency knobs.
+    pub pool: PoolConfig,
     pub server: ServerProfile,
     pub train: TrainConfig,
     /// Root of the artifacts directory.
@@ -224,6 +249,7 @@ impl ExperimentConfig {
             clients,
             fleet: None,
             trace: TraceSpec::default(),
+            pool: PoolConfig::default(),
             server: ServerProfile::rtx4080s(),
             train: TrainConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -463,6 +489,10 @@ impl ExperimentConfig {
             spec.mfu_sigma = s.parse_or("mfu_sigma", spec.mfu_sigma)?;
             cfg.apply_fleet(spec);
         }
+        // A [pool] section configures server-side state residency.
+        if let Some(s) = doc.sections_named("pool").next() {
+            cfg.pool.state_cap = s.parse_or("state_cap", cfg.pool.state_cap)?;
+        }
         // A [trace] section configures the environment timeline.
         if let Some(s) = doc.sections_named("trace").next() {
             let mut tr = TraceSpec::default();
@@ -547,6 +577,8 @@ impl ExperimentConfig {
         if !tr.replay_path.is_empty() {
             out.push_str(&format!("replay_path = {}\n", tr.replay_path));
         }
+        // The state pool always round-trips, like [trace] — symmetry.
+        out.push_str(&format!("\n[pool]\nstate_cap = {}\n", self.pool.state_cap));
         // A synthesized fleet round-trips through its spec (same seed ⇒
         // bit-identical fleet); only hand-written fleets list clients.
         if let Some(f) = &self.fleet {
@@ -765,6 +797,49 @@ mod tests {
         assert!(c.validate().is_err(), "NaN obs_noise_sigma must be rejected");
         c.trace.obs_noise_sigma = f64::INFINITY;
         assert!(c.validate().is_err(), "infinite obs_noise_sigma must be rejected");
+    }
+
+    #[test]
+    fn pool_kv_roundtrip_is_symmetric() {
+        let dir = std::env::temp_dir().join("sfl_cfg_pool_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pool.exp");
+        // Non-default cap round-trips...
+        let mut c = ExperimentConfig::paper();
+        c.pool.state_cap = 48;
+        c.validate().unwrap();
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.pool, c.pool);
+        // ...and so does the default (eager) pool — the [pool] section
+        // is always written.
+        let d = ExperimentConfig::paper();
+        std::fs::write(&path, d.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.pool, PoolConfig::default());
+        assert_eq!(back.pool.state_cap, 0);
+    }
+
+    #[test]
+    fn pool_fleet_trace_kv_roundtrip_combined() {
+        // [pool], [fleet], and [trace] coexist in one experiment file —
+        // the bench-scale pooled-fleet shape.
+        let mut c = ExperimentConfig::paper();
+        c.apply_fleet(FleetSpec::new(FleetPreset::Zipf, 30, 17));
+        c.trace =
+            TraceSpec { kind: TraceKind::RandomWalk, mfu_sigma: 0.05, ..TraceSpec::default() };
+        c.pool.state_cap = 8;
+        c.train.max_participants = 4;
+        c.validate().unwrap();
+        let dir = std::env::temp_dir().join("sfl_cfg_pool_combined_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("all.exp");
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.pool, c.pool);
+        assert_eq!(back.fleet, c.fleet);
+        assert_eq!(back.trace, c.trace);
+        assert_eq!(back.clients.len(), 30);
     }
 
     #[test]

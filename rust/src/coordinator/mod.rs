@@ -35,6 +35,14 @@
 //! pins `oracle_timing`.  Synthetic fleets come from
 //! [`fleet::FleetSpec`](crate::fleet::FleetSpec).
 //!
+//! Memory is fleet-scale too: with `pool.state_cap > 0` the parallel
+//! schemes hold per-client LoRA/optimizer state in a
+//! [`StatePool`](crate::pool::StatePool) — lazy materialization from
+//! the aggregate baseline, bit-exact spill/reload, recycled arenas —
+//! so a numeric session keeps O(active cohort) state resident instead
+//! of O(fleet), and the shared [`DataPool`](crate::data::DataPool)
+//! derives client shards on demand (EXPERIMENTS.md §Memory).
+//!
 //! Environments can be *non-stationary*: a seeded
 //! [`EnvTimeline`](crate::trace::EnvTimeline) makes per-client MFU/link
 //! multipliers and availability functions of simulated time (sampled

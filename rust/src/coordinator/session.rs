@@ -20,18 +20,23 @@
 //! [`RoundScratch`] arena, updated in place via the runtime's `*_into`
 //! primitives.
 
-use crate::checkpoint::{decode_f64s, decode_u64s, encode_f64s, encode_u64s, write_sflp};
+use crate::checkpoint::{
+    decode_f64s, decode_u64s, encode_f64s, encode_u64s, f64s_exact, load_adapters,
+    load_iter_state, load_tensor_into, one_f64, one_i32, one_u64, save_adapters,
+    save_iter_state, u64s_exact, write_sflp,
+};
 use crate::config::{ExperimentConfig, SchedulerKind, SchemeKind};
 use crate::coordinator::estimator::TimingEstimator;
 use crate::coordinator::lr::LrSchedule;
 use crate::coordinator::scheduler::{make_scheduler, makespan, JobInfo, Scheduler};
 use crate::coordinator::timing::{self, StepTiming};
 use crate::coordinator::{RoundRecord, RunResult};
-use crate::data::{self, BatchIter, Dataset};
-use crate::lora::{fedavg_joined_into, AdapterSet, LORA_KEYS};
+use crate::data::{self, BatchIter, DataPool, Dataset};
+use crate::lora::{fedavg_joined_into, AdapterSet};
 use crate::metrics::{Confusion, ConvergenceDetector, MetricSeries};
 use crate::model::{memory, memory::MemoryBreakdown, ModelDims};
 use crate::net::{Message, TrafficMeter};
+use crate::pool::{PoolStats, StatePool};
 use crate::runtime::{AdamState, ClientState, Engine, HeadState, ServerState};
 use crate::tensor::{ops, rng::Rng, store::ParamStore, HostTensor};
 use crate::trace::{EnvSnapshot, EnvTimeline, NoisyObservation, TraceKind};
@@ -71,10 +76,11 @@ pub struct SessionEnv<'e> {
     /// Resolved cut point per client.
     pub cuts: Vec<usize>,
     pub ds: Dataset,
-    /// Per-client example-index shards (non-IID Dirichlet partition).
-    pub shards: Vec<Vec<usize>>,
-    /// Data-size aggregation weights |D_u|/|D|.
-    pub weights: Vec<f32>,
+    /// The shared data pool: derives any client's shard / aggregation
+    /// weight on demand (exact Dirichlet partition on feasible fleets,
+    /// seeded derivation with overlap at bench scale — see
+    /// [`data::DataPool`]).
+    pub data: DataPool,
     /// Per-client timing-model jobs (true device profiles) — the
     /// simulation's ground truth, indexed by global client id.  Jobs
     /// are per-client constants, so both tables are built once and
@@ -203,6 +209,9 @@ pub struct RoundReport {
     /// Fleet-wide environment sample for the round (present when an
     /// environment trace is active).
     pub env: Option<EnvSnapshot>,
+    /// State-pool counters (present when pooled residency is active:
+    /// `pool.state_cap > 0` under a pooling scheme).
+    pub pool: Option<PoolStats>,
     /// Present on eval rounds.
     pub eval: Option<EvalPoint>,
 }
@@ -239,11 +248,17 @@ pub trait Scheme {
     fn adapter_switches(&self) -> u64 {
         0
     }
+    /// State-pool counters for the round reports — `Some` only when the
+    /// scheme runs a bounded (pooled) residency.
+    fn pool_stats(&self) -> Option<PoolStats> {
+        None
+    }
     /// Persist scheme-owned training state as named tensors
-    /// (`scheme.*` namespace) for [`Session::checkpoint`].
-    fn save_state(&self, out: &mut Vec<(String, HostTensor)>);
+    /// (`scheme.*` namespace) for [`Session::checkpoint`].  Pooled
+    /// schemes serialize sparsely: only materialized clients.
+    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()>;
     /// Restore scheme-owned state saved by [`Scheme::save_state`].
-    fn load_state(&mut self, store: &ParamStore) -> Result<()>;
+    fn load_state(&mut self, env: &SessionEnv<'_>, store: &ParamStore) -> Result<()>;
 }
 
 /// Build the scheme configured in `env.cfg.scheme`.
@@ -334,132 +349,32 @@ fn train_fingerprint(cfg: &ExperimentConfig) -> Vec<(&'static str, u64)> {
 }
 
 // ---------------------------------------------------------------------
-// Checkpoint plumbing shared by the scheme impls.
+// Checkpoint plumbing: the bit-exact encoders and named-tensor helpers
+// live in `crate::checkpoint` (shared with the state pool's sparse
+// serialization); only the SL-specific iterator loops remain here.
 // ---------------------------------------------------------------------
-
-/// Copy a stored tensor's payload into an existing buffer (shape- and
-/// dtype-checked) — resume never swaps buffers, only refills them.
-fn load_into(store: &ParamStore, key: &str, dst: &mut HostTensor) -> Result<()> {
-    ops::copy_from(dst, store.get(key)?)
-}
-
-/// Decode a u64 tensor and require at least `n` elements — malformed
-/// checkpoints must surface as errors, not index panics.
-fn u64s_exact(store: &ParamStore, key: &str, n: usize) -> Result<Vec<u64>> {
-    let v = decode_u64s(store.get(key)?)?;
-    if v.len() < n {
-        bail!("checkpoint tensor {key} has {} values, expected {n}", v.len());
-    }
-    Ok(v)
-}
-
-fn one_u64(store: &ParamStore, key: &str) -> Result<u64> {
-    Ok(u64s_exact(store, key, 1)?[0])
-}
-
-/// Decode an f64 tensor and require at least `n` elements.
-fn f64s_exact(store: &ParamStore, key: &str, n: usize) -> Result<Vec<f64>> {
-    let v = decode_f64s(store.get(key)?)?;
-    if v.len() < n {
-        bail!("checkpoint tensor {key} has {} values, expected {n}", v.len());
-    }
-    Ok(v)
-}
-
-fn one_f64(store: &ParamStore, key: &str) -> Result<f64> {
-    Ok(f64s_exact(store, key, 1)?[0])
-}
-
-/// Read a single i32 scalar, erroring (not panicking) on empty tensors.
-fn one_i32(store: &ParamStore, key: &str) -> Result<i32> {
-    store
-        .get(key)?
-        .as_i32()?
-        .first()
-        .copied()
-        .ok_or_else(|| anyhow::anyhow!("checkpoint tensor {key} is empty"))
-}
-
-fn save_adapters(out: &mut Vec<(String, HostTensor)>, prefix: &str, set: &AdapterSet) {
-    for (t, key) in set.tensors.iter().zip(LORA_KEYS.iter()) {
-        out.push((format!("{prefix}.{key}"), t.clone()));
-    }
-}
-
-fn load_adapters(store: &ParamStore, prefix: &str, set: &mut AdapterSet) -> Result<()> {
-    for (t, key) in set.tensors.iter_mut().zip(LORA_KEYS.iter()) {
-        load_into(store, &format!("{prefix}.{key}"), t)?;
-    }
-    Ok(())
-}
-
-fn save_adam(out: &mut Vec<(String, HostTensor)>, prefix: &str, adam: &AdamState) {
-    for (i, t) in adam.m.iter().enumerate() {
-        out.push((format!("{prefix}.m{i}"), t.clone()));
-    }
-    for (i, t) in adam.v.iter().enumerate() {
-        out.push((format!("{prefix}.v{i}"), t.clone()));
-    }
-}
-
-fn load_adam(store: &ParamStore, prefix: &str, adam: &mut AdamState) -> Result<()> {
-    for (i, t) in adam.m.iter_mut().enumerate() {
-        load_into(store, &format!("{prefix}.m{i}"), t)?;
-    }
-    for (i, t) in adam.v.iter_mut().enumerate() {
-        load_into(store, &format!("{prefix}.v{i}"), t)?;
-    }
-    Ok(())
-}
 
 fn save_iters(out: &mut Vec<(String, HostTensor)>, iters: &[BatchIter]) {
     for (u, it) in iters.iter().enumerate() {
         let (indices, cursor, rng) = it.state();
-        let idx32: Vec<i32> = indices.iter().map(|&x| x as i32).collect();
-        let n = idx32.len();
-        out.push((
-            format!("scheme.iter{u}.indices"),
-            HostTensor::i32(format!("scheme.iter{u}.indices"), vec![n], idx32),
-        ));
-        out.push((format!("scheme.iter{u}.cursor"), encode_u64s("cursor", &[cursor as u64])));
-        out.push((format!("scheme.iter{u}.rng"), encode_u64s("rng", &[rng])));
+        save_iter_state(out, u, indices, cursor, rng);
     }
 }
 
 fn load_iters(store: &ParamStore, iters: &mut [BatchIter]) -> Result<()> {
     for (u, it) in iters.iter_mut().enumerate() {
-        let raw = store.get(&format!("scheme.iter{u}.indices"))?.as_i32()?;
-        if raw.iter().any(|&x| x < 0) {
-            bail!("checkpoint iter{u} contains a negative dataset index");
-        }
-        let indices: Vec<usize> = raw.iter().map(|&x| x as usize).collect();
-        // The restored order must be a permutation of the iterator's own
-        // shard — anything else is a corrupted or mismatched checkpoint
-        // and must error here, not panic in next_batch() later.
-        let mut restored = indices.clone();
-        restored.sort_unstable();
-        let mut current = it.state().0.to_vec();
-        current.sort_unstable();
-        if restored != current {
-            bail!("checkpoint iter{u} indices are not a permutation of the client's shard");
-        }
-        let cursor = one_u64(store, &format!("scheme.iter{u}.cursor"))? as usize;
-        if cursor > indices.len() {
-            bail!("checkpoint iter{u} cursor {cursor} exceeds shard size {}", indices.len());
-        }
-        let rng = one_u64(store, &format!("scheme.iter{u}.rng"))?;
-        it.restore_state(indices, cursor, rng);
+        load_iter_state(store, u, it)?;
     }
     Ok(())
 }
 
+/// Per-client batch iterators for the whole fleet (SL's relay walks
+/// every participant, so its iterators stay eager; the parallel
+/// schemes derive theirs lazily through the state pool).
 fn fresh_iters(env: &SessionEnv<'_>) -> Vec<BatchIter> {
-    env.shards
-        .iter()
-        .enumerate()
-        .map(|(u, s)| {
-            BatchIter::new(s, env.dims_exec.batch, env.cfg.train.seed + 100 + u as u64)
-        })
+    let mut scratch = Vec::new();
+    (0..env.cuts.len())
+        .map(|u| env.data.iter_for(u, env.cfg.train.seed + 100 + u as u64, &mut scratch))
         .collect()
 }
 
@@ -489,9 +404,11 @@ enum CoreTiming {
 }
 
 struct ParallelCore {
-    clients: Vec<ClientState>,
-    servers: Vec<ServerState>,
-    iters: Vec<BatchIter>,
+    /// Per-client training state + batch iterators, owned by the state
+    /// pool: eager (all resident) when `pool.state_cap == 0`, lazily
+    /// materialized / spilled at `max(cap, cohort)` residency otherwise.
+    /// Either way the trained values are bit-identical.
+    pool: StatePool,
     sched: Box<dyn Scheduler>,
     kind: SchedulerKind,
     last_active: Option<usize>,
@@ -505,17 +422,17 @@ impl ParallelCore {
     fn new(env: &SessionEnv<'_>) -> Result<Self> {
         let full = env.engine.initial_lora()?;
         let head = env.engine.initial_head()?;
-        let mut clients = Vec::new();
-        let mut servers = Vec::new();
-        for &k in &env.cuts {
-            let (c, s) = full.split_at(k)?;
-            clients.push(ClientState::fresh(c));
-            servers.push(ServerState::fresh(s, head.clone()));
-        }
+        let pool = StatePool::new(
+            &env.dims_exec,
+            &env.cuts,
+            full,
+            head,
+            env.cfg.train.seed + 100,
+            env.cfg.pool.state_cap,
+            &env.data,
+        )?;
         Ok(Self {
-            clients,
-            servers,
-            iters: fresh_iters(env),
+            pool,
             sched: make_scheduler(env.cfg.scheduler, env.cfg.train.seed),
             kind: env.cfg.scheduler,
             last_active: None,
@@ -533,6 +450,10 @@ impl ParallelCore {
         accrual: CoreTiming,
     ) -> Result<RoundOutcome> {
         let env = ctx.env;
+        // Stamp the pool's LRU clock and bound residency at
+        // max(state_cap, cohort) — a round's participants are never
+        // evicted mid-round.
+        self.pool.begin_round(ctx.round as u64, ctx.participants.len())?;
         let time_orders = matches!(accrual, CoreTiming::PerOrder);
         let (mean_loss, ordered_elapsed) = self.train_steps(ctx, time_orders)?;
         let train_elapsed = match accrual {
@@ -583,7 +504,11 @@ impl ParallelCore {
             for &i in &order {
                 let u = jobs[i].client;
                 let k = env.cuts[u];
-                let idx = self.iters[u].next_batch();
+                // Lazily materialize the client's state (bit-equal to
+                // the eager path's); evicts the coldest non-cohort
+                // resident when the pool is at capacity.
+                let slot = self.pool.acquire(u, &env.data)?;
+                let idx = slot.it.next_batch();
                 data::materialize_batch_into(
                     &env.ds,
                     idx,
@@ -593,7 +518,7 @@ impl ParallelCore {
                 env.engine.client_fwd_into(
                     k,
                     &ctx.scratch.tokens,
-                    &self.clients[u].lora,
+                    &slot.cs.lora,
                     &mut ctx.scratch.acts,
                 )?;
                 ctx.traffic
@@ -606,7 +531,7 @@ impl ParallelCore {
                     k,
                     &ctx.scratch.acts,
                     &ctx.scratch.labels,
-                    &mut self.servers[u],
+                    &mut slot.ss,
                     &mut ctx.scratch.act_grads,
                     ctx.round_lr,
                 )?;
@@ -615,7 +540,7 @@ impl ParallelCore {
                 env.engine.client_bwd_into(
                     k,
                     &ctx.scratch.tokens,
-                    &mut self.clients[u],
+                    &mut slot.cs,
                     &ctx.scratch.act_grads,
                     ctx.round_lr,
                 )?;
@@ -629,10 +554,13 @@ impl ParallelCore {
 
     /// The FedAvg aggregation phase (paper Alg. 1 lines 17–30), fused
     /// and in place: each participant's halves are scattered straight
-    /// into the full-depth scratch aggregate, then re-split at each
-    /// client's cut back into the per-client state buffers.  Only
-    /// participants contribute weight (failure injection); the aggregate
-    /// is still distributed to every client.
+    /// into the full-depth scratch aggregate, then redistributed
+    /// pool-wide — resident clients get it copied into their buffers,
+    /// spilled clients drop their stale segments, and the pool baseline
+    /// becomes the aggregate (so fresh clients derive it lazily).  Only
+    /// participants contribute weight (failure injection); the
+    /// aggregate is still distributed — and its traffic billed — to
+    /// every client.
     fn aggregate(
         &mut self,
         env: &SessionEnv<'_>,
@@ -640,23 +568,29 @@ impl ParallelCore {
         traffic: &mut TrafficMeter,
         scratch: &mut RoundScratch,
     ) -> Result<()> {
-        let total: f32 = participants.iter().map(|&u| env.weights[u]).sum();
-        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> = participants
-            .iter()
-            .map(|&u| (env.weights[u] / total, &self.clients[u].lora, &self.servers[u].lora))
-            .collect();
-        fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
-        let head_pairs_w: Vec<(f32, &HostTensor)> = participants
-            .iter()
-            .map(|&u| (env.weights[u] / total, &self.servers[u].head.w))
-            .collect();
-        ops::weighted_sum_into(&head_pairs_w, &mut scratch.head.w)?;
-        let head_pairs_b: Vec<(f32, &HostTensor)> = participants
-            .iter()
-            .map(|&u| (env.weights[u] / total, &self.servers[u].head.b))
-            .collect();
-        ops::weighted_sum_into(&head_pairs_b, &mut scratch.head.b)?;
-        // O(n) membership mask.
+        let total: f32 = participants.iter().map(|&u| env.data.weight(u)).sum();
+        {
+            let mut contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
+                Vec::with_capacity(participants.len());
+            let mut head_pairs_w: Vec<(f32, &HostTensor)> =
+                Vec::with_capacity(participants.len());
+            let mut head_pairs_b: Vec<(f32, &HostTensor)> =
+                Vec::with_capacity(participants.len());
+            for &u in participants {
+                let slot = self.pool.resident(u).ok_or_else(|| {
+                    anyhow::anyhow!("participant {u} not resident at aggregation")
+                })?;
+                let w = env.data.weight(u) / total;
+                contribs.push((w, &slot.cs.lora, &slot.ss.lora));
+                head_pairs_w.push((w, &slot.ss.head.w));
+                head_pairs_b.push((w, &slot.ss.head.b));
+            }
+            fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
+            ops::weighted_sum_into(&head_pairs_w, &mut scratch.head.w)?;
+            ops::weighted_sum_into(&head_pairs_b, &mut scratch.head.b)?;
+        }
+        // O(n) membership mask; traffic is billed for the whole fleet
+        // exactly as the eager path did.
         scratch.mask.iter_mut().for_each(|m| *m = false);
         for &u in participants {
             scratch.mask[u] = true;
@@ -665,56 +599,25 @@ impl ParallelCore {
             if scratch.mask[u] {
                 traffic.record(&Message::LoraUpload { bytes: env.dims_time.lora_bytes(k) });
             }
-            scratch.agg_full.split_into(k, &mut self.clients[u].lora, &mut self.servers[u].lora)?;
-            ops::copy_from(&mut self.servers[u].head.w, &scratch.head.w)?;
-            ops::copy_from(&mut self.servers[u].head.b, &scratch.head.b)?;
             traffic.record(&Message::LoraDownload { bytes: env.dims_time.lora_bytes(k) });
         }
-        Ok(())
+        self.pool.apply_aggregate(&scratch.agg_full, &scratch.head)
     }
 
     /// Data-weighted global model (eqs. 5–8 evaluated without replacing
-    /// per-client state), computed into the scratch arena.
+    /// per-client state), computed into the scratch arena.  Delegated
+    /// to the pool, which accumulates resident / spilled / baseline
+    /// clients in id order — bit-identical to the eager fedavg path.
     fn global_model_into(&self, env: &SessionEnv<'_>, scratch: &mut RoundScratch) -> Result<()> {
-        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> = env
-            .weights
-            .iter()
-            .copied()
-            .zip(self.clients.iter().zip(self.servers.iter()))
-            .map(|(w, (c, s))| (w, &c.lora, &s.lora))
-            .collect();
-        fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
-        ops::weighted_sum_into(
-            &env.weights
-                .iter()
-                .copied()
-                .zip(self.servers.iter().map(|s| &s.head.w))
-                .collect::<Vec<_>>(),
-            &mut scratch.head.w,
-        )?;
-        ops::weighted_sum_into(
-            &env.weights
-                .iter()
-                .copied()
-                .zip(self.servers.iter().map(|s| &s.head.b))
-                .collect::<Vec<_>>(),
-            &mut scratch.head.b,
-        )?;
-        Ok(())
+        self.pool.global_model_into(&env.data, &mut scratch.agg_full, &mut scratch.head)
     }
 
-    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) {
-        for (u, (c, s)) in self.clients.iter().zip(self.servers.iter()).enumerate() {
-            save_adapters(out, &format!("scheme.c{u}.lora"), &c.lora);
-            save_adam(out, &format!("scheme.c{u}.adam"), &c.adam);
-            out.push((format!("scheme.c{u}.step"), encode_u64s("step", &[c.step])));
-            save_adapters(out, &format!("scheme.s{u}.lora"), &s.lora);
-            out.push((format!("scheme.s{u}.head.w"), s.head.w.clone()));
-            out.push((format!("scheme.s{u}.head.b"), s.head.b.clone()));
-            save_adam(out, &format!("scheme.s{u}.adam"), &s.adam);
-            out.push((format!("scheme.s{u}.step"), encode_u64s("step", &[s.step])));
-        }
-        save_iters(out, &self.iters);
+    fn pool_stats(&self) -> Option<PoolStats> {
+        self.pool.is_pooled().then(|| self.pool.stats())
+    }
+
+    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
+        self.pool.save_state(out)?;
         out.push(("scheme.switches".into(), encode_u64s("switches", &[self.switches])));
         let last = self.last_active.map(|u| u as i32).unwrap_or(-1);
         out.push((
@@ -724,20 +627,11 @@ impl ParallelCore {
         if let Some(st) = self.sched.rng_state() {
             out.push(("scheme.sched_rng".into(), encode_u64s("sched_rng", &[st])));
         }
+        Ok(())
     }
 
-    fn load_state(&mut self, store: &ParamStore) -> Result<()> {
-        for u in 0..self.clients.len() {
-            load_adapters(store, &format!("scheme.c{u}.lora"), &mut self.clients[u].lora)?;
-            load_adam(store, &format!("scheme.c{u}.adam"), &mut self.clients[u].adam)?;
-            self.clients[u].step = one_u64(store, &format!("scheme.c{u}.step"))?;
-            load_adapters(store, &format!("scheme.s{u}.lora"), &mut self.servers[u].lora)?;
-            load_into(store, &format!("scheme.s{u}.head.w"), &mut self.servers[u].head.w)?;
-            load_into(store, &format!("scheme.s{u}.head.b"), &mut self.servers[u].head.b)?;
-            load_adam(store, &format!("scheme.s{u}.adam"), &mut self.servers[u].adam)?;
-            self.servers[u].step = one_u64(store, &format!("scheme.s{u}.step"))?;
-        }
-        load_iters(store, &mut self.iters)?;
+    fn load_state(&mut self, env: &SessionEnv<'_>, store: &ParamStore) -> Result<()> {
+        self.pool.load_state(store, &env.data)?;
         self.switches = one_u64(store, "scheme.switches")?;
         let last = one_i32(store, "scheme.last_active")?;
         self.last_active = if last < 0 { None } else { Some(last as usize) };
@@ -776,25 +670,42 @@ impl Scheme for OursScheme {
     }
 
     fn memory(&self, env: &SessionEnv<'_>) -> MemoryBreakdown {
-        memory::ours_server_memory(&env.dims_time, &env.cuts)
+        if self.core.pool.is_pooled() {
+            // Pooled accountant: only the resident clients hold
+            // LoRA/optimizer state on the server.
+            memory::pooled_server_memory(
+                &env.dims_time,
+                &env.cuts,
+                &self.core.pool.resident_cuts(),
+            )
+        } else {
+            memory::ours_server_memory(&env.dims_time, &env.cuts)
+        }
     }
 
     fn adapter_switches(&self) -> u64 {
         self.core.switches
     }
 
-    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) {
-        self.core.save_state(out);
+    fn pool_stats(&self) -> Option<PoolStats> {
+        self.core.pool_stats()
     }
 
-    fn load_state(&mut self, store: &ParamStore) -> Result<()> {
-        self.core.load_state(store)
+    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
+        self.core.save_state(out)
+    }
+
+    fn load_state(&mut self, env: &SessionEnv<'_>, store: &ParamStore) -> Result<()> {
+        self.core.load_state(env, store)
     }
 }
 
 /// **SFL** baseline: numerically identical to Ours (the difference is
 /// timing and memory — per-client server submodels train in parallel,
-/// contending for the GPU).
+/// contending for the GPU).  The analytic memory model stays the
+/// eager per-client-submodel accounting regardless of the state pool —
+/// O(fleet) server residency is exactly the baseline's deficiency the
+/// paper measures.
 pub struct SflScheme {
     core: ParallelCore,
 }
@@ -833,12 +744,16 @@ impl Scheme for SflScheme {
         self.core.switches
     }
 
-    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) {
-        self.core.save_state(out);
+    fn pool_stats(&self) -> Option<PoolStats> {
+        self.core.pool_stats()
     }
 
-    fn load_state(&mut self, store: &ParamStore) -> Result<()> {
-        self.core.load_state(store)
+    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
+        self.core.save_state(out)
+    }
+
+    fn load_state(&mut self, env: &SessionEnv<'_>, store: &ParamStore) -> Result<()> {
+        self.core.load_state(env, store)
     }
 }
 
@@ -970,17 +885,18 @@ impl Scheme for SlScheme {
         memory::sl_server_memory(&env.dims_time, &env.cuts)
     }
 
-    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) {
+    fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
         save_adapters(out, "scheme.full", &self.full);
         out.push(("scheme.head.w".into(), self.head.w.clone()));
         out.push(("scheme.head.b".into(), self.head.b.clone()));
         save_iters(out, &self.iters);
+        Ok(())
     }
 
-    fn load_state(&mut self, store: &ParamStore) -> Result<()> {
+    fn load_state(&mut self, _env: &SessionEnv<'_>, store: &ParamStore) -> Result<()> {
         load_adapters(store, "scheme.full", &mut self.full)?;
-        load_into(store, "scheme.head.w", &mut self.head.w)?;
-        load_into(store, "scheme.head.b", &mut self.head.b)?;
+        load_tensor_into(store, "scheme.head.w", &mut self.head.w)?;
+        load_tensor_into(store, "scheme.head.b", &mut self.head.b)?;
         load_iters(store, &mut self.iters)
     }
 }
@@ -1044,29 +960,22 @@ impl<'e> Session<'e> {
             ..data::CorpusSpec::carer_like(dims_exec.vocab, dims_exec.seq)
         };
         let ds = data::generate(&spec);
-        // Every client needs at least one batch of examples; on larger
-        // synthetic fleets the partitioner's rebalance cannot satisfy
-        // that and numeric training is out of scope (use the analytic
-        // benches / --max-participants with a larger corpus instead).
-        if ds.train.len() < cfg.clients.len() * dims_exec.batch {
-            bail!(
-                "{} clients need at least {} training examples for per-client shards \
-                 ({} available) — numeric sessions cap out well below bench-scale fleets",
-                cfg.clients.len(),
-                cfg.clients.len() * dims_exec.batch,
-                ds.train.len()
-            );
-        }
-        let shards = data::dirichlet_partition(
+        // The shared data pool lets shards overlap at bench scale, so
+        // the only hard floor is that each round's *active cohort* gets
+        // one batch each (the old `corpus / batch` fleet cap is gone).
+        data::numeric_feasibility(
+            ds.train.len(),
+            cfg.clients.len(),
+            dims_exec.batch,
+            cfg.train.max_participants,
+        )?;
+        let pool_data = DataPool::new(
             &ds.train,
             cfg.clients.len(),
             cfg.train.dirichlet_alpha,
             cfg.train.seed + 1,
             dims_exec.batch,
         );
-        let total: usize = shards.iter().map(|s| s.len()).sum();
-        let weights: Vec<f32> =
-            shards.iter().map(|s| s.len() as f32 / total as f32).collect();
         // Per-client job tables: true profiles (ground truth) and
         // nominal profiles (the static cold-start model).  JobInfo is
         // per-client, so both are round-invariant on a stationary fleet.
@@ -1079,8 +988,7 @@ impl<'e> Session<'e> {
             dims_time,
             cuts,
             ds,
-            shards,
-            weights,
+            data: pool_data,
             oracle_jobs,
             nominal_jobs,
         };
@@ -1159,6 +1067,12 @@ impl<'e> Session<'e> {
     /// Current virtual clock.
     pub fn sim_time(&self) -> f64 {
         self.book.sim_time
+    }
+
+    /// State-pool counters, when pooled residency is active (tests and
+    /// diagnostics; the same snapshot streams in every round report).
+    pub fn pool_stats(&self) -> Option<PoolStats> {
+        self.scheme.pool_stats()
     }
 
     /// True once the run should stop: convergence detected or
@@ -1334,6 +1248,7 @@ impl<'e> Session<'e> {
             mean_loss: outcome.mean_loss,
             participants,
             env: env_snapshot,
+            pool: self.scheme.pool_stats(),
             eval,
         };
         for obs in &mut self.observers {
@@ -1475,7 +1390,7 @@ impl<'e> Session<'e> {
         };
         named.push(("book.detector.conv".into(), encode_u64s("conv", &conv_words)));
 
-        self.scheme.save_state(&mut named);
+        self.scheme.save_state(&mut named)?;
         let borrowed: Vec<(&str, &HostTensor)> =
             named.iter().map(|(n, t)| (n.as_str(), t)).collect();
         write_sflp(path, &borrowed)
@@ -1581,7 +1496,7 @@ impl<'e> Session<'e> {
         b.detector.restore_state(best, stale, conv);
         b.converged = conv.is_some();
 
-        session.scheme.load_state(&store)?;
+        session.scheme.load_state(&session.env, &store)?;
         Ok(session)
     }
 }

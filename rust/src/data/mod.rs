@@ -9,6 +9,7 @@
 //! scheme behaviour.
 
 use crate::tensor::rng::Rng;
+use anyhow::{bail, Result};
 
 /// One classification example: token ids + label.
 #[derive(Debug, Clone, PartialEq)]
@@ -140,6 +141,169 @@ pub fn dirichlet_partition(
         shards[min_idx].push(moved);
     }
     shards
+}
+
+/// Per-client decorrelation constant for the shared pool's derivation
+/// streams (odd multiplier, splitmix-style).
+const SHARD_STREAM: u64 = 0xD1B5_4A32_D192_ED03;
+
+/// Numeric-session feasibility floor: every *active* client needs at
+/// least one mini-batch of examples.  With the shared data pool, shards
+/// may overlap across the fleet, so the corpus only has to cover the
+/// round cohort — not `clients * batch` as the pre-pool eager partition
+/// required.  (`max_participants = 0` means full participation, so the
+/// cohort is the whole fleet.)
+pub fn numeric_feasibility(
+    corpus: usize,
+    clients: usize,
+    min_per_client: usize,
+    max_participants: usize,
+) -> Result<()> {
+    let cohort = if max_participants == 0 { clients } else { max_participants.min(clients) };
+    if corpus < cohort * min_per_client {
+        bail!(
+            "a round cohort of {cohort} clients needs at least {} training examples \
+             ({corpus} available) — bound the cohort with --max-participants or grow \
+             the corpus",
+            cohort * min_per_client
+        );
+    }
+    Ok(())
+}
+
+/// The fleet's example-index layout, owned once and shared by every
+/// consumer (batch iterators, aggregation weights, checkpoint
+/// validation).  Two modes, chosen automatically:
+///
+/// - **Dense** (`corpus >= clients * batch`): the exact non-IID
+///   Dirichlet partition ([`dirichlet_partition`]) — bit-identical
+///   shards and weights to the pre-pool eager path.
+/// - **Shared** (bench-scale fleets): the corpus is bucketed by class
+///   once, and any client's shard is *derived on demand* from the
+///   partition seed (a per-client Dirichlet class mixture sampled into
+///   a fixed-size shard).  Shards overlap across clients, which is what
+///   lifts the old `corpus_size / batch` fleet cap; per-client label
+///   skew is preserved.
+///
+/// Either way, deriving client `u`'s shard is deterministic in
+/// `(seed, u)` and independent of which other clients were ever asked
+/// for — the property the lazy state pool builds on.
+#[derive(Debug)]
+pub struct DataPool {
+    clients: usize,
+    batch: usize,
+    seed: u64,
+    /// Σ shard lengths (the |D| in the |D_u|/|D| aggregation weights).
+    total: usize,
+    mode: PoolMode,
+}
+
+#[derive(Debug)]
+enum PoolMode {
+    Dense { shards: Vec<Vec<usize>> },
+    Shared { buckets: Vec<Vec<usize>>, alpha: f64, shard_size: usize },
+}
+
+impl DataPool {
+    /// Build the pool for `clients` over `examples`.  `min_per_client`
+    /// is the per-client floor (one mini-batch); the Dirichlet `alpha`
+    /// and `seed` match [`dirichlet_partition`]'s parameters so the
+    /// Dense mode reproduces it exactly.
+    pub fn new(
+        examples: &[Example],
+        clients: usize,
+        alpha: f64,
+        seed: u64,
+        min_per_client: usize,
+    ) -> Self {
+        if examples.len() >= clients * min_per_client {
+            let shards = dirichlet_partition(examples, clients, alpha, seed, min_per_client);
+            let total = shards.iter().map(|s| s.len()).sum();
+            return Self {
+                clients,
+                batch: min_per_client,
+                seed,
+                total,
+                mode: PoolMode::Dense { shards },
+            };
+        }
+        let classes = examples.iter().map(|e| e.label).max().unwrap_or(0) as usize + 1;
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); classes];
+        for (i, ex) in examples.iter().enumerate() {
+            buckets[ex.label as usize].push(i);
+        }
+        let shard_size = min_per_client.max(examples.len() / clients.max(1));
+        Self {
+            clients,
+            batch: min_per_client,
+            seed,
+            total: clients * shard_size,
+            mode: PoolMode::Shared { buckets, alpha, shard_size },
+        }
+    }
+
+    pub fn clients(&self) -> usize {
+        self.clients
+    }
+
+    /// True when shards are derived (and may overlap) rather than a
+    /// disjoint Dirichlet partition.
+    pub fn is_shared(&self) -> bool {
+        matches!(self.mode, PoolMode::Shared { .. })
+    }
+
+    pub fn shard_len(&self, u: usize) -> usize {
+        match &self.mode {
+            PoolMode::Dense { shards } => shards[u].len(),
+            PoolMode::Shared { shard_size, .. } => *shard_size,
+        }
+    }
+
+    /// Data-size aggregation weight |D_u|/|D| — same arithmetic as the
+    /// pre-pool eager `weights` vector, so Dense-mode weights are
+    /// bit-identical to it.
+    pub fn weight(&self, u: usize) -> f32 {
+        self.shard_len(u) as f32 / self.total as f32
+    }
+
+    /// Derive client `u`'s shard into a caller-owned buffer (cleared,
+    /// then filled) — the zero-allocation path the state pool uses when
+    /// re-materializing a client.
+    pub fn shard_into(&self, u: usize, out: &mut Vec<usize>) {
+        out.clear();
+        match &self.mode {
+            PoolMode::Dense { shards } => out.extend_from_slice(&shards[u]),
+            PoolMode::Shared { buckets, alpha, shard_size } => {
+                let mut rng = Rng::new(self.seed ^ (u as u64).wrapping_mul(SHARD_STREAM));
+                let mut mixture = rng.dirichlet(*alpha, buckets.len());
+                for (c, w) in mixture.iter_mut().enumerate() {
+                    if buckets[c].is_empty() {
+                        *w = 0.0;
+                    }
+                }
+                for _ in 0..*shard_size {
+                    let c = rng.categorical(&mixture);
+                    let b = &buckets[c];
+                    out.push(b[rng.below(b.len())]);
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over [`DataPool::shard_into`].
+    pub fn shard(&self, u: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.shard_len(u));
+        self.shard_into(u, &mut out);
+        out
+    }
+
+    /// A fresh batch iterator for client `u` (seeded by the caller so
+    /// the stream matches the session's `seed + 100 + u` convention).
+    /// `scratch` is reused for the shard derivation.
+    pub fn iter_for(&self, u: usize, iter_seed: u64, scratch: &mut Vec<usize>) -> BatchIter {
+        self.shard_into(u, scratch);
+        BatchIter::new(scratch, self.batch, iter_seed)
+    }
 }
 
 /// Mini-batch iterator over a client shard: shuffles every epoch with a
@@ -365,6 +529,90 @@ mod tests {
         assert_eq!(tokens.len(), 2 * 16);
         assert_eq!(labels.len(), 2);
         assert_eq!(&tokens[..16], ds.train[0].tokens.as_slice());
+    }
+
+    #[test]
+    fn dense_pool_reproduces_dirichlet_partition_exactly() {
+        let ds = generate(&small_spec());
+        let pool = DataPool::new(&ds.train, 6, 0.5, 9, 10);
+        assert!(!pool.is_shared());
+        let shards = dirichlet_partition(&ds.train, 6, 0.5, 9, 10);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        for (u, s) in shards.iter().enumerate() {
+            assert_eq!(&pool.shard(u), s, "client {u} shard diverged");
+            assert_eq!(pool.shard_len(u), s.len());
+            let w = s.len() as f32 / total as f32;
+            assert_eq!(pool.weight(u).to_bits(), w.to_bits(), "client {u} weight diverged");
+        }
+    }
+
+    #[test]
+    fn shared_pool_lifts_the_corpus_over_batch_cap() {
+        // 600 examples cannot give 200 clients 10 each disjointly — the
+        // pool switches to derived, overlapping shards.
+        let ds = generate(&small_spec());
+        let pool = DataPool::new(&ds.train, 200, 0.5, 9, 10);
+        assert!(pool.is_shared());
+        let mut weight_sum = 0.0f64;
+        for u in [0usize, 7, 199] {
+            let s = pool.shard(u);
+            assert_eq!(s.len(), pool.shard_len(u));
+            assert!(s.len() >= 10);
+            assert!(s.iter().all(|&i| i < ds.train.len()));
+            // Deriving twice (and out of order) is deterministic.
+            assert_eq!(pool.shard(u), s);
+        }
+        for u in 0..200 {
+            weight_sum += pool.weight(u) as f64;
+        }
+        assert!((weight_sum - 1.0).abs() < 1e-3, "weights sum to {weight_sum}");
+        // Different clients draw different (label-skewed) shards.
+        assert_ne!(pool.shard(0), pool.shard(1));
+    }
+
+    #[test]
+    fn shared_pool_shards_are_label_skewed() {
+        // The derived shards must preserve the non-IID property: a
+        // low-alpha client concentrates on few classes.
+        let ds = generate(&small_spec());
+        let pool = DataPool::new(&ds.train, 100, 0.1, 9, 12);
+        assert!(pool.is_shared());
+        let mut dominated = 0usize;
+        for u in 0..20 {
+            let h = label_histogram(&ds.train, &pool.shard(u), 6);
+            let total: usize = h.iter().sum();
+            if *h.iter().max().unwrap() * 2 > total {
+                dominated += 1;
+            }
+        }
+        assert!(dominated >= 8, "only {dominated}/20 shards were class-dominated");
+    }
+
+    #[test]
+    fn iter_for_matches_manual_batch_iter() {
+        let ds = generate(&small_spec());
+        let pool = DataPool::new(&ds.train, 6, 0.5, 9, 10);
+        let mut scratch = Vec::new();
+        for u in 0..6 {
+            let mut a = pool.iter_for(u, 1000 + u as u64, &mut scratch);
+            let mut b = BatchIter::new(&pool.shard(u), 10, 1000 + u as u64);
+            for _ in 0..5 {
+                assert_eq!(a.next_batch(), b.next_batch());
+            }
+        }
+    }
+
+    #[test]
+    fn numeric_feasibility_boundary() {
+        // Full participation: the whole fleet is the cohort.
+        assert!(numeric_feasibility(60, 6, 10, 0).is_ok());
+        assert!(numeric_feasibility(59, 6, 10, 0).is_err());
+        // Bounded cohorts only need to cover the cohort.
+        assert!(numeric_feasibility(30, 10_000, 10, 3).is_ok());
+        assert!(numeric_feasibility(29, 10_000, 10, 3).is_err());
+        // A cap larger than the fleet clamps to the fleet.
+        assert!(numeric_feasibility(60, 6, 10, 99).is_ok());
+        assert!(numeric_feasibility(59, 6, 10, 99).is_err());
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod lora;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod pool;
 pub mod runtime;
 pub mod simclock;
 pub mod telemetry;

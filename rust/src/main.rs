@@ -14,8 +14,11 @@
 //! file).  Fleet-scale scheduling: --fleet N --fleet-preset
 //! paper|lognormal|zipf --fleet-seed N --fleet-mfu-sigma S synthesize
 //! the client list (`fleet::FleetSpec`); --max-participants N bounds
-//! each round's cohort; --oracle-timing pins the scheduler to the
-//! analytic eq. 10–12 timings instead of the online TimingEstimator.
+//! each round's cohort; --state-pool-cap N bounds server-resident
+//! per-client training state (lazy materialization + spill, O(active)
+//! memory — EXPERIMENTS.md §Memory); --oracle-timing pins the
+//! scheduler to the analytic eq. 10–12 timings instead of the online
+//! TimingEstimator.
 //! Non-stationary environments: --trace
 //! none|random_walk|diurnal|markov|replay --trace-seed N
 //! --trace-replay FILE drive the `trace::EnvTimeline` (time-varying
@@ -37,7 +40,7 @@ use std::path::{Path, PathBuf};
 
 const USAGE: &str = "usage: sfl [--config mini|small] [--artifacts DIR] [--out DIR] \
 [--experiment FILE] [--seed N] [--dropout P] [--fleet N] [--fleet-preset paper|lognormal|zipf] \
-[--fleet-seed N] [--fleet-mfu-sigma S] [--max-participants N] \
+[--fleet-seed N] [--fleet-mfu-sigma S] [--max-participants N] [--state-pool-cap N] \
 [--trace none|random_walk|diurnal|markov|replay] [--trace-seed N] [--trace-replay FILE] \
 [--obs-noise-sigma S] <run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
 [--scheduler proposed|fifo|wf|random] [--max-rounds N] [--quiet] [--oracle-timing] \
@@ -75,6 +78,13 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(m) = args.get_parse::<usize>("max-participants")? {
         cfg.train.max_participants = m;
+    }
+    // Pooled server-side state residency: keep at most
+    // max(N, round cohort) per-client state sets resident; 0 (default)
+    // = eager.  Never changes numerics — pooled and eager runs train
+    // bit-identical trajectories.
+    if let Some(c) = args.get_parse::<usize>("state-pool-cap")? {
+        cfg.pool.state_cap = c;
     }
     if args.has("oracle-timing") {
         cfg.train.oracle_timing = true;

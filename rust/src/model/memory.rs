@@ -118,6 +118,30 @@ pub fn sl_server_memory(d: &ModelDims, cuts: &[usize]) -> MemoryBreakdown {
     }
 }
 
+/// **Ours + state pool**: identical to [`ours_server_memory`] except
+/// only the pool-resident clients hold LoRA/optimizer state and an
+/// in-flight receive buffer — the model copy and the deepest-cut
+/// activation set are fleet-shape properties and stay.  `cuts` is the
+/// whole fleet (sizes the shared activation set); `resident_cuts` is
+/// the currently resident subset.  With `resident_cuts == cuts` this
+/// degenerates to the eager accountant exactly.
+pub fn pooled_server_memory(
+    d: &ModelDims,
+    cuts: &[usize],
+    resident_cuts: &[usize],
+) -> MemoryBreakdown {
+    let max_server_layers = cuts.iter().map(|&k| server_layers(d, k)).max().unwrap_or(0);
+    MemoryBreakdown {
+        model_params: d.total_params() as f64 * BYTES_F32,
+        activations: activation_bytes(d, max_server_layers),
+        lora_states: resident_cuts
+            .iter()
+            .map(|&k| lora_state_bytes(d, server_layers(d, k), true))
+            .sum(),
+        buffers: resident_cuts.len() as f64 * d.activation_bytes() as f64,
+    }
+}
+
 /// Client-side memory for a device holding `k` layers (used by the split
 /// selector to match submodels to device budgets).
 pub fn client_memory(d: &ModelDims, k: usize) -> MemoryBreakdown {
@@ -200,6 +224,39 @@ mod tests {
         let sfl12 =
             sfl_server_memory(&d, &[1, 1, 2, 2, 3, 3, 1, 1, 2, 2, 3, 3]).total_mb();
         assert!(sfl12 / sfl6 > 1.8);
+    }
+
+    #[test]
+    fn pooled_accountant_degenerates_to_eager_and_scales_with_residency() {
+        let d = ModelDims::bert_base();
+        let cuts = paper_cuts();
+        let eager = ours_server_memory(&d, &cuts);
+        let full = pooled_server_memory(&d, &cuts, &cuts);
+        assert_eq!(full.total_bytes().to_bits(), eager.total_bytes().to_bits());
+        // Fewer residents shrink only the per-client terms.
+        let two = pooled_server_memory(&d, &cuts, &cuts[..2]);
+        assert_eq!(two.model_params.to_bits(), eager.model_params.to_bits());
+        assert_eq!(two.activations.to_bits(), eager.activations.to_bits());
+        assert!(two.lora_states < eager.lora_states);
+        assert!(two.buffers < eager.buffers);
+    }
+
+    #[test]
+    fn pooled_client_state_is_o_active_not_o_fleet() {
+        // The acceptance shape: 10k-client fleet, 32 resident — the
+        // resident client-state bytes must be well under 5% of eager's.
+        let d = ModelDims::bert_base();
+        let fleet: Vec<usize> = (0..10_000).map(|u| [1, 2, 3][u % 3]).collect();
+        let resident: Vec<usize> = fleet[..32].to_vec();
+        let eager = ours_server_memory(&d, &fleet);
+        let pooled = pooled_server_memory(&d, &fleet, &resident);
+        assert!(
+            pooled.lora_states * 20.0 <= eager.lora_states,
+            "pooled {} vs eager {}",
+            pooled.lora_states,
+            eager.lora_states
+        );
+        assert!(pooled.buffers * 20.0 <= eager.buffers);
     }
 
     #[test]

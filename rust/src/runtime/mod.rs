@@ -40,12 +40,21 @@ pub struct AdamState {
 }
 
 impl AdamState {
+    /// Zeroed first/second moments mirroring `trainables`.  The moments
+    /// get distinct `adam.m.{name}` / `adam.v.{name}` tensor names (they
+    /// are different buffers; identical names made checkpoint diffs and
+    /// debug dumps ambiguous), and `v` is constructed directly instead
+    /// of cloning the whole `m` vector.
     pub fn zeros_like(trainables: &[&HostTensor]) -> Self {
-        let z: Vec<HostTensor> = trainables
+        let m = trainables
             .iter()
-            .map(|t| HostTensor::zeros(format!("adam.{}", t.name), t.shape.clone()))
+            .map(|t| HostTensor::zeros(format!("adam.m.{}", t.name), t.shape.clone()))
             .collect();
-        Self { m: z.clone(), v: z }
+        let v = trainables
+            .iter()
+            .map(|t| HostTensor::zeros(format!("adam.v.{}", t.name), t.shape.clone()))
+            .collect();
+        Self { m, v }
     }
 }
 
@@ -583,5 +592,28 @@ impl Engine {
             step,
         };
         Ok((loss, new_state))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_zeros_like_gives_moments_distinct_names() {
+        let a = HostTensor::zeros("aq", vec![2, 3]);
+        let b = HostTensor::zeros("head.w", vec![4]);
+        let adam = AdamState::zeros_like(&[&a, &b]);
+        assert_eq!(adam.m.len(), 2);
+        assert_eq!(adam.v.len(), 2);
+        assert_eq!(adam.m[0].name, "adam.m.aq");
+        assert_eq!(adam.v[0].name, "adam.v.aq");
+        assert_eq!(adam.m[1].name, "adam.m.head.w");
+        assert_eq!(adam.v[1].name, "adam.v.head.w");
+        for t in adam.m.iter().chain(adam.v.iter()) {
+            assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+        }
+        assert_eq!(adam.m[0].shape, vec![2, 3]);
+        assert_eq!(adam.v[1].shape, vec![4]);
     }
 }

@@ -59,11 +59,28 @@ impl<W: Write> RoundObserver for JsonLinesObserver<W> {
             ),
             None => String::new(),
         };
+        // State-pool counters (present under pooled residency).
+        let pool = match &r.pool {
+            Some(p) => format!(
+                ",\"pool\":{{\"resident\":{},\"spilled\":{},\"resident_bytes\":{},\
+                 \"peak_resident_bytes\":{},\"spill_bytes\":{},\"hits\":{},\"misses\":{},\
+                 \"evictions\":{}}}",
+                p.resident,
+                p.spilled,
+                p.resident_bytes,
+                p.peak_resident_bytes,
+                p.spill_bytes,
+                p.hits,
+                p.misses,
+                p.evictions
+            ),
+            None => String::new(),
+        };
         let wrote = writeln!(
             self.out,
             "{{\"event\":\"round\",\"scheme\":\"{}\",\"scheduler\":\"{}\",\"round\":{},\
              \"sim_time\":{:.6},\"step_time\":{:.6},\"mean_loss\":{:.6},\
-             \"participants\":{}{env}{eval}}}",
+             \"participants\":{}{env}{pool}{eval}}}",
             r.scheme,
             r.scheduler,
             r.round,
@@ -258,6 +275,7 @@ mod tests {
                 mean_loss: 1.25,
                 participants: vec![0, 1, 2],
                 env: None,
+                pool: None,
                 eval: Some(EvalPoint { acc: 0.5, f1: 0.4, converged: false }),
             });
             let r = fake_run();
@@ -269,8 +287,44 @@ mod tests {
         assert!(s.contains("\"step_time\":3.125000"));
         assert!(s.contains("\"participants\":3"));
         assert!(!s.contains("\"env\""), "static run must not emit an env snapshot");
+        assert!(!s.contains("\"pool\""), "eager run must not emit pool counters");
         assert!(s.contains("\"acc\":0.500000"));
         assert!(s.contains("\"event\":\"complete\""));
+    }
+
+    #[test]
+    fn json_lines_observer_emits_pool_counters_when_pooled() {
+        use crate::coordinator::RoundReport;
+        use crate::pool::PoolStats;
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut obs = JsonLinesObserver::new(&mut buf);
+            obs.on_round(&RoundReport {
+                scheme: SchemeKind::Ours,
+                scheduler: SchedulerLabel::Scheduled(SchedulerKind::Proposed),
+                round: 2,
+                sim_time: 4.0,
+                step_time: 2.0,
+                mean_loss: 0.75,
+                participants: vec![3, 9],
+                env: None,
+                pool: Some(PoolStats {
+                    hits: 10,
+                    misses: 4,
+                    evictions: 2,
+                    resident: 2,
+                    spilled: 2,
+                    resident_bytes: 4096,
+                    peak_resident_bytes: 8192,
+                    spill_bytes: 1024,
+                }),
+                eval: None,
+            });
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("\"pool\":{\"resident\":2,\"spilled\":2"), "{s}");
+        assert!(s.contains("\"peak_resident_bytes\":8192"), "{s}");
+        assert!(s.contains("\"evictions\":2}"), "{s}");
     }
 
     #[test]
@@ -289,6 +343,7 @@ mod tests {
                 mean_loss: 0.5,
                 participants: vec![0, 2],
                 env: Some(EnvSnapshot { mfu_mean: 0.9125, link_mean: 1.05, available: 2 }),
+                pool: None,
                 eval: None,
             });
         }

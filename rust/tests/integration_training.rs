@@ -117,6 +117,60 @@ fn sl_steady_state_is_host_tensor_allocation_free() {
 }
 
 #[test]
+fn pooled_steady_state_is_host_tensor_allocation_free() {
+    // With bounded cohorts and a residency cap of 1, every round churns
+    // the pool (evict → spill → rematerialize from recycled arenas) —
+    // and after the watermark round the whole loop, evictions included,
+    // must allocate zero HostTensors.
+    let Some(e) = engine() else { return };
+    let allocs_for = |rounds: usize| {
+        let mut cfg = mini_cfg();
+        cfg.train.max_rounds = rounds;
+        cfg.train.max_participants = 2;
+        cfg.pool.state_cap = 1;
+        let mut t = Session::new(&e, &cfg).unwrap();
+        let before = sfl::tensor::alloc_count();
+        t.run_to_convergence().unwrap();
+        sfl::tensor::alloc_count() - before
+    };
+    let short = allocs_for(2);
+    let long = allocs_for(4);
+    assert_eq!(
+        long, short,
+        "pooled rounds 3-4 allocated {} extra HostTensors (steady state must be allocation-free)",
+        long - short
+    );
+}
+
+#[test]
+fn shared_data_pool_lifts_corpus_fleet_cap() {
+    // 4000 mini-batch-8 clients need 32k examples for disjoint shards —
+    // more than the 16k corpus.  The pre-pool session refused to start;
+    // the shared data pool + state pool run it numerically with bounded
+    // cohorts and O(active) state.
+    let Some(e) = engine() else { return };
+    let mut cfg = mini_cfg();
+    cfg.apply_fleet(sfl::fleet::FleetSpec::new(sfl::fleet::FleetPreset::Paper, 4000, 5));
+    cfg.train.max_rounds = 2;
+    cfg.train.max_participants = 2;
+    cfg.pool.state_cap = 2;
+    let mut s = Session::new(&e, &cfg).unwrap();
+    assert!(s.env().data.is_shared(), "4000 clients over 16k examples must share the pool");
+    while !s.done() {
+        let rep = s.step_round().unwrap();
+        assert!(rep.participants.len() <= 2);
+        assert!(rep.mean_loss.is_finite());
+        let pool = rep.pool.expect("pooled run must stream pool counters");
+        assert!(pool.resident <= 2);
+    }
+    // Full participation over the same fleet is still (correctly)
+    // infeasible: the corpus cannot cover a 4000-client cohort.
+    let mut infeasible = cfg.clone();
+    infeasible.train.max_participants = 0;
+    assert!(Session::new(&e, &infeasible).is_err());
+}
+
+#[test]
 fn round_loop_does_not_clone_client_configs() {
     // The round loop is index-based (`aggregation_time_for`,
     // `sl_round_for`, `sfl_step_for`): after construction, stepping

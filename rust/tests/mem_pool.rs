@@ -1,0 +1,159 @@
+//! Acceptance gate for the pooled client state (ISSUE 5): on a
+//! 10k-client fleet with a 32-client cohort, pooled peak resident state
+//! must be ≤ 5% of the eager footprint, with zero `HostTensor`
+//! allocations per round after warm-up and bit-exact spill round trips.
+//! Pure host-side — no PJRT artifacts needed (pooled-vs-eager numeric
+//! bit-identity is asserted by the artifact-gated session suites).
+
+use sfl::data::{self, DataPool};
+use sfl::lora::AdapterSet;
+use sfl::model::{memory, ModelDims};
+use sfl::pool::StatePool;
+use sfl::runtime::HeadState;
+use sfl::tensor::{alloc_count, rng::Rng, HostTensor};
+
+fn mk_head(d: &ModelDims) -> HeadState {
+    HeadState {
+        w: HostTensor::zeros("head.w", vec![d.hidden, d.classes]),
+        b: HostTensor::zeros("head.b", vec![d.classes]),
+    }
+}
+
+fn fleet(n: usize, cap: usize) -> (ModelDims, Vec<usize>, DataPool, StatePool) {
+    let d = ModelDims::mini();
+    let spec = data::CorpusSpec {
+        train_size: 2_000,
+        test_size: 100,
+        ..data::CorpusSpec::carer_like(d.vocab, d.seq)
+    };
+    let ds = data::generate(&spec);
+    let cuts: Vec<usize> = (0..n).map(|u| d.cuts[u % d.cuts.len()]).collect();
+    let dpool = DataPool::new(&ds.train, n, 0.5, 11, d.batch);
+    let full0 = AdapterSet::init(&d, d.layers, 42);
+    let head0 = mk_head(&d);
+    let pool = StatePool::new(&d, &cuts, full0, head0, 100, cap, &dpool).unwrap();
+    (d, cuts, dpool, pool)
+}
+
+#[test]
+fn pooled_resident_state_is_o_active_on_a_10k_fleet() {
+    const N: usize = 10_000;
+    const COHORT: usize = 32;
+    const ROUNDS: u64 = 12;
+    const WARMUP: u64 = 4;
+    let (d, cuts, dpool, mut pool) = fleet(N, COHORT);
+    assert!(dpool.is_shared(), "10k clients over a 2k corpus must use the shared data pool");
+
+    let mut ids: Vec<usize> = (0..N).collect();
+    let mut rng = Rng::new(5);
+    let mut steady_base = 0u64;
+    for round in 1..=ROUNDS {
+        if round == WARMUP + 1 {
+            steady_base = alloc_count();
+        }
+        for i in 0..COHORT {
+            let j = i + rng.below(N - i);
+            ids.swap(i, j);
+        }
+        pool.begin_round(round, COHORT).unwrap();
+        for &u in &ids[..COHORT] {
+            let slot = pool.acquire(u, &dpool).unwrap();
+            let _ = slot.it.next_batch();
+            slot.cs.step += 1;
+            slot.cs.adam.m[0].as_f32_mut().unwrap()[0] += 1.0;
+        }
+    }
+    assert_eq!(
+        alloc_count() - steady_base,
+        0,
+        "pooled rounds after warm-up must allocate zero HostTensors"
+    );
+
+    let st = pool.stats();
+    let eager = pool.eager_state_bytes();
+    assert!(st.resident <= COHORT);
+    assert!(
+        st.peak_resident_bytes * 20 <= eager,
+        "pooled peak {} B exceeds 5% of eager {} B",
+        st.peak_resident_bytes,
+        eager
+    );
+    assert!(st.evictions > 0, "random 32-cohorts over 10k clients must evict");
+    assert_eq!(st.resident_bytes, st.resident as u64 * pool.bytes_per_client());
+
+    // The analytic accountant agrees: resident client state is
+    // O(cohort), not O(fleet).
+    let analytic_eager = memory::ours_server_memory(&d, &cuts).lora_states;
+    let analytic_pooled =
+        memory::pooled_server_memory(&d, &cuts, &pool.resident_cuts()).lora_states;
+    assert!(
+        analytic_pooled * 20.0 <= analytic_eager,
+        "analytic pooled {analytic_pooled} vs eager {analytic_eager}"
+    );
+}
+
+#[test]
+fn spilled_clients_round_trip_bit_exactly_under_pressure() {
+    let (_d, _cuts, dpool, mut pool) = fleet(50, 2);
+    // Train client 7, recording its exact state.
+    pool.begin_round(1, 2).unwrap();
+    {
+        let slot = pool.acquire(7, &dpool).unwrap();
+        slot.cs.step = 3;
+        slot.ss.step = 5;
+        slot.cs.lora.tensors[1].as_f32_mut().unwrap().fill(0.75);
+        slot.ss.adam.v[2].as_f32_mut().unwrap().fill(-1.25);
+        let _ = slot.it.next_batch();
+    }
+    let (want_cs, want_ss, want_iter) = {
+        let s = pool.resident(7).unwrap();
+        let (idx, cur, rng) = s.it.state();
+        (s.cs.clone(), s.ss.clone(), (idx.to_vec(), cur, rng))
+    };
+    // Push 7 out through several generations of churn.
+    for round in 2..=6u64 {
+        pool.begin_round(round, 2).unwrap();
+        pool.acquire(round as usize, &dpool).unwrap();
+        pool.acquire(20 + round as usize, &dpool).unwrap();
+    }
+    assert!(pool.resident(7).is_none());
+    pool.begin_round(7, 2).unwrap();
+    let slot = pool.acquire(7, &dpool).unwrap();
+    assert_eq!(slot.cs.step, want_cs.step);
+    assert_eq!(slot.ss.step, want_ss.step);
+    assert_eq!(slot.cs.lora.max_abs_diff(&want_cs.lora).unwrap(), 0.0);
+    assert_eq!(slot.ss.lora.max_abs_diff(&want_ss.lora).unwrap(), 0.0);
+    for (a, b) in slot
+        .cs
+        .adam
+        .m
+        .iter()
+        .chain(slot.cs.adam.v.iter())
+        .chain(slot.ss.adam.m.iter())
+        .chain(slot.ss.adam.v.iter())
+        .zip(
+            want_cs
+                .adam
+                .m
+                .iter()
+                .chain(want_cs.adam.v.iter())
+                .chain(want_ss.adam.m.iter())
+                .chain(want_ss.adam.v.iter()),
+        )
+    {
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+    let (idx, cur, rng) = slot.it.state();
+    assert_eq!((idx.to_vec(), cur, rng), want_iter);
+}
+
+#[test]
+fn shared_pool_sessions_have_no_corpus_over_batch_cap() {
+    // The old eager partition bailed whenever clients * batch exceeded
+    // the corpus; the shared pool only needs the *cohort* covered.
+    assert!(data::numeric_feasibility(2_000, 10_000, 8, 32).is_ok());
+    assert!(data::numeric_feasibility(2_000, 10_000, 8, 0).is_err());
+    // Boundary: cohort * batch exactly equals the corpus.
+    assert!(data::numeric_feasibility(256, 10_000, 8, 32).is_ok());
+    assert!(data::numeric_feasibility(255, 10_000, 8, 32).is_err());
+}

@@ -9,6 +9,7 @@
 
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
 use sfl::coordinator::{RunResult, Session};
+use sfl::fleet::{FleetPreset, FleetSpec};
 use sfl::runtime::Engine;
 use sfl::trace::{TraceKind, TraceSpec};
 use std::path::{Path, PathBuf};
@@ -170,6 +171,83 @@ fn non_stationary_trace_checkpoint_resume_is_bit_identical() {
         ..TraceSpec::default()
     };
     roundtrip(&e, &churn, "trace-markov");
+}
+
+/// A pooled bench-scale-shaped config: 24 synthetic clients, bounded
+/// 3-client cohorts, residency cap 2 (so evictions and spills happen),
+/// dropout + a random-walk trace + the random scheduler — every RNG
+/// stream plus the pool machinery in one run.
+fn pooled_cfg() -> ExperimentConfig {
+    let mut c = mini_cfg();
+    c.apply_fleet(FleetSpec::new(FleetPreset::Paper, 24, 3));
+    c.train.max_participants = 3;
+    c.train.dropout_prob = 0.3;
+    c.scheduler = SchedulerKind::Random;
+    c.pool.state_cap = 2;
+    c.trace = TraceSpec {
+        kind: TraceKind::RandomWalk,
+        seed: 13,
+        mfu_sigma: 0.1,
+        link_sigma: 0.08,
+        obs_noise_sigma: 0.15,
+        ..TraceSpec::default()
+    };
+    c
+}
+
+#[test]
+fn pooled_session_matches_eager_bitwise() {
+    // The state pool is a memory optimization, not a numeric change:
+    // the pooled run must reproduce the eager run bit-for-bit — losses,
+    // sim clock, eval series, traffic — on the same fleet.
+    let Some(e) = engine() else { return };
+    let pooled = pooled_cfg();
+    let mut eager = pooled.clone();
+    eager.pool.state_cap = 0;
+    let rp = Session::new(&e, &pooled).unwrap().run_to_convergence().unwrap();
+    let re = Session::new(&e, &eager).unwrap().run_to_convergence().unwrap();
+    assert_bit_identical(&re, &rp, "pooled-vs-eager");
+}
+
+#[test]
+fn pooled_sparse_checkpoint_resume_is_bit_identical() {
+    // Satellite: resume a pooled session mid-run — some clients
+    // resident, some spilled, most never materialized — under dropout +
+    // a random-walk trace, and replay the remaining rounds
+    // bit-identically.  Also resume the same sparse checkpoint under a
+    // different pool cap (including eager): the cap is not part of the
+    // fingerprint because it never changes numerics.
+    let Some(e) = engine() else { return };
+    let cfg = pooled_cfg();
+    let mut full = Session::new(&e, &cfg).unwrap();
+    let reference = full.run_to_convergence().unwrap();
+
+    let mut first = Session::new(&e, &cfg).unwrap();
+    for _ in 0..3 {
+        first.step_round().unwrap();
+    }
+    let st = first.pool_stats().expect("pooled session must report pool stats");
+    let materialized = st.resident + st.spilled;
+    assert!(
+        materialized < 24,
+        "3 bounded rounds cannot have materialized the whole fleet ({materialized}/24)"
+    );
+    assert!(st.resident <= 3, "residency must stay within max(cap, cohort)");
+    let path = ckpt_path("pooled-sparse");
+    first.checkpoint(&path).unwrap();
+    drop(first);
+
+    let mut resumed = Session::resume(&e, &cfg, &path).unwrap();
+    assert_eq!(resumed.round(), 3);
+    let result = resumed.run_to_convergence().unwrap();
+    assert_bit_identical(&reference, &result, "pooled-sparse");
+
+    // Same checkpoint, different (eager) residency on resume.
+    let mut eager = cfg.clone();
+    eager.pool.state_cap = 0;
+    let mut resumed_eager = Session::resume(&e, &eager, &path).unwrap();
+    let result_eager = resumed_eager.run_to_convergence().unwrap();
+    assert_bit_identical(&reference, &result_eager, "pooled-sparse-eager-resume");
 }
 
 #[test]
