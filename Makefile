@@ -3,7 +3,7 @@
 # `artifacts` needs the python env (jax) once; everything else is
 # rust-only.  Tier-1 verify: `make build test`.  Lint gate: `make lint`.
 
-.PHONY: artifacts build test bench bench-sched bench-trace bench-mem lint clean
+.PHONY: artifacts build test bench bench-sched bench-trace bench-mem bench-robust lint clean
 
 # AOT-lower the HLO artifacts + params.bin the runtime executes.
 # Output lands in rust/artifacts/<config>/ (cargo's working directory
@@ -41,6 +41,13 @@ bench-trace:
 bench-mem:
 	cd rust && cargo bench --bench mem_scale
 
+# Attack × fraction × aggregator robustness sweep; writes
+# rust/BENCH_robust.json (recovered quality per defense —
+# EXPERIMENTS.md §Robustness).  CI runs the same bench with
+# ROBUST_SMOKE=1 (caps the sweep at the 20%-attacker gate column).
+bench-robust:
+	cd rust && cargo bench --bench robust
+
 # Format + clippy gate (CI tier-1 companion).
 lint:
 	cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
@@ -48,4 +55,4 @@ lint:
 clean:
 	cd rust && cargo clean
 	rm -f rust/BENCH_hotpath.json rust/BENCH_sched.json rust/BENCH_trace.json \
-	      rust/BENCH_memory.json
+	      rust/BENCH_memory.json rust/BENCH_robust.json

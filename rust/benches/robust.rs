@@ -1,0 +1,144 @@
+//! Robust-aggregation bench: attack type × attacker fraction × merge
+//! kernel sweep on the closed-form `faults::testbed` world, recording
+//! the fraction of clean-run final quality each defense recovers into
+//! `BENCH_robust.json`.  Pure host-side — attacks run through the real
+//! `FaultInjector`, defenses through the real `Committee` / sanitizer /
+//! trimmed / clipped kernels, so no PJRT artifacts are needed.
+//!
+//!     cargo bench --bench robust               # full sweep
+//!     ROBUST_SMOKE=1 cargo bench --bench robust  # CI smoke (frac 0.2 only)
+//!
+//! The 20%-attacker column is the acceptance gate (asserted in smoke
+//! runs too): trimmed mean and norm clipping must recover ≥ 95% of the
+//! clean run's final quality while plain FedAvg degrades below 0.8.
+
+use sfl::faults::testbed::{run, Scenario};
+use sfl::faults::{AggKind, AttackKind};
+
+const GATE_FRAC: f64 = 0.2;
+const CLIP_REL: f64 = 0.02;
+
+fn main() {
+    let smoke = std::env::var("ROBUST_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let fracs: &[f64] = if smoke { &[0.2] } else { &[0.1, 0.2, 0.3] };
+    let base = Scenario::default();
+    let mut entries: Vec<(String, String)> = Vec::new();
+
+    let clean = run(&base).expect("clean run");
+    println!("robust clean: quality={:.6} (d0={:.3})", clean.quality, clean.d0);
+    entries.push(("robust/quality/clean".into(), format!("{:.6}", clean.quality)));
+    let floor = 0.95 * clean.quality;
+
+    for attack in [AttackKind::Corrupt, AttackKind::Scale, AttackKind::Stale] {
+        for &frac in fracs {
+            let attackers = (frac * base.n as f64).ceil() as usize;
+            for agg in [AggKind::Mean, AggKind::Trimmed, AggKind::Clip] {
+                let sc = Scenario {
+                    attack,
+                    frac,
+                    agg,
+                    // Defense sized to the threat: trim ⌈frac·n⌉ from
+                    // each tail so every attacker can be discarded.
+                    trim: if agg == AggKind::Trimmed { attackers } else { 0 },
+                    clip_rel: if agg == AggKind::Clip { CLIP_REL } else { f64::INFINITY },
+                    ..base.clone()
+                };
+                let out = run(&sc).expect("scenario run");
+                let tag = format!("{attack}/frac{}/{agg}", (frac * 100.0).round() as u64);
+                println!(
+                    "robust {tag}: quality={:.6} recovery={:.4} trim_count={}",
+                    out.quality,
+                    out.quality / clean.quality,
+                    out.trim_count
+                );
+                entries.push((format!("robust/quality/{tag}"), format!("{:.6}", out.quality)));
+                entries
+                    .push((format!("robust/trim_count/{tag}"), out.trim_count.to_string()));
+                // Acceptance gate at 20% attackers (corrupt + scale):
+                // robust kernels recover, plain FedAvg measurably degrades.
+                if frac == GATE_FRAC && attack != AttackKind::Stale {
+                    match agg {
+                        AggKind::Mean => assert!(
+                            out.quality < 0.8,
+                            "{tag}: plain FedAvg should degrade under attack, got {:.4}",
+                            out.quality
+                        ),
+                        _ => assert!(
+                            out.quality >= floor,
+                            "{tag}: quality {:.4} below 95% of clean {:.4}",
+                            out.quality,
+                            clean.quality
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    // Orthogonal defenses at the gate fraction, plain-mean merge: the
+    // pre-merge sanitizer and a full-coverage verification committee
+    // each recover the clean quality on their own.
+    for attack in [AttackKind::Corrupt, AttackKind::Scale] {
+        let sanitized = run(&Scenario {
+            attack,
+            frac: GATE_FRAC,
+            sanitize: true,
+            ..base.clone()
+        })
+        .expect("sanitize run");
+        let verified = run(&Scenario {
+            attack,
+            frac: GATE_FRAC,
+            verify_frac: 1.0,
+            ..base.clone()
+        })
+        .expect("verify run");
+        println!(
+            "robust {attack}/frac20 defenses: sanitize quality={:.6} (rejected={}), \
+             verify quality={:.6} (quarantined={})",
+            sanitized.quality, sanitized.rejected, verified.quality, verified.quarantined
+        );
+        entries.push((
+            format!("robust/quality/{attack}/frac20/sanitize"),
+            format!("{:.6}", sanitized.quality),
+        ));
+        entries.push((
+            format!("robust/rejected/{attack}/frac20/sanitize"),
+            sanitized.rejected.to_string(),
+        ));
+        entries.push((
+            format!("robust/quality/{attack}/frac20/verify"),
+            format!("{:.6}", verified.quality),
+        ));
+        entries.push((
+            format!("robust/quarantined/{attack}/frac20/verify"),
+            verified.quarantined.to_string(),
+        ));
+        assert!(
+            sanitized.quality >= floor,
+            "{attack}: sanitizer quality {:.4} below 95% of clean",
+            sanitized.quality
+        );
+        assert!(
+            verified.quality >= floor,
+            "{attack}: committee quality {:.4} below 95% of clean",
+            verified.quality
+        );
+        assert_eq!(
+            verified.quarantined, 2,
+            "{attack}: full-coverage committee must quarantine both attackers"
+        );
+    }
+    println!("accept: trimmed/clip/sanitize/verify ≥ 95% of clean at 20% attackers, mean < 0.8");
+
+    let mut json = String::from("{\n");
+    for (i, (name, value)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        json.push_str(&format!("  \"{name}\": {value}{comma}\n"));
+    }
+    json.push_str("}\n");
+    match std::fs::write("BENCH_robust.json", &json) {
+        Ok(()) => println!("wrote BENCH_robust.json ({} entries)", entries.len()),
+        Err(e) => eprintln!("could not write BENCH_robust.json: {e}"),
+    }
+}

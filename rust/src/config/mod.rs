@@ -6,6 +6,7 @@
 //! `ExperimentConfig::paper()` is the §V-A setup.
 
 use crate::devices::{paper_fleet, DeviceProfile, ServerProfile, DEFAULT_CLIENT_MFU};
+use crate::faults::{AggKind, AttackKind};
 use crate::fleet::{FleetPreset, FleetSpec};
 use crate::model::ModelDims;
 use crate::net::Link;
@@ -202,6 +203,67 @@ impl Default for PoolConfig {
     }
 }
 
+/// Byzantine-robustness knobs (`[robust]` section): what fraction of
+/// the fleet attacks and how, plus the server-side defenses (robust
+/// merge kernel, pre-merge sanitizer, spot-verification committee,
+/// estimator winsorization).  Every default is "off", and an all-off
+/// config is guaranteed bit-identical to a run without this layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RobustConfig {
+    /// Fault injected into attacker submissions.
+    pub attack: AttackKind,
+    /// Fraction of the fleet that attacks (⌈frac·n⌉ seeded clients).
+    pub attack_frac: f64,
+    /// Attack magnitude λ: scale attacks submit `b + λ·(x − b)`; timing
+    /// lies misreport step times by |λ|.
+    pub attack_lambda: f64,
+    /// Merge kernel (mean|trimmed|clip).
+    pub agg: AggKind,
+    /// Per-coordinate tail size for the trimmed mean.
+    pub trim: usize,
+    /// L2 delta-norm threshold for clip (`inf` disables ⇒ plain mean).
+    pub clip: f64,
+    /// Pre-merge sanitizer: reject non-finite and norm-outlier deltas.
+    pub sanitize: bool,
+    /// Sanitizer rejects deltas with norm > mult × the cohort median.
+    pub sanitize_mult: f64,
+    /// Committee witness fraction per round (0 = no spot verification).
+    pub verify_frac: f64,
+    /// Estimator winsor factor k: observations clamped into
+    /// [EWMA/k, EWMA·k] (`inf` disables the clamp).
+    pub winsor: f64,
+}
+
+impl Default for RobustConfig {
+    fn default() -> Self {
+        Self {
+            attack: AttackKind::None,
+            attack_frac: 0.0,
+            attack_lambda: -10.0,
+            agg: AggKind::Mean,
+            trim: 1,
+            clip: 1.0,
+            sanitize: false,
+            sanitize_mult: 10.0,
+            verify_frac: 0.0,
+            winsor: f64::INFINITY,
+        }
+    }
+}
+
+impl RobustConfig {
+    /// Whether any fault/defense machinery engages on the aggregation
+    /// path.  The estimator winsor clamp is deliberately excluded: it
+    /// reshapes observations, not aggregation, and is fingerprinted
+    /// separately.
+    pub fn is_active(&self) -> bool {
+        self.attack != AttackKind::None
+            || self.agg != AggKind::Mean
+            || self.sanitize
+            || self.verify_frac > 0.0
+    }
+}
+
 /// A full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -223,6 +285,8 @@ pub struct ExperimentConfig {
     pub trace: TraceSpec,
     /// Server-side state-pool residency knobs.
     pub pool: PoolConfig,
+    /// Byzantine fault injection + server-side defenses.
+    pub robust: RobustConfig,
     pub server: ServerProfile,
     pub train: TrainConfig,
     /// Root of the artifacts directory.
@@ -250,6 +314,7 @@ impl ExperimentConfig {
             fleet: None,
             trace: TraceSpec::default(),
             pool: PoolConfig::default(),
+            robust: RobustConfig::default(),
             server: ServerProfile::rtx4080s(),
             train: TrainConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -384,6 +449,34 @@ impl ExperimentConfig {
                 tr.kind
             );
         }
+        if !tr.drift_sigma.is_finite() || tr.drift_sigma < 0.0 {
+            bail!("trace drift_sigma must be finite and >= 0, got {}", tr.drift_sigma);
+        }
+        if tr.kind == TraceKind::None && tr.drift_sigma > 0.0 {
+            bail!("fleet drift_sigma requires an active trace kind (kind != none)");
+        }
+        let r = &self.robust;
+        if !r.attack_frac.is_finite() || !(0.0..=1.0).contains(&r.attack_frac) {
+            bail!("robust attack_frac must be in [0, 1], got {}", r.attack_frac);
+        }
+        if !r.attack_lambda.is_finite() {
+            bail!("robust attack_lambda must be finite, got {}", r.attack_lambda);
+        }
+        if r.clip.is_nan() || r.clip <= 0.0 {
+            bail!("robust clip must be > 0 (inf disables clipping), got {}", r.clip);
+        }
+        if !r.sanitize_mult.is_finite() || r.sanitize_mult <= 0.0 {
+            bail!("robust sanitize_mult must be finite and > 0, got {}", r.sanitize_mult);
+        }
+        if !r.verify_frac.is_finite() || !(0.0..=1.0).contains(&r.verify_frac) {
+            bail!("robust verify_frac must be in [0, 1], got {}", r.verify_frac);
+        }
+        if r.winsor.is_nan() || r.winsor <= 1.0 {
+            bail!("robust winsor must be > 1 (inf disables the clamp), got {}", r.winsor);
+        }
+        if r.is_active() && self.scheme == SchemeKind::Sl {
+            bail!("robust options require a parallel scheme (ours|sfl) — sl aggregates no cohort");
+        }
         Ok(())
     }
 
@@ -509,10 +602,29 @@ impl ExperimentConfig {
             tr.mean_up = s.parse_or("mean_up", tr.mean_up)?;
             tr.mean_down = s.parse_or("mean_down", tr.mean_down)?;
             tr.obs_noise_sigma = s.parse_or("obs_noise_sigma", tr.obs_noise_sigma)?;
+            tr.drift_sigma = s.parse_or("drift_sigma", tr.drift_sigma)?;
             if let Some(p) = s.get("replay_path") {
                 tr.replay_path = p.to_string();
             }
             cfg.trace = tr;
+        }
+        // A [robust] section configures fault injection + defenses.
+        if let Some(s) = doc.sections_named("robust").next() {
+            let r = &mut cfg.robust;
+            if let Some(v) = s.get("attack") {
+                r.attack = v.parse()?;
+            }
+            r.attack_frac = s.parse_or("attack_frac", r.attack_frac)?;
+            r.attack_lambda = s.parse_or("attack_lambda", r.attack_lambda)?;
+            if let Some(v) = s.get("agg") {
+                r.agg = v.parse()?;
+            }
+            r.trim = s.parse_or("trim", r.trim)?;
+            r.clip = s.parse_or("clip", r.clip)?;
+            r.sanitize = s.parse_or("sanitize", r.sanitize)?;
+            r.sanitize_mult = s.parse_or("sanitize_mult", r.sanitize_mult)?;
+            r.verify_frac = s.parse_or("verify_frac", r.verify_frac)?;
+            r.winsor = s.parse_or("winsor", r.winsor)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -574,11 +686,31 @@ impl ExperimentConfig {
             tr.mean_down,
             tr.obs_noise_sigma
         ));
+        out.push_str(&format!("drift_sigma = {}\n", tr.drift_sigma));
         if !tr.replay_path.is_empty() {
             out.push_str(&format!("replay_path = {}\n", tr.replay_path));
         }
         // The state pool always round-trips, like [trace] — symmetry.
         out.push_str(&format!("\n[pool]\nstate_cap = {}\n", self.pool.state_cap));
+        // The robustness layer always round-trips too (f64 `inf`
+        // Display/parse is symmetric, so the clip/winsor sentinels
+        // survive the trip).
+        let r = &self.robust;
+        out.push_str(&format!(
+            "\n[robust]\nattack = {}\nattack_frac = {}\nattack_lambda = {}\nagg = {}\n\
+             trim = {}\nclip = {}\nsanitize = {}\nsanitize_mult = {}\nverify_frac = {}\n\
+             winsor = {}\n",
+            r.attack,
+            r.attack_frac,
+            r.attack_lambda,
+            r.agg,
+            r.trim,
+            r.clip,
+            r.sanitize,
+            r.sanitize_mult,
+            r.verify_frac,
+            r.winsor
+        ));
         // A synthesized fleet round-trips through its spec (same seed ⇒
         // bit-identical fleet); only hand-written fleets list clients.
         if let Some(f) = &self.fleet {
@@ -840,6 +972,81 @@ mod tests {
         assert_eq!(back.fleet, c.fleet);
         assert_eq!(back.trace, c.trace);
         assert_eq!(back.clients.len(), 30);
+    }
+
+    #[test]
+    fn robust_kv_roundtrip_is_symmetric() {
+        let dir = std::env::temp_dir().join("sfl_cfg_robust_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("robust.exp");
+        // Non-default knobs round-trip (including the inf winsor
+        // sentinel and a finite clip)...
+        let mut c = ExperimentConfig::paper();
+        c.robust = RobustConfig {
+            attack: AttackKind::Scale,
+            attack_frac: 0.2,
+            attack_lambda: -4.0,
+            agg: AggKind::Trimmed,
+            trim: 2,
+            clip: 0.5,
+            sanitize: true,
+            sanitize_mult: 8.0,
+            verify_frac: 0.25,
+            winsor: 4.0,
+        };
+        c.validate().unwrap();
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.robust, c.robust);
+        assert!(back.robust.is_active());
+        // ...and so does the all-off default — the [robust] section is
+        // always written, like [trace] and [pool].
+        let d = ExperimentConfig::paper();
+        std::fs::write(&path, d.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.robust, RobustConfig::default());
+        assert!(!back.robust.is_active());
+        assert!(back.robust.winsor.is_infinite());
+    }
+
+    #[test]
+    fn invalid_robust_specs_rejected() {
+        let mut c = ExperimentConfig::paper();
+        c.robust.attack_frac = 1.5;
+        assert!(c.validate().is_err());
+        c.robust.attack_frac = f64::NAN;
+        assert!(c.validate().is_err(), "NaN attack_frac must be rejected");
+        c.robust.attack_frac = 0.2;
+        c.robust.attack_lambda = f64::INFINITY;
+        assert!(c.validate().is_err());
+        c.robust.attack_lambda = -10.0;
+        c.robust.clip = 0.0;
+        assert!(c.validate().is_err());
+        c.robust.clip = f64::NAN;
+        assert!(c.validate().is_err(), "NaN clip must be rejected");
+        c.robust.clip = f64::INFINITY; // inf disables clipping: valid
+        c.validate().unwrap();
+        c.robust.winsor = 1.0;
+        assert!(c.validate().is_err(), "winsor must exceed 1");
+        c.robust.winsor = f64::NAN;
+        assert!(c.validate().is_err());
+        c.robust.winsor = 4.0;
+        c.robust.verify_frac = -0.1;
+        assert!(c.validate().is_err());
+        c.robust.verify_frac = 0.25;
+        c.validate().unwrap();
+        // Robust machinery needs an aggregation cohort.
+        c.scheme = SchemeKind::Sl;
+        assert!(c.validate().is_err(), "sl + robust must be rejected");
+        c.robust = RobustConfig::default();
+        c.validate().unwrap();
+        // Fleet drift gates on an active trace kind.
+        c.trace.drift_sigma = 0.05;
+        assert!(c.validate().is_err(), "drift on a static trace must be rejected");
+        c.trace.kind = TraceKind::RandomWalk;
+        c.validate().unwrap();
+        c.trace.drift_sigma = f64::NAN;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -40,39 +40,64 @@ struct Ewma {
 #[derive(Debug, Clone)]
 pub struct TimingEstimator {
     alpha: f64,
+    /// Winsorization factor: each observed channel is clamped into
+    /// `[ewma/k, ewma·k]` before folding, so one absurd report (a
+    /// timing-lying client, a clock glitch) moves the estimate by a
+    /// bounded factor.  `INFINITY` (the default) disables the clamp.
+    winsor: f64,
     stats: Vec<Ewma>,
 }
 
 impl TimingEstimator {
     /// `alpha` is the EWMA weight of the newest observation, in (0, 1].
     pub fn new(n_clients: usize, alpha: f64) -> Self {
-        Self { alpha, stats: vec![Ewma::default(); n_clients] }
+        Self { alpha, winsor: f64::INFINITY, stats: vec![Ewma::default(); n_clients] }
     }
 
     pub fn alpha(&self) -> f64 {
         self.alpha
     }
 
+    /// Enable the winsorized observation clamp with factor `k > 1`
+    /// (non-finite `k` leaves observations unclamped).
+    pub fn set_winsor(&mut self, k: f64) {
+        self.winsor = k;
+    }
+
     pub fn n_clients(&self) -> usize {
         self.stats.len()
+    }
+
+    fn winsorize(&self, current: f64, sample: f64) -> f64 {
+        // Seeding samples and zero-valued channels (e.g. a client with
+        // no comm cost) pass through: a zero EWMA has no scale to clamp
+        // against, and pinning it at zero forever would be worse than
+        // accepting the report.
+        if !self.winsor.is_finite() || current <= 0.0 {
+            return sample;
+        }
+        sample.clamp(current / self.winsor, current * self.winsor)
     }
 
     /// Fold one round's observed timings for `client` into the EWMAs.
     /// The first observation seeds the averages directly.
     pub fn observe(&mut self, client: usize, t: &StepTiming) {
-        let e = &mut self.stats[client];
         let (arrival, server, bwd, comm) =
             (t.t_fwd + t.t_fwd_comm, t.t_server, t.t_bwd, t.t_bwd_comm);
-        if e.samples == 0 {
-            (e.arrival, e.server, e.bwd, e.comm) = (arrival, server, bwd, comm);
+        let e = self.stats[client];
+        let e_new = if e.samples == 0 {
+            Ewma { arrival, server, bwd, comm, samples: 1 }
         } else {
             let a = self.alpha;
-            e.arrival += a * (arrival - e.arrival);
-            e.server += a * (server - e.server);
-            e.bwd += a * (bwd - e.bwd);
-            e.comm += a * (comm - e.comm);
-        }
-        e.samples += 1;
+            Ewma {
+                arrival: e.arrival + a * (self.winsorize(e.arrival, arrival) - e.arrival),
+                server: e.server + a * (self.winsorize(e.server, server) - e.server),
+                bwd: e.bwd + a * (self.winsorize(e.bwd, bwd) - e.bwd),
+                comm: e.comm + a * (self.winsorize(e.comm, comm) - e.comm),
+                samples: e.samples + 1,
+            }
+        };
+        self.stats[client] = e_new;
     }
 
     /// Whether `client` has at least one observation.
@@ -234,6 +259,36 @@ mod tests {
         }
         let j = est.job_for(&job(0, 0.0, 0.0, 0.0, 0.0));
         assert!((j.client_bwd_time - 4.0).abs() < 1e-3, "got {}", j.client_bwd_time);
+    }
+
+    #[test]
+    fn winsor_clamp_bounds_a_thousand_fold_outlier() {
+        let (alpha, k) = (0.25, 4.0);
+        let seed = job(0, 0.5, 0.4, 2.0, 0.1);
+        let outlier = job(0, 500.0, 400.0, 2000.0, 100.0); // 1000× lie
+        let mut clamped = TimingEstimator::new(1, alpha);
+        clamped.set_winsor(k);
+        clamped.observe(0, &StepTiming::from_job(&seed));
+        clamped.observe(0, &StepTiming::from_job(&outlier));
+        let j = clamped.job_for(&job(0, 0.0, 0.0, 0.0, 0.0));
+        // Each channel's sample is clamped to k×EWMA, so the post-update
+        // estimate is exactly (1 + α(k−1))×old = 1.75×old — and never
+        // more than the clamp bound k×old.
+        for (got, old) in [
+            (j.arrival, seed.arrival),
+            (j.server_time, seed.server_time),
+            (j.client_bwd_time, seed.client_bwd_time),
+            (j.bwd_comm_time, seed.bwd_comm_time),
+        ] {
+            assert!((got - 1.75 * old).abs() < 1e-9, "got {got}, old {old}");
+            assert!(got <= k * old, "estimate moved past the clamp bound");
+        }
+        // The same outlier with the clamp off poisons the estimate.
+        let mut open = TimingEstimator::new(1, alpha);
+        open.observe(0, &StepTiming::from_job(&seed));
+        open.observe(0, &StepTiming::from_job(&outlier));
+        let p = open.job_for(&job(0, 0.0, 0.0, 0.0, 0.0));
+        assert!(p.client_bwd_time > 100.0 * seed.client_bwd_time);
     }
 
     #[test]

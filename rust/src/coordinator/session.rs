@@ -32,7 +32,12 @@ use crate::coordinator::scheduler::{make_scheduler, makespan, JobInfo, Scheduler
 use crate::coordinator::timing::{self, StepTiming};
 use crate::coordinator::{RoundRecord, RunResult};
 use crate::data::{self, BatchIter, DataPool, Dataset};
-use crate::lora::{fedavg_joined_into, AdapterSet};
+use crate::faults::{
+    differs, sanitize_updates, AggKind, AttackKind, Committee, FaultInjector, RobustStats,
+};
+use crate::lora::{
+    clipped_fedavg_joined_into, fedavg_joined_into, trimmed_fedavg_joined_into, AdapterSet,
+};
 use crate::metrics::{Confusion, ConvergenceDetector, MetricSeries};
 use crate::model::{memory, memory::MemoryBreakdown, ModelDims};
 use crate::net::{Message, TrafficMeter};
@@ -166,6 +171,10 @@ pub struct RoundCtx<'a, 'e> {
     pub sched_jobs: &'a [JobInfo],
     /// Whether this round ends with a LoRA aggregation (paper line 17).
     pub aggregate: bool,
+    /// The session's Byzantine fault injector — `Some` only when a
+    /// tensor/timing attack is configured.  Schemes route aggregation
+    /// inputs through it so attackers submit tampered updates.
+    pub faults: Option<&'a mut FaultInjector>,
     pub traffic: &'a mut TrafficMeter,
     pub scratch: &'a mut RoundScratch,
 }
@@ -212,6 +221,9 @@ pub struct RoundReport {
     /// State-pool counters (present when pooled residency is active:
     /// `pool.state_cap > 0` under a pooling scheme).
     pub pool: Option<PoolStats>,
+    /// Robust-aggregation counters (present when any `[robust]` option
+    /// is engaged) — the last aggregation's flag/reject/trim tallies.
+    pub robust: Option<RobustStats>,
     /// Present on eval rounds.
     pub eval: Option<EvalPoint>,
 }
@@ -251,6 +263,11 @@ pub trait Scheme {
     /// State-pool counters for the round reports — `Some` only when the
     /// scheme runs a bounded (pooled) residency.
     fn pool_stats(&self) -> Option<PoolStats> {
+        None
+    }
+    /// Robust-aggregation counters — `Some` only when the scheme runs
+    /// the Byzantine-tolerant aggregation path.
+    fn robust_stats(&self) -> Option<RobustStats> {
         None
     }
     /// Persist scheme-owned training state as named tensors
@@ -305,13 +322,14 @@ fn trace_tag(kind: TraceKind) -> u64 {
 fn train_fingerprint(cfg: &ExperimentConfig) -> Vec<(&'static str, u64)> {
     let t = &cfg.train;
     let tr = &cfg.trace;
+    let r = &cfg.robust;
     let (lrs_tag, lrs_p1, lrs_p2) = match t.lr_schedule {
         LrSchedule::Constant => (0u64, 0u64, 0u64),
         LrSchedule::Linear { horizon, floor } => (1, horizon as u64, floor.to_bits() as u64),
         LrSchedule::Cosine { horizon, floor } => (2, horizon as u64, floor.to_bits() as u64),
         LrSchedule::Warmup { warmup } => (3, warmup as u64, 0),
     };
-    vec![
+    let mut fp = vec![
         ("seed", t.seed),
         ("scheduler", sched_tag(cfg.scheduler)),
         ("steps_per_round", t.steps_per_round as u64),
@@ -345,7 +363,27 @@ fn train_fingerprint(cfg: &ExperimentConfig) -> Vec<(&'static str, u64)> {
         ("trace_mean_down", tr.mean_down.to_bits()),
         ("trace_obs_noise_sigma", tr.obs_noise_sigma.to_bits()),
         ("trace_replay_path", crate::trace::fnv1a(tr.replay_path.as_bytes())),
-    ]
+    ];
+    // Robust/drift knobs extend the fingerprint only when any of them is
+    // engaged, so legacy (robust-off, drift-off) checkpoints keep their
+    // exact historical layout — and a robust-on resume against a
+    // robust-off checkpoint (or vice versa) fails the length check.
+    if r.is_active() || r.winsor.is_finite() || tr.drift_sigma > 0.0 {
+        fp.extend_from_slice(&[
+            ("trace_drift_sigma", tr.drift_sigma.to_bits()),
+            ("robust_attack", r.attack.tag()),
+            ("robust_attack_frac", r.attack_frac.to_bits()),
+            ("robust_attack_lambda", r.attack_lambda.to_bits()),
+            ("robust_agg", r.agg.tag()),
+            ("robust_trim", r.trim as u64),
+            ("robust_clip", r.clip.to_bits()),
+            ("robust_sanitize", r.sanitize as u64),
+            ("robust_sanitize_mult", r.sanitize_mult.to_bits()),
+            ("robust_verify_frac", r.verify_frac.to_bits()),
+            ("robust_winsor", r.winsor.to_bits()),
+        ]);
+    }
+    fp
 }
 
 // ---------------------------------------------------------------------
@@ -403,6 +441,28 @@ enum CoreTiming {
     Fixed(f64),
 }
 
+/// Defense-side state for Byzantine-tolerant aggregation: the witness
+/// committee, the robust-kernel choice, and reusable scratch buffers.
+/// Built only when any `[robust]` option is engaged — the plain
+/// aggregation path is untouched (bit-identical) otherwise.
+struct RobustDefense {
+    agg: AggKind,
+    trim: usize,
+    clip: f64,
+    sanitize: bool,
+    sanitize_mult: f64,
+    committee: Committee,
+    /// Last aggregation's counters (streamed in round reports).
+    stats: RobustStats,
+    // Reused per-aggregation scratch — small index/flag buffers, never
+    // `HostTensor`s, so the steady state stays tensor-alloc-free.
+    survivors: Vec<usize>,
+    witnesses: Vec<usize>,
+    norms: Vec<f64>,
+    keep: Vec<bool>,
+    col: Vec<(f32, f32)>,
+}
+
 struct ParallelCore {
     /// Per-client training state + batch iterators, owned by the state
     /// pool: eager (all resident) when `pool.state_cap == 0`, lazily
@@ -416,6 +476,8 @@ struct ParallelCore {
     /// Reused per-step order buffer (job indices) — the schedule path
     /// allocates nothing at steady state.
     order_buf: Vec<usize>,
+    /// Byzantine-tolerant aggregation (`Some` iff `[robust]` is active).
+    robust: Option<RobustDefense>,
 }
 
 impl ParallelCore {
@@ -431,6 +493,25 @@ impl ParallelCore {
             env.cfg.pool.state_cap,
             &env.data,
         )?;
+        let r = &env.cfg.robust;
+        let robust = r.is_active().then(|| RobustDefense {
+            agg: r.agg,
+            trim: r.trim,
+            clip: r.clip,
+            sanitize: r.sanitize,
+            sanitize_mult: r.sanitize_mult,
+            committee: Committee::new(
+                env.cuts.len(),
+                r.verify_frac,
+                env.cfg.train.seed ^ 0xC077_EE5E,
+            ),
+            stats: RobustStats::default(),
+            survivors: Vec::with_capacity(env.cuts.len()),
+            witnesses: Vec::with_capacity(env.cuts.len()),
+            norms: Vec::with_capacity(env.cuts.len()),
+            keep: Vec::with_capacity(env.cuts.len()),
+            col: Vec::with_capacity(env.cuts.len()),
+        });
         Ok(Self {
             pool,
             sched: make_scheduler(env.cfg.scheduler, env.cfg.train.seed),
@@ -438,6 +519,7 @@ impl ParallelCore {
             last_active: None,
             switches: 0,
             order_buf: Vec::with_capacity(env.cuts.len()),
+            robust,
         })
     }
 
@@ -461,7 +543,13 @@ impl ParallelCore {
             CoreTiming::Fixed(t) => env.cfg.train.steps_per_round as f64 * t,
         };
         let agg_elapsed = if ctx.aggregate {
-            self.aggregate(env, ctx.participants, ctx.traffic, ctx.scratch)?;
+            self.aggregate(
+                env,
+                ctx.participants,
+                ctx.faults.as_deref_mut(),
+                ctx.traffic,
+                ctx.scratch,
+            )?;
             timing::aggregation_time_for(
                 &env.dims_time,
                 &env.cfg.clients,
@@ -565,9 +653,13 @@ impl ParallelCore {
         &mut self,
         env: &SessionEnv<'_>,
         participants: &[usize],
+        faults: Option<&mut FaultInjector>,
         traffic: &mut TrafficMeter,
         scratch: &mut RoundScratch,
     ) -> Result<()> {
+        if self.robust.is_some() {
+            return self.aggregate_robust(env, participants, faults, traffic, scratch);
+        }
         let total: f32 = participants.iter().map(|&u| env.data.weight(u)).sum();
         {
             let mut contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
@@ -604,6 +696,168 @@ impl ParallelCore {
         self.pool.apply_aggregate(&scratch.agg_full, &scratch.head)
     }
 
+    /// Byzantine-tolerant aggregation: stage (possibly tampered)
+    /// submissions through the fault injector, spot-verify a seeded
+    /// witness committee against the server's resident replicas
+    /// (quarantining liars), reject non-finite / norm-outlier updates,
+    /// and merge the survivors with the configured robust kernel.
+    /// Traffic is billed exactly like the plain path — rejection
+    /// happens server-side, after the upload.
+    fn aggregate_robust(
+        &mut self,
+        env: &SessionEnv<'_>,
+        participants: &[usize],
+        mut faults: Option<&mut FaultInjector>,
+        traffic: &mut TrafficMeter,
+        scratch: &mut RoundScratch,
+    ) -> Result<()> {
+        let rb = self.robust.as_mut().expect("robust aggregation without defense state");
+        let pool = &mut self.pool;
+        rb.stats = RobustStats { quarantined: rb.committee.quarantined_count(), ..Default::default() };
+        // 1. Quarantined clients are dropped before anything else — a
+        // flagged client never contributes again.
+        rb.survivors.clear();
+        for &u in participants {
+            if !rb.committee.is_quarantined(u) {
+                rb.survivors.push(u);
+            }
+        }
+        // 2. Attackers rewrite their submissions (honest clients pass
+        // their trained halves through unchanged).
+        if let Some(inj) = faults.as_deref_mut() {
+            for &u in &rb.survivors {
+                let slot = pool.resident(u).ok_or_else(|| {
+                    anyhow::anyhow!("participant {u} not resident at aggregation")
+                })?;
+                inj.prepare(u, &slot.cs.lora, &slot.ss.lora, pool.baseline())?;
+            }
+        }
+        // 3. Seeded spot verification: a deterministic witness sample of
+        // this round's submissions is re-checked against the server-side
+        // replica of each client's training state (the coordinator ran
+        // the very same steps, so any bitwise mismatch is a lie).
+        if rb.committee.is_active() {
+            rb.witnesses.clear();
+            let sample = rb.committee.select(&rb.survivors);
+            rb.witnesses.extend_from_slice(sample);
+            for &u in &rb.witnesses {
+                let slot = pool.resident(u).ok_or_else(|| {
+                    anyhow::anyhow!("witness {u} not resident at verification")
+                })?;
+                let lied = match faults.as_deref().and_then(|inj| inj.submission(u)) {
+                    Some((c, s)) => {
+                        differs(c, &slot.cs.lora)? || differs(s, &slot.ss.lora)?
+                    }
+                    None => false,
+                };
+                if lied {
+                    rb.committee.flag(u);
+                    rb.stats.flagged += 1;
+                }
+            }
+            let committee = &rb.committee;
+            rb.survivors.retain(|&u| !committee.is_quarantined(u));
+            rb.stats.quarantined = rb.committee.quarantined_count();
+        }
+        // 4. Gather the surviving submissions with their raw data
+        // weights (normalized after sanitization, over what's kept).
+        let inj = faults.as_deref();
+        let mut subs: Vec<(f32, &AdapterSet, &AdapterSet)> =
+            Vec::with_capacity(rb.survivors.len());
+        for &u in &rb.survivors {
+            let slot = pool
+                .resident(u)
+                .ok_or_else(|| anyhow::anyhow!("participant {u} not resident at aggregation"))?;
+            let (c, s) = match inj.and_then(|i| i.submission(u)) {
+                Some(pair) => pair,
+                None => (&slot.cs.lora, &slot.ss.lora),
+            };
+            subs.push((env.data.weight(u), c, s));
+        }
+        // 5. Pre-merge sanitizer: reject non-finite or norm-outlier
+        // deltas before they reach the kernel.
+        if rb.sanitize && !subs.is_empty() {
+            rb.stats.rejected = sanitize_updates(
+                &subs,
+                pool.baseline(),
+                rb.sanitize_mult,
+                &mut rb.norms,
+                &mut rb.keep,
+            )?;
+            if rb.stats.rejected > 0 {
+                let keep = &rb.keep;
+                let mut i = 0;
+                subs.retain(|_| {
+                    let k = keep[i];
+                    i += 1;
+                    k
+                });
+                let mut i = 0;
+                rb.survivors.retain(|_| {
+                    let k = keep[i];
+                    i += 1;
+                    k
+                });
+            }
+        }
+        // Traffic: billed for the original participants exactly like the
+        // plain path — uploads happen before server-side rejection.
+        scratch.mask.iter_mut().for_each(|m| *m = false);
+        for &u in participants {
+            scratch.mask[u] = true;
+        }
+        for (u, &k) in env.cuts.iter().enumerate() {
+            if scratch.mask[u] {
+                traffic.record(&Message::LoraUpload { bytes: env.dims_time.lora_bytes(k) });
+            }
+            traffic.record(&Message::LoraDownload { bytes: env.dims_time.lora_bytes(k) });
+        }
+        // 6. Nothing trustworthy left ⇒ skip the model update entirely
+        // (the cohort keeps training from the unchanged baseline).
+        let total: f32 = subs.iter().map(|&(w, _, _)| w).sum();
+        if subs.is_empty() || !total.is_finite() || total <= 0.0 {
+            return Ok(());
+        }
+        for sub in subs.iter_mut() {
+            sub.0 /= total;
+        }
+        // 7. The robust merge kernel (all in place, zero tensor allocs).
+        match rb.agg {
+            AggKind::Mean => fedavg_joined_into(&subs, &mut scratch.agg_full)?,
+            AggKind::Trimmed => {
+                // Cap the trim so at least one coordinate survives.
+                let trim = rb.trim.min(subs.len().saturating_sub(1) / 2);
+                rb.stats.trim_count = 2 * trim as u64;
+                trimmed_fedavg_joined_into(&subs, trim, &mut rb.col, &mut scratch.agg_full)?;
+            }
+            AggKind::Clip => {
+                rb.stats.trim_count = clipped_fedavg_joined_into(
+                    &subs,
+                    pool.baseline(),
+                    rb.clip,
+                    &mut scratch.agg_full,
+                )?;
+            }
+        }
+        // Heads follow the kept survivors with the same normalized
+        // weights (the attack model targets the LoRA submissions).
+        let mut head_pairs_w: Vec<(f32, &HostTensor)> = Vec::with_capacity(rb.survivors.len());
+        let mut head_pairs_b: Vec<(f32, &HostTensor)> = Vec::with_capacity(rb.survivors.len());
+        for (i, &u) in rb.survivors.iter().enumerate() {
+            let slot = pool
+                .resident(u)
+                .ok_or_else(|| anyhow::anyhow!("participant {u} not resident at aggregation"))?;
+            head_pairs_w.push((subs[i].0, &slot.ss.head.w));
+            head_pairs_b.push((subs[i].0, &slot.ss.head.b));
+        }
+        ops::weighted_sum_into(&head_pairs_w, &mut scratch.head.w)?;
+        ops::weighted_sum_into(&head_pairs_b, &mut scratch.head.b)?;
+        drop(subs);
+        drop(head_pairs_w);
+        drop(head_pairs_b);
+        pool.apply_aggregate(&scratch.agg_full, &scratch.head)
+    }
+
     /// Data-weighted global model (eqs. 5–8 evaluated without replacing
     /// per-client state), computed into the scratch arena.  Delegated
     /// to the pool, which accumulates resident / spilled / baseline
@@ -614,6 +868,10 @@ impl ParallelCore {
 
     fn pool_stats(&self) -> Option<PoolStats> {
         self.pool.is_pooled().then(|| self.pool.stats())
+    }
+
+    fn robust_stats(&self) -> Option<RobustStats> {
+        self.robust.as_ref().map(|rb| rb.stats)
     }
 
     fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
@@ -627,6 +885,22 @@ impl ParallelCore {
         if let Some(st) = self.sched.rng_state() {
             out.push(("scheme.sched_rng".into(), encode_u64s("sched_rng", &[st])));
         }
+        // Robust defense state rides only when engaged — a plain run's
+        // checkpoint carries no new keys.
+        if let Some(rb) = &self.robust {
+            out.push((
+                "scheme.robust_rng".into(),
+                encode_u64s("robust_rng", &[rb.committee.rng_state()]),
+            ));
+            out.push((
+                "scheme.quarantine".into(),
+                encode_u64s("quarantine", &rb.committee.quarantine_words()),
+            ));
+            out.push((
+                "scheme.flagged".into(),
+                encode_u64s("flagged", &[rb.committee.flagged_total]),
+            ));
+        }
         Ok(())
     }
 
@@ -637,6 +911,13 @@ impl ParallelCore {
         self.last_active = if last < 0 { None } else { Some(last as usize) };
         if store.get("scheme.sched_rng").is_ok() {
             self.sched.set_rng_state(one_u64(store, "scheme.sched_rng")?);
+        }
+        if let Some(rb) = &mut self.robust {
+            // The fingerprint guarantees a robust config resumes only a
+            // robust checkpoint, so these keys must be present.
+            rb.committee.set_rng_state(one_u64(store, "scheme.robust_rng")?);
+            rb.committee.restore_quarantine(&decode_u64s(store.get("scheme.quarantine")?)?)?;
+            rb.committee.flagged_total = one_u64(store, "scheme.flagged")?;
         }
         Ok(())
     }
@@ -689,6 +970,10 @@ impl Scheme for OursScheme {
 
     fn pool_stats(&self) -> Option<PoolStats> {
         self.core.pool_stats()
+    }
+
+    fn robust_stats(&self) -> Option<RobustStats> {
+        self.core.robust_stats()
     }
 
     fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
@@ -746,6 +1031,10 @@ impl Scheme for SflScheme {
 
     fn pool_stats(&self) -> Option<PoolStats> {
         self.core.pool_stats()
+    }
+
+    fn robust_stats(&self) -> Option<RobustStats> {
+        self.core.robust_stats()
     }
 
     fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
@@ -927,6 +1216,10 @@ struct Book {
     timeline: EnvTimeline,
     /// Measurement noise between true timings and estimator input.
     obs_noise: NoisyObservation,
+    /// Byzantine fault injector (`Some` iff an attack is configured):
+    /// rewrites attacker submissions at aggregation and scales the
+    /// timings TimingLie attackers report to the estimator.
+    faults: Option<FaultInjector>,
     /// Reused per-round gathers of the participant jobs.
     jobs_buf: Vec<JobInfo>,
     sched_jobs_buf: Vec<JobInfo>,
@@ -1016,6 +1309,21 @@ impl<'e> Session<'e> {
         let obs_noise =
             NoisyObservation::new(cfg.train.seed ^ 0x0B5E_C0DE, cfg.trace.obs_noise_sigma);
         let t = &cfg.train;
+        // The fault injector's RNG stream is derived like every other
+        // auxiliary stream (seed ^ constant) — a clean run draws
+        // nothing from it because it is never constructed.
+        let r = &cfg.robust;
+        let faults = (r.attack != AttackKind::None && r.attack_frac > 0.0).then(|| {
+            FaultInjector::new(
+                env.cuts.len(),
+                r.attack,
+                r.attack_frac,
+                r.attack_lambda,
+                t.seed ^ 0xFA17_5EED,
+            )
+        });
+        let mut estimator = TimingEstimator::new(env.cuts.len(), t.timing_ewma_alpha);
+        estimator.set_winsor(r.winsor);
         let book = Book {
             round: 0,
             sim_time: 0.0,
@@ -1028,9 +1336,10 @@ impl<'e> Session<'e> {
             traffic: TrafficMeter::default(),
             dropout_rng: Rng::new(t.seed ^ 0xD809),
             converged: false,
-            estimator: TimingEstimator::new(env.cuts.len(), t.timing_ewma_alpha),
+            estimator,
             timeline,
             obs_noise,
+            faults,
             jobs_buf: Vec::with_capacity(env.cuts.len()),
             sched_jobs_buf: Vec::with_capacity(env.cuts.len()),
             exec_base: engine.exec_count(),
@@ -1190,6 +1499,7 @@ impl<'e> Session<'e> {
                 jobs: &self.book.jobs_buf,
                 sched_jobs: &self.book.sched_jobs_buf,
                 aggregate,
+                faults: self.book.faults.as_mut(),
                 traffic: &mut self.book.traffic,
                 scratch: &mut self.book.scratch,
             };
@@ -1204,8 +1514,15 @@ impl<'e> Session<'e> {
             let b = &mut self.book;
             for j in &b.jobs_buf {
                 let clean = StepTiming::from_job(j);
-                let obs =
+                let mut obs =
                     if b.obs_noise.is_active() { clean.noisy(&mut b.obs_noise) } else { clean };
+                // TimingLie attackers misreport every channel by |λ| —
+                // the estimator only ever sees what clients claim.
+                if let Some(inj) = &b.faults {
+                    if inj.kind() == AttackKind::TimingLie && inj.is_attacker(j.client) {
+                        obs = obs.scaled(inj.lie_factor());
+                    }
+                }
                 b.estimator.observe(j.client, &obs);
             }
         }
@@ -1249,6 +1566,7 @@ impl<'e> Session<'e> {
             participants,
             env: env_snapshot,
             pool: self.scheme.pool_stats(),
+            robust: self.scheme.robust_stats(),
             eval,
         };
         for obs in &mut self.observers {
@@ -1354,6 +1672,21 @@ impl<'e> Session<'e> {
             "book.trace_hash".into(),
             encode_u64s("trace_hash", &[b.timeline.replay_hash()]),
         ));
+        // Fault-injection state rides only when an attack is configured:
+        // the injector RNG plus each Stale attacker's replay memory
+        // (previous round's honest halves), so a resumed attacked run
+        // replays the identical faulty submissions bit-exactly.
+        if let Some(inj) = &b.faults {
+            named.push(("book.fault_rng".into(), encode_u64s("fault_rng", &[inj.rng_state()])));
+            let mask: Vec<u64> = inj.prev.iter().map(|p| p.is_some() as u64).collect();
+            named.push(("book.stale.mask".into(), encode_u64s("stale.mask", &mask)));
+            for (u, p) in inj.prev.iter().enumerate() {
+                if let Some((c, s)) = p {
+                    save_adapters(&mut named, &format!("book.stale{u}.c"), c);
+                    save_adapters(&mut named, &format!("book.stale{u}.s"), s);
+                }
+            }
+        }
         // Round records + metric series (f64 clocks stored bit-exactly).
         let rr: Vec<i32> = b.rounds.iter().map(|r| r.round as i32).collect();
         let rt: Vec<f64> = b.rounds.iter().map(|r| r.sim_time).collect();
@@ -1459,6 +1792,31 @@ impl<'e> Session<'e> {
                  (content hash {saved_hash:#x} vs {:#x}) — refusing to resume",
                 b.timeline.replay_hash()
             );
+        }
+        // Fault-injection state (the fingerprint guarantees the keys are
+        // present exactly when an attack is configured).
+        if let Some(inj) = &mut b.faults {
+            inj.set_rng_state(one_u64(&store, "book.fault_rng")?);
+            let mask = decode_u64s(store.get("book.stale.mask")?)?;
+            if mask.len() != inj.prev.len() {
+                bail!(
+                    "checkpoint stale mask has {} clients, config has {}",
+                    mask.len(),
+                    inj.prev.len()
+                );
+            }
+            let layers = session.env.dims_exec.layers;
+            for (u, &m) in mask.iter().enumerate() {
+                if m == 0 {
+                    continue;
+                }
+                let k = session.env.cuts[u];
+                let mut c = AdapterSet::zeros(&session.env.dims_exec, k);
+                let mut s = AdapterSet::zeros(&session.env.dims_exec, layers - k);
+                load_adapters(&store, &format!("book.stale{u}.c"), &mut c)?;
+                load_adapters(&store, &format!("book.stale{u}.s"), &mut s)?;
+                inj.prev[u] = Some((c, s));
+            }
         }
 
         let rr = store.get("book.rounds.round")?.as_i32()?.to_vec();

@@ -42,6 +42,20 @@ impl StepTiming {
         }
     }
 
+    /// All measured channels multiplied by `factor` — how a timing-lying
+    /// client misreports its step to the estimator.  Wait is
+    /// queue-derived on the server side and cannot be lied about.
+    pub fn scaled(&self, factor: f64) -> Self {
+        Self {
+            t_fwd: self.t_fwd * factor,
+            t_fwd_comm: self.t_fwd_comm * factor,
+            t_wait: self.t_wait,
+            t_server: self.t_server * factor,
+            t_bwd_comm: self.t_bwd_comm * factor,
+            t_bwd: self.t_bwd * factor,
+        }
+    }
+
     /// These timings as the estimator would *observe* them under
     /// multiplicative measurement noise: one lognormal factor per
     /// estimator channel (arrival, server, backward, downlink), drawn

@@ -1,0 +1,644 @@
+//! Byzantine fault layer: seeded fault injection, pre-merge update
+//! sanitization, and committee-based spot verification.
+//!
+//! The paper's fleet model assumes every device computes its client-side
+//! step honestly; at production scale some fraction will not.  This
+//! module makes that fraction explicit: a [`FaultInjector`] rewrites a
+//! seeded subset of client submissions (corrupt / scaled / stale /
+//! timing lies) before aggregation, [`sanitize_updates`] rejects
+//! non-finite or norm-outlier deltas before they can reach
+//! `StatePool::apply_aggregate`, and a [`Committee`] draws a seeded
+//! witness sample per round whose submissions are checked bit-for-bit
+//! against the server-side re-execution (the full model is already
+//! resident per the paper's split design, so re-running a witness step
+//! costs no extra memory).  All randomness is SplitMix64 with
+//! checkpointable state, so faulty runs resume bit-exactly.
+
+use crate::lora::{joined_delta_norm, joined_non_finite, AdapterSet};
+use crate::tensor::rng::Rng;
+use anyhow::{bail, Result};
+
+pub mod testbed;
+
+/// What a faulty client does to its update (the threat model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AttackKind {
+    /// Honest fleet (the default; injector is inert).
+    #[default]
+    None,
+    /// Overwrite a seeded segment of one adapter tensor with NaN/Inf —
+    /// the "bit-rot / OOM-kill mid-upload" failure mode.
+    Corrupt,
+    /// Submit `b + λ·(x − b)`: sign-flipped (λ < 0) or inflated (λ > 1)
+    /// gradient — the classic model-poisoning shape.
+    Scale,
+    /// Replay the previous round's honest update (stragglers resending
+    /// stale state); the first round has nothing to replay and is honest.
+    Stale,
+    /// Submit honestly but lie to the timing estimator by a factor of
+    /// |λ| to game the Alg. 2 schedule.
+    TimingLie,
+}
+
+impl AttackKind {
+    /// Stable tag for the train fingerprint.
+    pub fn tag(&self) -> u64 {
+        match self {
+            AttackKind::None => 0,
+            AttackKind::Corrupt => 1,
+            AttackKind::Scale => 2,
+            AttackKind::Stale => 3,
+            AttackKind::TimingLie => 4,
+        }
+    }
+}
+
+impl std::str::FromStr for AttackKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => AttackKind::None,
+            "corrupt" => AttackKind::Corrupt,
+            "scale" => AttackKind::Scale,
+            "stale" => AttackKind::Stale,
+            "timing-lie" => AttackKind::TimingLie,
+            other => bail!("unknown attack kind `{other}` (none|corrupt|scale|stale|timing-lie)"),
+        })
+    }
+}
+
+impl std::fmt::Display for AttackKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AttackKind::None => "none",
+            AttackKind::Corrupt => "corrupt",
+            AttackKind::Scale => "scale",
+            AttackKind::Stale => "stale",
+            AttackKind::TimingLie => "timing-lie",
+        })
+    }
+}
+
+/// Which merge kernel the aggregator runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AggKind {
+    /// Plain weighted FedAvg (paper eqs. 6–7).
+    #[default]
+    Mean,
+    /// Coordinate-wise trimmed mean (`lora::trimmed_fedavg_joined_into`).
+    Trimmed,
+    /// Per-client delta norm clipping (`lora::clipped_fedavg_joined_into`).
+    Clip,
+}
+
+impl AggKind {
+    /// Stable tag for the train fingerprint.
+    pub fn tag(&self) -> u64 {
+        match self {
+            AggKind::Mean => 0,
+            AggKind::Trimmed => 1,
+            AggKind::Clip => 2,
+        }
+    }
+}
+
+impl std::str::FromStr for AggKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "mean" => AggKind::Mean,
+            "trimmed" => AggKind::Trimmed,
+            "clip" => AggKind::Clip,
+            other => bail!("unknown aggregator `{other}` (mean|trimmed|clip)"),
+        })
+    }
+}
+
+impl std::fmt::Display for AggKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AggKind::Mean => "mean",
+            AggKind::Trimmed => "trimmed",
+            AggKind::Clip => "clip",
+        })
+    }
+}
+
+/// Per-round defense counters surfaced in jsonl telemetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RobustStats {
+    /// Clients whose witness re-execution mismatched this round.
+    pub flagged: u64,
+    /// Clients currently quarantined (cumulative; quarantine is sticky).
+    pub quarantined: u64,
+    /// Updates rejected by the sanitizer this round.
+    pub rejected: u64,
+    /// Contributors trimmed (2·trim) or norm-clipped this round.
+    pub trim_count: u64,
+}
+
+fn copy_adapters(dst: &mut AdapterSet, src: &AdapterSet) -> Result<()> {
+    if dst.layers != src.layers {
+        bail!("fault submission depth changed ({} vs {})", dst.layers, src.layers);
+    }
+    for (d, s) in dst.tensors.iter_mut().zip(src.tensors.iter()) {
+        let dv = d.as_f32_mut()?;
+        let sv = s.as_f32()?;
+        if dv.len() != sv.len() {
+            bail!("fault submission width changed on {}", s.name);
+        }
+        dv.copy_from_slice(sv);
+    }
+    Ok(())
+}
+
+/// Bitwise comparison of two adapter sets (NaN-safe: `f32::max`-style
+/// reductions swallow NaN, so spot verification compares raw bits).
+pub fn differs(a: &AdapterSet, b: &AdapterSet) -> Result<bool> {
+    if a.layers != b.layers {
+        return Ok(true);
+    }
+    for (x, y) in a.tensors.iter().zip(b.tensors.iter()) {
+        let xv = x.as_f32()?;
+        let yv = y.as_f32()?;
+        if xv.len() != yv.len() || xv.iter().zip(yv).any(|(p, q)| p.to_bits() != q.to_bits()) {
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// Pre-merge sanitizer: reject non-finite updates outright, then reject
+/// deltas whose L2 norm exceeds `mult ×` the cohort's median finite
+/// norm.  `norms`/`keep` are caller-owned scratch (cleared and refilled,
+/// zero tensor allocations).  Returns the number rejected.
+pub fn sanitize_updates(
+    subs: &[(f32, &AdapterSet, &AdapterSet)],
+    baseline: &AdapterSet,
+    mult: f64,
+    norms: &mut Vec<f64>,
+    keep: &mut Vec<bool>,
+) -> Result<u64> {
+    norms.clear();
+    keep.clear();
+    for (_, c, s) in subs {
+        let norm = if joined_non_finite(c, s)? {
+            f64::NAN
+        } else {
+            joined_delta_norm(c, s, baseline)?
+        };
+        norms.push(norm);
+    }
+    let mut finite: Vec<f64> = norms.iter().copied().filter(|x| x.is_finite()).collect();
+    finite.sort_by(|a, b| a.total_cmp(b));
+    let median = if finite.is_empty() { 0.0 } else { finite[finite.len() / 2] };
+    let mut rejected = 0u64;
+    for &n in norms.iter() {
+        // A zero median (fresh cohort, zero deltas) disables the outlier
+        // test rather than rejecting everyone.
+        let ok = n.is_finite() && (median <= 0.0 || n <= mult * median);
+        if !ok {
+            rejected += 1;
+        }
+        keep.push(ok);
+    }
+    Ok(rejected)
+}
+
+/// Seeded fault injector: a fixed, deterministic subset of clients
+/// (⌈frac·n⌉, drawn by partial Fisher–Yates exactly like the session's
+/// participant sampler) rewrites its submission each round according to
+/// [`AttackKind`].  Submission buffers are allocated lazily on a
+/// client's first faulty round and reused thereafter — steady-state
+/// rounds perform zero tensor allocations.
+#[derive(Debug)]
+pub struct FaultInjector {
+    kind: AttackKind,
+    lambda: f32,
+    attackers: Vec<bool>,
+    rng: Rng,
+    subs: Vec<Option<(AdapterSet, AdapterSet)>>,
+    /// Previous round's honest halves per Stale attacker (checkpointed
+    /// by the session so replays survive resume bit-exactly).
+    pub prev: Vec<Option<(AdapterSet, AdapterSet)>>,
+}
+
+impl FaultInjector {
+    pub fn new(n: usize, kind: AttackKind, frac: f64, lambda: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut attackers = vec![false; n];
+        if kind != AttackKind::None && frac > 0.0 && n > 0 {
+            let m = ((frac * n as f64).ceil() as usize).min(n);
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..m {
+                let j = i + rng.below(n - i);
+                idx.swap(i, j);
+            }
+            for &u in &idx[..m] {
+                attackers[u] = true;
+            }
+        }
+        Self {
+            kind,
+            lambda: lambda as f32,
+            attackers,
+            rng,
+            subs: (0..n).map(|_| None).collect(),
+            prev: (0..n).map(|_| None).collect(),
+        }
+    }
+
+    pub fn kind(&self) -> AttackKind {
+        self.kind
+    }
+
+    pub fn is_attacker(&self, u: usize) -> bool {
+        self.attackers[u]
+    }
+
+    pub fn attacker_count(&self) -> usize {
+        self.attackers.iter().filter(|&&a| a).count()
+    }
+
+    /// The multiplier a TimingLie attacker applies to its reported step
+    /// times (|λ|, so the default sign-flip λ lies by over-reporting).
+    pub fn lie_factor(&self) -> f64 {
+        (self.lambda as f64).abs()
+    }
+
+    pub fn rng_state(&self) -> u64 {
+        self.rng.state()
+    }
+
+    pub fn set_rng_state(&mut self, state: u64) {
+        self.rng = Rng::from_state(state);
+    }
+
+    /// Stage client `u`'s submission for this round: copy the honest
+    /// `{client, server}` halves into the reusable buffer, then apply
+    /// the configured fault if `u` is an attacker.  `baseline` is the
+    /// model the cohort started the round from (attack reference point).
+    pub fn prepare(
+        &mut self,
+        u: usize,
+        client: &AdapterSet,
+        server: &AdapterSet,
+        baseline: &AdapterSet,
+    ) -> Result<()> {
+        if self.subs[u].is_none() {
+            self.subs[u] = Some((client.clone(), server.clone()));
+        } else {
+            let (c, s) = self.subs[u].as_mut().unwrap();
+            copy_adapters(c, client)?;
+            copy_adapters(s, server)?;
+        }
+        if !self.attackers[u] {
+            return Ok(());
+        }
+        match self.kind {
+            AttackKind::None | AttackKind::TimingLie => {}
+            AttackKind::Corrupt => {
+                let t = self.rng.below(4);
+                let (c, s) = self.subs[u].as_mut().unwrap();
+                // Corrupt the client half when it has layers (the fault
+                // models the device side); fall back to the server half
+                // for cut-0 clients.
+                let half =
+                    if c.tensors[t].numel() > 0 { &mut c.tensors[t] } else { &mut s.tensors[t] };
+                let d = half.as_f32_mut()?;
+                let len = d.len();
+                if len > 0 {
+                    let seg = (len / 8).max(1);
+                    let start = self.rng.below(len);
+                    for off in 0..seg {
+                        d[(start + off) % len] =
+                            if off % 2 == 0 { f32::NAN } else { f32::INFINITY };
+                    }
+                }
+            }
+            AttackKind::Scale => {
+                let lam = self.lambda;
+                let (c, s) = self.subs[u].as_mut().unwrap();
+                let k = c.layers;
+                if k + s.layers != baseline.layers {
+                    bail!("scale attack: baseline depth mismatch");
+                }
+                for i in 0..4 {
+                    let inner: usize = baseline.tensors[i].shape[1..].iter().product();
+                    let b = baseline.tensors[i].as_f32()?;
+                    for (x, bb) in c.tensors[i].as_f32_mut()?.iter_mut().zip(&b[..k * inner]) {
+                        *x = *bb + lam * (*x - *bb);
+                    }
+                    for (x, bb) in s.tensors[i].as_f32_mut()?.iter_mut().zip(&b[k * inner..]) {
+                        *x = *bb + lam * (*x - *bb);
+                    }
+                }
+            }
+            AttackKind::Stale => {
+                if self.prev[u].is_some() {
+                    // Submit last round's honest halves; bank this
+                    // round's honest copy for the next replay.
+                    let p = self.prev[u].as_mut().unwrap();
+                    let cur = self.subs[u].as_mut().unwrap();
+                    std::mem::swap(cur, p);
+                } else {
+                    self.prev[u] = Some((client.clone(), server.clone()));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The halves client `u` actually uploads (valid after `prepare`).
+    pub fn submission(&self, u: usize) -> Option<(&AdapterSet, &AdapterSet)> {
+        self.subs[u].as_ref().map(|(c, s)| (c, s))
+    }
+}
+
+/// Seeded spot-verification committee: each round a shuffled-index
+/// witness sample of ⌈frac·m⌉ cohort members is re-checked server-side;
+/// mismatching clients are flagged and quarantined for the rest of the
+/// run.  RNG state is checkpointable so witness draws survive resume.
+#[derive(Debug)]
+pub struct Committee {
+    frac: f64,
+    rng: Rng,
+    quarantined: Vec<bool>,
+    pub flagged_total: u64,
+    witness_buf: Vec<usize>,
+}
+
+impl Committee {
+    pub fn new(n: usize, frac: f64, seed: u64) -> Self {
+        Self {
+            frac,
+            rng: Rng::new(seed),
+            quarantined: vec![false; n],
+            flagged_total: 0,
+            witness_buf: Vec::new(),
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.frac > 0.0
+    }
+
+    /// Draw this round's witnesses from `pool` (client ids): partial
+    /// Fisher–Yates over the pool, first ⌈frac·m⌉ slots kept, sorted
+    /// for stable iteration.  Exactly ⌈frac·m⌉ RNG draws per call.
+    pub fn select(&mut self, pool: &[usize]) -> &[usize] {
+        self.witness_buf.clear();
+        if !self.is_active() || pool.is_empty() {
+            return &self.witness_buf;
+        }
+        self.witness_buf.extend_from_slice(pool);
+        let m = self.witness_buf.len();
+        let w = ((self.frac * m as f64).ceil() as usize).min(m);
+        for i in 0..w {
+            let j = i + self.rng.below(m - i);
+            self.witness_buf.swap(i, j);
+        }
+        self.witness_buf.truncate(w);
+        self.witness_buf.sort_unstable();
+        &self.witness_buf
+    }
+
+    pub fn flag(&mut self, u: usize) {
+        self.flagged_total += 1;
+        self.quarantined[u] = true;
+    }
+
+    pub fn is_quarantined(&self, u: usize) -> bool {
+        self.quarantined[u]
+    }
+
+    pub fn quarantined_count(&self) -> u64 {
+        self.quarantined.iter().filter(|&&q| q).count() as u64
+    }
+
+    pub fn rng_state(&self) -> u64 {
+        self.rng.state()
+    }
+
+    pub fn set_rng_state(&mut self, state: u64) {
+        self.rng = Rng::from_state(state);
+    }
+
+    /// Quarantine flags bit-packed into u64 words (checkpoint payload).
+    pub fn quarantine_words(&self) -> Vec<u64> {
+        self.quarantined
+            .chunks(64)
+            .map(|c| c.iter().enumerate().fold(0u64, |a, (i, &b)| a | ((b as u64) << i)))
+            .collect()
+    }
+
+    pub fn restore_quarantine(&mut self, words: &[u64]) -> Result<()> {
+        let expect = (self.quarantined.len() + 63) / 64;
+        if words.len() != expect {
+            bail!("quarantine mask has {} words, expected {expect}", words.len());
+        }
+        for (u, q) in self.quarantined.iter_mut().enumerate() {
+            *q = (words[u / 64] >> (u % 64)) & 1 == 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDims;
+
+    fn dims() -> ModelDims {
+        ModelDims::mini()
+    }
+
+    fn halves(seed: u64, k: usize) -> (AdapterSet, AdapterSet, AdapterSet) {
+        let full = AdapterSet::init(&dims(), 4, seed);
+        let (c, s) = full.split_at(k).unwrap();
+        (full, c, s)
+    }
+
+    #[test]
+    fn attacker_selection_is_seeded_and_sized() {
+        let a = FaultInjector::new(20, AttackKind::Scale, 0.2, -10.0, 7);
+        let b = FaultInjector::new(20, AttackKind::Scale, 0.2, -10.0, 7);
+        assert_eq!(a.attacker_count(), 4, "ceil(0.2 * 20)");
+        for u in 0..20 {
+            assert_eq!(a.is_attacker(u), b.is_attacker(u), "same seed, same set");
+        }
+        let c = FaultInjector::new(20, AttackKind::Scale, 0.2, -10.0, 8);
+        assert!((0..20).any(|u| a.is_attacker(u) != c.is_attacker(u)), "seed must matter");
+        let none = FaultInjector::new(20, AttackKind::None, 0.5, -10.0, 7);
+        assert_eq!(none.attacker_count(), 0, "attack none disables selection");
+        assert_eq!(FaultInjector::new(10, AttackKind::Corrupt, 0.05, 1.0, 1).attacker_count(), 1);
+    }
+
+    #[test]
+    fn corrupt_attack_injects_non_finite_segment() {
+        let (baseline, c, s) = halves(3, 2);
+        let mut inj = FaultInjector::new(1, AttackKind::Corrupt, 1.0, -10.0, 5);
+        inj.prepare(0, &c, &s, &baseline).unwrap();
+        let (fc, fs) = inj.submission(0).unwrap();
+        assert!(joined_non_finite(fc, fs).unwrap());
+        // Honest clients pass through bit-exactly.
+        let mut honest = FaultInjector::new(2, AttackKind::Corrupt, 0.5, -10.0, 5);
+        let victim = (0..2).find(|&u| !honest.is_attacker(u)).unwrap();
+        honest.prepare(victim, &c, &s, &baseline).unwrap();
+        let (hc, hs) = honest.submission(victim).unwrap();
+        assert!(!differs(hc, &c).unwrap());
+        assert!(!differs(hs, &s).unwrap());
+    }
+
+    #[test]
+    fn scale_attack_applies_lambda_around_baseline() {
+        let (baseline, c, s) = halves(9, 2);
+        let mut drifted_c = c.clone();
+        for t in drifted_c.tensors.iter_mut() {
+            for x in t.as_f32_mut().unwrap() {
+                *x += 0.5;
+            }
+        }
+        let mut inj = FaultInjector::new(1, AttackKind::Scale, 1.0, -2.0, 5);
+        inj.prepare(0, &drifted_c, &s, &baseline).unwrap();
+        let (fc, fs) = inj.submission(0).unwrap();
+        // Client delta was +0.5 everywhere ⇒ attacked delta is −1.0.
+        for (i, t) in fc.tensors.iter().enumerate() {
+            let b = c.tensors[i].as_f32().unwrap();
+            for (x, bb) in t.as_f32().unwrap().iter().zip(b) {
+                assert!((x - (bb - 1.0)).abs() < 1e-5);
+            }
+        }
+        // Server half had zero delta ⇒ unchanged.
+        assert!(!differs(fs, &s).unwrap());
+    }
+
+    #[test]
+    fn stale_attack_replays_previous_round() {
+        let (baseline, c1, s1) = halves(11, 2);
+        let (_, c2, s2) = halves(12, 2);
+        let mut inj = FaultInjector::new(1, AttackKind::Stale, 1.0, -10.0, 5);
+        inj.prepare(0, &c1, &s1, &baseline).unwrap();
+        let (f, _) = inj.submission(0).unwrap();
+        assert!(!differs(f, &c1).unwrap(), "first round has nothing to replay");
+        inj.prepare(0, &c2, &s2, &baseline).unwrap();
+        let (f2, g2) = inj.submission(0).unwrap();
+        assert!(!differs(f2, &c1).unwrap(), "second round replays round 1");
+        assert!(!differs(g2, &s1).unwrap());
+        inj.prepare(0, &c1, &s1, &baseline).unwrap();
+        let (f3, _) = inj.submission(0).unwrap();
+        assert!(!differs(f3, &c2).unwrap(), "third round replays round 2");
+    }
+
+    #[test]
+    fn prepare_is_tensor_alloc_free_after_first_round() {
+        let (baseline, c, s) = halves(13, 2);
+        let mut inj = FaultInjector::new(2, AttackKind::Corrupt, 0.5, -10.0, 5);
+        for u in 0..2 {
+            inj.prepare(u, &c, &s, &baseline).unwrap();
+        }
+        let before = crate::tensor::alloc_count();
+        for _ in 0..3 {
+            for u in 0..2 {
+                inj.prepare(u, &c, &s, &baseline).unwrap();
+            }
+        }
+        assert_eq!(crate::tensor::alloc_count(), before, "steady-state prepare must not allocate");
+    }
+
+    #[test]
+    fn injector_rng_state_roundtrips() {
+        let (baseline, c, s) = halves(17, 2);
+        let mut a = FaultInjector::new(1, AttackKind::Corrupt, 1.0, -10.0, 5);
+        a.prepare(0, &c, &s, &baseline).unwrap();
+        let mut b = FaultInjector::new(1, AttackKind::Corrupt, 1.0, -10.0, 5);
+        b.set_rng_state(a.rng_state());
+        a.prepare(0, &c, &s, &baseline).unwrap();
+        b.prepare(0, &c, &s, &baseline).unwrap();
+        let (ac, as_) = a.submission(0).unwrap();
+        let (bc, bs) = b.submission(0).unwrap();
+        assert!(!differs(ac, bc).unwrap());
+        assert!(!differs(as_, bs).unwrap());
+    }
+
+    #[test]
+    fn committee_selection_is_seeded_subset() {
+        let pool: Vec<usize> = vec![2, 5, 7, 11, 13, 17, 19, 23];
+        let mut a = Committee::new(30, 0.25, 9);
+        let mut b = Committee::new(30, 0.25, 9);
+        let wa: Vec<usize> = a.select(&pool).to_vec();
+        assert_eq!(wa.len(), 2, "ceil(0.25 * 8)");
+        assert!(wa.iter().all(|u| pool.contains(u)));
+        assert_eq!(wa, b.select(&pool).to_vec(), "same seed, same witnesses");
+        // Resuming from saved RNG state reproduces the next draw.
+        let state = a.rng_state();
+        let next: Vec<usize> = a.select(&pool).to_vec();
+        b.set_rng_state(state);
+        assert_eq!(next, b.select(&pool).to_vec());
+        let mut off = Committee::new(30, 0.0, 9);
+        assert!(off.select(&pool).is_empty(), "frac 0 draws nothing");
+    }
+
+    #[test]
+    fn committee_quarantine_is_sticky_and_checkpointable() {
+        let mut c = Committee::new(70, 0.5, 3);
+        c.flag(4);
+        c.flag(69);
+        assert_eq!(c.flagged_total, 2);
+        assert_eq!(c.quarantined_count(), 2);
+        assert!(c.is_quarantined(4) && c.is_quarantined(69) && !c.is_quarantined(5));
+        let words = c.quarantine_words();
+        assert_eq!(words.len(), 2);
+        let mut d = Committee::new(70, 0.5, 3);
+        d.restore_quarantine(&words).unwrap();
+        for u in 0..70 {
+            assert_eq!(c.is_quarantined(u), d.is_quarantined(u));
+        }
+        assert!(d.restore_quarantine(&[0]).is_err(), "wrong word count rejected");
+    }
+
+    #[test]
+    fn sanitizer_rejects_non_finite_and_outlier_norms() {
+        let dims = dims();
+        let baseline = AdapterSet::init(&dims, 4, 21);
+        let honest = {
+            let mut h = baseline.clone();
+            h.tensors[0].as_f32_mut().unwrap()[0] += 0.1;
+            h
+        };
+        let (hc, hs) = honest.split_at(2).unwrap();
+        let mut corrupt_c = hc.clone();
+        corrupt_c.tensors[0].as_f32_mut().unwrap()[1] = f32::NAN;
+        let mut huge = baseline.clone();
+        for t in huge.tensors.iter_mut() {
+            for x in t.as_f32_mut().unwrap() {
+                *x += 50.0;
+            }
+        }
+        let (gc, gs) = huge.split_at(2).unwrap();
+        let w = 0.25f32;
+        let subs: Vec<(f32, &AdapterSet, &AdapterSet)> =
+            vec![(w, &hc, &hs), (w, &corrupt_c, &hs), (w, &gc, &gs), (w, &hc, &hs)];
+        let mut norms = Vec::new();
+        let mut keep = Vec::new();
+        let rejected = sanitize_updates(&subs, &baseline, 10.0, &mut norms, &mut keep).unwrap();
+        assert_eq!(rejected, 2);
+        assert_eq!(keep, vec![true, false, false, true]);
+        assert!(norms[1].is_nan());
+        assert!(norms[2] > 10.0 * norms[0]);
+    }
+
+    #[test]
+    fn differs_is_bitwise_and_nan_safe() {
+        let a = AdapterSet::init(&dims(), 2, 31);
+        let mut b = a.clone();
+        assert!(!differs(&a, &b).unwrap());
+        let i = b.tensors[2].as_f32().unwrap().len() / 2;
+        b.tensors[2].as_f32_mut().unwrap()[i] = f32::NAN;
+        assert!(differs(&a, &b).unwrap(), "NaN-poisoned copy must differ");
+        let mut c = a.clone();
+        let v = c.tensors[0].as_f32().unwrap()[0];
+        c.tensors[0].as_f32_mut().unwrap()[0] = f32::from_bits(v.to_bits() ^ 1);
+        assert!(differs(&a, &c).unwrap(), "single-ULP flip must differ");
+    }
+}

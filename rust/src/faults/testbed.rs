@@ -1,0 +1,246 @@
+//! Synthetic attack/defense testbed: a closed-form federated run whose
+//! convergence is analytically known, used by `benches/robust.rs` and
+//! the artifact-free robustness tests to measure how much of the clean
+//! run's final quality each defense recovers under each attack.
+//!
+//! World model: the full-depth global adapters `G` start at zero and
+//! the (unknown to the defenses) optimum `T` is all-ones.  Each round
+//! every client takes the same contractive step
+//! `G + η·(T − G) + ε,  ε ~ N(0, σ²)` per coordinate, splits it at a
+//! fixed cut, and submits the halves.  Honest-only FedAvg therefore
+//! converges linearly (`‖G − T‖` shrinks by `1 − η` per round down to
+//! the `σ/(η√n)` noise floor), so "quality" has a crisp meaning:
+//! `1 − min(1, ‖G − T‖ / ‖G₀ − T‖)`, with a non-finite distance
+//! (NaN-poisoned global) scored 0.
+//!
+//! Attacks go through the real [`FaultInjector`]; defenses are the real
+//! [`Committee`], [`sanitize_updates`], and the trimmed / clipped merge
+//! kernels — the testbed only replaces the PJRT training step with the
+//! closed-form one, so the bench needs no artifacts.
+
+use super::{differs, sanitize_updates, AggKind, AttackKind, Committee, FaultInjector};
+use crate::lora::{
+    clipped_fedavg_joined_into, fedavg_joined_into, trimmed_fedavg_joined_into, AdapterSet,
+};
+use crate::model::ModelDims;
+use crate::tensor::rng::Rng;
+use anyhow::Result;
+
+/// Per-round contraction toward the optimum (the "learning rate" of the
+/// closed-form client step).
+pub const ETA: f32 = 0.3;
+/// Per-coordinate honest noise std — small against the unit optimum so
+/// the clean noise floor sits at quality ≈ 0.9999.
+pub const NOISE: f64 = 1e-4;
+
+/// One attack × defense configuration of the synthetic run.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub n: usize,
+    pub rounds: usize,
+    pub attack: AttackKind,
+    pub frac: f64,
+    pub lambda: f64,
+    pub agg: AggKind,
+    pub trim: usize,
+    /// Clip threshold as a fraction of the initial distance ‖G₀ − T‖
+    /// (`f64::INFINITY` disables clipping).
+    pub clip_rel: f64,
+    pub sanitize: bool,
+    pub sanitize_mult: f64,
+    pub verify_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Self {
+            n: 10,
+            rounds: 150,
+            attack: AttackKind::None,
+            frac: 0.0,
+            lambda: -10.0,
+            agg: AggKind::Mean,
+            trim: 0,
+            clip_rel: f64::INFINITY,
+            sanitize: false,
+            sanitize_mult: 3.0,
+            verify_frac: 0.0,
+            seed: 33,
+        }
+    }
+}
+
+/// What a scenario run produced.
+#[derive(Debug, Clone, Copy)]
+pub struct Outcome {
+    /// `1 − min(1, final_dist / d0)`; 0 if the global went non-finite.
+    pub quality: f64,
+    pub final_dist: f64,
+    pub d0: f64,
+    pub flagged: u64,
+    pub quarantined: u64,
+    pub rejected: u64,
+    /// Cumulative trimmed slots / clipped contributors across rounds.
+    pub trim_count: u64,
+}
+
+fn dist(a: &AdapterSet, b: &AdapterSet) -> Result<f64> {
+    let mut acc = 0.0f64;
+    for (x, y) in a.tensors.iter().zip(b.tensors.iter()) {
+        for (p, q) in x.as_f32()?.iter().zip(y.as_f32()?) {
+            let d = (*p - *q) as f64;
+            acc += d * d;
+        }
+    }
+    Ok(acc.sqrt())
+}
+
+/// Run one scenario to completion and score it.
+pub fn run(sc: &Scenario) -> Result<Outcome> {
+    let dims = ModelDims::mini();
+    let layers = dims.layers;
+    let k = layers / 2;
+    let mut truth = AdapterSet::zeros(&dims, layers);
+    for t in truth.tensors.iter_mut() {
+        t.as_f32_mut()?.fill(1.0);
+    }
+    let mut global = AdapterSet::zeros(&dims, layers);
+    let d0 = dist(&global, &truth)?;
+    let clip = sc.clip_rel * d0;
+    let mut rng = Rng::new(sc.seed);
+    let mut inj = (sc.attack != AttackKind::None && sc.frac > 0.0)
+        .then(|| FaultInjector::new(sc.n, sc.attack, sc.frac, sc.lambda, sc.seed ^ 0xFA17_5EED));
+    let mut committee = Committee::new(sc.n, sc.verify_frac, sc.seed ^ 0xC077_EE5E);
+    let mut cs: Vec<AdapterSet> = (0..sc.n).map(|_| AdapterSet::zeros(&dims, k)).collect();
+    let mut ss: Vec<AdapterSet> = (0..sc.n).map(|_| AdapterSet::zeros(&dims, layers - k)).collect();
+    let mut agg = AdapterSet::zeros(&dims, layers);
+    let mut col: Vec<(f32, f32)> = Vec::new();
+    let mut norms: Vec<f64> = Vec::new();
+    let mut keep: Vec<bool> = Vec::new();
+    let mut witnesses: Vec<usize> = Vec::new();
+    let mut rejected_total = 0u64;
+    let mut trim_total = 0u64;
+
+    for _ in 0..sc.rounds {
+        // Closed-form honest step: every client contracts toward T.
+        for u in 0..sc.n {
+            for i in 0..4 {
+                let inner: usize = global.tensors[i].shape[1..].iter().product();
+                let b = global.tensors[i].as_f32()?;
+                let t = truth.tensors[i].as_f32()?;
+                let split = k * inner;
+                for (j, x) in cs[u].tensors[i].as_f32_mut()?.iter_mut().enumerate() {
+                    *x = b[j] + ETA * (t[j] - b[j]) + (NOISE * rng.normal()) as f32;
+                }
+                for (j, x) in ss[u].tensors[i].as_f32_mut()?.iter_mut().enumerate() {
+                    let g = split + j;
+                    *x = b[g] + ETA * (t[g] - b[g]) + (NOISE * rng.normal()) as f32;
+                }
+            }
+        }
+        let mut survivors: Vec<usize> =
+            (0..sc.n).filter(|&u| !committee.is_quarantined(u)).collect();
+        if let Some(inj) = inj.as_mut() {
+            for &u in &survivors {
+                inj.prepare(u, &cs[u], &ss[u], &global)?;
+            }
+        }
+        if committee.is_active() {
+            witnesses.clear();
+            witnesses.extend_from_slice(committee.select(&survivors));
+            for &u in &witnesses {
+                let bad = match inj.as_ref().and_then(|i| i.submission(u)) {
+                    Some((c, s)) => differs(c, &cs[u])? || differs(s, &ss[u])?,
+                    None => false,
+                };
+                if bad {
+                    committee.flag(u);
+                }
+            }
+            survivors.retain(|&u| !committee.is_quarantined(u));
+        }
+        let injr = inj.as_ref();
+        let mut subs: Vec<(f32, &AdapterSet, &AdapterSet)> = survivors
+            .iter()
+            .map(|&u| match injr.and_then(|i| i.submission(u)) {
+                Some((c, s)) => (1.0f32, c, s),
+                None => (1.0f32, &cs[u], &ss[u]),
+            })
+            .collect();
+        if sc.sanitize {
+            rejected_total +=
+                sanitize_updates(&subs, &global, sc.sanitize_mult, &mut norms, &mut keep)?;
+            let mut i = 0;
+            subs.retain(|_| {
+                let kept = keep[i];
+                i += 1;
+                kept
+            });
+        }
+        if subs.is_empty() {
+            continue;
+        }
+        let w = 1.0 / subs.len() as f32;
+        for sub in subs.iter_mut() {
+            sub.0 = w;
+        }
+        match sc.agg {
+            AggKind::Mean => fedavg_joined_into(&subs, &mut agg)?,
+            AggKind::Trimmed => {
+                let trim = sc.trim.min(subs.len().saturating_sub(1) / 2);
+                trim_total += 2 * trim as u64;
+                trimmed_fedavg_joined_into(&subs, trim, &mut col, &mut agg)?;
+            }
+            AggKind::Clip => {
+                trim_total += clipped_fedavg_joined_into(&subs, &global, clip, &mut agg)?;
+            }
+        }
+        drop(subs);
+        for (g, a) in global.tensors.iter_mut().zip(agg.tensors.iter()) {
+            g.as_f32_mut()?.copy_from_slice(a.as_f32()?);
+        }
+    }
+    let final_dist = dist(&global, &truth)?;
+    let quality =
+        if final_dist.is_finite() { 1.0 - (final_dist / d0).min(1.0) } else { 0.0 };
+    Ok(Outcome {
+        quality,
+        final_dist,
+        d0,
+        flagged: committee.flagged_total,
+        quarantined: committee.quarantined_count(),
+        rejected: rejected_total,
+        trim_count: trim_total,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_run_converges_to_noise_floor() {
+        let out = run(&Scenario::default()).unwrap();
+        assert!(out.quality > 0.99, "clean quality {} below noise-floor bound", out.quality);
+        assert_eq!(out.flagged, 0);
+        assert_eq!(out.rejected, 0);
+    }
+
+    #[test]
+    fn testbed_is_seed_deterministic() {
+        let sc = Scenario {
+            attack: AttackKind::Scale,
+            frac: 0.2,
+            agg: AggKind::Trimmed,
+            trim: 2,
+            rounds: 40,
+            ..Scenario::default()
+        };
+        let a = run(&sc).unwrap();
+        let b = run(&sc).unwrap();
+        assert_eq!(a.quality.to_bits(), b.quality.to_bits(), "same seed, same trajectory");
+        let c = run(&Scenario { seed: 34, ..sc }).unwrap();
+        assert_ne!(a.quality.to_bits(), c.quality.to_bits(), "seed must matter");
+    }
+}

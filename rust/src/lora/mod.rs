@@ -233,6 +233,12 @@ impl AdapterSet {
 }
 
 fn check_weights(total_w: f32) -> Result<()> {
+    // NaN fails *both* comparisons below ((NaN - 1).abs() > eps is
+    // false), so non-finite sums must be rejected explicitly or a
+    // single NaN weight would silently poison the whole aggregate.
+    if !total_w.is_finite() {
+        bail!("aggregation weights must be finite, got sum {total_w}");
+    }
     if (total_w - 1.0).abs() > 1e-4 {
         bail!("aggregation weights must sum to 1, got {total_w}");
     }
@@ -317,6 +323,191 @@ pub fn fedavg_joined_into(
         }
     }
     Ok(())
+}
+
+/// True if any coordinate of the joined `{client, server}` update is
+/// NaN or ±Inf — the sanitizer's first rejection test.
+pub fn joined_non_finite(client: &AdapterSet, server: &AdapterSet) -> Result<bool> {
+    for half in [client, server] {
+        for t in &half.tensors {
+            if t.as_f32()?.iter().any(|x| !x.is_finite()) {
+                return Ok(true);
+            }
+        }
+    }
+    Ok(false)
+}
+
+/// L2 norm of the joined update delta ‖{c, s} − baseline‖₂ — the
+/// per-client statistic the sanitizer and the norm-clip defense key on.
+/// `client` covers layers [0, k), `server` [k, N); `baseline` is the
+/// full-depth reference the cohort started the round from.  Accumulates
+/// in f64 with zero tensor allocations; a non-finite update yields a
+/// non-finite norm (callers treat that as "reject").
+pub fn joined_delta_norm(
+    client: &AdapterSet,
+    server: &AdapterSet,
+    baseline: &AdapterSet,
+) -> Result<f64> {
+    let k = client.layers;
+    if k + server.layers != baseline.layers {
+        bail!(
+            "delta depth {} + {} != baseline depth {}",
+            k,
+            server.layers,
+            baseline.layers
+        );
+    }
+    let mut acc = 0.0f64;
+    for i in 0..4 {
+        let inner: usize = baseline.tensors[i].shape[1..].iter().product();
+        let b = baseline.tensors[i].as_f32()?;
+        for (x, y) in client.tensors[i].as_f32()?.iter().zip(&b[..k * inner]) {
+            let d = (*x - *y) as f64;
+            acc += d * d;
+        }
+        for (x, y) in server.tensors[i].as_f32()?.iter().zip(&b[k * inner..]) {
+            let d = (*x - *y) as f64;
+            acc += d * d;
+        }
+    }
+    Ok(acc.sqrt())
+}
+
+/// Coordinate-wise trimmed-mean variant of [`fedavg_joined_into`]: at
+/// every scalar coordinate the `trim` smallest and `trim` largest
+/// contributor values are discarded and the survivors re-weighted to a
+/// weighted mean.  NaN sorts above +Inf under `total_cmp`, so corrupt
+/// coordinates always land in the trimmed upper tail.  `col` is
+/// caller-owned scratch (value, weight per contributor) so steady-state
+/// rounds perform zero tensor allocations.  `trim == 0` delegates to
+/// [`fedavg_joined_into`] and is bit-identical to it.
+pub fn trimmed_fedavg_joined_into(
+    contribs: &[(f32, &AdapterSet, &AdapterSet)],
+    trim: usize,
+    col: &mut Vec<(f32, f32)>,
+    dst: &mut AdapterSet,
+) -> Result<()> {
+    if trim == 0 {
+        return fedavg_joined_into(contribs, dst);
+    }
+    if contribs.is_empty() {
+        bail!("empty aggregation");
+    }
+    let n = contribs.len();
+    if 2 * trim >= n {
+        bail!("trim {trim} leaves no survivors out of {n} contributors");
+    }
+    check_weights(contribs.iter().map(|(w, _, _)| w).sum())?;
+    for i in 0..4 {
+        let inner: usize = dst.tensors[i].shape[1..].iter().product();
+        let table: Vec<(usize, &[f32], &[f32], f32)> = contribs
+            .iter()
+            .map(|(w, c, s)| {
+                if c.layers + s.layers != dst.layers {
+                    bail!(
+                        "contributor depth {} + {} != aggregate depth {}",
+                        c.layers,
+                        s.layers,
+                        dst.layers
+                    );
+                }
+                Ok((c.layers * inner, c.tensors[i].as_f32()?, s.tensors[i].as_f32()?, *w))
+            })
+            .collect::<Result<_>>()?;
+        let d = dst.tensors[i].as_f32_mut()?;
+        for (j, dj) in d.iter_mut().enumerate() {
+            col.clear();
+            for (split, cv, sv, w) in &table {
+                let v = if j < *split { cv[j] } else { sv[j - *split] };
+                col.push((v, *w));
+            }
+            col.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+            let survivors = &col[trim..n - trim];
+            let wsum: f32 = survivors.iter().map(|&(_, w)| w).sum();
+            if wsum <= 0.0 || !wsum.is_finite() {
+                bail!("trimmed mean: surviving weights sum to {wsum}");
+            }
+            let mut acc = 0.0f64;
+            for &(v, w) in survivors {
+                acc += v as f64 * w as f64;
+            }
+            *dj = (acc / wsum as f64) as f32;
+        }
+    }
+    Ok(())
+}
+
+/// Norm-clipped variant of [`fedavg_joined_into`]: every contributor is
+/// read as `baseline + delta`; deltas with L2 norm above `clip` are
+/// scaled down to the threshold, and non-finite deltas are scaled to
+/// zero (the client contributes the baseline unchanged — a 0-weight
+/// axpy would still propagate NaN, so those updates are skipped
+/// entirely).  Computed with a single residual pass,
+/// `Σ w·s·x + (1 − Σ w·s)·b  ==  Σ w·(b + s·(x − b))`,
+/// zero tensor allocations.  A non-finite `clip` disables clipping and
+/// delegates to [`fedavg_joined_into`], bit-identical to it.  Returns
+/// the number of contributors that were clipped or zeroed.
+pub fn clipped_fedavg_joined_into(
+    contribs: &[(f32, &AdapterSet, &AdapterSet)],
+    baseline: &AdapterSet,
+    clip: f64,
+    dst: &mut AdapterSet,
+) -> Result<u64> {
+    if !clip.is_finite() {
+        fedavg_joined_into(contribs, dst)?;
+        return Ok(0);
+    }
+    if contribs.is_empty() {
+        bail!("empty aggregation");
+    }
+    if clip <= 0.0 {
+        bail!("clip threshold must be positive, got {clip}");
+    }
+    if baseline.layers != dst.layers {
+        bail!("baseline depth {} != aggregate depth {}", baseline.layers, dst.layers);
+    }
+    check_weights(contribs.iter().map(|(w, _, _)| w).sum())?;
+    for t in dst.tensors.iter_mut() {
+        t.as_f32_mut()?.fill(0.0);
+    }
+    let mut clipped = 0u64;
+    let mut carry = 1.0f32;
+    for (w, client, server) in contribs {
+        let k = client.layers;
+        if k + server.layers != dst.layers {
+            bail!(
+                "contributor depth {} + {} != aggregate depth {}",
+                k,
+                server.layers,
+                dst.layers
+            );
+        }
+        let norm = joined_delta_norm(client, server, baseline)?;
+        let s = if !norm.is_finite() {
+            clipped += 1;
+            0.0f32
+        } else if norm > clip {
+            clipped += 1;
+            (clip / norm) as f32
+        } else {
+            1.0f32
+        };
+        let ws = *w * s;
+        carry -= ws;
+        if ws != 0.0 {
+            for i in 0..4 {
+                let inner: usize = dst.tensors[i].shape[1..].iter().product();
+                let d = dst.tensors[i].as_f32_mut()?;
+                ops::axpy_into(ws, client.tensors[i].as_f32()?, &mut d[..k * inner])?;
+                ops::axpy_into(ws, server.tensors[i].as_f32()?, &mut d[k * inner..])?;
+            }
+        }
+    }
+    for i in 0..4 {
+        ops::axpy_into(carry, baseline.tensors[i].as_f32()?, dst.tensors[i].as_f32_mut()?)?;
+    }
+    Ok(clipped)
 }
 
 /// Per-client adapter bookkeeping on the server: the "LoRA adapter
@@ -558,5 +749,207 @@ mod tests {
         assert!(fedavg_joined_into(&[(0.4, &c, &s)], &mut dst).is_err(), "weights must sum to 1");
         let mut shallow = AdapterSet::zeros(&dims, 3);
         assert!(fedavg_joined_into(&[(1.0, &c, &s)], &mut shallow).is_err());
+    }
+
+    #[test]
+    fn fedavg_rejects_non_finite_weights_and_empty_cohorts() {
+        let dims = dims();
+        let a = AdapterSet::init(&dims, 2, 1);
+        let b = AdapterSet::init(&dims, 2, 2);
+        let mut dst = AdapterSet::zeros(&dims, 2);
+        // A NaN weight makes the sum NaN, which the old |sum - 1| > eps
+        // check silently accepted.
+        assert!(fedavg(&[(f32::NAN, &a), (0.5, &b)]).is_err());
+        assert!(fedavg_into(&[(0.5, &a), (f32::INFINITY, &b)], &mut dst).is_err());
+        assert!(fedavg_into(&[], &mut dst).is_err(), "empty cohort must bail");
+        let f = AdapterSet::init(&dims, 4, 3);
+        let (c, s) = f.split_at(2).unwrap();
+        let mut full = AdapterSet::zeros(&dims, 4);
+        assert!(fedavg_joined_into(&[(f32::NAN, &c, &s)], &mut full).is_err());
+    }
+
+    #[test]
+    fn joined_non_finite_flags_nan_and_inf() {
+        let dims = dims();
+        let f = AdapterSet::init(&dims, 4, 8);
+        let (c, s) = f.split_at(2).unwrap();
+        assert!(!joined_non_finite(&c, &s).unwrap());
+        let mut bad = c.clone();
+        bad.tensors[1].as_f32_mut().unwrap()[3] = f32::NAN;
+        assert!(joined_non_finite(&bad, &s).unwrap());
+        let mut bad_s = s.clone();
+        bad_s.tensors[2].as_f32_mut().unwrap()[0] = f32::INFINITY;
+        assert!(joined_non_finite(&c, &bad_s).unwrap());
+    }
+
+    #[test]
+    fn joined_delta_norm_matches_closed_form() {
+        let dims = dims();
+        let baseline = AdapterSet::zeros(&dims, 4);
+        let mut full = AdapterSet::zeros(&dims, 4);
+        for t in full.tensors.iter_mut() {
+            t.as_f32_mut().unwrap().fill(2.0);
+        }
+        let n = full.param_count() as f64;
+        for k in 0..=4 {
+            let (c, s) = full.split_at(k).unwrap();
+            let got = joined_delta_norm(&c, &s, &baseline).unwrap();
+            assert!((got - 2.0 * n.sqrt()).abs() < 1e-9 * n.sqrt());
+        }
+        let (c, s) = full.split_at(2).unwrap();
+        let shallow = AdapterSet::zeros(&dims, 3);
+        assert!(joined_delta_norm(&c, &s, &shallow).is_err());
+    }
+
+    #[test]
+    fn trimmed_mean_discards_corrupt_and_scaled_outliers() {
+        let dims = dims();
+        let honest = AdapterSet::init(&dims, 4, 21);
+        let (hc, hs) = honest.split_at(2).unwrap();
+        // One corrupt contributor (NaN/Inf segment) and one ×100 scaled
+        // contributor among four honest copies: trim=1 at each tail
+        // removes the worst value per coordinate, so attacks at
+        // *different* coordinates are still absorbed one tail at a time.
+        let mut corrupt = hc.clone();
+        for (i, x) in corrupt.tensors[0].as_f32_mut().unwrap().iter_mut().enumerate() {
+            *x = if i % 2 == 0 { f32::NAN } else { f32::INFINITY };
+        }
+        let mut scaled_s = hs.clone();
+        for t in scaled_s.tensors.iter_mut() {
+            for x in t.as_f32_mut().unwrap() {
+                *x *= 100.0;
+            }
+        }
+        let w = 1.0 / 6.0f32;
+        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> = vec![
+            (w, &hc, &hs),
+            (w, &corrupt, &hs),
+            (w, &hc, &hs),
+            (w, &hc, &scaled_s),
+            (w, &hc, &hs),
+            (w, &hc, &hs),
+        ];
+        let mut col: Vec<(f32, f32)> = Vec::with_capacity(contribs.len());
+        let mut dst = AdapterSet::zeros(&dims, 4);
+        trimmed_fedavg_joined_into(&contribs, 1, &mut col, &mut dst).unwrap();
+        assert!(dst.max_abs_diff(&honest).unwrap() < 1e-5, "trim=1 must recover the honest model");
+        // Over-trimming and empty cohorts are rejected.
+        assert!(trimmed_fedavg_joined_into(&contribs, 3, &mut col, &mut dst).is_err());
+        assert!(trimmed_fedavg_joined_into(&[], 1, &mut col, &mut dst).is_err());
+    }
+
+    #[test]
+    fn trimmed_mean_trim_zero_is_bitwise_fedavg() {
+        let dims = dims();
+        let fulls: Vec<AdapterSet> = (0..3).map(|i| AdapterSet::init(&dims, 4, 60 + i)).collect();
+        let halves: Vec<(AdapterSet, AdapterSet)> =
+            fulls.iter().map(|f| f.split_at(2).unwrap()).collect();
+        let w = 1.0 / 3.0f32;
+        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
+            halves.iter().map(|(c, s)| (w, c, s)).collect();
+        let mut reference = AdapterSet::zeros(&dims, 4);
+        fedavg_joined_into(&contribs, &mut reference).unwrap();
+        let mut col: Vec<(f32, f32)> = Vec::new();
+        let mut dst = AdapterSet::zeros(&dims, 4);
+        trimmed_fedavg_joined_into(&contribs, 0, &mut col, &mut dst).unwrap();
+        assert_eq!(dst.max_abs_diff(&reference).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn clipped_fedavg_bounds_attacker_influence() {
+        let dims = dims();
+        let baseline = AdapterSet::zeros(&dims, 4);
+        let honest = AdapterSet::zeros(&dims, 4); // zero delta
+        let (hc, hs) = honest.split_at(2).unwrap();
+        let mut attacker = AdapterSet::zeros(&dims, 4);
+        for t in attacker.tensors.iter_mut() {
+            t.as_f32_mut().unwrap().fill(5.0);
+        }
+        let (ac, as_) = attacker.split_at(2).unwrap();
+        let clip = 0.25f64;
+        let mut dst = AdapterSet::zeros(&dims, 4);
+        let clipped = clipped_fedavg_joined_into(
+            &[(0.5, &hc, &hs), (0.5, &ac, &as_)],
+            &baseline,
+            clip,
+            &mut dst,
+        )
+        .unwrap();
+        assert_eq!(clipped, 1);
+        let norm: f64 = dst
+            .tensors
+            .iter()
+            .map(|t| {
+                let n = ops::l2_norm(t).unwrap() as f64;
+                n * n
+            })
+            .sum::<f64>()
+            .sqrt();
+        // Attacker delta is rescaled to exactly `clip`, honest delta is
+        // zero, so the aggregate moves by w·clip = 0.125.
+        assert!((norm - 0.5 * clip).abs() < 1e-4 * clip, "got {norm}");
+    }
+
+    #[test]
+    fn clipped_fedavg_zeroes_non_finite_updates() {
+        let dims = dims();
+        let baseline = AdapterSet::init(&dims, 4, 31);
+        let honest = baseline.clone();
+        let (hc, hs) = honest.split_at(2).unwrap();
+        let mut corrupt_c = hc.clone();
+        corrupt_c.tensors[0].as_f32_mut().unwrap().fill(f32::NAN);
+        let mut dst = AdapterSet::zeros(&dims, 4);
+        let clipped = clipped_fedavg_joined_into(
+            &[(0.5, &hc, &hs), (0.5, &corrupt_c, &hs)],
+            &baseline,
+            1.0,
+            &mut dst,
+        )
+        .unwrap();
+        assert_eq!(clipped, 1);
+        // Honest == baseline, corrupt zeroed to baseline ⇒ dst == baseline.
+        for t in &dst.tensors {
+            assert!(t.as_f32().unwrap().iter().all(|x| x.is_finite()));
+        }
+        assert!(dst.max_abs_diff(&baseline).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn clipped_fedavg_infinite_threshold_is_bitwise_fedavg() {
+        let dims = dims();
+        let baseline = AdapterSet::init(&dims, 4, 41);
+        let fulls: Vec<AdapterSet> = (0..3).map(|i| AdapterSet::init(&dims, 4, 70 + i)).collect();
+        let halves: Vec<(AdapterSet, AdapterSet)> =
+            fulls.iter().map(|f| f.split_at(3).unwrap()).collect();
+        let w = 1.0 / 3.0f32;
+        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
+            halves.iter().map(|(c, s)| (w, c, s)).collect();
+        let mut reference = AdapterSet::zeros(&dims, 4);
+        fedavg_joined_into(&contribs, &mut reference).unwrap();
+        let mut dst = AdapterSet::zeros(&dims, 4);
+        let clipped =
+            clipped_fedavg_joined_into(&contribs, &baseline, f64::INFINITY, &mut dst).unwrap();
+        assert_eq!(clipped, 0);
+        assert_eq!(dst.max_abs_diff(&reference).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn robust_kernels_are_tensor_alloc_free() {
+        let dims = dims();
+        let baseline = AdapterSet::init(&dims, 4, 51);
+        let fulls: Vec<AdapterSet> = (0..4).map(|i| AdapterSet::init(&dims, 4, 80 + i)).collect();
+        let halves: Vec<(AdapterSet, AdapterSet)> =
+            fulls.iter().map(|f| f.split_at(2).unwrap()).collect();
+        let w = 0.25f32;
+        let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
+            halves.iter().map(|(c, s)| (w, c, s)).collect();
+        let mut col: Vec<(f32, f32)> = Vec::with_capacity(contribs.len());
+        let mut dst = AdapterSet::zeros(&dims, 4);
+        let before = crate::tensor::alloc_count();
+        trimmed_fedavg_joined_into(&contribs, 1, &mut col, &mut dst).unwrap();
+        clipped_fedavg_joined_into(&contribs, &baseline, 0.5, &mut dst).unwrap();
+        joined_delta_norm(&halves[0].0, &halves[0].1, &baseline).unwrap();
+        joined_non_finite(&halves[0].0, &halves[0].1).unwrap();
+        assert_eq!(crate::tensor::alloc_count(), before, "robust kernels must not allocate tensors");
     }
 }

@@ -26,6 +26,12 @@
 //! adds lognormal measurement noise to what the estimator observes.
 //! `run` also accepts --jsonl FILE to stream per-round JSON telemetry
 //! (a Session observer; env snapshots included when a trace runs).
+//! Byzantine robustness (EXPERIMENTS.md §Robustness): --attack
+//! none|corrupt|scale|stale|timing-lie --attack-frac P --attack-lambda L
+//! inject seeded faults; --agg mean|trimmed|clip (+ --trim K / --clip C),
+//! --sanitize [--sanitize-mult M], and --verify-frac P select the
+//! defenses; --winsor K clamps estimator observations; --drift-sigma S
+//! composes a fleet-wide drift walk onto an active trace.
 
 use anyhow::{bail, Result};
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
@@ -42,7 +48,10 @@ const USAGE: &str = "usage: sfl [--config mini|small] [--artifacts DIR] [--out D
 [--experiment FILE] [--seed N] [--dropout P] [--fleet N] [--fleet-preset paper|lognormal|zipf] \
 [--fleet-seed N] [--fleet-mfu-sigma S] [--max-participants N] [--state-pool-cap N] \
 [--trace none|random_walk|diurnal|markov|replay] [--trace-seed N] [--trace-replay FILE] \
-[--obs-noise-sigma S] <run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
+[--obs-noise-sigma S] [--drift-sigma S] [--attack none|corrupt|scale|stale|timing-lie] \
+[--attack-frac P] [--attack-lambda L] [--agg mean|trimmed|clip] [--trim K] [--clip C] \
+[--sanitize] [--sanitize-mult M] [--verify-frac P] [--winsor K] \
+<run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
 [--scheduler proposed|fifo|wf|random] [--max-rounds N] [--quiet] [--oracle-timing] \
 [--jsonl FILE]";
 
@@ -105,6 +114,47 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     // applies to stationary fleets (estimator robustness studies).
     if let Some(s) = args.get_parse::<f64>("obs-noise-sigma")? {
         cfg.trace.obs_noise_sigma = s;
+    }
+    // Fleet-wide correlated drift rides on an active trace timeline.
+    if let Some(s) = args.get_parse::<f64>("drift-sigma")? {
+        cfg.trace.drift_sigma = s;
+    }
+    // Byzantine fault injection + robust-aggregation defenses.
+    if let Some(kind) = args.get("attack") {
+        cfg.robust.attack = kind.parse()?;
+    } else if ["attack-frac", "attack-lambda"].iter().any(|f| args.has(f)) {
+        bail!("--attack-frac/--attack-lambda require --attack KIND");
+    }
+    if let Some(p) = args.get_parse::<f64>("attack-frac")? {
+        cfg.robust.attack_frac = p;
+    }
+    if let Some(l) = args.get_parse::<f64>("attack-lambda")? {
+        cfg.robust.attack_lambda = l;
+    }
+    if let Some(agg) = args.get("agg") {
+        cfg.robust.agg = agg.parse()?;
+    } else if ["trim", "clip"].iter().any(|f| args.has(f)) {
+        bail!("--trim/--clip require --agg trimmed|clip");
+    }
+    if let Some(k) = args.get_parse::<usize>("trim")? {
+        cfg.robust.trim = k;
+    }
+    if let Some(c) = args.get_parse::<f64>("clip")? {
+        cfg.robust.clip = c;
+    }
+    if args.has("sanitize") {
+        cfg.robust.sanitize = true;
+    } else if args.has("sanitize-mult") {
+        bail!("--sanitize-mult requires --sanitize");
+    }
+    if let Some(m) = args.get_parse::<f64>("sanitize-mult")? {
+        cfg.robust.sanitize_mult = m;
+    }
+    if let Some(p) = args.get_parse::<f64>("verify-frac")? {
+        cfg.robust.verify_frac = p;
+    }
+    if let Some(k) = args.get_parse::<f64>("winsor")? {
+        cfg.robust.winsor = k;
     }
     cfg.validate()?;
     Ok(cfg)

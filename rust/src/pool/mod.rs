@@ -294,6 +294,12 @@ impl StatePool {
         self.slots.iter().map(|s| self.cuts[s.client]).collect()
     }
 
+    /// The shared baseline adapters (the post-aggregation full model) —
+    /// the reference point robust aggregation measures deltas against.
+    pub fn baseline(&self) -> &AdapterSet {
+        &self.baseline
+    }
+
     /// Borrow a client's slot if (and only if) it is resident.
     pub fn resident(&self, u: usize) -> Option<&ClientSlot> {
         match self.entries.get(u) {

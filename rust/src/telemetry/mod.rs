@@ -76,11 +76,20 @@ impl<W: Write> RoundObserver for JsonLinesObserver<W> {
             ),
             None => String::new(),
         };
+        // Robust-aggregation counters (present when `[robust]` runs).
+        let robust = match &r.robust {
+            Some(b) => format!(
+                ",\"robust\":{{\"flagged\":{},\"quarantined\":{},\"rejected\":{},\
+                 \"trim_count\":{}}}",
+                b.flagged, b.quarantined, b.rejected, b.trim_count
+            ),
+            None => String::new(),
+        };
         let wrote = writeln!(
             self.out,
             "{{\"event\":\"round\",\"scheme\":\"{}\",\"scheduler\":\"{}\",\"round\":{},\
              \"sim_time\":{:.6},\"step_time\":{:.6},\"mean_loss\":{:.6},\
-             \"participants\":{}{env}{pool}{eval}}}",
+             \"participants\":{}{env}{pool}{robust}{eval}}}",
             r.scheme,
             r.scheduler,
             r.round,
@@ -276,6 +285,7 @@ mod tests {
                 participants: vec![0, 1, 2],
                 env: None,
                 pool: None,
+                robust: None,
                 eval: Some(EvalPoint { acc: 0.5, f1: 0.4, converged: false }),
             });
             let r = fake_run();
@@ -318,6 +328,7 @@ mod tests {
                     peak_resident_bytes: 8192,
                     spill_bytes: 1024,
                 }),
+                robust: None,
                 eval: None,
             });
         }
@@ -344,6 +355,7 @@ mod tests {
                 participants: vec![0, 2],
                 env: Some(EnvSnapshot { mfu_mean: 0.9125, link_mean: 1.05, available: 2 }),
                 pool: None,
+                robust: None,
                 eval: None,
             });
         }
@@ -351,5 +363,36 @@ mod tests {
         assert!(s.contains("\"env\":{\"mfu_mean\":0.912500"), "{s}");
         assert!(s.contains("\"link_mean\":1.050000"), "{s}");
         assert!(s.contains("\"available\":2"), "{s}");
+    }
+
+    #[test]
+    fn json_lines_observer_emits_robust_counters_when_active() {
+        use crate::coordinator::RoundReport;
+        use crate::faults::RobustStats;
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut obs = JsonLinesObserver::new(&mut buf);
+            obs.on_round(&RoundReport {
+                scheme: SchemeKind::Ours,
+                scheduler: SchedulerLabel::Scheduled(SchedulerKind::Proposed),
+                round: 4,
+                sim_time: 8.0,
+                step_time: 2.0,
+                mean_loss: 0.6,
+                participants: vec![0, 1, 4],
+                env: None,
+                pool: None,
+                robust: Some(RobustStats {
+                    flagged: 1,
+                    quarantined: 2,
+                    rejected: 3,
+                    trim_count: 4,
+                }),
+                eval: None,
+            });
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("\"robust\":{\"flagged\":1,\"quarantined\":2"), "{s}");
+        assert!(s.contains("\"rejected\":3,\"trim_count\":4}"), "{s}");
     }
 }

@@ -106,6 +106,13 @@ pub struct TraceSpec {
     /// Lognormal σ of the measurement noise applied to the timings the
     /// estimator observes (0 disables — active even with `kind = none`).
     pub obs_noise_sigma: f64,
+    /// Fleet-wide correlated drift: σ of one extra mean-reverting
+    /// random-walk multiplier composed onto *every* client's MFU and
+    /// link values (0 disables).  Models events that hit the whole
+    /// fleet at once — regional throttling, a backbone brown-out — so
+    /// attacks and fleet-wide slowdowns can coincide in benchmarks.
+    /// Requires an active `kind` (the static timeline never runs).
+    pub drift_sigma: f64,
     /// jsonl trace file for `kind = replay`.
     pub replay_path: String,
 }
@@ -124,6 +131,7 @@ impl Default for TraceSpec {
             mean_up: 300.0,
             mean_down: 60.0,
             obs_noise_sigma: 0.0,
+            drift_sigma: 0.0,
             replay_path: String::new(),
         }
     }

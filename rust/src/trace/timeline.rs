@@ -46,6 +46,13 @@ pub struct EnvTimeline {
     cur_mfu: Vec<f64>,
     cur_link: Vec<f64>,
     cur_avail: Vec<bool>,
+    /// Fleet-wide correlated drift multiplier composed onto every
+    /// client's MFU and link samples (`spec.drift_sigma > 0`).  One
+    /// shared mean-reverting walk — regional throttling, backbone
+    /// brown-outs — seeded *after* the per-client generators so a
+    /// drift-off spec draws the identical per-client streams.
+    drift: Option<TraceGen>,
+    cur_drift: f64,
     /// FNV-1a of the replay file's content (0 for non-replay kinds) —
     /// verified on resume so a changed or re-generated trace file fails
     /// loudly instead of silently desyncing the trajectory.
@@ -64,6 +71,8 @@ impl EnvTimeline {
             cur_mfu: Vec::new(),
             cur_link: Vec::new(),
             cur_avail: Vec::new(),
+            drift: None,
+            cur_drift: 1.0,
             replay_hash: 0,
         }
     }
@@ -146,6 +155,21 @@ impl EnvTimeline {
                 mfu.push(TraceGen::Replay(replay));
             }
         }
+        // Drift is seeded from the *tail* of the root stream: a
+        // drift-off spec draws nothing here, so every per-client
+        // generator above keeps its exact historical seed.
+        let drift = if spec.drift_sigma > 0.0 {
+            Some(TraceGen::Walk(RandomWalk::new(
+                root.next_u64(),
+                1.0,
+                spec.drift_sigma,
+                spec.revert,
+                MULT_LO,
+                MULT_HI,
+            )))
+        } else {
+            None
+        };
         Ok(Self {
             kind: spec.kind,
             mfu,
@@ -154,6 +178,8 @@ impl EnvTimeline {
             cur_mfu: vec![1.0; n],
             cur_link: vec![1.0; n],
             cur_avail: vec![true; n],
+            drift,
+            cur_drift: 1.0,
             replay_hash,
         })
     }
@@ -180,19 +206,32 @@ impl EnvTimeline {
     /// snapshot.  Called once per round; re-sampling the same `t`
     /// changes nothing (and consumes no randomness).
     pub fn advance(&mut self, t: f64) {
+        // Fleet-wide drift multiplier: sampled once, composed onto
+        // every client's MFU and link values (×1.0 when off — which is
+        // bit-identical to not multiplying at all).
+        self.cur_drift = match &mut self.drift {
+            Some(g) => g.value_at(t).clamp(MULT_LO, MULT_HI),
+            None => 1.0,
+        };
+        let d = self.cur_drift;
         if self.kind == TraceKind::Replay {
             // The fleet shares one replayed trajectory: sample it once
             // and broadcast (link/avail snapshots stay at their
             // constant 1.0 / true).
-            let v = self.mfu[0].value_at(t).clamp(MULT_LO, MULT_HI);
+            let v = (self.mfu[0].value_at(t) * d).clamp(MULT_LO, MULT_HI);
             self.cur_mfu.fill(v);
             return;
         }
         for u in 0..self.mfu.len() {
-            self.cur_mfu[u] = self.mfu[u].value_at(t).clamp(MULT_LO, MULT_HI);
-            self.cur_link[u] = self.link[u].value_at(t).clamp(MULT_LO, MULT_HI);
+            self.cur_mfu[u] = (self.mfu[u].value_at(t) * d).clamp(MULT_LO, MULT_HI);
+            self.cur_link[u] = (self.link[u].value_at(t) * d).clamp(MULT_LO, MULT_HI);
             self.cur_avail[u] = self.avail[u].value_at(t) >= 0.5;
         }
+    }
+
+    /// The current fleet-wide drift multiplier (1 when drift is off).
+    pub fn drift_mult(&self) -> f64 {
+        self.cur_drift
     }
 
     /// Client `u`'s current MFU multiplier (1 when inactive).
@@ -237,6 +276,11 @@ impl EnvTimeline {
         for gen in self.mfu.iter().chain(self.link.iter()).chain(self.avail.iter()) {
             gen.save_state(&mut out);
         }
+        // Drift words ride at the very end so drift-off checkpoints
+        // keep their historical layout.
+        if let Some(g) = &self.drift {
+            g.save_state(&mut out);
+        }
         out
     }
 
@@ -246,7 +290,8 @@ impl EnvTimeline {
     /// generator states.
     pub fn restore_state(&mut self, words: &[u64]) -> Result<()> {
         let gens = || self.mfu.iter().chain(self.link.iter()).chain(self.avail.iter());
-        let expected: usize = gens().map(|g| g.state_words()).sum();
+        let expected: usize = gens().map(|g| g.state_words()).sum::<usize>()
+            + self.drift.as_ref().map_or(0, |g| g.state_words());
         if words.len() != expected {
             bail!(
                 "timeline state has {} words, expected {expected} — checkpoint was taken \
@@ -264,6 +309,10 @@ impl EnvTimeline {
             let n = gen.state_words();
             gen.restore_state(&words[off..off + n])?;
             off += n;
+        }
+        if let Some(g) = &mut self.drift {
+            let n = g.state_words();
+            g.restore_state(&words[off..off + n])?;
         }
         Ok(())
     }
@@ -413,6 +462,96 @@ mod tests {
             ..spec
         };
         assert!(EnvTimeline::new(&missing, 4).is_err());
+    }
+
+    #[test]
+    fn fleet_drift_moves_every_client_coherently() {
+        // Freeze the per-client walks (sigma 0) so the only motion is
+        // the shared drift multiplier — every client must then carry
+        // the identical value, and it must move.
+        let spec = TraceSpec {
+            kind: TraceKind::RandomWalk,
+            seed: 77,
+            mfu_sigma: 0.0,
+            link_sigma: 0.0,
+            revert: 0.0,
+            drift_sigma: 0.4,
+            ..TraceSpec::default()
+        };
+        let mut a = EnvTimeline::new(&spec, 12).unwrap();
+        let mut b = EnvTimeline::new(&spec, 12).unwrap();
+        let mut moved = false;
+        for r in 1..=20 {
+            let t = r as f64 * 9.0;
+            a.advance(t);
+            b.advance(t);
+            let d = a.drift_mult();
+            assert!((MULT_LO..=MULT_HI).contains(&d));
+            for u in 0..12 {
+                assert_eq!(a.mfu_mult(u).to_bits(), d.to_bits(), "drift not fleet-wide");
+                assert_eq!(a.link_mult(u).to_bits(), d.to_bits());
+                assert_eq!(a.mfu_mult(u).to_bits(), b.mfu_mult(u).to_bits());
+            }
+            if (d - 1.0).abs() > 1e-3 {
+                moved = true;
+            }
+        }
+        assert!(moved, "drift walk never left nominal");
+    }
+
+    #[test]
+    fn drift_leaves_per_client_streams_untouched() {
+        // The drift generator is seeded after every per-client
+        // generator, so turning it on must not reshuffle their seeds:
+        // the composed sample is exactly (base × drift) wherever the
+        // clamp doesn't bind.
+        let base_spec = TraceSpec {
+            kind: TraceKind::RandomWalk,
+            seed: 5,
+            mfu_sigma: 0.05,
+            link_sigma: 0.05,
+            ..TraceSpec::default()
+        };
+        let drift_spec = TraceSpec { drift_sigma: 0.05, ..base_spec.clone() };
+        let mut plain = EnvTimeline::new(&base_spec, 6).unwrap();
+        let mut drifted = EnvTimeline::new(&drift_spec, 6).unwrap();
+        assert_eq!(drifted.state().len(), plain.state().len() + 3, "drift adds its own words");
+        for r in 1..=10 {
+            let t = r as f64 * 5.0;
+            plain.advance(t);
+            drifted.advance(t);
+            let d = drifted.drift_mult();
+            for u in 0..6 {
+                assert!(
+                    (drifted.mfu_mult(u) - plain.mfu_mult(u) * d).abs() < 1e-12,
+                    "per-client mfu stream changed when drift was enabled"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn drift_state_roundtrips_bit_exactly() {
+        let spec = TraceSpec { drift_sigma: 0.3, ..walk_spec() };
+        let mut a = EnvTimeline::new(&spec, 8).unwrap();
+        for r in 1..=6 {
+            a.advance(r as f64 * 7.3);
+        }
+        let words = a.state();
+        let mut b = EnvTimeline::new(&spec, 8).unwrap();
+        b.restore_state(&words).unwrap();
+        for r in 7..=30 {
+            let t = r as f64 * 7.3;
+            a.advance(t);
+            b.advance(t);
+            assert_eq!(a.drift_mult().to_bits(), b.drift_mult().to_bits());
+            for u in 0..8 {
+                assert_eq!(a.mfu_mult(u).to_bits(), b.mfu_mult(u).to_bits());
+            }
+        }
+        // A drift-off timeline refuses the drift-on word count.
+        let mut off = EnvTimeline::new(&walk_spec(), 8).unwrap();
+        assert!(off.restore_state(&words).is_err());
     }
 
     #[test]

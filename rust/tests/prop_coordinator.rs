@@ -2,7 +2,10 @@
 //! aggregation, queueing) using the in-tree propcheck runner.
 
 use sfl::coordinator::scheduler::*;
-use sfl::lora::{fedavg, AdapterSet};
+use sfl::faults::differs;
+use sfl::lora::{
+    clipped_fedavg_joined_into, fedavg, fedavg_joined_into, trimmed_fedavg_joined_into, AdapterSet,
+};
 use sfl::model::ModelDims;
 use sfl::simclock::SequentialResource;
 use sfl::tensor::rng::Rng;
@@ -273,6 +276,47 @@ fn prop_split_join_identity() {
             let (c, s) = set.split_at(*k).unwrap();
             let joined = AdapterSet::join(&c, &s).unwrap();
             joined.max_abs_diff(set).unwrap() == 0.0
+        },
+    );
+}
+
+/// The robust merge kernels at their degenerate settings are exact
+/// no-ops: `trim == 0` and a non-finite clip threshold both delegate to
+/// `fedavg_joined_into` and must be *bit*-identical to it (the "robust
+/// options off ⇒ today's trajectory" guarantee, at the kernel level).
+#[test]
+fn prop_robust_kernels_degenerate_to_fedavg_bitwise() {
+    let dims = ModelDims::mini();
+    check(
+        "robust-kernels-degenerate",
+        41,
+        30,
+        |rng| {
+            let n = gen::usize_in(rng, 1, 5);
+            let k = gen::usize_in(rng, 0, dims.layers);
+            let sets: Vec<AdapterSet> =
+                (0..n).map(|_| AdapterSet::init(&dims, dims.layers, rng.next_u64())).collect();
+            let baseline = AdapterSet::init(&dims, dims.layers, rng.next_u64());
+            (sets, baseline, k)
+        },
+        |(sets, baseline, k)| {
+            let halves: Vec<(AdapterSet, AdapterSet)> =
+                sets.iter().map(|s| s.split_at(*k).unwrap()).collect();
+            let w = 1.0 / sets.len() as f32;
+            let contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
+                halves.iter().map(|(c, s)| (w, c, s)).collect();
+            let mut plain = AdapterSet::zeros(&dims, dims.layers);
+            fedavg_joined_into(&contribs, &mut plain).unwrap();
+            let mut trimmed = AdapterSet::zeros(&dims, dims.layers);
+            let mut col: Vec<(f32, f32)> = Vec::new();
+            trimmed_fedavg_joined_into(&contribs, 0, &mut col, &mut trimmed).unwrap();
+            let mut clipped = AdapterSet::zeros(&dims, dims.layers);
+            let n_clipped =
+                clipped_fedavg_joined_into(&contribs, baseline, f64::INFINITY, &mut clipped)
+                    .unwrap();
+            n_clipped == 0
+                && !differs(&plain, &trimmed).unwrap()
+                && !differs(&plain, &clipped).unwrap()
         },
     );
 }

@@ -1,0 +1,183 @@
+//! Artifact-free robustness acceptance tests: the attack/defense
+//! recovery gate on the closed-form `faults::testbed` world, and the
+//! no-advantage guarantee for clients that lie to the timing estimator.
+
+use sfl::coordinator::estimator::TimingEstimator;
+use sfl::coordinator::scheduler::{brute_force_best, makespan, JobInfo, Scheduler};
+use sfl::coordinator::timing::StepTiming;
+use sfl::faults::testbed::{run, Scenario};
+use sfl::faults::{AggKind, AttackKind};
+use sfl::util::propcheck::{check, gen};
+
+/// Acceptance gate (ISSUE §robust): with 20% attackers, trimmed mean
+/// and norm clipping each recover ≥ 95% of the clean run's final
+/// quality while plain FedAvg measurably degrades — for both the
+/// non-finite corruption and the scaled-gradient attack.
+#[test]
+fn robust_kernels_recover_under_twenty_percent_attack() {
+    let clean = run(&Scenario::default()).unwrap();
+    assert!(clean.quality > 0.99, "clean run must converge, got {}", clean.quality);
+    let floor = 0.95 * clean.quality;
+    for attack in [AttackKind::Corrupt, AttackKind::Scale] {
+        let attacked = Scenario { attack, frac: 0.2, ..Scenario::default() };
+        let mean = run(&attacked).unwrap();
+        assert!(
+            mean.quality < 0.8,
+            "{attack}: plain FedAvg should degrade under 20% attackers, got {:.4}",
+            mean.quality
+        );
+        let trimmed = run(&Scenario {
+            agg: AggKind::Trimmed,
+            trim: 2,
+            ..attacked.clone()
+        })
+        .unwrap();
+        assert!(
+            trimmed.quality >= floor,
+            "{attack}: trimmed mean recovered only {:.4} of clean {:.4}",
+            trimmed.quality,
+            clean.quality
+        );
+        assert!(trimmed.trim_count > 0, "{attack}: trimmed mean must report trims");
+        let clipped = run(&Scenario {
+            agg: AggKind::Clip,
+            clip_rel: 0.02,
+            ..attacked
+        })
+        .unwrap();
+        assert!(
+            clipped.quality >= floor,
+            "{attack}: norm clip recovered only {:.4} of clean {:.4}",
+            clipped.quality,
+            clean.quality
+        );
+        assert!(clipped.trim_count > 0, "{attack}: norm clip must report clips");
+    }
+}
+
+/// The two merge-kernel-independent defenses each recover on their own
+/// with the *plain* mean: the pre-merge sanitizer rejects attacker
+/// updates by norm, and a full-coverage committee quarantines every
+/// attacker after its first faulty round.
+#[test]
+fn sanitizer_and_committee_each_recover_with_plain_mean() {
+    let clean = run(&Scenario::default()).unwrap();
+    let floor = 0.95 * clean.quality;
+    for attack in [AttackKind::Corrupt, AttackKind::Scale] {
+        let sanitized = run(&Scenario {
+            attack,
+            frac: 0.2,
+            sanitize: true,
+            ..Scenario::default()
+        })
+        .unwrap();
+        assert!(
+            sanitized.quality >= floor,
+            "{attack}: sanitizer recovered only {:.4}",
+            sanitized.quality
+        );
+        assert!(sanitized.rejected > 0, "{attack}: sanitizer must reject updates");
+        let verified = run(&Scenario {
+            attack,
+            frac: 0.2,
+            verify_frac: 1.0,
+            ..Scenario::default()
+        })
+        .unwrap();
+        assert_eq!(
+            verified.quarantined, 2,
+            "{attack}: full-coverage committee must quarantine both attackers"
+        );
+        assert_eq!(verified.flagged, 2, "{attack}: each attacker flagged exactly once");
+        assert!(
+            verified.quality >= floor,
+            "{attack}: committee recovered only {:.4}",
+            verified.quality
+        );
+    }
+}
+
+/// A stale replay is a *mild* attack (yesterday's honest step still
+/// points roughly at the optimum) — the robust kernels must not make
+/// things worse than the clean floor allows.
+#[test]
+fn trimmed_mean_tolerates_stale_replays() {
+    let clean = run(&Scenario::default()).unwrap();
+    let stale = run(&Scenario {
+        attack: AttackKind::Stale,
+        frac: 0.2,
+        agg: AggKind::Trimmed,
+        trim: 2,
+        ..Scenario::default()
+    })
+    .unwrap();
+    assert!(
+        stale.quality >= 0.95 * clean.quality,
+        "stale replay under trimmed mean recovered only {:.4}",
+        stale.quality
+    );
+}
+
+/// Paper-model fleet (zero arrivals, equal server times, backward time
+/// `N_c / C`): the greedy Alg. 2 order over *true* jobs is provably
+/// optimal, so a client that lies to the timing estimator — by any
+/// factor, over- or under-reporting — can only reorder the schedule
+/// away from the optimum.  Its true makespan never beats the honest
+/// fleet's: timing lies buy no advantage.
+#[test]
+fn prop_timing_liars_gain_no_makespan_advantage() {
+    check(
+        "liar-no-advantage",
+        53,
+        60,
+        |rng| {
+            let n = gen::usize_in(rng, 2, 6);
+            let ts = gen::f64_in(rng, 0.5, 2.0);
+            let jobs: Vec<JobInfo> = (0..n)
+                .map(|i| {
+                    let nc = gen::usize_in(rng, 1, 6);
+                    let c = gen::f64_in(rng, 0.2, 4.0);
+                    JobInfo {
+                        client: i,
+                        arrival: 0.0,
+                        server_time: ts,
+                        client_bwd_time: nc as f64 / c,
+                        bwd_comm_time: 0.0,
+                        n_client_adapters: nc,
+                        compute_capability: c,
+                    }
+                })
+                .collect();
+            // At least one liar; lie factor covers over- and
+            // under-reporting across three orders of magnitude.
+            let liar = gen::usize_in(rng, 0, n - 1);
+            let liars: Vec<bool> =
+                (0..n).map(|u| u == liar || gen::usize_in(rng, 0, 2) == 0).collect();
+            let lam = gen::f64_in(rng, 2.0, 1000.0);
+            let lam = if gen::usize_in(rng, 0, 1) == 1 { 1.0 / lam } else { lam };
+            (jobs, liars, lam)
+        },
+        |(jobs, liars, lam)| {
+            let (_, best) = brute_force_best(jobs);
+            let mut honest = TimingEstimator::new(jobs.len(), 0.3);
+            let mut lying = TimingEstimator::new(jobs.len(), 0.3);
+            for (u, j) in jobs.iter().enumerate() {
+                let obs = StepTiming::from_job(j);
+                honest.observe(u, &obs);
+                let lie = obs.scaled(*lam);
+                lying.observe(u, if liars[u] { &lie } else { &obs });
+            }
+            let mut hv = Vec::new();
+            honest.jobs_into(jobs, &mut hv);
+            let mut lv = Vec::new();
+            lying.jobs_into(jobs, &mut lv);
+            let honest_order = sfl::coordinator::scheduler::ProposedScheduler.order(&hv);
+            let lying_order = sfl::coordinator::scheduler::ProposedScheduler.order(&lv);
+            // Both makespans are evaluated on the TRUE jobs — the lie
+            // only changes the order the server picks.
+            let m_honest = makespan(jobs, &honest_order);
+            let m_lying = makespan(jobs, &lying_order);
+            m_honest <= best + 1e-9 && m_lying >= m_honest - 1e-6
+        },
+    );
+}

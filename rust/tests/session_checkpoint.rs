@@ -9,6 +9,7 @@
 
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
 use sfl::coordinator::{RunResult, Session};
+use sfl::faults::{AggKind, AttackKind};
 use sfl::fleet::{FleetPreset, FleetSpec};
 use sfl::runtime::Engine;
 use sfl::trace::{TraceKind, TraceSpec};
@@ -305,6 +306,77 @@ fn resume_fails_loudly_when_replay_trace_file_is_missing_or_changed() {
     let mut resumed = Session::resume(&e, &cfg, &ckpt).unwrap();
     assert_eq!(resumed.round(), 2);
     resumed.step_round().unwrap();
+}
+
+#[test]
+fn benign_robust_pipeline_is_bitwise_identical_to_plain() {
+    // The full robust path — staging, committee draws, sanitizer norm
+    // scan, trimmed kernel — with zero attackers and degenerate knobs
+    // (trim 0) must reproduce today's plain trajectory *bit-for-bit*:
+    // the defenses are observers until something actually misbehaves.
+    let Some(e) = engine() else { return };
+    let plain = mini_cfg();
+    let mut benign = plain.clone();
+    benign.robust.agg = AggKind::Trimmed;
+    benign.robust.trim = 0;
+    benign.robust.sanitize = true;
+    benign.robust.verify_frac = 0.25;
+    let rp = Session::new(&e, &plain).unwrap().run_to_convergence().unwrap();
+    let rb = Session::new(&e, &benign).unwrap().run_to_convergence().unwrap();
+    assert_bit_identical(&rp, &rb, "benign-robust");
+}
+
+#[test]
+fn robust_session_under_stale_attack_resumes_bit_identical() {
+    // The adversarial round trip: stale-replay attackers (whose banked
+    // previous-round halves must be serialized), a trimmed-mean merge,
+    // and a spot-verification committee mid-quarantine — fault RNG,
+    // committee RNG, and the quarantine mask all survive resume.
+    let Some(e) = engine() else { return };
+    let mut cfg = mini_cfg();
+    cfg.robust.attack = AttackKind::Stale;
+    cfg.robust.attack_frac = 0.3;
+    cfg.robust.agg = AggKind::Trimmed;
+    cfg.robust.trim = 1;
+    cfg.robust.verify_frac = 0.25;
+    roundtrip(&e, &cfg, "robust-stale");
+
+    let mut scaled = mini_cfg();
+    scaled.robust.attack = AttackKind::Scale;
+    scaled.robust.attack_frac = 0.2;
+    scaled.robust.attack_lambda = -4.0;
+    scaled.robust.agg = AggKind::Clip;
+    scaled.robust.clip = 0.5;
+    scaled.robust.sanitize = true;
+    roundtrip(&e, &scaled, "robust-scale-clip");
+}
+
+#[test]
+fn resume_rejects_changed_robust_config() {
+    // The robust knobs are fingerprinted: resuming under a different
+    // attack fraction — or with the defenses switched off entirely —
+    // must refuse rather than silently change the threat model.
+    let Some(e) = engine() else { return };
+    let mut cfg = mini_cfg();
+    cfg.robust.attack = AttackKind::Scale;
+    cfg.robust.attack_frac = 0.2;
+    cfg.robust.agg = AggKind::Trimmed;
+    cfg.robust.trim = 1;
+    let mut s = Session::new(&e, &cfg).unwrap();
+    s.step_round().unwrap();
+    let path = ckpt_path("robust-mismatch");
+    s.checkpoint(&path).unwrap();
+
+    let mut refrac = cfg.clone();
+    refrac.robust.attack_frac = 0.4;
+    assert!(Session::resume(&e, &refrac, &path).is_err());
+
+    let mut disarmed = cfg.clone();
+    disarmed.robust = Default::default();
+    assert!(Session::resume(&e, &disarmed, &path).is_err());
+
+    let resumable = Session::resume(&e, &cfg, &path);
+    assert!(resumable.is_ok(), "unchanged robust config must resume");
 }
 
 #[test]
