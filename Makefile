@@ -3,7 +3,7 @@
 # `artifacts` needs the python env (jax) once; everything else is
 # rust-only.  Tier-1 verify: `make build test`.  Lint gate: `make lint`.
 
-.PHONY: artifacts build test bench bench-sched bench-trace bench-mem bench-robust lint clean
+.PHONY: artifacts build test bench bench-sched bench-trace bench-mem bench-robust bench-async lint clean
 
 # AOT-lower the HLO artifacts + params.bin the runtime executes.
 # Output lands in rust/artifacts/<config>/ (cargo's working directory
@@ -48,6 +48,13 @@ bench-mem:
 bench-robust:
 	cd rust && cargo bench --bench robust
 
+# Async-vs-sync pacing sweep on the event-engine testbed; writes
+# rust/BENCH_async.json (time-to-target + speedup per trace × τ × K —
+# EXPERIMENTS.md §Async).  CI runs the same bench with ASYNC_SMOKE=1
+# (markov trace at the default merge settings only).
+bench-async:
+	cd rust && cargo bench --bench async_churn
+
 # Format + clippy gate (CI tier-1 companion).
 lint:
 	cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
@@ -55,4 +62,4 @@ lint:
 clean:
 	cd rust && cargo clean
 	rm -f rust/BENCH_hotpath.json rust/BENCH_sched.json rust/BENCH_trace.json \
-	      rust/BENCH_memory.json rust/BENCH_robust.json
+	      rust/BENCH_memory.json rust/BENCH_robust.json rust/BENCH_async.json

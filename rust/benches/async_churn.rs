@@ -1,0 +1,100 @@
+//! Async-vs-sync pacing bench on the closed-form `events::testbed`
+//! world: heterogeneous clients under markov availability churn and
+//! diurnal slowdowns, swept across staleness bounds and buffer sizes,
+//! recording time-to-target for each mode into `BENCH_async.json`.
+//! Pure host-side — the async mode runs on the real `EventEngine` with
+//! the real staleness/version primitives, so no PJRT artifacts are
+//! needed.
+//!
+//!     cargo bench --bench async_churn               # full sweep
+//!     ASYNC_SMOKE=1 cargo bench --bench async_churn  # CI smoke
+//!
+//! The acceptance gate (asserted in smoke runs too): buffered-async
+//! reaches the target strictly faster than the synchronous barrier
+//! under markov churn at the default merge settings, without giving up
+//! final quality.
+
+use sfl::events::testbed::{run_async, run_sync, Scenario};
+use sfl::trace::{TraceKind, TraceSpec};
+
+fn scenario(kind: TraceKind) -> Scenario {
+    Scenario { trace: TraceSpec { kind, ..TraceSpec::default() }, ..Scenario::default() }
+}
+
+fn main() {
+    let smoke = std::env::var("ASYNC_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let bounds: &[f64] = if smoke { &[240.0] } else { &[60.0, 240.0, 960.0] };
+    let ks: &[usize] = if smoke { &[4] } else { &[2, 4, 8] };
+    let traces: &[(&str, TraceKind)] = if smoke {
+        &[("markov", TraceKind::Markov)]
+    } else {
+        &[("markov", TraceKind::Markov), ("diurnal", TraceKind::Diurnal)]
+    };
+    let mut entries: Vec<(String, String)> = Vec::new();
+
+    for &(name, kind) in traces {
+        let base = scenario(kind);
+        let sync = run_sync(&base).expect("sync run");
+        println!(
+            "async_churn {name}/sync: time={:.1}s rounds={} final_rel={:.4}",
+            sync.time_to_target, sync.merges, sync.final_rel
+        );
+        entries.push((format!("async/{name}/sync/time"), format!("{:.3}", sync.time_to_target)));
+        entries.push((format!("async/{name}/sync/merges"), sync.merges.to_string()));
+
+        for &tau in bounds {
+            for &k in ks {
+                let sc = Scenario { staleness_bound: tau, buffer_k: k, ..base.clone() };
+                let a = run_async(&sc).expect("async run");
+                let tag = format!("{name}/tau{}/k{k}", tau as u64);
+                println!(
+                    "async_churn {tag}: time={:.1}s merges={} max_staleness={} \
+                     speedup={:.2}x final_rel={:.4}",
+                    a.time_to_target,
+                    a.merges,
+                    a.max_staleness,
+                    sync.time_to_target / a.time_to_target,
+                    a.final_rel
+                );
+                entries.push((format!("async/{tag}/time"), format!("{:.3}", a.time_to_target)));
+                entries.push((
+                    format!("async/{tag}/speedup"),
+                    format!("{:.4}", sync.time_to_target / a.time_to_target),
+                ));
+                entries.push((
+                    format!("async/{tag}/max_staleness"),
+                    a.max_staleness.to_string(),
+                ));
+                assert!(
+                    a.final_rel <= sc.target,
+                    "{tag}: async stopped at rel {:.4} > target {:.4}",
+                    a.final_rel,
+                    sc.target
+                );
+                // Acceptance gate: default merge settings beat the
+                // barrier under markov churn.
+                if name == "markov" && (tau - base.staleness_bound).abs() < 1e-9 && k == base.buffer_k
+                {
+                    assert!(
+                        a.time_to_target < sync.time_to_target,
+                        "{tag}: async {:.1}s must beat sync {:.1}s under markov churn",
+                        a.time_to_target,
+                        sync.time_to_target
+                    );
+                }
+            }
+        }
+    }
+    println!("accept: buffered-async beats the barrier under markov churn at default K/τ");
+
+    let mut json = String::from("{\n");
+    for (i, (name, value)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        json.push_str(&format!("  \"{name}\": {value}{comma}\n"));
+    }
+    json.push_str("}\n");
+    match std::fs::write("BENCH_async.json", &json) {
+        Ok(()) => println!("wrote BENCH_async.json ({} entries)", entries.len()),
+        Err(e) => eprintln!("could not write BENCH_async.json: {e}"),
+    }
+}

@@ -155,6 +155,12 @@ pub struct TrainConfig {
     pub oracle_timing: bool,
     /// EWMA smoothing factor for the online timing estimator, in (0, 1].
     pub timing_ewma_alpha: f64,
+    /// Adapt the EWMA factor per client from observed residual variance
+    /// (`--timing-ewma-alpha adaptive`): clients whose residuals stay
+    /// large (a drifting device the EWMA is lagging) track faster,
+    /// stable clients smooth harder.  `false` keeps the fixed-α path
+    /// bit-identical.
+    pub timing_ewma_adaptive: bool,
     pub seed: u64,
 }
 
@@ -175,6 +181,7 @@ impl Default for TrainConfig {
             max_participants: 0,
             oracle_timing: false,
             timing_ewma_alpha: crate::coordinator::estimator::DEFAULT_EWMA_ALPHA,
+            timing_ewma_adaptive: false,
             seed: 42,
         }
     }
@@ -232,6 +239,11 @@ pub struct RobustConfig {
     /// Estimator winsor factor k: observations clamped into
     /// [EWMA/k, EWMA·k] (`inf` disables the clamp).
     pub winsor: f64,
+    /// Committee re-admission: a flagged client re-enters after this
+    /// many rounds of quarantine, on probation (its next update is
+    /// always committee-verified).  `0` keeps the historical permanent
+    /// quarantine bit-identically.  Requires `verify_frac > 0`.
+    pub quarantine_ttl: usize,
 }
 
 impl Default for RobustConfig {
@@ -247,7 +259,32 @@ impl Default for RobustConfig {
             sanitize_mult: 10.0,
             verify_frac: 0.0,
             winsor: f64::INFINITY,
+            quarantine_ttl: 0,
         }
+    }
+}
+
+/// Asynchronous-round knobs (`[async]` section): the discrete-event
+/// engine replaces the round barrier with buffered bounded-staleness
+/// aggregation.  Disabled (the default) is guaranteed bit-identical to
+/// the historical synchronous barrier — the engine still runs, but the
+/// barrier is expressed as a single aggregation-trigger event at the
+/// cohort makespan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsyncConfig {
+    pub enabled: bool,
+    /// Staleness bound τ (sim seconds): merge whatever is buffered once
+    /// the oldest buffered update has waited this long.
+    pub staleness_bound: f64,
+    /// Merge as soon as this many updates are buffered.
+    pub buffer_k: usize,
+    /// Staleness-decay exponent β in `1/(1+s)^β` (0 disables decay).
+    pub staleness_beta: f64,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        Self { enabled: false, staleness_bound: 60.0, buffer_k: 4, staleness_beta: 0.5 }
     }
 }
 
@@ -287,6 +324,9 @@ pub struct ExperimentConfig {
     pub pool: PoolConfig,
     /// Byzantine fault injection + server-side defenses.
     pub robust: RobustConfig,
+    /// Discrete-event asynchronous rounds (buffered bounded-staleness
+    /// aggregation).  Disabled = the synchronous barrier, bit-exactly.
+    pub asynchrony: AsyncConfig,
     pub server: ServerProfile,
     pub train: TrainConfig,
     /// Root of the artifacts directory.
@@ -315,6 +355,7 @@ impl ExperimentConfig {
             trace: TraceSpec::default(),
             pool: PoolConfig::default(),
             robust: RobustConfig::default(),
+            asynchrony: AsyncConfig::default(),
             server: ServerProfile::rtx4080s(),
             train: TrainConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -477,6 +518,25 @@ impl ExperimentConfig {
         if r.is_active() && self.scheme == SchemeKind::Sl {
             bail!("robust options require a parallel scheme (ours|sfl) — sl aggregates no cohort");
         }
+        if r.quarantine_ttl > 0 && r.verify_frac <= 0.0 {
+            bail!(
+                "quarantine_ttl requires a committee (verify_frac > 0) — probationers must be \
+                 re-verified on re-admission"
+            );
+        }
+        let a = &self.asynchrony;
+        if !a.staleness_bound.is_finite() || a.staleness_bound <= 0.0 {
+            bail!("async staleness_bound must be finite and > 0, got {}", a.staleness_bound);
+        }
+        if a.buffer_k == 0 {
+            bail!("async buffer_k must be >= 1");
+        }
+        if !a.staleness_beta.is_finite() || a.staleness_beta < 0.0 {
+            bail!("async staleness_beta must be finite and >= 0, got {}", a.staleness_beta);
+        }
+        if a.enabled && self.scheme == SchemeKind::Sl {
+            bail!("async rounds require a parallel scheme (ours|sfl) — sl has no cohort to buffer");
+        }
         Ok(())
     }
 
@@ -536,6 +596,7 @@ impl ExperimentConfig {
         t.max_participants = r.parse_or("max_participants", t.max_participants)?;
         t.oracle_timing = r.parse_or("oracle_timing", t.oracle_timing)?;
         t.timing_ewma_alpha = r.parse_or("timing_ewma_alpha", t.timing_ewma_alpha)?;
+        t.timing_ewma_adaptive = r.parse_or("timing_ewma_adaptive", t.timing_ewma_adaptive)?;
         t.seed = r.parse_or("seed", t.seed)?;
 
         if let Some(s) = doc.sections_named("server").next() {
@@ -625,6 +686,15 @@ impl ExperimentConfig {
             r.sanitize_mult = s.parse_or("sanitize_mult", r.sanitize_mult)?;
             r.verify_frac = s.parse_or("verify_frac", r.verify_frac)?;
             r.winsor = s.parse_or("winsor", r.winsor)?;
+            r.quarantine_ttl = s.parse_or("quarantine_ttl", r.quarantine_ttl)?;
+        }
+        // An [async] section configures event-driven rounds.
+        if let Some(s) = doc.sections_named("async").next() {
+            let a = &mut cfg.asynchrony;
+            a.enabled = s.parse_or("enabled", a.enabled)?;
+            a.staleness_bound = s.parse_or("staleness_bound", a.staleness_bound)?;
+            a.buffer_k = s.parse_or("buffer_k", a.buffer_k)?;
+            a.staleness_beta = s.parse_or("staleness_beta", a.staleness_beta)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -643,7 +713,7 @@ impl ExperimentConfig {
             "steps_per_round = {}\naggregation_interval = {}\nmax_rounds = {}\nlr = {}\n\
              eval_interval = {}\neval_batches = {}\npatience = {}\nmin_delta = {}\n\
              dirichlet_alpha = {}\ndropout_prob = {}\nmax_participants = {}\n\
-             oracle_timing = {}\ntiming_ewma_alpha = {}\nseed = {}\n",
+             oracle_timing = {}\ntiming_ewma_alpha = {}\ntiming_ewma_adaptive = {}\nseed = {}\n",
             t.steps_per_round,
             t.aggregation_interval,
             t.max_rounds,
@@ -657,6 +727,7 @@ impl ExperimentConfig {
             t.max_participants,
             t.oracle_timing,
             t.timing_ewma_alpha,
+            t.timing_ewma_adaptive,
             t.seed
         ));
         out.push_str(&format!(
@@ -699,7 +770,7 @@ impl ExperimentConfig {
         out.push_str(&format!(
             "\n[robust]\nattack = {}\nattack_frac = {}\nattack_lambda = {}\nagg = {}\n\
              trim = {}\nclip = {}\nsanitize = {}\nsanitize_mult = {}\nverify_frac = {}\n\
-             winsor = {}\n",
+             winsor = {}\nquarantine_ttl = {}\n",
             r.attack,
             r.attack_frac,
             r.attack_lambda,
@@ -709,7 +780,15 @@ impl ExperimentConfig {
             r.sanitize,
             r.sanitize_mult,
             r.verify_frac,
-            r.winsor
+            r.winsor,
+            r.quarantine_ttl
+        ));
+        // The async section always round-trips too — disabled is the
+        // synchronous barrier, bit-exactly.
+        let a = &self.asynchrony;
+        out.push_str(&format!(
+            "\n[async]\nenabled = {}\nstaleness_bound = {}\nbuffer_k = {}\nstaleness_beta = {}\n",
+            a.enabled, a.staleness_bound, a.buffer_k, a.staleness_beta
         ));
         // A synthesized fleet round-trips through its spec (same seed ⇒
         // bit-identical fleet); only hand-written fleets list clients.
@@ -993,6 +1072,7 @@ mod tests {
             sanitize_mult: 8.0,
             verify_frac: 0.25,
             winsor: 4.0,
+            quarantine_ttl: 3,
         };
         c.validate().unwrap();
         std::fs::write(&path, c.to_kv()).unwrap();
@@ -1047,6 +1127,71 @@ mod tests {
         c.validate().unwrap();
         c.trace.drift_sigma = f64::NAN;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn async_kv_roundtrip_is_symmetric() {
+        let dir = std::env::temp_dir().join("sfl_cfg_async_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("async.exp");
+        // Non-default knobs round-trip...
+        let mut c = ExperimentConfig::paper();
+        c.asynchrony =
+            AsyncConfig { enabled: true, staleness_bound: 120.0, buffer_k: 3, staleness_beta: 1.0 };
+        c.validate().unwrap();
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.asynchrony, c.asynchrony);
+        // ...and so does the disabled default — the [async] section is
+        // always written, like [trace]/[pool]/[robust].
+        let d = ExperimentConfig::paper();
+        std::fs::write(&path, d.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.asynchrony, AsyncConfig::default());
+        assert!(!back.asynchrony.enabled);
+    }
+
+    #[test]
+    fn invalid_async_specs_rejected() {
+        let mut c = ExperimentConfig::paper();
+        c.asynchrony.staleness_bound = 0.0;
+        assert!(c.validate().is_err());
+        c.asynchrony.staleness_bound = f64::NAN;
+        assert!(c.validate().is_err(), "NaN staleness_bound must be rejected");
+        c.asynchrony.staleness_bound = 60.0;
+        c.asynchrony.buffer_k = 0;
+        assert!(c.validate().is_err());
+        c.asynchrony.buffer_k = 4;
+        c.asynchrony.staleness_beta = -0.5;
+        assert!(c.validate().is_err());
+        c.asynchrony.staleness_beta = f64::INFINITY;
+        assert!(c.validate().is_err());
+        c.asynchrony.staleness_beta = 0.5;
+        c.asynchrony.enabled = true;
+        c.validate().unwrap();
+        // Async needs a parallel scheme.
+        c.scheme = SchemeKind::Sl;
+        assert!(c.validate().is_err(), "sl + async must be rejected");
+    }
+
+    #[test]
+    fn quarantine_ttl_and_adaptive_alpha_validated() {
+        let mut c = ExperimentConfig::paper();
+        // TTL without a committee is rejected — probation means
+        // re-verification, which needs witnesses.
+        c.robust.quarantine_ttl = 5;
+        assert!(c.validate().is_err(), "quarantine_ttl without verify_frac must be rejected");
+        c.robust.verify_frac = 0.25;
+        c.validate().unwrap();
+        // Adaptive EWMA round-trips through kv alongside the fixed α.
+        c.train.timing_ewma_adaptive = true;
+        let dir = std::env::temp_dir().join("sfl_cfg_ttl_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ttl.exp");
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.robust.quarantine_ttl, 5);
+        assert!(back.train.timing_ewma_adaptive);
     }
 
     #[test]

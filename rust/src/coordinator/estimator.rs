@@ -26,6 +26,15 @@ use anyhow::{bail, Result};
 /// Default EWMA smoothing factor (weight of the newest observation).
 pub const DEFAULT_EWMA_ALPHA: f64 = 0.25;
 
+/// Adaptive-α floor: even a perfectly stable client keeps tracking.
+const ADAPTIVE_ALPHA_MIN: f64 = 0.05;
+/// Adaptive-α ceiling: even a wildly drifting client keeps smoothing.
+const ADAPTIVE_ALPHA_MAX: f64 = 0.75;
+/// EWMA factor of the residual-variance tracker itself.
+const RESID_VAR_ALPHA: f64 = 0.1;
+/// Relative-residual scale at which the adaptive α reaches 0.5.
+const RESID_SCALE: f64 = 0.25;
+
 /// Per-client exponentially weighted moving averages.
 #[derive(Debug, Clone, Copy, Default)]
 struct Ewma {
@@ -45,17 +54,40 @@ pub struct TimingEstimator {
     /// timing-lying client, a clock glitch) moves the estimate by a
     /// bounded factor.  `INFINITY` (the default) disables the clamp.
     winsor: f64,
+    /// When set, α is derived per client from the EWMA of squared
+    /// relative residuals (`resid_var`): persistently large residuals
+    /// mean the average is lagging a drifting truth, so the factor
+    /// rises toward [`ADAPTIVE_ALPHA_MAX`]; a stable client settles at
+    /// [`ADAPTIVE_ALPHA_MIN`].  Off (the default) leaves the fixed-α
+    /// arithmetic bit-identical.
+    adaptive: bool,
+    resid_var: Vec<f64>,
     stats: Vec<Ewma>,
 }
 
 impl TimingEstimator {
     /// `alpha` is the EWMA weight of the newest observation, in (0, 1].
     pub fn new(n_clients: usize, alpha: f64) -> Self {
-        Self { alpha, winsor: f64::INFINITY, stats: vec![Ewma::default(); n_clients] }
+        Self {
+            alpha,
+            winsor: f64::INFINITY,
+            adaptive: false,
+            resid_var: vec![0.0; n_clients],
+            stats: vec![Ewma::default(); n_clients],
+        }
     }
 
     pub fn alpha(&self) -> f64 {
         self.alpha
+    }
+
+    /// Switch to residual-variance-adaptive per-client α.
+    pub fn set_adaptive(&mut self, on: bool) {
+        self.adaptive = on;
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive
     }
 
     /// Enable the winsorized observation clamp with factor `k > 1`
@@ -88,12 +120,31 @@ impl TimingEstimator {
         let e_new = if e.samples == 0 {
             Ewma { arrival, server, bwd, comm, samples: 1 }
         } else {
-            let a = self.alpha;
+            // Winsorize first (the clamp applies identically on both α
+            // paths), then pick the factor.  With `adaptive` off this
+            // is the historical fixed-α arithmetic, bit-exactly.
+            let wa = self.winsorize(e.arrival, arrival);
+            let ws = self.winsorize(e.server, server);
+            let wb = self.winsorize(e.bwd, bwd);
+            let wc = self.winsorize(e.comm, comm);
+            let a = if self.adaptive {
+                // Mean relative residual over the four channels, on the
+                // winsorized sample — what the EWMA is about to chase.
+                let rel = |cur: f64, s: f64| if cur > 0.0 { ((s - cur) / cur).abs() } else { 0.0 };
+                let rho =
+                    0.25 * (rel(e.arrival, wa) + rel(e.server, ws) + rel(e.bwd, wb) + rel(e.comm, wc));
+                let v = &mut self.resid_var[client];
+                *v += RESID_VAR_ALPHA * (rho * rho - *v);
+                let s = v.sqrt();
+                (s / (s + RESID_SCALE)).clamp(ADAPTIVE_ALPHA_MIN, ADAPTIVE_ALPHA_MAX)
+            } else {
+                self.alpha
+            };
             Ewma {
-                arrival: e.arrival + a * (self.winsorize(e.arrival, arrival) - e.arrival),
-                server: e.server + a * (self.winsorize(e.server, server) - e.server),
-                bwd: e.bwd + a * (self.winsorize(e.bwd, bwd) - e.bwd),
-                comm: e.comm + a * (self.winsorize(e.comm, comm) - e.comm),
+                arrival: e.arrival + a * (wa - e.arrival),
+                server: e.server + a * (ws - e.server),
+                bwd: e.bwd + a * (wb - e.bwd),
+                comm: e.comm + a * (wc - e.comm),
                 samples: e.samples + 1,
             }
         };
@@ -178,6 +229,25 @@ impl TimingEstimator {
             e.comm = values[u * 4 + 3];
             e.samples = samples[u];
         }
+        Ok(())
+    }
+
+    /// Residual-variance tracker state — checkpointed only when the
+    /// adaptive mode is on (the fixed path never touches it).
+    pub fn adaptive_state(&self) -> Vec<f64> {
+        self.resid_var.clone()
+    }
+
+    /// Restore [`TimingEstimator::adaptive_state`] (bit-exact resume).
+    pub fn restore_adaptive_state(&mut self, values: &[f64]) -> Result<()> {
+        if values.len() != self.resid_var.len() {
+            bail!(
+                "adaptive estimator state has {} entries, fleet needs {}",
+                values.len(),
+                self.resid_var.len()
+            );
+        }
+        self.resid_var.copy_from_slice(values);
         Ok(())
     }
 }
@@ -289,6 +359,84 @@ mod tests {
         open.observe(0, &StepTiming::from_job(&outlier));
         let p = open.job_for(&job(0, 0.0, 0.0, 0.0, 0.0));
         assert!(p.client_bwd_time > 100.0 * seed.client_bwd_time);
+    }
+
+    #[test]
+    fn adaptive_alpha_is_off_by_default_and_matches_the_fixed_path() {
+        // Same observation stream through a fixed-α estimator and a
+        // default-constructed one: bit-identical estimates (the adaptive
+        // branch must never engage unless switched on).
+        let mut fixed = TimingEstimator::new(1, 0.25);
+        let mut def = TimingEstimator::new(1, 0.25);
+        assert!(!def.is_adaptive());
+        for i in 0..6 {
+            let j = job(0, 0.5 + 0.1 * i as f64, 0.4, 2.0 + i as f64, 0.1);
+            fixed.observe(0, &StepTiming::from_job(&j));
+            def.observe(0, &StepTiming::from_job(&j));
+        }
+        let (a, b) = (fixed.state().0, def.state().0);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn adaptive_alpha_settles_low_when_stable_and_tracks_drift_faster() {
+        // Stable client: zero residuals keep the variance at zero, so
+        // α pins to the floor and the estimate equals the truth.
+        let mut est = TimingEstimator::new(1, 0.25);
+        est.set_adaptive(true);
+        let truth = job(0, 0.5, 0.4, 2.0, 0.1);
+        for _ in 0..10 {
+            est.observe(0, &StepTiming::from_job(&truth));
+        }
+        assert!((est.job_for(&truth).client_bwd_time - 2.0).abs() < 1e-12);
+
+        // Drifting client: a sluggish fixed α lags a 3× throttle; the
+        // adaptive factor sees persistent residuals and closes the gap
+        // faster over the same number of observations.
+        let slow_alpha = 0.05;
+        let mut fixed = TimingEstimator::new(1, slow_alpha);
+        let mut adap = TimingEstimator::new(1, slow_alpha);
+        adap.set_adaptive(true);
+        let before = job(0, 0.5, 0.4, 2.0, 0.1);
+        let after = job(0, 1.5, 1.2, 6.0, 0.3);
+        fixed.observe(0, &StepTiming::from_job(&before));
+        adap.observe(0, &StepTiming::from_job(&before));
+        for _ in 0..8 {
+            fixed.observe(0, &StepTiming::from_job(&after));
+            adap.observe(0, &StepTiming::from_job(&after));
+        }
+        let fb = job(0, 0.0, 0.0, 0.0, 0.0);
+        let gap_fixed = (fixed.job_for(&fb).client_bwd_time - 6.0).abs();
+        let gap_adap = (adap.job_for(&fb).client_bwd_time - 6.0).abs();
+        assert!(
+            gap_adap < gap_fixed,
+            "adaptive gap {gap_adap} must beat fixed gap {gap_fixed}"
+        );
+    }
+
+    #[test]
+    fn adaptive_state_roundtrips() {
+        let mut est = TimingEstimator::new(2, 0.25);
+        est.set_adaptive(true);
+        est.observe(1, &StepTiming::from_job(&job(1, 0.5, 0.4, 2.0, 0.1)));
+        est.observe(1, &StepTiming::from_job(&job(1, 1.0, 0.8, 4.0, 0.2)));
+        let (values, samples) = est.state();
+        let resid = est.adaptive_state();
+        assert!(resid[1] > 0.0, "drift must have registered residual variance");
+        let mut back = TimingEstimator::new(2, 0.25);
+        back.set_adaptive(true);
+        back.restore_state(&values, &samples).unwrap();
+        back.restore_adaptive_state(&resid).unwrap();
+        // One more identical observation on both: bit-identical fold.
+        let next = job(1, 1.2, 0.9, 5.0, 0.25);
+        est.observe(1, &StepTiming::from_job(&next));
+        back.observe(1, &StepTiming::from_job(&next));
+        for (x, y) in est.state().0.iter().zip(back.state().0.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(back.restore_adaptive_state(&resid[..1]).is_err());
     }
 
     #[test]

@@ -32,6 +32,9 @@ use crate::coordinator::scheduler::{make_scheduler, makespan, JobInfo, Scheduler
 use crate::coordinator::timing::{self, StepTiming};
 use crate::coordinator::{RoundRecord, RunResult};
 use crate::data::{self, BatchIter, DataPool, Dataset};
+use crate::events::{
+    staleness_weight, AsyncStats, BufferedUpdate, Event, EventEngine, UpdateBuffer, VersionVector,
+};
 use crate::faults::{
     differs, sanitize_updates, AggKind, AttackKind, Committee, FaultInjector, RobustStats,
 };
@@ -224,6 +227,9 @@ pub struct RoundReport {
     /// Robust-aggregation counters (present when any `[robust]` option
     /// is engaged) — the last aggregation's flag/reject/trim tallies.
     pub robust: Option<RobustStats>,
+    /// Buffered-async merge counters (present iff `--async`): buffer
+    /// size, staleness, and the absolute engine clock at the merge.
+    pub asynchrony: Option<AsyncStats>,
     /// Present on eval rounds.
     pub eval: Option<EvalPoint>,
 }
@@ -268,6 +274,13 @@ pub trait Scheme {
     /// Robust-aggregation counters — `Some` only when the scheme runs
     /// the Byzantine-tolerant aggregation path.
     fn robust_stats(&self) -> Option<RobustStats> {
+        None
+    }
+    /// The shared parallel-scheme core, when the scheme has one — the
+    /// async event engine drives dispatch-time training and buffered
+    /// merges through it directly.  `None` for SL (whose relay has no
+    /// async semantics; `--async sl` is rejected at config validation).
+    fn parallel_core(&mut self) -> Option<&mut ParallelCore> {
         None
     }
     /// Persist scheme-owned training state as named tensors
@@ -383,6 +396,23 @@ fn train_fingerprint(cfg: &ExperimentConfig) -> Vec<(&'static str, u64)> {
             ("robust_winsor", r.winsor.to_bits()),
         ]);
     }
+    // Each opt-in feature below appends only when engaged, preserving
+    // every pre-existing checkpoint layout exactly — and making an
+    // on/off mismatch fail the resume length check.
+    if r.quarantine_ttl > 0 {
+        fp.push(("robust_quarantine_ttl", r.quarantine_ttl as u64));
+    }
+    if t.timing_ewma_adaptive {
+        fp.push(("timing_ewma_adaptive", 1));
+    }
+    let a = &cfg.asynchrony;
+    if a.enabled {
+        fp.extend_from_slice(&[
+            ("async_staleness_bound", a.staleness_bound.to_bits()),
+            ("async_buffer_k", a.buffer_k as u64),
+            ("async_staleness_beta", a.staleness_beta.to_bits()),
+        ]);
+    }
     fp
 }
 
@@ -463,7 +493,11 @@ struct RobustDefense {
     col: Vec<(f32, f32)>,
 }
 
-struct ParallelCore {
+/// The training state Ours and SFL share.  Public only so the
+/// [`Scheme::parallel_core`] escape hatch can name it from the trait;
+/// not part of the crate's intended API surface.
+#[doc(hidden)]
+pub struct ParallelCore {
     /// Per-client training state + batch iterators, owned by the state
     /// pool: eager (all resident) when `pool.state_cap == 0`, lazily
     /// materialized / spilled at `max(cap, cohort)` residency otherwise.
@@ -478,6 +512,13 @@ struct ParallelCore {
     order_buf: Vec<usize>,
     /// Byzantine-tolerant aggregation (`Some` iff `[robust]` is active).
     robust: Option<RobustDefense>,
+    /// Who the last merge actually kept, with their *final* normalized
+    /// weights (post sanitize/quarantine/decay).  The async engine
+    /// delta-corrects stale survivors with exactly these weights — the
+    /// robust path may reject or reweight, so callers cannot recompute
+    /// them.  Reused buffers, filled by both merge paths.
+    merge_survivors: Vec<usize>,
+    merge_weights: Vec<f32>,
 }
 
 impl ParallelCore {
@@ -494,23 +535,27 @@ impl ParallelCore {
             &env.data,
         )?;
         let r = &env.cfg.robust;
-        let robust = r.is_active().then(|| RobustDefense {
-            agg: r.agg,
-            trim: r.trim,
-            clip: r.clip,
-            sanitize: r.sanitize,
-            sanitize_mult: r.sanitize_mult,
-            committee: Committee::new(
+        let robust = r.is_active().then(|| {
+            let mut committee = Committee::new(
                 env.cuts.len(),
                 r.verify_frac,
                 env.cfg.train.seed ^ 0xC077_EE5E,
-            ),
-            stats: RobustStats::default(),
-            survivors: Vec::with_capacity(env.cuts.len()),
-            witnesses: Vec::with_capacity(env.cuts.len()),
-            norms: Vec::with_capacity(env.cuts.len()),
-            keep: Vec::with_capacity(env.cuts.len()),
-            col: Vec::with_capacity(env.cuts.len()),
+            );
+            committee.set_ttl(r.quarantine_ttl);
+            RobustDefense {
+                agg: r.agg,
+                trim: r.trim,
+                clip: r.clip,
+                sanitize: r.sanitize,
+                sanitize_mult: r.sanitize_mult,
+                committee,
+                stats: RobustStats::default(),
+                survivors: Vec::with_capacity(env.cuts.len()),
+                witnesses: Vec::with_capacity(env.cuts.len()),
+                norms: Vec::with_capacity(env.cuts.len()),
+                keep: Vec::with_capacity(env.cuts.len()),
+                col: Vec::with_capacity(env.cuts.len()),
+            }
         });
         Ok(Self {
             pool,
@@ -520,6 +565,8 @@ impl ParallelCore {
             switches: 0,
             order_buf: Vec::with_capacity(env.cuts.len()),
             robust,
+            merge_survivors: Vec::with_capacity(env.cuts.len()),
+            merge_weights: Vec::with_capacity(env.cuts.len()),
         })
     }
 
@@ -545,6 +592,7 @@ impl ParallelCore {
         let agg_elapsed = if ctx.aggregate {
             self.aggregate(
                 env,
+                ctx.round as u64,
                 ctx.participants,
                 ctx.faults.as_deref_mut(),
                 ctx.traffic,
@@ -640,6 +688,47 @@ impl ParallelCore {
         Ok((loss_sum / loss_n.max(1) as f32, elapsed))
     }
 
+    /// One client's full local round — `steps_per_round` mini-batch
+    /// steps against its current pooled state — for the async engine's
+    /// train-at-dispatch path.  The per-step numerics are the same
+    /// sequence as this client's steps inside
+    /// [`ParallelCore::train_steps`]; returns the client's mean loss.
+    fn train_client(
+        &mut self,
+        env: &SessionEnv<'_>,
+        u: usize,
+        round_lr: f32,
+        traffic: &mut TrafficMeter,
+        scratch: &mut RoundScratch,
+    ) -> Result<f32> {
+        let steps = env.cfg.train.steps_per_round;
+        let k = env.cuts[u];
+        if self.last_active != Some(u) {
+            self.switches += 1;
+            self.last_active = Some(u);
+        }
+        let slot = self.pool.acquire(u, &env.data)?;
+        let mut loss_sum = 0.0f32;
+        for _ in 0..steps {
+            let idx = slot.it.next_batch();
+            data::materialize_batch_into(&env.ds, idx, &mut scratch.tokens, &mut scratch.labels);
+            env.engine.client_fwd_into(k, &scratch.tokens, &slot.cs.lora, &mut scratch.acts)?;
+            traffic.record(&Message::Activations { bytes: env.dims_time.activation_bytes() });
+            let loss = env.engine.server_step_into(
+                k,
+                &scratch.acts,
+                &scratch.labels,
+                &mut slot.ss,
+                &mut scratch.act_grads,
+                round_lr,
+            )?;
+            traffic.record(&Message::ActivationGrads { bytes: env.dims_time.activation_bytes() });
+            env.engine.client_bwd_into(k, &scratch.tokens, &mut slot.cs, &scratch.act_grads, round_lr)?;
+            loss_sum += loss;
+        }
+        Ok(loss_sum / steps.max(1) as f32)
+    }
+
     /// The FedAvg aggregation phase (paper Alg. 1 lines 17–30), fused
     /// and in place: each participant's halves are scattered straight
     /// into the full-depth scratch aggregate, then redistributed
@@ -652,15 +741,49 @@ impl ParallelCore {
     fn aggregate(
         &mut self,
         env: &SessionEnv<'_>,
+        round: u64,
         participants: &[usize],
         faults: Option<&mut FaultInjector>,
         traffic: &mut TrafficMeter,
         scratch: &mut RoundScratch,
     ) -> Result<()> {
-        if self.robust.is_some() {
-            return self.aggregate_robust(env, participants, faults, traffic, scratch);
+        if self.merge_updates(env, round, participants, None, faults, traffic, scratch)? {
+            self.pool.apply_aggregate(&scratch.agg_full, &scratch.head)?;
         }
-        let total: f32 = participants.iter().map(|&u| env.data.weight(u)).sum();
+        Ok(())
+    }
+
+    /// The merge half of aggregation: compute the new global model into
+    /// `scratch` without applying it, so the async engine can
+    /// delta-correct stale survivors first.  `decay[i]` multiplies
+    /// participant `i`'s data weight before normalization (staleness
+    /// decay; `None` for sync merges).  Returns `false` when nothing
+    /// trustworthy survived (scratch is untouched, the model stands);
+    /// on `true`, `merge_survivors` / `merge_weights` hold who was
+    /// merged with which final normalized weight.
+    fn merge_updates(
+        &mut self,
+        env: &SessionEnv<'_>,
+        round: u64,
+        participants: &[usize],
+        decay: Option<&[f32]>,
+        faults: Option<&mut FaultInjector>,
+        traffic: &mut TrafficMeter,
+        scratch: &mut RoundScratch,
+    ) -> Result<bool> {
+        if self.robust.is_some() {
+            return self.merge_robust(env, round, participants, decay, faults, traffic, scratch);
+        }
+        // `None` keeps the exact historical arithmetic; `Some` folds the
+        // decay into each weight before the same normalization.
+        let total: f32 = match decay {
+            Some(d) => {
+                participants.iter().zip(d).map(|(&u, &f)| env.data.weight(u) * f).sum()
+            }
+            None => participants.iter().map(|&u| env.data.weight(u)).sum(),
+        };
+        self.merge_survivors.clear();
+        self.merge_weights.clear();
         {
             let mut contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
                 Vec::with_capacity(participants.len());
@@ -668,11 +791,17 @@ impl ParallelCore {
                 Vec::with_capacity(participants.len());
             let mut head_pairs_b: Vec<(f32, &HostTensor)> =
                 Vec::with_capacity(participants.len());
-            for &u in participants {
+            for (i, &u) in participants.iter().enumerate() {
                 let slot = self.pool.resident(u).ok_or_else(|| {
                     anyhow::anyhow!("participant {u} not resident at aggregation")
                 })?;
-                let w = env.data.weight(u) / total;
+                let raw = match decay {
+                    Some(d) => env.data.weight(u) * d[i],
+                    None => env.data.weight(u),
+                };
+                let w = raw / total;
+                self.merge_survivors.push(u);
+                self.merge_weights.push(w);
                 contribs.push((w, &slot.cs.lora, &slot.ss.lora));
                 head_pairs_w.push((w, &slot.ss.head.w));
                 head_pairs_b.push((w, &slot.ss.head.b));
@@ -693,26 +822,37 @@ impl ParallelCore {
             }
             traffic.record(&Message::LoraDownload { bytes: env.dims_time.lora_bytes(k) });
         }
-        self.pool.apply_aggregate(&scratch.agg_full, &scratch.head)
+        Ok(true)
     }
 
-    /// Byzantine-tolerant aggregation: stage (possibly tampered)
-    /// submissions through the fault injector, spot-verify a seeded
-    /// witness committee against the server's resident replicas
-    /// (quarantining liars), reject non-finite / norm-outlier updates,
-    /// and merge the survivors with the configured robust kernel.
-    /// Traffic is billed exactly like the plain path — rejection
-    /// happens server-side, after the upload.
-    fn aggregate_robust(
+    /// Byzantine-tolerant merge: stage (possibly tampered) submissions
+    /// through the fault injector, spot-verify a seeded witness
+    /// committee against the server's resident replicas (quarantining
+    /// liars), reject non-finite / norm-outlier updates, and merge the
+    /// survivors with the configured robust kernel — into `scratch`,
+    /// *not* applied (see [`ParallelCore::merge_updates`]).  Traffic is
+    /// billed exactly like the plain path — rejection happens
+    /// server-side, after the upload.
+    fn merge_robust(
         &mut self,
         env: &SessionEnv<'_>,
+        round: u64,
         participants: &[usize],
+        decay: Option<&[f32]>,
         mut faults: Option<&mut FaultInjector>,
         traffic: &mut TrafficMeter,
         scratch: &mut RoundScratch,
-    ) -> Result<()> {
+    ) -> Result<bool> {
         let rb = self.robust.as_mut().expect("robust aggregation without defense state");
         let pool = &mut self.pool;
+        let out_survivors = &mut self.merge_survivors;
+        let out_weights = &mut self.merge_weights;
+        out_survivors.clear();
+        out_weights.clear();
+        // Quarantine re-admission (`--quarantine-ttl`): expired
+        // sentences move to probation before this merge's counters are
+        // read.  A no-op (and bit-identical) at ttl = 0.
+        rb.committee.tick(round);
         rb.stats = RobustStats { quarantined: rb.committee.quarantined_count(), ..Default::default() };
         // 1. Quarantined clients are dropped before anything else — a
         // flagged client never contributes again.
@@ -740,6 +880,15 @@ impl ParallelCore {
             rb.witnesses.clear();
             let sample = rb.committee.select(&rb.survivors);
             rb.witnesses.extend_from_slice(sample);
+            // Probationers (re-admitted after their TTL) are always
+            // re-checked on their first merge back — appended *after*
+            // the seeded draw so the witness RNG stream is untouched
+            // and ttl = 0 runs stay bit-identical.
+            for &u in &rb.survivors {
+                if rb.committee.is_probation(u) && !rb.witnesses.contains(&u) {
+                    rb.witnesses.push(u);
+                }
+            }
             for &u in &rb.witnesses {
                 let slot = pool.resident(u).ok_or_else(|| {
                     anyhow::anyhow!("witness {u} not resident at verification")
@@ -751,8 +900,12 @@ impl ParallelCore {
                     None => false,
                 };
                 if lied {
-                    rb.committee.flag(u);
+                    rb.committee.flag(u, round);
                     rb.stats.flagged += 1;
+                } else if rb.committee.is_probation(u) {
+                    // A probationer that passes its re-check is fully
+                    // rehabilitated (back to normal witness odds).
+                    rb.committee.clear_probation(u);
                 }
             }
             let committee = &rb.committee;
@@ -772,7 +925,19 @@ impl ParallelCore {
                 Some(pair) => pair,
                 None => (&slot.cs.lora, &slot.ss.lora),
             };
-            subs.push((env.data.weight(u), c, s));
+            // Staleness decay (async merges) folds into the raw weight,
+            // indexed by the survivor's position in `participants`.
+            let raw = match decay {
+                Some(d) => {
+                    let i = participants
+                        .iter()
+                        .position(|&p| p == u)
+                        .expect("survivor not among the merge participants");
+                    env.data.weight(u) * d[i]
+                }
+                None => env.data.weight(u),
+            };
+            subs.push((raw, c, s));
         }
         // 5. Pre-merge sanitizer: reject non-finite or norm-outlier
         // deltas before they reach the kernel.
@@ -816,7 +981,7 @@ impl ParallelCore {
         // (the cohort keeps training from the unchanged baseline).
         let total: f32 = subs.iter().map(|&(w, _, _)| w).sum();
         if subs.is_empty() || !total.is_finite() || total <= 0.0 {
-            return Ok(());
+            return Ok(false);
         }
         for sub in subs.iter_mut() {
             sub.0 /= total;
@@ -852,10 +1017,12 @@ impl ParallelCore {
         }
         ops::weighted_sum_into(&head_pairs_w, &mut scratch.head.w)?;
         ops::weighted_sum_into(&head_pairs_b, &mut scratch.head.b)?;
-        drop(subs);
-        drop(head_pairs_w);
-        drop(head_pairs_b);
-        pool.apply_aggregate(&scratch.agg_full, &scratch.head)
+        // Expose who survived, with the weights the kernel actually
+        // used (exact for mean; first-order for trimmed/clipped, whose
+        // per-coordinate edits aren't expressible as one scalar).
+        out_survivors.extend_from_slice(&rb.survivors);
+        out_weights.extend(subs.iter().map(|&(w, _, _)| w));
+        Ok(true)
     }
 
     /// Data-weighted global model (eqs. 5–8 evaluated without replacing
@@ -900,6 +1067,15 @@ impl ParallelCore {
                 "scheme.flagged".into(),
                 encode_u64s("flagged", &[rb.committee.flagged_total]),
             ));
+            // Re-admission bookkeeping only exists when a TTL is set
+            // (and is then also fingerprinted), so legacy robust
+            // checkpoints keep their exact key set.
+            if rb.committee.ttl() > 0 {
+                out.push((
+                    "scheme.probation".into(),
+                    encode_u64s("probation", &rb.committee.ttl_state()),
+                ));
+            }
         }
         Ok(())
     }
@@ -918,6 +1094,10 @@ impl ParallelCore {
             rb.committee.set_rng_state(one_u64(store, "scheme.robust_rng")?);
             rb.committee.restore_quarantine(&decode_u64s(store.get("scheme.quarantine")?)?)?;
             rb.committee.flagged_total = one_u64(store, "scheme.flagged")?;
+            if rb.committee.ttl() > 0 {
+                rb.committee
+                    .restore_ttl_state(&decode_u64s(store.get("scheme.probation")?)?)?;
+            }
         }
         Ok(())
     }
@@ -974,6 +1154,10 @@ impl Scheme for OursScheme {
 
     fn robust_stats(&self) -> Option<RobustStats> {
         self.core.robust_stats()
+    }
+
+    fn parallel_core(&mut self) -> Option<&mut ParallelCore> {
+        Some(&mut self.core)
     }
 
     fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
@@ -1035,6 +1219,10 @@ impl Scheme for SflScheme {
 
     fn robust_stats(&self) -> Option<RobustStats> {
         self.core.robust_stats()
+    }
+
+    fn parallel_core(&mut self) -> Option<&mut ParallelCore> {
+        Some(&mut self.core)
     }
 
     fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
@@ -1230,6 +1418,54 @@ struct Book {
     wall: std::time::Instant,
     wall_prior: f64,
     scratch: RoundScratch,
+    /// The discrete-event engine every scheme's clock now runs through:
+    /// sync rounds schedule their cohort barrier as one aggregation
+    /// trigger (bit-identical to the old `+=` accrual); async mode
+    /// runs the full arrival/completion/trigger protocol on it.
+    engine: EventEngine,
+    /// Buffered-async bookkeeping (`Some` iff `--async`).
+    asyncx: Option<AsyncBook>,
+}
+
+/// Async-mode state: version vector, update buffer, in-flight markers,
+/// and the baseline snapshots stale updates are delta-corrected against.
+struct AsyncBook {
+    versions: VersionVector,
+    buffer: UpdateBuffer,
+    /// Client dispatched but not yet completed — its pooled state holds
+    /// trained-but-undelivered tensors, protected from baseline
+    /// redistribution at merges.
+    inflight: Vec<bool>,
+    /// Mean loss of each client's latest dispatch (train-at-dispatch:
+    /// the numerics run at dispatch, the metadata arrives at completion).
+    pending_loss: Vec<f32>,
+    /// Current staleness-timer epoch — a popped trigger from an earlier
+    /// epoch is stale and ignored.
+    trigger_epoch: u64,
+    /// Baseline snapshots keyed by model version, GC'd to versions some
+    /// in-flight dispatch still references.  Empty until the first
+    /// `step_round_async` seeds version 0 and the arrival wave.
+    baselines: Vec<(u64, AdapterSet, HeadState)>,
+    /// Reused per-merge buffers.
+    parts: Vec<usize>,
+    decay: Vec<f32>,
+    protect: Vec<bool>,
+}
+
+impl AsyncBook {
+    fn new(n: usize) -> Self {
+        Self {
+            versions: VersionVector::new(n),
+            buffer: UpdateBuffer::new(),
+            inflight: vec![false; n],
+            pending_loss: vec![0.0; n],
+            trigger_epoch: 0,
+            baselines: Vec::new(),
+            parts: Vec::with_capacity(n),
+            decay: Vec::with_capacity(n),
+            protect: vec![false; n],
+        }
+    }
 }
 
 /// The resumable round-stepped experiment driver.  Owns the shared
@@ -1324,6 +1560,7 @@ impl<'e> Session<'e> {
         });
         let mut estimator = TimingEstimator::new(env.cuts.len(), t.timing_ewma_alpha);
         estimator.set_winsor(r.winsor);
+        estimator.set_adaptive(t.timing_ewma_adaptive);
         let book = Book {
             round: 0,
             sim_time: 0.0,
@@ -1347,6 +1584,8 @@ impl<'e> Session<'e> {
             wall: std::time::Instant::now(),
             wall_prior: 0.0,
             scratch,
+            engine: EventEngine::new(),
+            asyncx: cfg.asynchrony.enabled.then(|| AsyncBook::new(env.cuts.len())),
         };
         Ok(Self { env, scheme, book, observers: Vec::new() })
     }
@@ -1394,7 +1633,34 @@ impl<'e> Session<'e> {
     /// Execute one round: dropout sampling, per-round job construction,
     /// scheme dispatch, sim-clock accrual, periodic evaluation and
     /// convergence tracking — then stream a [`RoundReport`].
+    ///
+    /// Under `--async` a "round" is one buffered merge driven by the
+    /// discrete-event engine; otherwise the classic synchronous round,
+    /// whose cohort barrier now also runs through the engine (as one
+    /// aggregation-trigger event — bit-identical to the legacy accrual,
+    /// asserted against [`Session::step_round_reference`] by tests).
     pub fn step_round(&mut self) -> Result<RoundReport> {
+        if self.book.asyncx.is_some() {
+            return self.step_round_async();
+        }
+        self.step_round_sync(true)
+    }
+
+    /// The pre-engine synchronous round, preserved verbatim as the
+    /// bit-identity anchor for the sync-via-engine property tests.
+    /// Not part of the intended API surface.
+    #[doc(hidden)]
+    pub fn step_round_reference(&mut self) -> Result<RoundReport> {
+        self.step_round_sync(false)
+    }
+
+    /// The synchronous round body.  `via_engine` selects how the
+    /// cohort's train-time barrier accrues onto the sim clock: through
+    /// a scheduled+popped engine event (the production path) or the
+    /// historical `+=` (the reference path).  An f64 stored into an
+    /// event and read back is the same f64, so both are bit-identical —
+    /// which is exactly what the property tests assert.
+    fn step_round_sync(&mut self, via_engine: bool) -> Result<RoundReport> {
         let round = self.book.round + 1;
         let t = &self.env.cfg.train;
         let round_lr = t.lr_schedule.at(t.lr, round);
@@ -1534,7 +1800,14 @@ impl<'e> Session<'e> {
         // from its in-memory state.)
         self.book.round = round;
 
-        self.book.sim_time += outcome.train_elapsed;
+        if via_engine {
+            let barrier = self.book.sim_time + outcome.train_elapsed;
+            self.book.engine.schedule(barrier, Event::AggregationTrigger { epoch: round as u64 });
+            let ev = self.book.engine.pop().expect("barrier event was just scheduled");
+            self.book.sim_time = ev.time;
+        } else {
+            self.book.sim_time += outcome.train_elapsed;
+        }
         self.book.rounds.push(RoundRecord {
             round,
             sim_time: self.book.sim_time,
@@ -1567,6 +1840,315 @@ impl<'e> Session<'e> {
             env: env_snapshot,
             pool: self.scheme.pool_stats(),
             robust: self.scheme.robust_stats(),
+            asynchrony: None,
+            eval,
+        };
+        for obs in &mut self.observers {
+            obs.on_round(&report);
+        }
+        Ok(report)
+    }
+
+    /// One buffered-async "round": run the discrete-event engine until
+    /// a merge fires, then report it.  Clients arrive, train against
+    /// the *current* global model at dispatch (train-at-dispatch), and
+    /// deliver their update at a completion event `steps × solo-step`
+    /// later; the server merges when `buffer_k` updates are buffered or
+    /// the staleness bound `τ` elapses after the first one.  Stale
+    /// survivors are decay-weighted (`1/(1+s)^β`) and delta-corrected
+    /// against their dispatch baseline, so a merge of only fresh
+    /// updates reproduces the synchronous arithmetic exactly.
+    ///
+    /// Round bookkeeping is keyed on the merge index: the LR schedule,
+    /// eval cadence, and convergence detector see one "round" per
+    /// merge.  `aggregation_interval` is ignored — every async round
+    /// ends in its merge by construction.
+    fn step_round_async(&mut self) -> Result<RoundReport> {
+        let round = self.book.round + 1;
+        let env = &self.env;
+        let t = &env.cfg.train;
+        let acfg = env.cfg.asynchrony;
+        let steps = t.steps_per_round;
+        let round_lr = t.lr_schedule.at(t.lr, round);
+        let n = env.cuts.len();
+        let sim_before = self.book.sim_time;
+
+        let core = self
+            .scheme
+            .parallel_core()
+            .ok_or_else(|| anyhow::anyhow!("--async requires a parallel scheme (ours/sfl)"))?;
+        let b = &mut self.book;
+        let ab = b.asyncx.as_mut().expect("step_round_async without async bookkeeping");
+
+        // First call: snapshot the version-0 baseline and seed the
+        // initial arrival wave (id order at t = 0; engine sequence
+        // numbers keep the order deterministic).  Resume never re-runs
+        // this — checkpoints happen at merge boundaries, where the
+        // restored `baselines` is non-empty.
+        if ab.baselines.is_empty() {
+            ab.baselines.push((0, core.pool.baseline().clone(), core.pool.baseline_head().clone()));
+            for u in 0..n {
+                b.engine.schedule(0.0, Event::ClientArrival { client: u });
+            }
+        }
+        // Merge cohorts are capped by the buffer; participants stay
+        // resident from (re-)acquisition below through the merge.
+        core.pool.begin_round(round as u64, acfg.buffer_k)?;
+
+        // ---- drive the event loop until a merge fires ----
+        let (stats, participants, mean_loss, merge_time, agg_elapsed) = loop {
+            let ev = match b.engine.pop() {
+                Some(ev) => ev,
+                None => bail!("async event queue drained — no client has pending work"),
+            };
+            let now = ev.time;
+            let merge_due = match ev.event {
+                Event::ClientArrival { client: u } | Event::AvailabilityFlip { client: u } => {
+                    if b.timeline.is_active() {
+                        b.timeline.advance(now);
+                        if !b.timeline.is_available(u) {
+                            // Unavailable at dispatch: back off one
+                            // nominal local round and re-check.
+                            let backoff = steps as f64 * timing::solo_step(&env.nominal_jobs[u]);
+                            b.engine.schedule(now + backoff, Event::AvailabilityFlip { client: u });
+                            continue;
+                        }
+                    }
+                    if t.dropout_prob > 0.0 && b.dropout_rng.uniform() < t.dropout_prob {
+                        // Dropout at dispatch: the client re-arrives one
+                        // nominal round later instead of skipping a
+                        // whole sync round.
+                        let backoff = steps as f64 * timing::solo_step(&env.nominal_jobs[u]);
+                        b.engine.schedule(now + backoff, Event::ClientArrival { client: u });
+                        continue;
+                    }
+                    // Dispatch: the client's numerics run now, against
+                    // the current global model; only the metadata waits
+                    // for the completion event.
+                    ab.versions.mark_dispatch(u);
+                    ab.inflight[u] = true;
+                    ab.pending_loss[u] =
+                        core.train_client(env, u, round_lr, &mut b.traffic, &mut b.scratch)?;
+                    let job = if b.timeline.is_active() {
+                        timing::scaled_job(
+                            &env.oracle_jobs[u],
+                            b.timeline.mfu_mult(u),
+                            b.timeline.link_mult(u),
+                        )
+                    } else {
+                        env.oracle_jobs[u]
+                    };
+                    // Online timing feedback happens per dispatch (the
+                    // client reports what it measured), through the
+                    // same noise + TimingLie channel as sync rounds.
+                    if !t.oracle_timing {
+                        let clean = StepTiming::from_job(&job);
+                        let mut obs = if b.obs_noise.is_active() {
+                            clean.noisy(&mut b.obs_noise)
+                        } else {
+                            clean
+                        };
+                        if let Some(inj) = &b.faults {
+                            if inj.kind() == AttackKind::TimingLie && inj.is_attacker(u) {
+                                obs = obs.scaled(inj.lie_factor());
+                            }
+                        }
+                        b.estimator.observe(u, &obs);
+                    }
+                    let duration = steps as f64 * timing::solo_step(&job);
+                    b.engine.schedule(now + duration, Event::ClientCompletion { client: u });
+                    false
+                }
+                Event::ClientCompletion { client: u } => {
+                    ab.inflight[u] = false;
+                    ab.buffer.push(BufferedUpdate {
+                        client: u,
+                        version: ab.versions.client_version(u),
+                        loss: ab.pending_loss[u],
+                        completed_at: now,
+                    });
+                    let due = ab.buffer.len() >= acfg.buffer_k;
+                    if !due && ab.buffer.len() == 1 {
+                        // First update into an empty buffer arms the
+                        // staleness timer for this buffer epoch.
+                        ab.trigger_epoch += 1;
+                        b.engine.schedule(
+                            now + acfg.staleness_bound,
+                            Event::AggregationTrigger { epoch: ab.trigger_epoch },
+                        );
+                    }
+                    due
+                }
+                Event::AggregationTrigger { epoch } => {
+                    // A trigger from an earlier epoch is stale — its
+                    // buffer already merged (or was re-armed).
+                    epoch == ab.trigger_epoch && !ab.buffer.is_empty()
+                }
+            };
+            if !merge_due {
+                continue;
+            }
+
+            // ---- buffered merge at `now` ----
+            let cur = ab.versions.model_version();
+            ab.parts.clear();
+            ab.decay.clear();
+            let mut max_staleness = 0u64;
+            for e in ab.buffer.entries() {
+                ab.parts.push(e.client);
+                let s = cur - e.version;
+                max_staleness = max_staleness.max(s);
+                ab.decay.push(staleness_weight(s, acfg.staleness_beta) as f32);
+            }
+            let buffered = ab.parts.len();
+            // Later dispatches may have spilled a buffered client's
+            // pooled state — re-acquire (spill/reload is bit-exact) so
+            // everything merged is resident.
+            for &u in &ab.parts {
+                core.pool.acquire(u, &env.data)?;
+            }
+            let merged_ok = core.merge_updates(
+                env,
+                round as u64,
+                &ab.parts,
+                Some(&ab.decay),
+                b.faults.as_mut(),
+                &mut b.traffic,
+                &mut b.scratch,
+            )?;
+            let mut merged = 0usize;
+            if merged_ok {
+                merged = core.merge_survivors.len();
+                // Delta-correct stale survivors: a client dispatched at
+                // version v trained from baseline b_v, so its absolute
+                // update is re-centered onto the current baseline b_V:
+                // agg += ŵ·(b_V − b_v).  Fresh survivors (v == V) are
+                // untouched — an all-fresh merge is bit-identical to
+                // the synchronous arithmetic.
+                for (i, &u) in core.merge_survivors.iter().enumerate() {
+                    let v = ab.versions.client_version(u);
+                    if v == cur {
+                        continue;
+                    }
+                    let w = core.merge_weights[i];
+                    let (_, old_base, old_head) = ab
+                        .baselines
+                        .iter()
+                        .find(|(ver, _, _)| *ver == v)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("no baseline snapshot for model version {v}")
+                        })?;
+                    let new_base = core.pool.baseline();
+                    let new_head = core.pool.baseline_head();
+                    for ti in 0..4 {
+                        ops::axpy_into(
+                            w,
+                            new_base.tensors[ti].as_f32()?,
+                            b.scratch.agg_full.tensors[ti].as_f32_mut()?,
+                        )?;
+                        ops::axpy_into(
+                            -w,
+                            old_base.tensors[ti].as_f32()?,
+                            b.scratch.agg_full.tensors[ti].as_f32_mut()?,
+                        )?;
+                    }
+                    ops::axpy_into(w, new_head.w.as_f32()?, b.scratch.head.w.as_f32_mut()?)?;
+                    ops::axpy_into(-w, old_head.w.as_f32()?, b.scratch.head.w.as_f32_mut()?)?;
+                    ops::axpy_into(w, new_head.b.as_f32()?, b.scratch.head.b.as_f32_mut()?)?;
+                    ops::axpy_into(-w, old_head.b.as_f32()?, b.scratch.head.b.as_f32_mut()?)?;
+                }
+                // Apply everywhere except in-flight clients, whose
+                // trained-but-undelivered state must survive until
+                // their own completion merges or discards it.
+                ab.protect.copy_from_slice(&ab.inflight);
+                core.pool.apply_aggregate_protected(
+                    &b.scratch.agg_full,
+                    &b.scratch.head,
+                    &ab.protect,
+                )?;
+                ab.versions.advance_model();
+                ab.baselines.push((
+                    ab.versions.model_version(),
+                    core.pool.baseline().clone(),
+                    core.pool.baseline_head().clone(),
+                ));
+                // GC snapshots no in-flight dispatch references.
+                let mut min_ref = ab.versions.model_version();
+                for (u, &f) in ab.inflight.iter().enumerate() {
+                    if f {
+                        min_ref = min_ref.min(ab.versions.client_version(u));
+                    }
+                }
+                ab.baselines.retain(|(v, _, _)| *v >= min_ref);
+            }
+            // Aggregation-phase accounting over the merged cohort, then
+            // the cohort re-arrives for its next dispatch.
+            if b.timeline.is_active() {
+                b.timeline.advance(now);
+            }
+            let agg_elapsed = timing::aggregation_time_for(
+                &env.dims_time,
+                &env.cfg.clients,
+                &env.cuts,
+                &ab.parts,
+                &b.timeline,
+            );
+            for &u in &ab.parts {
+                b.engine.schedule(now + agg_elapsed, Event::ClientArrival { client: u });
+            }
+            let mut loss_sum = 0.0f32;
+            for e in ab.buffer.entries() {
+                loss_sum += e.loss;
+            }
+            let mean_loss = loss_sum / buffered.max(1) as f32;
+            let participants = ab.parts.clone();
+            ab.buffer.clear();
+            // Invalidate any armed staleness timer for the old buffer.
+            ab.trigger_epoch += 1;
+            let stats =
+                AsyncStats { buffered, merged, max_staleness, wall_clock: now };
+            break (stats, participants, mean_loss, now, agg_elapsed);
+        };
+
+        // ---- shared round bookkeeping (mirrors the sync path) ----
+        self.book.round = round;
+        // Merge r+1 can fire before merge r's aggregation phase ends
+        // (training continued during it), so the *reported* clock is
+        // clamped monotone.
+        self.book.sim_time = self.book.sim_time.max(merge_time + agg_elapsed);
+        self.book.rounds.push(RoundRecord {
+            round,
+            sim_time: self.book.sim_time,
+            mean_loss,
+        });
+
+        let env_snapshot =
+            self.book.timeline.is_active().then(|| self.book.timeline.snapshot());
+        let mut eval = None;
+        if round % self.env.cfg.train.eval_interval == 0 {
+            let (lora, head) = self.scheme.eval_model(&self.env, &mut self.book.scratch)?;
+            let (acc, f1, _eval_loss) = self.env.evaluate(lora, head)?;
+            self.book.acc.push(round, self.book.sim_time, acc);
+            self.book.f1.push(round, self.book.sim_time, f1);
+            self.book.final_acc = acc;
+            self.book.final_f1 = f1;
+            let converged = self.book.detector.update(round, self.book.sim_time, acc);
+            self.book.converged = converged;
+            eval = Some(EvalPoint { acc, f1, converged });
+        }
+
+        let report = RoundReport {
+            scheme: self.env.cfg.scheme,
+            scheduler: self.scheme.scheduler(),
+            round,
+            sim_time: self.book.sim_time,
+            step_time: (self.book.sim_time - sim_before) / steps as f64,
+            mean_loss,
+            participants,
+            env: env_snapshot,
+            pool: self.scheme.pool_stats(),
+            robust: self.scheme.robust_stats(),
+            asynchrony: Some(stats),
             eval,
         };
         for obs in &mut self.observers {
@@ -1663,6 +2245,14 @@ impl<'e> Session<'e> {
         let (est_values, est_samples) = b.estimator.state();
         named.push(("book.est.values".into(), encode_f64s("est.values", &est_values)));
         named.push(("book.est.samples".into(), encode_u64s("est.samples", &est_samples)));
+        // Adaptive-α residual-variance EWMAs ride only when the mode is
+        // on (and fingerprinted) — fixed-α checkpoints are unchanged.
+        if b.estimator.is_adaptive() {
+            named.push((
+                "book.est.resid".into(),
+                encode_f64s("est.resid", &b.estimator.adaptive_state()),
+            ));
+        }
         // Environment timeline: per-generator mutable state (RNG bits,
         // current values, last sample times) + the measurement-noise
         // RNG + the replay-file content hash (resume verification).
@@ -1722,6 +2312,45 @@ impl<'e> Session<'e> {
             None => Vec::new(),
         };
         named.push(("book.detector.conv".into(), encode_u64s("conv", &conv_words)));
+        // Async engine state rides only under `--async` (fingerprinted):
+        // the full event queue, version vector, buffer metadata,
+        // in-flight markers, pending losses, and every live baseline
+        // snapshot — enough to resume mid-buffer bit-identically.
+        if let Some(ab) = &b.asyncx {
+            named.push(("book.events.engine".into(), encode_u64s("events.engine", &b.engine.state())));
+            named.push((
+                "book.events.versions".into(),
+                encode_u64s("events.versions", &ab.versions.state()),
+            ));
+            named.push((
+                "book.events.buffer".into(),
+                encode_u64s("events.buffer", &ab.buffer.state()),
+            ));
+            let inflight: Vec<u64> = ab.inflight.iter().map(|&f| f as u64).collect();
+            named.push(("book.events.inflight".into(), encode_u64s("events.inflight", &inflight)));
+            named.push((
+                "book.events.pending_loss".into(),
+                HostTensor::f32(
+                    "book.events.pending_loss",
+                    vec![ab.pending_loss.len()],
+                    ab.pending_loss.clone(),
+                ),
+            ));
+            named.push((
+                "book.events.trigger".into(),
+                encode_u64s("events.trigger", &[ab.trigger_epoch]),
+            ));
+            let base_versions: Vec<u64> = ab.baselines.iter().map(|(v, _, _)| *v).collect();
+            named.push((
+                "book.events.base.versions".into(),
+                encode_u64s("events.base.versions", &base_versions),
+            ));
+            for (v, base, head) in &ab.baselines {
+                save_adapters(&mut named, &format!("book.events.base{v}.lora"), base);
+                named.push((format!("book.events.base{v}.head.w"), head.w.clone()));
+                named.push((format!("book.events.base{v}.head.b"), head.b.clone()));
+            }
+        }
 
         self.scheme.save_state(&mut named)?;
         let borrowed: Vec<(&str, &HostTensor)> =
@@ -1777,6 +2406,9 @@ impl<'e> Session<'e> {
         let est_values = decode_f64s(store.get("book.est.values")?)?;
         let est_samples = decode_u64s(store.get("book.est.samples")?)?;
         b.estimator.restore_state(&est_values, &est_samples)?;
+        if b.estimator.is_adaptive() {
+            b.estimator.restore_adaptive_state(&decode_f64s(store.get("book.est.resid")?)?)?;
+        }
         // Environment timeline: `Session::new` above re-synthesized the
         // generators from the spec (erroring if a replay trace file is
         // missing); restore their mutable state and verify the replay
@@ -1853,6 +2485,47 @@ impl<'e> Session<'e> {
         };
         b.detector.restore_state(best, stale, conv);
         b.converged = conv.is_some();
+
+        // Async engine state (the fingerprint guarantees these keys are
+        // present exactly when `--async` is configured).
+        if let Some(ab) = &mut b.asyncx {
+            b.engine.restore_state(&decode_u64s(store.get("book.events.engine")?)?)?;
+            ab.versions.restore_state(&decode_u64s(store.get("book.events.versions")?)?)?;
+            ab.buffer.restore_state(&decode_u64s(store.get("book.events.buffer")?)?)?;
+            let inflight = decode_u64s(store.get("book.events.inflight")?)?;
+            if inflight.len() != ab.inflight.len() {
+                bail!(
+                    "checkpoint in-flight mask has {} clients, config has {}",
+                    inflight.len(),
+                    ab.inflight.len()
+                );
+            }
+            for (f, &w) in ab.inflight.iter_mut().zip(inflight.iter()) {
+                *f = w != 0;
+            }
+            let pl = store.get("book.events.pending_loss")?.as_f32()?;
+            if pl.len() != ab.pending_loss.len() {
+                bail!(
+                    "checkpoint pending losses cover {} clients, config has {}",
+                    pl.len(),
+                    ab.pending_loss.len()
+                );
+            }
+            ab.pending_loss.copy_from_slice(pl);
+            ab.trigger_epoch = one_u64(&store, "book.events.trigger")?;
+            let base_versions = decode_u64s(store.get("book.events.base.versions")?)?;
+            let head0 = engine.initial_head()?;
+            let layers = session.env.dims_exec.layers;
+            ab.baselines.clear();
+            for &v in &base_versions {
+                let mut base = AdapterSet::zeros(&session.env.dims_exec, layers);
+                load_adapters(&store, &format!("book.events.base{v}.lora"), &mut base)?;
+                let mut head = HeadState { w: head0.w.clone(), b: head0.b.clone() };
+                load_tensor_into(&store, &format!("book.events.base{v}.head.w"), &mut head.w)?;
+                load_tensor_into(&store, &format!("book.events.base{v}.head.b"), &mut head.b)?;
+                ab.baselines.push((v, base, head));
+            }
+        }
 
         session.scheme.load_state(&session.env, &store)?;
         Ok(session)

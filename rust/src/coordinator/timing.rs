@@ -101,6 +101,14 @@ pub fn scaled_job(base: &JobInfo, mfu_mult: f64, link_mult: f64) -> JobInfo {
     }
 }
 
+/// One uncontended training step of a single client's job: client
+/// forward + uplink (`arrival`), server step, gradient downlink, and
+/// client backward — the queue-free end-to-end latency the async
+/// engine uses for a solo dispatch (no cohort, so no waiting).
+pub fn solo_step(j: &JobInfo) -> f64 {
+    j.arrival + j.server_time + j.bwd_comm_time + j.client_bwd_time
+}
+
 /// Build the per-client job descriptions for one step of the proposed
 /// scheme (all clients start at relative time 0 — client forwards run in
 /// parallel).
@@ -362,13 +370,28 @@ pub fn aggregation_time_for(
 mod tests {
     use super::*;
     use crate::config::ExperimentConfig;
-    use crate::coordinator::scheduler::{FifoScheduler, ProposedScheduler};
+    use crate::coordinator::scheduler::{makespan, FifoScheduler, ProposedScheduler};
 
     fn setup() -> (ModelDims, Vec<ClientConfig>, Vec<usize>, ServerProfile) {
         let cfg = ExperimentConfig::paper();
         let dims = cfg.timing_dims();
         let cuts = cfg.resolve_cuts();
         (dims, cfg.clients, cuts, cfg.server)
+    }
+
+    #[test]
+    fn solo_step_is_the_queue_free_latency() {
+        let (dims, clients, cuts, server) = setup();
+        let jobs = build_jobs(&dims, &clients, &cuts, &server);
+        for j in &jobs {
+            let s = solo_step(j);
+            assert!(s > 0.0);
+            // No queueing: a one-client cohort's makespan is its solo step.
+            assert!((s - makespan(std::slice::from_ref(j), &[0])).abs() < 1e-12);
+        }
+        // An identity-scaled job keeps the exact same solo step.
+        let scaled = scaled_job(&jobs[0], 1.0, 1.0);
+        assert_eq!(solo_step(&scaled).to_bits(), solo_step(&jobs[0]).to_bits());
     }
 
     #[test]

@@ -1,0 +1,121 @@
+//! Discrete-event simulation engine for asynchronous federated rounds.
+//!
+//! Every scheme used to be round-synchronous: the sim clock advanced by
+//! the makespan of a barrier'd cohort, so one straggler stalled the
+//! whole fleet.  This module provides the event-driven substrate that
+//! removes the barrier:
+//!
+//! - [`queue::EventQueue`] — a binary-heap queue keyed on the sim clock
+//!   with deterministic FIFO tie-breaking by monotone sequence number
+//!   (same time ⇒ first-scheduled fires first, bit-reproducibly).
+//! - [`engine::EventEngine`] — the clock-owning wrapper: schedules
+//!   events, pops them in time order, and serializes its entire state
+//!   (queue contents, sequence counter, clock) to flat `u64` words for
+//!   bit-exact checkpoint/resume.
+//! - [`staleness`] — the bounded-staleness aggregation primitives:
+//!   per-client version vectors, the buffered-update set, and the
+//!   `1/(1+s)^β` staleness-decay weight folded into the existing
+//!   FedAvg / robust merge kernels.
+//! - [`testbed`] — a closed-form async-vs-sync world (quadratic
+//!   objectives, real trace timelines, the real engine) used by
+//!   `benches/async_churn.rs` and the artifact-free acceptance tests:
+//!   buffered-async must beat the synchronous barrier on
+//!   time-to-target-loss under markov churn.
+//!
+//! The `Session` drives **both** modes through the engine: sync mode
+//! expresses its barrier as a single [`Event::AggregationTrigger`]
+//! fired at the cohort makespan (bit-identical to the historical
+//! `sim_time += train_elapsed` accrual), while `--async` mode runs
+//! client arrivals, completions, availability churn, and buffered
+//! merges as genuine interleaved events.
+
+pub mod engine;
+pub mod queue;
+pub mod staleness;
+pub mod testbed;
+
+pub use engine::EventEngine;
+pub use queue::{EventQueue, Scheduled};
+pub use staleness::{staleness_weight, BufferedUpdate, UpdateBuffer, VersionVector};
+
+use anyhow::{bail, Result};
+
+/// One simulation event.  `usize` payloads are global client ids;
+/// the aggregation trigger carries an arming epoch so triggers armed
+/// for an already-merged buffer are discarded as stale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// A client becomes ready to be dispatched (initial arrival, or
+    /// re-dispatch after its update was merged).
+    ClientArrival { client: usize },
+    /// A dispatched client finishes its local round; its update enters
+    /// the aggregation buffer.
+    ClientCompletion { client: usize },
+    /// Availability re-check for a client that was unavailable (or
+    /// dropped out) at its last dispatch attempt.
+    AvailabilityFlip { client: usize },
+    /// The bounded-staleness timer: merge whatever is buffered.  Fired
+    /// `τ` after the first update entered an empty buffer; `epoch`
+    /// invalidates triggers that outlived their buffer.
+    AggregationTrigger { epoch: u64 },
+}
+
+impl Event {
+    /// Flat `(kind, payload)` encoding for checkpoint serialization.
+    pub fn encode(&self) -> (u64, u64) {
+        match *self {
+            Event::ClientArrival { client } => (0, client as u64),
+            Event::ClientCompletion { client } => (1, client as u64),
+            Event::AvailabilityFlip { client } => (2, client as u64),
+            Event::AggregationTrigger { epoch } => (3, epoch),
+        }
+    }
+
+    /// Inverse of [`Event::encode`].
+    pub fn decode(kind: u64, payload: u64) -> Result<Self> {
+        Ok(match kind {
+            0 => Event::ClientArrival { client: payload as usize },
+            1 => Event::ClientCompletion { client: payload as usize },
+            2 => Event::AvailabilityFlip { client: payload as usize },
+            3 => Event::AggregationTrigger { epoch: payload },
+            _ => bail!("unknown event kind tag {kind}"),
+        })
+    }
+}
+
+/// Per-merge asynchrony counters, streamed in round reports when
+/// `--async` is active (the `"async"` jsonl block).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsyncStats {
+    /// Updates sitting in the buffer when the merge trigger fired.
+    pub buffered: usize,
+    /// Updates actually merged (equal to `buffered`; server-side
+    /// robust rejections are reported in the `robust` block).
+    pub merged: usize,
+    /// Largest per-update staleness (model versions elapsed since the
+    /// update's dispatch) in this merge.
+    pub max_staleness: u64,
+    /// Absolute engine clock when the merge fired — before the
+    /// aggregation-time accrual that `sim_time` includes.
+    pub wall_clock: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_encoding_roundtrips() {
+        let events = [
+            Event::ClientArrival { client: 7 },
+            Event::ClientCompletion { client: 0 },
+            Event::AvailabilityFlip { client: 123 },
+            Event::AggregationTrigger { epoch: u64::MAX },
+        ];
+        for e in events {
+            let (k, p) = e.encode();
+            assert_eq!(Event::decode(k, p).unwrap(), e);
+        }
+        assert!(Event::decode(4, 0).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! The deterministic event queue: a binary min-heap keyed on the sim
+//! clock with FIFO tie-breaking by sequence number.
+//!
+//! Determinism contract: two events at the *bit-identical* same time
+//! pop in the order they were scheduled (`seq` is monotone), and time
+//! ordering uses `f64::total_cmp`, so the pop order is a pure function
+//! of the push sequence — never of heap internals or platform float
+//! quirks.  This is what makes event-driven trajectories replayable
+//! and checkpoints bit-exact.
+
+use super::Event;
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// One scheduled event: fire time, schedule order, payload.
+#[derive(Debug, Clone, Copy)]
+pub struct Scheduled {
+    /// Absolute sim time the event fires at.
+    pub time: f64,
+    /// Monotone schedule counter — the FIFO tie-break at equal times.
+    pub seq: u64,
+    pub event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Earliest time first; at bit-equal times, lowest seq first.
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap of [`Scheduled`] events (see module docs for the
+/// determinism contract).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Scheduled>>,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn push(&mut self, ev: Scheduled) {
+        self.heap.push(Reverse(ev));
+    }
+
+    /// Remove and return the earliest event (FIFO among time ties).
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        self.heap.pop().map(|Reverse(ev)| ev)
+    }
+
+    /// Fire time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(ev)| ev.time)
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    /// All pending events in pop order, without disturbing the queue —
+    /// the canonical serialization order (heap layout is an
+    /// implementation detail; pop order is the contract).
+    pub fn sorted_entries(&self) -> Vec<Scheduled> {
+        let mut entries: Vec<Scheduled> =
+            self.heap.iter().map(|Reverse(ev)| *ev).collect();
+        entries.sort_unstable();
+        entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(time: f64, seq: u64, client: usize) -> Scheduled {
+        Scheduled { time, seq, event: Event::ClientArrival { client } }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(3.0, 0, 0));
+        q.push(ev(1.0, 1, 1));
+        q.push(ev(2.0, 2, 2));
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_times_break_ties_fifo() {
+        let mut q = EventQueue::new();
+        // Push in scrambled seq order at the bit-identical same time.
+        q.push(ev(5.0, 2, 2));
+        q.push(ev(5.0, 0, 0));
+        q.push(ev(5.0, 1, 1));
+        let clients: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.event {
+                Event::ClientArrival { client } => client,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(clients, vec![0, 1, 2], "FIFO by seq at equal times");
+    }
+
+    #[test]
+    fn sorted_entries_matches_pop_order_and_preserves_queue() {
+        let mut q = EventQueue::new();
+        for (t, s) in [(2.0, 0u64), (1.0, 1), (1.0, 2), (4.0, 3)] {
+            q.push(ev(t, s, s as usize));
+        }
+        let snap: Vec<(u64, u64)> =
+            q.sorted_entries().iter().map(|e| (e.time.to_bits(), e.seq)).collect();
+        assert_eq!(q.len(), 4, "snapshot must not consume the queue");
+        let popped: Vec<(u64, u64)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.time.to_bits(), e.seq)).collect();
+        assert_eq!(snap, popped);
+    }
+
+    #[test]
+    fn peek_time_tracks_the_minimum() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(ev(7.0, 0, 0));
+        q.push(ev(3.0, 1, 1));
+        assert_eq!(q.peek_time(), Some(3.0));
+        q.pop();
+        assert_eq!(q.peek_time(), Some(7.0));
+    }
+}

@@ -1,0 +1,231 @@
+//! Bounded-staleness aggregation primitives: the per-client version
+//! vector, the buffered-update set, and the staleness-decay weight.
+//!
+//! The buffered-async scheme merges whenever `K` updates are buffered
+//! or the oldest buffered update has waited `τ` sim-seconds.  Each
+//! update is weighted by its data weight **times** the staleness decay
+//! `1/(1+s)^β`, where `s` is the number of model versions the global
+//! model advanced between the update's dispatch and its merge — the
+//! polynomial staleness function from the FedAsync line of work.  The
+//! version vector additionally records *which* baseline each update
+//! was computed from, so the merge can re-center stale absolute
+//! updates against their dispatch baseline (see the session's
+//! staleness correction).
+
+use anyhow::{bail, Result};
+
+/// The staleness-decay factor `1/(1+s)^β`.  `s = 0` or `β = 0` ⇒ 1
+/// exactly (a fresh update, or decay disabled, carries full weight).
+pub fn staleness_weight(staleness: u64, beta: f64) -> f64 {
+    if staleness == 0 || beta == 0.0 {
+        return 1.0;
+    }
+    1.0 / (1.0 + staleness as f64).powf(beta)
+}
+
+/// Per-client model-version bookkeeping: `model` counts completed
+/// merges; `clients[u]` is the model version client `u` was last
+/// dispatched from.
+#[derive(Debug, Clone)]
+pub struct VersionVector {
+    model: u64,
+    clients: Vec<u64>,
+}
+
+impl VersionVector {
+    pub fn new(n: usize) -> Self {
+        Self { model: 0, clients: vec![0; n] }
+    }
+
+    pub fn model_version(&self) -> u64 {
+        self.model
+    }
+
+    pub fn client_version(&self, u: usize) -> u64 {
+        self.clients[u]
+    }
+
+    /// Stamp client `u` with the current model version at dispatch.
+    pub fn mark_dispatch(&mut self, u: usize) {
+        self.clients[u] = self.model;
+    }
+
+    /// Versions the model advanced since `u`'s dispatch.
+    pub fn staleness(&self, u: usize) -> u64 {
+        self.model - self.clients[u]
+    }
+
+    /// One merge completed: the global model moved on.
+    pub fn advance_model(&mut self) {
+        self.model += 1;
+    }
+
+    /// Flat serialization: `[model, clients...]`.
+    pub fn state(&self) -> Vec<u64> {
+        let mut words = Vec::with_capacity(1 + self.clients.len());
+        words.push(self.model);
+        words.extend_from_slice(&self.clients);
+        words
+    }
+
+    pub fn restore_state(&mut self, words: &[u64]) -> Result<()> {
+        if words.len() != 1 + self.clients.len() {
+            bail!(
+                "version vector state has {} words, fleet needs {}",
+                words.len(),
+                1 + self.clients.len()
+            );
+        }
+        self.model = words[0];
+        self.clients.copy_from_slice(&words[1..]);
+        Ok(())
+    }
+}
+
+/// One completed-but-unmerged client update waiting in the buffer.
+/// The trained tensors themselves stay in the state pool (protected
+/// from baseline redistribution until merged); the buffer carries the
+/// metadata the merge needs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BufferedUpdate {
+    pub client: usize,
+    /// Model version the client was dispatched from.
+    pub version: u64,
+    /// Mean training loss of the client's local round.
+    pub loss: f32,
+    /// Sim time the completion event fired.
+    pub completed_at: f64,
+}
+
+/// The server-side aggregation buffer (FIFO by completion).
+#[derive(Debug, Default)]
+pub struct UpdateBuffer {
+    entries: Vec<BufferedUpdate>,
+}
+
+/// Words per serialized buffer entry.
+const ENTRY_WORDS: usize = 4;
+
+impl UpdateBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn push(&mut self, u: BufferedUpdate) {
+        self.entries.push(u);
+    }
+
+    pub fn entries(&self) -> &[BufferedUpdate] {
+        &self.entries
+    }
+
+    /// Completion time of the oldest buffered update (the τ clock).
+    pub fn oldest_completed_at(&self) -> Option<f64> {
+        self.entries.first().map(|e| e.completed_at)
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Flat serialization: `[n, (client, version, loss_bits, time_bits)*]`.
+    pub fn state(&self) -> Vec<u64> {
+        let mut words = Vec::with_capacity(1 + self.entries.len() * ENTRY_WORDS);
+        words.push(self.entries.len() as u64);
+        for e in &self.entries {
+            words.push(e.client as u64);
+            words.push(e.version);
+            words.push(e.loss.to_bits() as u64);
+            words.push(e.completed_at.to_bits());
+        }
+        words
+    }
+
+    pub fn restore_state(&mut self, words: &[u64]) -> Result<()> {
+        if words.is_empty() {
+            bail!("update buffer state is empty");
+        }
+        let n = words[0] as usize;
+        if words.len() != 1 + n * ENTRY_WORDS {
+            bail!("update buffer state declares {n} entries but has {} words", words.len());
+        }
+        self.entries.clear();
+        for chunk in words[1..].chunks_exact(ENTRY_WORDS) {
+            self.entries.push(BufferedUpdate {
+                client: chunk[0] as usize,
+                version: chunk[1],
+                loss: f32::from_bits(chunk[2] as u32),
+                completed_at: f64::from_bits(chunk[3]),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_is_one_when_fresh_or_disabled() {
+        assert_eq!(staleness_weight(0, 0.5), 1.0);
+        assert_eq!(staleness_weight(3, 0.0), 1.0);
+        assert_eq!(staleness_weight(0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn decay_is_monotone_in_staleness_and_beta() {
+        let w1 = staleness_weight(1, 0.5);
+        let w2 = staleness_weight(2, 0.5);
+        let w4 = staleness_weight(4, 0.5);
+        assert!(w1 > w2 && w2 > w4);
+        assert!((w1 - 1.0 / 2f64.sqrt()).abs() < 1e-12);
+        // Larger β punishes the same staleness harder.
+        assert!(staleness_weight(3, 1.0) < staleness_weight(3, 0.5));
+        assert!(staleness_weight(3, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn version_vector_tracks_staleness() {
+        let mut v = VersionVector::new(3);
+        v.mark_dispatch(0);
+        v.advance_model();
+        v.mark_dispatch(1);
+        v.advance_model();
+        assert_eq!(v.model_version(), 2);
+        assert_eq!(v.staleness(0), 2);
+        assert_eq!(v.staleness(1), 1);
+        assert_eq!(v.client_version(0), 0);
+
+        let words = v.state();
+        let mut back = VersionVector::new(3);
+        back.restore_state(&words).unwrap();
+        assert_eq!(back.model_version(), 2);
+        assert_eq!(back.staleness(0), 2);
+        assert!(back.restore_state(&words[..2]).is_err());
+    }
+
+    #[test]
+    fn buffer_state_roundtrips_bit_exactly() {
+        let mut b = UpdateBuffer::new();
+        b.push(BufferedUpdate { client: 5, version: 2, loss: 0.125, completed_at: 33.5 });
+        b.push(BufferedUpdate { client: 1, version: 3, loss: f32::MIN_POSITIVE, completed_at: 40.0 });
+        assert_eq!(b.oldest_completed_at(), Some(33.5));
+        let words = b.state();
+        let mut back = UpdateBuffer::new();
+        back.restore_state(&words).unwrap();
+        assert_eq!(back.entries(), b.entries());
+        assert!(back.restore_state(&words[..3]).is_err());
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.oldest_completed_at(), None);
+    }
+}

@@ -357,13 +357,25 @@ impl FaultInjector {
 
 /// Seeded spot-verification committee: each round a shuffled-index
 /// witness sample of ⌈frac·m⌉ cohort members is re-checked server-side;
-/// mismatching clients are flagged and quarantined for the rest of the
-/// run.  RNG state is checkpointable so witness draws survive resume.
+/// mismatching clients are flagged and quarantined.  With `ttl = 0`
+/// (the default) quarantine is permanent — the historical behavior,
+/// bit-exactly.  With `ttl = N`, a flagged client re-enters after `N`
+/// rounds *on probation*: its next participating round it is forced
+/// into the witness sample (always re-verified), and only a clean check
+/// clears the probation; a second mismatch re-quarantines it with a
+/// fresh TTL.  RNG state is checkpointable so witness draws survive
+/// resume, and the probation force-add consumes no RNG draws.
 #[derive(Debug)]
 pub struct Committee {
     frac: f64,
     rng: Rng,
     quarantined: Vec<bool>,
+    /// Re-admission TTL in rounds (0 = permanent quarantine).
+    ttl: usize,
+    /// Round each client was last flagged at (valid while quarantined).
+    flagged_round: Vec<u64>,
+    /// Re-admitted on probation: next update is always verified.
+    probation: Vec<bool>,
     pub flagged_total: u64,
     witness_buf: Vec<usize>,
 }
@@ -374,6 +386,9 @@ impl Committee {
             frac,
             rng: Rng::new(seed),
             quarantined: vec![false; n],
+            ttl: 0,
+            flagged_round: vec![0; n],
+            probation: vec![false; n],
             flagged_total: 0,
             witness_buf: Vec::new(),
         }
@@ -383,9 +398,36 @@ impl Committee {
         self.frac > 0.0
     }
 
+    /// Enable re-admission after `ttl` quarantined rounds (0 keeps
+    /// quarantine permanent).
+    pub fn set_ttl(&mut self, ttl: usize) {
+        self.ttl = ttl;
+    }
+
+    pub fn ttl(&self) -> usize {
+        self.ttl
+    }
+
+    /// Advance the quarantine clocks at the start of round `round`:
+    /// clients whose TTL expired re-enter on probation.  A no-op when
+    /// `ttl = 0` (permanent quarantine).
+    pub fn tick(&mut self, round: u64) {
+        if self.ttl == 0 {
+            return;
+        }
+        for u in 0..self.quarantined.len() {
+            if self.quarantined[u] && round >= self.flagged_round[u] + self.ttl as u64 {
+                self.quarantined[u] = false;
+                self.probation[u] = true;
+            }
+        }
+    }
+
     /// Draw this round's witnesses from `pool` (client ids): partial
     /// Fisher–Yates over the pool, first ⌈frac·m⌉ slots kept, sorted
     /// for stable iteration.  Exactly ⌈frac·m⌉ RNG draws per call.
+    /// Pool members on probation are then force-added (no RNG cost) —
+    /// a re-admitted client's first update is always verified.
     pub fn select(&mut self, pool: &[usize]) -> &[usize] {
         self.witness_buf.clear();
         if !self.is_active() || pool.is_empty() {
@@ -399,13 +441,35 @@ impl Committee {
             self.witness_buf.swap(i, j);
         }
         self.witness_buf.truncate(w);
+        for &u in pool {
+            if self.probation[u] && !self.witness_buf.contains(&u) {
+                self.witness_buf.push(u);
+            }
+        }
         self.witness_buf.sort_unstable();
         &self.witness_buf
     }
 
-    pub fn flag(&mut self, u: usize) {
+    /// Flag client `u` at round `round`: re-quarantine (probation, if
+    /// any, is revoked) and restart its TTL clock.
+    pub fn flag(&mut self, u: usize, round: u64) {
         self.flagged_total += 1;
         self.quarantined[u] = true;
+        self.probation[u] = false;
+        self.flagged_round[u] = round;
+    }
+
+    /// A probationer passed its forced re-verification.
+    pub fn clear_probation(&mut self, u: usize) {
+        self.probation[u] = false;
+    }
+
+    pub fn is_probation(&self, u: usize) -> bool {
+        self.probation[u]
+    }
+
+    pub fn probation_count(&self) -> u64 {
+        self.probation.iter().filter(|&&p| p).count() as u64
     }
 
     pub fn is_quarantined(&self, u: usize) -> bool {
@@ -440,6 +504,33 @@ impl Committee {
         for (u, q) in self.quarantined.iter_mut().enumerate() {
             *q = (words[u / 64] >> (u % 64)) & 1 == 1;
         }
+        Ok(())
+    }
+
+    /// TTL bookkeeping for checkpoints — probation flags bit-packed
+    /// like the quarantine mask, followed by the per-client flag
+    /// rounds.  Written only when `ttl > 0` (the permanent-quarantine
+    /// checkpoint layout is unchanged).
+    pub fn ttl_state(&self) -> Vec<u64> {
+        let mut words: Vec<u64> = self
+            .probation
+            .chunks(64)
+            .map(|c| c.iter().enumerate().fold(0u64, |a, (i, &b)| a | ((b as u64) << i)))
+            .collect();
+        words.extend_from_slice(&self.flagged_round);
+        words
+    }
+
+    pub fn restore_ttl_state(&mut self, words: &[u64]) -> Result<()> {
+        let n = self.probation.len();
+        let mask_words = (n + 63) / 64;
+        if words.len() != mask_words + n {
+            bail!("ttl state has {} words, expected {}", words.len(), mask_words + n);
+        }
+        for (u, p) in self.probation.iter_mut().enumerate() {
+            *p = (words[u / 64] >> (u % 64)) & 1 == 1;
+        }
+        self.flagged_round.copy_from_slice(&words[mask_words..]);
         Ok(())
     }
 }
@@ -582,8 +673,8 @@ mod tests {
     #[test]
     fn committee_quarantine_is_sticky_and_checkpointable() {
         let mut c = Committee::new(70, 0.5, 3);
-        c.flag(4);
-        c.flag(69);
+        c.flag(4, 1);
+        c.flag(69, 1);
         assert_eq!(c.flagged_total, 2);
         assert_eq!(c.quarantined_count(), 2);
         assert!(c.is_quarantined(4) && c.is_quarantined(69) && !c.is_quarantined(5));
@@ -595,6 +686,78 @@ mod tests {
             assert_eq!(c.is_quarantined(u), d.is_quarantined(u));
         }
         assert!(d.restore_quarantine(&[0]).is_err(), "wrong word count rejected");
+    }
+
+    #[test]
+    fn quarantine_ttl_readmits_on_probation() {
+        let mut c = Committee::new(8, 0.25, 3);
+        c.set_ttl(2);
+        c.flag(5, 10);
+        assert!(c.is_quarantined(5));
+        c.tick(11);
+        assert!(c.is_quarantined(5), "TTL not yet elapsed");
+        c.tick(12);
+        assert!(!c.is_quarantined(5), "TTL elapsed: re-admitted");
+        assert!(c.is_probation(5));
+        assert_eq!(c.probation_count(), 1);
+        // A probationer in the pool is force-added to the witnesses.
+        let pool: Vec<usize> = (0..8).collect();
+        let w = c.select(&pool).to_vec();
+        assert!(w.contains(&5), "probationer must be verified");
+        // Clean check clears probation; a repeat offense re-quarantines
+        // with a fresh TTL clock.
+        c.clear_probation(5);
+        assert!(!c.is_probation(5));
+        c.flag(5, 20);
+        assert!(c.is_quarantined(5));
+        c.tick(21);
+        assert!(c.is_quarantined(5), "fresh TTL clock after re-flag");
+        c.tick(22);
+        assert!(!c.is_quarantined(5));
+    }
+
+    #[test]
+    fn ttl_zero_is_permanent_and_costs_no_rng() {
+        // tick() is a no-op and select() draws identically with and
+        // without the TTL machinery compiled in — ttl = 0 must stay
+        // bit-identical to the historical permanent quarantine.
+        let pool: Vec<usize> = vec![1, 2, 3, 4, 5, 6];
+        let mut a = Committee::new(10, 0.5, 9);
+        let mut b = Committee::new(10, 0.5, 9);
+        b.set_ttl(0);
+        a.flag(2, 0);
+        b.flag(2, 0);
+        for round in 0..5 {
+            b.tick(round);
+            assert_eq!(a.select(&pool).to_vec(), b.select(&pool).to_vec());
+            assert!(b.is_quarantined(2), "ttl 0 never re-admits");
+        }
+    }
+
+    #[test]
+    fn ttl_state_roundtrips() {
+        let mut c = Committee::new(70, 0.25, 3);
+        c.set_ttl(4);
+        c.flag(4, 7);
+        c.flag(69, 9);
+        c.tick(11); // client 4 re-admitted on probation; 69 still in
+        assert!(c.is_probation(4) && c.is_quarantined(69));
+        let ttl_words = c.ttl_state();
+        let q_words = c.quarantine_words();
+        let mut d = Committee::new(70, 0.25, 3);
+        d.set_ttl(4);
+        d.restore_quarantine(&q_words).unwrap();
+        d.restore_ttl_state(&ttl_words).unwrap();
+        for u in 0..70 {
+            assert_eq!(c.is_quarantined(u), d.is_quarantined(u));
+            assert_eq!(c.is_probation(u), d.is_probation(u));
+        }
+        // The restored TTL clock keeps ticking from the same origin.
+        c.tick(13);
+        d.tick(13);
+        assert_eq!(c.is_quarantined(69), d.is_quarantined(69));
+        assert!(!d.is_quarantined(69), "round 13 >= 9 + 4");
+        assert!(d.restore_ttl_state(&ttl_words[..3]).is_err());
     }
 
     #[test]

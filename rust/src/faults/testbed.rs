@@ -122,7 +122,7 @@ pub fn run(sc: &Scenario) -> Result<Outcome> {
     let mut rejected_total = 0u64;
     let mut trim_total = 0u64;
 
-    for _ in 0..sc.rounds {
+    for round in 0..sc.rounds {
         // Closed-form honest step: every client contracts toward T.
         for u in 0..sc.n {
             for i in 0..4 {
@@ -155,7 +155,7 @@ pub fn run(sc: &Scenario) -> Result<Outcome> {
                     None => false,
                 };
                 if bad {
-                    committee.flag(u);
+                    committee.flag(u, round as u64);
                 }
             }
             survivors.retain(|&u| !committee.is_quarantined(u));

@@ -22,6 +22,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod devices;
+pub mod events;
 pub mod faults;
 pub mod fleet;
 pub mod lora;

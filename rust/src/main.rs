@@ -31,7 +31,15 @@
 //! inject seeded faults; --agg mean|trimmed|clip (+ --trim K / --clip C),
 //! --sanitize [--sanitize-mult M], and --verify-frac P select the
 //! defenses; --winsor K clamps estimator observations; --drift-sigma S
-//! composes a fleet-wide drift walk onto an active trace.
+//! composes a fleet-wide drift walk onto an active trace;
+//! --quarantine-ttl N re-admits quarantined clients on probation after
+//! N rounds; --timing-ewma-alpha <A|adaptive> sets the estimator
+//! smoothing factor or switches it to the residual-driven adaptive
+//! schedule.
+//! Asynchronous rounds (EXPERIMENTS.md §Async): --async drives rounds
+//! through the discrete-event engine with buffered bounded-staleness
+//! aggregation; --staleness-bound S (seconds), --buffer-k K, and
+//! --staleness-beta B tune the merge trigger and staleness decay.
 
 use anyhow::{bail, Result};
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
@@ -50,8 +58,9 @@ const USAGE: &str = "usage: sfl [--config mini|small] [--artifacts DIR] [--out D
 [--trace none|random_walk|diurnal|markov|replay] [--trace-seed N] [--trace-replay FILE] \
 [--obs-noise-sigma S] [--drift-sigma S] [--attack none|corrupt|scale|stale|timing-lie] \
 [--attack-frac P] [--attack-lambda L] [--agg mean|trimmed|clip] [--trim K] [--clip C] \
-[--sanitize] [--sanitize-mult M] [--verify-frac P] [--winsor K] \
-<run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
+[--sanitize] [--sanitize-mult M] [--verify-frac P] [--winsor K] [--quarantine-ttl N] \
+[--timing-ewma-alpha A|adaptive] [--async] [--staleness-bound S] [--buffer-k K] \
+[--staleness-beta B] <run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
 [--scheduler proposed|fifo|wf|random] [--max-rounds N] [--quiet] [--oracle-timing] \
 [--jsonl FILE]";
 
@@ -155,6 +164,35 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(k) = args.get_parse::<f64>("winsor")? {
         cfg.robust.winsor = k;
+    }
+    if let Some(n) = args.get_parse::<usize>("quarantine-ttl")? {
+        cfg.robust.quarantine_ttl = n;
+    }
+    // Estimator smoothing: a fixed EWMA factor, or "adaptive" for the
+    // residual-driven per-client schedule.
+    if let Some(a) = args.get("timing-ewma-alpha") {
+        if a == "adaptive" {
+            cfg.train.timing_ewma_adaptive = true;
+        } else {
+            cfg.train.timing_ewma_alpha = a
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--timing-ewma-alpha: {e} (float or `adaptive`)"))?;
+        }
+    }
+    // Event-driven asynchronous rounds (buffered bounded-staleness).
+    if args.has("async") {
+        cfg.asynchrony.enabled = true;
+    } else if ["staleness-bound", "buffer-k", "staleness-beta"].iter().any(|f| args.has(f)) {
+        bail!("--staleness-bound/--buffer-k/--staleness-beta require --async");
+    }
+    if let Some(s) = args.get_parse::<f64>("staleness-bound")? {
+        cfg.asynchrony.staleness_bound = s;
+    }
+    if let Some(k) = args.get_parse::<usize>("buffer-k")? {
+        cfg.asynchrony.buffer_k = k;
+    }
+    if let Some(b) = args.get_parse::<f64>("staleness-beta")? {
+        cfg.asynchrony.staleness_beta = b;
     }
     cfg.validate()?;
     Ok(cfg)

@@ -300,6 +300,12 @@ impl StatePool {
         &self.baseline
     }
 
+    /// The baseline's classifier head (paired with [`StatePool::baseline`];
+    /// the async engine snapshots both per model version).
+    pub fn baseline_head(&self) -> &HeadState {
+        &self.baseline_head
+    }
+
     /// Borrow a client's slot if (and only if) it is resident.
     pub fn resident(&self, u: usize) -> Option<&ClientSlot> {
         match self.entries.get(u) {
@@ -574,6 +580,64 @@ impl StatePool {
         }
         let mut freed = 0u64;
         for e in self.entries.iter_mut() {
+            if let Entry::Spilled(sp) = e {
+                freed += (sp.lora_c.as_ref().map_or(0, Vec::len)
+                    + sp.lora_s.as_ref().map_or(0, Vec::len)
+                    + sp.head.as_ref().map_or(0, Vec::len)) as u64
+                    * 4;
+                sp.lora_c = None;
+                sp.lora_s = None;
+                sp.head = None;
+            }
+        }
+        self.spill_bytes -= freed;
+        for (d, s) in self.baseline.tensors.iter_mut().zip(agg.tensors.iter()) {
+            ops::copy_from(d, s)?;
+        }
+        ops::copy_from(&mut self.baseline_head.w, &head.w)?;
+        ops::copy_from(&mut self.baseline_head.b, &head.b)?;
+        Ok(())
+    }
+
+    /// [`StatePool::apply_aggregate`] with per-client protection for the
+    /// async engine: a client with `protect[u]` set keeps its current
+    /// trained state — its resident buffers are not overwritten and its
+    /// spill payload is not dropped — while the shared baseline still
+    /// becomes the aggregate.  In-flight clients trained at dispatch
+    /// against an older baseline; their undelivered updates must survive
+    /// until their own completion merges them.  An all-false mask is
+    /// behaviorally identical to [`StatePool::apply_aggregate`].
+    pub fn apply_aggregate_protected(
+        &mut self,
+        agg: &AdapterSet,
+        head: &HeadState,
+        protect: &[bool],
+    ) -> Result<()> {
+        if agg.layers != self.dims.layers {
+            bail!("aggregate depth {} != model depth {}", agg.layers, self.dims.layers);
+        }
+        if protect.len() != self.entries.len() {
+            bail!(
+                "protection mask covers {} clients, pool has {}",
+                protect.len(),
+                self.entries.len()
+            );
+        }
+        for slot in self.slots.iter_mut() {
+            if protect[slot.client] {
+                continue;
+            }
+            let k = self.cuts[slot.client];
+            agg.split_into(k, &mut slot.cs.lora, &mut slot.ss.lora)?;
+            ops::copy_from(&mut slot.ss.head.w, &head.w)?;
+            ops::copy_from(&mut slot.ss.head.b, &head.b)?;
+            slot.dirty = false;
+        }
+        let mut freed = 0u64;
+        for (u, e) in self.entries.iter_mut().enumerate() {
+            if protect[u] {
+                continue;
+            }
             if let Entry::Spilled(sp) = e {
                 freed += (sp.lora_c.as_ref().map_or(0, Vec::len)
                     + sp.lora_s.as_ref().map_or(0, Vec::len)
@@ -950,6 +1014,60 @@ mod tests {
         let (fc, _) = agg.split_at(kf).unwrap();
         assert_eq!(fresh.cs.lora.max_abs_diff(&fc).unwrap(), 0.0);
         assert_eq!(fresh.cs.step, 0);
+    }
+
+    #[test]
+    fn protected_aggregation_preserves_inflight_clients() {
+        let d = dims();
+        let (mut pool, data) = setup(8, 2);
+        pool.begin_round(1, 2).unwrap();
+        scribble(pool.acquire(2, &data).unwrap(), 1.5);
+        scribble(pool.acquire(3, &data).unwrap(), 2.0);
+        let want3 = clone_slot(pool.resident(3).unwrap());
+        pool.begin_round(2, 2).unwrap();
+        scribble(pool.acquire(4, &data).unwrap(), 2.5);
+        scribble(pool.acquire(5, &data).unwrap(), 3.0);
+        let want5 = clone_slot(pool.resident(5).unwrap());
+        assert_eq!(pool.stats().spilled, 2, "clients 2 and 3 must be spilled");
+
+        let agg = AdapterSet::init(&d, d.layers, 99);
+        let head = HeadState {
+            w: HostTensor::f32(
+                "head.w",
+                vec![d.hidden, d.classes],
+                vec![0.5; d.hidden * d.classes],
+            ),
+            b: HostTensor::zeros("head.b", vec![d.classes]),
+        };
+        let mut protect = vec![false; 8];
+        protect[3] = true; // protected while spilled
+        protect[5] = true; // protected while resident
+        pool.apply_aggregate_protected(&agg, &head, &protect).unwrap();
+
+        // The baseline still becomes the aggregate for everyone else.
+        assert_eq!(pool.baseline().max_abs_diff(&agg).unwrap(), 0.0);
+        assert_eq!(pool.baseline_head().w.as_f32().unwrap(), head.w.as_f32().unwrap());
+        // Protected resident keeps its trained state untouched.
+        let s5 = pool.resident(5).unwrap();
+        assert_states_equal((&s5.cs, &s5.ss), (&want5.0, &want5.1));
+        // Unprotected resident got the aggregate (Adam survives).
+        let s4 = pool.resident(4).unwrap();
+        let (ac, as_) = agg.split_at(s4.cs.lora.layers).unwrap();
+        assert_eq!(s4.cs.lora.max_abs_diff(&ac).unwrap(), 0.0);
+        assert_eq!(s4.ss.lora.max_abs_diff(&as_).unwrap(), 0.0);
+        assert_eq!(s4.ss.head.w.as_f32().unwrap(), head.w.as_f32().unwrap());
+        assert_eq!(s4.cs.adam.m[0].as_f32().unwrap()[0], 2.5 * 2.0);
+        // Protected spill payload survived: re-acquire is bit-exact.
+        pool.begin_round(3, 2).unwrap();
+        let s3 = pool.acquire(3, &data).unwrap();
+        assert_states_equal((&s3.cs, &s3.ss), (&want3.0, &want3.1));
+        // Unprotected spill dropped its segments and rebaselines.
+        let s2 = pool.acquire(2, &data).unwrap();
+        let (c2, s2s) = agg.split_at(s2.cs.lora.layers).unwrap();
+        assert_eq!(s2.cs.lora.max_abs_diff(&c2).unwrap(), 0.0);
+        assert_eq!(s2.ss.lora.max_abs_diff(&s2s).unwrap(), 0.0);
+        assert_eq!(s2.ss.head.w.as_f32().unwrap(), head.w.as_f32().unwrap());
+        assert_eq!(s2.cs.adam.m[0].as_f32().unwrap()[0], 1.5 * 2.0);
     }
 
     #[test]

@@ -85,11 +85,20 @@ impl<W: Write> RoundObserver for JsonLinesObserver<W> {
             ),
             None => String::new(),
         };
+        // Buffered-async merge counters (present under `--async`).
+        let asynchrony = match &r.asynchrony {
+            Some(a) => format!(
+                ",\"async\":{{\"buffered\":{},\"merged\":{},\"max_staleness\":{},\
+                 \"wall_clock\":{:.6}}}",
+                a.buffered, a.merged, a.max_staleness, a.wall_clock
+            ),
+            None => String::new(),
+        };
         let wrote = writeln!(
             self.out,
             "{{\"event\":\"round\",\"scheme\":\"{}\",\"scheduler\":\"{}\",\"round\":{},\
              \"sim_time\":{:.6},\"step_time\":{:.6},\"mean_loss\":{:.6},\
-             \"participants\":{}{env}{pool}{robust}{eval}}}",
+             \"participants\":{}{env}{pool}{robust}{asynchrony}{eval}}}",
             r.scheme,
             r.scheduler,
             r.round,
@@ -286,6 +295,7 @@ mod tests {
                 env: None,
                 pool: None,
                 robust: None,
+                asynchrony: None,
                 eval: Some(EvalPoint { acc: 0.5, f1: 0.4, converged: false }),
             });
             let r = fake_run();
@@ -329,6 +339,7 @@ mod tests {
                     spill_bytes: 1024,
                 }),
                 robust: None,
+                asynchrony: None,
                 eval: None,
             });
         }
@@ -356,6 +367,7 @@ mod tests {
                 env: Some(EnvSnapshot { mfu_mean: 0.9125, link_mean: 1.05, available: 2 }),
                 pool: None,
                 robust: None,
+                asynchrony: None,
                 eval: None,
             });
         }
@@ -388,11 +400,44 @@ mod tests {
                     rejected: 3,
                     trim_count: 4,
                 }),
+                asynchrony: None,
                 eval: None,
             });
         }
         let s = String::from_utf8(buf).unwrap();
         assert!(s.contains("\"robust\":{\"flagged\":1,\"quarantined\":2"), "{s}");
         assert!(s.contains("\"rejected\":3,\"trim_count\":4}"), "{s}");
+    }
+
+    #[test]
+    fn json_lines_observer_emits_async_counters_when_async() {
+        use crate::coordinator::RoundReport;
+        use crate::events::AsyncStats;
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut obs = JsonLinesObserver::new(&mut buf);
+            obs.on_round(&RoundReport {
+                scheme: SchemeKind::Ours,
+                scheduler: SchedulerLabel::Scheduled(SchedulerKind::Proposed),
+                round: 5,
+                sim_time: 41.5,
+                step_time: 2.0,
+                mean_loss: 0.45,
+                participants: vec![1, 6, 7],
+                env: None,
+                pool: None,
+                robust: None,
+                asynchrony: Some(AsyncStats {
+                    buffered: 3,
+                    merged: 3,
+                    max_staleness: 2,
+                    wall_clock: 41.25,
+                }),
+                eval: None,
+            });
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("\"async\":{\"buffered\":3,\"merged\":3"), "{s}");
+        assert!(s.contains("\"max_staleness\":2,\"wall_clock\":41.250000}"), "{s}");
     }
 }
