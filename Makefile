@@ -55,11 +55,16 @@ bench-robust:
 bench-async:
 	cd rust && cargo bench --bench async_churn
 
-# Format + clippy gate (CI tier-1 companion).
+# Format + clippy + sflint gate (CI tier-1 companion).  sflint is the
+# in-tree invariant analyzer (rust/lint/README.md): nonzero exit on any
+# finding not grandfathered in rust/lint/baseline.jsonl.
 lint:
-	cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
+	cd rust && cargo fmt --check \
+	        && cargo clippy --all-targets -- -D warnings -D clippy::dbg_macro \
+	        && cargo run --release --bin sflint -- --json sflint-findings.jsonl
 
 clean:
 	cd rust && cargo clean
 	rm -f rust/BENCH_hotpath.json rust/BENCH_sched.json rust/BENCH_trace.json \
-	      rust/BENCH_memory.json rust/BENCH_robust.json rust/BENCH_async.json
+	      rust/BENCH_memory.json rust/BENCH_robust.json rust/BENCH_async.json \
+	      rust/sflint-findings.jsonl

@@ -1,0 +1,108 @@
+//! `sflint` — the project's static invariant gate.  Walks `rust/src/**`
+//! and enforces rules R1–R5 (determinism, checkpoint coverage, config
+//! symmetry, panic discipline, float order); see `rust/lint/README.md`.
+//!
+//! Run from `rust/`:
+//!
+//! ```text
+//! cargo run --release --bin sflint -- --json sflint-findings.jsonl
+//! ```
+//!
+//! Exit codes: 0 clean (only baselined findings), 1 fresh findings,
+//! 2 usage or I/O error.
+
+use anyhow::{bail, Context, Result};
+use sfl::lint;
+use std::path::PathBuf;
+
+const USAGE: &str = "sflint — static invariant analyzer (rules R1-R5)
+
+USAGE: sflint [--root DIR] [--baseline FILE] [--json FILE] [--write-baseline]
+
+  --root DIR        source tree to scan            (default: src)
+  --baseline FILE   grandfathered findings, JSONL  (default: lint/baseline.jsonl)
+  --json FILE       also write all findings as JSONL to FILE
+  --write-baseline  rewrite the baseline from the current findings and exit 0
+
+Suppress a single finding in source with a trailing or preceding comment:
+  // sflint:allow(rule, reason)        e.g. sflint:allow(R4, len checked above)";
+
+fn main() {
+    match run() {
+        Ok(clean) => std::process::exit(i32::from(!clean)),
+        Err(e) => {
+            eprintln!("sflint: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run() -> Result<bool> {
+    let mut root = PathBuf::from("src");
+    let mut baseline_path = PathBuf::from("lint/baseline.jsonl");
+    let mut json_out: Option<PathBuf> = None;
+    let mut write_baseline = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = PathBuf::from(need(&mut args, "--root")?),
+            "--baseline" => baseline_path = PathBuf::from(need(&mut args, "--baseline")?),
+            "--json" => json_out = Some(PathBuf::from(need(&mut args, "--json")?)),
+            "--write-baseline" => write_baseline = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return Ok(true);
+            }
+            other => bail!("unknown argument `{other}` (try --help)"),
+        }
+    }
+
+    let findings = lint::analyze_tree(&root)?;
+
+    if write_baseline {
+        let mut s = String::new();
+        for f in &findings {
+            s.push_str(&f.to_json());
+            s.push('\n');
+        }
+        std::fs::write(&baseline_path, s)
+            .with_context(|| format!("writing {}", baseline_path.display()))?;
+        println!("sflint: wrote {} finding(s) to {}", findings.len(), baseline_path.display());
+        return Ok(true);
+    }
+
+    let baseline = if baseline_path.exists() {
+        lint::load_baseline(&baseline_path)?
+    } else {
+        Vec::new()
+    };
+    let (fresh, old) = lint::split_baselined(findings, &baseline);
+
+    if let Some(p) = &json_out {
+        let mut s = String::new();
+        for f in fresh.iter().chain(old.iter()) {
+            s.push_str(&f.to_json());
+            s.push('\n');
+        }
+        std::fs::write(p, s).with_context(|| format!("writing {}", p.display()))?;
+    }
+
+    if !fresh.is_empty() {
+        print!("{}", lint::render_table(&fresh));
+    }
+    let stale = baseline.iter().filter(|b| !old.iter().any(|f| &f.key() == *b)).count();
+    if stale > 0 {
+        println!("sflint: note: {stale} baseline entr(ies) no longer match — prune the baseline");
+    }
+    println!(
+        "sflint: {} fresh finding(s), {} baselined, over `{}`",
+        fresh.len(),
+        old.len(),
+        root.display()
+    );
+    Ok(fresh.is_empty())
+}
+
+fn need(args: &mut impl Iterator<Item = String>, flag: &str) -> Result<String> {
+    args.next().with_context(|| format!("{flag} requires a value"))
+}

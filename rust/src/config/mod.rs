@@ -102,6 +102,15 @@ pub fn client_clone_count() -> u64 {
     CLIENT_CONFIG_CLONES.with(|c| c.get())
 }
 
+/// Reset the calling thread's clone counter to zero, returning the
+/// previous value.  Clone gates reset before measuring and then prove
+/// the counter is live with a one-clone canary, so a gate cannot pass
+/// vacuously against a poisoned or dead counter (see
+/// `tests/integration_training.rs`).
+pub fn reset_client_clone_count() -> u64 {
+    CLIENT_CONFIG_CLONES.with(|c| c.replace(0))
+}
+
 /// One client entry: device + (optional) pinned cut point.
 #[derive(Debug)]
 pub struct ClientConfig {
@@ -422,6 +431,15 @@ impl ExperimentConfig {
         if self.train.aggregation_interval == 0 || self.train.steps_per_round == 0 {
             bail!("train intervals must be positive");
         }
+        if !self.train.lr.is_finite() || self.train.lr <= 0.0 {
+            bail!("lr must be finite and > 0, got {}", self.train.lr);
+        }
+        if !self.train.min_delta.is_finite() || self.train.min_delta < 0.0 {
+            bail!("min_delta must be finite and >= 0, got {}", self.train.min_delta);
+        }
+        if !self.train.dirichlet_alpha.is_finite() || self.train.dirichlet_alpha <= 0.0 {
+            bail!("dirichlet_alpha must be finite and > 0, got {}", self.train.dirichlet_alpha);
+        }
         if !(0.0..=1.0).contains(&self.train.dropout_prob) {
             bail!("dropout_prob must be in [0, 1], got {}", self.train.dropout_prob);
         }
@@ -711,6 +729,7 @@ impl ExperimentConfig {
         let t = &self.train;
         out.push_str(&format!(
             "steps_per_round = {}\naggregation_interval = {}\nmax_rounds = {}\nlr = {}\n\
+             lr_schedule = {}\n\
              eval_interval = {}\neval_batches = {}\npatience = {}\nmin_delta = {}\n\
              dirichlet_alpha = {}\ndropout_prob = {}\nmax_participants = {}\n\
              oracle_timing = {}\ntiming_ewma_alpha = {}\ntiming_ewma_adaptive = {}\nseed = {}\n",
@@ -718,6 +737,7 @@ impl ExperimentConfig {
             t.aggregation_interval,
             t.max_rounds,
             t.lr,
+            t.lr_schedule,
             t.eval_interval,
             t.eval_batches,
             t.patience,
@@ -844,6 +864,34 @@ mod tests {
         assert_eq!(back.scheme, SchemeKind::Ours);
         assert_eq!(back.resolve_cuts(), c.resolve_cuts());
         assert!((back.clients[0].device.tflops - 0.472).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_roundtrip_preserves_lr_schedule() {
+        // Regression: to_kv used to omit lr_schedule, so a non-default
+        // schedule silently reverted to constant after a round-trip.
+        let mut c = ExperimentConfig::paper();
+        c.train.lr_schedule =
+            crate::coordinator::lr::LrSchedule::Cosine { horizon: 64, floor: 0.2 };
+        let dir = std::env::temp_dir().join("sfl_cfg_test_lrs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lrs.exp");
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.train.lr_schedule, c.train.lr_schedule);
+    }
+
+    #[test]
+    fn validate_rejects_bad_float_knobs() {
+        let mut c = ExperimentConfig::paper();
+        c.train.lr = f32::NAN;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::paper();
+        c.train.min_delta = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::paper();
+        c.train.dirichlet_alpha = 0.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -1200,6 +1248,17 @@ mod tests {
         let before = client_clone_count();
         let _copy = c.clients[0].clone();
         assert_eq!(client_clone_count(), before + 1);
+    }
+
+    #[test]
+    fn reset_clone_count_zeroes_and_counter_stays_live() {
+        let c = ExperimentConfig::paper();
+        let _warm = c.clients[0].clone();
+        assert!(client_clone_count() > 0);
+        reset_client_clone_count();
+        assert_eq!(client_clone_count(), 0, "reset must zero this thread's counter");
+        let _copy = c.clients[0].clone();
+        assert_eq!(client_clone_count(), 1, "counter must stay live after a reset");
     }
 
     #[test]

@@ -48,11 +48,13 @@ struct Ewma {
 /// Per-client EWMA timing model, indexed by global client id.
 #[derive(Debug, Clone)]
 pub struct TimingEstimator {
+    // sflint:allow(checkpoint-coverage, EWMA weight is fixed at construction)
     alpha: f64,
     /// Winsorization factor: each observed channel is clamped into
     /// `[ewma/k, ewma·k]` before folding, so one absurd report (a
     /// timing-lying client, a clock glitch) moves the estimate by a
     /// bounded factor.  `INFINITY` (the default) disables the clamp.
+    // sflint:allow(checkpoint-coverage, winsor factor is fixed at construction)
     winsor: f64,
     /// When set, α is derived per client from the EWMA of squared
     /// relative residuals (`resid_var`): persistently large residuals
@@ -60,7 +62,9 @@ pub struct TimingEstimator {
     /// rises toward [`ADAPTIVE_ALPHA_MAX`]; a stable client settles at
     /// [`ADAPTIVE_ALPHA_MIN`].  Off (the default) leaves the fixed-α
     /// arithmetic bit-identical.
+    // sflint:allow(checkpoint-coverage, mode flag is fixed at construction)
     adaptive: bool,
+    // sflint:allow(checkpoint-coverage, rides in the adaptive_state serializer pair)
     resid_var: Vec<f64>,
     stats: Vec<Ewma>,
 }

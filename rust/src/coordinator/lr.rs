@@ -44,6 +44,19 @@ impl LrSchedule {
     }
 }
 
+impl std::fmt::Display for LrSchedule {
+    /// Emits the same form [`FromStr`] parses, so configs round-trip
+    /// through `to_kv`/`from_kv_file`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            LrSchedule::Constant => write!(f, "constant"),
+            LrSchedule::Linear { horizon, floor } => write!(f, "linear:{horizon}:{floor}"),
+            LrSchedule::Cosine { horizon, floor } => write!(f, "cosine:{horizon}:{floor}"),
+            LrSchedule::Warmup { warmup } => write!(f, "warmup:{warmup}"),
+        }
+    }
+}
+
 impl FromStr for LrSchedule {
     type Err = anyhow::Error;
 
@@ -119,6 +132,18 @@ mod tests {
         assert!((s.at(0.8, 1) - 0.2).abs() < 1e-6);
         assert!((s.at(0.8, 4) - 0.8).abs() < 1e-6);
         assert!((s.at(0.8, 50) - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn display_round_trips_through_from_str() {
+        for s in [
+            LrSchedule::Constant,
+            LrSchedule::Linear { horizon: 100, floor: 0.1 },
+            LrSchedule::Cosine { horizon: 50, floor: 0.25 },
+            LrSchedule::Warmup { warmup: 10 },
+        ] {
+            assert_eq!(s.to_string().parse::<LrSchedule>().unwrap(), s);
+        }
     }
 
     #[test]

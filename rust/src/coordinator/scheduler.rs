@@ -97,9 +97,7 @@ impl Scheduler for ProposedScheduler {
         fill_identity(out, jobs.len());
         out.sort_unstable_by(|&a, &b| {
             let (ka, kb) = (jobs[a].greedy_priority(), jobs[b].greedy_priority());
-            kb.partial_cmp(&ka)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(jobs[a].client.cmp(&jobs[b].client))
+            kb.total_cmp(&ka).then(jobs[a].client.cmp(&jobs[b].client))
         });
     }
 }
@@ -115,11 +113,7 @@ impl Scheduler for FifoScheduler {
     fn order_into(&mut self, jobs: &[JobInfo], out: &mut Vec<usize>) {
         fill_identity(out, jobs.len());
         out.sort_unstable_by(|&a, &b| {
-            jobs[a]
-                .arrival
-                .partial_cmp(&jobs[b].arrival)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(jobs[a].client.cmp(&jobs[b].client))
+            jobs[a].arrival.total_cmp(&jobs[b].arrival).then(jobs[a].client.cmp(&jobs[b].client))
         });
     }
 }
@@ -137,8 +131,7 @@ impl Scheduler for WorkloadFirstScheduler {
         out.sort_unstable_by(|&a, &b| {
             jobs[b]
                 .server_time
-                .partial_cmp(&jobs[a].server_time)
-                .unwrap_or(std::cmp::Ordering::Equal)
+                .total_cmp(&jobs[a].server_time)
                 .then(jobs[a].client.cmp(&jobs[b].client))
         });
     }

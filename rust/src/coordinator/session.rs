@@ -504,11 +504,13 @@ pub struct ParallelCore {
     /// Either way the trained values are bit-identical.
     pool: StatePool,
     sched: Box<dyn Scheduler>,
+    // sflint:allow(checkpoint-coverage, rebuilt from config at load)
     kind: SchedulerKind,
     last_active: Option<usize>,
     switches: u64,
     /// Reused per-step order buffer (job indices) — the schedule path
     /// allocates nothing at steady state.
+    // sflint:allow(checkpoint-coverage, scratch buffer, refilled every step)
     order_buf: Vec<usize>,
     /// Byzantine-tolerant aggregation (`Some` iff `[robust]` is active).
     robust: Option<RobustDefense>,
@@ -517,7 +519,9 @@ pub struct ParallelCore {
     /// delta-corrects stale survivors with exactly these weights — the
     /// robust path may reject or reweight, so callers cannot recompute
     /// them.  Reused buffers, filled by both merge paths.
+    // sflint:allow(checkpoint-coverage, valid only within a merge; checkpoints are merge-aligned)
     merge_survivors: Vec<usize>,
+    // sflint:allow(checkpoint-coverage, valid only within a merge; checkpoints are merge-aligned)
     merge_weights: Vec<f32>,
 }
 
@@ -843,7 +847,9 @@ impl ParallelCore {
         traffic: &mut TrafficMeter,
         scratch: &mut RoundScratch,
     ) -> Result<bool> {
-        let rb = self.robust.as_mut().expect("robust aggregation without defense state");
+        let Some(rb) = self.robust.as_mut() else {
+            bail!("robust aggregation invoked without defense state");
+        };
         let pool = &mut self.pool;
         let out_survivors = &mut self.merge_survivors;
         let out_weights = &mut self.merge_weights;
@@ -929,10 +935,9 @@ impl ParallelCore {
             // indexed by the survivor's position in `participants`.
             let raw = match decay {
                 Some(d) => {
-                    let i = participants
-                        .iter()
-                        .position(|&p| p == u)
-                        .expect("survivor not among the merge participants");
+                    let i = participants.iter().position(|&p| p == u).ok_or_else(|| {
+                        anyhow::anyhow!("survivor {u} not among the merge participants")
+                    })?;
                     env.data.weight(u) * d[i]
                 }
                 None => env.data.weight(u),
@@ -1251,7 +1256,9 @@ pub struct SlScheme {
     full: AdapterSet,
     head: HeadState,
     /// Reused per-client working states (refilled at every visit).
+    // sflint:allow(checkpoint-coverage, scratch, refilled from `full` at every visit)
     clients: Vec<ClientState>,
+    // sflint:allow(checkpoint-coverage, scratch, refilled from `full` at every visit)
     servers: Vec<ServerState>,
     iters: Vec<BatchIter>,
 }
@@ -1415,6 +1422,7 @@ struct Book {
     exec_base: u64,
     /// Executions recorded by earlier segments of a resumed run.
     execs_prior: u64,
+    // sflint:allow(determinism, wall-clock telemetry only; never feeds the sim)
     wall: std::time::Instant,
     wall_prior: f64,
     scratch: RoundScratch,
@@ -1581,6 +1589,7 @@ impl<'e> Session<'e> {
             sched_jobs_buf: Vec::with_capacity(env.cuts.len()),
             exec_base: engine.exec_count(),
             execs_prior: 0,
+            // sflint:allow(determinism, wall-clock telemetry only; never feeds the sim)
             wall: std::time::Instant::now(),
             wall_prior: 0.0,
             scratch,
@@ -1803,7 +1812,9 @@ impl<'e> Session<'e> {
         if via_engine {
             let barrier = self.book.sim_time + outcome.train_elapsed;
             self.book.engine.schedule(barrier, Event::AggregationTrigger { epoch: round as u64 });
-            let ev = self.book.engine.pop().expect("barrier event was just scheduled");
+            let ev = self.book.engine.pop().ok_or_else(|| {
+                anyhow::anyhow!("engine queue empty despite a just-scheduled barrier event")
+            })?;
             self.book.sim_time = ev.time;
         } else {
             self.book.sim_time += outcome.train_elapsed;
@@ -1878,7 +1889,9 @@ impl<'e> Session<'e> {
             .parallel_core()
             .ok_or_else(|| anyhow::anyhow!("--async requires a parallel scheme (ours/sfl)"))?;
         let b = &mut self.book;
-        let ab = b.asyncx.as_mut().expect("step_round_async without async bookkeeping");
+        let Some(ab) = b.asyncx.as_mut() else {
+            bail!("step_round_async called without async bookkeeping");
+        };
 
         // First call: snapshot the version-0 baseline and seed the
         // initial arrival wave (id order at t = 0; engine sequence
@@ -2401,6 +2414,7 @@ impl<'e> Session<'e> {
         b.execs_prior = one_u64(&store, "book.execs")?;
         b.exec_base = engine.exec_count();
         b.wall_prior = one_f64(&store, "book.wall")?;
+        // sflint:allow(determinism, wall-clock telemetry only; never feeds the sim)
         b.wall = std::time::Instant::now();
         b.dropout_rng = Rng::from_state(one_u64(&store, "book.dropout_rng")?);
         let est_values = decode_f64s(store.get("book.est.values")?)?;

@@ -131,13 +131,15 @@ pub fn dirichlet_partition(
         shards[u].push(i);
     }
     // Rebalance: steal from the largest shard until everyone has a floor.
+    // The `else` arms only fire for a zero-client call or a fully drained
+    // corpus, where there is nothing left to move.
     loop {
-        let min_idx = (0..clients).min_by_key(|&u| shards[u].len()).unwrap();
+        let Some(min_idx) = (0..clients).min_by_key(|&u| shards[u].len()) else { break };
         if shards[min_idx].len() >= min_per_client {
             break;
         }
-        let max_idx = (0..clients).max_by_key(|&u| shards[u].len()).unwrap();
-        let moved = shards[max_idx].pop().expect("largest shard is empty");
+        let Some(max_idx) = (0..clients).max_by_key(|&u| shards[u].len()) else { break };
+        let Some(moved) = shards[max_idx].pop() else { break };
         shards[min_idx].push(moved);
     }
     shards
@@ -313,6 +315,7 @@ impl DataPool {
 pub struct BatchIter {
     indices: Vec<usize>,
     cursor: usize,
+    // sflint:allow(checkpoint-coverage, batch size is fixed at construction, not mutable run state)
     batch: usize,
     rng: Rng,
 }

@@ -104,9 +104,11 @@ pub fn paper_fleet() -> Vec<(DeviceProfile, usize)> {
 /// client-side submodel must fit the memory budget and one client step
 /// (fwd + rematerialized bwd) must complete within `max_step_seconds`.
 pub fn select_cut(dims: &ModelDims, dev: &DeviceProfile, max_step_seconds: f64) -> usize {
-    let mut best = *dims.cuts.iter().min().expect("cuts must be non-empty");
     let mut sorted = dims.cuts.clone();
     sorted.sort_unstable();
+    // Degenerate model with no candidate cuts: nothing runs on-device.
+    let Some(&shallowest) = sorted.first() else { return 0 };
+    let mut best = shallowest;
     for &k in &sorted {
         let mem_ok = memory::client_memory(dims, k).total_mb() <= dev.memory_mb;
         let step =

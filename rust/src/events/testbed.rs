@@ -266,7 +266,10 @@ pub fn run_async(sc: &Scenario) -> Result<Outcome> {
                 // Dispatch: train eagerly from the current model (the
                 // latest baseline IS the global model between merges).
                 versions.mark_dispatch(u);
-                let from = bases.last().expect("baseline history is never empty").clone();
+                let from = bases
+                    .last()
+                    .ok_or_else(|| anyhow::anyhow!("baseline history is empty"))?
+                    .clone();
                 world.local_train(u, &from, &mut pending[u]);
                 let duration = world.round_time(u, sc.steps, &tl);
                 engine.schedule(t + duration, Event::ClientCompletion { client: u });
@@ -337,7 +340,7 @@ pub fn run_async(sc: &Scenario) -> Result<Outcome> {
             });
         }
     }
-    let last = bases.last().expect("baseline history is never empty");
+    let last = bases.last().ok_or_else(|| anyhow::anyhow!("baseline history is empty"))?;
     Ok(Outcome {
         time_to_target: sc.max_time,
         merges,

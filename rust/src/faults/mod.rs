@@ -285,12 +285,11 @@ impl FaultInjector {
         server: &AdapterSet,
         baseline: &AdapterSet,
     ) -> Result<()> {
-        if self.subs[u].is_none() {
-            self.subs[u] = Some((client.clone(), server.clone()));
-        } else {
-            let (c, s) = self.subs[u].as_mut().unwrap();
+        if let Some((c, s)) = self.subs[u].as_mut() {
             copy_adapters(c, client)?;
             copy_adapters(s, server)?;
+        } else {
+            self.subs[u] = Some((client.clone(), server.clone()));
         }
         if !self.attackers[u] {
             return Ok(());
@@ -299,7 +298,9 @@ impl FaultInjector {
             AttackKind::None | AttackKind::TimingLie => {}
             AttackKind::Corrupt => {
                 let t = self.rng.below(4);
-                let (c, s) = self.subs[u].as_mut().unwrap();
+                let Some((c, s)) = self.subs[u].as_mut() else {
+                    bail!("corrupt attack: submission for client {u} was not staged");
+                };
                 // Corrupt the client half when it has layers (the fault
                 // models the device side); fall back to the server half
                 // for cut-0 clients.
@@ -318,7 +319,9 @@ impl FaultInjector {
             }
             AttackKind::Scale => {
                 let lam = self.lambda;
-                let (c, s) = self.subs[u].as_mut().unwrap();
+                let Some((c, s)) = self.subs[u].as_mut() else {
+                    bail!("scale attack: submission for client {u} was not staged");
+                };
                 let k = c.layers;
                 if k + s.layers != baseline.layers {
                     bail!("scale attack: baseline depth mismatch");
@@ -335,12 +338,13 @@ impl FaultInjector {
                 }
             }
             AttackKind::Stale => {
-                if self.prev[u].is_some() {
+                if let Some(p) = self.prev[u].as_mut() {
                     // Submit last round's honest halves; bank this
-                    // round's honest copy for the next replay.
-                    let p = self.prev[u].as_mut().unwrap();
-                    let cur = self.subs[u].as_mut().unwrap();
-                    std::mem::swap(cur, p);
+                    // round's honest copy for the next replay.  `subs[u]`
+                    // was staged at the top of this call.
+                    if let Some(cur) = self.subs[u].as_mut() {
+                        std::mem::swap(cur, p);
+                    }
                 } else {
                     self.prev[u] = Some((client.clone(), server.clone()));
                 }

@@ -129,9 +129,7 @@ impl FleetSpec {
         let mut rng = Rng::new(self.seed ^ 0x00F1_EE75);
         let catalog = paper_fleet();
         let mut ranked = catalog.clone();
-        ranked.sort_by(|a, b| {
-            a.0.tflops.partial_cmp(&b.0.tflops).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        ranked.sort_by(|a, b| a.0.tflops.total_cmp(&b.0.tflops));
         (0..self.n)
             .map(|i| {
                 let (mut device, cut, link) = match self.preset {

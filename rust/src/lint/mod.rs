@@ -1,0 +1,607 @@
+//! `sflint` — the in-tree static invariant analyzer (`cargo run --bin
+//! sflint`; wired into `make lint` and CI).
+//!
+//! Every headline claim of this reproduction — bit-exact pooled/robust/
+//! async twins, mid-flight resume, deterministic trajectories — rests
+//! on source-level invariants that no runtime test can enforce
+//! exhaustively: checkpointable RNG only, sim-clock only, every mutable
+//! field serialized, every config knob symmetric across `to_kv` / the
+//! kv parser / `validate()`.  This module is a lightweight line scanner
+//! (strings and comments masked, brace depth tracked, `#[cfg(test)]`
+//! regions excluded) that enforces them as named rules:
+//!
+//! | rule | name                | invariant |
+//! |------|---------------------|-----------|
+//! | R1   | determinism         | no wall clock, no external RNG, no hash-order iteration |
+//! | R2   | checkpoint-coverage | struct fields reachable from `save_state`/`load_state`/`state`/`restore_state` are referenced by those serializers |
+//! | R3   | config-symmetry     | `ExperimentConfig` sub-struct fields appear in `to_kv`, the kv parser, and (floats) `validate()` |
+//! | R4   | panic-discipline    | no `unwrap`/`expect`/`panic!`/`todo!` outside tests |
+//! | R5   | float-order         | float comparators use `total_cmp`, never `partial_cmp` |
+//!
+//! Findings can be suppressed case-by-case with a pragma comment on the
+//! offending line or on a comment line directly above it:
+//!
+//! ```text
+//! // sflint:allow(checkpoint-coverage, rebuilt from the spec on resume)
+//! ```
+//!
+//! or grandfathered wholesale via `rust/lint/baseline.jsonl` (matched
+//! on rule + path + message, so line drift never un-baselines an
+//! entry).  See `rust/lint/README.md` for the full workflow.
+
+pub mod rules;
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Short rule id ("R1".."R5").
+    pub rule: &'static str,
+    /// Human rule name ("determinism", ...), also accepted in pragmas.
+    pub name: &'static str,
+    /// Path relative to the scanned root, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Finding {
+    /// Baseline identity: line numbers drift, so entries match on
+    /// (rule, path, message) only.
+    pub fn key(&self) -> (String, String, String) {
+        (self.rule.to_string(), self.path.clone(), self.msg.clone())
+    }
+
+    /// One JSONL record (the machine-readable output and the baseline
+    /// format are the same shape).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"rule\":\"{}\",\"name\":\"{}\",\"path\":\"{}\",\"line\":{},\"msg\":\"{}\"}}",
+            json_escape(self.rule),
+            json_escape(self.name),
+            json_escape(&self.path),
+            self.line,
+            json_escape(&self.msg)
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Extract a string field from one sflint-written JSONL record.  This
+/// is deliberately not a general JSON parser: it reads exactly the
+/// shape [`Finding::to_json`] emits (and unescapes what
+/// [`json_escape`] escapes), which is all the baseline file may
+/// contain.
+fn json_str_field(line: &str, key: &str) -> Option<String> {
+    let tag = format!("\"{key}\":\"");
+    let start = line.find(&tag)? + tag.len();
+    let rest = &line[start..];
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                other => out.push(other),
+            },
+            c => out.push(c),
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Source model: masked lines, brace depth, test regions, pragmas.
+// ---------------------------------------------------------------------------
+
+/// Lexer state carried across lines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Mode {
+    Normal,
+    /// Inside `/* ... */`; payload = nesting depth (Rust block comments nest).
+    Block(u32),
+    /// Inside a raw string `r##"..."##`; payload = number of `#`s.
+    Raw(u32),
+}
+
+/// One parsed source file: per line, the code with strings and comments
+/// masked out (structure preserved), the comment text (where pragmas
+/// live), the brace depth at line start, and whether the line sits in a
+/// `#[cfg(test)]` region.
+pub struct SourceFile {
+    pub rel: String,
+    pub code: Vec<String>,
+    pub comment: Vec<String>,
+    pub depth: Vec<i64>,
+    pub test: Vec<bool>,
+}
+
+/// Mask one line: string/char literal contents become spaces (the
+/// delimiters stay, so token boundaries hold), comment text moves to
+/// the side channel.  Returns the mode to carry into the next line.
+fn mask_line(line: &str, mode: Mode, code: &mut String, comment: &mut String) -> Mode {
+    let b: Vec<char> = line.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut mode = mode;
+    let mut in_str = false;
+    while i < n {
+        match mode {
+            Mode::Block(depth) => {
+                if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    mode = if depth > 1 { Mode::Block(depth - 1) } else { Mode::Normal };
+                    i += 2;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(b[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            Mode::Raw(hashes) => {
+                let h = hashes as usize;
+                if b[i] == '"' && i + h < n && b[i + 1..i + 1 + h].iter().all(|&c| c == '#') {
+                    code.push('"');
+                    for _ in 0..h {
+                        code.push(' ');
+                    }
+                    i += 1 + h;
+                    mode = Mode::Normal;
+                    continue;
+                }
+                code.push(' ');
+                i += 1;
+                continue;
+            }
+            Mode::Normal => {}
+        }
+        let c = b[i];
+        if in_str {
+            if c == '\\' {
+                code.push_str("  ");
+                i += 2;
+            } else if c == '"' {
+                in_str = false;
+                code.push('"');
+                i += 1;
+            } else {
+                code.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Raw string openers: r"..."  r#"..."#  (b/br prefixes too).
+        if (c == 'r' || c == 'b') && !prev_is_ident(&b, i) {
+            let mut j = i;
+            if b[j] == 'b' && j + 1 < n && b[j + 1] == 'r' {
+                j += 1;
+            }
+            if b[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0u32;
+                while k < n && b[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == '"' {
+                    for _ in i..=k {
+                        code.push(' ');
+                    }
+                    code.push('"');
+                    i = k + 1;
+                    mode = Mode::Raw(hashes);
+                    continue;
+                }
+            }
+        }
+        match c {
+            '"' => {
+                in_str = true;
+                code.push('"');
+                i += 1;
+            }
+            '\'' => {
+                // Char literal ('x', '\n') vs lifetime ('a in generics).
+                if i + 2 < n && b[i + 1] == '\\' {
+                    // '\x' style escape: find the closing quote.
+                    let mut k = i + 2;
+                    while k < n && b[k] != '\'' {
+                        k += 1;
+                    }
+                    code.push('\'');
+                    for _ in i + 1..k.min(n) {
+                        code.push(' ');
+                    }
+                    if k < n {
+                        code.push('\'');
+                    }
+                    i = k + 1;
+                } else if i + 2 < n && b[i + 2] == '\'' {
+                    code.push_str("'  ");
+                    i += 3;
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                comment.extend(&b[i + 2..]);
+                return mode;
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                mode = Mode::Block(1);
+                i += 2;
+            }
+            c => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    mode
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let mut code = Vec::new();
+        let mut comment = Vec::new();
+        let mut mode = Mode::Normal;
+        for line in text.lines() {
+            let mut c = String::with_capacity(line.len());
+            let mut com = String::new();
+            mode = mask_line(line, mode, &mut c, &mut com);
+            code.push(c);
+            comment.push(com);
+        }
+        let mut depth = Vec::with_capacity(code.len());
+        let mut d = 0i64;
+        for c in &code {
+            depth.push(d);
+            d += braces(c);
+        }
+        let mut f = SourceFile { rel: rel.to_string(), code, comment, depth, test: Vec::new() };
+        f.test = f.test_regions();
+        f
+    }
+
+    /// Brace depth after the given line.
+    pub fn depth_after(&self, line: usize) -> i64 {
+        self.depth[line] + braces(&self.code[line])
+    }
+
+    /// Last line of the block whose opening brace sits on (or after)
+    /// `start` — the first line where depth returns to `depth[start]`.
+    pub fn block_end(&self, start: usize) -> usize {
+        let d0 = self.depth[start];
+        let mut opened = false;
+        for k in start..self.code.len() {
+            if self.code[k].contains('{') {
+                opened = true;
+            }
+            if opened && self.depth_after(k) <= d0 {
+                return k;
+            }
+        }
+        self.code.len().saturating_sub(1)
+    }
+
+    fn test_regions(&self) -> Vec<bool> {
+        let mut test = vec![false; self.code.len()];
+        let mut i = 0usize;
+        while i < self.code.len() {
+            if !self.code[i].contains("#[cfg(test)]") {
+                i += 1;
+                continue;
+            }
+            // The attribute applies to the next item; its body is the
+            // next brace-delimited block.
+            let mut open = i;
+            while open < self.code.len() && !self.code[open].contains('{') {
+                open += 1;
+            }
+            if open >= self.code.len() {
+                break;
+            }
+            let end = self.block_end(open);
+            for t in test.iter_mut().take(end + 1).skip(i) {
+                *t = true;
+            }
+            i = end + 1;
+        }
+        test
+    }
+
+    /// True when a `sflint:allow(rule, reason)` pragma covers `line`
+    /// (0-based): trailing on the line itself, or on the run of
+    /// comment-only lines directly above it (so a pragma can sit
+    /// anywhere in a field's doc block).
+    pub fn allowed(&self, line: usize, rule: &str, name: &str) -> bool {
+        if pragma_allows(&self.comment[line], rule, name) {
+            return true;
+        }
+        let mut j = line;
+        while j > 0 {
+            j -= 1;
+            let comment_only = self.code[j].trim().is_empty() && !self.comment[j].is_empty();
+            if !comment_only {
+                break;
+            }
+            if pragma_allows(&self.comment[j], rule, name) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+fn braces(code: &str) -> i64 {
+    let mut d = 0i64;
+    for c in code.chars() {
+        if c == '{' {
+            d += 1;
+        } else if c == '}' {
+            d -= 1;
+        }
+    }
+    d
+}
+
+/// Parse every `sflint:allow(rule, reason)` occurrence in a comment and
+/// check whether one names this rule (id or name).  A pragma without a
+/// reason is ignored — suppressions must be justified.
+fn pragma_allows(comment: &str, rule: &str, name: &str) -> bool {
+    let mut rest = comment;
+    while let Some(pos) = rest.find("sflint:allow(") {
+        rest = &rest[pos + "sflint:allow(".len()..];
+        let Some(close) = rest.find(')') else { return false };
+        let inner = &rest[..close];
+        rest = &rest[close + 1..];
+        let Some((tag, reason)) = inner.split_once(',') else { continue };
+        if reason.trim().is_empty() {
+            continue;
+        }
+        let tag = tag.trim();
+        if tag == rule || tag == name {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Word-level helpers shared by the rules (std-only: no regex).
+// ---------------------------------------------------------------------------
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of every whole-word occurrence of `word` in `hay`.
+pub(crate) fn word_positions(hay: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(word) {
+        let at = from + p;
+        let before_ok = !hay[..at].chars().next_back().is_some_and(is_ident_char);
+        let after = at + word.len();
+        let after_ok = !hay[after..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    out
+}
+
+pub(crate) fn contains_word(hay: &str, word: &str) -> bool {
+    !word_positions(hay, word).is_empty()
+}
+
+// ---------------------------------------------------------------------------
+// Tree analysis, baseline, reporting.
+// ---------------------------------------------------------------------------
+
+/// Run every rule over one file's source text.
+pub fn analyze_source(rel: &str, text: &str) -> Vec<Finding> {
+    let f = SourceFile::parse(rel, text);
+    let mut out = Vec::new();
+    rules::all(&f, &mut out);
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    let rd = std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))?;
+    for entry in rd {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Analyze every `.rs` file under `root` (deterministic path order).
+pub fn analyze_tree(root: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let rel: String = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        out.extend(analyze_source(&rel, &text));
+    }
+    out.sort_by(|a, b| (a.rule, &a.path, a.line).cmp(&(b.rule, &b.path, b.line)));
+    Ok(out)
+}
+
+/// Load a baseline file (JSONL of [`Finding::to_json`] records) into
+/// match keys.  Malformed lines are an error — a silently ignored
+/// baseline entry would un-grandfather a finding.
+pub fn load_baseline(path: &Path) -> Result<Vec<(String, String, String)>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rule = json_str_field(line, "rule");
+        let p = json_str_field(line, "path");
+        let msg = json_str_field(line, "msg");
+        match (rule, p, msg) {
+            (Some(rule), Some(p), Some(msg)) => out.push((rule, p, msg)),
+            _ => bail!("{}:{}: malformed baseline record", path.display(), i + 1),
+        }
+    }
+    Ok(out)
+}
+
+/// Split findings into (fresh, baselined).  Each baseline entry
+/// absorbs any number of findings with its key — the baseline
+/// grandfathers a *message at a path*, not a count.
+pub fn split_baselined(
+    findings: Vec<Finding>,
+    baseline: &[(String, String, String)],
+) -> (Vec<Finding>, Vec<Finding>) {
+    let mut fresh = Vec::new();
+    let mut old = Vec::new();
+    for f in findings {
+        let k = f.key();
+        if baseline.iter().any(|b| *b == k) {
+            old.push(f);
+        } else {
+            fresh.push(f);
+        }
+    }
+    (fresh, old)
+}
+
+/// Human-readable findings table.
+pub fn render_table(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    let loc_w = findings
+        .iter()
+        .map(|f| f.path.len() + 1 + f.line.to_string().len())
+        .max()
+        .unwrap_or(8)
+        .max(8);
+    for f in findings {
+        let loc = format!("{}:{}", f.path, f.line);
+        out.push_str(&format!("{} {:<6} {:<loc_w$}  {}\n", f.rule, f.name, loc, f.msg));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_strips_strings_and_comments() {
+        let f = SourceFile::parse("x.rs", "let s = \"a.unwrap()\"; // .unwrap()\nlet t = 1;");
+        assert!(!f.code[0].contains("unwrap"));
+        assert!(f.comment[0].contains(".unwrap()"));
+        assert_eq!(f.code[1], "let t = 1;");
+    }
+
+    #[test]
+    fn masking_handles_block_comments_and_chars() {
+        let src = "let a = 1; /* x { */\nlet b = '{';\n/* multi\nline } */ let c = 2;";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.code[0].contains('{'));
+        assert!(!f.code[1].contains('{'));
+        assert!(f.code[3].contains("let c"));
+        assert_eq!(f.depth[3], 0);
+    }
+
+    #[test]
+    fn raw_strings_mask_across_lines() {
+        let src = "let s = r#\"for x in map.iter() {\nstill text }\"#;\nlet y = 3;";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.code[0].contains("iter"));
+        assert!(!f.code[1].contains('}'));
+        assert_eq!(f.code[2], "let y = 3;");
+        assert_eq!(f.depth[2], 0);
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mods() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.test[0]);
+        assert!(f.test[2]);
+        assert!(f.test[3]);
+        assert!(f.test[4]);
+        assert!(!f.test[5]);
+    }
+
+    #[test]
+    fn pragma_same_line_and_above() {
+        let src = "// sflint:allow(determinism, bench harness)\nlet t = x;\nlet u = y; // sflint:allow(R4, infallible by construction)\nlet v = z;";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.allowed(1, "R1", "determinism"));
+        assert!(f.allowed(2, "R4", "panic-discipline"));
+        assert!(!f.allowed(3, "R4", "panic-discipline"));
+    }
+
+    #[test]
+    fn pragma_without_reason_is_ignored() {
+        let f = SourceFile::parse("x.rs", "let t = x; // sflint:allow(R1, )");
+        assert!(!f.allowed(0, "R1", "determinism"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let f = Finding {
+            rule: "R2",
+            name: "checkpoint-coverage",
+            path: "pool/mod.rs".into(),
+            line: 7,
+            msg: "field `x` of `Y` not referenced".into(),
+        };
+        let j = f.to_json();
+        assert_eq!(json_str_field(&j, "rule").as_deref(), Some("R2"));
+        assert_eq!(json_str_field(&j, "path").as_deref(), Some("pool/mod.rs"));
+        assert_eq!(json_str_field(&j, "msg").as_deref(), Some("field `x` of `Y` not referenced"));
+    }
+
+    #[test]
+    fn word_positions_respect_boundaries() {
+        assert!(contains_word("let x = Instant::now();", "Instant"));
+        assert!(!contains_word("let instant_total = 3;", "Instant"));
+        assert!(!contains_word("NotAnInstantX", "Instant"));
+    }
+}

@@ -1,0 +1,592 @@
+//! The five sflint rules (R1–R5).  Each rule scans a [`SourceFile`]'s
+//! masked code lines — string/char contents blanked, comments removed,
+//! `#[cfg(test)]` regions marked — so matches are structural, not
+//! textual accidents inside literals or docs.
+//!
+//! All matching is hand-rolled on word boundaries (std-only, no regex):
+//! an identifier occurrence counts only when it is not embedded in a
+//! longer identifier.  The rules deliberately over-approximate (e.g. R2
+//! treats *any mention* of a field inside a serializer body as
+//! coverage); false negatives are cheap here because the runtime
+//! bit-exactness tests backstop them, while false positives would drown
+//! the gate in pragmas.
+
+use super::{contains_word, word_positions, Finding, SourceFile};
+
+/// Run every rule over one parsed file.
+pub fn all(f: &SourceFile, out: &mut Vec<Finding>) {
+    r1_determinism(f, out);
+    r4_panic_discipline(f, out);
+    r5_float_order(f, out);
+    let structs = parse_structs(f);
+    r2_checkpoint_coverage(f, &structs, out);
+    r3_config_symmetry(f, &structs, out);
+}
+
+fn emit(
+    f: &SourceFile,
+    line: usize,
+    rule: &'static str,
+    name: &'static str,
+    msg: String,
+    out: &mut Vec<Finding>,
+) {
+    if f.allowed(line, rule, name) {
+        return;
+    }
+    out.push(Finding { rule, name, path: f.rel.clone(), line: line + 1, msg });
+}
+
+// ---------------------------------------------------------------------------
+// Token helpers.
+// ---------------------------------------------------------------------------
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Longest identifier prefix of `s`.
+fn ident_prefix(s: &str) -> &str {
+    let end = s.find(|c: char| !is_ident_char(c)).unwrap_or(s.len());
+    &s[..end]
+}
+
+/// Longest identifier suffix of `s`.
+fn ident_suffix(s: &str) -> &str {
+    let start = s.rfind(|c: char| !is_ident_char(c)).map_or(0, |p| p + c_len(s, p));
+    &s[start..]
+}
+
+fn c_len(s: &str, at: usize) -> usize {
+    s[at..].chars().next().map_or(1, char::len_utf8)
+}
+
+/// True when the line declares `fn <name>` for one of `names`; when
+/// `require_paren`, a `(` must follow the name (after whitespace), so
+/// `fn state_words(` never matches `state`.
+fn fn_decl_any(code: &str, names: &[&str], require_paren: bool) -> bool {
+    for at in word_positions(code, "fn") {
+        let rest = code[at + 2..].trim_start();
+        let id = ident_prefix(rest);
+        if !id.is_empty()
+            && names.contains(&id)
+            && (!require_paren || rest[id.len()..].trim_start().starts_with('('))
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// True when `code` declares `fn <name>` (paren not required).
+fn fn_decl(code: &str, name: &str) -> bool {
+    fn_decl_any(code, &[name], false)
+}
+
+/// `.name ( ` method call on the line (whitespace tolerated before the
+/// parenthesis, `name` a full identifier so `.expect_err` never matches
+/// `expect`).
+fn method_call(code: &str, name: &str) -> bool {
+    for at in word_positions(code, name) {
+        if at == 0 || !code[..at].ends_with('.') {
+            continue;
+        }
+        if code[at + name.len()..].trim_start().starts_with('(') {
+            return true;
+        }
+    }
+    false
+}
+
+/// `name! ( ` macro invocation on the line.
+fn macro_call(code: &str, name: &str) -> bool {
+    for at in word_positions(code, name) {
+        let rest = &code[at + name.len()..];
+        if let Some(r) = rest.strip_prefix('!') {
+            if r.trim_start().starts_with('(') {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// R1 — determinism.
+// ---------------------------------------------------------------------------
+
+/// Modules allowed to touch wall clocks / entropy by design.
+const R1_EXEMPT_PREFIX: &str = "simclock/";
+const R1_EXEMPT_FILE: &str = "tensor/rng.rs";
+
+const HASH_ITER_METHODS: [&str; 7] =
+    ["iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain"];
+
+fn r1_determinism(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.rel.starts_with(R1_EXEMPT_PREFIX) || f.rel == R1_EXEMPT_FILE {
+        return;
+    }
+    let idents = hash_idents(f);
+    for (i, c) in f.code.iter().enumerate() {
+        if f.test[i] {
+            continue;
+        }
+        if contains_word(c, "SystemTime") {
+            let msg = "std::time::SystemTime is wall-clock: use the sim clock".to_string();
+            emit(f, i, "R1", "determinism", msg, out);
+        } else if contains_word(c, "Instant") {
+            let msg = "std::time::Instant is wall-clock: use the sim clock".to_string();
+            emit(f, i, "R1", "determinism", msg, out);
+        }
+        if contains_word(c, "thread_rng") || contains_word(c, "from_entropy") || rand_path(c) {
+            let msg = "external RNG: use the checkpointable tensor::rng::Rng".to_string();
+            emit(f, i, "R1", "determinism", msg, out);
+        }
+        for id in &idents {
+            if hash_iter_call(c, id) || for_over_hash(c, id) {
+                let msg = format!(
+                    "iteration over hash collection `{id}` is order-nondeterministic: \
+                     sort keys or use an ordered container"
+                );
+                emit(f, i, "R1", "determinism", msg, out);
+            }
+        }
+    }
+}
+
+/// `rand::` path use (the word `rand` immediately followed by `::`).
+fn rand_path(code: &str) -> bool {
+    word_positions(code, "rand").iter().any(|&at| code[at + 4..].starts_with("::"))
+}
+
+/// Identifiers declared as `HashMap`/`HashSet` anywhere in the file
+/// (struct fields, lets) — the candidates whose iteration R1 flags.
+fn hash_idents(f: &SourceFile) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for c in &f.code {
+        for ty in ["HashMap", "HashSet"] {
+            for at in word_positions(c, ty) {
+                // `ident: [RefCell<] [std::collections::] HashMap`.
+                if let Some(id) = typed_decl_ident(&c[..at]) {
+                    if !out.contains(&id) {
+                        out.push(id);
+                    }
+                }
+                // `let [mut] ident [: T] = [std::collections::] HashMap::`.
+                if c[at + ty.len()..].starts_with("::") {
+                    if let Some(id) = let_binding_ident(c, at) {
+                        if !out.contains(&id) {
+                            out.push(id);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn typed_decl_ident(prefix: &str) -> Option<String> {
+    let mut s = prefix.trim_end();
+    s = s.strip_suffix("std::collections::").unwrap_or(s).trim_end();
+    s = s.strip_suffix("RefCell<").unwrap_or(s).trim_end();
+    if s.ends_with("::") {
+        return None;
+    }
+    let s = s.strip_suffix(':')?.trim_end();
+    let id = ident_suffix(s);
+    if id.is_empty() || id.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    Some(id.to_string())
+}
+
+fn let_binding_ident(code: &str, ty_at: usize) -> Option<String> {
+    let pre = code[..ty_at].trim_end();
+    let pre = pre.strip_suffix("std::collections::").unwrap_or(pre).trim_end();
+    if !pre.ends_with('=') {
+        return None;
+    }
+    let lp = *word_positions(code, "let").first()?;
+    if lp >= ty_at {
+        return None;
+    }
+    let mut rest = code[lp + 3..].trim_start();
+    if let Some(r) = rest.strip_prefix("mut ") {
+        rest = r.trim_start();
+    }
+    let id = ident_prefix(rest);
+    if id.is_empty() {
+        return None;
+    }
+    Some(id.to_string())
+}
+
+/// `ident.iter()` / `.keys()` / `.values()` / `.drain()` etc.
+fn hash_iter_call(code: &str, ident: &str) -> bool {
+    for at in word_positions(code, ident) {
+        let rest = code[at + ident.len()..].trim_start();
+        let Some(rest) = rest.strip_prefix('.') else { continue };
+        let rest = rest.trim_start();
+        let m = ident_prefix(rest);
+        if HASH_ITER_METHODS.contains(&m) && rest[m.len()..].trim_start().starts_with('(') {
+            return true;
+        }
+    }
+    false
+}
+
+/// `for x in &ident {` / `for x in &mut ident {` — direct borrow
+/// iteration, which desugars to the same nondeterministic order.
+fn for_over_hash(code: &str, ident: &str) -> bool {
+    for at in word_positions(code, "in") {
+        let mut rest = code[at + 2..].trim_start();
+        let Some(r) = rest.strip_prefix('&') else { continue };
+        rest = r.trim_start();
+        if let Some(r) = rest.strip_prefix("mut ") {
+            rest = r.trim_start();
+        }
+        if ident_prefix(rest) != ident {
+            continue;
+        }
+        let tail = rest[ident.len()..].trim_start();
+        if tail.is_empty() || tail.starts_with('{') {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// R4 — panic discipline.
+// ---------------------------------------------------------------------------
+
+fn r4_panic_discipline(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, c) in f.code.iter().enumerate() {
+        if f.test[i] {
+            continue;
+        }
+        if c.contains(".unwrap()") {
+            let msg = "unwrap() in non-test code: propagate with ? or handle".to_string();
+            emit(f, i, "R4", "panic-discipline", msg, out);
+        }
+        if method_call(c, "expect") {
+            let msg = "expect() in non-test code: propagate with ? or handle".to_string();
+            emit(f, i, "R4", "panic-discipline", msg, out);
+        }
+        if macro_call(c, "panic") {
+            let msg = "panic! in non-test code: return an error instead".to_string();
+            emit(f, i, "R4", "panic-discipline", msg, out);
+        }
+        if macro_call(c, "todo") || macro_call(c, "unimplemented") {
+            let msg = "todo!/unimplemented! in non-test code".to_string();
+            emit(f, i, "R4", "panic-discipline", msg, out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R5 — float-order determinism.
+// ---------------------------------------------------------------------------
+
+fn r5_float_order(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, c) in f.code.iter().enumerate() {
+        if f.test[i] || fn_decl(c, "partial_cmp") {
+            continue;
+        }
+        if c.contains(".partial_cmp(") {
+            let msg = "partial_cmp on floats: use total_cmp for deterministic order".to_string();
+            emit(f, i, "R5", "float-order", msg, out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Struct parsing shared by R2/R3.
+// ---------------------------------------------------------------------------
+
+pub(crate) struct FieldDef {
+    pub name: String,
+    /// 0-based declaration line.
+    pub line: usize,
+    pub ty: String,
+}
+
+pub(crate) struct StructDef {
+    pub name: String,
+    pub fields: Vec<FieldDef>,
+}
+
+const NOT_FIELD_KEYWORDS: [&str; 11] =
+    ["impl", "fn", "pub", "let", "match", "if", "for", "while", "return", "type", "where"];
+
+/// Braced struct definitions in the file (test regions included — an
+/// impl binds to the nearest definition by name, last one wins).
+pub(crate) fn parse_structs(f: &SourceFile) -> Vec<StructDef> {
+    let mut out = Vec::new();
+    for i in 0..f.code.len() {
+        let c = &f.code[i];
+        if !c.contains('{') {
+            continue;
+        }
+        let Some(at) = word_positions(c, "struct").first().copied() else { continue };
+        let name = ident_prefix(c[at + 6..].trim_start());
+        if name.is_empty() {
+            continue;
+        }
+        if i + 1 >= f.code.len() {
+            continue;
+        }
+        let end = f.block_end(i).min(f.code.len() - 1);
+        let inner = f.depth[i + 1];
+        let mut fields = Vec::new();
+        for j in (i + 1)..=end {
+            if f.depth[j] == inner {
+                if let Some((fname, ty)) = field_decl(&f.code[j]) {
+                    fields.push(FieldDef { name: fname, line: j, ty });
+                }
+            }
+        }
+        out.push(StructDef { name: name.to_string(), fields });
+    }
+    out
+}
+
+/// `pub(…) name: Type,` → (name, Type).  Lowercase/underscore-leading
+/// identifiers only; `::`-paths and keyword starts rejected.
+fn field_decl(code: &str) -> Option<(String, String)> {
+    let mut s = code.trim_start();
+    if let Some(r) = s.strip_prefix("pub") {
+        if let Some(r2) = r.strip_prefix('(') {
+            let close = r2.find(')')?;
+            s = r2[close + 1..].trim_start();
+        } else if r.starts_with(char::is_whitespace) {
+            s = r.trim_start();
+        }
+        // else: an identifier that merely starts with "pub" — fall through.
+    }
+    if let Some(r) = s.strip_prefix("r#") {
+        s = r;
+    }
+    let name = ident_prefix(s);
+    let lead = name.chars().next()?;
+    if !(lead.is_ascii_lowercase() || lead == '_') || NOT_FIELD_KEYWORDS.contains(&name) {
+        return None;
+    }
+    let rest = s[name.len()..].trim_start();
+    if !rest.starts_with(':') || rest.starts_with("::") {
+        return None;
+    }
+    let ty = rest[1..].trim().trim_end_matches(',').trim_end().to_string();
+    Some((name.to_string(), ty))
+}
+
+/// Remove `<…>` spans (nesting-aware) so `impl<T> Foo<T> for Bar<T>`
+/// reads `impl Foo for Bar`.
+fn strip_generics(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut depth = 0u32;
+    for ch in s.chars() {
+        match ch {
+            '<' => depth += 1,
+            '>' if depth > 0 => depth -= 1,
+            c if depth == 0 => out.push(c),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// The type an `impl` header targets: the identifier after `for` if
+/// present, else the one after `impl`.
+fn impl_target(header: &str) -> Option<String> {
+    let s = strip_generics(header);
+    for kw in ["for", "impl"] {
+        for at in word_positions(&s, kw) {
+            let id = ident_prefix(s[at + kw.len()..].trim_start());
+            if !id.is_empty() && !id.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+                return Some(id.to_string());
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// R2 — checkpoint coverage.
+// ---------------------------------------------------------------------------
+
+const SER_FNS: [&str; 4] = ["save_state", "load_state", "state", "restore_state"];
+
+fn r2_checkpoint_coverage(f: &SourceFile, structs: &[StructDef], out: &mut Vec<Finding>) {
+    let n = f.code.len();
+    let mut i = 0usize;
+    while i < n {
+        let t = f.code[i].trim_start();
+        let is_impl = t.starts_with("impl")
+            && !t[4..].chars().next().is_some_and(is_ident_char)
+            && !f.test[i];
+        if !is_impl {
+            i += 1;
+            continue;
+        }
+        let mut j = i;
+        while j < n && !f.code[j].contains('{') {
+            j += 1;
+        }
+        if j >= n {
+            break;
+        }
+        let end = f.block_end(j).min(n - 1);
+        let header = f.code[i..=j].join(" ");
+        // Concatenate the bodies of all serializer fns in this impl.
+        let mut body = String::new();
+        let mut k = j;
+        while k <= end {
+            if !fn_decl_any(&f.code[k], &SER_FNS, true) {
+                k += 1;
+                continue;
+            }
+            let mut fj = k;
+            while fj <= end && !f.code[fj].contains('{') {
+                fj += 1;
+            }
+            if fj > end {
+                break;
+            }
+            let fend = f.block_end(fj).min(end);
+            for line in &f.code[k..=fend] {
+                body.push_str(line);
+                body.push('\n');
+            }
+            k = fend + 1;
+        }
+        if !body.is_empty() {
+            if let Some(name) = impl_target(&header) {
+                if let Some(sd) = structs.iter().rev().find(|s| s.name == name) {
+                    for field in &sd.fields {
+                        if !contains_word(&body, &field.name) {
+                            let msg = format!(
+                                "field `{}` of `{name}` not referenced by {name}'s state serializers",
+                                field.name
+                            );
+                            emit(f, field.line, "R2", "checkpoint-coverage", msg, out);
+                        }
+                    }
+                }
+            }
+        }
+        i = end + 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R3 — config/kv symmetry.
+// ---------------------------------------------------------------------------
+
+/// Full text of the first `fn <name>` in the file (decl through closing
+/// brace), or empty when absent.
+fn fn_body_text(f: &SourceFile, name: &str) -> String {
+    for i in 0..f.code.len() {
+        if !fn_decl_any(&f.code[i], &[name], false) {
+            continue;
+        }
+        let mut j = i;
+        while j < f.code.len() && !f.code[j].contains('{') {
+            j += 1;
+        }
+        if j >= f.code.len() {
+            return String::new();
+        }
+        let end = f.block_end(j).min(f.code.len() - 1);
+        let mut out = String::new();
+        for line in &f.code[i..=end] {
+            out.push_str(line);
+            out.push('\n');
+        }
+        return out;
+    }
+    String::new()
+}
+
+/// Leaf scalar/string field types R3 tracks directly on
+/// `ExperimentConfig` (sub-struct fields are always tracked).
+const R3_DIRECT_TYPES: [&str; 3] = ["String", "SchemeKind", "SchedulerKind"];
+
+fn r3_config_symmetry(f: &SourceFile, structs: &[StructDef], out: &mut Vec<Finding>) {
+    let Some(exp) = structs.iter().rev().find(|s| s.name == "ExperimentConfig") else {
+        return;
+    };
+    let to_kv = fn_body_text(f, "to_kv");
+    let parser = fn_body_text(f, "from_kv_file");
+    let validate = fn_body_text(f, "validate");
+    // (label, token, 0-based line, declared type)
+    let mut targets: Vec<(String, String, usize, String)> = Vec::new();
+    for field in &exp.fields {
+        let base = field.ty.replace("Option<", "").replace("Vec<", "").replace('>', "");
+        let base = base.trim();
+        if let Some(sub) = structs.iter().rev().find(|s| s.name == base) {
+            for sf in &sub.fields {
+                let label = format!("{}.{}", field.name, sf.name);
+                targets.push((label, sf.name.clone(), sf.line, sf.ty.clone()));
+            }
+        } else if R3_DIRECT_TYPES.contains(&base) {
+            targets.push((field.name.clone(), field.name.clone(), field.line, field.ty.clone()));
+        }
+    }
+    for (label, tok, line, ty) in &targets {
+        if !contains_word(&to_kv, tok) {
+            let msg = format!("config field `{label}` missing from to_kv");
+            emit(f, *line, "R3", "config-symmetry", msg, out);
+        }
+        if !contains_word(&parser, tok) {
+            let msg = format!("config field `{label}` missing from the kv parser");
+            emit(f, *line, "R3", "config-symmetry", msg, out);
+        }
+        if (ty == "f32" || ty == "f64") && !contains_word(&validate, tok) {
+            let msg = format!("float config field `{label}` missing from validate()");
+            emit(f, *line, "R3", "config-symmetry", msg, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_decl_variants() {
+        assert_eq!(field_decl("    pub lr: f32,").map(|x| x.0), Some("lr".into()));
+        assert_eq!(field_decl("pub(crate) cap: usize,").map(|x| x.1), Some("usize".into()));
+        assert_eq!(field_decl("r#type: String,").map(|x| x.0), Some("type".into()));
+        assert!(field_decl("impl Foo {").is_none());
+        assert!(field_decl("Some(x) => y,").is_none());
+        assert!(field_decl("std::mem::swap(a, b);").is_none());
+    }
+
+    #[test]
+    fn impl_target_variants() {
+        assert_eq!(impl_target("impl StatePool {").as_deref(), Some("StatePool"));
+        assert_eq!(impl_target("impl Scheme for SlScheme {").as_deref(), Some("SlScheme"));
+        assert_eq!(impl_target("impl<T: Clone> Ring<T> {").as_deref(), Some("Ring"));
+    }
+
+    #[test]
+    fn method_and_macro_calls() {
+        assert!(method_call("x.expect (\"msg\")", "expect"));
+        assert!(!method_call("x.expect_err(\"msg\")", "expect"));
+        assert!(macro_call("panic!(\"boom\")", "panic"));
+        assert!(!macro_call("self.panic_count += 1;", "panic"));
+    }
+
+    #[test]
+    fn hash_ident_detection() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "struct S {\n    by_name: std::collections::HashMap<String, u32>,\n}\nfn g() {\n    let mut seen = HashSet::new();\n}",
+        );
+        let ids = hash_idents(&f);
+        assert!(ids.contains(&"by_name".to_string()));
+        assert!(ids.contains(&"seen".to_string()));
+    }
+}

@@ -26,12 +26,14 @@ impl Confusion {
         assert_eq!(logits.len(), labels.len() * c);
         for (i, &lab) in labels.iter().enumerate() {
             let row = &logits[i * c..(i + 1) * c];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j)
-                .unwrap();
+            // Argmax with total_cmp; >= keeps the last maximum, matching
+            // Iterator::max_by's tie behavior.
+            let mut pred = 0usize;
+            for (j, v) in row.iter().enumerate().skip(1) {
+                if v.total_cmp(&row[pred]).is_ge() {
+                    pred = j;
+                }
+            }
             self.record(lab as usize, pred);
         }
     }
@@ -112,7 +114,9 @@ impl MetricSeries {
 /// `min_delta` for `patience` consecutive evaluation rounds.
 #[derive(Debug, Clone)]
 pub struct ConvergenceDetector {
+    // sflint:allow(checkpoint-coverage, config knob fixed at construction, not mutable run state)
     pub patience: usize,
+    // sflint:allow(checkpoint-coverage, config knob fixed at construction, not mutable run state)
     pub min_delta: f64,
     best: f64,
     stale: usize,

@@ -31,11 +31,7 @@ impl<E: PartialEq> PartialOrd for Scheduled<E> {
 impl<E: PartialEq> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap on (time, insertion seq) via reversed comparison.
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
+        other.at.total_cmp(&self.at).then(other.seq.cmp(&self.seq))
     }
 }
 

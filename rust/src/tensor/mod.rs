@@ -28,6 +28,15 @@ pub fn alloc_count() -> u64 {
     HOST_TENSOR_ALLOCS.with(|c| c.get())
 }
 
+/// Reset the calling thread's allocation counter to zero, returning the
+/// previous value.  Zero-alloc gates reset before measuring and then
+/// prove the counter is live with a one-allocation canary, so a gate
+/// cannot pass vacuously against a poisoned or dead counter (see
+/// `tests/integration_training.rs`).
+pub fn reset_alloc_count() -> u64 {
+    HOST_TENSOR_ALLOCS.with(|c| c.replace(0))
+}
+
 fn note_alloc() {
     HOST_TENSOR_ALLOCS.with(|c| c.set(c.get() + 1));
 }
@@ -449,5 +458,15 @@ mod tests {
         let t = HostTensor::zeros("x", vec![2]);
         let _c = t.clone();
         assert_eq!(alloc_count(), before + 2);
+    }
+
+    #[test]
+    fn reset_alloc_count_zeroes_and_counter_stays_live() {
+        let _t = HostTensor::zeros("t", vec![2]);
+        assert!(alloc_count() > 0);
+        reset_alloc_count();
+        assert_eq!(alloc_count(), 0, "reset must zero this thread's counter");
+        let _u = HostTensor::zeros("u", vec![2]);
+        assert_eq!(alloc_count(), 1, "counter must stay live after a reset");
     }
 }

@@ -39,39 +39,44 @@ impl ParamStore {
             *pos += n;
             Ok(s)
         };
+        // Infallible LE decoders for slices whose length `take`/
+        // `chunks_exact` already guarantees — no unwrap on the decode
+        // path.
+        let u32_le = |b: &[u8]| u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        let u16_le = |b: &[u8]| u16::from_le_bytes([b[0], b[1]]);
 
         if take(&mut pos, 4)? != MAGIC {
             bail!("bad params.bin magic");
         }
-        let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let version = u32_le(take(&mut pos, 4)?);
         if version != VERSION {
             bail!("unsupported params.bin version {version}");
         }
-        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let count = u32_le(take(&mut pos, 4)?) as usize;
 
         let mut order = Vec::with_capacity(count);
         let mut by_name = HashMap::with_capacity(count);
         for _ in 0..count {
-            let nlen = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+            let nlen = u16_le(take(&mut pos, 2)?) as usize;
             let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())
                 .context("tensor name is not utf8")?;
             let dt = take(&mut pos, 1)?[0];
             let ndim = take(&mut pos, 1)?[0] as usize;
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+                shape.push(u32_le(take(&mut pos, 4)?) as usize);
             }
             let numel: usize = if ndim == 0 { 1 } else { shape.iter().product() };
             let raw = take(&mut pos, numel * 4)?;
             let data = match dt {
                 DTYPE_F32 => TensorData::F32(
                     raw.chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                         .collect(),
                 ),
                 DTYPE_I32 => TensorData::I32(
                     raw.chunks_exact(4)
-                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                         .collect(),
                 ),
                 other => bail!("unknown dtype tag {other} for {name}"),
@@ -102,6 +107,7 @@ impl ParamStore {
 
     /// Total parameter count across all tensors.
     pub fn total_params(&self) -> usize {
+        // sflint:allow(determinism, usize sum is order-independent)
         self.by_name.values().map(|t| t.numel()).sum()
     }
 }

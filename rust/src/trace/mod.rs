@@ -549,6 +549,7 @@ impl Trace for TraceGen {
 #[derive(Debug, Clone)]
 pub struct NoisyObservation {
     rng: Rng,
+    // sflint:allow(checkpoint-coverage, noise level is fixed at construction)
     sigma: f64,
 }
 

@@ -39,12 +39,16 @@ pub struct EnvSnapshot {
 /// Per-client environment traces, sampled once per round.
 #[derive(Debug)]
 pub struct EnvTimeline {
+    // sflint:allow(checkpoint-coverage, rebuilt from config at load)
     kind: TraceKind,
     mfu: Vec<TraceGen>,
     link: Vec<TraceGen>,
     avail: Vec<TraceGen>,
+    // sflint:allow(checkpoint-coverage, re-sampled from the restored generators each round)
     cur_mfu: Vec<f64>,
+    // sflint:allow(checkpoint-coverage, re-sampled from the restored generators each round)
     cur_link: Vec<f64>,
+    // sflint:allow(checkpoint-coverage, re-sampled from the restored generators each round)
     cur_avail: Vec<bool>,
     /// Fleet-wide correlated drift multiplier composed onto every
     /// client's MFU and link samples (`spec.drift_sigma > 0`).  One
@@ -52,10 +56,12 @@ pub struct EnvTimeline {
     /// brown-outs — seeded *after* the per-client generators so a
     /// drift-off spec draws the identical per-client streams.
     drift: Option<TraceGen>,
+    // sflint:allow(checkpoint-coverage, re-sampled from the restored drift walk each round)
     cur_drift: f64,
     /// FNV-1a of the replay file's content (0 for non-replay kinds) —
     /// verified on resume so a changed or re-generated trace file fails
     /// loudly instead of silently desyncing the trajectory.
+    // sflint:allow(checkpoint-coverage, recomputed from the trace file at load)
     replay_hash: u64,
 }
 

@@ -22,7 +22,7 @@ impl Args {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
+                    let v = it.next().unwrap_or_default();
                     out.flags.insert(stripped.to_string(), v);
                 } else {
                     out.flags.insert(stripped.to_string(), "true".to_string());

@@ -3,6 +3,7 @@
 //! and prints one summary line per benchmark so `cargo bench` output is
 //! grep-able by the EXPERIMENTS.md tooling.
 
+// sflint:allow(determinism, the bench harness measures wall time by design; never on the sim path)
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -30,6 +31,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
+        // sflint:allow(determinism, wall-clock timing is the point of a bench)
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed());
@@ -45,6 +47,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
 
 /// Time a single (expensive) run of `f` and report it.
 pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Duration) {
+    // sflint:allow(determinism, wall-clock timing is the point of a bench)
     let t0 = Instant::now();
     let out = f();
     let dt = t0.elapsed();

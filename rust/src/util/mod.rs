@@ -4,6 +4,8 @@
 //! property-testing runner are implemented here from scratch.
 
 pub mod args;
+// The micro-bench harness prints its report table to stdout by design.
+#[allow(clippy::print_stdout)]
 pub mod bench;
 pub mod kv;
 pub mod propcheck;

@@ -19,6 +19,7 @@ pub fn check<T: std::fmt::Debug>(
     for i in 0..cases {
         let input = gen(&mut rng);
         if !prop(&input) {
+            // sflint:allow(panic-discipline, panicking with the counterexample is the contract)
             panic!(
                 "property {name:?} failed at case {i}/{cases} (seed {seed}):\n  input = {input:?}"
             );

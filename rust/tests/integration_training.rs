@@ -40,6 +40,26 @@ fn mini_cfg() -> ExperimentConfig {
     c
 }
 
+/// Reset this thread's steady-state counters and prove each is live
+/// with a one-event canary.  A dead or poisoned counter would let the
+/// zero-alloc / zero-clone gates below pass vacuously, so every gate
+/// calls this before measuring.
+fn assert_counters_live(cfg: &ExperimentConfig) {
+    sfl::tensor::reset_alloc_count();
+    let canary = sfl::tensor::HostTensor::zeros("counter_canary", vec![1]);
+    assert_eq!(sfl::tensor::alloc_count(), 1, "tensor alloc counter is not live");
+    drop(canary);
+    sfl::tensor::reset_alloc_count();
+    assert_eq!(sfl::tensor::alloc_count(), 0, "tensor alloc counter did not reset");
+
+    sfl::config::reset_client_clone_count();
+    let clone = cfg.clients[0].clone();
+    assert_eq!(sfl::config::client_clone_count(), 1, "client clone counter is not live");
+    drop(clone);
+    sfl::config::reset_client_clone_count();
+    assert_eq!(sfl::config::client_clone_count(), 0, "client clone counter did not reset");
+}
+
 #[test]
 fn ours_trains_and_reports() {
     let Some(e) = engine() else { return };
@@ -74,6 +94,7 @@ fn steady_state_is_host_tensor_allocation_free() {
     // allocations.  Two runs that differ only in round count must
     // therefore allocate exactly the same number of tensors.
     let Some(e) = engine() else { return };
+    assert_counters_live(&mini_cfg());
     let allocs_for = |rounds: usize| {
         let mut cfg = mini_cfg();
         cfg.train.max_rounds = rounds;
@@ -98,6 +119,7 @@ fn sl_steady_state_is_host_tensor_allocation_free() {
     // (split_into / copy_from / in-place optimizer reset) and joins
     // back with join_into — zero HostTensor allocations per round.
     let Some(e) = engine() else { return };
+    assert_counters_live(&mini_cfg());
     let allocs_for = |rounds: usize| {
         let mut cfg = mini_cfg();
         cfg.scheme = SchemeKind::Sl;
@@ -123,6 +145,7 @@ fn pooled_steady_state_is_host_tensor_allocation_free() {
     // and after the watermark round the whole loop, evictions included,
     // must allocate zero HostTensors.
     let Some(e) = engine() else { return };
+    assert_counters_live(&mini_cfg());
     let allocs_for = |rounds: usize| {
         let mut cfg = mini_cfg();
         cfg.train.max_rounds = rounds;
@@ -179,6 +202,7 @@ fn round_loop_does_not_clone_client_configs() {
     // discipline as `tensor::alloc_count`, measured by
     // `config::client_clone_count`.
     let Some(e) = engine() else { return };
+    assert_counters_live(&mini_cfg());
     for scheme in [SchemeKind::Ours, SchemeKind::Sfl, SchemeKind::Sl] {
         let mut cfg = mini_cfg();
         cfg.scheme = scheme;

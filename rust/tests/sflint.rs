@@ -1,0 +1,323 @@
+//! Fixture tests for the sflint analyzer: one positive + one negative
+//! case per rule (R1–R5), pragma suppression, and the baseline
+//! round-trip.  Fixtures are written in the idiom of the real modules
+//! they model (the R2 fixture mirrors `events/staleness.rs`) so the
+//! rules are exercised on realistic shapes, not toy strings.
+
+use sfl::lint::{analyze_source, analyze_tree, load_baseline, split_baselined, Finding};
+
+fn rules_hit(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------------
+// R1 — determinism.
+// ---------------------------------------------------------------------------
+
+const R1_FIXTURE: &str = r#"
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn slowest(times: &HashMap<usize, f64>) -> f64 {
+    let t0 = Instant::now();
+    let mut worst = 0.0;
+    for (_, v) in times {
+        if *v > worst {
+            worst = *v;
+        }
+    }
+    let _ = t0.elapsed();
+    worst
+}
+"#;
+
+#[test]
+fn r1_flags_wall_clock_and_hash_iteration() {
+    let findings = analyze_source("coordinator/timing.rs", R1_FIXTURE);
+    let r1: Vec<&Finding> = findings.iter().filter(|f| f.rule == "R1").collect();
+    assert!(
+        r1.iter().any(|f| f.msg.contains("Instant")),
+        "Instant must be flagged: {findings:?}"
+    );
+    assert!(
+        r1.iter().any(|f| f.msg.contains("iteration order")),
+        "HashMap iteration must be flagged: {findings:?}"
+    );
+}
+
+#[test]
+fn r1_exempts_the_clock_and_rng_modules() {
+    for rel in ["simclock/mod.rs", "simclock/source.rs", "tensor/rng.rs"] {
+        let findings = analyze_source(rel, R1_FIXTURE);
+        assert!(
+            findings.iter().all(|f| f.rule != "R1"),
+            "{rel} is exempt from R1, got {findings:?}"
+        );
+    }
+}
+
+#[test]
+fn r1_clean_deterministic_code_passes() {
+    let src = "use std::collections::BTreeMap;\n\
+               pub fn f(m: &BTreeMap<usize, f64>) -> usize {\n    m.len()\n}\n";
+    assert!(analyze_source("coordinator/timing.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R2 — checkpoint coverage.  Modeled on events/staleness.rs: a version
+// vector with state()/restore_state() serializers and one field the
+// serializers forgot.
+// ---------------------------------------------------------------------------
+
+const R2_FIXTURE: &str = r#"
+pub struct VersionVector {
+    model: u64,
+    clients: Vec<u64>,
+    inflight: Vec<bool>,
+}
+
+impl VersionVector {
+    pub fn state(&self) -> Vec<u64> {
+        let mut words = Vec::with_capacity(1 + self.clients.len());
+        words.push(self.model);
+        words.extend_from_slice(&self.clients);
+        words
+    }
+
+    pub fn restore_state(&mut self, words: &[u64]) {
+        self.model = words[0];
+        self.clients.copy_from_slice(&words[1..]);
+    }
+}
+"#;
+
+#[test]
+fn r2_catches_the_un_checkpointed_field() {
+    let findings = analyze_source("events/staleness.rs", R2_FIXTURE);
+    assert_eq!(rules_hit(&findings), vec!["R2"], "{findings:?}");
+    assert!(findings[0].msg.contains("`inflight`"), "{findings:?}");
+    assert!(findings[0].msg.contains("VersionVector"), "{findings:?}");
+}
+
+#[test]
+fn r2_passes_once_every_field_is_serialized() {
+    let fixed = R2_FIXTURE.replace(
+        "self.clients.copy_from_slice(&words[1..]);",
+        "self.clients.copy_from_slice(&words[1..]);\n        self.inflight.clear();",
+    );
+    assert!(analyze_source("events/staleness.rs", &fixed).is_empty());
+}
+
+#[test]
+fn r2_ignores_structs_without_serializers() {
+    let src = "pub struct Snapshot {\n    pub mfu: f64,\n    pub link: f64,\n}\n";
+    assert!(analyze_source("trace/view.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R3 — config symmetry.
+// ---------------------------------------------------------------------------
+
+const R3_FIXTURE: &str = r#"
+pub struct TrainConfig {
+    pub lr: f64,
+    pub warmup: f32,
+}
+
+pub struct ExperimentConfig {
+    pub train: TrainConfig,
+}
+
+impl ExperimentConfig {
+    pub fn to_kv(&self) -> String {
+        format!("{}", self.train.lr)
+    }
+
+    pub fn validate(&self) -> bool {
+        self.train.lr.is_finite()
+    }
+}
+
+pub fn from_kv_file(text: &str) -> f64 {
+    let lr = text.len() as f64;
+    lr
+}
+"#;
+
+#[test]
+fn r3_flags_a_field_missing_from_all_three_surfaces() {
+    let findings = analyze_source("config/mod.rs", R3_FIXTURE);
+    assert_eq!(rules_hit(&findings), vec!["R3", "R3", "R3"], "{findings:?}");
+    assert!(findings.iter().all(|f| f.msg.contains("`train.warmup`")), "{findings:?}");
+    assert!(findings.iter().any(|f| f.msg.contains("missing from to_kv")));
+    assert!(findings.iter().any(|f| f.msg.contains("missing from the kv parser")));
+    assert!(findings.iter().any(|f| f.msg.contains("missing from validate()")));
+}
+
+#[test]
+fn r3_passes_when_every_surface_names_the_field() {
+    let fixed = R3_FIXTURE
+        .replace(
+            "format!(\"{}\", self.train.lr)",
+            "format!(\"{} {}\", self.train.lr, self.train.warmup)",
+        )
+        .replace(
+            "self.train.lr.is_finite()",
+            "self.train.lr.is_finite() && self.train.warmup > 0.0",
+        )
+        .replace(
+            "let lr = text.len() as f64;",
+            "let lr = text.len() as f64;\n    let warmup = 0.0f32;\n    let _ = warmup;",
+        );
+    assert!(analyze_source("config/mod.rs", &fixed).is_empty());
+}
+
+#[test]
+fn r3_is_silent_outside_the_experiment_config_file() {
+    let src = "pub struct TrainConfig {\n    pub lr: f64,\n}\n";
+    assert!(analyze_source("coordinator/lr.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R4 — panic discipline.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r4_flags_unwrap_outside_tests_only() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let findings = analyze_source("util/mod.rs", src);
+    assert_eq!(rules_hit(&findings), vec!["R4"], "{findings:?}");
+
+    let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+                    Some(1u32).unwrap();\n    }\n}\n";
+    assert!(analyze_source("util/mod.rs", test_src).is_empty());
+}
+
+#[test]
+fn r4_flags_panic_macros_but_not_lookalikes() {
+    let src = "pub fn f() {\n    panic!(\"boom\");\n}\n";
+    assert_eq!(rules_hit(&analyze_source("util/mod.rs", src)), vec!["R4"]);
+    let ok = "pub fn f(s: &str) -> bool {\n    s.contains(\"panic!(\")\n}\n";
+    assert!(analyze_source("util/mod.rs", ok).is_empty(), "string contents are masked");
+}
+
+// ---------------------------------------------------------------------------
+// R5 — float comparison order.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r5_flags_partial_cmp_and_accepts_total_cmp() {
+    let bad = "pub fn sort(v: &mut [f64]) {\n    \
+               v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+    let findings = analyze_source("metrics/mod.rs", bad);
+    assert!(rules_hit(&findings).contains(&"R5"), "{findings:?}");
+
+    let good = "pub fn sort(v: &mut [f64]) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\n";
+    assert!(analyze_source("metrics/mod.rs", good).is_empty());
+}
+
+#[test]
+fn r5_exempts_partial_cmp_trait_impls() {
+    let src = "impl PartialOrd for Wrapper {\n    \
+               fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {\n        \
+               Some(self.0.total_cmp(&other.0))\n    }\n}\n";
+    assert!(analyze_source("metrics/mod.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Pragmas.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pragma_with_reason_suppresses_by_name_or_id() {
+    for tag in ["panic-discipline", "R4"] {
+        let src = format!(
+            "pub fn f(x: Option<u32>) -> u32 {{\n    \
+             // sflint:allow({tag}, fixture exercises the pragma path)\n    x.unwrap()\n}}\n"
+        );
+        assert!(analyze_source("util/mod.rs", &src).is_empty(), "tag {tag}");
+    }
+}
+
+#[test]
+fn pragma_without_reason_is_ignored() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n    \
+               // sflint:allow(panic-discipline)\n    x.unwrap()\n}\n";
+    assert_eq!(rules_hit(&analyze_source("util/mod.rs", src)), vec!["R4"]);
+}
+
+#[test]
+fn pragma_only_covers_its_own_rule() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n    \
+               // sflint:allow(determinism, wrong rule for this line)\n    x.unwrap()\n}\n";
+    assert_eq!(rules_hit(&analyze_source("util/mod.rs", src)), vec!["R4"]);
+}
+
+// ---------------------------------------------------------------------------
+// Baseline round-trip + tree walk.
+// ---------------------------------------------------------------------------
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("sflint-test-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn baseline_grandfathers_known_findings_across_line_drift() {
+    let findings = analyze_source("events/staleness.rs", R2_FIXTURE);
+    assert_eq!(findings.len(), 1);
+
+    let dir = temp_dir("baseline");
+    let path = dir.join("baseline.jsonl");
+    let jsonl: String = findings.iter().map(|f| f.to_json() + "\n").collect();
+    std::fs::write(&path, jsonl).unwrap();
+
+    let baseline = load_baseline(&path).unwrap();
+    assert_eq!(baseline.len(), 1);
+
+    // The same finding on a later line (comment shifts everything down)
+    // is still absorbed: baseline identity ignores line numbers.
+    let shifted = format!("// leading comment\n//\n//\n{R2_FIXTURE}");
+    let later = analyze_source("events/staleness.rs", &shifted);
+    assert_eq!(later.len(), 1);
+    assert_ne!(later[0].line, findings[0].line);
+    let (fresh, old) = split_baselined(later, &baseline);
+    assert!(fresh.is_empty(), "{fresh:?}");
+    assert_eq!(old.len(), 1);
+
+    // A different finding is NOT absorbed.
+    let other =
+        analyze_source("util/mod.rs", "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n");
+    let (fresh, old) = split_baselined(other, &baseline);
+    assert_eq!(fresh.len(), 1);
+    assert!(old.is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_baseline_is_rejected() {
+    let dir = temp_dir("malformed");
+    let path = dir.join("baseline.jsonl");
+    std::fs::write(&path, "not json at all\n").unwrap();
+    assert!(load_baseline(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn analyze_tree_walks_nested_files_with_relative_paths() {
+    let dir = temp_dir("tree");
+    std::fs::create_dir_all(dir.join("util")).unwrap();
+    std::fs::write(
+        dir.join("util").join("x.rs"),
+        "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    )
+    .unwrap();
+    std::fs::write(dir.join("clean.rs"), "pub fn g() -> u32 {\n    1\n}\n").unwrap();
+    std::fs::write(dir.join("notes.txt"), "not rust\n").unwrap();
+
+    let findings = analyze_tree(&dir).unwrap();
+    assert_eq!(rules_hit(&findings), vec!["R4"], "{findings:?}");
+    assert_eq!(findings[0].path, "util/x.rs", "paths are /-separated and root-relative");
+    std::fs::remove_dir_all(&dir).ok();
+}
