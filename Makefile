@@ -3,7 +3,7 @@
 # `artifacts` needs the python env (jax) once; everything else is
 # rust-only.  Tier-1 verify: `make build test`.  Lint gate: `make lint`.
 
-.PHONY: artifacts build test bench bench-sched bench-trace bench-mem bench-robust bench-async lint clean
+.PHONY: artifacts build test bench bench-sched bench-trace bench-mem bench-robust bench-async bench-transport lint clean
 
 # AOT-lower the HLO artifacts + params.bin the runtime executes.
 # Output lands in rust/artifacts/<config>/ (cargo's working directory
@@ -55,6 +55,13 @@ bench-robust:
 bench-async:
 	cd rust && cargo bench --bench async_churn
 
+# Compression frontier sweep (top-k fraction × quantization × error
+# feedback); writes rust/BENCH_transport.json (uplink reduction +
+# quality delta per config — EXPERIMENTS.md §Transport).  CI runs the
+# same bench with TRANSPORT_SMOKE=1 (gate config only).
+bench-transport:
+	cd rust && cargo bench --bench transport
+
 # Format + clippy + sflint gate (CI tier-1 companion).  sflint is the
 # in-tree invariant analyzer (rust/lint/README.md): nonzero exit on any
 # finding not grandfathered in rust/lint/baseline.jsonl.
@@ -67,4 +74,4 @@ clean:
 	cd rust && cargo clean
 	rm -f rust/BENCH_hotpath.json rust/BENCH_sched.json rust/BENCH_trace.json \
 	      rust/BENCH_memory.json rust/BENCH_robust.json rust/BENCH_async.json \
-	      rust/sflint-findings.jsonl
+	      rust/BENCH_transport.json rust/sflint-findings.jsonl

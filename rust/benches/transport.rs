@@ -1,0 +1,104 @@
+//! Compression-frontier bench: top-k fraction × quantization × error
+//! feedback sweep on the closed-form `transport::testbed` world,
+//! recording the uplink-reduction / quality trade-off into
+//! `BENCH_transport.json`.  Pure host-side — payloads run through the
+//! real `Codec` (encode → hash verify → decode), so no PJRT artifacts
+//! are needed.
+//!
+//!     cargo bench --bench transport                  # full sweep
+//!     TRANSPORT_SMOKE=1 cargo bench --bench transport  # CI smoke (gate config only)
+//!
+//! The gate configuration (frac = 0.05, q8, error feedback) is the
+//! acceptance gate (asserted in smoke runs too): ≥ 10× uplink reduction
+//! at ≤ 1% quality delta vs the dense run.
+
+use sfl::transport::testbed::{run, Scenario};
+use sfl::transport::{CompressKind, QuantKind};
+
+const GATE_FRAC: f64 = 0.05;
+const GATE_QUANT: QuantKind = QuantKind::Q8;
+
+fn main() {
+    let smoke = std::env::var("TRANSPORT_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let fracs: &[f64] = if smoke { &[GATE_FRAC] } else { &[0.01, 0.05, 0.1, 0.25, 1.0] };
+    let quants: &[QuantKind] =
+        if smoke { &[GATE_QUANT] } else { &[QuantKind::F32, QuantKind::Q8, QuantKind::Q4] };
+    let base = Scenario::default();
+    let mut entries: Vec<(String, String)> = Vec::new();
+
+    let dense = run(&base).expect("dense run");
+    println!("transport dense: quality={:.6} (d0={:.3})", dense.quality, dense.d0);
+    entries.push(("transport/quality/dense".into(), format!("{:.6}", dense.quality)));
+    entries.push(("transport/up_bytes/dense".into(), dense.up_bytes.to_string()));
+
+    let mut gate_checked = false;
+    for &frac in fracs {
+        for &quant in quants {
+            for ef in [false, true] {
+                if smoke && !ef {
+                    continue;
+                }
+                let sc = Scenario {
+                    compress: CompressKind::TopK,
+                    topk_frac: frac,
+                    quant,
+                    error_feedback: ef,
+                    ..base.clone()
+                };
+                let out = run(&sc).expect("scenario run");
+                let delta = dense.quality - out.quality;
+                let tag = format!(
+                    "frac{}/{quant}/{}",
+                    (frac * 100.0).round() as u64,
+                    if ef { "ef" } else { "noef" }
+                );
+                println!(
+                    "transport {tag}: ratio={:.2}x quality={:.6} delta={:+.6} ef_norm={:.6}",
+                    out.ratio, out.quality, delta, out.ef_norm
+                );
+                entries.push((format!("transport/ratio/{tag}"), format!("{:.4}", out.ratio)));
+                entries
+                    .push((format!("transport/quality/{tag}"), format!("{:.6}", out.quality)));
+                entries.push((format!("transport/delta/{tag}"), format!("{:.6}", delta)));
+                entries
+                    .push((format!("transport/ef_norm/{tag}"), format!("{:.6}", out.ef_norm)));
+                entries
+                    .push((format!("transport/up_bytes/{tag}"), out.up_bytes.to_string()));
+                // Acceptance gate: the EXPERIMENTS.md §Transport config
+                // must sit on the ≥10× / ≤1% frontier.
+                if frac == GATE_FRAC && quant == GATE_QUANT && ef {
+                    gate_checked = true;
+                    assert!(
+                        out.ratio >= 10.0,
+                        "{tag}: uplink reduction {:.2}x below the 10x gate",
+                        out.ratio
+                    );
+                    assert!(
+                        delta <= 0.01,
+                        "{tag}: quality delta {:.4} exceeds 1% (dense {:.4}, compressed {:.4})",
+                        delta,
+                        dense.quality,
+                        out.quality
+                    );
+                    assert!(
+                        out.ef_norm > 0.0,
+                        "{tag}: error feedback must be carrying residual mass"
+                    );
+                }
+            }
+        }
+    }
+    assert!(gate_checked, "sweep must include the frac5/q8/ef gate configuration");
+    println!("accept: frac5/q8/ef ≥ 10x uplink reduction at ≤ 1% quality delta");
+
+    let mut json = String::from("{\n");
+    for (i, (name, value)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        json.push_str(&format!("  \"{name}\": {value}{comma}\n"));
+    }
+    json.push_str("}\n");
+    match std::fs::write("BENCH_transport.json", &json) {
+        Ok(()) => println!("wrote BENCH_transport.json ({} entries)", entries.len()),
+        Err(e) => eprintln!("could not write BENCH_transport.json: {e}"),
+    }
+}

@@ -11,6 +11,7 @@ use crate::fleet::{FleetPreset, FleetSpec};
 use crate::model::ModelDims;
 use crate::net::Link;
 use crate::trace::{TraceKind, TraceSpec};
+use crate::transport::{CompressKind, QuantKind};
 use crate::util::kv::KvDocument;
 use anyhow::{bail, Result};
 use std::path::Path;
@@ -297,6 +298,50 @@ impl Default for AsyncConfig {
     }
 }
 
+/// Compressed-update-transport knobs (`[transport]` section): top-k
+/// sparse + quantized LoRA delta uploads with optional error feedback.
+/// `compress = none` (the default) is the historical dense path,
+/// bit-exactly — as is the degenerate top-k setting (k = 100%, f32, no
+/// error feedback), which [`TransportConfig::is_active`] excludes so
+/// the session never routes it through the codec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransportConfig {
+    pub compress: CompressKind,
+    /// Fraction of client-half LoRA coordinates that survive top-k
+    /// selection (`⌈frac·n⌉`, at least 1).
+    pub topk_frac: f64,
+    /// Wire precision of surviving values.
+    pub quant: QuantKind,
+    /// Keep per-client residuals of the dropped/rounded mass and add
+    /// them back before the next encode (stored in the StatePool,
+    /// spilled and checkpointed like Adam state).
+    pub error_feedback: bool,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            compress: CompressKind::None,
+            topk_frac: 0.05,
+            quant: QuantKind::F32,
+            error_feedback: false,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// Whether uploads actually route through the codec.  The
+    /// degenerate top-k setting (every coordinate, full precision, no
+    /// residuals) is excluded: a delta codec cannot be bit-identical to
+    /// the dense path (`fl(b + fl(x − b)) ≠ x`), so the session keeps
+    /// degenerate configs on the dense path entirely — numerics,
+    /// traffic billing, and checkpoint layout.
+    pub fn is_active(&self) -> bool {
+        self.compress == CompressKind::TopK
+            && !(self.topk_frac >= 1.0 && self.quant == QuantKind::F32 && !self.error_feedback)
+    }
+}
+
 impl RobustConfig {
     /// Whether any fault/defense machinery engages on the aggregation
     /// path.  The estimator winsor clamp is deliberately excluded: it
@@ -336,6 +381,9 @@ pub struct ExperimentConfig {
     /// Discrete-event asynchronous rounds (buffered bounded-staleness
     /// aggregation).  Disabled = the synchronous barrier, bit-exactly.
     pub asynchrony: AsyncConfig,
+    /// Compressed update uploads (top-k + quantization + error
+    /// feedback).  `compress = none` = dense uploads, bit-exactly.
+    pub transport: TransportConfig,
     pub server: ServerProfile,
     pub train: TrainConfig,
     /// Root of the artifacts directory.
@@ -365,6 +413,7 @@ impl ExperimentConfig {
             pool: PoolConfig::default(),
             robust: RobustConfig::default(),
             asynchrony: AsyncConfig::default(),
+            transport: TransportConfig::default(),
             server: ServerProfile::rtx4080s(),
             train: TrainConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -555,6 +604,25 @@ impl ExperimentConfig {
         if a.enabled && self.scheme == SchemeKind::Sl {
             bail!("async rounds require a parallel scheme (ours|sfl) — sl has no cohort to buffer");
         }
+        let tp = &self.transport;
+        if !tp.topk_frac.is_finite() || !(0.0..=1.0).contains(&tp.topk_frac) || tp.topk_frac == 0.0
+        {
+            bail!("transport topk_frac must be finite and in (0, 1], got {}", tp.topk_frac);
+        }
+        if tp.compress == CompressKind::None
+            && (tp.quant != QuantKind::F32 || tp.error_feedback)
+        {
+            bail!(
+                "transport quant/error_feedback require compress = topk — lossy knobs are \
+                 never silently ignored"
+            );
+        }
+        if tp.is_active() && self.scheme == SchemeKind::Sl {
+            bail!(
+                "compressed transport requires a parallel scheme (ours|sfl) — sl uploads no \
+                 cohort deltas"
+            );
+        }
         Ok(())
     }
 
@@ -714,6 +782,18 @@ impl ExperimentConfig {
             a.buffer_k = s.parse_or("buffer_k", a.buffer_k)?;
             a.staleness_beta = s.parse_or("staleness_beta", a.staleness_beta)?;
         }
+        // A [transport] section configures compressed uploads.
+        if let Some(s) = doc.sections_named("transport").next() {
+            let tp = &mut cfg.transport;
+            if let Some(v) = s.get("compress") {
+                tp.compress = v.parse()?;
+            }
+            tp.topk_frac = s.parse_or("topk_frac", tp.topk_frac)?;
+            if let Some(v) = s.get("quant") {
+                tp.quant = v.parse()?;
+            }
+            tp.error_feedback = s.parse_or("error_feedback", tp.error_feedback)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -809,6 +889,13 @@ impl ExperimentConfig {
         out.push_str(&format!(
             "\n[async]\nenabled = {}\nstaleness_bound = {}\nbuffer_k = {}\nstaleness_beta = {}\n",
             a.enabled, a.staleness_bound, a.buffer_k, a.staleness_beta
+        ));
+        // The transport section always round-trips too — none is the
+        // dense upload path, bit-exactly.
+        let tp = &self.transport;
+        out.push_str(&format!(
+            "\n[transport]\ncompress = {}\ntopk_frac = {}\nquant = {}\nerror_feedback = {}\n",
+            tp.compress, tp.topk_frac, tp.quant, tp.error_feedback
         ));
         // A synthesized fleet round-trips through its spec (same seed ⇒
         // bit-identical fleet); only hand-written fleets list clients.
@@ -1220,6 +1307,74 @@ mod tests {
         // Async needs a parallel scheme.
         c.scheme = SchemeKind::Sl;
         assert!(c.validate().is_err(), "sl + async must be rejected");
+    }
+
+    #[test]
+    fn transport_kv_roundtrip_is_symmetric() {
+        let dir = std::env::temp_dir().join("sfl_cfg_transport_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("transport.exp");
+        // Non-default knobs round-trip...
+        let mut c = ExperimentConfig::paper();
+        c.transport = TransportConfig {
+            compress: CompressKind::TopK,
+            topk_frac: 0.05,
+            quant: QuantKind::Q8,
+            error_feedback: true,
+        };
+        c.validate().unwrap();
+        assert!(c.transport.is_active());
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.transport, c.transport);
+        // ...and so does the dense default — the [transport] section is
+        // always written, like [async].
+        let d = ExperimentConfig::paper();
+        std::fs::write(&path, d.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.transport, TransportConfig::default());
+        assert!(!back.transport.is_active());
+    }
+
+    #[test]
+    fn degenerate_topk_is_not_active() {
+        // k = 100%, f32, no EF never routes through the codec — the
+        // eager-twin invariant keeps it on the dense path entirely.
+        let tp = TransportConfig {
+            compress: CompressKind::TopK,
+            topk_frac: 1.0,
+            quant: QuantKind::F32,
+            error_feedback: false,
+        };
+        assert!(!tp.is_active());
+        assert!(TransportConfig { error_feedback: true, ..tp }.is_active());
+        assert!(TransportConfig { quant: QuantKind::Q8, ..tp }.is_active());
+        assert!(TransportConfig { topk_frac: 0.5, ..tp }.is_active());
+    }
+
+    #[test]
+    fn invalid_transport_specs_rejected() {
+        let mut c = ExperimentConfig::paper();
+        c.transport.compress = CompressKind::TopK;
+        c.transport.topk_frac = 0.0;
+        assert!(c.validate().is_err());
+        c.transport.topk_frac = 1.5;
+        assert!(c.validate().is_err());
+        c.transport.topk_frac = f64::NAN;
+        assert!(c.validate().is_err(), "NaN topk_frac must be rejected");
+        c.transport.topk_frac = 0.05;
+        c.transport.quant = QuantKind::Q8;
+        c.transport.error_feedback = true;
+        c.validate().unwrap();
+        // Lossy knobs without compress = topk would be silently ignored.
+        c.transport.compress = CompressKind::None;
+        assert!(c.validate().is_err(), "quant/EF without topk must be rejected");
+        c.transport = TransportConfig::default();
+        c.validate().unwrap();
+        // Compressed transport needs a parallel scheme.
+        c.transport.compress = CompressKind::TopK;
+        c.scheme = SchemeKind::Sl;
+        assert!(c.validate().is_err(), "sl + transport must be rejected");
     }
 
     #[test]

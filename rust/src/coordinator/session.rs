@@ -48,6 +48,7 @@ use crate::pool::{PoolStats, StatePool};
 use crate::runtime::{AdamState, ClientState, Engine, HeadState, ServerState};
 use crate::tensor::{ops, rng::Rng, store::ParamStore, HostTensor};
 use crate::trace::{EnvSnapshot, EnvTimeline, NoisyObservation, TraceKind};
+use crate::transport::{Codec, DecodeArena, TransportStats};
 use anyhow::{bail, Result};
 use std::path::Path;
 
@@ -230,6 +231,10 @@ pub struct RoundReport {
     /// Buffered-async merge counters (present iff `--async`): buffer
     /// size, staleness, and the absolute engine clock at the merge.
     pub asynchrony: Option<AsyncStats>,
+    /// Compressed-transport counters (present iff `[transport]` is
+    /// active) — the last merge's billed uplink/downlink bytes,
+    /// uplink compression ratio, and error-feedback residual norm.
+    pub transport: Option<TransportStats>,
     /// Present on eval rounds.
     pub eval: Option<EvalPoint>,
 }
@@ -274,6 +279,11 @@ pub trait Scheme {
     /// Robust-aggregation counters — `Some` only when the scheme runs
     /// the Byzantine-tolerant aggregation path.
     fn robust_stats(&self) -> Option<RobustStats> {
+        None
+    }
+    /// Compressed-transport counters — `Some` only when the scheme runs
+    /// the uplink codec (`[transport]` active).
+    fn transport_stats(&self) -> Option<TransportStats> {
         None
     }
     /// The shared parallel-scheme core, when the scheme has one — the
@@ -413,6 +423,18 @@ fn train_fingerprint(cfg: &ExperimentConfig) -> Vec<(&'static str, u64)> {
             ("async_staleness_beta", a.staleness_beta.to_bits()),
         ]);
     }
+    // Transport knobs change the merged numerics (lossy uplink) and the
+    // checkpoint key set (EF residuals), so they are fingerprinted —
+    // but only when active, keeping legacy layouts byte-stable.
+    let tp = &cfg.transport;
+    if tp.is_active() {
+        fp.extend_from_slice(&[
+            ("transport_compress", tp.compress.tag()),
+            ("transport_topk_frac", tp.topk_frac.to_bits()),
+            ("transport_quant", tp.quant.tag() as u64),
+            ("transport_error_feedback", tp.error_feedback as u64),
+        ]);
+    }
     fp
 }
 
@@ -493,6 +515,107 @@ struct RobustDefense {
     col: Vec<(f32, f32)>,
 }
 
+/// Uplink-compression state for the merge paths: the shared codec, the
+/// server-side decode arena, and a reusable wire buffer.  Built only
+/// when `[transport]` is active — degenerate settings (`--compress
+/// none`, or top-k at 100% / f32 / no error feedback) never construct
+/// one, so the dense path stays verbatim: numerics, traffic billing,
+/// and checkpoint layout are all bit-identical.
+struct TransportState {
+    codec: Codec,
+    /// Recycled decode scratch — one client-half set per merge
+    /// survivor, indexed by *accepted* position (compacted).
+    arena: DecodeArena,
+    /// Reused wire copy of the last encode, freeing the codec's payload
+    /// borrow before billing / verification / decode.
+    wire: Vec<u8>,
+    /// Per-merge hash-verification flags, parallel to the merge's
+    /// candidate list.
+    ok: Vec<bool>,
+    /// Last merge's telemetry (streamed in round reports).
+    stats: TransportStats,
+}
+
+impl TransportState {
+    /// One client's upload through the codec: encode its delta vs the
+    /// dispatch baseline, verify the content hash, and (on success)
+    /// decode the absolute client half into arena slot `slot`.  `sub`
+    /// overrides the resident client half (the fault injector's
+    /// rewritten submission); `base` overrides the baseline (async
+    /// merges encode against the version the client dispatched at).
+    /// Byte billing happens in the caller's fleet loop — uploads are
+    /// billed for the whole cohort, before server-side rejection.
+    /// Returns whether the payload passed verification — a `false` is
+    /// the sender's problem, not an error.
+    fn pass_one(
+        &mut self,
+        pool: &mut StatePool,
+        env: &SessionEnv<'_>,
+        slot: usize,
+        u: usize,
+        sub: Option<&AdapterSet>,
+        base: Option<&AdapterSet>,
+    ) -> Result<bool> {
+        let k = env.cuts[u];
+        {
+            let resident = pool.resident(u).ok_or_else(|| {
+                anyhow::anyhow!("participant {u} not resident at transport encode")
+            })?;
+            let x = sub.unwrap_or(&resident.cs.lora);
+            let b = base.unwrap_or_else(|| pool.baseline());
+            let (bv, _) = b.split_at_views(k)?;
+            self.codec.stage_delta(x, &bv)?;
+        }
+        {
+            let ef = if self.codec.error_feedback() { Some(pool.ef_mut(u)?) } else { None };
+            let payload = self.codec.encode_staged(ef)?;
+            self.wire.clear();
+            self.wire.extend_from_slice(payload);
+        }
+        // Integrity gate: nothing with a bad hash reaches the merge.
+        if !Codec::verify(&self.wire) {
+            return Ok(false);
+        }
+        let b = base.unwrap_or_else(|| pool.baseline());
+        let (bv, _) = b.split_at_views(k)?;
+        Codec::decode_into(&self.wire, &bv, self.arena.slot_mut(slot, &env.dims_exec, k))?;
+        Ok(true)
+    }
+}
+
+/// Bill one merge's fleet traffic: every cohort member's upload (at the
+/// codec's analytic encoded size when transport is active — uploads
+/// happen client-side, before any server-side rejection, so quarantined
+/// and hash-rejected senders still bill) plus the dense aggregate
+/// broadcast to the whole fleet.  Sizes come from the *timing* model's
+/// parameter counts, mirroring how dense uploads bill
+/// `dims_time.lora_bytes` regardless of the executed artifact.  Returns
+/// `(billed uplink, dense-equivalent uplink, downlink)` byte totals for
+/// the transport round stats.
+fn bill_merge_traffic(
+    env: &SessionEnv<'_>,
+    mask: &[bool],
+    transport: Option<&TransportState>,
+    traffic: &mut TrafficMeter,
+) -> (u64, u64, u64) {
+    let (mut up_billed, mut up_dense, mut down_bytes) = (0u64, 0u64, 0u64);
+    for (u, &k) in env.cuts.iter().enumerate() {
+        let dense = env.dims_time.lora_bytes(k);
+        if mask[u] {
+            let bytes = match transport {
+                Some(t) => t.codec.billed_bytes(k * env.dims_time.lora_params_per_layer()),
+                None => dense,
+            };
+            traffic.record(&Message::LoraUpload { bytes });
+            up_billed += bytes as u64;
+            up_dense += dense as u64;
+        }
+        traffic.record(&Message::LoraDownload { bytes: dense });
+        down_bytes += dense as u64;
+    }
+    (up_billed, up_dense, down_bytes)
+}
+
 /// The training state Ours and SFL share.  Public only so the
 /// [`Scheme::parallel_core`] escape hatch can name it from the trait;
 /// not part of the crate's intended API surface.
@@ -514,6 +637,11 @@ pub struct ParallelCore {
     order_buf: Vec<usize>,
     /// Byzantine-tolerant aggregation (`Some` iff `[robust]` is active).
     robust: Option<RobustDefense>,
+    /// Compressed update transport (`Some` iff `[transport]` is active).
+    /// The only durable state is the per-client error-feedback
+    /// residual, which lives in (and checkpoints with) the pool.
+    // sflint:allow(checkpoint-coverage, EF residuals ride the pool; codec/arena are per-merge scratch)
+    transport: Option<TransportState>,
     /// Who the last merge actually kept, with their *final* normalized
     /// weights (post sanitize/quarantine/decay).  The async engine
     /// delta-corrects stale survivors with exactly these weights — the
@@ -529,7 +657,7 @@ impl ParallelCore {
     fn new(env: &SessionEnv<'_>) -> Result<Self> {
         let full = env.engine.initial_lora()?;
         let head = env.engine.initial_head()?;
-        let pool = StatePool::new(
+        let mut pool = StatePool::new(
             &env.dims_exec,
             &env.cuts,
             full,
@@ -561,6 +689,19 @@ impl ParallelCore {
                 col: Vec::with_capacity(env.cuts.len()),
             }
         });
+        let tcfg = &env.cfg.transport;
+        let transport = tcfg.is_active().then(|| TransportState {
+            codec: Codec::new(tcfg.topk_frac, tcfg.quant, tcfg.error_feedback),
+            arena: DecodeArena::new(),
+            wire: Vec::new(),
+            ok: Vec::with_capacity(env.cuts.len()),
+            stats: TransportStats::default(),
+        });
+        if tcfg.is_active() && tcfg.error_feedback {
+            // EF residuals live in the pool like Adam state: spilled,
+            // reloaded, and checkpointed bit-exactly per client.
+            pool.enable_error_feedback();
+        }
         Ok(Self {
             pool,
             sched: make_scheduler(env.cfg.scheduler, env.cfg.train.seed),
@@ -569,6 +710,7 @@ impl ParallelCore {
             switches: 0,
             order_buf: Vec::with_capacity(env.cuts.len()),
             robust,
+            transport,
             merge_survivors: Vec::with_capacity(env.cuts.len()),
             merge_weights: Vec::with_capacity(env.cuts.len()),
         })
@@ -602,17 +744,40 @@ impl ParallelCore {
                 ctx.traffic,
                 ctx.scratch,
             )?;
-            timing::aggregation_time_for(
-                &env.dims_time,
-                &env.cfg.clients,
-                &env.cuts,
-                ctx.participants,
-                ctx.timeline,
-            )
+            self.aggregation_elapsed(env, ctx.participants, ctx.timeline)
         } else {
             0.0
         };
         Ok(RoundOutcome { train_elapsed, agg_elapsed, mean_loss })
+    }
+
+    /// Aggregation-phase virtual time for `participants`: dense up +
+    /// down transfers historically, or the codec's shrunken uplink when
+    /// transport is active (the aggregate broadcast stays dense either
+    /// way — every client needs every coordinate).
+    fn aggregation_elapsed(
+        &self,
+        env: &SessionEnv<'_>,
+        participants: &[usize],
+        timeline: &EnvTimeline,
+    ) -> f64 {
+        match self.transport.as_ref() {
+            Some(tp) => timing::aggregation_time_split(
+                &env.dims_time,
+                &env.cfg.clients,
+                &env.cuts,
+                participants,
+                timeline,
+                &|k| tp.codec.billed_bytes(k * env.dims_time.lora_params_per_layer()),
+            ),
+            None => timing::aggregation_time_for(
+                &env.dims_time,
+                &env.cfg.clients,
+                &env.cuts,
+                participants,
+                timeline,
+            ),
+        }
     }
 
     /// `steps_per_round` mini-batch steps per participant, all in
@@ -751,7 +916,7 @@ impl ParallelCore {
         traffic: &mut TrafficMeter,
         scratch: &mut RoundScratch,
     ) -> Result<()> {
-        if self.merge_updates(env, round, participants, None, faults, traffic, scratch)? {
+        if self.merge_updates(env, round, participants, None, None, faults, traffic, scratch)? {
             self.pool.apply_aggregate(&scratch.agg_full, &scratch.head)?;
         }
         Ok(())
@@ -771,31 +936,69 @@ impl ParallelCore {
         round: u64,
         participants: &[usize],
         decay: Option<&[f32]>,
+        bases: Option<&[&AdapterSet]>,
         faults: Option<&mut FaultInjector>,
         traffic: &mut TrafficMeter,
         scratch: &mut RoundScratch,
     ) -> Result<bool> {
         if self.robust.is_some() {
-            return self.merge_robust(env, round, participants, decay, faults, traffic, scratch);
+            return self
+                .merge_robust(env, round, participants, decay, bases, faults, traffic, scratch);
         }
-        // `None` keeps the exact historical arithmetic; `Some` folds the
-        // decay into each weight before the same normalization.
-        let total: f32 = match decay {
-            Some(d) => {
-                participants.iter().zip(d).map(|(&u, &f)| env.data.weight(u) * f).sum()
+        // Transport pass: each upload crosses the wire through the
+        // codec — encode, verify the content hash, decode into the
+        // arena (compacted by accepted position).  With the codec
+        // inactive every position is trivially accepted and the
+        // historical dense arithmetic below runs untouched.
+        if let Some(tp) = self.transport.as_mut() {
+            tp.codec.round_reset();
+            tp.ok.clear();
+            tp.ok.resize(participants.len(), false);
+            let mut kept = 0usize;
+            for (i, &u) in participants.iter().enumerate() {
+                let base = bases.map(|b| b[i]);
+                let ok = tp.pass_one(&mut self.pool, env, kept, u, None, base)?;
+                tp.ok[i] = ok;
+                if ok {
+                    kept += 1;
+                }
             }
-            None => participants.iter().map(|&u| env.data.weight(u)).sum(),
+        }
+        let tp = self.transport.as_ref();
+        // `None` keeps the exact historical arithmetic; `Some` folds the
+        // decay into each weight before the same normalization.  Only
+        // hash-verified positions carry weight (all of them when the
+        // codec is off — rejection requires an active transport).
+        let total: f32 = match decay {
+            Some(d) => participants
+                .iter()
+                .zip(d)
+                .enumerate()
+                .filter(|&(i, _)| tp.map_or(true, |t| t.ok[i]))
+                .map(|(_, (&u, &f))| env.data.weight(u) * f)
+                .sum(),
+            None => participants
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| tp.map_or(true, |t| t.ok[i]))
+                .map(|(_, &u)| env.data.weight(u))
+                .sum(),
         };
         self.merge_survivors.clear();
         self.merge_weights.clear();
-        {
+        let merged = {
+            let arena = tp.map(|t| &t.arena);
             let mut contribs: Vec<(f32, &AdapterSet, &AdapterSet)> =
                 Vec::with_capacity(participants.len());
             let mut head_pairs_w: Vec<(f32, &HostTensor)> =
                 Vec::with_capacity(participants.len());
             let mut head_pairs_b: Vec<(f32, &HostTensor)> =
                 Vec::with_capacity(participants.len());
+            let mut kept = 0usize;
             for (i, &u) in participants.iter().enumerate() {
+                if !tp.map_or(true, |t| t.ok[i]) {
+                    continue;
+                }
                 let slot = self.pool.resident(u).ok_or_else(|| {
                     anyhow::anyhow!("participant {u} not resident at aggregation")
                 })?;
@@ -806,27 +1009,42 @@ impl ParallelCore {
                 let w = raw / total;
                 self.merge_survivors.push(u);
                 self.merge_weights.push(w);
-                contribs.push((w, &slot.cs.lora, &slot.ss.lora));
+                // The merge consumes what actually crossed the wire:
+                // the decoded (lossy) client half when transport is on.
+                let client = match arena {
+                    Some(a) => a.get(kept),
+                    None => &slot.cs.lora,
+                };
+                kept += 1;
+                contribs.push((w, client, &slot.ss.lora));
                 head_pairs_w.push((w, &slot.ss.head.w));
                 head_pairs_b.push((w, &slot.ss.head.b));
             }
-            fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
-            ops::weighted_sum_into(&head_pairs_w, &mut scratch.head.w)?;
-            ops::weighted_sum_into(&head_pairs_b, &mut scratch.head.b)?;
-        }
+            // All-rejected (only possible with an active transport) ⇒
+            // the model stands; the historical path merges always.
+            let merged = tp.is_none() || !contribs.is_empty();
+            if merged {
+                fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
+                ops::weighted_sum_into(&head_pairs_w, &mut scratch.head.w)?;
+                ops::weighted_sum_into(&head_pairs_b, &mut scratch.head.b)?;
+            }
+            merged
+        };
         // O(n) membership mask; traffic is billed for the whole fleet
-        // exactly as the eager path did.
+        // exactly as the eager path did, at the encoded size when
+        // transport is active — uploads happen before any server-side
+        // rejection, so the whole cohort bills, not just survivors.
         scratch.mask.iter_mut().for_each(|m| *m = false);
         for &u in participants {
             scratch.mask[u] = true;
         }
-        for (u, &k) in env.cuts.iter().enumerate() {
-            if scratch.mask[u] {
-                traffic.record(&Message::LoraUpload { bytes: env.dims_time.lora_bytes(k) });
-            }
-            traffic.record(&Message::LoraDownload { bytes: env.dims_time.lora_bytes(k) });
+        let (up_billed, up_dense, down_bytes) =
+            bill_merge_traffic(env, &scratch.mask, self.transport.as_ref(), traffic);
+        if let Some(t) = self.transport.as_mut() {
+            t.codec.note_upload(up_billed, up_dense);
+            t.stats = t.codec.round_stats(down_bytes);
         }
-        Ok(true)
+        Ok(merged)
     }
 
     /// Byzantine-tolerant merge: stage (possibly tampered) submissions
@@ -843,6 +1061,7 @@ impl ParallelCore {
         round: u64,
         participants: &[usize],
         decay: Option<&[f32]>,
+        bases: Option<&[&AdapterSet]>,
         mut faults: Option<&mut FaultInjector>,
         traffic: &mut TrafficMeter,
         scratch: &mut RoundScratch,
@@ -918,18 +1137,81 @@ impl ParallelCore {
             rb.survivors.retain(|&u| !committee.is_quarantined(u));
             rb.stats.quarantined = rb.committee.quarantined_count();
         }
+        // 3½. Transport decode: each surviving upload crosses the wire
+        // through the codec.  A hash mismatch is hard evidence of
+        // tampering — the sender is flagged into quarantine exactly
+        // like a witness-caught liar, and its payload never reaches the
+        // sanitizer or the merge kernel.  Accepted payloads land in the
+        // decode arena, compacted by accepted position (aligned with
+        // the retained survivor list below).
+        let inj = faults.as_deref();
+        if let Some(tp) = self.transport.as_mut() {
+            tp.codec.round_reset();
+            tp.ok.clear();
+            tp.ok.resize(rb.survivors.len(), false);
+            let mut kept = 0usize;
+            for (i, &u) in rb.survivors.iter().enumerate() {
+                let sub = inj.and_then(|j| j.submission(u)).map(|(c, _)| c);
+                let base = match bases {
+                    Some(bs) => {
+                        let p = participants.iter().position(|&p| p == u).ok_or_else(|| {
+                            anyhow::anyhow!("survivor {u} not among the merge participants")
+                        })?;
+                        Some(bs[p])
+                    }
+                    None => None,
+                };
+                let ok = tp.pass_one(pool, env, kept, u, sub, base)?;
+                tp.ok[i] = ok;
+                if ok {
+                    kept += 1;
+                } else {
+                    rb.committee.flag(u, round);
+                    rb.stats.flagged += 1;
+                }
+            }
+            let ok = &tp.ok;
+            let mut i = 0;
+            rb.survivors.retain(|_| {
+                let keep = ok[i];
+                i += 1;
+                keep
+            });
+            rb.stats.quarantined = rb.committee.quarantined_count();
+        }
+        // Traffic: billed for the original participants exactly like
+        // the plain path — uploads happen client-side, before any
+        // server-side rejection, at the encoded size when transport is
+        // on.  (Meter totals are order-independent, so billing here —
+        // before the sanitizer — matches the historical totals.)
+        scratch.mask.iter_mut().for_each(|m| *m = false);
+        for &u in participants {
+            scratch.mask[u] = true;
+        }
+        let (up_billed, up_dense, down_bytes) =
+            bill_merge_traffic(env, &scratch.mask, self.transport.as_ref(), traffic);
+        if let Some(t) = self.transport.as_mut() {
+            t.codec.note_upload(up_billed, up_dense);
+            t.stats = t.codec.round_stats(down_bytes);
+        }
         // 4. Gather the surviving submissions with their raw data
         // weights (normalized after sanitization, over what's kept).
-        let inj = faults.as_deref();
+        // With transport active the client half is the *decoded* one —
+        // the merge consumes what actually crossed the wire.
+        let arena = self.transport.as_ref().map(|t| &t.arena);
         let mut subs: Vec<(f32, &AdapterSet, &AdapterSet)> =
             Vec::with_capacity(rb.survivors.len());
-        for &u in &rb.survivors {
+        for (i, &u) in rb.survivors.iter().enumerate() {
             let slot = pool
                 .resident(u)
                 .ok_or_else(|| anyhow::anyhow!("participant {u} not resident at aggregation"))?;
-            let (c, s) = match inj.and_then(|i| i.submission(u)) {
+            let (c, s) = match inj.and_then(|j| j.submission(u)) {
                 Some(pair) => pair,
                 None => (&slot.cs.lora, &slot.ss.lora),
+            };
+            let c = match arena {
+                Some(a) => a.get(i),
+                None => c,
             };
             // Staleness decay (async merges) folds into the raw weight,
             // indexed by the survivor's position in `participants`.
@@ -969,18 +1251,6 @@ impl ParallelCore {
                     k
                 });
             }
-        }
-        // Traffic: billed for the original participants exactly like the
-        // plain path — uploads happen before server-side rejection.
-        scratch.mask.iter_mut().for_each(|m| *m = false);
-        for &u in participants {
-            scratch.mask[u] = true;
-        }
-        for (u, &k) in env.cuts.iter().enumerate() {
-            if scratch.mask[u] {
-                traffic.record(&Message::LoraUpload { bytes: env.dims_time.lora_bytes(k) });
-            }
-            traffic.record(&Message::LoraDownload { bytes: env.dims_time.lora_bytes(k) });
         }
         // 6. Nothing trustworthy left ⇒ skip the model update entirely
         // (the cohort keeps training from the unchanged baseline).
@@ -1044,6 +1314,10 @@ impl ParallelCore {
 
     fn robust_stats(&self) -> Option<RobustStats> {
         self.robust.as_ref().map(|rb| rb.stats)
+    }
+
+    fn transport_stats(&self) -> Option<TransportStats> {
+        self.transport.as_ref().map(|tp| tp.stats)
     }
 
     fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
@@ -1161,6 +1435,10 @@ impl Scheme for OursScheme {
         self.core.robust_stats()
     }
 
+    fn transport_stats(&self) -> Option<TransportStats> {
+        self.core.transport_stats()
+    }
+
     fn parallel_core(&mut self) -> Option<&mut ParallelCore> {
         Some(&mut self.core)
     }
@@ -1224,6 +1502,10 @@ impl Scheme for SflScheme {
 
     fn robust_stats(&self) -> Option<RobustStats> {
         self.core.robust_stats()
+    }
+
+    fn transport_stats(&self) -> Option<TransportStats> {
+        self.core.transport_stats()
     }
 
     fn parallel_core(&mut self) -> Option<&mut ParallelCore> {
@@ -1632,6 +1914,18 @@ impl<'e> Session<'e> {
         self.scheme.pool_stats()
     }
 
+    /// Test hook: corrupt the next `n` transport payloads after hashing
+    /// (via [`Codec::tamper_next`]), so server-side verification
+    /// rejects them.  No-op when `[transport]` is inactive.
+    #[doc(hidden)]
+    pub fn transport_tamper_next(&mut self, n: u32) {
+        if let Some(core) = self.scheme.parallel_core() {
+            if let Some(tp) = core.transport.as_mut() {
+                tp.codec.tamper_next(n);
+            }
+        }
+    }
+
     /// True once the run should stop: convergence detected or
     /// `max_rounds` reached.  (`step_round` may still be called past
     /// this point to train further.)
@@ -1852,6 +2146,7 @@ impl<'e> Session<'e> {
             pool: self.scheme.pool_stats(),
             robust: self.scheme.robust_stats(),
             asynchrony: None,
+            transport: self.scheme.transport_stats(),
             eval,
         };
         for obs in &mut self.observers {
@@ -2020,11 +2315,31 @@ impl<'e> Session<'e> {
             for &u in &ab.parts {
                 core.pool.acquire(u, &env.data)?;
             }
+            // With transport active each upload is encoded against the
+            // baseline its sender dispatched from (b_v) — the decoded
+            // absolute update then feeds the existing delta-correction
+            // below unchanged.
+            let mut base_refs: Vec<&AdapterSet> = Vec::new();
+            if core.transport.is_some() {
+                base_refs.reserve(ab.parts.len());
+                for &u in &ab.parts {
+                    let v = ab.versions.client_version(u);
+                    let (_, base, _) = ab
+                        .baselines
+                        .iter()
+                        .find(|(ver, _, _)| *ver == v)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("no baseline snapshot for model version {v}")
+                        })?;
+                    base_refs.push(base);
+                }
+            }
             let merged_ok = core.merge_updates(
                 env,
                 round as u64,
                 &ab.parts,
                 Some(&ab.decay),
+                (!base_refs.is_empty()).then_some(base_refs.as_slice()),
                 b.faults.as_mut(),
                 &mut b.traffic,
                 &mut b.scratch,
@@ -2099,13 +2414,7 @@ impl<'e> Session<'e> {
             if b.timeline.is_active() {
                 b.timeline.advance(now);
             }
-            let agg_elapsed = timing::aggregation_time_for(
-                &env.dims_time,
-                &env.cfg.clients,
-                &env.cuts,
-                &ab.parts,
-                &b.timeline,
-            );
+            let agg_elapsed = core.aggregation_elapsed(env, &ab.parts, &b.timeline);
             for &u in &ab.parts {
                 b.engine.schedule(now + agg_elapsed, Event::ClientArrival { client: u });
             }
@@ -2162,6 +2471,7 @@ impl<'e> Session<'e> {
             pool: self.scheme.pool_stats(),
             robust: self.scheme.robust_stats(),
             asynchrony: Some(stats),
+            transport: self.scheme.transport_stats(),
             eval,
         };
         for obs in &mut self.observers {

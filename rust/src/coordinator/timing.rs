@@ -366,6 +366,29 @@ pub fn aggregation_time_for(
         .fold(0.0, f64::max)
 }
 
+/// [`aggregation_time_for`] with asymmetric legs: the uplink carries
+/// `up_bytes(cut)` (a compressed-transport payload) while the aggregate
+/// broadcast stays dense.  With `up_bytes = dims.lora_bytes` this is
+/// bit-identical to [`aggregation_time_for`] (`x * 2.0 == x + x` in
+/// IEEE-754, tested below).
+pub fn aggregation_time_split(
+    dims: &ModelDims,
+    clients: &[ClientConfig],
+    cuts: &[usize],
+    participants: &[usize],
+    env: &EnvTimeline,
+    up_bytes: &dyn Fn(usize) -> usize,
+) -> f64 {
+    participants
+        .iter()
+        .map(|&u| {
+            let link = &clients[u].link;
+            (link.transfer_time(up_bytes(cuts[u])) + link.transfer_time(dims.lora_bytes(cuts[u])))
+                / env.link_mult(u).max(1e-6)
+        })
+        .fold(0.0, f64::max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -521,6 +544,25 @@ mod tests {
         let a = sl_round(&dims, &sub_clients, &sub_cuts, &server, 2);
         let b = sl_round_for(&dims, &clients, &cuts, &server, 2, &subset, &env);
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn split_aggregation_degenerates_to_symmetric() {
+        // With a dense uplink the asymmetric variant is bit-identical
+        // to the `* 2.0` original; a smaller uplink strictly shortens
+        // the phase (down to no less than the dense download leg).
+        let (dims, clients, cuts, _) = setup();
+        let ids: Vec<usize> = (0..clients.len()).collect();
+        let env = EnvTimeline::inactive();
+        let sym = aggregation_time_for(&dims, &clients, &cuts, &ids, &env);
+        let split =
+            aggregation_time_split(&dims, &clients, &cuts, &ids, &env, &|k| dims.lora_bytes(k));
+        assert_eq!(sym.to_bits(), split.to_bits());
+        let tenth =
+            aggregation_time_split(&dims, &clients, &cuts, &ids, &env, &|k| {
+                dims.lora_bytes(k) / 10
+            });
+        assert!(tenth < sym && tenth > sym / 2.0, "tenth {tenth} vs sym {sym}");
     }
 
     #[test]

@@ -45,4 +45,5 @@ pub mod simclock;
 pub mod telemetry;
 pub mod tensor;
 pub mod trace;
+pub mod transport;
 pub mod util;

@@ -40,6 +40,10 @@
 //! through the discrete-event engine with buffered bounded-staleness
 //! aggregation; --staleness-bound S (seconds), --buffer-k K, and
 //! --staleness-beta B tune the merge trigger and staleness decay.
+//! Compressed uplink (EXPERIMENTS.md §Transport): --compress none|topk
+//! --topk-frac F --quant f32|q8|q4 --error-feedback ship each client's
+//! LoRA delta as a sparse quantized hash-sealed payload (billed at its
+//! encoded size; degenerate settings stay bit-identical to dense).
 
 use anyhow::{bail, Result};
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
@@ -60,7 +64,8 @@ const USAGE: &str = "usage: sfl [--config mini|small] [--artifacts DIR] [--out D
 [--attack-frac P] [--attack-lambda L] [--agg mean|trimmed|clip] [--trim K] [--clip C] \
 [--sanitize] [--sanitize-mult M] [--verify-frac P] [--winsor K] [--quarantine-ttl N] \
 [--timing-ewma-alpha A|adaptive] [--async] [--staleness-bound S] [--buffer-k K] \
-[--staleness-beta B] <run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
+[--staleness-beta B] [--compress none|topk] [--topk-frac F] [--quant f32|q8|q4] \
+[--error-feedback] <run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
 [--scheduler proposed|fifo|wf|random] [--max-rounds N] [--quiet] [--oracle-timing] \
 [--jsonl FILE]";
 
@@ -193,6 +198,21 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(b) = args.get_parse::<f64>("staleness-beta")? {
         cfg.asynchrony.staleness_beta = b;
+    }
+    // Compressed update transport (EXPERIMENTS.md §Transport).
+    if let Some(kind) = args.get("compress") {
+        cfg.transport.compress = kind.parse()?;
+    } else if ["topk-frac", "quant", "error-feedback"].iter().any(|f| args.has(f)) {
+        bail!("--topk-frac/--quant/--error-feedback require --compress topk");
+    }
+    if let Some(f) = args.get_parse::<f64>("topk-frac")? {
+        cfg.transport.topk_frac = f;
+    }
+    if let Some(q) = args.get("quant") {
+        cfg.transport.quant = q.parse()?;
+    }
+    if args.has("error-feedback") {
+        cfg.transport.error_feedback = true;
     }
     cfg.validate()?;
     Ok(cfg)

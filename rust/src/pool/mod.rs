@@ -78,6 +78,11 @@ pub struct ClientSlot {
     pub cs: ClientState,
     pub ss: ServerState,
     pub it: BatchIter,
+    /// Transport error-feedback residual over the client-half LoRA
+    /// (flat, `cs.lora.param_count()` long) — empty unless the pool was
+    /// built with error feedback enabled.  Rides evict/rematerialize
+    /// and checkpoints exactly like the Adam moments.
+    pub ef: Vec<f32>,
     /// Round stamp for LRU eviction.
     last_used: u64,
     /// False iff the LoRA/head provably equal the pool baseline (set
@@ -97,6 +102,10 @@ struct Spill {
     lora_c: Option<Vec<f32>>,
     lora_s: Option<Vec<f32>>,
     head: Option<Vec<f32>>,
+    /// Transport error-feedback residual — unlike the LoRA/head
+    /// segments it is never derivable from the baseline, so it always
+    /// rides the spill (empty when error feedback is off).
+    ef: Vec<f32>,
     iter_indices: Vec<usize>,
     iter_cursor: usize,
     iter_rng: u64,
@@ -106,6 +115,7 @@ impl Spill {
     fn payload_bytes(&self) -> u64 {
         let f32s = self.adam_c.len()
             + self.adam_s.len()
+            + self.ef.len()
             + self.lora_c.as_ref().map_or(0, Vec::len)
             + self.lora_s.as_ref().map_or(0, Vec::len)
             + self.head.as_ref().map_or(0, Vec::len);
@@ -164,13 +174,18 @@ pub struct StatePool {
     peak_resident_bytes: u64,
     // sflint:allow(checkpoint-coverage, telemetry counter, not run state)
     spill_bytes: u64,
+    /// True once [`StatePool::enable_error_feedback`] ran: every slot
+    /// carries a transport EF residual and checkpoints gain the
+    /// per-client `scheme.c{u}.ef` keys (legacy layouts stay byte-
+    /// stable when off).  Covered in save_state/load_state.
+    ef_active: bool,
 }
 
 /// Resize a tensor's leading axis in place — no `HostTensor`
 /// constructor runs, so recycling a buffer across cut depths never
 /// counts against the allocation gates (the payload `Vec` keeps its
 /// high-water capacity after the first deep materialization).
-fn reshape_rows(t: &mut HostTensor, rows: usize) {
+pub(crate) fn reshape_rows(t: &mut HostTensor, rows: usize) {
     if t.shape.first() == Some(&rows) {
         return;
     }
@@ -252,6 +267,7 @@ impl StatePool {
             resident_bytes: 0,
             peak_resident_bytes: 0,
             spill_bytes: 0,
+            ef_active: false,
         };
         if cap == 0 {
             for u in 0..n {
@@ -318,6 +334,30 @@ impl StatePool {
     /// the async engine snapshots both per model version).
     pub fn baseline_head(&self) -> &HeadState {
         &self.baseline_head
+    }
+
+    /// Turn on transport error-feedback residuals: every slot
+    /// (present and future) carries a zero-initialized flat residual
+    /// over its client-half LoRA.  Called once at session construction
+    /// when the transport config is active with `--error-feedback`;
+    /// idempotent.
+    pub fn enable_error_feedback(&mut self) {
+        self.ef_active = true;
+        for slot in self.slots.iter_mut() {
+            if slot.ef.is_empty() {
+                slot.ef.resize(slot.cs.lora.param_count(), 0.0);
+            }
+        }
+    }
+
+    /// The transport codec's mutable handle on a resident client's
+    /// error-feedback residual (the client must have been acquired this
+    /// round, so residency is an invariant, not a race).
+    pub fn ef_mut(&mut self, u: usize) -> Result<&mut Vec<f32>> {
+        match self.entries.get(u) {
+            Some(Entry::Resident(i)) => Ok(&mut self.slots[*i].ef),
+            _ => bail!("client {u} is not resident; acquire before ef_mut"),
+        }
     }
 
     /// Borrow a client's slot if (and only if) it is resident.
@@ -478,10 +518,11 @@ impl StatePool {
         cs: ClientState,
         ss: ServerState,
         it: BatchIter,
+        ef: Vec<f32>,
         dirty: bool,
     ) {
         let idx = self.slots.len();
-        self.slots.push(ClientSlot { client: u, cs, ss, it, last_used: self.round, dirty });
+        self.slots.push(ClientSlot { client: u, cs, ss, it, ef, last_used: self.round, dirty });
         self.entries[u] = Entry::Resident(idx);
         let bytes = self.bytes_per_client();
         self.resident_bytes += bytes;
@@ -509,7 +550,8 @@ impl StatePool {
         data.shard_into(u, &mut self.shard_scratch);
         let it =
             BatchIter::new(&self.shard_scratch, self.dims.batch, self.iter_seed_base + u as u64);
-        self.push_slot(u, cs, ss, it, false);
+        let ef = if self.ef_active { vec![0.0; cs.lora.param_count()] } else { Vec::new() };
+        self.push_slot(u, cs, ss, it, ef, false);
         Ok(())
     }
 
@@ -526,7 +568,7 @@ impl StatePool {
         let mut it = BatchIter::new(&[], self.dims.batch, 0);
         let sp = *sp;
         it.restore_state(sp.iter_indices, sp.iter_cursor, sp.iter_rng);
-        self.push_slot(u, cs, ss, it, dirty);
+        self.push_slot(u, cs, ss, it, sp.ef, dirty);
         Ok(())
     }
 
@@ -562,6 +604,7 @@ impl StatePool {
             lora_c,
             lora_s,
             head,
+            ef: slot.ef,
             iter_indices: indices.to_vec(),
             iter_cursor: cursor,
             iter_rng: rng,
@@ -790,6 +833,12 @@ impl StatePool {
                     out.push((format!("scheme.s{u}.step"), encode_u64s("step", &[slot.ss.step])));
                     let (indices, cursor, rng) = slot.it.state();
                     save_iter_state(out, u, indices, cursor, rng);
+                    if self.ef_active {
+                        out.push((
+                            format!("scheme.c{u}.ef"),
+                            HostTensor::f32("ef", vec![slot.ef.len()], slot.ef.clone()),
+                        ));
+                    }
                 }
                 Entry::Spilled(sp) => self.export_spill(u, sp, out)?,
                 Entry::Fresh => unreachable!("fresh entries are filtered above"),
@@ -820,6 +869,12 @@ impl StatePool {
         save_adam(out, &format!("scheme.s{u}.adam"), &ss.adam);
         out.push((format!("scheme.s{u}.step"), encode_u64s("step", &[ss.step])));
         save_iter_state(out, u, &sp.iter_indices, sp.iter_cursor, sp.iter_rng);
+        if self.ef_active {
+            out.push((
+                format!("scheme.c{u}.ef"),
+                HostTensor::f32("ef", vec![sp.ef.len()], sp.ef.clone()),
+            ));
+        }
         Ok(())
     }
 
@@ -857,6 +912,7 @@ impl StatePool {
             ops::copy_from(&mut slot.ss.head.b, &self.baseline_head.b)?;
             slot.dirty = false;
         }
+        let ef_active = self.ef_active;
         for &id in &raw {
             let u = id as usize;
             let slot = self.acquire(u, data)?;
@@ -869,6 +925,18 @@ impl StatePool {
             load_iter_state(store, u, &mut slot.it)?;
             slot.cs.step = one_u64(store, &format!("scheme.c{u}.step"))?;
             slot.ss.step = one_u64(store, &format!("scheme.s{u}.step"))?;
+            if ef_active {
+                let ef = store.get(&format!("scheme.c{u}.ef"))?.as_f32()?;
+                let want = slot.cs.lora.param_count();
+                if ef.len() != want {
+                    bail!(
+                        "client {u} checkpoint EF residual has {} coords, expected {want}",
+                        ef.len()
+                    );
+                }
+                slot.ef.clear();
+                slot.ef.extend_from_slice(ef);
+            }
             slot.dirty = true;
         }
         Ok(())
@@ -1205,6 +1273,49 @@ mod tests {
         // clients are materialized.
         assert!(back.resident(0).is_none());
         assert_eq!(back.stats().resident + back.stats().spilled, 3);
+    }
+
+    #[test]
+    fn error_feedback_residuals_ride_spill_and_checkpoint() {
+        let (mut pool, data) = setup(8, 1);
+        pool.enable_error_feedback();
+        pool.begin_round(1, 1).unwrap();
+        let slot = pool.acquire(3, &data).unwrap();
+        let n = slot.cs.lora.param_count();
+        assert_eq!(slot.ef.len(), n, "EF residual sized on materialization");
+        for (j, r) in slot.ef.iter_mut().enumerate() {
+            *r = j as f32 * 0.125 - 1.0;
+        }
+        let want: Vec<f32> = pool.resident(3).unwrap().ef.clone();
+        // Evict → spill carries the residual → reload is bit-exact.
+        pool.begin_round(2, 1).unwrap();
+        pool.acquire(0, &data).unwrap();
+        assert!(pool.resident(3).is_none());
+        pool.begin_round(3, 1).unwrap();
+        assert_eq!(pool.acquire(3, &data).unwrap().ef, want);
+        // Checkpoint carries scheme.c{u}.ef and restores bit-exactly
+        // into an EF-enabled pool.
+        let mut named: Vec<(String, HostTensor)> = Vec::new();
+        pool.save_state(&mut named).unwrap();
+        assert!(named.iter().any(|(k, _)| k == "scheme.c3.ef"));
+        let dir = std::env::temp_dir().join("sfl_pool_ef_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pool.sflp");
+        let borrowed: Vec<(&str, &HostTensor)> =
+            named.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        write_sflp(&path, &borrowed).unwrap();
+        let (mut back, data_b) = setup(8, 1);
+        back.enable_error_feedback();
+        let store = ParamStore::load(&path).unwrap();
+        back.load_state(&store, &data_b).unwrap();
+        assert_eq!(back.acquire(3, &data_b).unwrap().ef, want);
+        // With EF off the legacy checkpoint layout is untouched.
+        let (mut plain, data_p) = setup(8, 1);
+        plain.begin_round(1, 1).unwrap();
+        plain.acquire(3, &data_p).unwrap();
+        let mut legacy: Vec<(String, HostTensor)> = Vec::new();
+        plain.save_state(&mut legacy).unwrap();
+        assert!(!legacy.iter().any(|(k, _)| k.ends_with(".ef")));
     }
 
     #[test]

@@ -94,11 +94,22 @@ impl<W: Write> RoundObserver for JsonLinesObserver<W> {
             ),
             None => String::new(),
         };
+        // Compressed-transport counters (present when `[transport]` is
+        // active): billed bytes per direction, uplink compression
+        // ratio, and the error-feedback residual norm.
+        let transport = match &r.transport {
+            Some(t) => format!(
+                ",\"transport\":{{\"up_bytes\":{},\"down_bytes\":{},\"ratio\":{:.6},\
+                 \"ef_norm\":{:.6}}}",
+                t.up_bytes, t.down_bytes, t.ratio, t.ef_norm
+            ),
+            None => String::new(),
+        };
         let wrote = writeln!(
             self.out,
             "{{\"event\":\"round\",\"scheme\":\"{}\",\"scheduler\":\"{}\",\"round\":{},\
              \"sim_time\":{:.6},\"step_time\":{:.6},\"mean_loss\":{:.6},\
-             \"participants\":{}{env}{pool}{robust}{asynchrony}{eval}}}",
+             \"participants\":{}{env}{pool}{robust}{asynchrony}{transport}{eval}}}",
             r.scheme,
             r.scheduler,
             r.round,
@@ -296,6 +307,7 @@ mod tests {
                 pool: None,
                 robust: None,
                 asynchrony: None,
+                transport: None,
                 eval: Some(EvalPoint { acc: 0.5, f1: 0.4, converged: false }),
             });
             let r = fake_run();
@@ -340,6 +352,7 @@ mod tests {
                 }),
                 robust: None,
                 asynchrony: None,
+                transport: None,
                 eval: None,
             });
         }
@@ -368,6 +381,7 @@ mod tests {
                 pool: None,
                 robust: None,
                 asynchrony: None,
+                transport: None,
                 eval: None,
             });
         }
@@ -401,6 +415,7 @@ mod tests {
                     trim_count: 4,
                 }),
                 asynchrony: None,
+                transport: None,
                 eval: None,
             });
         }
@@ -433,11 +448,45 @@ mod tests {
                     max_staleness: 2,
                     wall_clock: 41.25,
                 }),
+                transport: None,
                 eval: None,
             });
         }
         let s = String::from_utf8(buf).unwrap();
         assert!(s.contains("\"async\":{\"buffered\":3,\"merged\":3"), "{s}");
         assert!(s.contains("\"max_staleness\":2,\"wall_clock\":41.250000}"), "{s}");
+    }
+
+    #[test]
+    fn json_lines_observer_emits_transport_counters_when_active() {
+        use crate::coordinator::RoundReport;
+        use crate::transport::TransportStats;
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut obs = JsonLinesObserver::new(&mut buf);
+            obs.on_round(&RoundReport {
+                scheme: SchemeKind::Ours,
+                scheduler: SchedulerLabel::Scheduled(SchedulerKind::Proposed),
+                round: 6,
+                sim_time: 50.0,
+                step_time: 2.0,
+                mean_loss: 0.4,
+                participants: vec![0, 1],
+                env: None,
+                pool: None,
+                robust: None,
+                asynchrony: None,
+                transport: Some(TransportStats {
+                    up_bytes: 1234,
+                    down_bytes: 65536,
+                    ratio: 12.5,
+                    ef_norm: 0.03125,
+                }),
+                eval: None,
+            });
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("\"transport\":{\"up_bytes\":1234,\"down_bytes\":65536"), "{s}");
+        assert!(s.contains("\"ratio\":12.500000,\"ef_norm\":0.031250}"), "{s}");
     }
 }

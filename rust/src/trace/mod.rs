@@ -144,16 +144,10 @@ impl TraceSpec {
     }
 }
 
-/// FNV-1a over raw bytes — the stable content fingerprint used to
-/// detect a replay trace file changing between checkpoint and resume.
-pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
-    }
-    h
-}
+/// FNV-1a content fingerprint — canonical definition lives in
+/// [`crate::util::fnv1a`]; re-exported here because trace replay was
+/// its first consumer and existing call sites name it via this path.
+pub use crate::util::fnv1a;
 
 /// A deterministic function of simulated time with checkpointable
 /// internal state.

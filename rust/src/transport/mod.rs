@@ -1,0 +1,945 @@
+//! Compressed update transport: top-k sparse + quantized LoRA deltas
+//! with error feedback and content-hash integrity.
+//!
+//! At fleet scale the binding constraint is uplink, not memory — nobody
+//! ships dense f32 deltas.  The [`Codec`] turns a client's LoRA delta
+//! (vs the round's dispatch baseline) into a compact wire message:
+//!
+//! 1. **Delta extraction** — `d = x − b` over the client-half adapter
+//!    tensors, flattened in `LORA_KEYS` order.
+//! 2. **Error feedback** (optional) — the client's residual from prior
+//!    rounds is added back (`d += e`), so mass dropped by
+//!    sparsification/quantization is retransmitted later instead of
+//!    lost.  Residuals live in the [`crate::pool::StatePool`] like Adam
+//!    state: spilled, reloaded, and checkpointed bit-exactly.
+//! 3. **Top-k sparsification** — the `⌈frac·n⌉` largest-magnitude
+//!    coordinates survive, deterministically (`total_cmp` on |d|,
+//!    ascending-index tie-break); indices are wired in ascending order.
+//! 4. **Linear quantization** — surviving values ship as raw f32, q8
+//!    (symmetric i8, scale = max|v|/127), or q4 (symmetric 4-bit,
+//!    scale = max|v|/7, two values per byte).
+//! 5. **Integrity** — an FNV-1a hash over the serialized payload is
+//!    appended; the server verifies it before merge and routes a
+//!    mismatch through the PR 6 sanitizer/quarantine path as a
+//!    detected fault.
+//!
+//! Wire layout (little-endian):
+//!
+//! ```text
+//! | n: u32 | k: u32 | quant: u8 | scale: f32 |  idx: k × u32  | values | hash: u64 |
+//! ```
+//!
+//! The new residual after an encode is `e' = d − d̂` (selected
+//! coordinates keep their quantization error, unselected ones keep the
+//! full delta).  All work buffers are lazily grown and reused, so the
+//! encode/decode path performs zero steady-state allocations (the same
+//! `tensor::alloc_count` discipline as the rest of the hot path).
+//!
+//! Degenerate settings (`--compress none`, or top-k at `frac = 1.0`
+//! with f32 values and no error feedback) never construct a codec at
+//! all — the session keeps the dense path verbatim, so trajectories,
+//! traffic, and checkpoint layouts stay bit-identical (the repo's
+//! eager-twin invariant; `fl(b + fl(x − b)) ≠ x` in general, so
+//! bitwise identity *through* a delta codec is impossible).
+
+pub mod testbed;
+
+use crate::lora::{AdapterSet, AdapterViews};
+use crate::model::ModelDims;
+use crate::util::fnv1a;
+use anyhow::{bail, Result};
+
+/// Fixed wire-header size: n (u32) + k (u32) + quant tag (u8) + scale (f32).
+pub const HEADER_BYTES: usize = 13;
+/// FNV-1a trailer size.
+pub const HASH_BYTES: usize = 8;
+
+/// Compression mode (`--compress`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressKind {
+    /// Dense f32 uploads — the pre-transport behavior.
+    None,
+    /// Top-k-by-magnitude sparsification (+ optional quantization / EF).
+    TopK,
+}
+
+impl CompressKind {
+    /// Stable tag for checkpoint fingerprints.
+    pub fn tag(&self) -> u64 {
+        match self {
+            CompressKind::None => 0,
+            CompressKind::TopK => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for CompressKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CompressKind::None => "none",
+            CompressKind::TopK => "topk",
+        })
+    }
+}
+
+impl std::str::FromStr for CompressKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(CompressKind::None),
+            "topk" => Ok(CompressKind::TopK),
+            other => bail!("unknown compress kind {other:?} (none|topk)"),
+        }
+    }
+}
+
+/// Value quantization level (`--quant`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantKind {
+    /// Raw little-endian f32 values (lossless for selected coords).
+    F32,
+    /// Symmetric linear 8-bit (scale = max|v| / 127).
+    Q8,
+    /// Symmetric linear 4-bit, two values per byte (scale = max|v| / 7).
+    Q4,
+}
+
+impl QuantKind {
+    /// Wire tag (also the checkpoint-fingerprint tag).
+    pub fn tag(&self) -> u8 {
+        match self {
+            QuantKind::F32 => 0,
+            QuantKind::Q8 => 1,
+            QuantKind::Q4 => 2,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<Self> {
+        match tag {
+            0 => Ok(QuantKind::F32),
+            1 => Ok(QuantKind::Q8),
+            2 => Ok(QuantKind::Q4),
+            other => bail!("unknown quant tag {other} on the wire"),
+        }
+    }
+
+    /// Packed bytes for `k` quantized values.
+    pub fn packed_bytes(&self, k: usize) -> usize {
+        match self {
+            QuantKind::F32 => 4 * k,
+            QuantKind::Q8 => k,
+            QuantKind::Q4 => k.div_ceil(2),
+        }
+    }
+
+    /// Symmetric quantization range bound (0 disables: f32 is lossless).
+    fn max_q(&self) -> i32 {
+        match self {
+            QuantKind::F32 => 0,
+            QuantKind::Q8 => 127,
+            QuantKind::Q4 => 7,
+        }
+    }
+}
+
+impl std::fmt::Display for QuantKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            QuantKind::F32 => "f32",
+            QuantKind::Q8 => "q8",
+            QuantKind::Q4 => "q4",
+        })
+    }
+}
+
+impl std::str::FromStr for QuantKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(QuantKind::F32),
+            "q8" => Ok(QuantKind::Q8),
+            "q4" => Ok(QuantKind::Q4),
+            other => bail!("unknown quant kind {other:?} (f32|q8|q4)"),
+        }
+    }
+}
+
+/// Per-merge transport telemetry, streamed in the jsonl `"transport"`
+/// block and asserted by `benches/transport.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TransportStats {
+    /// Encoded uplink bytes billed this merge.
+    pub up_bytes: u64,
+    /// Dense downlink bytes billed this merge (the aggregate broadcast
+    /// is not compressed — every client needs every coordinate).
+    pub down_bytes: u64,
+    /// Uplink compression ratio: dense bytes / encoded bytes (0 when
+    /// nothing was uploaded).
+    pub ratio: f64,
+    /// L2 norm of the participants' error-feedback residuals after
+    /// their encodes (0 when EF is off).
+    pub ef_norm: f64,
+}
+
+/// Number of surviving coordinates for `params` total at `frac`
+/// (`⌈frac·params⌉`, at least 1, at most all).
+pub fn topk_count(params: usize, frac: f64) -> usize {
+    if params == 0 {
+        return 0;
+    }
+    ((params as f64 * frac).ceil() as usize).clamp(1, params)
+}
+
+/// Exact serialized size of one encoded upload: header + ascending
+/// u32 indices + packed values + FNV-1a trailer.  The traffic meter
+/// bills this analytic size over the *timing* model's parameter counts
+/// while the codec runs on the executed tensors; the formula is
+/// asserted equal to the real payload length in the codec tests.
+pub fn encoded_bytes(params: usize, frac: f64, quant: QuantKind) -> usize {
+    let k = topk_count(params, frac);
+    HEADER_BYTES + 4 * k + quant.packed_bytes(k) + HASH_BYTES
+}
+
+fn quantize(v: f32, scale: f32, max_q: i32) -> i32 {
+    if scale == 0.0 || !scale.is_finite() {
+        return 0;
+    }
+    let q = (v / scale).round();
+    // `as` saturates (and maps NaN to 0), so corrupt inputs degrade to
+    // an in-range code instead of poisoning the wire format.
+    (q as i32).clamp(-max_q, max_q)
+}
+
+/// The per-session transport codec.  Owns lazily-grown reusable work
+/// buffers; one instance serves every client in a merge (payloads are
+/// consumed — billed, verified, decoded — before the next encode).
+#[derive(Debug)]
+pub struct Codec {
+    frac: f64,
+    quant: QuantKind,
+    error_feedback: bool,
+    /// Staged flattened delta `x − b (+ e)` in LORA_KEYS order.
+    delta: Vec<f32>,
+    /// Index sort buffer for top-k selection.
+    order: Vec<u32>,
+    /// Serialized wire message (reused across encodes).
+    payload: Vec<u8>,
+    /// Per-merge stats accumulators (reset by [`Codec::round_reset`]).
+    up_bytes: u64,
+    dense_bytes: u64,
+    ef_sq: f64,
+    /// Test hook: corrupt the next `n` payloads after hashing.
+    tamper_next: u32,
+}
+
+impl Codec {
+    pub fn new(frac: f64, quant: QuantKind, error_feedback: bool) -> Self {
+        Self {
+            frac,
+            quant,
+            error_feedback,
+            delta: Vec::new(),
+            order: Vec::new(),
+            payload: Vec::new(),
+            up_bytes: 0,
+            dense_bytes: 0,
+            ef_sq: 0.0,
+            tamper_next: 0,
+        }
+    }
+
+    pub fn error_feedback(&self) -> bool {
+        self.error_feedback
+    }
+
+    /// Analytic encoded size for a `params`-coordinate upload under
+    /// this codec's knobs (what the traffic meter bills).
+    pub fn billed_bytes(&self, params: usize) -> usize {
+        encoded_bytes(params, self.frac, self.quant)
+    }
+
+    /// Stage the flattened client-half delta `x − b` into the work
+    /// buffer.  Split from [`Codec::encode_staged`] so the caller can
+    /// drop its immutable borrows (baseline views) before handing over
+    /// the mutable error-feedback residual.
+    pub fn stage_delta(&mut self, x: &AdapterSet, b: &AdapterViews) -> Result<()> {
+        self.delta.clear();
+        for (t, bv) in x.tensors.iter().zip(b.tensors.iter()) {
+            let xs = t.as_f32()?;
+            if xs.len() != bv.data.len() {
+                bail!(
+                    "transport delta shape mismatch on {}: {} vs baseline {}",
+                    t.name,
+                    xs.len(),
+                    bv.data.len()
+                );
+            }
+            for (p, q) in xs.iter().zip(bv.data.iter()) {
+                self.delta.push(p - q);
+            }
+        }
+        Ok(())
+    }
+
+    /// Sparsify + quantize + serialize + hash the staged delta and
+    /// return the wire payload (borrowed from the codec's reusable
+    /// buffer — consume it before the next encode).  When `ef` is
+    /// given, the residual is added to the delta before selection and
+    /// replaced with `d − d̂` afterwards; an empty residual is sized on
+    /// first use.
+    pub fn encode_staged(&mut self, ef: Option<&mut Vec<f32>>) -> Result<&[u8]> {
+        let n = self.delta.len();
+        if n == 0 {
+            bail!("encode_staged called with no staged delta");
+        }
+        if n > u32::MAX as usize {
+            bail!("delta has {n} coordinates, wire format caps at u32");
+        }
+        let ef = match (self.error_feedback, ef) {
+            (true, Some(e)) => {
+                if e.is_empty() {
+                    e.resize(n, 0.0);
+                } else if e.len() != n {
+                    bail!("error-feedback residual has {} coords, delta {n}", e.len());
+                }
+                for (d, r) in self.delta.iter_mut().zip(e.iter()) {
+                    *d += r;
+                }
+                Some(e)
+            }
+            (false, None) => None,
+            (true, None) => bail!("codec has error feedback on but no residual was passed"),
+            (false, Some(_)) => bail!("residual passed to a codec with error feedback off"),
+        };
+        let k = topk_count(n, self.frac);
+        self.order.clear();
+        self.order.extend(0..n as u32);
+        if k < n {
+            let delta = &self.delta;
+            let by_magnitude = |&i: &u32, &j: &u32| {
+                let a = delta[i as usize].abs();
+                let b = delta[j as usize].abs();
+                // Largest magnitude first; NaN sorts largest under
+                // total_cmp, so corrupt coords surface (and the PR 6
+                // sanitizer sees them server-side).  Ascending-index
+                // tie-break keeps the selection deterministic.
+                b.total_cmp(&a).then(i.cmp(&j))
+            };
+            self.order.select_nth_unstable_by(k - 1, by_magnitude);
+            self.order.truncate(k);
+        }
+        self.order.sort_unstable();
+        let max_q = self.quant.max_q();
+        let scale = if max_q == 0 {
+            0.0f32
+        } else {
+            let mut max_abs = 0.0f32;
+            for &i in &self.order {
+                let a = self.delta[i as usize].abs();
+                if a.is_finite() && a > max_abs {
+                    max_abs = a;
+                }
+            }
+            max_abs / max_q as f32
+        };
+        self.payload.clear();
+        self.payload.extend_from_slice(&(n as u32).to_le_bytes());
+        self.payload.extend_from_slice(&(k as u32).to_le_bytes());
+        self.payload.push(self.quant.tag());
+        self.payload.extend_from_slice(&scale.to_le_bytes());
+        for &i in &self.order {
+            self.payload.extend_from_slice(&i.to_le_bytes());
+        }
+        match self.quant {
+            QuantKind::F32 => {
+                for &i in &self.order {
+                    self.payload.extend_from_slice(&self.delta[i as usize].to_le_bytes());
+                }
+            }
+            QuantKind::Q8 => {
+                for &i in &self.order {
+                    let q = quantize(self.delta[i as usize], scale, max_q);
+                    self.payload.push(q as i8 as u8);
+                }
+            }
+            QuantKind::Q4 => {
+                // Biased nibbles (q + 7 ∈ [0, 14]), low nibble first.
+                let mut pair = 0u8;
+                for (pos, &i) in self.order.iter().enumerate() {
+                    let q = (quantize(self.delta[i as usize], scale, max_q) + 7) as u8;
+                    if pos % 2 == 0 {
+                        pair = q;
+                        if pos == self.order.len() - 1 {
+                            self.payload.push(pair);
+                        }
+                    } else {
+                        self.payload.push(pair | (q << 4));
+                    }
+                }
+            }
+        }
+        let hash = fnv1a(&self.payload);
+        self.payload.extend_from_slice(&hash.to_le_bytes());
+        debug_assert_eq!(
+            self.payload.len(),
+            encoded_bytes(n, self.frac, self.quant),
+            "analytic encoded size must match the real payload"
+        );
+        if let Some(e) = ef {
+            // New residual: full delta where unsent, quantization error
+            // where sent.
+            e.copy_from_slice(&self.delta);
+            for &i in &self.order {
+                let d = self.delta[i as usize];
+                e[i as usize] = d - dequant_one(d, scale, max_q);
+            }
+            let mut sq = 0.0f64;
+            for &r in e.iter() {
+                sq += (r as f64) * (r as f64);
+            }
+            self.ef_sq += sq;
+        }
+        if self.tamper_next > 0 {
+            self.tamper_next -= 1;
+            // Flip a bit after hashing so server-side verification fails.
+            self.payload[HEADER_BYTES] ^= 0x01;
+        }
+        Ok(&self.payload)
+    }
+
+    /// One-shot encode (tests / testbed — the session uses the staged
+    /// two-phase form to satisfy pool borrow discipline).
+    pub fn encode(
+        &mut self,
+        x: &AdapterSet,
+        b: &AdapterViews,
+        ef: Option<&mut Vec<f32>>,
+    ) -> Result<&[u8]> {
+        self.stage_delta(x, b)?;
+        self.encode_staged(ef)
+    }
+
+    /// Server-side integrity check: recompute the FNV-1a trailer.
+    pub fn verify(payload: &[u8]) -> bool {
+        if payload.len() < HEADER_BYTES + HASH_BYTES {
+            return false;
+        }
+        let (body, trailer) = payload.split_at(payload.len() - HASH_BYTES);
+        let Ok(bytes) = <[u8; 8]>::try_from(trailer) else {
+            return false;
+        };
+        fnv1a(body) == u64::from_le_bytes(bytes)
+    }
+
+    /// Decode a verified payload into `dst` as an *absolute* client
+    /// half: `dst = b + d̂`.  Allocation-free; `dst` must already have
+    /// the client-half shape (`DecodeArena` provides recycled sets).
+    pub fn decode_into(payload: &[u8], b: &AdapterViews, dst: &mut AdapterSet) -> Result<()> {
+        if payload.len() < HEADER_BYTES + HASH_BYTES {
+            bail!("transport payload too short ({} bytes)", payload.len());
+        }
+        let rd_u32 = |at: usize| -> Result<u32> {
+            let bytes: [u8; 4] = payload[at..at + 4]
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("transport header truncated"))?;
+            Ok(u32::from_le_bytes(bytes))
+        };
+        let n = rd_u32(0)? as usize;
+        let k = rd_u32(4)? as usize;
+        let quant = QuantKind::from_tag(payload[8])?;
+        let scale = f32::from_le_bytes(
+            payload[9..13]
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("transport header truncated"))?,
+        );
+        let expect = HEADER_BYTES + 4 * k + quant.packed_bytes(k) + HASH_BYTES;
+        if payload.len() != expect {
+            bail!("transport payload is {} bytes, header implies {expect}", payload.len());
+        }
+        if k > n {
+            bail!("transport payload selects {k} of {n} coordinates");
+        }
+        let total: usize = b.param_count();
+        if n != total {
+            bail!("transport payload covers {n} coordinates, baseline has {total}");
+        }
+        if dst.param_count() != total {
+            bail!(
+                "decode scratch has {} coordinates, payload covers {total}",
+                dst.param_count()
+            );
+        }
+        // Start from the baseline, then add the sparse delta.
+        for (t, bv) in dst.tensors.iter_mut().zip(b.tensors.iter()) {
+            t.as_f32_mut()?.copy_from_slice(bv.data);
+        }
+        let idx_at = HEADER_BYTES;
+        let val_at = idx_at + 4 * k;
+        // Ascending indices let the tensor walk be a single forward scan.
+        let mut tensor = 0usize;
+        let mut base = 0usize;
+        let mut prev: Option<u32> = None;
+        for pos in 0..k {
+            let idx = rd_u32(idx_at + 4 * pos)?;
+            if let Some(p) = prev {
+                if idx <= p {
+                    bail!("transport indices must be strictly ascending ({p} then {idx})");
+                }
+            }
+            prev = Some(idx);
+            let flat = idx as usize;
+            if flat >= total {
+                bail!("transport index {flat} out of range ({total} coordinates)");
+            }
+            let v = match quant {
+                QuantKind::F32 => {
+                    let bytes: [u8; 4] = payload[val_at + 4 * pos..val_at + 4 * pos + 4]
+                        .try_into()
+                        .map_err(|_| anyhow::anyhow!("transport values truncated"))?;
+                    f32::from_le_bytes(bytes)
+                }
+                QuantKind::Q8 => (payload[val_at + pos] as i8) as f32 * scale,
+                QuantKind::Q4 => {
+                    let byte = payload[val_at + pos / 2];
+                    let nib = if pos % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                    if nib > 14 {
+                        bail!("transport q4 nibble {nib} out of range");
+                    }
+                    (nib as i32 - 7) as f32 * scale
+                }
+            };
+            while flat >= base + dst.tensors[tensor].numel() {
+                base += dst.tensors[tensor].numel();
+                tensor += 1;
+            }
+            let d = dst.tensors[tensor].as_f32_mut()?;
+            d[flat - base] += v;
+        }
+        Ok(())
+    }
+
+    /// Reset the per-merge stats accumulators.
+    pub fn round_reset(&mut self) {
+        self.up_bytes = 0;
+        self.dense_bytes = 0;
+        self.ef_sq = 0.0;
+    }
+
+    /// Record one billed upload (encoded vs what dense would have cost).
+    pub fn note_upload(&mut self, encoded: u64, dense: u64) {
+        self.up_bytes += encoded;
+        self.dense_bytes += dense;
+    }
+
+    /// Snapshot this merge's stats (`down_bytes` is the dense broadcast
+    /// the session billed alongside).
+    pub fn round_stats(&self, down_bytes: u64) -> TransportStats {
+        TransportStats {
+            up_bytes: self.up_bytes,
+            down_bytes,
+            ratio: if self.up_bytes == 0 {
+                0.0
+            } else {
+                self.dense_bytes as f64 / self.up_bytes as f64
+            },
+            ef_norm: self.ef_sq.sqrt(),
+        }
+    }
+
+    /// Test hook: corrupt the next `n` encoded payloads (one flipped
+    /// bit after hashing), so server-side verification rejects them.
+    #[doc(hidden)]
+    pub fn tamper_next(&mut self, n: u32) {
+        self.tamper_next = n;
+    }
+}
+
+fn dequant_one(v: f32, scale: f32, max_q: i32) -> f32 {
+    if max_q == 0 {
+        v
+    } else {
+        quantize(v, scale, max_q) as f32 * scale
+    }
+}
+
+/// Recycled decode scratch: one client-half [`AdapterSet`] per merge
+/// survivor, reshaped in place across cut depths so the steady state
+/// allocates no `HostTensor`s (same arena discipline as the pool).
+#[derive(Debug, Default)]
+pub struct DecodeArena {
+    sets: Vec<AdapterSet>,
+}
+
+impl DecodeArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scratch set `i`, reshaped for a `k`-layer client half.
+    pub fn slot_mut(&mut self, i: usize, dims: &ModelDims, k: usize) -> &mut AdapterSet {
+        while self.sets.len() <= i {
+            self.sets.push(AdapterSet::zeros(dims, k));
+        }
+        let set = &mut self.sets[i];
+        if set.layers != k {
+            for t in set.tensors.iter_mut() {
+                crate::pool::reshape_rows(t, k);
+            }
+            set.layers = k;
+        }
+        set
+    }
+
+    /// Immutable borrow of scratch set `i` (for the merge-kernel
+    /// contributor list, after all decodes are done).
+    pub fn get(&self, i: usize) -> &AdapterSet {
+        &self.sets[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+    use crate::util::propcheck::{check, gen};
+
+    fn dims() -> ModelDims {
+        ModelDims::mini()
+    }
+
+    fn random_half(seed: u64, k: usize, spread: f32) -> AdapterSet {
+        let d = dims();
+        let mut set = AdapterSet::zeros(&d, k);
+        let mut rng = Rng::new(seed);
+        for t in set.tensors.iter_mut() {
+            for x in t.as_f32_mut().unwrap() {
+                *x = (rng.normal() as f32) * spread;
+            }
+        }
+        set
+    }
+
+    fn flat(set: &AdapterSet) -> Vec<f32> {
+        set.tensors.iter().flat_map(|t| t.as_f32().unwrap().iter().copied()).collect()
+    }
+
+    #[test]
+    fn full_frac_f32_roundtrip_recovers_exact_delta() {
+        let d = dims();
+        let k = d.layers / 2;
+        let x = random_half(1, k, 0.5);
+        let b = random_half(2, k, 0.5);
+        let (bv, _) = split_client(&b, k);
+        let mut codec = Codec::new(1.0, QuantKind::F32, false);
+        let payload = codec.encode(&x, &bv, None).unwrap().to_vec();
+        assert!(Codec::verify(&payload));
+        assert_eq!(payload.len(), encoded_bytes(x.param_count(), 1.0, QuantKind::F32));
+        let mut out = AdapterSet::zeros(&d, k);
+        Codec::decode_into(&payload, &bv, &mut out).unwrap();
+        // b + ((x − b) + b's own value) — every coordinate shipped as
+        // raw f32, so the reconstruction is b + fl(x − b) exactly.
+        for (got, (xi, bi)) in flat(&out).iter().zip(flat(&x).iter().zip(flat(&b).iter())) {
+            assert_eq!(*got, bi + (xi - bi));
+        }
+    }
+
+    /// The wire holds the top-k by |delta| and the decode touches only
+    /// those coordinates.
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let d = dims();
+        let k_layers = d.layers / 2;
+        let b = AdapterSet::zeros(&d, k_layers);
+        let mut x = AdapterSet::zeros(&d, k_layers);
+        let n = x.param_count();
+        // Coordinate j has magnitude j+1 → top-k is the tail.
+        {
+            let mut j = 0f32;
+            for t in x.tensors.iter_mut() {
+                for v in t.as_f32_mut().unwrap() {
+                    j += 1.0;
+                    *v = if (j as usize) % 2 == 0 { j } else { -j };
+                }
+            }
+        }
+        let (bv, _) = split_client(&b, k_layers);
+        let frac = 0.1;
+        let keep = topk_count(n, frac);
+        let mut codec = Codec::new(frac, QuantKind::F32, false);
+        let payload = codec.encode(&x, &bv, None).unwrap().to_vec();
+        let mut out = AdapterSet::zeros(&d, k_layers);
+        Codec::decode_into(&payload, &bv, &mut out).unwrap();
+        let got = flat(&out);
+        let want = flat(&x);
+        for (j, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            if j >= n - keep {
+                assert_eq!(g, w, "top-k coordinate {j} must ship");
+            } else {
+                assert_eq!(*g, 0.0, "coordinate {j} must be dropped");
+            }
+        }
+    }
+
+    /// Deterministic tie-break: equal magnitudes keep the lowest index.
+    #[test]
+    fn ties_resolve_to_ascending_indices() {
+        let d = dims();
+        let kl = d.layers / 2;
+        let b = AdapterSet::zeros(&d, kl);
+        let mut x = AdapterSet::zeros(&d, kl);
+        for t in x.tensors.iter_mut() {
+            t.as_f32_mut().unwrap().fill(1.0);
+        }
+        let (bv, _) = split_client(&b, kl);
+        let mut codec = Codec::new(0.25, QuantKind::F32, false);
+        let payload = codec.encode(&x, &bv, None).unwrap().to_vec();
+        let k = topk_count(x.param_count(), 0.25);
+        for pos in 0..k {
+            let at = HEADER_BYTES + 4 * pos;
+            let idx = u32::from_le_bytes(payload[at..at + 4].try_into().unwrap());
+            assert_eq!(idx as usize, pos, "all-equal deltas must keep the lowest indices");
+        }
+    }
+
+    fn split_client(set: &AdapterSet, k: usize) -> (AdapterViews<'_>, AdapterViews<'_>) {
+        set.split_at_views(k).unwrap()
+    }
+
+    /// Encode→decode round-trip error is bounded by the quantization
+    /// step for every quant level, on every coordinate (selected ones —
+    /// unselected are exactly baseline).
+    #[test]
+    fn prop_roundtrip_error_bounded_by_quant_step() {
+        check(
+            "transport-roundtrip",
+            71,
+            40,
+            |rng| {
+                let seed = gen::usize_in(rng, 1, 1 << 30) as u64;
+                let frac = gen::f64_in(rng, 0.05, 1.0);
+                let quant = match gen::usize_in(rng, 0, 2) {
+                    0 => QuantKind::F32,
+                    1 => QuantKind::Q8,
+                    _ => QuantKind::Q4,
+                };
+                (seed, frac, quant)
+            },
+            |&(seed, frac, quant)| {
+                let d = dims();
+                let kl = d.layers / 2;
+                let x = random_half(seed, kl, 0.3);
+                let b = random_half(seed ^ 0xB0B, kl, 0.3);
+                let (bv, _) = split_client(&b, kl);
+                let mut codec = Codec::new(frac, quant, false);
+                let payload = codec.encode(&x, &bv, None).unwrap().to_vec();
+                if !Codec::verify(&payload) {
+                    return false;
+                }
+                if payload.len() != encoded_bytes(x.param_count(), frac, quant) {
+                    return false;
+                }
+                let mut out = AdapterSet::zeros(&d, kl);
+                Codec::decode_into(&payload, &bv, &mut out).unwrap();
+                let xs = flat(&x);
+                let bs = flat(&b);
+                let os = flat(&out);
+                let mut max_abs = 0.0f32;
+                for (xi, bi) in xs.iter().zip(bs.iter()) {
+                    max_abs = max_abs.max((xi - bi).abs());
+                }
+                let step = match quant {
+                    QuantKind::F32 => 0.0,
+                    QuantKind::Q8 => max_abs / 127.0,
+                    QuantKind::Q4 => max_abs / 7.0,
+                };
+                // Selected coords: |decoded − x| ≤ step/2 (+f32 slop);
+                // unselected: decoded == b exactly.
+                let tol = step * 0.5 + max_abs * 1e-5;
+                os.iter().zip(xs.iter().zip(bs.iter())).all(|(o, (xi, bi))| {
+                    (o - xi).abs() <= tol || o.to_bits() == bi.to_bits()
+                })
+            },
+        );
+    }
+
+    /// Error feedback makes lossy transport exact over time: after
+    /// repeated encodes of the *same* target, baseline + Σ decoded
+    /// deltas converges to the target even at q4 + 10% sparsity.
+    #[test]
+    fn error_feedback_retransmits_dropped_mass() {
+        let d = dims();
+        let kl = d.layers / 2;
+        let x = random_half(9, kl, 0.5);
+        let mut b = AdapterSet::zeros(&d, kl); // evolving server model
+        let mut codec = Codec::new(0.1, QuantKind::Q4, true);
+        let mut ef: Vec<f32> = Vec::new();
+        let mut out = AdapterSet::zeros(&d, kl);
+        for _ in 0..60 {
+            let (bv, _) = split_client(&b, kl);
+            let payload = codec.encode(&x, &bv, Some(&mut ef)).unwrap().to_vec();
+            assert!(Codec::verify(&payload));
+            let (bv, _) = split_client(&b, kl);
+            Codec::decode_into(&payload, &bv, &mut out).unwrap();
+            for (bt, ot) in b.tensors.iter_mut().zip(out.tensors.iter()) {
+                bt.as_f32_mut().unwrap().copy_from_slice(ot.as_f32().unwrap());
+            }
+        }
+        let err = b.max_abs_diff(&x).unwrap();
+        assert!(err < 1e-3, "EF must recover the full target, residual err {err}");
+        // Without EF the same lossy pipe stalls far from the target.
+        let mut b2 = AdapterSet::zeros(&d, kl);
+        let mut codec2 = Codec::new(0.1, QuantKind::Q4, false);
+        for _ in 0..60 {
+            let (bv, _) = split_client(&b2, kl);
+            let payload = codec2.encode(&x, &bv, None).unwrap().to_vec();
+            let (bv, _) = split_client(&b2, kl);
+            Codec::decode_into(&payload, &bv, &mut out).unwrap();
+            for (bt, ot) in b2.tensors.iter_mut().zip(out.tensors.iter()) {
+                bt.as_f32_mut().unwrap().copy_from_slice(ot.as_f32().unwrap());
+            }
+        }
+        let err2 = b2.max_abs_diff(&x).unwrap();
+        assert!(err2 > err * 10.0, "EF off must be visibly lossier ({err2} vs {err})");
+    }
+
+    #[test]
+    fn tampered_payload_fails_verification() {
+        let d = dims();
+        let kl = d.layers / 2;
+        let x = random_half(3, kl, 0.5);
+        let b = random_half(4, kl, 0.5);
+        let (bv, _) = split_client(&b, kl);
+        let mut codec = Codec::new(0.2, QuantKind::Q8, false);
+        let clean = codec.encode(&x, &bv, None).unwrap().to_vec();
+        assert!(Codec::verify(&clean));
+        // Every single-bit flip anywhere in the message is detected.
+        for at in [0, HEADER_BYTES, clean.len() - HASH_BYTES - 1, clean.len() - 1] {
+            let mut bad = clean.clone();
+            bad[at] ^= 0x10;
+            assert!(!Codec::verify(&bad), "flip at byte {at} must fail verification");
+        }
+        // The built-in tamper hook produces exactly such a payload.
+        codec.tamper_next(1);
+        let tampered = codec.encode(&x, &bv, None).unwrap().to_vec();
+        assert!(!Codec::verify(&tampered));
+        let next = codec.encode(&x, &bv, None).unwrap().to_vec();
+        assert!(Codec::verify(&next), "tampering must stop after n payloads");
+    }
+
+    #[test]
+    fn decode_rejects_malformed_payloads() {
+        let d = dims();
+        let kl = d.layers / 2;
+        let x = random_half(5, kl, 0.5);
+        let b = AdapterSet::zeros(&d, kl);
+        let (bv, _) = split_client(&b, kl);
+        let mut codec = Codec::new(0.2, QuantKind::Q8, false);
+        let good = codec.encode(&x, &bv, None).unwrap().to_vec();
+        let mut out = AdapterSet::zeros(&d, kl);
+        // Truncated.
+        assert!(Codec::decode_into(&good[..good.len() - 1], &bv, &mut out).is_err());
+        // Bad quant tag.
+        let mut bad = good.clone();
+        bad[8] = 9;
+        assert!(Codec::decode_into(&bad, &bv, &mut out).is_err());
+        // Scratch with the wrong depth.
+        let mut short = AdapterSet::zeros(&d, kl + 1);
+        assert!(Codec::decode_into(&good, &bv, &mut short).is_err());
+        // Non-ascending indices.
+        let mut swapped = good.clone();
+        let (a0, a1) = (HEADER_BYTES, HEADER_BYTES + 4);
+        for i in 0..4 {
+            swapped.swap(a0 + i, a1 + i);
+        }
+        assert!(Codec::decode_into(&swapped, &bv, &mut out).is_err());
+    }
+
+    #[test]
+    fn encoded_bytes_formula_and_counts() {
+        assert_eq!(topk_count(100, 0.05), 5);
+        assert_eq!(topk_count(100, 1.0), 100);
+        assert_eq!(topk_count(100, 0.001), 1, "at least one coordinate always ships");
+        assert_eq!(topk_count(0, 0.5), 0);
+        // 21 fixed bytes + 4/idx + packed values.
+        assert_eq!(encoded_bytes(100, 0.05, QuantKind::F32), 21 + 5 * 4 + 5 * 4);
+        assert_eq!(encoded_bytes(100, 0.05, QuantKind::Q8), 21 + 5 * 4 + 5);
+        assert_eq!(encoded_bytes(100, 0.05, QuantKind::Q4), 21 + 5 * 4 + 3);
+        assert_eq!(QuantKind::Q4.packed_bytes(1), 1);
+        assert_eq!(QuantKind::Q4.packed_bytes(2), 1);
+        assert_eq!(QuantKind::Q4.packed_bytes(3), 2);
+    }
+
+    #[test]
+    fn kind_parse_display_roundtrip() {
+        for k in [CompressKind::None, CompressKind::TopK] {
+            assert_eq!(k.to_string().parse::<CompressKind>().unwrap(), k);
+        }
+        for q in [QuantKind::F32, QuantKind::Q8, QuantKind::Q4] {
+            assert_eq!(q.to_string().parse::<QuantKind>().unwrap(), q);
+        }
+        assert!("gzip".parse::<CompressKind>().is_err());
+        assert!("q2".parse::<QuantKind>().is_err());
+    }
+
+    /// Steady-state encode/decode is HostTensor-allocation-free: after
+    /// one warm-up pass the codec buffers and the decode arena are all
+    /// reused in place.
+    #[test]
+    fn encode_decode_path_is_allocation_free_at_steady_state() {
+        let d = dims();
+        let kl = d.layers / 2;
+        let x = random_half(11, kl, 0.5);
+        let b = random_half(12, kl, 0.5);
+        let mut codec = Codec::new(0.1, QuantKind::Q8, true);
+        let mut ef: Vec<f32> = Vec::new();
+        let mut arena = DecodeArena::new();
+        // Warm-up: buffers grow to their high-water marks.
+        for _ in 0..2 {
+            let (bv, _) = b.split_at_views(kl).unwrap();
+            codec.stage_delta(&x, &bv).unwrap();
+            let payload = codec.encode_staged(Some(&mut ef)).unwrap().to_vec();
+            let (bv, _) = b.split_at_views(kl).unwrap();
+            Codec::decode_into(&payload, &bv, arena.slot_mut(0, &d, kl)).unwrap();
+        }
+        crate::tensor::reset_alloc_count();
+        // Canary: prove the counter is live.
+        let canary = crate::lora::AdapterSet::zeros(&d, 1);
+        assert_eq!(crate::tensor::alloc_count(), 4, "counter must be live");
+        drop(canary);
+        crate::tensor::reset_alloc_count();
+        for _ in 0..5 {
+            let (bv, _) = b.split_at_views(kl).unwrap();
+            codec.stage_delta(&x, &bv).unwrap();
+            let len = {
+                let payload = codec.encode_staged(Some(&mut ef)).unwrap();
+                assert!(Codec::verify(payload));
+                payload.len()
+            };
+            assert_eq!(len, codec.billed_bytes(x.param_count()));
+            // Decode straight from the codec's payload buffer.
+            let (bv, _) = b.split_at_views(kl).unwrap();
+            let dst = arena.slot_mut(0, &d, kl);
+            Codec::decode_into(&codec.payload, &bv, dst).unwrap();
+        }
+        assert_eq!(
+            crate::tensor::alloc_count(),
+            0,
+            "steady-state encode/decode must not allocate HostTensors"
+        );
+    }
+
+    #[test]
+    fn round_stats_track_bytes_and_ratio() {
+        let mut codec = Codec::new(0.05, QuantKind::Q8, false);
+        codec.round_reset();
+        codec.note_upload(100, 1600);
+        codec.note_upload(100, 1600);
+        let st = codec.round_stats(3200);
+        assert_eq!(st.up_bytes, 200);
+        assert_eq!(st.down_bytes, 3200);
+        assert!((st.ratio - 16.0).abs() < 1e-12);
+        assert_eq!(st.ef_norm, 0.0);
+        codec.round_reset();
+        assert_eq!(codec.round_stats(0), TransportStats::default());
+    }
+}

@@ -9,3 +9,37 @@ pub mod args;
 pub mod bench;
 pub mod kv;
 pub mod propcheck;
+
+/// FNV-1a over raw bytes — the repo's stable content fingerprint.
+///
+/// Shared by trace replay (detecting a replay file changing between
+/// checkpoint and resume) and the transport codec (payload integrity
+/// verified server-side before merge).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod fnv1a_tests {
+    use super::fnv1a;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Offset basis: the hash of the empty input.
+        assert_eq!(fnv1a(b""), 0xCBF2_9CE4_8422_2325);
+        // Reference vectors from the FNV spec (fnv1a-64).
+        assert_eq!(fnv1a(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171F73967E8);
+    }
+
+    #[test]
+    fn fnv1a_is_content_sensitive() {
+        assert_ne!(fnv1a(b"round=1"), fnv1a(b"round=2"));
+        assert_ne!(fnv1a(b"ab"), fnv1a(b"ba"));
+    }
+}

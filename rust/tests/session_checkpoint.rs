@@ -13,6 +13,7 @@ use sfl::faults::{AggKind, AttackKind};
 use sfl::fleet::{FleetPreset, FleetSpec};
 use sfl::runtime::Engine;
 use sfl::trace::{TraceKind, TraceSpec};
+use sfl::transport::{CompressKind, QuantKind};
 use std::path::{Path, PathBuf};
 
 fn engine() -> Option<Engine> {
@@ -377,6 +378,146 @@ fn resume_rejects_changed_robust_config() {
 
     let resumable = Session::resume(&e, &cfg, &path);
     assert!(resumable.is_ok(), "unchanged robust config must resume");
+}
+
+fn transport_cfg(frac: f64, quant: QuantKind, ef: bool) -> ExperimentConfig {
+    let mut c = mini_cfg();
+    c.transport.compress = CompressKind::TopK;
+    c.transport.topk_frac = frac;
+    c.transport.quant = quant;
+    c.transport.error_feedback = ef;
+    c
+}
+
+#[test]
+fn degenerate_transport_is_bit_identical_to_dense_including_checkpoints() {
+    // Top-k at 100% / f32 / no error feedback never constructs a codec
+    // (a delta codec cannot round-trip bit-exactly), so the degenerate
+    // config must reproduce the dense run completely: trajectory,
+    // traffic counters, round reports, and the checkpoint bytes.
+    let Some(e) = engine() else { return };
+    let dense = mini_cfg();
+    let degenerate = transport_cfg(1.0, QuantKind::F32, false);
+    let rd = Session::new(&e, &dense).unwrap().run_to_convergence().unwrap();
+    let rt = Session::new(&e, &degenerate).unwrap().run_to_convergence().unwrap();
+    assert_bit_identical(&rd, &rt, "degenerate-transport");
+
+    let mut sd = Session::new(&e, &dense).unwrap();
+    let mut st = Session::new(&e, &degenerate).unwrap();
+    for _ in 0..3 {
+        sd.step_round().unwrap();
+        let r = st.step_round().unwrap();
+        assert!(r.transport.is_none(), "degenerate transport must not report stats");
+    }
+    let pd = ckpt_path("transport-dense");
+    let pt = ckpt_path("transport-degenerate");
+    sd.checkpoint(&pd).unwrap();
+    st.checkpoint(&pt).unwrap();
+    let bd = std::fs::read(&pd).unwrap();
+    let bt = std::fs::read(&pt).unwrap();
+    assert!(bd == bt, "degenerate transport checkpoint layout must equal dense");
+    // The shared layout means a dense checkpoint resumes either way.
+    let mut resumed = Session::resume(&e, &degenerate, &pd).unwrap();
+    resumed.step_round().unwrap();
+}
+
+#[test]
+fn transport_session_with_error_feedback_resumes_bit_identical() {
+    // Error-feedback residuals are durable per-client state: they ride
+    // the checkpoint (like Adam moments), so an interrupted compressed
+    // run replays its remaining rounds bit-identically — including the
+    // billed (encoded-size) traffic counters.
+    let Some(e) = engine() else { return };
+    roundtrip(&e, &transport_cfg(0.25, QuantKind::Q8, true), "transport-ef");
+    roundtrip(&e, &transport_cfg(0.5, QuantKind::Q4, false), "transport-q4");
+}
+
+#[test]
+fn pooled_transport_session_resumes_bit_identical() {
+    // EF residuals also spill/reload through the state pool; a sparse
+    // checkpoint (some residual vectors never materialized) must still
+    // resume bit-exactly.
+    let Some(e) = engine() else { return };
+    let mut cfg = pooled_cfg();
+    cfg.transport.compress = CompressKind::TopK;
+    cfg.transport.topk_frac = 0.25;
+    cfg.transport.quant = QuantKind::Q8;
+    cfg.transport.error_feedback = true;
+    roundtrip(&e, &cfg, "transport-pooled");
+}
+
+#[test]
+fn async_transport_session_resumes_bit_identical() {
+    // Under `--async` each upload encodes against its dispatch baseline
+    // (b_v), and the decoded update feeds the staleness delta-correction.
+    // The EF residuals and version-indexed baselines all survive resume.
+    let Some(e) = engine() else { return };
+    let mut cfg = transport_cfg(0.25, QuantKind::Q8, true);
+    cfg.asynchrony.enabled = true;
+    cfg.asynchrony.buffer_k = 2;
+    cfg.asynchrony.staleness_bound = 30.0;
+    cfg.asynchrony.staleness_beta = 0.5;
+    roundtrip(&e, &cfg, "transport-async");
+}
+
+#[test]
+fn resume_rejects_changed_transport_config() {
+    // Active transport knobs are fingerprinted: resuming under a
+    // different sparsity/precision — or with compression off — would
+    // silently change the arithmetic, so it must refuse.
+    let Some(e) = engine() else { return };
+    let cfg = transport_cfg(0.25, QuantKind::Q8, true);
+    let mut s = Session::new(&e, &cfg).unwrap();
+    for _ in 0..2 {
+        s.step_round().unwrap();
+    }
+    let path = ckpt_path("transport-mismatch");
+    s.checkpoint(&path).unwrap();
+    drop(s);
+
+    let mut refrac = cfg.clone();
+    refrac.transport.topk_frac = 0.5;
+    assert!(Session::resume(&e, &refrac, &path).is_err());
+
+    let mut requant = cfg.clone();
+    requant.transport.quant = QuantKind::Q4;
+    assert!(Session::resume(&e, &requant, &path).is_err());
+
+    let mut off = cfg.clone();
+    off.transport = Default::default();
+    assert!(Session::resume(&e, &off, &path).is_err());
+
+    assert!(Session::resume(&e, &cfg, &path).is_ok(), "unchanged transport config must resume");
+}
+
+#[test]
+fn tampered_transport_payload_is_flagged_into_quarantine() {
+    // A hash-failing payload under the robust path is hard evidence:
+    // the sender is flagged (and quarantined) like a witness-caught
+    // liar, its upload never reaches the merge, and honest clients'
+    // compressed updates keep flowing.
+    let Some(e) = engine() else { return };
+    let mut cfg = transport_cfg(0.25, QuantKind::Q8, true);
+    cfg.train.aggregation_interval = 1;
+    cfg.robust.verify_frac = 0.25;
+    let mut s = Session::new(&e, &cfg).unwrap();
+    s.transport_tamper_next(1);
+    let r1 = s.step_round().unwrap();
+    let rb = r1.robust.expect("robust stats must stream when the committee is armed");
+    assert_eq!(rb.flagged, 1, "the tampered sender must be flagged");
+    assert_eq!(rb.quarantined, 1, "the tampered sender must be quarantined");
+    let tp = r1.transport.expect("active transport must stream stats");
+    assert!(tp.ratio > 1.0, "q8 top-k uplink must beat dense (ratio {})", tp.ratio);
+    assert!(tp.ef_norm > 0.0, "error feedback must carry residual mass");
+    assert!(tp.up_bytes < tp.down_bytes, "compressed uplink must undercut the dense downlink");
+
+    // Later rounds: no new flags, the quarantine count persists, and
+    // merges keep succeeding without the quarantined client.
+    let r2 = s.step_round().unwrap();
+    let rb2 = r2.robust.unwrap();
+    assert_eq!(rb2.flagged, 0, "honest payloads must pass verification");
+    assert_eq!(rb2.quarantined, 1);
+    assert!(r2.transport.is_some());
 }
 
 #[test]
