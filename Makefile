@@ -3,7 +3,7 @@
 # `artifacts` needs the python env (jax) once; everything else is
 # rust-only.  Tier-1 verify: `make build test`.  Lint gate: `make lint`.
 
-.PHONY: artifacts build test bench bench-sched bench-trace bench-mem bench-robust bench-async bench-transport lint clean
+.PHONY: artifacts build test bench bench-sched bench-trace bench-mem bench-robust bench-async bench-transport bench-netfault lint clean
 
 # AOT-lower the HLO artifacts + params.bin the runtime executes.
 # Output lands in rust/artifacts/<config>/ (cargo's working directory
@@ -62,6 +62,13 @@ bench-async:
 bench-transport:
 	cd rust && cargo bench --bench transport
 
+# Network-fault sweep (loss rate × retry budget on the lossy-channel
+# testbed); writes rust/BENCH_netfault.json (recovered quality + retry
+# counters — EXPERIMENTS.md §Network faults).  CI runs the same bench
+# with NETFAULT_SMOKE=1 (gate configs only).
+bench-netfault:
+	cd rust && cargo bench --bench netfault
+
 # Format + clippy + sflint gate (CI tier-1 companion).  sflint is the
 # in-tree invariant analyzer (rust/lint/README.md): nonzero exit on any
 # finding not grandfathered in rust/lint/baseline.jsonl.
@@ -74,4 +81,4 @@ clean:
 	cd rust && cargo clean
 	rm -f rust/BENCH_hotpath.json rust/BENCH_sched.json rust/BENCH_trace.json \
 	      rust/BENCH_memory.json rust/BENCH_robust.json rust/BENCH_async.json \
-	      rust/BENCH_transport.json rust/sflint-findings.jsonl
+	      rust/BENCH_transport.json rust/BENCH_netfault.json rust/sflint-findings.jsonl

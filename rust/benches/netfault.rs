@@ -1,0 +1,110 @@
+//! Network-fault bench: loss-rate × retry-budget sweep on the
+//! closed-form `channel::testbed` world (real codec on the wire, real
+//! Gilbert–Elliott dice), recording quality / retry / give-up counters
+//! into `BENCH_netfault.json`.  Pure host-side — no PJRT artifacts.
+//!
+//!     cargo bench --bench netfault                 # full sweep
+//!     NETFAULT_SMOKE=1 cargo bench --bench netfault  # CI smoke (gate configs only)
+//!
+//! The acceptance gate (asserted in smoke runs too): at 10% loss + 2%
+//! corruption the bounded-retransmission protocol with partial merges
+//! recovers ≥ 97% of the clean run's quality with no honest client
+//! quarantined, while the no-retry baseline measurably degrades.
+
+use sfl::channel::testbed::{run, Scenario};
+
+const GATE_LOSS: f64 = 0.10;
+const GATE_CORRUPT: f64 = 0.02;
+const GATE_RETRY: usize = 3;
+const GATE_THRESHOLD: usize = 4;
+
+fn main() {
+    let smoke = std::env::var("NETFAULT_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let losses: &[f64] = if smoke { &[GATE_LOSS] } else { &[0.0, 0.05, GATE_LOSS, 0.20] };
+    let retries: &[usize] = &[0, GATE_RETRY];
+    let base = Scenario { corrupt: GATE_CORRUPT, tamper_threshold: GATE_THRESHOLD, ..Scenario::default() };
+    let mut entries: Vec<(String, String)> = Vec::new();
+
+    // Clean reference: reliable channel, same world and seed.
+    let clean = run(&Scenario { corrupt: 0.0, ..base.clone() }).expect("clean run");
+    println!("netfault clean: quality={:.6} (d0={:.3})", clean.quality, clean.d0);
+    entries.push(("netfault/quality/clean".into(), format!("{:.6}", clean.quality)));
+
+    let mut gate_quality = None;
+    let mut noretry_quality = None;
+    for &loss in losses {
+        for &retry_max in retries {
+            let sc = Scenario { loss, retry_max, ..base.clone() };
+            let out = run(&sc).expect("scenario run");
+            let tag = format!("loss{}/retry{retry_max}", (loss * 100.0).round() as u64);
+            println!(
+                "netfault {tag}: quality={:.6} sent={} dropped={} corrupted={} \
+                 retries={} gave_up={} partial_merges={} honest_quarantined={}",
+                out.quality,
+                out.net.sent,
+                out.net.dropped,
+                out.net.corrupted,
+                out.net.retries,
+                out.net.gave_up,
+                out.net.partial_merges,
+                out.quarantined_honest
+            );
+            entries.push((format!("netfault/quality/{tag}"), format!("{:.6}", out.quality)));
+            entries.push((format!("netfault/retries/{tag}"), out.net.retries.to_string()));
+            entries.push((format!("netfault/gave_up/{tag}"), out.net.gave_up.to_string()));
+            entries.push((
+                format!("netfault/partial_merges/{tag}"),
+                out.net.partial_merges.to_string(),
+            ));
+            entries.push((
+                format!("netfault/honest_quarantined/{tag}"),
+                out.quarantined_honest.to_string(),
+            ));
+            // No honest client may ever be quarantined by benign
+            // channel noise, at any point of the sweep.
+            assert_eq!(
+                out.quarantined_honest, 0,
+                "{tag}: benign corruption must never escalate an honest client"
+            );
+            if loss == GATE_LOSS && retry_max == GATE_RETRY {
+                gate_quality = Some(out.quality);
+            }
+            if loss == GATE_LOSS && retry_max == 0 {
+                noretry_quality = Some(out.quality);
+                assert!(
+                    out.net.gave_up > 0,
+                    "{tag}: the no-retry baseline must be losing uploads outright"
+                );
+            }
+        }
+    }
+    // Acceptance gate: retry + partial-merge degradation recovers the
+    // clean quality; the no-retry baseline does not.
+    let gate = gate_quality.expect("sweep must include the loss10/retry3 gate configuration");
+    let noretry = noretry_quality.expect("sweep must include the loss10/retry0 baseline");
+    assert!(
+        gate >= 0.97 * clean.quality,
+        "gate: quality {gate:.6} fell below 97% of clean {:.6}",
+        clean.quality
+    );
+    assert!(
+        noretry < gate,
+        "no-retry baseline ({noretry:.6}) must degrade vs the retry protocol ({gate:.6})"
+    );
+    println!(
+        "accept: loss10/retry3 recovers {:.2}% of clean quality (no-retry: {:.2}%)",
+        100.0 * gate / clean.quality,
+        100.0 * noretry / clean.quality
+    );
+
+    let mut json = String::from("{\n");
+    for (i, (name, value)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        json.push_str(&format!("  \"{name}\": {value}{comma}\n"));
+    }
+    json.push_str("}\n");
+    match std::fs::write("BENCH_netfault.json", &json) {
+        Ok(()) => println!("wrote BENCH_netfault.json ({} entries)", entries.len()),
+        Err(e) => eprintln!("could not write BENCH_netfault.json: {e}"),
+    }
+}

@@ -1,0 +1,490 @@
+//! Lossy uplink channel between clients and the edge server.
+//!
+//! The paper assumes every update exchange completes intact on the
+//! first attempt; real mobile links (the WiFi/LTE/5G tiers in `net/`)
+//! drop, duplicate, reorder, and corrupt packets.  This module models
+//! that benign unreliability as a **seeded, checkpointable** process so
+//! lossy runs are exactly reproducible and `--net-loss 0` stays
+//! bit-identical to the reliable path (the channel draws from its own
+//! RNG stream, independent of training/faults/committee):
+//!
+//! - per-attempt drop/corrupt/duplicate/reorder dice, scaled by the
+//!   client's link tier ([`tier_mult`]: slow links fail more often);
+//! - burst loss via a 2-state Gilbert–Elliott Markov chain per client
+//!   (`--net-burst` = P(stay Bad); 0 ⇒ independent Bernoulli losses),
+//!   parameterized so the stationary loss rate equals `--net-loss`;
+//! - bounded retransmission with seeded exponential backoff + jitter
+//!   ([`LossyChannel::rto`]);
+//! - duplicate/stale suppression via per-client monotone sequence
+//!   numbers stamped into the transport header
+//!   ([`LossyChannel::next_seq`] / [`LossyChannel::accept_seq`]);
+//! - consecutive hash-mismatch counters so the server can distinguish
+//!   benign corruption (retry) from tampering (escalate to the
+//!   committee once `--tamper-threshold` mismatches accumulate).
+//!
+//! The server-side retry/timeout/partial-merge machinery lives in
+//! `coordinator::session`; [`testbed`] is the closed-form world used by
+//! `benches/netfault.rs` and the artifact-free acceptance tests.
+
+pub mod testbed;
+
+use crate::config::ChannelConfig;
+use crate::tensor::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Channel RNG stream tag: `seed ^ CHANNEL_SEED_XOR` keeps the loss
+/// dice independent from training, fault-injection, and committee
+/// streams so enabling the channel never perturbs them.
+pub const CHANNEL_SEED_XOR: u64 = 0xC4A2_2E17;
+
+/// Per-round network counters, streamed in the `"net"` jsonl block.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Uplink transmission attempts (retries and duplicate copies count).
+    pub sent: u64,
+    /// Attempts that reached the server (corrupted arrivals included).
+    pub delivered: u64,
+    /// Attempts lost in flight.
+    pub dropped: u64,
+    /// Deliveries with at least one flipped payload bit.
+    pub corrupted: u64,
+    /// Retransmissions triggered by timeouts / failed verification.
+    pub retries: u64,
+    /// Clients that exhausted their retry budget this round.
+    pub gave_up: u64,
+    /// Merges that proceeded with a partial cohort.
+    pub partial_merges: u64,
+}
+
+/// Outcome of one transmission attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transmission {
+    /// Lost in flight — nothing arrives.
+    pub dropped: bool,
+    /// Arrived with a flipped bit (`corrupt_bit` selects it).
+    pub corrupted: bool,
+    /// Raw draw for which payload bit flips; the caller reduces it
+    /// modulo the hash-covered body size.
+    pub corrupt_bit: u64,
+    /// A second identical copy also arrives (sequence-suppressed).
+    pub duplicated: bool,
+    /// Arrived out of order — the copy carries a stale sequence number
+    /// and must be rejected by [`LossyChannel::accept_seq`].
+    pub reordered: bool,
+}
+
+impl Transmission {
+    /// A clean first-try delivery (what `--net-loss 0` always yields).
+    pub fn clean() -> Self {
+        Self { dropped: false, corrupted: false, corrupt_bit: 0, duplicated: false, reordered: false }
+    }
+}
+
+/// Failure-probability multiplier for a link tier: slower links see
+/// proportionally more loss/corruption (products are clamped to [0, 1]
+/// at draw time).
+pub fn tier_mult(rate_mbps: f64) -> f64 {
+    if rate_mbps < 50.0 {
+        1.5
+    } else if rate_mbps >= 200.0 {
+        0.5
+    } else {
+        1.0
+    }
+}
+
+/// Effective loss probabilities are clamped below 1 so the
+/// Gilbert–Elliott transition math (`1 - loss` in a denominator) stays
+/// finite and a client can always eventually get a packet through.
+const MAX_EFF_LOSS: f64 = 0.99;
+
+/// Backoff jitter is uniform in `[0, JITTER_FRAC)` of the base RTO.
+const JITTER_FRAC: f64 = 0.5;
+
+/// The seeded lossy channel shared by every client uplink.
+///
+/// All mutable state (RNG, Gilbert–Elliott chains, sequence counters,
+/// mismatch counters, round stats) serializes to flat `u64` words for
+/// bit-exact mid-retry checkpoint/resume.
+#[derive(Debug, Clone)]
+pub struct LossyChannel {
+    // sflint:allow(checkpoint-coverage, rebuilt from config at load)
+    cfg: ChannelConfig,
+    /// Per-client failure-probability multiplier from the link tier.
+    // sflint:allow(checkpoint-coverage, rebuilt from the fleet's links at load)
+    tier: Vec<f64>,
+    rng: Rng,
+    /// Gilbert–Elliott chain state per client: true = Bad (bursting).
+    ge_bad: Vec<bool>,
+    /// Next uplink sequence number each client stamps (starts at 1).
+    seq_next: Vec<u32>,
+    /// Highest sequence number accepted per client (0 = none yet).
+    seq_seen: Vec<u32>,
+    /// Consecutive hash mismatches per client; reset on clean receipt.
+    mismatch: Vec<u32>,
+    stats: NetStats,
+}
+
+impl LossyChannel {
+    /// `tier` holds one [`tier_mult`] per client; `seed` is the
+    /// experiment seed (the stream tag is applied here).
+    pub fn new(cfg: &ChannelConfig, tier: Vec<f64>, seed: u64) -> Self {
+        let n = tier.len();
+        Self {
+            cfg: cfg.clone(),
+            tier,
+            rng: Rng::new(seed ^ CHANNEL_SEED_XOR),
+            ge_bad: vec![false; n],
+            seq_next: vec![1; n],
+            seq_seen: vec![0; n],
+            mismatch: vec![0; n],
+            stats: NetStats::default(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.tier.len()
+    }
+
+    fn mult(&self, u: usize) -> f64 {
+        self.tier.get(u).copied().unwrap_or(1.0)
+    }
+
+    /// Roll the dice for one uplink attempt from client `u`.
+    ///
+    /// Draw order is fixed (loss → corrupt → dup → reorder, with an
+    /// early return on drop) so trajectories are reproducible; each
+    /// probability is scaled by the client's tier multiplier.
+    pub fn transmit(&mut self, u: usize) -> Transmission {
+        self.stats.sent += 1;
+        let mult = self.mult(u);
+        let loss = (self.cfg.loss * mult).clamp(0.0, MAX_EFF_LOSS);
+        let dropped = if loss <= 0.0 {
+            false
+        } else if self.cfg.burst > 0.0 {
+            // Gilbert–Elliott: Bad always drops, Good never.  With
+            // B = P(stay Bad), good→bad = L(1-B)/(1-L) and bad→good =
+            // 1-B give a stationary Bad (= loss) fraction of exactly L.
+            let b = self.cfg.burst;
+            let p_gb = (loss * (1.0 - b) / (1.0 - loss)).clamp(0.0, 1.0);
+            let p_bg = 1.0 - b;
+            let bad = if self.ge_bad[u] {
+                self.rng.uniform() >= p_bg
+            } else {
+                self.rng.uniform() < p_gb
+            };
+            self.ge_bad[u] = bad;
+            bad
+        } else {
+            self.rng.uniform() < loss
+        };
+        if dropped {
+            self.stats.dropped += 1;
+            return Transmission { dropped: true, ..Transmission::clean() };
+        }
+        let p_corrupt = (self.cfg.corrupt * mult).clamp(0.0, 1.0);
+        let corrupted = p_corrupt > 0.0 && self.rng.uniform() < p_corrupt;
+        let corrupt_bit = if corrupted { self.rng.next_u64() } else { 0 };
+        let p_dup = (self.cfg.dup * mult).clamp(0.0, 1.0);
+        let duplicated = p_dup > 0.0 && self.rng.uniform() < p_dup;
+        let p_reorder = (self.cfg.reorder * mult).clamp(0.0, 1.0);
+        let reordered = p_reorder > 0.0 && self.rng.uniform() < p_reorder;
+        self.stats.delivered += 1;
+        if duplicated {
+            // The second copy traverses the link too.
+            self.stats.sent += 1;
+            self.stats.delivered += 1;
+        }
+        if corrupted {
+            self.stats.corrupted += 1;
+        }
+        Transmission { dropped: false, corrupted, corrupt_bit, duplicated, reordered }
+    }
+
+    /// The sequence number client `u` stamps on its next upload.
+    pub fn next_seq(&mut self, u: usize) -> u32 {
+        let s = self.seq_next[u];
+        self.seq_next[u] = s.wrapping_add(1);
+        s
+    }
+
+    /// The sequence number of client `u`'s most recent upload — the
+    /// one a retransmission re-sends.  Meaningful only after at least
+    /// one [`LossyChannel::next_seq`] draw for `u`.
+    pub fn current_seq(&self, u: usize) -> u32 {
+        self.seq_next[u].wrapping_sub(1)
+    }
+
+    /// Accept `seq` from client `u` iff it is strictly newer than
+    /// anything already accepted — duplicates and reordered stale
+    /// copies return false and must not reach the merge.
+    pub fn accept_seq(&mut self, u: usize, seq: u32) -> bool {
+        if seq > self.seq_seen[u] {
+            self.seq_seen[u] = seq;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Retransmission timeout for the given (0-based) attempt number:
+    /// `retry_base · rto_mult^attempt · (1 + jitter)`, jitter seeded.
+    pub fn rto(&mut self, attempt: u32) -> f64 {
+        let base = self.cfg.retry_base * self.cfg.rto_mult.powi(attempt as i32);
+        base * (1.0 + JITTER_FRAC * self.rng.uniform())
+    }
+
+    /// Record a hash mismatch from client `u`; returns the consecutive
+    /// count (≥ `tamper_threshold` ⇒ escalate to the committee).
+    pub fn note_mismatch(&mut self, u: usize) -> u32 {
+        self.mismatch[u] = self.mismatch[u].saturating_add(1);
+        self.mismatch[u]
+    }
+
+    /// A verified payload arrived from `u` — benign corruption over.
+    pub fn clear_mismatch(&mut self, u: usize) {
+        self.mismatch[u] = 0;
+    }
+
+    pub fn note_retry(&mut self) {
+        self.stats.retries += 1;
+    }
+
+    pub fn note_gave_up(&mut self) {
+        self.stats.gave_up += 1;
+    }
+
+    pub fn note_partial_merge(&mut self) {
+        self.stats.partial_merges += 1;
+    }
+
+    pub fn stats(&self) -> NetStats {
+        self.stats
+    }
+
+    /// Zero the per-round counters (sequence/chain state persists).
+    pub fn round_reset(&mut self) {
+        self.stats = NetStats::default();
+    }
+
+    /// Flat `u64` words: RNG state, n, per-client chain/sequence/
+    /// mismatch state, then the in-flight round counters (so a
+    /// mid-retry checkpoint reproduces the same jsonl block).
+    pub fn state(&self) -> Vec<u64> {
+        let n = self.tier.len();
+        let mut w = Vec::with_capacity(2 + 4 * n + 7);
+        w.push(self.rng.state());
+        w.push(n as u64);
+        for u in 0..n {
+            w.push(u64::from(self.ge_bad[u]));
+            w.push(u64::from(self.seq_next[u]));
+            w.push(u64::from(self.seq_seen[u]));
+            w.push(u64::from(self.mismatch[u]));
+        }
+        let s = &self.stats;
+        w.extend([
+            s.sent,
+            s.delivered,
+            s.dropped,
+            s.corrupted,
+            s.retries,
+            s.gave_up,
+            s.partial_merges,
+        ]);
+        w
+    }
+
+    /// Inverse of [`LossyChannel::state`].
+    pub fn restore_state(&mut self, words: &[u64]) -> Result<()> {
+        let n = self.tier.len();
+        if words.len() != 2 + 4 * n + 7 {
+            bail!("channel state has {} words, expected {}", words.len(), 2 + 4 * n + 7);
+        }
+        if words[1] as usize != n {
+            bail!("channel state is for {} clients, fleet has {n}", words[1]);
+        }
+        self.rng = Rng::from_state(words[0]);
+        for u in 0..n {
+            let at = 2 + 4 * u;
+            self.ge_bad[u] = words[at] != 0;
+            self.seq_next[u] = words[at + 1] as u32;
+            self.seq_seen[u] = words[at + 2] as u32;
+            self.mismatch[u] = words[at + 3] as u32;
+        }
+        let at = 2 + 4 * n;
+        self.stats = NetStats {
+            sent: words[at],
+            delivered: words[at + 1],
+            dropped: words[at + 2],
+            corrupted: words[at + 3],
+            retries: words[at + 4],
+            gave_up: words[at + 5],
+            partial_merges: words[at + 6],
+        };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(loss: f64, burst: f64) -> ChannelConfig {
+        ChannelConfig { loss, burst, ..ChannelConfig::default() }
+    }
+
+    fn chan(c: &ChannelConfig, n: usize, seed: u64) -> LossyChannel {
+        LossyChannel::new(c, vec![1.0; n], seed)
+    }
+
+    #[test]
+    fn zero_loss_delivers_everything_clean() {
+        let mut ch = chan(&cfg(0.0, 0.0), 4, 7);
+        for _ in 0..200 {
+            for u in 0..4 {
+                assert_eq!(ch.transmit(u), Transmission::clean());
+            }
+        }
+        let s = ch.stats();
+        assert_eq!(s.sent, 800);
+        assert_eq!(s.delivered, 800);
+        assert_eq!(s.dropped + s.corrupted, 0);
+    }
+
+    #[test]
+    fn iid_loss_rate_matches_config() {
+        let mut ch = chan(&cfg(0.2, 0.0), 1, 11);
+        let n = 20_000;
+        let mut dropped = 0;
+        for _ in 0..n {
+            if ch.transmit(0).dropped {
+                dropped += 1;
+            }
+        }
+        let rate = dropped as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.02, "iid loss rate {rate}");
+    }
+
+    #[test]
+    fn gilbert_elliott_stationary_loss_matches_config_and_bursts() {
+        let mut ch = chan(&cfg(0.2, 0.8), 1, 13);
+        let n = 50_000;
+        let mut dropped = 0;
+        let mut runs = 0;
+        let mut prev = false;
+        for _ in 0..n {
+            let d = ch.transmit(0).dropped;
+            if d {
+                dropped += 1;
+                if !prev {
+                    runs += 1;
+                }
+            }
+            prev = d;
+        }
+        let rate = dropped as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.03, "GE stationary loss {rate}");
+        // Burstiness: mean loss-run length must be ≈ 1/(1-B) = 5, far
+        // above the iid value of 1/(1-L) = 1.25.
+        let mean_run = dropped as f64 / runs as f64;
+        assert!(mean_run > 3.0, "mean loss-run length {mean_run} not bursty");
+    }
+
+    #[test]
+    fn tier_multiplier_scales_loss() {
+        let c = cfg(0.1, 0.0);
+        let mut slow = LossyChannel::new(&c, vec![tier_mult(35.0)], 17);
+        let mut fast = LossyChannel::new(&c, vec![tier_mult(300.0)], 17);
+        let n = 20_000;
+        let (mut ds, mut df) = (0, 0);
+        for _ in 0..n {
+            ds += u32::from(slow.transmit(0).dropped);
+            df += u32::from(fast.transmit(0).dropped);
+        }
+        let (rs, rf) = (ds as f64 / n as f64, df as f64 / n as f64);
+        assert!((rs - 0.15).abs() < 0.02, "lte-tier loss {rs}");
+        assert!((rf - 0.05).abs() < 0.02, "5g-tier loss {rf}");
+    }
+
+    #[test]
+    fn sequence_suppression_is_monotone() {
+        let mut ch = chan(&cfg(0.0, 0.0), 2, 1);
+        let s1 = ch.next_seq(0);
+        assert_eq!(s1, 1);
+        assert!(ch.accept_seq(0, s1));
+        assert!(!ch.accept_seq(0, s1), "duplicate must be suppressed");
+        let s2 = ch.next_seq(0);
+        assert!(ch.accept_seq(0, s2));
+        assert!(!ch.accept_seq(0, s1), "stale reordered copy must be suppressed");
+        // Client 1's stream is independent.
+        let t1 = ch.next_seq(1);
+        assert!(ch.accept_seq(1, t1));
+    }
+
+    #[test]
+    fn rto_grows_exponentially_with_bounded_jitter() {
+        let c = ChannelConfig { retry_base: 0.5, rto_mult: 2.0, ..ChannelConfig::default() };
+        let mut ch = LossyChannel::new(&c, vec![1.0], 3);
+        for attempt in 0..4u32 {
+            let base = 0.5 * 2.0f64.powi(attempt as i32);
+            let rto = ch.rto(attempt);
+            assert!(rto >= base && rto < base * 1.5, "attempt {attempt}: rto {rto}");
+        }
+    }
+
+    #[test]
+    fn mismatch_counter_accumulates_and_clears() {
+        let mut ch = chan(&cfg(0.0, 0.0), 1, 5);
+        assert_eq!(ch.note_mismatch(0), 1);
+        assert_eq!(ch.note_mismatch(0), 2);
+        ch.clear_mismatch(0);
+        assert_eq!(ch.note_mismatch(0), 1);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_exact_stream() {
+        let c = ChannelConfig { loss: 0.3, corrupt: 0.1, dup: 0.05, burst: 0.5, ..Default::default() };
+        let mut a = chan(&c, 3, 99);
+        for i in 0..57 {
+            a.transmit(i % 3);
+            a.next_seq(i % 3);
+        }
+        a.note_mismatch(1);
+        let words = a.state();
+        let mut b = chan(&c, 3, 99);
+        b.restore_state(&words).unwrap();
+        for i in 0..100 {
+            assert_eq!(a.transmit(i % 3), b.transmit(i % 3), "attempt {i}");
+            assert_eq!(a.rto((i % 5) as u32).to_bits(), b.rto((i % 5) as u32).to_bits());
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert!(b.restore_state(&words[..3]).is_err(), "truncated state must be rejected");
+    }
+
+    #[test]
+    fn seeded_determinism_and_seed_sensitivity() {
+        let c = cfg(0.25, 0.4);
+        let mut a = chan(&c, 2, 41);
+        let mut b = chan(&c, 2, 41);
+        let mut other = chan(&c, 2, 42);
+        let mut diverged = false;
+        for i in 0..500 {
+            let u = i % 2;
+            assert_eq!(a.transmit(u), b.transmit(u));
+            if a.stats().dropped != {
+                other.transmit(u);
+                other.stats().dropped
+            } {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "different seeds must yield different loss patterns");
+    }
+
+    #[test]
+    fn tier_mult_bands() {
+        assert!((tier_mult(35.0) - 1.5).abs() < 1e-12);
+        assert!((tier_mult(100.0) - 1.0).abs() < 1e-12);
+        assert!((tier_mult(300.0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,420 @@
+//! Lossy-channel acceptance testbed: the contraction world from
+//! [`crate::transport::testbed`] with the real [`LossyChannel`] spliced
+//! between every client and the server.  Used by `benches/netfault.rs`
+//! and the artifact-free acceptance tests for the netfault gate: with
+//! retry + partial-cohort merging, a 10% loss / 2% corruption link must
+//! recover ≥ 97% of clean quality with no honest client quarantined,
+//! while the no-retry baseline visibly degrades.
+//!
+//! World model: the *mean* optimum `T` is all-ones, but each client `u`
+//! contracts toward its own target `T + o_u` where the offsets `o_u`
+//! are seeded and **centered** (`Σ_u o_u = 0`).  A full-cohort FedAvg
+//! therefore converges to `T` exactly, while every excluded client
+//! biases the fixed point toward the survivors' mean — so give-ups and
+//! quarantines have a real, measurable quality cost instead of merely
+//! shrinking the averaging set.  This is what makes the no-retry
+//! baseline degrade: at `--tamper-threshold 1` a single benign
+//! corrupted delivery (no retry to disambiguate) quarantines an honest
+//! client permanently, and the fleet bias compounds.
+//!
+//! Every upload crosses the wire through the real transport codec
+//! (seq-stamped header, FNV-1a trailer); corruption flips a real
+//! payload bit via [`corrupt_wire`] and is caught by `Codec::verify`,
+//! tampering is applied post-hash at encode (so retransmissions carry
+//! it too — the signature that distinguishes it from benign noise).
+
+use super::LossyChannel;
+use crate::config::ChannelConfig;
+use crate::lora::{fedavg_joined_into, AdapterSet};
+use crate::model::ModelDims;
+use crate::tensor::rng::Rng;
+use crate::transport::{corrupt_wire, Codec, QuantKind};
+use anyhow::Result;
+
+/// Per-round contraction toward each client's target (see
+/// [`crate::transport::testbed`] for why 0.05).
+pub const ETA: f32 = 0.05;
+/// Per-coordinate honest noise std.
+pub const NOISE: f64 = 1e-4;
+/// Per-coordinate std of the centered client-target offsets: large
+/// enough that losing clients visibly biases the fixed point, small
+/// enough that the clean run still converges to ≈ the noise floor.
+pub const OFFSET: f64 = 0.15;
+
+/// One channel configuration of the synthetic run.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub n: usize,
+    pub rounds: usize,
+    /// Channel dice: stationary drop probability per attempt.
+    pub loss: f64,
+    /// Per-delivery bit-corruption probability.
+    pub corrupt: f64,
+    /// Duplicate-copy probability (sequence-suppressed at the server).
+    pub dup: f64,
+    /// Stale-reordered-arrival probability (also sequence-suppressed).
+    pub reorder: f64,
+    /// Gilbert–Elliott P(stay Bad); 0 ⇒ independent losses.
+    pub burst: f64,
+    /// Retransmissions allowed after the first attempt (0 = no retry).
+    pub retry_max: usize,
+    /// Consecutive hash mismatches before a client is quarantined.
+    pub tamper_threshold: usize,
+    /// Clients `0..tamper` corrupt every payload post-hash (a real
+    /// attacker: retransmissions fail verification too).
+    pub tamper: usize,
+    /// Transport knobs (the wire is always the real codec here).
+    pub topk_frac: f64,
+    pub quant: QuantKind,
+    pub seed: u64,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Self {
+            n: 10,
+            rounds: 200,
+            loss: 0.0,
+            corrupt: 0.0,
+            dup: 0.0,
+            reorder: 0.0,
+            burst: 0.0,
+            retry_max: 3,
+            tamper_threshold: 1,
+            tamper: 0,
+            topk_frac: 0.05,
+            quant: QuantKind::Q8,
+            seed: 41,
+        }
+    }
+}
+
+/// What a scenario run produced.
+#[derive(Debug, Clone, Copy)]
+pub struct Outcome {
+    /// `1 − min(1, final_dist / d0)`; 0 if the global went non-finite.
+    pub quality: f64,
+    pub final_dist: f64,
+    pub d0: f64,
+    /// Cumulative channel counters over the whole run.
+    pub net: super::NetStats,
+    /// Honest clients (`u ≥ tamper`) quarantined by the mismatch
+    /// threshold — the gate requires exactly zero.
+    pub quarantined_honest: usize,
+    /// Tampering clients caught by the threshold.
+    pub quarantined_tamper: usize,
+}
+
+fn dist(a: &AdapterSet, b: &AdapterSet) -> Result<f64> {
+    let mut acc = 0.0f64;
+    for (x, y) in a.tensors.iter().zip(b.tensors.iter()) {
+        for (p, q) in x.as_f32()?.iter().zip(y.as_f32()?) {
+            let d = (*p - *q) as f64;
+            acc += d * d;
+        }
+    }
+    Ok(acc.sqrt())
+}
+
+/// Run one scenario to completion and score it.
+pub fn run(sc: &Scenario) -> Result<Outcome> {
+    let dims = ModelDims::mini();
+    let layers = dims.layers;
+    let k = layers / 2;
+    let mut truth = AdapterSet::zeros(&dims, layers);
+    for t in truth.tensors.iter_mut() {
+        t.as_f32_mut()?.fill(1.0);
+    }
+    let mut global = AdapterSet::zeros(&dims, layers);
+    let d0 = dist(&global, &truth)?;
+    let mut rng = Rng::new(sc.seed);
+    // Centered per-client target offsets: draw, then subtract the
+    // cross-client mean per coordinate so the full-fleet optimum is T.
+    let mut offsets: Vec<AdapterSet> =
+        (0..sc.n).map(|_| AdapterSet::zeros(&dims, layers)).collect();
+    for i in 0..4 {
+        let len = offsets[0].tensors[i].as_f32()?.len();
+        for j in 0..len {
+            let mut mean = 0.0f64;
+            for o in offsets.iter_mut() {
+                let v = OFFSET * rng.normal();
+                o.tensors[i].as_f32_mut()?[j] = v as f32;
+                mean += v;
+            }
+            let mean = (mean / sc.n as f64) as f32;
+            for o in offsets.iter_mut() {
+                o.tensors[i].as_f32_mut()?[j] -= mean;
+            }
+        }
+    }
+    let cfg = ChannelConfig {
+        loss: sc.loss,
+        corrupt: sc.corrupt,
+        dup: sc.dup,
+        reorder: sc.reorder,
+        burst: sc.burst,
+        retry_max: sc.retry_max,
+        tamper_threshold: sc.tamper_threshold,
+        ..ChannelConfig::default()
+    };
+    let mut ch = LossyChannel::new(&cfg, vec![1.0; sc.n], sc.seed);
+    let mut codec = Codec::new(sc.topk_frac, sc.quant, false);
+    let mut cs: Vec<AdapterSet> = (0..sc.n).map(|_| AdapterSet::zeros(&dims, k)).collect();
+    let mut ss: Vec<AdapterSet> = (0..sc.n).map(|_| AdapterSet::zeros(&dims, layers - k)).collect();
+    let mut decoded: Vec<AdapterSet> = (0..sc.n).map(|_| AdapterSet::zeros(&dims, k)).collect();
+    let mut agg = AdapterSet::zeros(&dims, layers);
+    let mut wire: Vec<u8> = Vec::new();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut ok: Vec<bool> = vec![false; sc.n];
+    let mut quarantined: Vec<bool> = vec![false; sc.n];
+
+    for _round in 0..sc.rounds {
+        for u in 0..sc.n {
+            if quarantined[u] {
+                continue;
+            }
+            for i in 0..4 {
+                let inner: usize = global.tensors[i].shape[1..].iter().product();
+                let b = global.tensors[i].as_f32()?;
+                let t = truth.tensors[i].as_f32()?;
+                let o = offsets[u].tensors[i].as_f32()?;
+                let split = k * inner;
+                for (j, x) in cs[u].tensors[i].as_f32_mut()?.iter_mut().enumerate() {
+                    let tgt = t[j] + o[j];
+                    *x = b[j] + ETA * (tgt - b[j]) + (NOISE * rng.normal()) as f32;
+                }
+                for (j, x) in ss[u].tensors[i].as_f32_mut()?.iter_mut().enumerate() {
+                    let g = split + j;
+                    let tgt = t[g] + o[g];
+                    *x = b[g] + ETA * (tgt - b[g]) + (NOISE * rng.normal()) as f32;
+                }
+            }
+        }
+        codec.round_reset();
+        for u in 0..sc.n {
+            ok[u] = false;
+            if quarantined[u] {
+                continue;
+            }
+            // Encode once per upload; every retransmission re-sends the
+            // same bytes under the same sequence number.
+            let seq = ch.next_seq(u);
+            codec.stage_seq(seq);
+            if u < sc.tamper {
+                codec.tamper_next(1);
+            }
+            {
+                let (bv, _) = global.split_at_views(k)?;
+                codec.stage_delta(&cs[u], &bv)?;
+                let payload = codec.encode_staged(None)?;
+                wire.clear();
+                wire.extend_from_slice(payload);
+            }
+            let attempts = sc.retry_max + 1;
+            for a in 0..attempts {
+                let tx = ch.transmit(u);
+                let mut failed = tx.dropped;
+                if !failed {
+                    buf.clear();
+                    buf.extend_from_slice(&wire);
+                    if tx.corrupted {
+                        corrupt_wire(&mut buf, tx.corrupt_bit);
+                    }
+                    if !Codec::verify(&buf) {
+                        // Hash mismatch: benign corruption retries; only
+                        // threshold consecutive failures escalate.
+                        let m = ch.note_mismatch(u) as usize;
+                        if m >= sc.tamper_threshold {
+                            quarantined[u] = true;
+                        }
+                        failed = true;
+                    } else {
+                        // A stale reordered arrival carries the previous
+                        // sequence number; dup/stale copies never merge.
+                        let eff = if tx.reordered { seq.wrapping_sub(1) } else { seq };
+                        if ch.accept_seq(u, eff) {
+                            ch.clear_mismatch(u);
+                            let (bv, _) = global.split_at_views(k)?;
+                            Codec::decode_into(&buf, &bv, &mut decoded[u])?;
+                            ok[u] = true;
+                        } else {
+                            failed = true;
+                        }
+                    }
+                }
+                if ok[u] || quarantined[u] {
+                    break;
+                }
+                if failed && a + 1 < attempts {
+                    ch.note_retry();
+                } else if failed {
+                    ch.note_gave_up();
+                }
+            }
+        }
+        let active = quarantined.iter().filter(|&&q| !q).count();
+        let mut subs: Vec<(f32, &AdapterSet, &AdapterSet)> = (0..sc.n)
+            .filter(|&u| ok[u])
+            .map(|u| (1.0f32, &decoded[u], &ss[u]))
+            .collect();
+        if subs.is_empty() {
+            // Graceful degradation: an empty merge leaves the model
+            // standing; the round simply produced no aggregate.
+            continue;
+        }
+        if subs.len() < active {
+            ch.note_partial_merge();
+        }
+        // Renormalize over the partial cohort.
+        let w = 1.0 / subs.len() as f32;
+        for sub in subs.iter_mut() {
+            sub.0 = w;
+        }
+        fedavg_joined_into(&subs, &mut agg)?;
+        drop(subs);
+        for (g, a) in global.tensors.iter_mut().zip(agg.tensors.iter()) {
+            g.as_f32_mut()?.copy_from_slice(a.as_f32()?);
+        }
+    }
+    let final_dist = dist(&global, &truth)?;
+    let quality =
+        if final_dist.is_finite() { 1.0 - (final_dist / d0).min(1.0) } else { 0.0 };
+    let quarantined_tamper = quarantined[..sc.tamper.min(sc.n)].iter().filter(|&&q| q).count();
+    let quarantined_honest =
+        quarantined[sc.tamper.min(sc.n)..].iter().filter(|&&q| q).count();
+    Ok(Outcome {
+        quality,
+        final_dist,
+        d0,
+        net: ch.stats(),
+        quarantined_honest,
+        quarantined_tamper,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_channel_converges_and_counts_cleanly() {
+        let out = run(&Scenario::default()).unwrap();
+        assert!(out.quality > 0.99, "clean quality {} below noise floor", out.quality);
+        let s = out.net;
+        assert_eq!(s.sent, s.delivered, "zero loss must deliver every attempt");
+        assert_eq!(s.dropped + s.corrupted + s.retries + s.gave_up + s.partial_merges, 0);
+        assert_eq!(out.quarantined_honest + out.quarantined_tamper, 0);
+    }
+
+    #[test]
+    fn gate_config_recovers_clean_quality() {
+        let clean = run(&Scenario::default()).unwrap();
+        let out = run(&Scenario {
+            loss: 0.10,
+            corrupt: 0.02,
+            retry_max: 3,
+            tamper_threshold: 4,
+            ..Scenario::default()
+        })
+        .unwrap();
+        assert!(
+            out.quality >= 0.97 * clean.quality,
+            "lossy quality {} below 97% of clean {}",
+            out.quality,
+            clean.quality
+        );
+        assert_eq!(out.quarantined_honest, 0, "benign corruption must never quarantine");
+        assert!(out.net.retries > 0, "a 10% loss run must exercise retransmission");
+        assert!(out.net.dropped > 0);
+    }
+
+    #[test]
+    fn no_retry_baseline_degrades() {
+        let with_retry = run(&Scenario {
+            loss: 0.10,
+            corrupt: 0.02,
+            retry_max: 3,
+            tamper_threshold: 4,
+            ..Scenario::default()
+        })
+        .unwrap();
+        let bare = run(&Scenario {
+            loss: 0.10,
+            corrupt: 0.02,
+            retry_max: 0,
+            tamper_threshold: 1,
+            ..Scenario::default()
+        })
+        .unwrap();
+        assert!(bare.net.gave_up > 0, "no-retry must give up on lost uploads");
+        assert!(bare.net.partial_merges > 0, "no-retry must merge partial cohorts");
+        assert!(
+            bare.quarantined_honest > 0,
+            "immediate-flag at threshold 1 must misfire on benign corruption"
+        );
+        assert!(
+            bare.quality < with_retry.quality - 0.005,
+            "no-retry quality {} must trail retry quality {}",
+            bare.quality,
+            with_retry.quality
+        );
+    }
+
+    #[test]
+    fn tamperers_are_quarantined_while_honest_corruption_is_retried() {
+        let out = run(&Scenario {
+            loss: 0.05,
+            corrupt: 0.02,
+            retry_max: 3,
+            tamper_threshold: 3,
+            tamper: 2,
+            ..Scenario::default()
+        })
+        .unwrap();
+        assert_eq!(out.quarantined_tamper, 2, "both tamperers must hit the threshold");
+        assert_eq!(out.quarantined_honest, 0, "honest corruption must be retried, not flagged");
+        // The 8 honest clients alone still converge (their offsets no
+        // longer cancel exactly, so the bar is below the clean floor).
+        assert!(out.quality > 0.9, "quality {} collapsed under tampering", out.quality);
+    }
+
+    #[test]
+    fn dup_and_reorder_are_suppressed_not_merged_twice() {
+        let clean = run(&Scenario::default()).unwrap();
+        let out = run(&Scenario { dup: 0.2, reorder: 0.1, ..Scenario::default() }).unwrap();
+        // Duplicate copies and reorder-retries cost traffic (> one
+        // attempt per upload) but never correctness.
+        assert!(out.net.sent > 2000, "sent {} should exceed n*rounds", out.net.sent);
+        assert!(
+            (out.quality - clean.quality).abs() < 0.02,
+            "dup/reorder shifted quality: {} vs clean {}",
+            out.quality,
+            clean.quality
+        );
+        assert_eq!(out.net.gave_up, 0, "reordered copies must be re-sent within budget");
+    }
+
+    #[test]
+    fn testbed_is_seed_deterministic() {
+        let sc = Scenario {
+            loss: 0.15,
+            corrupt: 0.05,
+            dup: 0.05,
+            reorder: 0.05,
+            burst: 0.5,
+            rounds: 60,
+            tamper_threshold: 4,
+            ..Scenario::default()
+        };
+        let a = run(&sc).unwrap();
+        let b = run(&sc).unwrap();
+        assert_eq!(a.quality.to_bits(), b.quality.to_bits(), "same seed, same trajectory");
+        assert_eq!(a.net, b.net);
+        let c = run(&Scenario { seed: 42, ..sc }).unwrap();
+        assert_ne!(
+            (a.net.dropped, a.net.corrupted),
+            (c.net.dropped, c.net.corrupted),
+            "seed must matter"
+        );
+    }
+}

@@ -244,6 +244,12 @@ pub struct RobustConfig {
     pub sanitize: bool,
     /// Sanitizer rejects deltas with norm > mult × the cohort median.
     pub sanitize_mult: f64,
+    /// Drive the median-norm multiple from an EWMA of the observed
+    /// per-round norm spread (`--sanitize-mult adaptive`) instead of
+    /// the fixed `sanitize_mult`.  Off (the default) keeps the fixed
+    /// threshold bit-identically; adaptive state is checkpointed only
+    /// when this is set.
+    pub sanitize_adaptive: bool,
     /// Committee witness fraction per round (0 = no spot verification).
     pub verify_frac: f64,
     /// Estimator winsor factor k: observations clamped into
@@ -267,6 +273,7 @@ impl Default for RobustConfig {
             clip: 1.0,
             sanitize: false,
             sanitize_mult: 10.0,
+            sanitize_adaptive: false,
             verify_frac: 0.0,
             winsor: f64::INFINITY,
             quarantine_ttl: 0,
@@ -342,6 +349,67 @@ impl TransportConfig {
     }
 }
 
+/// Lossy-channel knobs (`[channel]` section): benign network failure
+/// between clients and the server — seeded drop/corrupt/dup/reorder
+/// dice with Gilbert–Elliott burst loss, plus the server's bounded
+/// retransmission policy.  All probabilities default to 0; an all-zero
+/// channel constructs nothing and is guaranteed bit-identical to a run
+/// without this layer (trajectories, billing, checkpoint layout).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelConfig {
+    /// Stationary per-attempt uplink loss probability.
+    pub loss: f64,
+    /// Per-delivery bit-corruption probability (flips one payload bit;
+    /// caught by the FNV-1a hash and retried).
+    pub corrupt: f64,
+    /// Per-delivery duplication probability (second copy suppressed by
+    /// sequence numbers).
+    pub dup: f64,
+    /// Per-delivery reorder probability (the copy arrives stale and is
+    /// sequence-suppressed, forcing a retransmission).
+    pub reorder: f64,
+    /// Gilbert–Elliott burstiness: P(stay Bad).  0 ⇒ independent
+    /// Bernoulli losses; higher values cluster the same stationary
+    /// loss rate into bursts.
+    pub burst: f64,
+    /// Max retransmissions per upload before the server gives up on
+    /// the client for this merge (0 = no retries).
+    pub retry_max: usize,
+    /// Base retransmission timeout in sim seconds.
+    pub retry_base: f64,
+    /// Exponential backoff multiplier per attempt (≥ 1).
+    pub rto_mult: f64,
+    /// Consecutive hash mismatches from one client before escalating
+    /// to the committee/quarantine path.  1 reproduces the historical
+    /// immediate flag bit-identically.
+    pub tamper_threshold: usize,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        Self {
+            loss: 0.0,
+            corrupt: 0.0,
+            dup: 0.0,
+            reorder: 0.0,
+            burst: 0.0,
+            retry_max: 3,
+            retry_base: 0.5,
+            rto_mult: 2.0,
+            tamper_threshold: 1,
+        }
+    }
+}
+
+impl ChannelConfig {
+    /// Whether the lossy channel engages at all.  With every failure
+    /// probability at zero the session constructs no channel — the
+    /// retry policy knobs alone never change a trajectory.
+    pub fn is_active(&self) -> bool {
+        self.loss > 0.0 || self.corrupt > 0.0 || self.dup > 0.0 || self.reorder > 0.0
+    }
+}
+
 impl RobustConfig {
     /// Whether any fault/defense machinery engages on the aggregation
     /// path.  The estimator winsor clamp is deliberately excluded: it
@@ -384,6 +452,9 @@ pub struct ExperimentConfig {
     /// Compressed update uploads (top-k + quantization + error
     /// feedback).  `compress = none` = dense uploads, bit-exactly.
     pub transport: TransportConfig,
+    /// Lossy uplink channel + retransmission policy.  All-zero
+    /// probabilities = the reliable path, bit-exactly.
+    pub channel: ChannelConfig,
     pub server: ServerProfile,
     pub train: TrainConfig,
     /// Root of the artifacts directory.
@@ -414,6 +485,7 @@ impl ExperimentConfig {
             robust: RobustConfig::default(),
             asynchrony: AsyncConfig::default(),
             transport: TransportConfig::default(),
+            channel: ChannelConfig::default(),
             server: ServerProfile::rtx4080s(),
             train: TrainConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -576,6 +648,12 @@ impl ExperimentConfig {
         if !r.sanitize_mult.is_finite() || r.sanitize_mult <= 0.0 {
             bail!("robust sanitize_mult must be finite and > 0, got {}", r.sanitize_mult);
         }
+        if r.sanitize_adaptive && !r.sanitize {
+            bail!(
+                "sanitize_adaptive requires the sanitizer (--sanitize) — an adaptive \
+                 threshold with no sanitizer is never silently ignored"
+            );
+        }
         if !r.verify_frac.is_finite() || !(0.0..=1.0).contains(&r.verify_frac) {
             bail!("robust verify_frac must be in [0, 1], got {}", r.verify_frac);
         }
@@ -622,6 +700,55 @@ impl ExperimentConfig {
                 "compressed transport requires a parallel scheme (ours|sfl) — sl uploads no \
                  cohort deltas"
             );
+        }
+        let ch = &self.channel;
+        for (name, p) in [
+            ("loss", ch.loss),
+            ("corrupt", ch.corrupt),
+            ("dup", ch.dup),
+            ("reorder", ch.reorder),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                bail!("channel {name} must be finite and in [0, 1], got {p}");
+            }
+        }
+        if !ch.burst.is_finite() || !(0.0..1.0).contains(&ch.burst) {
+            bail!("channel burst must be finite and in [0, 1), got {}", ch.burst);
+        }
+        if !ch.retry_base.is_finite() || ch.retry_base <= 0.0 {
+            bail!("channel retry_base must be finite and > 0, got {}", ch.retry_base);
+        }
+        if !ch.rto_mult.is_finite() || ch.rto_mult < 1.0 {
+            bail!("channel rto_mult must be finite and >= 1, got {}", ch.rto_mult);
+        }
+        if ch.tamper_threshold == 0 {
+            bail!("channel tamper_threshold must be >= 1 (1 = historical immediate flag)");
+        }
+        if !ch.is_active() {
+            // Retry-policy knobs without a lossy channel would be dead
+            // config — reject instead of silently ignoring (the same
+            // contract as transport's quant-without-compress).
+            let d = ChannelConfig::default();
+            if ch.retry_max != d.retry_max
+                || ch.retry_base != d.retry_base
+                || ch.rto_mult != d.rto_mult
+                || ch.tamper_threshold != d.tamper_threshold
+            {
+                bail!(
+                    "channel retry/timeout knobs require a lossy channel (a nonzero \
+                     loss/corrupt/dup/reorder probability) — retry policy is never \
+                     silently ignored"
+                );
+            }
+        }
+        if ch.is_active() && self.scheme == SchemeKind::Sl {
+            bail!(
+                "the lossy channel requires a parallel scheme (ours|sfl) — sl uploads no \
+                 cohort deltas"
+            );
+        }
+        if ch.burst > 0.0 && ch.loss <= 0.0 {
+            bail!("channel burst requires a nonzero loss rate (burst shapes the loss process)");
         }
         Ok(())
     }
@@ -770,6 +897,7 @@ impl ExperimentConfig {
             r.clip = s.parse_or("clip", r.clip)?;
             r.sanitize = s.parse_or("sanitize", r.sanitize)?;
             r.sanitize_mult = s.parse_or("sanitize_mult", r.sanitize_mult)?;
+            r.sanitize_adaptive = s.parse_or("sanitize_adaptive", r.sanitize_adaptive)?;
             r.verify_frac = s.parse_or("verify_frac", r.verify_frac)?;
             r.winsor = s.parse_or("winsor", r.winsor)?;
             r.quarantine_ttl = s.parse_or("quarantine_ttl", r.quarantine_ttl)?;
@@ -793,6 +921,19 @@ impl ExperimentConfig {
                 tp.quant = v.parse()?;
             }
             tp.error_feedback = s.parse_or("error_feedback", tp.error_feedback)?;
+        }
+        // A [channel] section configures the lossy uplink.
+        if let Some(s) = doc.sections_named("channel").next() {
+            let ch = &mut cfg.channel;
+            ch.loss = s.parse_or("loss", ch.loss)?;
+            ch.corrupt = s.parse_or("corrupt", ch.corrupt)?;
+            ch.dup = s.parse_or("dup", ch.dup)?;
+            ch.reorder = s.parse_or("reorder", ch.reorder)?;
+            ch.burst = s.parse_or("burst", ch.burst)?;
+            ch.retry_max = s.parse_or("retry_max", ch.retry_max)?;
+            ch.retry_base = s.parse_or("retry_base", ch.retry_base)?;
+            ch.rto_mult = s.parse_or("rto_mult", ch.rto_mult)?;
+            ch.tamper_threshold = s.parse_or("tamper_threshold", ch.tamper_threshold)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -869,8 +1010,8 @@ impl ExperimentConfig {
         let r = &self.robust;
         out.push_str(&format!(
             "\n[robust]\nattack = {}\nattack_frac = {}\nattack_lambda = {}\nagg = {}\n\
-             trim = {}\nclip = {}\nsanitize = {}\nsanitize_mult = {}\nverify_frac = {}\n\
-             winsor = {}\nquarantine_ttl = {}\n",
+             trim = {}\nclip = {}\nsanitize = {}\nsanitize_mult = {}\nsanitize_adaptive = {}\n\
+             verify_frac = {}\nwinsor = {}\nquarantine_ttl = {}\n",
             r.attack,
             r.attack_frac,
             r.attack_lambda,
@@ -879,6 +1020,7 @@ impl ExperimentConfig {
             r.clip,
             r.sanitize,
             r.sanitize_mult,
+            r.sanitize_adaptive,
             r.verify_frac,
             r.winsor,
             r.quarantine_ttl
@@ -896,6 +1038,22 @@ impl ExperimentConfig {
         out.push_str(&format!(
             "\n[transport]\ncompress = {}\ntopk_frac = {}\nquant = {}\nerror_feedback = {}\n",
             tp.compress, tp.topk_frac, tp.quant, tp.error_feedback
+        ));
+        // The channel section always round-trips too — all-zero
+        // probabilities are the reliable uplink, bit-exactly.
+        let ch = &self.channel;
+        out.push_str(&format!(
+            "\n[channel]\nloss = {}\ncorrupt = {}\ndup = {}\nreorder = {}\nburst = {}\n\
+             retry_max = {}\nretry_base = {}\nrto_mult = {}\ntamper_threshold = {}\n",
+            ch.loss,
+            ch.corrupt,
+            ch.dup,
+            ch.reorder,
+            ch.burst,
+            ch.retry_max,
+            ch.retry_base,
+            ch.rto_mult,
+            ch.tamper_threshold
         ));
         // A synthesized fleet round-trips through its spec (same seed ⇒
         // bit-identical fleet); only hand-written fleets list clients.
@@ -1395,6 +1553,113 @@ mod tests {
         let back = ExperimentConfig::from_kv_file(&path).unwrap();
         assert_eq!(back.robust.quarantine_ttl, 5);
         assert!(back.train.timing_ewma_adaptive);
+    }
+
+    #[test]
+    fn channel_kv_roundtrip_is_symmetric() {
+        let dir = std::env::temp_dir().join("sfl_cfg_channel_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("channel.exp");
+        // Non-default knobs round-trip...
+        let mut c = ExperimentConfig::paper();
+        c.channel = ChannelConfig {
+            loss: 0.1,
+            corrupt: 0.02,
+            dup: 0.01,
+            reorder: 0.01,
+            burst: 0.6,
+            retry_max: 5,
+            retry_base: 0.25,
+            rto_mult: 1.5,
+            tamper_threshold: 3,
+        };
+        c.validate().unwrap();
+        assert!(c.channel.is_active());
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.channel, c.channel);
+        // ...and so does the reliable default — the [channel] section
+        // is always written, like [transport].
+        let d = ExperimentConfig::paper();
+        std::fs::write(&path, d.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert_eq!(back.channel, ChannelConfig::default());
+        assert!(!back.channel.is_active());
+    }
+
+    #[test]
+    fn all_zero_channel_is_not_active() {
+        let ch = ChannelConfig::default();
+        assert!(!ch.is_active());
+        assert!(ChannelConfig { loss: 0.1, ..ch.clone() }.is_active());
+        assert!(ChannelConfig { corrupt: 0.02, ..ch.clone() }.is_active());
+        assert!(ChannelConfig { dup: 0.01, ..ch.clone() }.is_active());
+        assert!(ChannelConfig { reorder: 0.01, ..ch }.is_active());
+    }
+
+    #[test]
+    fn invalid_channel_specs_rejected() {
+        let mut c = ExperimentConfig::paper();
+        c.channel.loss = 1.5;
+        assert!(c.validate().is_err());
+        c.channel.loss = f64::NAN;
+        assert!(c.validate().is_err(), "NaN loss must be rejected");
+        c.channel.loss = 0.1;
+        c.channel.burst = 1.0;
+        assert!(c.validate().is_err(), "burst = 1 (permanent Bad state) must be rejected");
+        c.channel.burst = 0.5;
+        c.validate().unwrap();
+        c.channel.retry_base = 0.0;
+        assert!(c.validate().is_err());
+        c.channel.retry_base = 0.5;
+        c.channel.rto_mult = 0.5;
+        assert!(c.validate().is_err(), "shrinking backoff must be rejected");
+        c.channel.rto_mult = 2.0;
+        c.channel.tamper_threshold = 0;
+        assert!(c.validate().is_err());
+        c.channel.tamper_threshold = 1;
+        c.validate().unwrap();
+        // Burst without loss shapes nothing.
+        c.channel.loss = 0.0;
+        c.channel.corrupt = 0.02;
+        assert!(c.validate().is_err(), "burst without loss must be rejected");
+        c.channel.burst = 0.0;
+        c.validate().unwrap();
+        // The channel needs a parallel scheme.
+        c.scheme = SchemeKind::Sl;
+        assert!(c.validate().is_err(), "sl + channel must be rejected");
+    }
+
+    #[test]
+    fn retry_knobs_without_lossy_channel_rejected() {
+        let mut c = ExperimentConfig::paper();
+        c.channel.retry_max = 7;
+        assert!(c.validate().is_err(), "retry_max on a reliable channel must be rejected");
+        c.channel = ChannelConfig::default();
+        c.channel.tamper_threshold = 3;
+        assert!(c.validate().is_err(), "tamper_threshold on a reliable channel must be rejected");
+        c.channel = ChannelConfig::default();
+        c.validate().unwrap();
+        // The same knobs are fine once the channel is lossy.
+        c.channel.loss = 0.05;
+        c.channel.retry_max = 7;
+        c.channel.tamper_threshold = 3;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn sanitize_adaptive_requires_sanitizer_and_roundtrips() {
+        let mut c = ExperimentConfig::paper();
+        c.robust.sanitize_adaptive = true;
+        assert!(c.validate().is_err(), "adaptive threshold without --sanitize must be rejected");
+        c.robust.sanitize = true;
+        c.validate().unwrap();
+        let dir = std::env::temp_dir().join("sfl_cfg_sanadapt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sanadapt.exp");
+        std::fs::write(&path, c.to_kv()).unwrap();
+        let back = ExperimentConfig::from_kv_file(&path).unwrap();
+        assert!(back.robust.sanitize && back.robust.sanitize_adaptive);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! [`RoundScratch`] arena, updated in place via the runtime's `*_into`
 //! primitives.
 
+use crate::channel::{tier_mult, LossyChannel, NetStats};
 use crate::checkpoint::{
     decode_f64s, decode_u64s, encode_f64s, encode_u64s, f64s_exact, load_adapters,
     load_iter_state, load_tensor_into, one_f64, one_i32, one_u64, save_adapters,
@@ -48,7 +49,7 @@ use crate::pool::{PoolStats, StatePool};
 use crate::runtime::{AdamState, ClientState, Engine, HeadState, ServerState};
 use crate::tensor::{ops, rng::Rng, store::ParamStore, HostTensor};
 use crate::trace::{EnvSnapshot, EnvTimeline, NoisyObservation, TraceKind};
-use crate::transport::{Codec, DecodeArena, TransportStats};
+use crate::transport::{corrupt_wire, Codec, DecodeArena, TransportStats};
 use anyhow::{bail, Result};
 use std::path::Path;
 
@@ -235,6 +236,10 @@ pub struct RoundReport {
     /// active) — the last merge's billed uplink/downlink bytes,
     /// uplink compression ratio, and error-feedback residual norm.
     pub transport: Option<TransportStats>,
+    /// Lossy-channel counters (present iff `[channel]` is active) —
+    /// this round's transmissions, drops, corruptions, retransmissions,
+    /// give-ups, and partial merges.
+    pub net: Option<NetStats>,
     /// Present on eval rounds.
     pub eval: Option<EvalPoint>,
 }
@@ -284,6 +289,11 @@ pub trait Scheme {
     /// Compressed-transport counters — `Some` only when the scheme runs
     /// the uplink codec (`[transport]` active).
     fn transport_stats(&self) -> Option<TransportStats> {
+        None
+    }
+    /// Lossy-channel counters — `Some` only when the scheme simulates
+    /// the lossy uplink (`[channel]` active).
+    fn net_stats(&self) -> Option<NetStats> {
         None
     }
     /// The shared parallel-scheme core, when the scheme has one — the
@@ -435,6 +445,29 @@ fn train_fingerprint(cfg: &ExperimentConfig) -> Vec<(&'static str, u64)> {
             ("transport_error_feedback", tp.error_feedback as u64),
         ]);
     }
+    // Channel knobs drive their own RNG stream, the retry billing, and
+    // the checkpoint key set (sequence/backoff state), so they are
+    // fingerprinted — but only when active, keeping channel-off
+    // layouts byte-stable.
+    let ch = &cfg.channel;
+    if ch.is_active() {
+        fp.extend_from_slice(&[
+            ("channel_loss", ch.loss.to_bits()),
+            ("channel_corrupt", ch.corrupt.to_bits()),
+            ("channel_dup", ch.dup.to_bits()),
+            ("channel_reorder", ch.reorder.to_bits()),
+            ("channel_burst", ch.burst.to_bits()),
+            ("channel_retry_max", ch.retry_max as u64),
+            ("channel_retry_base", ch.retry_base.to_bits()),
+            ("channel_rto_mult", ch.rto_mult.to_bits()),
+            ("channel_tamper_threshold", ch.tamper_threshold as u64),
+        ]);
+    }
+    // The adaptive sanitizer carries EWMA state in the checkpoint, so
+    // the mode itself is fingerprinted when on.
+    if r.sanitize_adaptive {
+        fp.push(("robust_sanitize_adaptive", 1));
+    }
     fp
 }
 
@@ -493,6 +526,13 @@ enum CoreTiming {
     Fixed(f64),
 }
 
+/// Adaptive sanitizer (`--sanitize-mult adaptive`): EWMA smoothing of
+/// the observed per-merge norm spread.
+const SPREAD_EWMA_ALPHA: f64 = 0.2;
+/// Adaptive sanitizer: effective multiplier = max(floor, gain · EWMA).
+const ADAPTIVE_MULT_FLOOR: f64 = 2.0;
+const ADAPTIVE_MULT_GAIN: f64 = 1.5;
+
 /// Defense-side state for Byzantine-tolerant aggregation: the witness
 /// committee, the robust-kernel choice, and reusable scratch buffers.
 /// Built only when any `[robust]` option is engaged — the plain
@@ -503,6 +543,15 @@ struct RobustDefense {
     clip: f64,
     sanitize: bool,
     sanitize_mult: f64,
+    /// `--sanitize-mult adaptive`: derive the outlier threshold from an
+    /// EWMA of the per-merge norm spread instead of the fixed
+    /// multiplier.  Off ⇒ the fixed path runs bit-identically.
+    sanitize_adaptive: bool,
+    /// EWMA of the per-merge norm spread (max / median); checkpointed
+    /// only when the adaptive mode is on.
+    spread_ewma: f64,
+    /// Merges that have contributed a spread observation so far.
+    spread_obs: u64,
     committee: Committee,
     /// Last aggregation's counters (streamed in round reports).
     stats: RobustStats,
@@ -513,6 +562,9 @@ struct RobustDefense {
     norms: Vec<f64>,
     keep: Vec<bool>,
     col: Vec<(f32, f32)>,
+    /// Clients re-admitted from quarantine this round (scratch for the
+    /// committee tick — their EF residuals are cleared on re-entry).
+    readmitted: Vec<usize>,
 }
 
 /// Uplink-compression state for the merge paths: the shared codec, the
@@ -583,6 +635,205 @@ impl TransportState {
     }
 }
 
+/// Lossy-channel state for the merge paths: the seeded channel model
+/// plus per-merge scratch for the retry-time and retry-byte accrual.
+/// Built only when `[channel]` is active — channel-off runs construct
+/// nothing, so numerics, billing, RNG streams, and checkpoint layout
+/// all stay bit-identical to the pre-channel code.
+struct ChannelState {
+    ch: LossyChannel,
+    /// Under `--async`, losses and retransmissions run on the engine's
+    /// Timeout/Retransmit events — the sync merge-time retry loop must
+    /// not roll the dice a second time.
+    // sflint:allow(checkpoint-coverage, rebuilt from config at load)
+    event_driven: bool,
+    /// Per-merge acceptance mask, parallel to the candidate list.
+    // sflint:allow(checkpoint-coverage, per-merge scratch; checkpoints are merge-aligned)
+    ok: Vec<bool>,
+    /// Retransmission legs each client incurred in the last sync merge.
+    // sflint:allow(checkpoint-coverage, per-merge scratch; checkpoints are merge-aligned)
+    extra_legs: Vec<u32>,
+    /// Backoff wait each client accumulated in the last sync merge.
+    // sflint:allow(checkpoint-coverage, per-merge scratch; checkpoints are merge-aligned)
+    backoff: Vec<f64>,
+}
+
+/// Outcome of one upload's bounded-retransmission protocol (sync merge).
+enum Delivery {
+    /// A verified, in-order copy was accepted (and decoded into the
+    /// arena when transport is active).
+    Accepted,
+    /// Retry budget exhausted — the sender is excluded from this merge
+    /// (graceful degradation), never flagged.
+    GaveUp,
+    /// `tamper_threshold` consecutive hash mismatches — persistent
+    /// integrity failure, escalated to the committee by robust callers.
+    Tampered,
+}
+
+/// Outcome of one event-level delivery attempt (`--async` mode).
+enum Attempt {
+    /// Push the update into the merge buffer.
+    Accepted,
+    /// Dropped / corrupted / stale — retransmit or give up.
+    Failed,
+    /// Consecutive-mismatch threshold reached — escalate.
+    Escalate,
+}
+
+impl ChannelState {
+    /// One event-level delivery attempt of client `u`'s in-flight
+    /// upload (async mode): channel dice plus sequence bookkeeping.
+    /// There are no wire bytes at the event layer — the codec's
+    /// verification runs later, at the merge — so a corrupted delivery
+    /// is the server's receive-side integrity failure here.
+    fn attempt_async(&mut self, u: usize, seq: u32, threshold: usize) -> Attempt {
+        let tx = self.ch.transmit(u);
+        if tx.dropped {
+            return Attempt::Failed;
+        }
+        if tx.corrupted {
+            if self.ch.note_mismatch(u) as usize >= threshold {
+                return Attempt::Escalate;
+            }
+            return Attempt::Failed;
+        }
+        // A reordered copy arrives stale (behind newer traffic);
+        // duplicates are likewise suppressed by the monotone check.
+        let eff = if tx.reordered { seq.wrapping_sub(1) } else { seq };
+        if self.ch.accept_seq(u, eff) {
+            self.ch.clear_mismatch(u);
+            Attempt::Accepted
+        } else {
+            Attempt::Failed
+        }
+    }
+}
+
+/// One client's upload across the lossy channel at a sync merge: stamp
+/// a sequence number, transmit, and retransmit on failure with seeded
+/// exponential backoff, up to `retry_max` retries.  With transport
+/// active the payload is encoded exactly once — retransmissions reuse
+/// the same wire bytes and sequence number, so error feedback is
+/// charged once per merge — and every delivered copy re-runs the
+/// literal FNV-1a verification (bit corruption flips a real wire bit,
+/// self-inverted before the next attempt).  Without transport the same
+/// dice and sequence bookkeeping run at message level: a corrupted
+/// delivery is an integrity failure without bytes.  Fills
+/// `ch.extra_legs[u]` / `ch.backoff[u]` for the retry-time accrual in
+/// [`ParallelCore::aggregation_elapsed`].
+#[allow(clippy::too_many_arguments)]
+fn channel_upload_sync(
+    ch: &mut ChannelState,
+    mut tp: Option<&mut TransportState>,
+    pool: &mut StatePool,
+    env: &SessionEnv<'_>,
+    slot: usize,
+    u: usize,
+    sub: Option<&AdapterSet>,
+    base: Option<&AdapterSet>,
+) -> Result<Delivery> {
+    let ccfg = &env.cfg.channel;
+    let seq = ch.ch.next_seq(u);
+    if let Some(t) = tp.as_deref_mut() {
+        let k = env.cuts[u];
+        {
+            let resident = pool.resident(u).ok_or_else(|| {
+                anyhow::anyhow!("participant {u} not resident at transport encode")
+            })?;
+            let x = sub.unwrap_or(&resident.cs.lora);
+            let b = base.unwrap_or_else(|| pool.baseline());
+            let (bv, _) = b.split_at_views(k)?;
+            t.codec.stage_seq(seq);
+            t.codec.stage_delta(x, &bv)?;
+        }
+        let ef = if t.codec.error_feedback() { Some(pool.ef_mut(u)?) } else { None };
+        let payload = t.codec.encode_staged(ef)?;
+        t.wire.clear();
+        t.wire.extend_from_slice(payload);
+    }
+    for attempt in 0..=ccfg.retry_max as u32 {
+        let tx = ch.ch.transmit(u);
+        if !tx.dropped {
+            // Integrity first: a sender-side tampered payload fails on
+            // *every* retransmission — that persistence is exactly what
+            // distinguishes tampering from channel corruption.
+            let verified = match tp.as_deref_mut() {
+                Some(t) => {
+                    if tx.corrupted {
+                        corrupt_wire(&mut t.wire, tx.corrupt_bit);
+                        let v = Codec::verify(&t.wire);
+                        // Self-inverse: restore the real bytes for the
+                        // next attempt (and for the decode below).
+                        corrupt_wire(&mut t.wire, tx.corrupt_bit);
+                        v
+                    } else {
+                        Codec::verify(&t.wire)
+                    }
+                }
+                None => !tx.corrupted,
+            };
+            if verified {
+                // Freshness: reordered copies arrive stale, duplicates
+                // replay an already-accepted number — both suppressed.
+                let eff = if tx.reordered { seq.wrapping_sub(1) } else { seq };
+                if ch.ch.accept_seq(u, eff) {
+                    ch.ch.clear_mismatch(u);
+                    if let Some(t) = tp.as_deref_mut() {
+                        let k = env.cuts[u];
+                        let b = base.unwrap_or_else(|| pool.baseline());
+                        let (bv, _) = b.split_at_views(k)?;
+                        Codec::decode_into(
+                            &t.wire,
+                            &bv,
+                            t.arena.slot_mut(slot, &env.dims_exec, k),
+                        )?;
+                    }
+                    return Ok(Delivery::Accepted);
+                }
+            } else {
+                let m = ch.ch.note_mismatch(u);
+                if m as usize >= ccfg.tamper_threshold {
+                    return Ok(Delivery::Tampered);
+                }
+            }
+        }
+        if (attempt as usize) < ccfg.retry_max {
+            ch.ch.note_retry();
+            ch.extra_legs[u] += 1;
+            ch.backoff[u] += ch.ch.rto(attempt);
+        } else {
+            ch.ch.note_gave_up();
+        }
+    }
+    Ok(Delivery::GaveUp)
+}
+
+/// Bill every retransmission leg the last sync merge incurred: a retry
+/// re-sends the full upload, so each leg bills the same real uplink
+/// bytes as the original (the codec's encoded size when transport is
+/// active, dense otherwise).
+fn bill_retry_traffic(
+    env: &SessionEnv<'_>,
+    ch: &ChannelState,
+    transport: Option<&TransportState>,
+    traffic: &mut TrafficMeter,
+) {
+    for (u, &legs) in ch.extra_legs.iter().enumerate() {
+        if legs == 0 {
+            continue;
+        }
+        let k = env.cuts[u];
+        let bytes = match transport {
+            Some(t) => t.codec.billed_bytes(k * env.dims_time.lora_params_per_layer()),
+            None => env.dims_time.lora_bytes(k),
+        };
+        for _ in 0..legs {
+            traffic.record(&Message::LoraUpload { bytes });
+        }
+    }
+}
+
 /// Bill one merge's fleet traffic: every cohort member's upload (at the
 /// codec's analytic encoded size when transport is active — uploads
 /// happen client-side, before any server-side rejection, so quarantined
@@ -642,6 +893,8 @@ pub struct ParallelCore {
     /// residual, which lives in (and checkpoints with) the pool.
     // sflint:allow(checkpoint-coverage, EF residuals ride the pool; codec/arena are per-merge scratch)
     transport: Option<TransportState>,
+    /// Seeded lossy-channel model (`Some` iff `[channel]` is active).
+    channel: Option<ChannelState>,
     /// Who the last merge actually kept, with their *final* normalized
     /// weights (post sanitize/quarantine/decay).  The async engine
     /// delta-corrects stale survivors with exactly these weights — the
@@ -680,6 +933,9 @@ impl ParallelCore {
                 clip: r.clip,
                 sanitize: r.sanitize,
                 sanitize_mult: r.sanitize_mult,
+                sanitize_adaptive: r.sanitize_adaptive,
+                spread_ewma: 0.0,
+                spread_obs: 0,
                 committee,
                 stats: RobustStats::default(),
                 survivors: Vec::with_capacity(env.cuts.len()),
@@ -687,6 +943,7 @@ impl ParallelCore {
                 norms: Vec::with_capacity(env.cuts.len()),
                 keep: Vec::with_capacity(env.cuts.len()),
                 col: Vec::with_capacity(env.cuts.len()),
+                readmitted: Vec::with_capacity(env.cuts.len()),
             }
         });
         let tcfg = &env.cfg.transport;
@@ -702,6 +959,21 @@ impl ParallelCore {
             // reloaded, and checkpointed bit-exactly per client.
             pool.enable_error_feedback();
         }
+        // The lossy channel seeds its own RNG stream and scales each
+        // client's failure probabilities by its link tier — slow links
+        // fail more, fast links less (see `channel::tier_mult`).
+        let ccfg = &env.cfg.channel;
+        let channel = ccfg.is_active().then(|| ChannelState {
+            ch: LossyChannel::new(
+                ccfg,
+                env.cfg.clients.iter().map(|c| tier_mult(c.link.rate_mbps)).collect(),
+                env.cfg.train.seed,
+            ),
+            event_driven: env.cfg.asynchrony.enabled,
+            ok: Vec::with_capacity(env.cuts.len()),
+            extra_legs: vec![0; env.cuts.len()],
+            backoff: vec![0.0; env.cuts.len()],
+        });
         Ok(Self {
             pool,
             sched: make_scheduler(env.cfg.scheduler, env.cfg.train.seed),
@@ -711,6 +983,7 @@ impl ParallelCore {
             order_buf: Vec::with_capacity(env.cuts.len()),
             robust,
             transport,
+            channel,
             merge_survivors: Vec::with_capacity(env.cuts.len()),
             merge_weights: Vec::with_capacity(env.cuts.len()),
         })
@@ -729,6 +1002,11 @@ impl ParallelCore {
         // max(state_cap, cohort) — a round's participants are never
         // evicted mid-round.
         self.pool.begin_round(ctx.round as u64, ctx.participants.len())?;
+        // Net counters are per-round (rounds without an aggregation
+        // report zeros — nothing crossed the channel).
+        if let Some(chs) = self.channel.as_mut() {
+            chs.ch.round_reset();
+        }
         let time_orders = matches!(accrual, CoreTiming::PerOrder);
         let (mean_loss, ordered_elapsed) = self.train_steps(ctx, time_orders)?;
         let train_elapsed = match accrual {
@@ -761,7 +1039,7 @@ impl ParallelCore {
         participants: &[usize],
         timeline: &EnvTimeline,
     ) -> f64 {
-        match self.transport.as_ref() {
+        let base = match self.transport.as_ref() {
             Some(tp) => timing::aggregation_time_split(
                 &env.dims_time,
                 &env.cfg.clients,
@@ -777,6 +1055,56 @@ impl ParallelCore {
                 participants,
                 timeline,
             ),
+        };
+        // Retry penalty (sync merges only — async retransmissions
+        // accrue on the event engine): the uploads run in parallel, so
+        // the phase stretches by the slowest participant's backoff
+        // waits plus its retransmission legs at its own uplink time.
+        if let Some(chs) = self.channel.as_ref() {
+            if !chs.event_driven {
+                let retry = participants
+                    .iter()
+                    .map(|&u| {
+                        chs.backoff[u]
+                            + f64::from(chs.extra_legs[u]) * self.retry_leg(env, u, timeline).1
+                    })
+                    .fold(0.0, f64::max);
+                return base + retry;
+            }
+        }
+        base
+    }
+
+    /// One retransmission leg for client `u`: the billed uplink bytes
+    /// and their transfer time under the current environment.
+    fn retry_leg(
+        &self,
+        env: &SessionEnv<'_>,
+        u: usize,
+        timeline: &EnvTimeline,
+    ) -> (usize, f64) {
+        let k = env.cuts[u];
+        let bytes = match self.transport.as_ref() {
+            Some(t) => t.codec.billed_bytes(k * env.dims_time.lora_params_per_layer()),
+            None => env.dims_time.lora_bytes(k),
+        };
+        let leg =
+            env.cfg.clients[u].link.transfer_time(bytes) / timeline.link_mult(u).max(1e-6);
+        (bytes, leg)
+    }
+
+    /// Escalate client `u` to the committee after `tamper_threshold`
+    /// consecutive integrity failures on the async event path.  Without
+    /// a robust defense there is no committee — the upload was already
+    /// discarded, which is all the plain path can do.
+    fn channel_escalate(&mut self, u: usize, round: u64) {
+        if let Some(rb) = self.robust.as_mut() {
+            rb.committee.flag(u, round);
+            rb.stats.flagged += 1;
+            // Flag entry clears the sender's error-feedback residual:
+            // whatever it accrued before quarantine is stale against
+            // any baseline it would re-enter under.
+            self.pool.clear_error_feedback(u);
         }
     }
 
@@ -945,42 +1273,93 @@ impl ParallelCore {
             return self
                 .merge_robust(env, round, participants, decay, bases, faults, traffic, scratch);
         }
+        // Lossy-channel pass (sync merges): every upload runs the
+        // bounded-retransmission protocol; what survives is marked in
+        // `chs.ok` (and decoded into the arena when transport is also
+        // active).  Under `--async` delivery already happened on the
+        // engine's events, so the dice are not re-rolled — the plain
+        // transport pass below handles integrity alone.
+        let mut channel_ran = false;
+        if let Some(chs) = self.channel.as_mut() {
+            if !chs.event_driven {
+                channel_ran = true;
+                if let Some(t) = self.transport.as_mut() {
+                    t.codec.round_reset();
+                }
+                chs.ok.clear();
+                chs.ok.resize(participants.len(), false);
+                chs.extra_legs.iter_mut().for_each(|l| *l = 0);
+                chs.backoff.iter_mut().for_each(|x| *x = 0.0);
+                let mut kept = 0usize;
+                for (i, &u) in participants.iter().enumerate() {
+                    let base = bases.map(|b| b[i]);
+                    let d = channel_upload_sync(
+                        chs,
+                        self.transport.as_mut(),
+                        &mut self.pool,
+                        env,
+                        kept,
+                        u,
+                        None,
+                        base,
+                    )?;
+                    chs.ok[i] = matches!(d, Delivery::Accepted);
+                    if chs.ok[i] {
+                        kept += 1;
+                    }
+                }
+                // Graceful degradation: retry exhaustion merges the
+                // partial cohort with renormalized weights (below).
+                if kept > 0 && kept < participants.len() {
+                    chs.ch.note_partial_merge();
+                }
+            }
+        }
         // Transport pass: each upload crosses the wire through the
         // codec — encode, verify the content hash, decode into the
         // arena (compacted by accepted position).  With the codec
         // inactive every position is trivially accepted and the
         // historical dense arithmetic below runs untouched.
-        if let Some(tp) = self.transport.as_mut() {
-            tp.codec.round_reset();
-            tp.ok.clear();
-            tp.ok.resize(participants.len(), false);
-            let mut kept = 0usize;
-            for (i, &u) in participants.iter().enumerate() {
-                let base = bases.map(|b| b[i]);
-                let ok = tp.pass_one(&mut self.pool, env, kept, u, None, base)?;
-                tp.ok[i] = ok;
-                if ok {
-                    kept += 1;
+        if !channel_ran {
+            if let Some(tp) = self.transport.as_mut() {
+                tp.codec.round_reset();
+                tp.ok.clear();
+                tp.ok.resize(participants.len(), false);
+                let mut kept = 0usize;
+                for (i, &u) in participants.iter().enumerate() {
+                    let base = bases.map(|b| b[i]);
+                    let ok = tp.pass_one(&mut self.pool, env, kept, u, None, base)?;
+                    tp.ok[i] = ok;
+                    if ok {
+                        kept += 1;
+                    }
                 }
             }
         }
         let tp = self.transport.as_ref();
+        // The acceptance mask: the channel's when its sync protocol
+        // ran, the codec's hash flags otherwise, `None` (accept all)
+        // when neither is active — the exact historical filter.
+        let ok_mask: Option<&[bool]> = match self.channel.as_ref() {
+            Some(chs) if !chs.event_driven => Some(&chs.ok),
+            _ => tp.map(|t| t.ok.as_slice()),
+        };
         // `None` keeps the exact historical arithmetic; `Some` folds the
         // decay into each weight before the same normalization.  Only
-        // hash-verified positions carry weight (all of them when the
-        // codec is off — rejection requires an active transport).
+        // accepted positions carry weight (all of them when no
+        // transport or channel is active — rejection needs one).
         let total: f32 = match decay {
             Some(d) => participants
                 .iter()
                 .zip(d)
                 .enumerate()
-                .filter(|&(i, _)| tp.map_or(true, |t| t.ok[i]))
+                .filter(|&(i, _)| ok_mask.map_or(true, |m| m[i]))
                 .map(|(_, (&u, &f))| env.data.weight(u) * f)
                 .sum(),
             None => participants
                 .iter()
                 .enumerate()
-                .filter(|&(i, _)| tp.map_or(true, |t| t.ok[i]))
+                .filter(|&(i, _)| ok_mask.map_or(true, |m| m[i]))
                 .map(|(_, &u)| env.data.weight(u))
                 .sum(),
         };
@@ -996,7 +1375,7 @@ impl ParallelCore {
                 Vec::with_capacity(participants.len());
             let mut kept = 0usize;
             for (i, &u) in participants.iter().enumerate() {
-                if !tp.map_or(true, |t| t.ok[i]) {
+                if !ok_mask.map_or(true, |m| m[i]) {
                     continue;
                 }
                 let slot = self.pool.resident(u).ok_or_else(|| {
@@ -1020,9 +1399,10 @@ impl ParallelCore {
                 head_pairs_w.push((w, &slot.ss.head.w));
                 head_pairs_b.push((w, &slot.ss.head.b));
             }
-            // All-rejected (only possible with an active transport) ⇒
-            // the model stands; the historical path merges always.
-            let merged = tp.is_none() || !contribs.is_empty();
+            // All-rejected (only possible with an active transport or
+            // channel) ⇒ the model stands; the historical path merges
+            // always.
+            let merged = ok_mask.is_none() || !contribs.is_empty();
             if merged {
                 fedavg_joined_into(&contribs, &mut scratch.agg_full)?;
                 ops::weighted_sum_into(&head_pairs_w, &mut scratch.head.w)?;
@@ -1043,6 +1423,11 @@ impl ParallelCore {
         if let Some(t) = self.transport.as_mut() {
             t.codec.note_upload(up_billed, up_dense);
             t.stats = t.codec.round_stats(down_bytes);
+        }
+        if let Some(chs) = self.channel.as_ref() {
+            if !chs.event_driven {
+                bill_retry_traffic(env, chs, self.transport.as_ref(), traffic);
+            }
         }
         Ok(merged)
     }
@@ -1076,8 +1461,14 @@ impl ParallelCore {
         out_weights.clear();
         // Quarantine re-admission (`--quarantine-ttl`): expired
         // sentences move to probation before this merge's counters are
-        // read.  A no-op (and bit-identical) at ttl = 0.
-        rb.committee.tick(round);
+        // read.  A no-op (and bit-identical) at ttl = 0.  A re-admitted
+        // probationer starts clean: any error-feedback residual it
+        // accrued before quarantine is stale against the current
+        // baseline and must not leak into its first upload back.
+        rb.committee.tick_into(round, &mut rb.readmitted);
+        for i in 0..rb.readmitted.len() {
+            pool.clear_error_feedback(rb.readmitted[i]);
+        }
         rb.stats = RobustStats { quarantined: rb.committee.quarantined_count(), ..Default::default() };
         // 1. Quarantined clients are dropped before anything else — a
         // flagged client never contributes again.
@@ -1127,6 +1518,9 @@ impl ParallelCore {
                 if lied {
                     rb.committee.flag(u, round);
                     rb.stats.flagged += 1;
+                    // Quarantine entry clears the liar's error-feedback
+                    // residual — see the re-admission note above.
+                    pool.clear_error_feedback(u);
                 } else if rb.committee.is_probation(u) {
                     // A probationer that passes its re-check is fully
                     // rehabilitated (back to normal witness odds).
@@ -1137,47 +1531,141 @@ impl ParallelCore {
             rb.survivors.retain(|&u| !committee.is_quarantined(u));
             rb.stats.quarantined = rb.committee.quarantined_count();
         }
-        // 3½. Transport decode: each surviving upload crosses the wire
-        // through the codec.  A hash mismatch is hard evidence of
-        // tampering — the sender is flagged into quarantine exactly
-        // like a witness-caught liar, and its payload never reaches the
-        // sanitizer or the merge kernel.  Accepted payloads land in the
-        // decode arena, compacted by accepted position (aligned with
-        // the retained survivor list below).
+        // 3½. Lossy-channel delivery / transport decode.  With the
+        // channel active (sync merges) each surviving upload runs the
+        // bounded-retransmission protocol: a hash mismatch triggers a
+        // retransmission first — benign corruption is the channel's
+        // fault, not the sender's — and only `tamper_threshold`
+        // consecutive mismatches escalate to the committee (threshold
+        // 1 preserves the immediate-flag behavior).  Retry exhaustion
+        // excludes the sender from this merge without flagging
+        // (graceful degradation; the partial cohort renormalizes).
         let inj = faults.as_deref();
-        if let Some(tp) = self.transport.as_mut() {
-            tp.codec.round_reset();
-            tp.ok.clear();
-            tp.ok.resize(rb.survivors.len(), false);
-            let mut kept = 0usize;
-            for (i, &u) in rb.survivors.iter().enumerate() {
-                let sub = inj.and_then(|j| j.submission(u)).map(|(c, _)| c);
-                let base = match bases {
-                    Some(bs) => {
-                        let p = participants.iter().position(|&p| p == u).ok_or_else(|| {
-                            anyhow::anyhow!("survivor {u} not among the merge participants")
-                        })?;
-                        Some(bs[p])
+        let mut channel_ran = false;
+        if let Some(chs) = self.channel.as_mut() {
+            if !chs.event_driven {
+                channel_ran = true;
+                if let Some(t) = self.transport.as_mut() {
+                    t.codec.round_reset();
+                }
+                chs.ok.clear();
+                chs.ok.resize(rb.survivors.len(), false);
+                chs.extra_legs.iter_mut().for_each(|l| *l = 0);
+                chs.backoff.iter_mut().for_each(|x| *x = 0.0);
+                let before = rb.survivors.len();
+                let mut kept = 0usize;
+                for (i, &u) in rb.survivors.iter().enumerate() {
+                    let sub = inj.and_then(|j| j.submission(u)).map(|(c, _)| c);
+                    let base = match bases {
+                        Some(bs) => {
+                            let p =
+                                participants.iter().position(|&p| p == u).ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "survivor {u} not among the merge participants"
+                                    )
+                                })?;
+                            Some(bs[p])
+                        }
+                        None => None,
+                    };
+                    match channel_upload_sync(
+                        chs,
+                        self.transport.as_mut(),
+                        pool,
+                        env,
+                        kept,
+                        u,
+                        sub,
+                        base,
+                    )? {
+                        Delivery::Accepted => {
+                            chs.ok[i] = true;
+                            kept += 1;
+                        }
+                        Delivery::GaveUp => {}
+                        Delivery::Tampered => {
+                            rb.committee.flag(u, round);
+                            rb.stats.flagged += 1;
+                            // Quarantine entry clears the EF residual —
+                            // see the re-admission note above.
+                            pool.clear_error_feedback(u);
+                        }
                     }
-                    None => None,
-                };
-                let ok = tp.pass_one(pool, env, kept, u, sub, base)?;
-                tp.ok[i] = ok;
-                if ok {
-                    kept += 1;
-                } else {
-                    rb.committee.flag(u, round);
-                    rb.stats.flagged += 1;
+                }
+                let ok = &chs.ok;
+                let mut i = 0;
+                rb.survivors.retain(|_| {
+                    let keep = ok[i];
+                    i += 1;
+                    keep
+                });
+                rb.stats.quarantined = rb.committee.quarantined_count();
+                if kept > 0 && kept < before {
+                    chs.ch.note_partial_merge();
                 }
             }
-            let ok = &tp.ok;
-            let mut i = 0;
-            rb.survivors.retain(|_| {
-                let keep = ok[i];
-                i += 1;
-                keep
-            });
-            rb.stats.quarantined = rb.committee.quarantined_count();
+        }
+        // Transport decode (channel off, or `--async` where delivery
+        // already happened on the engine's events): each surviving
+        // upload crosses the wire through the codec.  A hash mismatch
+        // here flags the sender — immediately when no channel is
+        // configured (the historical behavior), through the
+        // consecutive-mismatch threshold when one is (async merges see
+        // only sender-side tampering at this point; channel corruption
+        // was already handled per event).
+        if !channel_ran {
+            if let Some(tp) = self.transport.as_mut() {
+                tp.codec.round_reset();
+                tp.ok.clear();
+                tp.ok.resize(rb.survivors.len(), false);
+                let mut kept = 0usize;
+                for (i, &u) in rb.survivors.iter().enumerate() {
+                    let sub = inj.and_then(|j| j.submission(u)).map(|(c, _)| c);
+                    let base = match bases {
+                        Some(bs) => {
+                            let p =
+                                participants.iter().position(|&p| p == u).ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "survivor {u} not among the merge participants"
+                                    )
+                                })?;
+                            Some(bs[p])
+                        }
+                        None => None,
+                    };
+                    let ok = tp.pass_one(pool, env, kept, u, sub, base)?;
+                    tp.ok[i] = ok;
+                    if ok {
+                        kept += 1;
+                        if let Some(chs) = self.channel.as_mut() {
+                            chs.ch.clear_mismatch(u);
+                        }
+                    } else {
+                        let escalate = match self.channel.as_mut() {
+                            Some(chs) => {
+                                chs.ch.note_mismatch(u) as usize
+                                    >= env.cfg.channel.tamper_threshold
+                            }
+                            None => true,
+                        };
+                        if escalate {
+                            rb.committee.flag(u, round);
+                            rb.stats.flagged += 1;
+                            // Quarantine entry clears the EF residual —
+                            // see the re-admission note above.
+                            pool.clear_error_feedback(u);
+                        }
+                    }
+                }
+                let ok = &tp.ok;
+                let mut i = 0;
+                rb.survivors.retain(|_| {
+                    let keep = ok[i];
+                    i += 1;
+                    keep
+                });
+                rb.stats.quarantined = rb.committee.quarantined_count();
+            }
         }
         // Traffic: billed for the original participants exactly like
         // the plain path — uploads happen client-side, before any
@@ -1193,6 +1681,11 @@ impl ParallelCore {
         if let Some(t) = self.transport.as_mut() {
             t.codec.note_upload(up_billed, up_dense);
             t.stats = t.codec.round_stats(down_bytes);
+        }
+        if let Some(chs) = self.channel.as_ref() {
+            if !chs.event_driven {
+                bill_retry_traffic(env, chs, self.transport.as_ref(), traffic);
+            }
         }
         // 4. Gather the surviving submissions with their raw data
         // weights (normalized after sanitization, over what's kept).
@@ -1227,15 +1720,34 @@ impl ParallelCore {
             subs.push((raw, c, s));
         }
         // 5. Pre-merge sanitizer: reject non-finite or norm-outlier
-        // deltas before they reach the kernel.
+        // deltas before they reach the kernel.  In adaptive mode the
+        // multiplier tracks an EWMA of the observed per-round norm
+        // spread — use-then-update: this round's threshold comes from
+        // *prior* rounds only, so checkpoint/resume replays decide each
+        // round from identical state.
         if rb.sanitize && !subs.is_empty() {
+            let mult = if rb.sanitize_adaptive && rb.spread_obs > 0 {
+                (rb.spread_ewma * ADAPTIVE_MULT_GAIN).max(ADAPTIVE_MULT_FLOOR)
+            } else {
+                rb.sanitize_mult
+            };
             rb.stats.rejected = sanitize_updates(
                 &subs,
                 pool.baseline(),
-                rb.sanitize_mult,
+                mult,
                 &mut rb.norms,
                 &mut rb.keep,
             )?;
+            if rb.sanitize_adaptive {
+                if let Some(spread) = crate::faults::norm_spread(&rb.norms) {
+                    rb.spread_ewma = if rb.spread_obs == 0 {
+                        spread
+                    } else {
+                        (1.0 - SPREAD_EWMA_ALPHA) * rb.spread_ewma + SPREAD_EWMA_ALPHA * spread
+                    };
+                    rb.spread_obs += 1;
+                }
+            }
             if rb.stats.rejected > 0 {
                 let keep = &rb.keep;
                 let mut i = 0;
@@ -1320,6 +1832,10 @@ impl ParallelCore {
         self.transport.as_ref().map(|tp| tp.stats)
     }
 
+    fn net_stats(&self) -> Option<NetStats> {
+        self.channel.as_ref().map(|c| c.ch.stats())
+    }
+
     fn save_state(&self, out: &mut Vec<(String, HostTensor)>) -> Result<()> {
         self.pool.save_state(out)?;
         out.push(("scheme.switches".into(), encode_u64s("switches", &[self.switches])));
@@ -1355,6 +1871,21 @@ impl ParallelCore {
                     encode_u64s("probation", &rb.committee.ttl_state()),
                 ));
             }
+            // Adaptive-sanitizer EWMA rides only in adaptive mode (the
+            // mode is fingerprinted); fixed-mult checkpoints keep their
+            // exact key set.
+            if rb.sanitize_adaptive {
+                out.push((
+                    "scheme.sanitize_ewma".into(),
+                    encode_u64s("sanitize_ewma", &[rb.spread_ewma.to_bits(), rb.spread_obs]),
+                ));
+            }
+        }
+        // Lossy-channel state (RNG + per-client GE/seq/mismatch words)
+        // exists only when the channel is configured — channel-off
+        // checkpoints stay byte-identical to earlier layouts.
+        if let Some(chs) = &self.channel {
+            out.push(("scheme.channel".into(), encode_u64s("channel", &chs.ch.state())));
         }
         Ok(())
     }
@@ -1377,6 +1908,14 @@ impl ParallelCore {
                 rb.committee
                     .restore_ttl_state(&decode_u64s(store.get("scheme.probation")?)?)?;
             }
+            if rb.sanitize_adaptive {
+                let w = u64s_exact(store, "scheme.sanitize_ewma", 2)?;
+                rb.spread_ewma = f64::from_bits(w[0]);
+                rb.spread_obs = w[1];
+            }
+        }
+        if let Some(chs) = &mut self.channel {
+            chs.ch.restore_state(&decode_u64s(store.get("scheme.channel")?)?)?;
         }
         Ok(())
     }
@@ -1437,6 +1976,10 @@ impl Scheme for OursScheme {
 
     fn transport_stats(&self) -> Option<TransportStats> {
         self.core.transport_stats()
+    }
+
+    fn net_stats(&self) -> Option<NetStats> {
+        self.core.net_stats()
     }
 
     fn parallel_core(&mut self) -> Option<&mut ParallelCore> {
@@ -1506,6 +2049,10 @@ impl Scheme for SflScheme {
 
     fn transport_stats(&self) -> Option<TransportStats> {
         self.core.transport_stats()
+    }
+
+    fn net_stats(&self) -> Option<NetStats> {
+        self.core.net_stats()
     }
 
     fn parallel_core(&mut self) -> Option<&mut ParallelCore> {
@@ -2147,6 +2694,7 @@ impl<'e> Session<'e> {
             robust: self.scheme.robust_stats(),
             asynchrony: None,
             transport: self.scheme.transport_stats(),
+            net: self.scheme.net_stats(),
             eval,
         };
         for obs in &mut self.observers {
@@ -2202,6 +2750,11 @@ impl<'e> Session<'e> {
         // Merge cohorts are capped by the buffer; participants stay
         // resident from (re-)acquisition below through the merge.
         core.pool.begin_round(round as u64, acfg.buffer_k)?;
+        // Channel counters report per merge window, mirroring the sync
+        // per-round reset.
+        if let Some(chs) = core.channel.as_mut() {
+            chs.ch.round_reset();
+        }
 
         // ---- drive the event loop until a merge fires ----
         let (stats, participants, mean_loss, merge_time, agg_elapsed) = loop {
@@ -2268,6 +2821,40 @@ impl<'e> Session<'e> {
                     false
                 }
                 Event::ClientCompletion { client: u } => {
+                    // Lossy channel: completion carries the *first*
+                    // delivery attempt.  A failed attempt leaves the
+                    // client in flight — its trained-but-undelivered
+                    // state is protected from re-dispatch — and arms a
+                    // timeout for the retransmission machinery.
+                    if let Some(chs) = core.channel.as_mut() {
+                        let seq = chs.ch.next_seq(u);
+                        let threshold = env.cfg.channel.tamper_threshold;
+                        match chs.attempt_async(u, seq, threshold) {
+                            Attempt::Accepted => {}
+                            Attempt::Failed => {
+                                if env.cfg.channel.retry_max > 0 {
+                                    let rto = chs.ch.rto(0);
+                                    b.engine.schedule(
+                                        now + rto,
+                                        Event::Timeout { client: u, attempt: 0 },
+                                    );
+                                } else {
+                                    // No retry budget: the update is
+                                    // lost outright.
+                                    chs.ch.note_gave_up();
+                                    ab.inflight[u] = false;
+                                    b.engine.schedule(now, Event::ClientArrival { client: u });
+                                }
+                                continue;
+                            }
+                            Attempt::Escalate => {
+                                core.channel_escalate(u, round as u64);
+                                ab.inflight[u] = false;
+                                b.engine.schedule(now, Event::ClientArrival { client: u });
+                                continue;
+                            }
+                        }
+                    }
                     ab.inflight[u] = false;
                     ab.buffer.push(BufferedUpdate {
                         client: u,
@@ -2291,6 +2878,74 @@ impl<'e> Session<'e> {
                     // A trigger from an earlier epoch is stale — its
                     // buffer already merged (or was re-armed).
                     epoch == ab.trigger_epoch && !ab.buffer.is_empty()
+                }
+                Event::Timeout { client: u, attempt } => {
+                    // The server's per-message timeout fired: bill the
+                    // retransmission's real uplink bytes and land the
+                    // re-sent frame one transfer leg later.
+                    if let Some(chs) = core.channel.as_mut() {
+                        chs.ch.note_retry();
+                    }
+                    let (bytes, leg) = core.retry_leg(env, u, &b.timeline);
+                    b.traffic.record(&Message::LoraUpload { bytes });
+                    b.engine.schedule(now + leg, Event::Retransmit { client: u, attempt });
+                    false
+                }
+                Event::Retransmit { client: u, attempt } => {
+                    let Some(chs) = core.channel.as_mut() else {
+                        bail!("retransmit event without an active channel");
+                    };
+                    // Retransmissions re-send the same frame: the same
+                    // sequence number crosses the channel again and the
+                    // FNV-1a verify re-runs at the merge.
+                    let seq = chs.ch.current_seq(u);
+                    let threshold = env.cfg.channel.tamper_threshold;
+                    let retry_max = env.cfg.channel.retry_max;
+                    match chs.attempt_async(u, seq, threshold) {
+                        Attempt::Accepted => {
+                            ab.inflight[u] = false;
+                            ab.buffer.push(BufferedUpdate {
+                                client: u,
+                                version: ab.versions.client_version(u),
+                                loss: ab.pending_loss[u],
+                                completed_at: now,
+                            });
+                            let due = ab.buffer.len() >= acfg.buffer_k;
+                            if !due && ab.buffer.len() == 1 {
+                                ab.trigger_epoch += 1;
+                                b.engine.schedule(
+                                    now + acfg.staleness_bound,
+                                    Event::AggregationTrigger { epoch: ab.trigger_epoch },
+                                );
+                            }
+                            due
+                        }
+                        Attempt::Failed => {
+                            let next = attempt + 1;
+                            if (next as usize) < retry_max {
+                                let rto = chs.ch.rto(next);
+                                b.engine.schedule(
+                                    now + rto,
+                                    Event::Timeout { client: u, attempt: next },
+                                );
+                            } else {
+                                // Retry budget exhausted: graceful
+                                // degradation — the update ages out of
+                                // the window and the client simply
+                                // rejoins the arrival stream.
+                                chs.ch.note_gave_up();
+                                ab.inflight[u] = false;
+                                b.engine.schedule(now, Event::ClientArrival { client: u });
+                            }
+                            false
+                        }
+                        Attempt::Escalate => {
+                            core.channel_escalate(u, round as u64);
+                            ab.inflight[u] = false;
+                            b.engine.schedule(now, Event::ClientArrival { client: u });
+                            false
+                        }
+                    }
                 }
             };
             if !merge_due {
@@ -2472,6 +3127,7 @@ impl<'e> Session<'e> {
             robust: self.scheme.robust_stats(),
             asynchrony: Some(stats),
             transport: self.scheme.transport_stats(),
+            net: self.scheme.net_stats(),
             eval,
         };
         for obs in &mut self.observers {

@@ -58,6 +58,12 @@ pub enum Event {
     /// `τ` after the first update entered an empty buffer; `epoch`
     /// invalidates triggers that outlived their buffer.
     AggregationTrigger { epoch: u64 },
+    /// A client's upload was lost/rejected on the lossy channel: the
+    /// retransmission timer for `attempt` (0-based) expires here.
+    Timeout { client: usize, attempt: u32 },
+    /// The retransmission itself: re-send the client's update (its
+    /// `attempt + 1`-th try over the wire).
+    Retransmit { client: usize, attempt: u32 },
 }
 
 impl Event {
@@ -68,6 +74,14 @@ impl Event {
             Event::ClientCompletion { client } => (1, client as u64),
             Event::AvailabilityFlip { client } => (2, client as u64),
             Event::AggregationTrigger { epoch } => (3, epoch),
+            // Client ids are bounded far below 2^32 (fleet synthesis
+            // caps at 100k), so (client, attempt) packs into one word.
+            Event::Timeout { client, attempt } => {
+                (4, ((client as u64) << 32) | u64::from(attempt))
+            }
+            Event::Retransmit { client, attempt } => {
+                (5, ((client as u64) << 32) | u64::from(attempt))
+            }
         }
     }
 
@@ -78,6 +92,14 @@ impl Event {
             1 => Event::ClientCompletion { client: payload as usize },
             2 => Event::AvailabilityFlip { client: payload as usize },
             3 => Event::AggregationTrigger { epoch: payload },
+            4 => Event::Timeout {
+                client: (payload >> 32) as usize,
+                attempt: (payload & 0xFFFF_FFFF) as u32,
+            },
+            5 => Event::Retransmit {
+                client: (payload >> 32) as usize,
+                attempt: (payload & 0xFFFF_FFFF) as u32,
+            },
             _ => bail!("unknown event kind tag {kind}"),
         })
     }
@@ -111,11 +133,14 @@ mod tests {
             Event::ClientCompletion { client: 0 },
             Event::AvailabilityFlip { client: 123 },
             Event::AggregationTrigger { epoch: u64::MAX },
+            Event::Timeout { client: 7, attempt: 0 },
+            Event::Timeout { client: 99_999, attempt: u32::MAX },
+            Event::Retransmit { client: 0, attempt: 3 },
         ];
         for e in events {
             let (k, p) = e.encode();
             assert_eq!(Event::decode(k, p).unwrap(), e);
         }
-        assert!(Event::decode(4, 0).is_err());
+        assert!(Event::decode(6, 0).is_err());
     }
 }

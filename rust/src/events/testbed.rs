@@ -299,6 +299,9 @@ pub fn run_async(sc: &Scenario) -> Result<Outcome> {
                     continue; // stale trigger: its buffer already merged
                 }
             }
+            // Lossless testbed: the channel's retransmission machinery
+            // never schedules here.
+            Event::Timeout { .. } | Event::Retransmit { .. } => continue,
         }
         // ---- merge the buffer ----
         let cur = versions.model_version();

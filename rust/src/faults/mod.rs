@@ -205,6 +205,24 @@ pub fn sanitize_updates(
     Ok(rejected)
 }
 
+/// Spread of a cohort's finite delta norms: max / median (the same
+/// median the sanitizer thresholds against).  `None` when fewer than
+/// two finite norms exist or the median is non-positive — degenerate
+/// cohorts carry no spread signal.  Drives the `--sanitize-mult
+/// adaptive` EWMA.
+pub fn norm_spread(norms: &[f64]) -> Option<f64> {
+    let mut finite: Vec<f64> = norms.iter().copied().filter(|x| x.is_finite()).collect();
+    if finite.len() < 2 {
+        return None;
+    }
+    finite.sort_by(|a, b| a.total_cmp(b));
+    let median = finite[finite.len() / 2];
+    if median <= 0.0 {
+        return None;
+    }
+    Some(finite[finite.len() - 1] / median)
+}
+
 /// Seeded fault injector: a fixed, deterministic subset of clients
 /// (⌈frac·n⌉, drawn by partial Fisher–Yates exactly like the session's
 /// participant sampler) rewrites its submission each round according to
@@ -416,6 +434,17 @@ impl Committee {
     /// clients whose TTL expired re-enter on probation.  A no-op when
     /// `ttl = 0` (permanent quarantine).
     pub fn tick(&mut self, round: u64) {
+        let mut readmitted = Vec::new();
+        self.tick_into(round, &mut readmitted);
+    }
+
+    /// [`Committee::tick`] that also reports which clients re-entered
+    /// on probation this round (`readmitted` is caller-owned scratch,
+    /// cleared first) — the session clears a re-admitted client's
+    /// error-feedback residual so quarantine-era mass is never
+    /// retransmitted.
+    pub fn tick_into(&mut self, round: u64, readmitted: &mut Vec<usize>) {
+        readmitted.clear();
         if self.ttl == 0 {
             return;
         }
@@ -423,6 +452,7 @@ impl Committee {
             if self.quarantined[u] && round >= self.flagged_round[u] + self.ttl as u64 {
                 self.quarantined[u] = false;
                 self.probation[u] = true;
+                readmitted.push(u);
             }
         }
     }
@@ -793,6 +823,34 @@ mod tests {
         assert_eq!(keep, vec![true, false, false, true]);
         assert!(norms[1].is_nan());
         assert!(norms[2] > 10.0 * norms[0]);
+    }
+
+    #[test]
+    fn tick_into_reports_readmissions() {
+        let mut c = Committee::new(8, 0.5, 3);
+        c.set_ttl(4);
+        c.flag(2, 9);
+        c.flag(5, 10);
+        let mut readmitted = Vec::new();
+        c.tick_into(12, &mut readmitted);
+        assert!(readmitted.is_empty(), "TTLs still running at round 12");
+        c.tick_into(13, &mut readmitted);
+        assert_eq!(readmitted, vec![2], "client 2's TTL expires at round 13");
+        assert!(c.is_probation(2) && !c.is_quarantined(2));
+        c.tick_into(14, &mut readmitted);
+        assert_eq!(readmitted, vec![5], "scratch must be cleared between calls");
+    }
+
+    #[test]
+    fn norm_spread_is_max_over_median() {
+        assert_eq!(norm_spread(&[]), None);
+        assert_eq!(norm_spread(&[1.0]), None, "one norm carries no spread");
+        assert_eq!(norm_spread(&[0.0, 0.0, 0.0]), None, "zero median is degenerate");
+        assert_eq!(norm_spread(&[f64::NAN, 2.0]), None, "non-finite norms are excluded");
+        let s = norm_spread(&[1.0, 2.0, 6.0]).unwrap();
+        assert!((s - 3.0).abs() < 1e-12, "max 6 / median 2 = 3, got {s}");
+        let s = norm_spread(&[4.0, f64::NAN, 1.0, 8.0]).unwrap();
+        assert!((s - 2.0).abs() < 1e-12, "finite [1,4,8]: max 8 / median 4, got {s}");
     }
 
     #[test]

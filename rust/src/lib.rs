@@ -24,6 +24,7 @@
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 #![deny(clippy::dbg_macro, clippy::print_stdout)]
 
+pub mod channel;
 pub mod checkpoint;
 pub mod config;
 pub mod coordinator;

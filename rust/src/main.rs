@@ -44,6 +44,16 @@
 //! --topk-frac F --quant f32|q8|q4 --error-feedback ship each client's
 //! LoRA delta as a sparse quantized hash-sealed payload (billed at its
 //! encoded size; degenerate settings stay bit-identical to dense).
+//! Network faults (EXPERIMENTS.md §Network faults): --net-loss P
+//! --net-corrupt P --net-dup P --net-reorder P --net-burst B run every
+//! uplink through a seeded lossy channel (Gilbert–Elliott bursts);
+//! --retry-max N --retry-base S --rto-mult M bound the server's
+//! retransmission protocol, and --tamper-threshold N sets how many
+//! consecutive hash mismatches escalate a sender to the committee
+//! (1 = the historical immediate flag).  --sanitize-mult adaptive
+//! tracks the per-round norm spread with an EWMA instead of a fixed
+//! multiplier.  All-zero probabilities construct no channel at all —
+//! bit-identical to a channel-free build.
 
 use anyhow::{bail, Result};
 use sfl::config::{ExperimentConfig, SchedulerKind, SchemeKind};
@@ -62,10 +72,12 @@ const USAGE: &str = "usage: sfl [--config mini|small] [--artifacts DIR] [--out D
 [--trace none|random_walk|diurnal|markov|replay] [--trace-seed N] [--trace-replay FILE] \
 [--obs-noise-sigma S] [--drift-sigma S] [--attack none|corrupt|scale|stale|timing-lie] \
 [--attack-frac P] [--attack-lambda L] [--agg mean|trimmed|clip] [--trim K] [--clip C] \
-[--sanitize] [--sanitize-mult M] [--verify-frac P] [--winsor K] [--quarantine-ttl N] \
+[--sanitize] [--sanitize-mult M|adaptive] [--verify-frac P] [--winsor K] [--quarantine-ttl N] \
 [--timing-ewma-alpha A|adaptive] [--async] [--staleness-bound S] [--buffer-k K] \
 [--staleness-beta B] [--compress none|topk] [--topk-frac F] [--quant f32|q8|q4] \
-[--error-feedback] <run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
+[--error-feedback] [--net-loss P] [--net-corrupt P] [--net-dup P] [--net-reorder P] \
+[--net-burst B] [--retry-max N] [--retry-base S] [--rto-mult M] [--tamper-threshold N] \
+<run|table1|fig2|fig2c|memory|ablate> [--scheme ours|sl|sfl] \
 [--scheduler proposed|fifo|wf|random] [--max-rounds N] [--quiet] [--oracle-timing] \
 [--jsonl FILE]";
 
@@ -161,8 +173,16 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     } else if args.has("sanitize-mult") {
         bail!("--sanitize-mult requires --sanitize");
     }
-    if let Some(m) = args.get_parse::<f64>("sanitize-mult")? {
-        cfg.robust.sanitize_mult = m;
+    // A fixed outlier multiplier, or "adaptive" for the EWMA-of-spread
+    // schedule (fixed values keep the historical bit-exact path).
+    if let Some(m) = args.get("sanitize-mult") {
+        if m == "adaptive" {
+            cfg.robust.sanitize_adaptive = true;
+        } else {
+            cfg.robust.sanitize_mult = m
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--sanitize-mult: {e} (float or `adaptive`)"))?;
+        }
     }
     if let Some(p) = args.get_parse::<f64>("verify-frac")? {
         cfg.robust.verify_frac = p;
@@ -213,6 +233,36 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if args.has("error-feedback") {
         cfg.transport.error_feedback = true;
+    }
+    // Lossy uplink channel + bounded retransmission (EXPERIMENTS.md
+    // §Network faults).  All-zero probabilities leave the channel
+    // unconstructed; validate() rejects retry knobs without one.
+    if let Some(p) = args.get_parse::<f64>("net-loss")? {
+        cfg.channel.loss = p;
+    }
+    if let Some(p) = args.get_parse::<f64>("net-corrupt")? {
+        cfg.channel.corrupt = p;
+    }
+    if let Some(p) = args.get_parse::<f64>("net-dup")? {
+        cfg.channel.dup = p;
+    }
+    if let Some(p) = args.get_parse::<f64>("net-reorder")? {
+        cfg.channel.reorder = p;
+    }
+    if let Some(b) = args.get_parse::<f64>("net-burst")? {
+        cfg.channel.burst = b;
+    }
+    if let Some(n) = args.get_parse::<usize>("retry-max")? {
+        cfg.channel.retry_max = n;
+    }
+    if let Some(s) = args.get_parse::<f64>("retry-base")? {
+        cfg.channel.retry_base = s;
+    }
+    if let Some(m) = args.get_parse::<f64>("rto-mult")? {
+        cfg.channel.rto_mult = m;
+    }
+    if let Some(n) = args.get_parse::<usize>("tamper-threshold")? {
+        cfg.channel.tamper_threshold = n;
     }
     cfg.validate()?;
     Ok(cfg)

@@ -360,6 +360,27 @@ impl StatePool {
         }
     }
 
+    /// Zero client `u`'s error-feedback residual wherever it lives.
+    ///
+    /// The robust layer calls this when a client enters quarantine (its
+    /// residual may hold adversarial mass the codec would re-inject
+    /// into later uploads) and again on probation re-admission (the
+    /// probationary updates start from a clean slate).  Fresh entries
+    /// have no residual yet; no-op when error feedback is inactive.
+    pub fn clear_error_feedback(&mut self, u: usize) {
+        if !self.ef_active {
+            return;
+        }
+        match self.entries.get_mut(u) {
+            Some(Entry::Resident(i)) => {
+                let i = *i;
+                self.slots[i].ef.fill(0.0);
+            }
+            Some(Entry::Spilled(sp)) => sp.ef.fill(0.0),
+            _ => {}
+        }
+    }
+
     /// Borrow a client's slot if (and only if) it is resident.
     pub fn resident(&self, u: usize) -> Option<&ClientSlot> {
         match self.entries.get(u) {
@@ -1316,6 +1337,37 @@ mod tests {
         let mut legacy: Vec<(String, HostTensor)> = Vec::new();
         plain.save_state(&mut legacy).unwrap();
         assert!(!legacy.iter().any(|(k, _)| k.ends_with(".ef")));
+    }
+
+    #[test]
+    fn clear_error_feedback_zeros_resident_and_spilled() {
+        let (mut pool, data) = setup(8, 1);
+        pool.enable_error_feedback();
+        pool.begin_round(1, 1).unwrap();
+        let slot = pool.acquire(3, &data).unwrap();
+        for r in slot.ef.iter_mut() {
+            *r = 0.5;
+        }
+        // Resident: cleared in place.
+        pool.clear_error_feedback(3);
+        assert!(pool.resident(3).unwrap().ef.iter().all(|&r| r == 0.0));
+        // Spilled: refill, evict, clear, reload — still zero.
+        for r in pool.acquire(3, &data).unwrap().ef.iter_mut() {
+            *r = -2.0;
+        }
+        pool.begin_round(2, 1).unwrap();
+        pool.acquire(0, &data).unwrap();
+        assert!(pool.resident(3).is_none());
+        pool.clear_error_feedback(3);
+        pool.begin_round(3, 1).unwrap();
+        assert!(pool.acquire(3, &data).unwrap().ef.iter().all(|&r| r == 0.0));
+        // Fresh entries and EF-off pools are no-ops (must not panic).
+        pool.clear_error_feedback(7);
+        let (mut plain, data_p) = setup(4, 1);
+        plain.begin_round(1, 1).unwrap();
+        plain.acquire(2, &data_p).unwrap();
+        plain.clear_error_feedback(2);
+        assert!(plain.resident(2).unwrap().ef.is_empty());
     }
 
     #[test]

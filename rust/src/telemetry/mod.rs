@@ -105,11 +105,21 @@ impl<W: Write> RoundObserver for JsonLinesObserver<W> {
             ),
             None => String::new(),
         };
+        // Lossy-channel counters (present when `[channel]` is active).
+        let net = match &r.net {
+            Some(c) => format!(
+                ",\"net\":{{\"sent\":{},\"delivered\":{},\"dropped\":{},\"corrupted\":{},\
+                 \"retries\":{},\"gave_up\":{},\"partial_merges\":{}}}",
+                c.sent, c.delivered, c.dropped, c.corrupted, c.retries, c.gave_up,
+                c.partial_merges
+            ),
+            None => String::new(),
+        };
         let wrote = writeln!(
             self.out,
             "{{\"event\":\"round\",\"scheme\":\"{}\",\"scheduler\":\"{}\",\"round\":{},\
              \"sim_time\":{:.6},\"step_time\":{:.6},\"mean_loss\":{:.6},\
-             \"participants\":{}{env}{pool}{robust}{asynchrony}{transport}{eval}}}",
+             \"participants\":{}{env}{pool}{robust}{asynchrony}{transport}{net}{eval}}}",
             r.scheme,
             r.scheduler,
             r.round,
@@ -308,6 +318,7 @@ mod tests {
                 robust: None,
                 asynchrony: None,
                 transport: None,
+                net: None,
                 eval: Some(EvalPoint { acc: 0.5, f1: 0.4, converged: false }),
             });
             let r = fake_run();
@@ -353,6 +364,7 @@ mod tests {
                 robust: None,
                 asynchrony: None,
                 transport: None,
+                net: None,
                 eval: None,
             });
         }
@@ -382,6 +394,7 @@ mod tests {
                 robust: None,
                 asynchrony: None,
                 transport: None,
+                net: None,
                 eval: None,
             });
         }
@@ -416,6 +429,7 @@ mod tests {
                 }),
                 asynchrony: None,
                 transport: None,
+                net: None,
                 eval: None,
             });
         }
@@ -449,6 +463,7 @@ mod tests {
                     wall_clock: 41.25,
                 }),
                 transport: None,
+                net: None,
                 eval: None,
             });
         }
@@ -482,11 +497,50 @@ mod tests {
                     ratio: 12.5,
                     ef_norm: 0.03125,
                 }),
+                net: None,
                 eval: None,
             });
         }
         let s = String::from_utf8(buf).unwrap();
         assert!(s.contains("\"transport\":{\"up_bytes\":1234,\"down_bytes\":65536"), "{s}");
         assert!(s.contains("\"ratio\":12.500000,\"ef_norm\":0.031250}"), "{s}");
+    }
+
+    #[test]
+    fn json_lines_observer_emits_net_counters_when_channel_active() {
+        use crate::channel::NetStats;
+        use crate::coordinator::RoundReport;
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut obs = JsonLinesObserver::new(&mut buf);
+            obs.on_round(&RoundReport {
+                scheme: SchemeKind::Ours,
+                scheduler: SchedulerLabel::Scheduled(SchedulerKind::Proposed),
+                round: 7,
+                sim_time: 60.0,
+                step_time: 2.0,
+                mean_loss: 0.35,
+                participants: vec![0, 3],
+                env: None,
+                pool: None,
+                robust: None,
+                asynchrony: None,
+                transport: None,
+                net: Some(NetStats {
+                    sent: 12,
+                    delivered: 10,
+                    dropped: 2,
+                    corrupted: 1,
+                    retries: 3,
+                    gave_up: 1,
+                    partial_merges: 1,
+                }),
+                eval: None,
+            });
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("\"net\":{\"sent\":12,\"delivered\":10,\"dropped\":2"), "{s}");
+        assert!(s.contains("\"corrupted\":1,\"retries\":3,\"gave_up\":1"), "{s}");
+        assert!(s.contains("\"partial_merges\":1}"), "{s}");
     }
 }

@@ -26,8 +26,13 @@
 //! Wire layout (little-endian):
 //!
 //! ```text
-//! | n: u32 | k: u32 | quant: u8 | scale: f32 |  idx: k × u32  | values | hash: u64 |
+//! | n: u32 | k: u32 | quant: u8 | scale: f32 | [seq: u32] |  idx: k × u32  | values | hash: u64 |
 //! ```
+//!
+//! The `seq` field is present iff the [`SEQ_FLAG`] high bit of the
+//! quant-tag byte is set — the lossy channel stamps a per-client
+//! monotone sequence number there for duplicate/stale suppression;
+//! payloads without the flag keep the historical layout byte-for-byte.
 //!
 //! The new residual after an encode is `e' = d − d̂` (selected
 //! coordinates keep their quantization error, unselected ones keep the
@@ -53,6 +58,14 @@ use anyhow::{bail, Result};
 pub const HEADER_BYTES: usize = 13;
 /// FNV-1a trailer size.
 pub const HASH_BYTES: usize = 8;
+/// Optional sequence-number field size (lossy-channel duplicate
+/// suppression).  Presence is signaled by [`SEQ_FLAG`] on the quant
+/// tag byte; the field sits immediately after the scale.
+pub const SEQ_BYTES: usize = 4;
+/// High bit of the wire quant-tag byte: set ⇒ a `u32` sequence number
+/// follows the scale.  Quant tags proper stay in the low 7 bits, so
+/// pre-channel payloads (flag clear) decode unchanged.
+pub const SEQ_FLAG: u8 = 0x80;
 
 /// Compression mode (`--compress`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -228,6 +241,9 @@ pub struct Codec {
     up_bytes: u64,
     dense_bytes: u64,
     ef_sq: f64,
+    /// Sequence number for the next encode (set per upload by the
+    /// lossy-channel path; absent ⇒ the historical header layout).
+    staged_seq: Option<u32>,
     /// Test hook: corrupt the next `n` payloads after hashing.
     tamper_next: u32,
 }
@@ -244,8 +260,16 @@ impl Codec {
             up_bytes: 0,
             dense_bytes: 0,
             ef_sq: 0.0,
+            staged_seq: None,
             tamper_next: 0,
         }
+    }
+
+    /// Stamp the next encode with a sequence number (the lossy channel
+    /// draws one per upload; retransmissions reuse the same payload, so
+    /// the stamp survives retries byte-identically).
+    pub fn stage_seq(&mut self, seq: u32) {
+        self.staged_seq = Some(seq);
     }
 
     pub fn error_feedback(&self) -> bool {
@@ -342,11 +366,15 @@ impl Codec {
             }
             max_abs / max_q as f32
         };
+        let seq = self.staged_seq.take();
         self.payload.clear();
         self.payload.extend_from_slice(&(n as u32).to_le_bytes());
         self.payload.extend_from_slice(&(k as u32).to_le_bytes());
-        self.payload.push(self.quant.tag());
+        self.payload.push(self.quant.tag() | if seq.is_some() { SEQ_FLAG } else { 0 });
         self.payload.extend_from_slice(&scale.to_le_bytes());
+        if let Some(s) = seq {
+            self.payload.extend_from_slice(&s.to_le_bytes());
+        }
         for &i in &self.order {
             self.payload.extend_from_slice(&i.to_le_bytes());
         }
@@ -382,7 +410,8 @@ impl Codec {
         self.payload.extend_from_slice(&hash.to_le_bytes());
         debug_assert_eq!(
             self.payload.len(),
-            encoded_bytes(n, self.frac, self.quant),
+            encoded_bytes(n, self.frac, self.quant)
+                + if seq.is_some() { SEQ_BYTES } else { 0 },
             "analytic encoded size must match the real payload"
         );
         if let Some(e) = ef {
@@ -419,6 +448,17 @@ impl Codec {
         self.encode_staged(ef)
     }
 
+    /// The sequence number stamped on a payload, if any (flag on the
+    /// quant-tag byte).  Runs before decode so duplicate/stale copies
+    /// are suppressed without touching the arena.
+    pub fn read_seq(payload: &[u8]) -> Option<u32> {
+        if payload.len() < HEADER_BYTES + SEQ_BYTES + HASH_BYTES || payload[8] & SEQ_FLAG == 0 {
+            return None;
+        }
+        let bytes: [u8; 4] = payload[13..17].try_into().ok()?;
+        Some(u32::from_le_bytes(bytes))
+    }
+
     /// Server-side integrity check: recompute the FNV-1a trailer.
     pub fn verify(payload: &[u8]) -> bool {
         if payload.len() < HEADER_BYTES + HASH_BYTES {
@@ -446,13 +486,15 @@ impl Codec {
         };
         let n = rd_u32(0)? as usize;
         let k = rd_u32(4)? as usize;
-        let quant = QuantKind::from_tag(payload[8])?;
+        let has_seq = payload[8] & SEQ_FLAG != 0;
+        let quant = QuantKind::from_tag(payload[8] & !SEQ_FLAG)?;
         let scale = f32::from_le_bytes(
             payload[9..13]
                 .try_into()
                 .map_err(|_| anyhow::anyhow!("transport header truncated"))?,
         );
-        let expect = HEADER_BYTES + 4 * k + quant.packed_bytes(k) + HASH_BYTES;
+        let header = HEADER_BYTES + if has_seq { SEQ_BYTES } else { 0 };
+        let expect = header + 4 * k + quant.packed_bytes(k) + HASH_BYTES;
         if payload.len() != expect {
             bail!("transport payload is {} bytes, header implies {expect}", payload.len());
         }
@@ -473,7 +515,7 @@ impl Codec {
         for (t, bv) in dst.tensors.iter_mut().zip(b.tensors.iter()) {
             t.as_f32_mut()?.copy_from_slice(bv.data);
         }
-        let idx_at = HEADER_BYTES;
+        let idx_at = header;
         let val_at = idx_at + 4 * k;
         // Ascending indices let the tensor walk be a single forward scan.
         let mut tensor = 0usize;
@@ -552,6 +594,22 @@ impl Codec {
     pub fn tamper_next(&mut self, n: u32) {
         self.tamper_next = n;
     }
+}
+
+/// Flip one bit of the hash-covered body of a wire payload — the
+/// lossy channel's on-wire corruption.  `raw` is an arbitrary seeded
+/// draw, reduced modulo the body's bit count; the FNV-1a trailer is
+/// never touched (corrupting the checksum itself would also be caught,
+/// but body corruption is the interesting case for decode safety).
+/// XOR is self-inverse, so applying the same call twice restores the
+/// payload — retransmissions reuse the clean bytes.
+pub fn corrupt_wire(payload: &mut [u8], raw: u64) {
+    if payload.len() <= HASH_BYTES {
+        return;
+    }
+    let body_bits = (payload.len() - HASH_BYTES) * 8;
+    let bit = (raw % body_bits as u64) as usize;
+    payload[bit / 8] ^= 1 << (bit % 8);
 }
 
 fn dequant_one(v: f32, scale: f32, max_q: i32) -> f32 {
@@ -926,6 +984,59 @@ mod tests {
             0,
             "steady-state encode/decode must not allocate HostTensors"
         );
+    }
+
+    #[test]
+    fn seq_field_roundtrips_and_decodes_identically() {
+        let d = dims();
+        let kl = d.layers / 2;
+        let x = random_half(21, kl, 0.5);
+        let b = random_half(22, kl, 0.5);
+        let (bv, _) = split_client(&b, kl);
+        let mut codec = Codec::new(0.2, QuantKind::Q8, false);
+        let plain = codec.encode(&x, &bv, None).unwrap().to_vec();
+        assert_eq!(Codec::read_seq(&plain), None, "no flag ⇒ no sequence field");
+        codec.stage_seq(417);
+        let stamped = codec.encode(&x, &bv, None).unwrap().to_vec();
+        assert!(Codec::verify(&stamped), "stamped payload must still hash clean");
+        assert_eq!(stamped.len(), plain.len() + SEQ_BYTES);
+        assert_eq!(Codec::read_seq(&stamped), Some(417));
+        // The stamp is consumed: the next encode reverts to plain.
+        let again = codec.encode(&x, &bv, None).unwrap().to_vec();
+        assert_eq!(again, plain, "stage_seq must apply to exactly one encode");
+        // Both layouts decode to the same numerics.
+        let mut out_p = AdapterSet::zeros(&d, kl);
+        let mut out_s = AdapterSet::zeros(&d, kl);
+        Codec::decode_into(&plain, &bv, &mut out_p).unwrap();
+        Codec::decode_into(&stamped, &bv, &mut out_s).unwrap();
+        for (a, b) in flat(&out_p).iter().zip(flat(&out_s).iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn corrupt_wire_is_detected_and_self_inverse() {
+        let d = dims();
+        let kl = d.layers / 2;
+        let x = random_half(23, kl, 0.5);
+        let b = random_half(24, kl, 0.5);
+        let (bv, _) = split_client(&b, kl);
+        let mut codec = Codec::new(0.2, QuantKind::Q8, false);
+        codec.stage_seq(1);
+        let clean = codec.encode(&x, &bv, None).unwrap().to_vec();
+        for raw in [0u64, 7, 1 << 40, u64::MAX] {
+            let mut wire = clean.clone();
+            corrupt_wire(&mut wire, raw);
+            assert_ne!(wire, clean, "raw {raw}: a bit must flip");
+            assert!(!Codec::verify(&wire), "raw {raw}: corruption must fail verification");
+            corrupt_wire(&mut wire, raw);
+            assert_eq!(wire, clean, "raw {raw}: double flip must restore the payload");
+            assert!(Codec::verify(&wire));
+        }
+        // Tiny payloads (shorter than the trailer) are left alone.
+        let mut stub = vec![0u8; HASH_BYTES];
+        corrupt_wire(&mut stub, 3);
+        assert_eq!(stub, vec![0u8; HASH_BYTES]);
     }
 
     #[test]
